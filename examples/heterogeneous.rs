@@ -1,0 +1,71 @@
+//! The paper's extreme-heterogeneity scenario (Sec. III-C): a few very
+//! fast clients, a few 10x-slow stragglers.
+//!
+//! Demonstrates the two CSMAAFL mechanisms that keep such a federation
+//! healthy:
+//!   1. the adaptive local-iteration policy (slow clients run fewer
+//!      steps, so channel access stays comparable), and
+//!   2. oldest-model-first slot arbitration (fairness under contention).
+//!
+//! Runs CSMAAFL with the policy on vs off and prints upload-fairness and
+//! accuracy; uses the fast pure-Rust linear learner so it finishes in
+//! seconds without artifacts.
+//!
+//! ```bash
+//! cargo run --release --example heterogeneous
+//! ```
+
+use anyhow::Result;
+use csmaafl::config::RunConfig;
+use csmaafl::session::{LearnerKind, Session};
+use csmaafl::sim::HeterogeneityProfile;
+
+fn main() -> Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.clients = 20;
+    cfg.samples_per_client = 60;
+    cfg.test_samples = 400;
+    cfg.local_steps = 24;
+    cfg.max_slots = 15.0;
+    cfg.heterogeneity = HeterogeneityProfile::Extreme {
+        fast_frac: 0.1,
+        slow_frac: 0.1,
+        mid_factor: 3.0,
+        slow_factor: 10.0,
+    };
+
+    let session = Session::new(cfg, LearnerKind::Linear, "artifacts")?;
+
+    let with_policy = session.run_with(|c| c.adaptive_iters = true)?;
+    let without_policy = session.run_with(|c| c.adaptive_iters = false)?;
+
+    for (name, run) in [
+        ("adaptive iters ON ", &with_policy),
+        ("adaptive iters OFF", &without_policy),
+    ] {
+        let min_up = run.uploads_per_client.iter().min().unwrap();
+        let max_up = run.uploads_per_client.iter().max().unwrap();
+        println!(
+            "{name}: final acc {:.4}, aggregations {:>5}, fairness {:.3}, \
+             uploads per client min/max {}/{}",
+            run.final_accuracy(),
+            run.aggregations,
+            run.fairness,
+            min_up,
+            max_up
+        );
+    }
+    println!(
+        "\nuploads by client (ON):  {:?}",
+        with_policy.uploads_per_client
+    );
+    println!(
+        "uploads by client (OFF): {:?}",
+        without_policy.uploads_per_client
+    );
+    println!(
+        "\nThe ON run narrows the upload gap between the 10x stragglers \
+         (last two clients) and the fast clients, matching Sec. III-C."
+    );
+    Ok(())
+}

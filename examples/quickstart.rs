@@ -1,0 +1,41 @@
+//! Quickstart: the smallest end-to-end CSMAAFL run.
+//!
+//! Loads the AOT CNN artifacts, builds a tiny federation (8 clients,
+//! synthetic MNIST-like data), runs CSMAAFL for 10 relative time slots and
+//! prints the accuracy curve.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use csmaafl::config::RunConfig;
+use csmaafl::session::{LearnerKind, Session};
+
+fn main() -> Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.clients = 8;
+    cfg.samples_per_client = 40;
+    cfg.test_samples = 200;
+    cfg.local_steps = 16;
+    cfg.max_slots = 10.0;
+
+    // LearnerKind::Pjrt executes the AOT CNN; switch to Linear for an
+    // artifact-free dry run.
+    let session = Session::new(cfg, LearnerKind::Pjrt, "artifacts")?;
+    let run = session.run()?;
+
+    println!("\nCSMAAFL quickstart — accuracy vs relative time slot");
+    println!("{:>6} {:>10} {:>10} {:>10}", "slot", "iteration", "accuracy", "loss");
+    for p in &run.points {
+        println!(
+            "{:>6.1} {:>10} {:>10.4} {:>10.4}",
+            p.slot, p.iteration, p.accuracy, p.loss
+        );
+    }
+    println!(
+        "\n{} aggregations, mean staleness {:.2}, Jain fairness {:.3}",
+        run.aggregations, run.mean_staleness, run.fairness
+    );
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time Python for the CSMAAFL reproduction.
+
+This package is the compile path only (L2 JAX model + L1 Pallas kernels +
+the AOT lowering driver). It runs once under ``make artifacts`` and is
+never imported on the Rust request path.
+"""

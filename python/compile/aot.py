@@ -1,0 +1,104 @@
+"""AOT driver: lower the L2/L1 programs to HLO text + manifest.json.
+
+HLO *text* (NOT ``lowered.compile()`` or serialized HloModuleProto) is the
+interchange format with the Rust runtime: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (the version behind the
+published ``xla`` 0.1.6 crate) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts \
+                              --configs mnist_small,fashion_small
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(s: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(s.shape), "dtype": s.dtype.name}
+
+
+def lower_config(cfg: model.ModelConfig, out_dir: str) -> dict:
+    """Lower every entry point of one ModelConfig; return manifest entry."""
+    entries = model.make_entry_points(cfg)
+    artifacts = {}
+    for name, (fn, example_args) in entries.items():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}_{cfg.name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts[name] = {
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [_spec_json(a) for a in example_args],
+        }
+        print(f"  {fname}: {len(text)} chars", file=sys.stderr)
+    return {
+        "params": [
+            {"name": n, "shape": list(s)} for n, s in cfg.param_specs()
+        ],
+        "conv1": cfg.conv1,
+        "conv2": cfg.conv2,
+        "hidden": cfg.hidden,
+        "lr": cfg.lr,
+        "batch": cfg.batch,
+        "chunk_steps": cfg.chunk_steps,
+        "eval_batch": cfg.eval_batch,
+        "num_classes": model.NUM_CLASSES,
+        "input_shape": [model.IMAGE_HW, model.IMAGE_HW, 1],
+        "artifacts": artifacts,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--configs",
+        default="mnist_small,fashion_small",
+        help="comma-separated ModelConfig names (see model.CONFIGS)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "configs": {}}
+    for cname in args.configs.split(","):
+        cname = cname.strip()
+        if cname not in model.CONFIGS:
+            raise SystemExit(
+                f"unknown config {cname!r}; choose from {sorted(model.CONFIGS)}"
+            )
+        print(f"lowering {cname} ...", file=sys.stderr)
+        manifest["configs"][cname] = lower_config(
+            model.CONFIGS[cname], args.out_dir
+        )
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

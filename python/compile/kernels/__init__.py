@@ -1,0 +1,8 @@
+"""L1 Pallas kernels: the paper's compute hot-spots.
+
+- matmul: tiled dense-layer matmul (fwd + custom-VJP bwd), MXU-shaped.
+- aggregate: eq.(3)/(11) staleness-weighted axpy over parameter blocks.
+- ref: pure-jnp oracles used by the pytest/hypothesis correctness suite.
+"""
+
+from . import aggregate, conv, matmul, ref  # noqa: F401

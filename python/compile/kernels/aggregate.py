@@ -1,0 +1,79 @@
+"""L1 Pallas kernel for the eq.(3) aggregation hot-spot.
+
+CSMAAFL's server updates the global model on every single-client upload:
+
+    w_{j+1} = beta_j * w_j + (1 - beta_j) * w_i^m          (eq. 3)
+
+with ``1 - beta_j`` given by the staleness rule (eq. 11). The update is a
+bandwidth-bound streamed axpy over the whole parameter block; the kernel
+tiles the flattened tensor into VMEM-sized (1-D) blocks and broadcasts the
+scalar coefficient from a (1,1) SMEM-style operand.
+
+Runs with ``interpret=True`` on this CPU image (see matmul.py docstring).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 2 KiB of f32 lanes per block row; 8x512 = one comfortably VMEM-resident
+# tile while streaming both operands (2 tiles in + 1 out per step).
+BLOCK = 4096
+_PAD = 8
+
+
+def _axpy_kernel(b_ref, g_ref, l_ref, o_ref):
+    beta = b_ref[0]
+    o_ref[...] = beta * g_ref[...] + (1.0 - beta) * l_ref[...]
+
+
+def _ceil_to(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def weighted_axpy(
+    beta: jax.Array, w_global: jax.Array, w_local: jax.Array, *, block: int = BLOCK
+) -> jax.Array:
+    """``beta*w_global + (1-beta)*w_local`` elementwise, any shape.
+
+    ``beta`` is a scalar (or ()-shaped array) runtime input — it changes
+    every global iteration, so it must not be baked into the artifact.
+    """
+    if w_global.shape != w_local.shape:
+        raise ValueError(f"shape mismatch: {w_global.shape} vs {w_local.shape}")
+    shape = w_global.shape
+    flat_g = w_global.astype(jnp.float32).reshape(-1)
+    flat_l = w_local.astype(jnp.float32).reshape(-1)
+    n = flat_g.shape[0]
+    pn = max(_ceil_to(n, _PAD), _PAD)
+    blk = min(block, pn)
+    pn = _ceil_to(pn, blk)
+    gp = jnp.pad(flat_g, (0, pn - n))
+    lp = jnp.pad(flat_l, (0, pn - n))
+    bvec = jnp.asarray(beta, jnp.float32).reshape((1,))
+
+    out = pl.pallas_call(
+        _axpy_kernel,
+        grid=(pn // blk,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # broadcast scalar
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pn,), jnp.float32),
+        interpret=True,
+    )(bvec, gp, lp)
+    return out[:n].reshape(shape)
+
+
+def aggregate_params(beta: jax.Array, global_params, local_params):
+    """Tree-map the eq.(3) axpy over a parameter pytree."""
+    return jax.tree_util.tree_map(
+        lambda g, l: weighted_axpy(beta, g, l), global_params, local_params
+    )

@@ -1,0 +1,51 @@
+"""L1 extension: 'valid' 5x5 convolution routed through the Pallas matmul.
+
+The im2col transform is expressed with 25 static slices (plain jnp ops —
+fully differentiable), and the contraction runs on the same tiled Pallas
+kernel as the dense layers (`dense_matmul`, whose forward AND backward are
+Pallas calls). jax.grad therefore flows through the whole conv without any
+additional custom rules: d(patches) comes from XLA's slice transpose,
+d(matmul) from the kernel's custom VJP.
+
+This is the TPU-shaped view of convolution: im2col turns the 5x5 window
+into an MXU-friendly (B·H'·W', 25·Cin) x (25·Cin, Cout) matmul, exactly
+how conv lowers on systolic hardware.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import dense_matmul
+
+KERNEL_HW = 5
+
+
+def im2col(x: jax.Array, k: int = KERNEL_HW) -> jax.Array:
+    """NHWC -> (B, H', W', k*k*Cin) patch tensor ('valid' padding).
+
+    Static unrolled slices: k*k slice ops, no gather — lowers to cheap
+    HLO slices and is exactly reversible under autodiff.
+    """
+    b, h, w, c = x.shape
+    hp, wp = h - k + 1, w - k + 1
+    cols = []
+    for i in range(k):
+        for j in range(k):
+            cols.append(x[:, i : i + hp, j : j + wp, :])
+    # (B, H', W', k*k, Cin) with patch index (i*k+j) ordered row-major —
+    # matching weight.reshape(k*k*Cin, Cout)'s (i, j, cin) flattening.
+    stacked = jnp.stack(cols, axis=3)
+    return stacked.reshape(b, hp, wp, k * k * c)
+
+
+def conv2d_pallas(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """'valid' conv via im2col + the Pallas tiled matmul. NHWC / HWIO."""
+    kh, kw, cin, cout = w.shape
+    assert kh == kw == KERNEL_HW, f"kernel must be {KERNEL_HW}x{KERNEL_HW}"
+    patches = im2col(x, kh)
+    bsz, hp, wp, feat = patches.shape
+    flat = patches.reshape(bsz * hp * wp, feat)
+    out = dense_matmul(flat, w.reshape(feat, cout))
+    return out.reshape(bsz, hp, wp, cout) + b[None, None, None, :]

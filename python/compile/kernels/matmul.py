@@ -1,0 +1,131 @@
+"""L1 Pallas tiled matmul kernel.
+
+This is the compute hot-spot of the CNN's dense layers (forward *and*
+backward, via the custom_vjp below). The kernel is written TPU-shaped:
+
+  * 3-D grid ``(M/bm, N/bn, K/bk)`` — the K axis is innermost so each
+    ``(bm, bn)`` output tile stays resident (VMEM on TPU) while partial
+    products accumulate into it.
+  * Block sizes default to MXU-friendly multiples (8 sublanes x 128 lanes);
+    at the small shapes of the reproduction preset they clamp to the padded
+    problem size.
+  * Inputs are zero-padded up to block multiples in the wrapper and the
+    result is sliced back, so arbitrary shapes are supported.
+
+On this CPU-only image the kernel must run with ``interpret=True`` (real
+TPU lowering emits a Mosaic custom-call the CPU PJRT plugin cannot
+execute); the tiling structure is what we optimize, per DESIGN.md
+§Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped defaults: 8 sublanes x 128 lanes per VREG tile; a 128x128
+# block feeds the systolic array without padding waste. The reproduction's
+# dense layers are far smaller, so blocks clamp to the (padded) dims.
+DEFAULT_BM = 128
+DEFAULT_BK = 128
+DEFAULT_BN = 128
+
+# Minimum tile granularity we pad to. 8 keeps the sublane dimension of a
+# float32 VREG full; using it even in interpret mode keeps the lowered HLO
+# identical in structure to the TPU layout.
+_PAD = 8
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """One grid step: accumulate x_tile @ y_tile into the output tile.
+
+    The output BlockSpec index does not depend on the K grid axis, so the
+    same (bm, bn) tile is revisited across k and acts as the accumulator.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_to(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+) -> jax.Array:
+    """``x @ y`` via the Pallas tiled kernel. x: (M, K), y: (K, N)."""
+    if x.ndim != 2 or y.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {x.shape} @ {y.shape}")
+    if x.shape[1] != y.shape[0]:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+    m, k = x.shape
+    _, n = y.shape
+
+    # Clamp blocks to the padded problem so tiny layers use a single tile.
+    pm = _ceil_to(m, _PAD)
+    pk = _ceil_to(k, _PAD)
+    pn = _ceil_to(n, _PAD)
+    bm = min(bm, pm)
+    bk = min(bk, pk)
+    bn = min(bn, pn)
+    pm = _ceil_to(pm, bm)
+    pk = _ceil_to(pk, bk)
+    pn = _ceil_to(pn, bn)
+
+    xp = jnp.pad(x.astype(jnp.float32), ((0, pm - m), (0, pk - k)))
+    yp = jnp.pad(y.astype(jnp.float32), ((0, pk - k), (0, pn - n)))
+
+    nk = pk // bk
+    grid = (pm // bm, pn // bn, nk)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pm, pn), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def dense_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Dense-layer matmul whose forward AND backward are Pallas kernels.
+
+    ``pallas_call`` has no generic autodiff rule, so the VJP is spelled out:
+    dx = g @ w^T and dw = x^T @ g, each running the same tiled kernel.
+    """
+    return matmul(x, w)
+
+
+def _dense_fwd(x, w):
+    return matmul(x, w), (x, w)
+
+
+def _dense_bwd(res, g):
+    x, w = res
+    dx = matmul(g, w.T)
+    dw = matmul(x.T, g)
+    return dx, dw
+
+
+dense_matmul.defvjp(_dense_fwd, _dense_bwd)

@@ -1,0 +1,38 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has an oracle here; pytest (and the
+hypothesis sweeps in python/tests/) assert allclose between the Pallas
+implementation and these references.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Reference for kernels.matmul.matmul: plain f32 contraction."""
+    return jnp.dot(
+        x.astype(jnp.float32),
+        y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def weighted_axpy_ref(
+    beta: jax.Array, w_global: jax.Array, w_local: jax.Array
+) -> jax.Array:
+    """Reference for kernels.aggregate.weighted_axpy (eq. 3)."""
+    b = jnp.asarray(beta, jnp.float32)
+    return b * w_global.astype(jnp.float32) + (1.0 - b) * w_local.astype(
+        jnp.float32
+    )
+
+
+def dense_grads_ref(x: jax.Array, w: jax.Array, g: jax.Array):
+    """Reference VJP of a dense matmul: (dx, dw) for upstream cotangent g."""
+    x = x.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    return g @ w.T, x.T @ g

@@ -1,0 +1,301 @@
+"""L2: the paper's CNN learning stack in JAX (build-time only).
+
+Section IV of the paper: a CNN with two convolutional layers, two
+max-pooling layers and two fully-connected layers; log-softmax output, NLL
+loss, SGD with lr=0.01 and local batch size 5. Fashion-MNIST uses larger
+hidden layers than MNIST.
+
+Both dense layers route through the L1 Pallas matmul
+(`kernels.matmul.dense_matmul`, a custom_vjp whose forward and backward are
+both Pallas kernels), so the hot-spot lowers into the exported HLO. The
+convolutions use `lax.conv_general_dilated` — XLA-native, already optimal
+HLO for the CPU/TPU backends.
+
+Exported programs (lowered by aot.py, executed from Rust via PJRT):
+
+    init(seed)                         -> params...
+    train_step(params..., x, y)        -> (params..., loss)
+    train_chunk(params..., xs, ys)     -> (params..., mean_loss)   [scan]
+    eval_chunk(params..., x, y)        -> (correct, loss_sum)
+    aggregate(wg..., wl..., beta)      -> params...                [Pallas]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.aggregate import weighted_axpy
+from .kernels.matmul import dense_matmul
+
+NUM_CLASSES = 10
+IMAGE_HW = 28
+KERNEL_HW = 5  # 'valid' padding: 28 -> 24 -> pool 12 -> 8 -> pool 4
+FLAT_HW = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture + training hyper-parameters baked at lowering."""
+
+    name: str
+    conv1: int  # channels of conv layer 1
+    conv2: int  # channels of conv layer 2
+    hidden: int  # width of fc1
+    lr: float = 0.01
+    batch: int = 5
+    chunk_steps: int = 8  # scan length of train_chunk
+    eval_batch: int = 100
+    # Perf ablation: route dense layers through the L1 Pallas kernel
+    # (True, the default three-layer path) or through XLA-native dot
+    # (False — quantifies the interpret-mode Pallas overhead on CPU).
+    pallas_dense: bool = True
+    # Perf knob: lax.scan unroll factor for train_chunk. Default 8 (fully
+    # unrolled at chunk_steps=8): measured 1.11x over the rolled loop on
+    # CPU-PJRT (EXPERIMENTS.md §Perf); the rolled twin is the ablation.
+    chunk_unroll: int = 8
+    # L1-extension ablation: route convolutions through im2col + the
+    # Pallas matmul instead of lax.conv (kernels/conv.py).
+    pallas_conv: bool = False
+
+    @property
+    def flat_features(self) -> int:
+        return FLAT_HW * FLAT_HW * self.conv2
+
+    def param_specs(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Ordered (name, shape) list — the manifest contract with Rust."""
+        return [
+            ("conv1_w", (KERNEL_HW, KERNEL_HW, 1, self.conv1)),
+            ("conv1_b", (self.conv1,)),
+            ("conv2_w", (KERNEL_HW, KERNEL_HW, self.conv1, self.conv2)),
+            ("conv2_b", (self.conv2,)),
+            ("fc1_w", (self.flat_features, self.hidden)),
+            ("fc1_b", (self.hidden,)),
+            ("fc2_w", (self.hidden, NUM_CLASSES)),
+            ("fc2_b", (NUM_CLASSES,)),
+        ]
+
+
+# Paper-faithful widths: the common MNIST CNN (10/20/50) and a wider
+# Fashion-MNIST variant ("the hidden layer sizes ... are larger").
+# The *small* presets shrink widths so the CPU-interpret Pallas path keeps
+# full federated sweeps tractable; the learning dynamics that Figs. 3-5
+# depend on (IID vs non-IID, staleness, gamma sensitivity) are preserved.
+CONFIGS: Dict[str, ModelConfig] = {
+    "mnist_small": ModelConfig("mnist_small", conv1=4, conv2=8, hidden=32),
+    "fashion_small": ModelConfig("fashion_small", conv1=6, conv2=12, hidden=48),
+    "mnist_paper": ModelConfig("mnist_paper", conv1=10, conv2=20, hidden=50),
+    "fashion_paper": ModelConfig("fashion_paper", conv1=16, conv2=32, hidden=128),
+    # Perf-ablation twin of mnist_small with XLA-native dense layers.
+    "mnist_small_nopallas": ModelConfig(
+        "mnist_small_nopallas", conv1=4, conv2=8, hidden=32, pallas_dense=False
+    ),
+    # Perf-ablation twin with the train_chunk scan left rolled.
+    "mnist_small_rolled": ModelConfig(
+        "mnist_small_rolled", conv1=4, conv2=8, hidden=32, chunk_unroll=1
+    ),
+    # L1-extension twin: convolutions ALSO via the Pallas matmul (im2col).
+    "mnist_small_pallasconv": ModelConfig(
+        "mnist_small_pallasconv", conv1=4, conv2=8, hidden=32, pallas_conv=True
+    ),
+}
+
+Params = List[jax.Array]
+
+
+def init(cfg: ModelConfig, seed: jax.Array) -> Params:
+    """He-initialised parameters from a u32 seed (runtime input)."""
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, 4)
+    specs = cfg.param_specs()
+    params: Params = []
+    ki = 0
+    for name, shape in specs:
+        if name.endswith("_b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            std = jnp.sqrt(2.0 / fan_in).astype(jnp.float32)
+            params.append(
+                std * jax.random.normal(keys[ki], shape, jnp.float32)
+            )
+            ki += 1
+    return params
+
+
+def _conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """NHWC 'valid' convolution + bias."""
+    out = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b[None, None, None, :]
+
+
+def _maxpool2(x: jax.Array) -> jax.Array:
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def forward(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    """Log-probabilities for a batch of NHWC images in [0,1]."""
+    from .kernels.conv import conv2d_pallas
+
+    c1w, c1b, c2w, c2b, f1w, f1b, f2w, f2b = params
+    conv = conv2d_pallas if cfg.pallas_conv else _conv
+    h = jax.nn.relu(conv(x, c1w, c1b))
+    h = _maxpool2(h)
+    h = jax.nn.relu(conv(h, c2w, c2b))
+    h = _maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    # Dense layers: L1 Pallas matmul fwd + bwd (or XLA-native dot for the
+    # perf-ablation configs).
+    mm = dense_matmul if cfg.pallas_dense else jnp.matmul
+    h = jax.nn.relu(mm(h, f1w) + f1b)
+    logits = mm(h, f2w) + f2b
+    return jax.nn.log_softmax(logits, axis=-1)
+
+
+def nll_loss(cfg: ModelConfig, params: Params, x: jax.Array, y: jax.Array) -> jax.Array:
+    logp = forward(cfg, params, x)
+    return -jnp.mean(logp[jnp.arange(x.shape[0]), y])
+
+
+def train_step(
+    cfg: ModelConfig, params: Params, x: jax.Array, y: jax.Array
+) -> Tuple[Params, jax.Array]:
+    """One SGD step (eq. 1 / eq. 4 local update)."""
+    loss, grads = jax.value_and_grad(
+        lambda p: nll_loss(cfg, p, x, y)
+    )(params)
+    new_params = [p - cfg.lr * g for p, g in zip(params, grads)]
+    return new_params, loss
+
+
+def train_chunk(
+    cfg: ModelConfig, params: Params, xs: jax.Array, ys: jax.Array
+) -> Tuple[Params, jax.Array]:
+    """`chunk_steps` SGD steps under one dispatch (lax.scan).
+
+    Amortises the PJRT call overhead of the Rust hot loop: one execute per
+    S local steps instead of S executes (ablated in benches/).
+    xs: (S, B, 28, 28, 1), ys: (S, B) i32.
+    """
+
+    def body(p, batch):
+        bx, by = batch
+        p2, loss = train_step(cfg, p, bx, by)
+        return p2, loss
+
+    final, losses = lax.scan(
+        body, params, (xs, ys), unroll=cfg.chunk_unroll
+    )
+    return final, jnp.mean(losses)
+
+
+def eval_chunk(
+    cfg: ModelConfig, params: Params, x: jax.Array, y: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Correct-count (i32) and summed NLL over an eval batch."""
+    logp = forward(cfg, params, x)
+    pred = jnp.argmax(logp, axis=-1)
+    correct = jnp.sum((pred == y).astype(jnp.int32))
+    loss_sum = -jnp.sum(logp[jnp.arange(x.shape[0]), y])
+    return correct, loss_sum
+
+
+def aggregate(
+    cfg: ModelConfig, w_global: Params, w_local: Params, beta: jax.Array
+) -> Params:
+    """Eq. (3) server aggregation via the L1 Pallas axpy kernel."""
+    return [weighted_axpy(beta, g, l) for g, l in zip(w_global, w_local)]
+
+
+# ---------------------------------------------------------------------------
+# jit-able entry points with flat (params..., data...) signatures — the
+# shapes Rust feeds through PJRT. aot.py lowers exactly these.
+# ---------------------------------------------------------------------------
+
+
+def make_entry_points(cfg: ModelConfig):
+    """Return dict name -> (fn, example_args) for AOT lowering."""
+    n = len(cfg.param_specs())
+
+    def init_fn(seed):
+        return tuple(init(cfg, seed))
+
+    def train_step_fn(*args):
+        params = list(args[:n])
+        x, y = args[n], args[n + 1]
+        new_params, loss = train_step(cfg, params, x, y)
+        return tuple(new_params) + (loss,)
+
+    def train_chunk_fn(*args):
+        params = list(args[:n])
+        xs, ys = args[n], args[n + 1]
+        new_params, loss = train_chunk(cfg, params, xs, ys)
+        return tuple(new_params) + (loss,)
+
+    def eval_chunk_fn(*args):
+        params = list(args[:n])
+        x, y = args[n], args[n + 1]
+        correct, loss_sum = eval_chunk(cfg, params, x, y)
+        return (correct, loss_sum)
+
+    def aggregate_fn(*args):
+        wg = list(args[:n])
+        wl = list(args[n : 2 * n])
+        beta = args[2 * n]
+        return tuple(aggregate(cfg, wg, wl, beta))
+
+    f32 = jnp.float32
+    i32 = jnp.int32
+    param_shapes = [
+        jax.ShapeDtypeStruct(s, f32) for _, s in cfg.param_specs()
+    ]
+    b, s, e = cfg.batch, cfg.chunk_steps, cfg.eval_batch
+    img = (IMAGE_HW, IMAGE_HW, 1)
+    return {
+        "init": (init_fn, [jax.ShapeDtypeStruct((), jnp.uint32)]),
+        "train_step": (
+            train_step_fn,
+            param_shapes
+            + [
+                jax.ShapeDtypeStruct((b, *img), f32),
+                jax.ShapeDtypeStruct((b,), i32),
+            ],
+        ),
+        "train_chunk": (
+            train_chunk_fn,
+            param_shapes
+            + [
+                jax.ShapeDtypeStruct((s, b, *img), f32),
+                jax.ShapeDtypeStruct((s, b), i32),
+            ],
+        ),
+        "eval_chunk": (
+            eval_chunk_fn,
+            param_shapes
+            + [
+                jax.ShapeDtypeStruct((e, *img), f32),
+                jax.ShapeDtypeStruct((e,), i32),
+            ],
+        ),
+        "aggregate": (
+            aggregate_fn,
+            param_shapes
+            + param_shapes
+            + [jax.ShapeDtypeStruct((), f32)],
+        ),
+    }

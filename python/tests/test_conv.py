@@ -1,0 +1,89 @@
+"""L1 conv extension: im2col + Pallas matmul vs lax.conv reference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.conv import conv2d_pallas, im2col
+
+
+def _ref_conv(x, w, b):
+    out = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return out + b[None, None, None, :]
+
+
+class TestIm2col:
+    def test_shape(self):
+        x = np.zeros((2, 28, 28, 3), np.float32)
+        p = im2col(jnp.asarray(x))
+        assert p.shape == (2, 24, 24, 25 * 3)
+
+    def test_patch_content(self):
+        """Each patch row is the flattened 5x5 window, (i,j,cin) order."""
+        rng = np.random.default_rng(0)
+        x = rng.random((1, 8, 8, 2), np.float32)
+        p = np.asarray(im2col(jnp.asarray(x)))
+        # Patch at output position (1, 2) = window x[0, 1:6, 2:7, :].
+        want = x[0, 1:6, 2:7, :].reshape(-1)
+        np.testing.assert_allclose(p[0, 1, 2], want)
+
+
+class TestConvPallas:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        b=st.integers(1, 4),
+        hw=st.integers(6, 14),
+        cin=st.integers(1, 4),
+        cout=st.integers(1, 6),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_lax_conv(self, b, hw, cin, cout, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((b, hw, hw, cin)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((5, 5, cin, cout)).astype(np.float32))
+        bias = jnp.asarray(rng.standard_normal(cout).astype(np.float32))
+        np.testing.assert_allclose(
+            conv2d_pallas(x, w, bias),
+            _ref_conv(x, w, bias),
+            rtol=1e-3,
+            atol=1e-4,
+        )
+
+    def test_gradients_match(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.standard_normal((2, 10, 10, 2)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((5, 5, 2, 3)).astype(np.float32))
+        bias = jnp.zeros(3, jnp.float32)
+        f_p = lambda ww, xx: jnp.sum(jnp.tanh(conv2d_pallas(xx, ww, bias)))
+        f_r = lambda ww, xx: jnp.sum(jnp.tanh(_ref_conv(xx, ww, bias)))
+        for argnum in (0, 1):
+            gp = jax.grad(f_p, argnum)(w, x)
+            gr = jax.grad(f_r, argnum)(w, x)
+            np.testing.assert_allclose(gp, gr, rtol=1e-3, atol=1e-4)
+
+    def test_pallasconv_model_matches_default(self):
+        """The pallas_conv config computes the same forward pass."""
+        cfg_d = model.CONFIGS["mnist_small"]
+        cfg_p = model.CONFIGS["mnist_small_pallasconv"]
+        rng = np.random.default_rng(4)
+        p = model.init(cfg_d, jnp.uint32(1))
+        x = jnp.asarray(rng.random((3, 28, 28, 1), np.float32))
+        np.testing.assert_allclose(
+            model.forward(cfg_p, p, x),
+            model.forward(cfg_d, p, x),
+            rtol=1e-3,
+            atol=1e-4,
+        )
+
+    def test_rejects_wrong_kernel_size(self):
+        with pytest.raises(AssertionError):
+            conv2d_pallas(
+                jnp.zeros((1, 8, 8, 1)),
+                jnp.zeros((3, 3, 1, 2)),
+                jnp.zeros(2),
+            )

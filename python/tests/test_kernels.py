@@ -1,0 +1,179 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/values; assert_allclose against ref.py. This is
+the core correctness signal for the kernels that end up inside the
+AOT-exported HLO the Rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.aggregate import aggregate_params, weighted_axpy
+from compile.kernels.matmul import dense_matmul, matmul
+
+DIM = st.integers(min_value=1, max_value=67)
+
+
+def _arr(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+class TestMatmulKernel:
+    @settings(max_examples=30, deadline=None)
+    @given(m=DIM, k=DIM, n=DIM, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref_random_shapes(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x, y = _arr(rng, m, k), _arr(rng, k, n)
+        np.testing.assert_allclose(
+            matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4
+        )
+
+    @pytest.mark.parametrize(
+        "m,k,n",
+        [
+            (1, 1, 1),
+            (5, 128, 32),  # fc1 of mnist_small
+            (5, 32, 10),  # fc2 of mnist_small
+            (8, 8, 8),  # exactly one pad tile
+            (9, 9, 9),  # one past the pad boundary
+            (128, 128, 128),  # exactly one MXU block
+            (129, 130, 131),  # one past the MXU block on every axis
+            (256, 64, 256),  # multi-tile M and N
+        ],
+    )
+    def test_boundary_shapes(self, m, k, n):
+        rng = np.random.default_rng(m * 10000 + k * 100 + n)
+        x, y = _arr(rng, m, k), _arr(rng, k, n)
+        np.testing.assert_allclose(
+            matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4
+        )
+
+    @pytest.mark.parametrize("bm,bk,bn", [(8, 8, 8), (16, 32, 8), (64, 16, 32)])
+    def test_block_shape_invariance(self, bm, bk, bn):
+        """Result must be independent of the tiling decomposition."""
+        rng = np.random.default_rng(7)
+        x, y = _arr(rng, 50, 70), _arr(rng, 70, 30)
+        np.testing.assert_allclose(
+            matmul(x, y, bm=bm, bk=bk, bn=bn),
+            ref.matmul_ref(x, y),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_k_accumulation_order(self):
+        """Many K tiles: accumulation across the innermost grid axis."""
+        rng = np.random.default_rng(8)
+        x, y = _arr(rng, 8, 1024), _arr(rng, 1024, 8)
+        np.testing.assert_allclose(
+            matmul(x, y, bm=8, bk=64, bn=8),
+            ref.matmul_ref(x, y),
+            rtol=1e-3,
+            atol=1e-3,
+        )
+
+    def test_rejects_bad_rank(self):
+        with pytest.raises(ValueError):
+            matmul(np.zeros((2, 2, 2), np.float32), np.zeros((2, 2), np.float32))
+
+    def test_rejects_contraction_mismatch(self):
+        with pytest.raises(ValueError):
+            matmul(np.zeros((2, 3), np.float32), np.zeros((4, 2), np.float32))
+
+    def test_zero_inputs(self):
+        out = matmul(np.zeros((5, 7), np.float32), np.zeros((7, 3), np.float32))
+        assert not np.any(out)
+
+
+class TestDenseVjp:
+    @settings(max_examples=15, deadline=None)
+    @given(m=DIM, k=DIM, n=DIM, seed=st.integers(0, 2**31 - 1))
+    def test_grads_match_ref(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x, w = jnp.asarray(_arr(rng, m, k)), jnp.asarray(_arr(rng, k, n))
+        g = jnp.asarray(_arr(rng, m, n))
+
+        def loss(a, b):
+            return jnp.sum(dense_matmul(a, b) * g)
+
+        dx, dw = jax.grad(loss, argnums=(0, 1))(x, w)
+        dx_ref, dw_ref = ref.dense_grads_ref(x, w, g)
+        np.testing.assert_allclose(dx, dx_ref, rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(dw, dw_ref, rtol=1e-3, atol=1e-3)
+
+    def test_grad_matches_native_autodiff(self):
+        rng = np.random.default_rng(3)
+        x, w = jnp.asarray(_arr(rng, 6, 11)), jnp.asarray(_arr(rng, 11, 4))
+        f_pallas = lambda a, b: jnp.sum(jnp.tanh(dense_matmul(a, b)))
+        f_native = lambda a, b: jnp.sum(jnp.tanh(a @ b))
+        for argnum in (0, 1):
+            np.testing.assert_allclose(
+                jax.grad(f_pallas, argnum)(x, w),
+                jax.grad(f_native, argnum)(x, w),
+                rtol=1e-4,
+                atol=1e-4,
+            )
+
+
+class TestAggregateKernel:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        n=st.integers(1, 5000),
+        beta=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_flat(self, n, beta, seed):
+        rng = np.random.default_rng(seed)
+        g, l = _arr(rng, n), _arr(rng, n)
+        np.testing.assert_allclose(
+            weighted_axpy(beta, g, l),
+            ref.weighted_axpy_ref(beta, g, l),
+            rtol=1e-5,
+            atol=1e-6,
+        )
+
+    @pytest.mark.parametrize("shape", [(5, 5, 1, 4), (4,), (128, 32), (1,)])
+    def test_nd_shapes(self, shape):
+        rng = np.random.default_rng(1)
+        g, l = _arr(rng, *shape), _arr(rng, *shape)
+        np.testing.assert_allclose(
+            weighted_axpy(0.7, g, l),
+            ref.weighted_axpy_ref(0.7, g, l),
+            rtol=1e-5,
+            atol=1e-6,
+        )
+
+    def test_beta_extremes(self):
+        rng = np.random.default_rng(2)
+        g, l = _arr(rng, 100), _arr(rng, 100)
+        np.testing.assert_allclose(weighted_axpy(1.0, g, l), g, rtol=1e-6)
+        np.testing.assert_allclose(weighted_axpy(0.0, g, l), l, rtol=1e-6)
+
+    def test_convex_combination_bounds(self):
+        """Output of a convex combination stays within elementwise bounds."""
+        rng = np.random.default_rng(4)
+        g, l = _arr(rng, 257), _arr(rng, 257)
+        out = np.asarray(weighted_axpy(0.42, g, l))
+        lo, hi = np.minimum(g, l), np.maximum(g, l)
+        assert np.all(out >= lo - 1e-6) and np.all(out <= hi + 1e-6)
+
+    def test_tree_aggregation(self):
+        rng = np.random.default_rng(5)
+        tree_g = {"a": _arr(rng, 3, 4), "b": [_arr(rng, 7)]}
+        tree_l = {"a": _arr(rng, 3, 4), "b": [_arr(rng, 7)]}
+        out = aggregate_params(0.25, tree_g, tree_l)
+        np.testing.assert_allclose(
+            out["a"], ref.weighted_axpy_ref(0.25, tree_g["a"], tree_l["a"]), rtol=1e-5
+        )
+        np.testing.assert_allclose(
+            out["b"][0],
+            ref.weighted_axpy_ref(0.25, tree_g["b"][0], tree_l["b"][0]),
+            rtol=1e-5,
+        )
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            weighted_axpy(0.5, np.zeros(3, np.float32), np.zeros(4, np.float32))

@@ -1,0 +1,193 @@
+"""L2 correctness: CNN shapes, gradients, training dynamics, aggregation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+CFG = model.CONFIGS["mnist_small"]
+
+
+def _data(rng, n, cfg=CFG):
+    x = rng.random((n, model.IMAGE_HW, model.IMAGE_HW, 1), np.float32)
+    y = rng.integers(0, model.NUM_CLASSES, n).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init(CFG, jnp.uint32(42))
+
+
+class TestInit:
+    def test_param_specs_match(self, params):
+        specs = CFG.param_specs()
+        assert len(params) == len(specs)
+        for p, (name, shape) in zip(params, specs):
+            assert p.shape == shape, name
+            assert p.dtype == jnp.float32, name
+
+    def test_biases_zero_weights_nonzero(self, params):
+        for p, (name, _) in zip(params, CFG.param_specs()):
+            if name.endswith("_b"):
+                assert not np.any(np.asarray(p)), name
+            else:
+                assert np.std(np.asarray(p)) > 1e-4, name
+
+    def test_deterministic_in_seed(self):
+        a = model.init(CFG, jnp.uint32(7))
+        b = model.init(CFG, jnp.uint32(7))
+        c = model.init(CFG, jnp.uint32(8))
+        for pa, pb in zip(a, b):
+            np.testing.assert_array_equal(pa, pb)
+        assert any(
+            not np.array_equal(pa, pc) for pa, pc in zip(a, c)
+        ), "different seeds must differ"
+
+    @pytest.mark.parametrize("cname", sorted(model.CONFIGS))
+    def test_all_configs_init(self, cname):
+        cfg = model.CONFIGS[cname]
+        ps = model.init(cfg, jnp.uint32(0))
+        assert [p.shape for p in ps] == [s for _, s in cfg.param_specs()]
+
+
+class TestForward:
+    def test_output_is_log_softmax(self, params):
+        rng = np.random.default_rng(0)
+        x, _ = _data(rng, 5)
+        logp = model.forward(CFG, params, x)
+        assert logp.shape == (5, model.NUM_CLASSES)
+        np.testing.assert_allclose(
+            np.exp(np.asarray(logp)).sum(axis=1), 1.0, rtol=1e-5
+        )
+        assert np.all(np.asarray(logp) <= 1e-6)
+
+    def test_batch_independence(self, params):
+        """Row i of the output depends only on row i of the input."""
+        rng = np.random.default_rng(1)
+        x, _ = _data(rng, 4)
+        full = model.forward(CFG, params, x)
+        single = model.forward(CFG, params, x[2:3])
+        np.testing.assert_allclose(full[2:3], single, rtol=1e-5, atol=1e-6)
+
+    def test_dense_layers_use_pallas_path(self, params):
+        """forward == forward with dense_matmul swapped for jnp.dot."""
+        rng = np.random.default_rng(2)
+        x, _ = _data(rng, 3)
+        logp = model.forward(CFG, params, x)
+
+        c1w, c1b, c2w, c2b, f1w, f1b, f2w, f2b = params
+        h = jax.nn.relu(model._conv(x, c1w, c1b))
+        h = model._maxpool2(h)
+        h = jax.nn.relu(model._conv(h, c2w, c2b))
+        h = model._maxpool2(h)
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(ref.matmul_ref(h, f1w) + f1b)
+        logits = ref.matmul_ref(h, f2w) + f2b
+        expect = jax.nn.log_softmax(logits, axis=-1)
+        np.testing.assert_allclose(logp, expect, rtol=1e-4, atol=1e-5)
+
+
+class TestTrainStep:
+    def test_loss_finite_and_positive(self, params):
+        rng = np.random.default_rng(3)
+        x, y = _data(rng, CFG.batch)
+        _, loss = model.train_step(CFG, params, x, y)
+        assert np.isfinite(float(loss)) and float(loss) > 0
+
+    def test_grad_matches_numerical(self, params):
+        """Central-difference check on a few coordinates of fc2_w."""
+        rng = np.random.default_rng(4)
+        x, y = _data(rng, CFG.batch)
+        loss_fn = lambda p: model.nll_loss(CFG, p, x, y)
+        grads = jax.grad(loss_fn)(params)
+        idx = 6  # fc2_w
+        eps = 1e-3
+        flat = np.asarray(params[idx]).copy()
+        for coord in [(0, 0), (3, 7), (CFG.hidden - 1, 9)]:
+            # NB: jnp.asarray can alias numpy memory on CPU — copy per side.
+            hi = flat.copy()
+            hi[coord] += eps
+            p_hi = params[:idx] + [jnp.asarray(hi)] + params[idx + 1 :]
+            lo = flat.copy()
+            lo[coord] -= eps
+            p_lo = params[:idx] + [jnp.asarray(lo)] + params[idx + 1 :]
+            num = (float(loss_fn(p_hi)) - float(loss_fn(p_lo))) / (2 * eps)
+            ana = float(np.asarray(grads[idx])[coord])
+            assert abs(num - ana) < 5e-3, (coord, num, ana)
+
+    def test_descends_on_fixed_batch(self, params):
+        rng = np.random.default_rng(5)
+        x, y = _data(rng, CFG.batch)
+        p = params
+        losses = []
+        for _ in range(30):
+            p, loss = model.train_step(CFG, p, x, y)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.7, losses[::10]
+
+    def test_chunk_equals_repeated_steps(self, params):
+        """train_chunk(S) must equal S sequential train_steps exactly-ish."""
+        rng = np.random.default_rng(6)
+        S, B = CFG.chunk_steps, CFG.batch
+        xs = jnp.asarray(rng.random((S, B, 28, 28, 1), np.float32))
+        ys = jnp.asarray(rng.integers(0, 10, (S, B)).astype(np.int32))
+        p_seq = params
+        losses = []
+        for s in range(S):
+            p_seq, loss = model.train_step(CFG, p_seq, xs[s], ys[s])
+            losses.append(float(loss))
+        p_chunk, mean_loss = model.train_chunk(CFG, params, xs, ys)
+        for a, b in zip(p_seq, p_chunk):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(float(mean_loss), np.mean(losses), rtol=1e-4)
+
+
+class TestEvalChunk:
+    def test_counts_and_loss(self, params):
+        rng = np.random.default_rng(7)
+        x, y = _data(rng, CFG.eval_batch)
+        correct, loss_sum = model.eval_chunk(CFG, params, x, y)
+        assert 0 <= int(correct) <= CFG.eval_batch
+        assert float(loss_sum) > 0
+        logp = model.forward(CFG, params, x)
+        pred = np.argmax(np.asarray(logp), axis=1)
+        assert int(correct) == int(np.sum(pred == np.asarray(y)))
+
+    def test_perfect_model_on_easy_task(self):
+        """Train on a linearly-separable task; accuracy should be high."""
+        rng = np.random.default_rng(8)
+        cfg = CFG
+        p = model.init(cfg, jnp.uint32(1))
+        # Class c = bright 6x6 patch at a class-specific location + noise.
+        n = cfg.eval_batch
+        y = rng.integers(0, 10, n).astype(np.int32)
+        x = 0.1 * rng.random((n, 28, 28, 1), np.float32)
+        for i, c in enumerate(y):
+            r, col = divmod(int(c), 5)
+            x[i, 4 + r * 12 : 10 + r * 12, 2 + col * 5 : 8 + col * 5, 0] += 0.8
+        x, y = jnp.asarray(np.clip(x, 0, 1)), jnp.asarray(y)
+        step = jax.jit(lambda pp: model.train_step(cfg, pp, x, y)[0])
+        for _ in range(150):
+            p = step(p)
+        correct, _ = model.eval_chunk(cfg, p, x, y)
+        assert int(correct) > 0.8 * cfg.eval_batch, int(correct)
+
+
+class TestAggregate:
+    def test_matches_ref(self, params):
+        other = model.init(CFG, jnp.uint32(99))
+        out = model.aggregate(CFG, params, other, jnp.float32(0.6))
+        for o, g, l in zip(out, params, other):
+            np.testing.assert_allclose(
+                o, ref.weighted_axpy_ref(0.6, g, l), rtol=1e-5, atol=1e-6
+            )
+
+    def test_identity_at_beta_one(self, params):
+        other = model.init(CFG, jnp.uint32(100))
+        out = model.aggregate(CFG, params, other, jnp.float32(1.0))
+        for o, g in zip(out, params):
+            np.testing.assert_allclose(o, g, rtol=1e-6)

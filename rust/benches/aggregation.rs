@@ -1,0 +1,62 @@
+//! E-PERF bench: server aggregation hot path (eq. 3).
+//!
+//! Ablation: native Rust axpy vs the AOT Pallas kernel through PJRT, at
+//! the reproduction's CNN size and at paper-scale parameter counts. In
+//! AFL the server aggregates every τ^u+τ^d; aggregation must be far
+//! cheaper than that.
+
+use csmaafl::model::{ParamSet, Tensor, TensorSpec};
+use csmaafl::runtime::Engine;
+use csmaafl::util::bench::Bencher;
+use csmaafl::util::rng::Rng;
+
+fn random_pset(numel: usize, seed: u64) -> ParamSet {
+    let mut r = Rng::new(seed);
+    let data: Vec<f32> = (0..numel).map(|_| r.normal()).collect();
+    ParamSet {
+        tensors: vec![Tensor::from_data(
+            TensorSpec {
+                name: "flat".into(),
+                shape: vec![numel],
+            },
+            data,
+        )],
+    }
+}
+
+fn main() {
+    let mut b = Bencher::new("aggregation (eq. 3 server hot path)");
+
+    // Native axpy at several scales (5.4k = mnist_small CNN, 431k ~= the
+    // paper's full CNN, 10M = large-model stress).
+    for &n in &[5_370usize, 431_080, 10_000_000] {
+        let g = random_pset(n, 1);
+        let l = random_pset(n, 2);
+        let mut acc = g.clone();
+        let r = b.bench(&format!("native lerp {n} params"), || {
+            acc.lerp_inplace(&l, 0.9);
+        });
+        let gbps = (n as f64 * 4.0 * 3.0) / (r.mean_ns / 1e9) / 1e9;
+        println!("  -> {:.1} GB/s effective ({} params)", gbps, n);
+    }
+
+    // PJRT/Pallas aggregate artifact (requires `make artifacts`).
+    match Engine::load("artifacts", "mnist_small") {
+        Ok(engine) => {
+            let a = engine.init(1).unwrap();
+            let c = engine.init(2).unwrap();
+            b.bench("pjrt pallas aggregate (5.4k params)", || {
+                let _ = engine.aggregate(&a, &c, 0.9).unwrap();
+            });
+        }
+        Err(e) => eprintln!("skipping PJRT aggregation bench: {e:#}"),
+    }
+
+    b.report();
+    println!(
+        "\nInterpretation: the native path is the default server aggregator;\n\
+         the PJRT path (one dispatch per aggregation) is the ablation that\n\
+         keeps eq. 3 inside the Pallas kernel. Both must stay well under the\n\
+         AFL update interval (150 virtual ticks ~ O(100ms) of modelled time)."
+    );
+}

@@ -1,0 +1,81 @@
+//! E-FIG3/4/5a/5b bench: reduced-scale regeneration of the paper's four
+//! accuracy-vs-time figures using the fast linear learner.
+//!
+//! The full-fidelity CNN versions are produced by `repro figures` (see
+//! EXPERIMENTS.md); this bench regenerates the *shape* of every figure in
+//! seconds so `cargo bench` covers the complete evaluation matrix:
+//! FedAvg vs CSMAAFL with γ ∈ {0.1, 0.2, 0.4, 0.6} on MNIST/Fashion ×
+//! IID/non-IID, reporting early-stage and final accuracy per series.
+
+use csmaafl::config::{Algorithm, RunConfig};
+use csmaafl::figures::{FIGURES, GAMMAS};
+use csmaafl::metrics::RunResult;
+use csmaafl::session::{LearnerKind, Session};
+
+fn early_acc(r: &RunResult) -> f64 {
+    r.points
+        .iter()
+        .filter(|p| p.slot >= 1.0 && p.slot <= 5.0)
+        .map(|p| p.accuracy)
+        .sum::<f64>()
+        / 5.0
+}
+
+fn main() {
+    for spec in &FIGURES {
+        let mut cfg = RunConfig::default();
+        cfg.dataset = spec.dataset;
+        cfg.partition = spec.partition;
+        cfg.clients = 16;
+        cfg.samples_per_client = 50;
+        cfg.test_samples = 300;
+        cfg.local_steps = 24;
+        cfg.max_slots = 25.0;
+
+        let t0 = std::time::Instant::now();
+        let session = Session::new(cfg, LearnerKind::Linear, "artifacts").unwrap();
+        let mut runs: Vec<RunResult> = Vec::new();
+        runs.push(session.run_with(|c| c.algorithm = Algorithm::Sfl).unwrap());
+        for gamma in GAMMAS {
+            runs.push(
+                session
+                    .run_with(|c| {
+                        c.algorithm = Algorithm::Csmaafl;
+                        c.gamma = gamma;
+                    })
+                    .unwrap(),
+            );
+        }
+
+        println!(
+            "\n== {} — {} (linear-learner shape check, {:.1}s) ==",
+            spec.id,
+            spec.title,
+            t0.elapsed().as_secs_f64()
+        );
+        println!(
+            "{:<18} {:>12} {:>12} {:>12} {:>10}",
+            "series", "early(1-5)", "final", "best", "aggs"
+        );
+        for r in &runs {
+            println!(
+                "{:<18} {:>12.4} {:>12.4} {:>12.4} {:>10}",
+                r.label,
+                early_acc(r),
+                r.final_accuracy(),
+                r.best_accuracy(),
+                r.aggregations
+            );
+        }
+        // The paper's qualitative claim, asserted on every scenario: some
+        // CSMAAFL variant beats FedAvg early.
+        let fed_early = early_acc(&runs[0]);
+        let best_csma_early = runs[1..].iter().map(early_acc).fold(0.0, f64::max);
+        println!(
+            "early-stage acceleration: csmaafl {:.4} vs fedavg {:.4} -> {}",
+            best_csma_early,
+            fed_early,
+            if best_csma_early > fed_early { "OK" } else { "MISS" }
+        );
+    }
+}

@@ -1,0 +1,121 @@
+//! E-PERF bench: PJRT dispatch latency for every AOT entry point — the
+//! L1/L2 hot path the coordinator drives.
+//!
+//! Key ratio: `train_chunk` (8 scan-fused steps in one dispatch) vs 8×
+//! `train_step` — the L2 optimization that amortizes dispatch overhead.
+
+use csmaafl::runtime::Engine;
+use csmaafl::util::bench::Bencher;
+use csmaafl::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    let engine = match Engine::load("artifacts", "mnist_small") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("runtime_latency bench requires artifacts: {e:#}");
+            return;
+        }
+    };
+    let m = engine.model().clone();
+    let img = m.image_numel();
+    let mut r = Rng::new(7);
+
+    let params = engine.init(0).unwrap();
+    let xs1: Vec<f32> = (0..m.batch * img).map(|_| r.f32()).collect();
+    let ys1: Vec<i32> = (0..m.batch).map(|_| r.below(10) as i32).collect();
+    let xsc: Vec<f32> = (0..m.chunk_steps * m.batch * img).map(|_| r.f32()).collect();
+    let ysc: Vec<i32> = (0..m.chunk_steps * m.batch).map(|_| r.below(10) as i32).collect();
+    let xse: Vec<f32> = (0..m.eval_batch * img).map(|_| r.f32()).collect();
+    let yse: Vec<i32> = (0..m.eval_batch).map(|_| r.below(10) as i32).collect();
+
+    let mut b = Bencher::new("PJRT dispatch latency (mnist_small CNN)")
+        .with_window(Duration::from_millis(1500), 2000);
+
+    b.bench("init", || {
+        let _ = engine.init(1).unwrap();
+    });
+    b.bench("train_step (1 SGD step, batch 5)", || {
+        let _ = engine.train_step(&params, &xs1, &ys1).unwrap();
+    });
+    let chunk = b
+        .bench("train_chunk (8 scan-fused steps)", || {
+            let _ = engine.train_chunk(&params, &xsc, &ysc).unwrap();
+        })
+        .clone();
+    b.bench("eval_chunk (100 images)", || {
+        let _ = engine.eval_chunk(&params, &xse, &yse).unwrap();
+    });
+    b.bench("aggregate (pallas axpy)", || {
+        let _ = engine.aggregate(&params, &params, 0.5).unwrap();
+    });
+    let eight_steps = b
+        .bench("8x train_step (same work, 8 dispatches)", || {
+            let mut p = params.clone();
+            for _ in 0..8 {
+                let sel = 0;
+                p = engine
+                    .train_step(&p, &xs1[sel..], &ys1[sel..])
+                    .unwrap()
+                    .0;
+            }
+        })
+        .clone();
+
+    // L1 ablation: identical CNN with XLA-native dense layers instead of
+    // the interpret-mode Pallas matmul (build with
+    // `--configs ...,mnist_small_nopallas`).
+    let nopallas_chunk = match Engine::load("artifacts", "mnist_small_nopallas") {
+        Ok(e2) => Some(
+            b.bench("train_chunk, XLA-native dense (ablation)", || {
+                let _ = e2.train_chunk(&params, &xsc, &ysc).unwrap();
+            })
+            .clone(),
+        ),
+        Err(_) => {
+            eprintln!("(mnist_small_nopallas artifacts absent; skipping L1 ablation)");
+            None
+        }
+    };
+
+    // L1 extension: convolutions ALSO via Pallas (im2col + tiled matmul).
+    if let Ok(e4) = Engine::load("artifacts", "mnist_small_pallasconv") {
+        b.bench("train_chunk, pallas conv too (extension)", || {
+            let _ = e4.train_chunk(&params, &xsc, &ysc).unwrap();
+        });
+    }
+
+    // L2 ablation: train_chunk with the scan left rolled (the default
+    // artifact ships unroll=8 after the §Perf pass).
+    let rolled_chunk = match Engine::load("artifacts", "mnist_small_rolled") {
+        Ok(e3) => Some(
+            b.bench("train_chunk, scan rolled (ablation)", || {
+                let _ = e3.train_chunk(&params, &xsc, &ysc).unwrap();
+            })
+            .clone(),
+        ),
+        Err(_) => None,
+    };
+
+    b.report();
+    println!(
+        "\nscan fusion speedup (8x train_step / train_chunk): {:.2}x",
+        eight_steps.mean_ns / chunk.mean_ns
+    );
+    if let Some(r) = rolled_chunk {
+        println!(
+            "scan unroll=8 (default) vs rolled chunk: {:.2}x",
+            r.mean_ns / chunk.mean_ns
+        );
+    }
+    println!(
+        "steps/sec through train_chunk: {:.0}",
+        8.0 / (chunk.mean_ns / 1e9)
+    );
+    if let Some(np) = nopallas_chunk {
+        println!(
+            "interpret-mode Pallas dense overhead vs native dot: {:.2}x",
+            chunk.mean_ns / np.mean_ns
+        );
+    }
+}

@@ -1,0 +1,69 @@
+//! E-PERF bench: L3 coordinator micro-costs — slot arbitration, staleness
+//! bookkeeping, the beta solver, and a full end-to-end AFL iteration with
+//! the linear learner (upper bound on coordinator overhead).
+
+use csmaafl::config::{Algorithm, RunConfig};
+use csmaafl::coordinator::{solve_betas, SchedulerPolicy, StalenessTracker, UploadScheduler};
+use csmaafl::session::{LearnerKind, Session};
+use csmaafl::util::bench::Bencher;
+use std::time::Duration;
+
+fn main() {
+    let mut b = Bencher::new("coordinator micro-costs (L3)");
+
+    for &m in &[20usize, 100, 1000] {
+        b.bench(&format!("scheduler request+grant cycle, M={m}"), || {
+            let mut s = UploadScheduler::new(SchedulerPolicy::OldestModelFirst, m);
+            for c in 0..m {
+                s.request(c, c as u64);
+            }
+            while s.grant().is_some() {}
+        });
+    }
+
+    b.bench("staleness tracker observe x1k", || {
+        let mut t = StalenessTracker::new(0.1);
+        for s in 0..1000u64 {
+            t.observe(s % 40);
+        }
+        std::hint::black_box(t.mu());
+    });
+
+    for &m in &[20usize, 100, 1000] {
+        let alpha = vec![1.0 / m as f64; m];
+        b.bench(&format!("beta solver, M={m}"), || {
+            let _ = solve_betas(&alpha).unwrap();
+        });
+    }
+    b.report();
+
+    // End-to-end AFL iteration rate with the (cheap) linear learner: the
+    // virtual-time engine + scheduling + aggregation, everything but PJRT.
+    let mut cfg = RunConfig::default();
+    cfg.clients = 20;
+    cfg.samples_per_client = 40;
+    cfg.test_samples = 100;
+    cfg.local_steps = 8;
+    cfg.max_slots = 10.0;
+    cfg.eval_every_slots = 10.0; // evaluation excluded from the hot loop
+    let session = Session::new(cfg, LearnerKind::Linear, "artifacts").unwrap();
+
+    let mut e2e = Bencher::new("end-to-end AFL engine (linear learner)")
+        .with_window(Duration::from_millis(1500), 20);
+    let mut last_aggs = 0u64;
+    let r = e2e
+        .bench("csmaafl 10 slots / 20 clients", || {
+            let run = session
+                .run_with(|c| c.algorithm = Algorithm::Csmaafl)
+                .unwrap();
+            last_aggs = run.aggregations;
+        })
+        .clone();
+    e2e.report();
+    println!(
+        "\n{} aggregations per run -> {:.0} aggregations/sec of wallclock \
+         (coordinator + linear training, no PJRT)",
+        last_aggs,
+        last_aggs as f64 / (r.mean_ns / 1e9)
+    );
+}

@@ -1,0 +1,99 @@
+//! E-FIG2 bench: the Sec. II-C / Fig. 2 time comparison, regenerated.
+//!
+//! Prints the analytic SFL-vs-AFL table for the paper's homogeneous and
+//! heterogeneous scenarios, cross-checks it against the discrete-event
+//! simulator, and micro-benchmarks the simulator primitives (the L3
+//! event loop must never be the bottleneck).
+
+use csmaafl::config::{Algorithm, RunConfig};
+use csmaafl::session::{LearnerKind, Session};
+use csmaafl::sim::{EventQueue, HeterogeneityProfile, TimeModel};
+use csmaafl::util::bench::Bencher;
+
+fn analytic_table() {
+    let tm = TimeModel::default();
+    println!("== Fig. 2 / Sec. II-C analytic time comparison (ticks) ==");
+    println!(
+        "{:<14} {:>6} {:>16} {:>16} {:>18} {:>16}",
+        "scenario", "M", "SFL round", "AFL sweep", "AFL update gap", "AFL extra"
+    );
+    for (m, e, a) in [
+        (10usize, 16usize, 1.0f64),
+        (20, 16, 1.0),
+        (100, 120, 1.0),
+        (20, 16, 4.0),
+        (100, 120, 10.0),
+    ] {
+        let sfl = tm.sfl_round_heterogeneous(m, e, a);
+        let afl_sweep = tm.afl_sweep_homogeneous(m, e);
+        println!(
+            "{:<14} {:>6} {:>16} {:>16} {:>18} {:>16}",
+            if a == 1.0 { "homogeneous" } else { "heterogeneous" },
+            m,
+            sfl,
+            afl_sweep,
+            tm.afl_update_interval(),
+            (m as u64 - 1) * tm.tau_down,
+        );
+    }
+    println!(
+        "\nThe paper's observations hold: AFL needs (M-1)*tau_d more per full\n\
+         sweep, but refreshes the global model every tau_u+tau_d = {} ticks\n\
+         instead of once per round.",
+        tm.afl_update_interval()
+    );
+}
+
+fn simulated_update_counts() {
+    println!("\n== simulated updates within one SFL-round horizon ==");
+    println!(
+        "{:<16} {:>12} {:>12} {:>14}",
+        "mode", "aggs", "per slot", "fairness"
+    );
+    let mut cfg = RunConfig::default();
+    cfg.clients = 20;
+    cfg.samples_per_client = 20;
+    cfg.test_samples = 100;
+    cfg.local_steps = 16;
+    cfg.max_slots = 5.0;
+    cfg.eval_every_slots = 5.0;
+    cfg.heterogeneity = HeterogeneityProfile::Homogeneous;
+    cfg.jitter = 0.0;
+    let session = Session::new(cfg, LearnerKind::Linear, "artifacts").unwrap();
+    for alg in [Algorithm::Sfl, Algorithm::Csmaafl] {
+        let run = session.run_with(|c| c.algorithm = alg).unwrap();
+        println!(
+            "{:<16} {:>12} {:>12.1} {:>14.3}",
+            run.label,
+            run.aggregations,
+            run.aggregations as f64 / 5.0,
+            run.fairness
+        );
+    }
+}
+
+fn sim_microbench() {
+    let mut b = Bencher::new("sim primitives (L3 event loop)");
+    b.bench("event queue push+pop (1k events)", || {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        for i in 0..1000u64 {
+            q.schedule_at(i * 7 % 997, i as u32);
+        }
+        while q.pop().is_some() {}
+    });
+    let tm = TimeModel::default();
+    b.bench("analytic round formulas x1k", || {
+        let mut acc = 0u64;
+        for m in 1..1000usize {
+            acc = acc.wrapping_add(tm.sfl_round_heterogeneous(m, 16, 2.0));
+        }
+        std::hint::black_box(acc);
+    });
+    b.report();
+}
+
+fn main() {
+    analytic_table();
+    simulated_update_counts();
+    sim_microbench();
+}

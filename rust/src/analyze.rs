@@ -1,0 +1,161 @@
+//! Post-hoc analysis of stored figure/run records (`results/*.json`):
+//! the paper-facing comparison tables — early-stage acceleration,
+//! time-to-target-accuracy, final gaps, fairness.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::metrics::{EvalPoint, RunResult};
+use crate::util::json::{self, Json};
+
+/// Reload a RunResult from its JSON record (inverse of `to_json`).
+pub fn run_from_json(j: &Json) -> Result<RunResult> {
+    let label = j
+        .get("label")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("run record: missing label"))?
+        .to_string();
+    let mut run = RunResult::empty(&label);
+    run.aggregations = j.get("aggregations").and_then(Json::as_i64).unwrap_or(0) as u64;
+    run.mean_staleness = j.get("mean_staleness").and_then(Json::as_f64).unwrap_or(0.0);
+    run.fairness = j.get("fairness").and_then(Json::as_f64).unwrap_or(1.0);
+    run.total_ticks = j.get("total_ticks").and_then(Json::as_i64).unwrap_or(0) as u64;
+    run.wallclock_secs = j.get("wallclock_secs").and_then(Json::as_f64).unwrap_or(0.0);
+    run.uploads_per_client = j
+        .get("uploads_per_client")
+        .and_then(Json::as_array)
+        .map(|a| a.iter().filter_map(Json::as_i64).map(|v| v as u64).collect())
+        .unwrap_or_default();
+    for p in j
+        .get("points")
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow!("run record: missing points"))?
+    {
+        run.points.push(EvalPoint {
+            slot: p.get("slot").and_then(Json::as_f64).unwrap_or(0.0),
+            ticks: p.get("ticks").and_then(Json::as_i64).unwrap_or(0) as u64,
+            iteration: p.get("iteration").and_then(Json::as_i64).unwrap_or(0) as u64,
+            accuracy: p.get("accuracy").and_then(Json::as_f64).unwrap_or(0.0),
+            loss: p.get("loss").and_then(Json::as_f64).unwrap_or(0.0),
+        });
+    }
+    Ok(run)
+}
+
+/// Load every run from a figure record (`results/figN.json`).
+pub fn load_figure_record(path: &str) -> Result<(String, Vec<RunResult>)> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let j = json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+    let title = j
+        .get("title")
+        .and_then(Json::as_str)
+        .unwrap_or("(untitled)")
+        .to_string();
+    let runs = j
+        .get("runs")
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow!("{path}: missing runs"))?
+        .iter()
+        .map(run_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    Ok((title, runs))
+}
+
+/// Mean accuracy over a slot window.
+pub fn window_accuracy(r: &RunResult, lo: f64, hi: f64) -> f64 {
+    let pts: Vec<f64> = r
+        .points
+        .iter()
+        .filter(|p| p.slot >= lo && p.slot <= hi)
+        .map(|p| p.accuracy)
+        .collect();
+    if pts.is_empty() {
+        return 0.0;
+    }
+    pts.iter().sum::<f64>() / pts.len() as f64
+}
+
+/// The per-figure comparison table the paper's prose walks through.
+pub fn figure_table(title: &str, runs: &[RunResult]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    let fed = runs.iter().find(|r| r.label == "fedavg");
+    let fed_final = fed.map_or(0.0, |r| r.final_accuracy());
+    let target = 0.8 * fed_final;
+    out.push_str(&format!(
+        "{:<18} {:>10} {:>10} {:>10} {:>16} {:>12}\n",
+        "series", "early(1-5)", "final", "best", "slots-to-80%fed", "staleness"
+    ));
+    for r in runs {
+        let tta = r
+            .slots_to_accuracy(target)
+            .map(|s| format!("{s:.0}"))
+            .unwrap_or_else(|| "never".into());
+        out.push_str(&format!(
+            "{:<18} {:>10.4} {:>10.4} {:>10.4} {:>16} {:>12.2}\n",
+            r.label,
+            window_accuracy(r, 1.0, 5.0),
+            r.final_accuracy(),
+            r.best_accuracy(),
+            tta,
+            r.mean_staleness,
+        ));
+    }
+    if let Some(fed) = fed {
+        let best_early = runs
+            .iter()
+            .filter(|r| r.label != "fedavg")
+            .map(|r| window_accuracy(r, 1.0, 5.0))
+            .fold(0.0, f64::max);
+        out.push_str(&format!(
+            "early-stage: best csmaafl {:.4} vs fedavg {:.4} ({})\n",
+            best_early,
+            window_accuracy(fed, 1.0, 5.0),
+            if best_early > window_accuracy(fed, 1.0, 5.0) {
+                "CSMAAFL accelerates — matches the paper"
+            } else {
+                "no acceleration in this run"
+            }
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_run(label: &str, accs: &[f64]) -> RunResult {
+        let mut r = RunResult::empty(label);
+        r.points = accs
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| EvalPoint {
+                slot: i as f64,
+                ticks: 100 * i as u64,
+                iteration: i as u64,
+                accuracy: a,
+                loss: 1.0,
+            })
+            .collect();
+        r
+    }
+
+    #[test]
+    fn json_record_roundtrip() {
+        let r = fake_run("x", &[0.1, 0.5, 0.9]);
+        let back = run_from_json(&r.to_json()).unwrap();
+        assert_eq!(back.label, "x");
+        assert_eq!(back.points.len(), 3);
+        assert_eq!(back.points[2].accuracy, 0.9);
+    }
+
+    #[test]
+    fn window_and_table() {
+        let fed = fake_run("fedavg", &[0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.8]);
+        let csma = fake_run("csmaafl g=0.2", &[0.0, 0.4, 0.5, 0.6, 0.6, 0.6, 0.7]);
+        assert!((window_accuracy(&csma, 1.0, 5.0) - 0.54).abs() < 1e-9);
+        let table = figure_table("t", &[fed, csma]);
+        assert!(table.contains("CSMAAFL accelerates"));
+        assert!(table.contains("never") || table.contains("6"));
+    }
+}

@@ -1,0 +1,345 @@
+//! Run configuration: typed config with JSON file loading + CLI overrides.
+//!
+//! Every knob of a federated run lives here — algorithm, population,
+//! data, time model, heterogeneity, CSMAAFL hyper-parameters — so a run
+//! is fully described by one config (plus the artifacts manifest).
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::scheduler::SchedulerPolicy;
+use crate::data::{Partition, SynthKind};
+use crate::sim::{HeterogeneityProfile, TimeModel};
+use crate::util::json::{self, Json};
+
+/// Which federated algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Synchronous FedAvg (the paper's comparator).
+    Sfl,
+    /// Sec. III-A: SFL α reused asynchronously (negative result).
+    AflNaive,
+    /// Sec. III-B: exact-equivalence AFL with solved β.
+    AflBaseline,
+    /// Sec. III-C: the paper's contribution.
+    Csmaafl,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s.to_ascii_lowercase().as_str() {
+            "sfl" | "fedavg" => Some(Algorithm::Sfl),
+            "afl-naive" | "naive" => Some(Algorithm::AflNaive),
+            "afl-baseline" | "baseline" => Some(Algorithm::AflBaseline),
+            "csmaafl" | "afl" => Some(Algorithm::Csmaafl),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Sfl => "fedavg",
+            Algorithm::AflNaive => "afl-naive",
+            Algorithm::AflBaseline => "afl-baseline",
+            Algorithm::Csmaafl => "csmaafl",
+        }
+    }
+}
+
+/// Which aggregation implementation the server uses (ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggregatorKind {
+    /// Rust axpy over host tensors (default hot path).
+    Native,
+    /// The AOT Pallas kernel artifact through PJRT.
+    Pjrt,
+}
+
+impl AggregatorKind {
+    pub fn parse(s: &str) -> Option<AggregatorKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Some(AggregatorKind::Native),
+            "pjrt" | "pallas" => Some(AggregatorKind::Pjrt),
+            _ => None,
+        }
+    }
+}
+
+/// Full description of one federated run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub algorithm: Algorithm,
+    /// Artifact model config name (manifest key), e.g. `mnist_small`.
+    pub model_config: String,
+    /// Number of clients M.
+    pub clients: usize,
+    pub samples_per_client: usize,
+    pub test_samples: usize,
+    pub dataset: SynthKind,
+    pub partition: Partition,
+    /// Base local SGD steps E per upload (adaptive policy scales this).
+    pub local_steps: usize,
+    /// Eq. (11) γ.
+    pub gamma: f64,
+    /// μ_ji EMA rate.
+    pub mu_rho: f64,
+    pub seed: u64,
+    pub time: TimeModel,
+    pub heterogeneity: HeterogeneityProfile,
+    /// Per-round multiplicative compute jitter (0.1 = ±10%).
+    pub jitter: f64,
+    /// Stop after this many relative time slots.
+    pub max_slots: f64,
+    /// Evaluate the global model every this many slots.
+    pub eval_every_slots: f64,
+    /// Sec. III-C adaptive local-iteration policy on/off.
+    pub adaptive_iters: bool,
+    pub aggregator: AggregatorKind,
+    /// Upload-slot arbitration policy (AFL engines).
+    pub scheduler: SchedulerPolicy,
+    /// Failure injection: probability that a granted upload is lost in
+    /// transit (the server re-downloads the current global so the client
+    /// rejoins; its local work is wasted). 0 = reliable channel.
+    pub upload_loss: f64,
+    /// SFL client sampling fraction (McMahan et al. [2]): each round the
+    /// server waits only for this share of clients, chosen at random.
+    /// 1.0 = full participation (the paper's default setting).
+    pub sfl_sample_fraction: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            algorithm: Algorithm::Csmaafl,
+            model_config: "mnist_small".into(),
+            clients: 20,
+            samples_per_client: 80,
+            test_samples: 500,
+            dataset: SynthKind::Mnist,
+            partition: Partition::Iid,
+            // ~3 local epochs per upload (the paper's clients run ~120
+            // steps per round on 600 images; scaled to 80-image shards).
+            local_steps: 48,
+            gamma: 0.2,
+            mu_rho: 0.1,
+            seed: 42,
+            time: TimeModel::default(),
+            heterogeneity: HeterogeneityProfile::Uniform { max_factor: 4.0 },
+            jitter: 0.1,
+            max_slots: 40.0,
+            eval_every_slots: 1.0,
+            adaptive_iters: true,
+            aggregator: AggregatorKind::Native,
+            scheduler: SchedulerPolicy::OldestModelFirst,
+            upload_loss: 0.0,
+            sfl_sample_fraction: 1.0,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.clients == 0 {
+            bail!("clients must be > 0");
+        }
+        if self.samples_per_client < 2 {
+            bail!("samples_per_client must be >= 2 (non-IID needs 2 shards)");
+        }
+        if self.local_steps == 0 {
+            bail!("local_steps must be > 0");
+        }
+        if self.gamma <= 0.0 {
+            bail!("gamma must be > 0");
+        }
+        if !(0.0..=1.0).contains(&self.mu_rho) {
+            bail!("mu_rho must be in [0,1]");
+        }
+        if self.max_slots <= 0.0 || self.eval_every_slots <= 0.0 {
+            bail!("max_slots and eval_every_slots must be > 0");
+        }
+        if !(0.0..1.0).contains(&self.upload_loss) {
+            bail!("upload_loss must be in [0,1)");
+        }
+        if !(0.0..=1.0).contains(&self.sfl_sample_fraction) || self.sfl_sample_fraction == 0.0 {
+            bail!("sfl_sample_fraction must be in (0,1]");
+        }
+        Ok(())
+    }
+
+    /// Total training samples across clients.
+    pub fn train_samples(&self) -> usize {
+        self.clients * self.samples_per_client
+    }
+
+    /// Load from a JSON config file, then apply `overrides` ("key=value").
+    pub fn load(path: &str, overrides: &[(String, String)]) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let j = json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+        let mut cfg = Self::from_json(&j)?;
+        for (k, v) in overrides {
+            cfg.set_field(k, v)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        let obj = j.as_object().ok_or_else(|| anyhow!("config must be an object"))?;
+        for (k, v) in obj {
+            let vs = match v {
+                Json::Str(s) => s.clone(),
+                other => other.to_string_compact(),
+            };
+            cfg.set_field(k, &vs)
+                .with_context(|| format!("config field {k}"))?;
+        }
+        Ok(cfg)
+    }
+
+    /// Set one field from its string form (shared by JSON + CLI overrides).
+    pub fn set_field(&mut self, key: &str, val: &str) -> Result<()> {
+        let badval = || anyhow!("invalid value {val:?} for {key}");
+        match key {
+            "algorithm" => self.algorithm = Algorithm::parse(val).ok_or_else(badval)?,
+            "model_config" => self.model_config = val.to_string(),
+            "clients" => self.clients = val.parse().map_err(|_| badval())?,
+            "samples_per_client" => self.samples_per_client = val.parse().map_err(|_| badval())?,
+            "test_samples" => self.test_samples = val.parse().map_err(|_| badval())?,
+            "dataset" => self.dataset = SynthKind::parse(val).ok_or_else(badval)?,
+            "partition" => self.partition = Partition::parse(val).ok_or_else(badval)?,
+            "local_steps" => self.local_steps = val.parse().map_err(|_| badval())?,
+            "gamma" => self.gamma = val.parse().map_err(|_| badval())?,
+            "mu_rho" => self.mu_rho = val.parse().map_err(|_| badval())?,
+            "seed" => self.seed = val.parse().map_err(|_| badval())?,
+            "tau_down" => self.time.tau_down = val.parse().map_err(|_| badval())?,
+            "tau_step" => self.time.tau_step = val.parse().map_err(|_| badval())?,
+            "tau_up" => self.time.tau_up = val.parse().map_err(|_| badval())?,
+            "heterogeneity" => {
+                self.heterogeneity = HeterogeneityProfile::parse(val).ok_or_else(badval)?
+            }
+            "max_factor" => {
+                self.heterogeneity = HeterogeneityProfile::Uniform {
+                    max_factor: val.parse().map_err(|_| badval())?,
+                }
+            }
+            "jitter" => self.jitter = val.parse().map_err(|_| badval())?,
+            "max_slots" => self.max_slots = val.parse().map_err(|_| badval())?,
+            "eval_every_slots" => self.eval_every_slots = val.parse().map_err(|_| badval())?,
+            "adaptive_iters" => self.adaptive_iters = val.parse().map_err(|_| badval())?,
+            "aggregator" => self.aggregator = AggregatorKind::parse(val).ok_or_else(badval)?,
+            "scheduler" => self.scheduler = SchedulerPolicy::parse(val).ok_or_else(badval)?,
+            "upload_loss" => self.upload_loss = val.parse().map_err(|_| badval())?,
+            "sfl_sample_fraction" => {
+                self.sfl_sample_fraction = val.parse().map_err(|_| badval())?
+            }
+            _ => bail!("unknown config key {key:?}"),
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("algorithm", Json::Str(self.algorithm.name().into()))
+            .set("model_config", Json::Str(self.model_config.clone()))
+            .set("clients", Json::Int(self.clients as i64))
+            .set("samples_per_client", Json::Int(self.samples_per_client as i64))
+            .set("test_samples", Json::Int(self.test_samples as i64))
+            .set("dataset", Json::Str(self.dataset.name().into()))
+            .set("partition", Json::Str(self.partition.name().into()))
+            .set("local_steps", Json::Int(self.local_steps as i64))
+            .set("gamma", Json::Float(self.gamma))
+            .set("mu_rho", Json::Float(self.mu_rho))
+            .set("seed", Json::Int(self.seed as i64))
+            .set("tau_down", Json::Int(self.time.tau_down as i64))
+            .set("tau_step", Json::Int(self.time.tau_step as i64))
+            .set("tau_up", Json::Int(self.time.tau_up as i64))
+            .set("jitter", Json::Float(self.jitter))
+            .set("max_slots", Json::Float(self.max_slots))
+            .set("eval_every_slots", Json::Float(self.eval_every_slots))
+            .set("adaptive_iters", Json::Bool(self.adaptive_iters))
+            .set("upload_loss", Json::Float(self.upload_loss))
+            .set("sfl_sample_fraction", Json::Float(self.sfl_sample_fraction))
+            .set(
+                "scheduler",
+                Json::Str(
+                    match self.scheduler {
+                        SchedulerPolicy::OldestModelFirst => "oldest",
+                        SchedulerPolicy::Fifo => "fifo",
+                        SchedulerPolicy::RoundRobin => "roundrobin",
+                    }
+                    .into(),
+                ),
+            );
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn set_field_roundtrip() {
+        let mut c = RunConfig::default();
+        c.set_field("algorithm", "fedavg").unwrap();
+        assert_eq!(c.algorithm, Algorithm::Sfl);
+        c.set_field("clients", "50").unwrap();
+        assert_eq!(c.clients, 50);
+        c.set_field("gamma", "0.4").unwrap();
+        assert_eq!(c.gamma, 0.4);
+        c.set_field("dataset", "fashion").unwrap();
+        assert_eq!(c.dataset, SynthKind::Fashion);
+        c.set_field("partition", "noniid").unwrap();
+        assert_eq!(c.partition, Partition::TwoClass);
+        c.set_field("adaptive_iters", "false").unwrap();
+        assert!(!c.adaptive_iters);
+        c.set_field("scheduler", "fifo").unwrap();
+        assert_eq!(c.scheduler, SchedulerPolicy::Fifo);
+        c.set_field("aggregator", "pjrt").unwrap();
+        assert_eq!(c.aggregator, AggregatorKind::Pjrt);
+        assert!(c.set_field("nonsense", "1").is_err());
+        assert!(c.set_field("clients", "abc").is_err());
+    }
+
+    #[test]
+    fn from_json_full() {
+        let j = json::parse(
+            r#"{"algorithm": "csmaafl", "clients": 10, "gamma": 0.6,
+                "dataset": "fashion", "partition": "iid", "tau_up": 200}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.clients, 10);
+        assert_eq!(c.gamma, 0.6);
+        assert_eq!(c.time.tau_up, 200);
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut c = RunConfig::default();
+        c.clients = 0;
+        assert!(c.validate().is_err());
+        c = RunConfig::default();
+        c.gamma = 0.0;
+        assert!(c.validate().is_err());
+        c = RunConfig::default();
+        c.max_slots = -1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = RunConfig::default();
+        let j = c.to_json();
+        let c2 = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c2.clients, c.clients);
+        assert_eq!(c2.algorithm, c.algorithm);
+        assert_eq!(c2.time, c.time);
+    }
+}

@@ -1,0 +1,237 @@
+//! Event-driven asynchronous FL (Sec. II-B) with pluggable scheduling and
+//! aggregation — runs both CSMAAFL (Sec. III-C) and the naive-coefficient
+//! AFL (Sec. III-A).
+//!
+//! Lifecycle per client (Fig. 1 right / Fig. 2 bottom):
+//!   DownloadDone(w_i) → local compute (`a_m·E'·τ_step`) → ComputeDone →
+//!   upload-slot request → grant (TDMA, one at a time) → UploadDone →
+//!   server aggregates w_{j+1} = β_j·w_j + (1-β_j)·w_i^m, sends the fresh
+//!   global back to that client only.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::runner::{FlContext, Recorder};
+use super::scheduler::{SchedulerPolicy, UploadScheduler};
+use super::staleness::{local_weight, StalenessTracker};
+use crate::learner::BatchCursor;
+use crate::metrics::RunResult;
+use crate::model::ParamSet;
+use crate::sim::{ComputeModel, EventQueue, UplinkChannel};
+use crate::util::rng::Rng;
+
+/// How the server picks β_j at each aggregation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BetaPolicy {
+    /// Sec. III-A: reuse the SFL coefficient (β_j = 1 - α_m).
+    NaiveAlpha,
+    /// Sec. III-C eq. (11): staleness-aware with moving average μ.
+    Staleness { gamma: f64, rho: f64 },
+}
+
+#[derive(Debug)]
+enum Event {
+    /// Client received a global model snapshot (sent at iteration `i`).
+    /// The snapshot is shared, not cloned: the server never mutates a
+    /// model that is in flight (aggregation replaces the Arc).
+    DownloadDone {
+        client: usize,
+        w: Arc<ParamSet>,
+        i: u64,
+    },
+    ComputeDone {
+        client: usize,
+    },
+    UploadDone {
+        client: usize,
+    },
+}
+
+struct ClientState {
+    cursor: BatchCursor,
+    /// Local model awaiting upload + the iteration it started from.
+    pending: Option<(ParamSet, u64)>,
+}
+
+/// Sec. III-C adaptive local-iteration policy (after [4]): clients scale
+/// their local step count inversely with their slowness so every client's
+/// compute phase lasts roughly the same and channel access stays fair.
+pub fn adaptive_steps(base: usize, factor: f64, enabled: bool) -> usize {
+    if !enabled {
+        return base;
+    }
+    ((base as f64 / factor).round() as usize).clamp(1, base * 4)
+}
+
+pub fn run_afl(
+    ctx: &FlContext<'_>,
+    beta_policy: BetaPolicy,
+    sched_policy: SchedulerPolicy,
+    label: String,
+) -> Result<RunResult> {
+    let cfg = ctx.cfg;
+    let m = cfg.clients;
+    let root = Rng::new(cfg.seed);
+    let cm = ComputeModel::new(cfg.heterogeneity, m, cfg.jitter, &root);
+    let mut jrng = root.fork(0xd1ce);
+
+    // Identical slot unit as the paired SFL run: fair x-axis.
+    let slot_ticks =
+        cfg.time
+            .sfl_round_heterogeneous(m, cfg.local_steps, cm.slowest_factor());
+    let mut rec = Recorder::new(ctx, slot_ticks)?;
+    let max_ticks = rec.max_ticks();
+
+    let img = ctx.train.x.len() / ctx.train.len();
+    let batch = ctx.learner.batch();
+    let alpha = 1.0 / m as f64;
+
+    let mut w = ctx.learner.init(cfg.seed as u32)?;
+    let mut queue: EventQueue<Event> = EventQueue::new();
+    let mut channel = UplinkChannel::new();
+    let mut scheduler = UploadScheduler::new(sched_policy, m);
+    let mut tracker = StalenessTracker::new(cfg.mu_rho);
+    let mut clients: Vec<ClientState> = ctx
+        .shards
+        .iter()
+        .map(|s| ClientState {
+            cursor: BatchCursor::new(s.indices.clone()),
+            pending: None,
+        })
+        .collect();
+
+    let mut j: u64 = 0; // global aggregation count
+    let mut staleness_sum: f64 = 0.0;
+    let mut lost_uploads: u64 = 0;
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+
+    // t=0: the server broadcasts w_0 to everyone (Algorithm 1 line 1).
+    // One shared snapshot for the whole broadcast.
+    let w0 = Arc::new(w.clone());
+    for c in 0..m {
+        queue.schedule_at(cfg.time.tau_down, Event::DownloadDone {
+            client: c,
+            w: Arc::clone(&w0),
+            i: 0,
+        });
+    }
+    drop(w0);
+
+    while let Some((now, ev)) = queue.pop() {
+        if now > max_ticks {
+            break;
+        }
+        match ev {
+            Event::DownloadDone { client, w: w_recv, i } => {
+                // Local learning (eq. 4) — executed now, surfaced at
+                // ComputeDone per the virtual-time compute model.
+                let steps = adaptive_steps(
+                    cfg.local_steps,
+                    cm.factor(client),
+                    cfg.adaptive_iters,
+                );
+                clients[client]
+                    .cursor
+                    .fill(ctx.train, steps * batch, img, &mut xs, &mut ys);
+                let (local, _loss) = ctx.learner.train(&w_recv, &xs, &ys, steps)?;
+                clients[client].pending = Some((local, i));
+                let dur = cm.duration(&cfg.time, client, steps, &mut jrng);
+                queue.schedule_in(dur, Event::ComputeDone { client });
+            }
+            Event::ComputeDone { client } => {
+                scheduler.request(client, now);
+                if channel.is_free(now) {
+                    if let Some(winner) = scheduler.grant() {
+                        let done = channel.reserve(now, cfg.time.tau_up);
+                        queue.schedule_at(done, Event::UploadDone { client: winner });
+                    }
+                }
+            }
+            Event::UploadDone { client } => {
+                let (local, i) = clients[client]
+                    .pending
+                    .take()
+                    .expect("upload without a pending local model");
+                // Failure injection: the upload is lost in transit. The
+                // server never sees the model; it re-sends the current
+                // global so the client rejoins the loop.
+                if cfg.upload_loss > 0.0 && jrng.f64() < cfg.upload_loss {
+                    lost_uploads += 1;
+                    queue.schedule_in(cfg.time.tau_down, Event::DownloadDone {
+                        client,
+                        w: Arc::new(w.clone()),
+                        i: j,
+                    });
+                    if channel.is_free(now) {
+                        if let Some(winner) = scheduler.grant() {
+                            let done = channel.reserve(now, cfg.time.tau_up);
+                            queue.schedule_at(done, Event::UploadDone { client: winner });
+                        }
+                    }
+                    continue;
+                }
+                // Evaluate cadence points that precede this aggregation.
+                rec.catch_up(now, &w, j)?;
+
+                let staleness = j - i;
+                let weight = match beta_policy {
+                    BetaPolicy::NaiveAlpha => alpha,
+                    BetaPolicy::Staleness { gamma, .. } => {
+                        let lw = local_weight(tracker.mu(), gamma, j + 1, staleness);
+                        tracker.observe(staleness);
+                        lw
+                    }
+                };
+                staleness_sum += staleness as f64;
+                let beta = (1.0 - weight) as f32;
+                ctx.aggregate(&mut w, &local, beta)?; // eq. (3)/(11)
+                j += 1;
+
+                // Fresh global goes back to this client only (a snapshot:
+                // further aggregations must not mutate an in-flight model).
+                queue.schedule_in(cfg.time.tau_down, Event::DownloadDone {
+                    client,
+                    w: Arc::new(w.clone()),
+                    i: j,
+                });
+                // Channel freed: grant the next contender, if any.
+                if channel.is_free(now) {
+                    if let Some(winner) = scheduler.grant() {
+                        let done = channel.reserve(now, cfg.time.tau_up);
+                        queue.schedule_at(done, Event::UploadDone { client: winner });
+                    }
+                }
+            }
+        }
+    }
+    rec.finish(&w, j)?;
+    if lost_uploads > 0 {
+        crate::log_info!(
+            "afl: {lost_uploads} uploads lost in transit ({} delivered)",
+            j
+        );
+    }
+
+    let uploads = scheduler.grants().to_vec();
+    let fairness = scheduler.jain_fairness();
+    let mean_staleness = if j > 0 { staleness_sum / j as f64 } else { 0.0 };
+    Ok(rec.into_result(label, uploads, j, mean_staleness, fairness, max_ticks))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adaptive_steps_policy() {
+        assert_eq!(adaptive_steps(16, 1.0, true), 16);
+        assert_eq!(adaptive_steps(16, 2.0, true), 8);
+        assert_eq!(adaptive_steps(16, 10.0, true), 2);
+        assert_eq!(adaptive_steps(16, 100.0, true), 1, "floored");
+        assert_eq!(adaptive_steps(16, 10.0, false), 16, "disabled");
+        // Very fast clients don't blow up unboundedly.
+        assert_eq!(adaptive_steps(16, 0.1, true), 64);
+    }
+}

@@ -1,0 +1,215 @@
+//! Sec. III-B: solve the AFL aggregation coefficients β_1..β_M that make
+//! one asynchronous sweep reproduce the synchronous FedAvg aggregate
+//! exactly.
+//!
+//! Given FedAvg coefficients α_m (Σα = 1) and a schedule φ(1..M), the
+//! sweep  w_{t+1} = β_t·w_t + (1-β_t)·w^{φ(t)}  telescopes to
+//!
+//! ```text
+//! w_{M+1} = (Π_t β_t)·w_1 + Σ_t (1-β_t)·(Π_{s>t} β_s)·w^{φ(t)} .
+//! ```
+//!
+//! Matching coefficients backwards (eqs. 9–10):
+//!
+//! ```text
+//! 1-β_M     = α_{φ(M)}
+//! 1-β_{t}   = α_{φ(t)} / Π_{s>t} β_s .
+//! ```
+//!
+//! Because Σα = 1, the residual weight on the initial global model is
+//! forced to zero, i.e. **β_1 = 0**: the first aggregation of a sweep
+//! discards the incoming global entirely — exactly like FedAvg, which
+//! also assigns the previous global no weight. The paper states
+//! β ∈ (0,1); the boundary value at t=1 is the unique consistent
+//! solution and is validated by the equivalence tests below.
+
+use anyhow::{bail, ensure, Result};
+
+/// Solve for β given FedAvg weights `alpha` (already in schedule order:
+/// `alpha[t]` is the weight of the client scheduled at iteration t+1).
+///
+/// Returns `beta` with `beta[t]` the coefficient of iteration t+1.
+pub fn solve_betas(alpha_in_schedule_order: &[f64]) -> Result<Vec<f64>> {
+    let alpha = alpha_in_schedule_order;
+    let m = alpha.len();
+    ensure!(m >= 1, "need at least one client");
+    for (i, &a) in alpha.iter().enumerate() {
+        ensure!(
+            a > 0.0 && a < 1.0 || (m == 1 && a == 1.0),
+            "alpha[{i}] = {a} out of (0,1)"
+        );
+    }
+    let sum: f64 = alpha.iter().sum();
+    ensure!(
+        (sum - 1.0).abs() < 1e-9,
+        "alphas must sum to 1 (got {sum})"
+    );
+
+    let mut beta = vec![0.0f64; m];
+    // Running product Π_{s>t} β_s, built backwards.
+    let mut prod = 1.0f64;
+    for t in (0..m).rev() {
+        let one_minus = alpha[t] / prod;
+        if t == 0 {
+            // Forced boundary: Σα=1 ⇒ α_{φ(1)} = Π_{s>1}β_s ⇒ β_1 = 0.
+            ensure!(
+                (one_minus - 1.0).abs() < 1e-6,
+                "inconsistent alphas: residual {one_minus}"
+            );
+            beta[0] = 0.0;
+            break;
+        }
+        if one_minus >= 1.0 {
+            bail!(
+                "no valid beta at t={t}: alpha {} exceeds remaining product {prod}",
+                alpha[t]
+            );
+        }
+        beta[t] = 1.0 - one_minus;
+        prod *= beta[t];
+    }
+    Ok(beta)
+}
+
+/// Reconstruct the effective per-client coefficients a sweep with `beta`
+/// assigns (inverse of `solve_betas`); index t matches the schedule.
+pub fn effective_coefficients(beta: &[f64]) -> Vec<f64> {
+    let m = beta.len();
+    let mut coeff = vec![0.0f64; m];
+    let mut prod = 1.0f64; // Π_{s>t} β_s
+    for t in (0..m).rev() {
+        coeff[t] = (1.0 - beta[t]) * prod;
+        prod *= beta[t];
+    }
+    coeff
+}
+
+/// Sec. III-A: effective coefficients when the *naive* SFL weights are
+/// reused asynchronously (β_t = 1 - α_{φ(t)}): the early clients'
+/// contribution decays geometrically. Returned in schedule order.
+pub fn naive_effective_coefficients(alpha_in_schedule_order: &[f64]) -> Vec<f64> {
+    let beta: Vec<f64> = alpha_in_schedule_order.iter().map(|a| 1.0 - a).collect();
+    effective_coefficients(&beta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn uniform_alpha(m: usize) -> Vec<f64> {
+        vec![1.0 / m as f64; m]
+    }
+
+    fn random_alpha(m: usize, seed: u64) -> Vec<f64> {
+        let mut r = Rng::new(seed);
+        let raw: Vec<f64> = (0..m).map(|_| 0.05 + r.f64()).collect();
+        let s: f64 = raw.iter().sum();
+        raw.into_iter().map(|v| v / s).collect()
+    }
+
+    #[test]
+    fn uniform_roundtrip() {
+        for m in [1usize, 2, 3, 10, 100] {
+            let alpha = uniform_alpha(m);
+            let beta = solve_betas(&alpha).unwrap();
+            let coeff = effective_coefficients(&beta);
+            for (a, c) in alpha.iter().zip(&coeff) {
+                assert!((a - c).abs() < 1e-12, "m={m}: {a} vs {c}");
+            }
+            assert_eq!(beta[0], 0.0, "beta_1 must be 0");
+        }
+    }
+
+    #[test]
+    fn random_alphas_roundtrip() {
+        for seed in 0..50u64 {
+            let m = 2 + (seed % 40) as usize;
+            let alpha = random_alpha(m, seed);
+            let beta = solve_betas(&alpha).unwrap();
+            let coeff = effective_coefficients(&beta);
+            for (t, (a, c)) in alpha.iter().zip(&coeff).enumerate() {
+                assert!((a - c).abs() < 1e-9, "seed={seed} t={t}: {a} vs {c}");
+            }
+            // β_t ∈ [0,1) with β_1 = 0 exactly.
+            assert_eq!(beta[0], 0.0);
+            for &b in &beta[1..] {
+                assert!((0.0..1.0).contains(&b), "{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_paper_recurrence() {
+        // eq. (9): α_{φ(M)} = 1 - β_M ; eq. (10): α_{φ(M-1)} = β_M(1-β_{M-1}).
+        let alpha = random_alpha(5, 7);
+        let beta = solve_betas(&alpha).unwrap();
+        let m = 5;
+        assert!((alpha[m - 1] - (1.0 - beta[m - 1])).abs() < 1e-12);
+        assert!((alpha[m - 2] - beta[m - 1] * (1.0 - beta[m - 2])).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sweep_simulation_equals_fedavg() {
+        // Simulate the scalar sweep: w ← β w + (1-β) v_t must land exactly
+        // on Σ α_t v_t regardless of the starting global value.
+        for seed in 0..20u64 {
+            let m = 3 + (seed % 20) as usize;
+            let alpha = random_alpha(m, seed * 13 + 1);
+            let beta = solve_betas(&alpha).unwrap();
+            let mut r = Rng::new(seed);
+            let vals: Vec<f64> = (0..m).map(|_| r.range_f64(-5.0, 5.0)).collect();
+            let start = r.range_f64(-100.0, 100.0); // arbitrary stale global
+            let mut w = start;
+            for t in 0..m {
+                w = beta[t] * w + (1.0 - beta[t]) * vals[t];
+            }
+            let fedavg: f64 = alpha.iter().zip(&vals).map(|(a, v)| a * v).sum();
+            assert!((w - fedavg).abs() < 1e-9, "seed={seed}: {w} vs {fedavg}");
+        }
+    }
+
+    #[test]
+    fn naive_coefficients_decay_geometrically() {
+        // Sec. III-A: with uniform α=1/M reused naively, the first
+        // scheduled client's effective weight is α(1-α)^{M-1} — vanishing.
+        let m = 20;
+        let alpha = uniform_alpha(m);
+        let coeff = naive_effective_coefficients(&alpha);
+        let a = 1.0 / m as f64;
+        let expect_first = a * (1.0 - a).powi((m - 1) as i32);
+        assert!((coeff[0] - expect_first).abs() < 1e-12);
+        // Monotone increasing along the schedule, and NOT summing to 1.
+        for w in coeff.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        let total: f64 = coeff.iter().sum();
+        assert!(total < 1.0 - 0.3, "naive sweep keeps stale-global mass: {total}");
+        // coeff[0]/coeff[M-1] = (1-α)^{M-1} ≈ 1/e for uniform α=1/M.
+        assert!(coeff[0] < 0.5 * coeff[m - 1], "early client crushed");
+        // Over k repeated sweeps the first upload's weight decays like
+        // (1-α)^{kM-1} — vanishing geometrically, the paper's point.
+        let k_sweeps = 5;
+        let long: Vec<f64> = (0..k_sweeps).flat_map(|_| alpha.clone()).collect();
+        let coeff_long = naive_effective_coefficients(&long);
+        assert!(
+            coeff_long[0] < 0.01 * coeff_long[k_sweeps * m - 1],
+            "{} vs {}",
+            coeff_long[0],
+            coeff_long[k_sweeps * m - 1]
+        );
+    }
+
+    #[test]
+    fn rejects_bad_alphas() {
+        assert!(solve_betas(&[]).is_err());
+        assert!(solve_betas(&[0.5, 0.6]).is_err()); // sum > 1
+        assert!(solve_betas(&[1.2, -0.2]).is_err()); // out of range
+    }
+
+    #[test]
+    fn single_client_degenerate() {
+        let beta = solve_betas(&[1.0]).unwrap();
+        assert_eq!(beta, vec![0.0]);
+    }
+}

@@ -1,0 +1,53 @@
+//! The paper's coordination layer: client scheduling + model aggregation.
+//!
+//! Four algorithms share one harness (`runner::FlContext`):
+//!
+//! | Algorithm       | Section | Engine                |
+//! |-----------------|---------|-----------------------|
+//! | `Sfl` (FedAvg)  | II-A    | [`sfl::run_sfl`]      |
+//! | `AflNaive`      | III-A   | [`afl::run_afl`]      |
+//! | `AflBaseline`   | III-B   | [`afl_baseline`]      |
+//! | `Csmaafl`       | III-C   | [`afl::run_afl`]      |
+
+pub mod afl;
+pub mod afl_baseline;
+pub mod beta_solver;
+pub mod runner;
+pub mod scheduler;
+pub mod sfl;
+pub mod staleness;
+
+pub use afl::{adaptive_steps, run_afl, BetaPolicy};
+pub use afl_baseline::run_afl_baseline;
+pub use beta_solver::{effective_coefficients, naive_effective_coefficients, solve_betas};
+pub use runner::{FlContext, Recorder};
+pub use scheduler::{SchedulerPolicy, UploadScheduler};
+pub use staleness::{local_weight, StalenessTracker};
+
+use anyhow::Result;
+
+use crate::config::Algorithm;
+use crate::metrics::RunResult;
+
+/// Dispatch one run according to `ctx.cfg.algorithm`.
+pub fn run(ctx: &FlContext<'_>) -> Result<RunResult> {
+    match ctx.cfg.algorithm {
+        Algorithm::Sfl => sfl::run_sfl(ctx),
+        Algorithm::AflNaive => run_afl(
+            ctx,
+            BetaPolicy::NaiveAlpha,
+            ctx.cfg.scheduler,
+            "afl-naive".into(),
+        ),
+        Algorithm::AflBaseline => run_afl_baseline(ctx),
+        Algorithm::Csmaafl => run_afl(
+            ctx,
+            BetaPolicy::Staleness {
+                gamma: ctx.cfg.gamma,
+                rho: ctx.cfg.mu_rho,
+            },
+            ctx.cfg.scheduler,
+            format!("csmaafl g={}", ctx.cfg.gamma),
+        ),
+    }
+}

@@ -1,0 +1,155 @@
+//! Shared run harness: evaluation cadence, aggregation dispatch, context.
+//!
+//! All three engines (SFL, event-driven AFL, baseline-AFL sweeps) share
+//! this plumbing so their results are directly comparable: same data, same
+//! learner, same virtual-time axis, same evaluation cadence.
+
+use anyhow::Result;
+
+use crate::config::{AggregatorKind, RunConfig};
+use crate::data::{ClientShard, Dataset};
+use crate::learner::Learner;
+use crate::metrics::{EvalPoint, RunResult};
+use crate::model::ParamSet;
+use crate::runtime::Engine;
+use crate::sim::Ticks;
+
+/// Everything an engine needs to execute one run.
+pub struct FlContext<'a> {
+    pub cfg: &'a RunConfig,
+    pub learner: &'a dyn Learner,
+    /// Needed only when `cfg.aggregator == Pjrt`.
+    pub engine: Option<&'a Engine>,
+    pub train: &'a Dataset,
+    pub shards: &'a [ClientShard],
+    pub test: &'a Dataset,
+}
+
+impl<'a> FlContext<'a> {
+    /// Server-side eq.(3) aggregation:
+    /// `global ← beta·global + (1-beta)·local`.
+    pub fn aggregate(&self, global: &mut ParamSet, local: &ParamSet, beta: f32) -> Result<()> {
+        match self.cfg.aggregator {
+            AggregatorKind::Native => {
+                global.lerp_inplace(local, beta);
+                Ok(())
+            }
+            AggregatorKind::Pjrt => {
+                let engine = self.engine.ok_or_else(|| {
+                    anyhow::anyhow!("PJRT aggregator requested but no engine provided")
+                })?;
+                *global = engine.aggregate(global, local, beta)?;
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Evaluation-cadence recorder.
+///
+/// The paper's figures plot test accuracy against *relative time slots*
+/// (one slot = one synchronous round under the run's time model). The
+/// recorder owns that axis: engines call [`catch_up`] with the current
+/// global model right *before* every aggregation at time `T`; every
+/// pending cadence point strictly before `T` is evaluated with the model
+/// that was in force at that point.
+pub struct Recorder<'a> {
+    ctx: &'a FlContext<'a>,
+    /// Ticks per relative slot.
+    slot_ticks: f64,
+    /// Cadence interval in ticks.
+    every_ticks: f64,
+    /// Index of the next cadence point.
+    next_idx: u64,
+    pub points: Vec<EvalPoint>,
+    started: std::time::Instant,
+}
+
+impl<'a> Recorder<'a> {
+    pub fn new(ctx: &'a FlContext<'a>, slot_ticks: Ticks) -> Result<Recorder<'a>> {
+        let slot_ticks = slot_ticks.max(1) as f64;
+        Ok(Recorder {
+            ctx,
+            slot_ticks,
+            every_ticks: ctx.cfg.eval_every_slots * slot_ticks,
+            next_idx: 0,
+            points: Vec::new(),
+            started: std::time::Instant::now(),
+        })
+    }
+
+    pub fn slot_ticks(&self) -> f64 {
+        self.slot_ticks
+    }
+
+    /// Virtual end of the run in ticks.
+    pub fn max_ticks(&self) -> Ticks {
+        (self.ctx.cfg.max_slots * self.slot_ticks).ceil() as Ticks
+    }
+
+    fn next_tick(&self) -> f64 {
+        self.next_idx as f64 * self.every_ticks
+    }
+
+    fn eval_point(&mut self, at_tick: f64, w: &ParamSet, iteration: u64) -> Result<()> {
+        let (acc, loss) = self.ctx.learner.evaluate(w, self.ctx.test)?;
+        self.points.push(EvalPoint {
+            slot: at_tick / self.slot_ticks,
+            ticks: at_tick.round() as Ticks,
+            iteration,
+            accuracy: acc,
+            loss,
+        });
+        Ok(())
+    }
+
+    /// Evaluate all cadence points strictly before `t` using `w` (the
+    /// model in force on [last-aggregation, t)).
+    pub fn catch_up(&mut self, t: Ticks, w: &ParamSet, iteration: u64) -> Result<()> {
+        while self.next_tick() < t as f64 && self.next_tick() <= self.ctx.cfg.max_slots * self.slot_ticks {
+            let at = self.next_tick();
+            self.eval_point(at, w, iteration)?;
+            self.next_idx += 1;
+        }
+        Ok(())
+    }
+
+    /// Flush every remaining cadence point up to and including the run end
+    /// with the final model.
+    pub fn finish(&mut self, w: &ParamSet, iteration: u64) -> Result<()> {
+        let end = self.ctx.cfg.max_slots * self.slot_ticks;
+        while self.next_tick() <= end {
+            let at = self.next_tick();
+            self.eval_point(at, w, iteration)?;
+            self.next_idx += 1;
+        }
+        Ok(())
+    }
+
+    pub fn wallclock_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Assemble the RunResult.
+    pub fn into_result(
+        self,
+        label: String,
+        uploads: Vec<u64>,
+        aggregations: u64,
+        mean_staleness: f64,
+        fairness: f64,
+        total_ticks: Ticks,
+    ) -> RunResult {
+        let wallclock = self.wallclock_secs();
+        RunResult {
+            label,
+            points: self.points,
+            uploads_per_client: uploads,
+            aggregations,
+            mean_staleness,
+            fairness,
+            total_ticks,
+            wallclock_secs: wallclock,
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Synchronous FedAvg (Sec. II-A) — the paper's comparator.
+//!
+//! Round structure (eq. 1–2, Fig. 2 top): broadcast `τ^d`, all clients
+//! compute in parallel (round waits for the slowest), TDMA uploads
+//! `M·τ^u`, server aggregates `w ← Σ α_m w^m` with α_m = |D_m|/Σ|D_c|
+//! (uniform here: equal shards), repeat.
+
+use anyhow::Result;
+
+use super::runner::{FlContext, Recorder};
+use crate::learner::BatchCursor;
+use crate::model::ParamSet;
+use crate::sim::ComputeModel;
+use crate::util::rng::Rng;
+
+pub fn run_sfl(ctx: &FlContext<'_>) -> Result<crate::metrics::RunResult> {
+    let cfg = ctx.cfg;
+    let m = cfg.clients;
+    let root = Rng::new(cfg.seed);
+    let cm = ComputeModel::new(cfg.heterogeneity, m, cfg.jitter, &root);
+    let mut jrng = root.fork(0xd1ce);
+
+    let slot_ticks =
+        cfg.time
+            .sfl_round_heterogeneous(m, cfg.local_steps, cm.slowest_factor());
+    let mut rec = Recorder::new(ctx, slot_ticks)?;
+    let max_ticks = rec.max_ticks();
+
+    let img = ctx.train.x.len() / ctx.train.len();
+    let batch = ctx.learner.batch();
+    let mut cursors: Vec<BatchCursor> = ctx
+        .shards
+        .iter()
+        .map(|s| BatchCursor::new(s.indices.clone()))
+        .collect();
+
+    let mut w = ctx.learner.init(cfg.seed as u32)?;
+    let mut now: u64 = 0;
+    let mut rounds: u64 = 0;
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+
+    // Client sampling ([2]): the server waits for only K = ⌈fM⌉ randomly
+    // chosen clients per round. f = 1 is the paper's full-participation
+    // setting (and the CSMAAFL comparison baseline).
+    let k = ((cfg.sfl_sample_fraction * m as f64).ceil() as usize).clamp(1, m);
+    let mut srng = root.fork(0x5a3b);
+
+    while now < max_ticks {
+        let participants: Vec<usize> = if k == m {
+            (0..m).collect()
+        } else {
+            srng.sample_indices(m, k)
+        };
+        // Virtual round duration: τ^d + slowest *participant* compute
+        // draw + K·τ^u. (Sampling shortens the straggler tail only when
+        // the slow clients happen to be excluded — the [2] critique.)
+        let compute: u64 = participants
+            .iter()
+            .map(|&c| cm.duration(&cfg.time, c, cfg.local_steps, &mut jrng))
+            .max()
+            .unwrap_or(1);
+        let round_end = now + cfg.time.tau_down + compute + k as u64 * cfg.time.tau_up;
+
+        // Participants train from the broadcast global (eq. 1).
+        let alpha = 1.0 / k as f32;
+        let mut agg = ParamSet::zeros(&w.specs());
+        for &c in &participants {
+            cursors[c].fill(ctx.train, cfg.local_steps * batch, img, &mut xs, &mut ys);
+            let (local, _loss) = ctx.learner.train(&w, &xs, &ys, cfg.local_steps)?;
+            agg.axpy_inplace(&local, alpha);
+        }
+
+        // Cadence points inside this round see the pre-round model.
+        rec.catch_up(round_end.min(max_ticks), &w, rounds)?;
+        w = agg; // eq. (2)
+        rounds += 1;
+        now = round_end;
+    }
+    rec.finish(&w, rounds)?;
+
+    let uploads = vec![rounds; m];
+    Ok(rec.into_result(
+        "fedavg".into(),
+        uploads,
+        rounds,
+        0.0,
+        1.0,
+        now,
+    ))
+}

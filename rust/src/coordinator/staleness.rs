@@ -1,0 +1,165 @@
+//! Sec. III-C model aggregation: the staleness-aware coefficient (eq. 11)
+//! and the μ_ji moving-average tracker.
+//!
+//! ```text
+//! 1 - β_j = min(1, μ_ji / (γ · j · (j - i)))
+//! ```
+//!
+//! where j is the current global iteration, i the iteration whose global
+//! model the uploading client started from, μ_ji the running average of
+//! observed staleness (j - i), and γ > 0 a hyper-parameter. The 1/j term
+//! makes individual contributions shrink as training progresses; the
+//! μ/(j-i) term discounts stale updates relative to typical staleness.
+
+/// Exponential moving average of observed staleness values.
+#[derive(Debug, Clone)]
+pub struct StalenessTracker {
+    mu: f64,
+    rho: f64,
+    observations: u64,
+}
+
+impl StalenessTracker {
+    /// `rho` is the EMA rate (weight of the newest observation).
+    pub fn new(rho: f64) -> Self {
+        assert!((0.0..=1.0).contains(&rho), "rho in [0,1]");
+        StalenessTracker {
+            mu: 1.0,
+            rho,
+            observations: 0,
+        }
+    }
+
+    /// Current μ estimate.
+    pub fn mu(&self) -> f64 {
+        self.mu
+    }
+
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    /// Record an observed staleness (j - i).
+    pub fn observe(&mut self, staleness: u64) {
+        let s = staleness as f64;
+        if self.observations == 0 {
+            // Seed the average with the first real observation instead of
+            // biasing toward the arbitrary initial value.
+            self.mu = s.max(1.0);
+        } else {
+            self.mu = (1.0 - self.rho) * self.mu + self.rho * s.max(1.0);
+        }
+        self.observations += 1;
+    }
+}
+
+/// Eq. (11): the weight `1-β_j` given to the uploaded local model.
+///
+/// `iteration` is the 1-based global iteration j of this aggregation;
+/// `staleness` is j - i (0 when no other aggregation intervened — treated
+/// as 1, the freshest possible, to keep the expression finite).
+pub fn local_weight(mu: f64, gamma: f64, iteration: u64, staleness: u64) -> f64 {
+    assert!(gamma > 0.0, "gamma must be positive");
+    let j = iteration.max(1) as f64;
+    let s = staleness.max(1) as f64;
+    (mu / (gamma * j * s)).min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn early_iterations_take_full_update() {
+        // Small j ⇒ min(1, ·) saturates at 1: fast early learning.
+        assert_eq!(local_weight(1.0, 0.2, 1, 1), 1.0);
+        // μ=20, γ=0.2, j=4, s=20 ⇒ 20/16 > 1 ⇒ saturates.
+        assert_eq!(local_weight(20.0, 0.2, 4, 20), 1.0);
+    }
+
+    #[test]
+    fn weight_decays_with_iteration() {
+        let w10 = local_weight(5.0, 0.4, 10, 5);
+        let w100 = local_weight(5.0, 0.4, 100, 5);
+        let w1000 = local_weight(5.0, 0.4, 1000, 5);
+        assert!(w10 > w100 && w100 > w1000);
+        assert!((w100 / w1000 - 10.0).abs() < 1e-9, "1/j scaling");
+    }
+
+    #[test]
+    fn staler_updates_weigh_less() {
+        let fresh = local_weight(5.0, 0.4, 100, 1);
+        let typical = local_weight(5.0, 0.4, 100, 5);
+        let stale = local_weight(5.0, 0.4, 100, 50);
+        assert!(fresh > typical && typical > stale);
+    }
+
+    #[test]
+    fn typical_staleness_cancels_mu() {
+        // When s == μ, weight = 1/(γ j): the pure 1/j decay of the paper.
+        let w = local_weight(8.0, 0.5, 40, 8);
+        assert!((w - 1.0 / (0.5 * 40.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn larger_gamma_shrinks_contributions() {
+        let small = local_weight(5.0, 0.1, 50, 5);
+        let large = local_weight(5.0, 0.6, 50, 5);
+        assert!(small > large);
+        assert!((small / large - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_staleness_treated_as_fresh() {
+        let w = local_weight(5.0, 0.4, 100, 0);
+        assert_eq!(w, local_weight(5.0, 0.4, 100, 1));
+        assert!(w <= 1.0);
+    }
+
+    #[test]
+    fn weight_always_in_unit_interval() {
+        for j in [1u64, 2, 10, 1000] {
+            for s in [0u64, 1, 7, 500] {
+                for mu in [0.5, 1.0, 30.0] {
+                    for gamma in [0.1, 0.2, 0.4, 0.6] {
+                        let w = local_weight(mu, gamma, j, s);
+                        assert!((0.0..=1.0).contains(&w), "{w}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tracker_seeds_then_smooths() {
+        let mut t = StalenessTracker::new(0.1);
+        assert_eq!(t.mu(), 1.0);
+        t.observe(9);
+        assert_eq!(t.mu(), 9.0, "first observation seeds μ");
+        t.observe(19);
+        assert!((t.mu() - (0.9 * 9.0 + 0.1 * 19.0)).abs() < 1e-12);
+        assert_eq!(t.observations(), 2);
+    }
+
+    #[test]
+    fn tracker_converges_to_constant_stream() {
+        let mut t = StalenessTracker::new(0.2);
+        for _ in 0..200 {
+            t.observe(7);
+        }
+        assert!((t.mu() - 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tracker_floors_zero_staleness() {
+        let mut t = StalenessTracker::new(0.5);
+        t.observe(0);
+        assert_eq!(t.mu(), 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn gamma_must_be_positive() {
+        local_weight(1.0, 0.0, 1, 1);
+    }
+}

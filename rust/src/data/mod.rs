@@ -1,0 +1,15 @@
+//! Data substrate: synthetic MNIST/Fashion-MNIST-like generators and the
+//! IID / non-IID client partitioners of Sec. IV.
+//!
+//! The evaluation image datasets cannot be downloaded in this offline
+//! environment, so we synthesize class-structured 28x28 imagery with the
+//! properties the paper's phenomena actually depend on (see DESIGN.md §5):
+//! 10 visually distinct classes, intra-class variation, a harder "fashion"
+//! variant, and exact client partitioning (IID shuffle vs 2-classes-per-
+//! client shards).
+
+mod partition;
+mod synth;
+
+pub use partition::{partition, ClientShard, Partition};
+pub use synth::{generate, Dataset, SynthKind};

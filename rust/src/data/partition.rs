@@ -1,0 +1,180 @@
+//! Client data partitioners (Sec. IV simulation setup).
+//!
+//! * `Iid` — images randomly allocated equally among clients.
+//! * `TwoClass` — each client holds samples of exactly two classes (the
+//!   classical FedAvg shard construction the paper uses for non-IID).
+
+use crate::data::synth::{Dataset, NUM_CLASSES};
+use crate::util::rng::Rng;
+
+/// Data distribution across clients.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partition {
+    Iid,
+    TwoClass,
+}
+
+impl Partition {
+    pub fn parse(s: &str) -> Option<Partition> {
+        match s.to_ascii_lowercase().as_str() {
+            "iid" => Some(Partition::Iid),
+            "noniid" | "non-iid" | "twoclass" | "2class" => Some(Partition::TwoClass),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Partition::Iid => "iid",
+            Partition::TwoClass => "noniid",
+        }
+    }
+}
+
+/// The sample indices owned by one client.
+#[derive(Debug, Clone)]
+pub struct ClientShard {
+    pub indices: Vec<usize>,
+}
+
+impl ClientShard {
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Distinct classes present on this shard.
+    pub fn classes(&self, ds: &Dataset) -> Vec<i32> {
+        let mut cs: Vec<i32> = self.indices.iter().map(|&i| ds.y[i]).collect();
+        cs.sort_unstable();
+        cs.dedup();
+        cs
+    }
+}
+
+/// Split `ds` across `m` clients. Every client receives the same number of
+/// samples (`ds.len() / m`, remainder dropped) so the FedAvg aggregation
+/// coefficients are uniform, matching the paper's equal-allocation setup.
+pub fn partition(ds: &Dataset, m: usize, p: Partition, seed: u64) -> Vec<ClientShard> {
+    assert!(m > 0, "need at least one client");
+    let per = ds.len() / m;
+    assert!(per > 0, "dataset smaller than client count");
+    let mut rng = Rng::new(seed ^ 0x9a_27_44_71);
+    match p {
+        Partition::Iid => {
+            let mut idx: Vec<usize> = (0..ds.len()).collect();
+            rng.shuffle(&mut idx);
+            (0..m)
+                .map(|c| ClientShard {
+                    indices: idx[c * per..(c + 1) * per].to_vec(),
+                })
+                .collect()
+        }
+        Partition::TwoClass => {
+            // Sort indices by class, cut into 2m shards, deal 2 per client.
+            let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); NUM_CLASSES];
+            for (i, &c) in ds.y.iter().enumerate() {
+                by_class[c as usize].push(i);
+            }
+            // Shuffle within class for sample diversity across runs.
+            for v in &mut by_class {
+                rng.shuffle(v);
+            }
+            let sorted: Vec<usize> = by_class.into_iter().flatten().collect();
+            let shard_len = per / 2;
+            assert!(shard_len > 0, "need >= 2 samples per client");
+            let n_shards = 2 * m;
+            let mut shard_ids: Vec<usize> = (0..n_shards).collect();
+            rng.shuffle(&mut shard_ids);
+            (0..m)
+                .map(|c| {
+                    let mut indices = Vec::with_capacity(2 * shard_len);
+                    for s in 0..2 {
+                        let sid = shard_ids[2 * c + s];
+                        let start = sid * shard_len;
+                        indices.extend_from_slice(&sorted[start..start + shard_len]);
+                    }
+                    ClientShard { indices }
+                })
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthKind};
+
+    fn ds() -> Dataset {
+        generate(SynthKind::Mnist, 400, 10, 3).0
+    }
+
+    #[test]
+    fn iid_equal_disjoint_cover() {
+        let d = ds();
+        let shards = partition(&d, 20, Partition::Iid, 1);
+        assert_eq!(shards.len(), 20);
+        let mut all: Vec<usize> = shards.iter().flat_map(|s| s.indices.clone()).collect();
+        assert_eq!(all.len(), 400);
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 400, "shards must be disjoint");
+        assert!(shards.iter().all(|s| s.len() == 20));
+    }
+
+    #[test]
+    fn iid_shards_are_class_diverse() {
+        let d = ds();
+        let shards = partition(&d, 10, Partition::Iid, 2);
+        for s in &shards {
+            assert!(s.classes(&d).len() >= 5, "IID shard with too few classes");
+        }
+    }
+
+    #[test]
+    fn twoclass_shards_have_at_most_two_classes() {
+        let d = ds();
+        let shards = partition(&d, 20, Partition::TwoClass, 3);
+        for s in &shards {
+            let cs = s.classes(&d);
+            assert!(!cs.is_empty() && cs.len() <= 2, "{cs:?}");
+        }
+        // Equal sizes and disjoint.
+        let mut all: Vec<usize> = shards.iter().flat_map(|s| s.indices.clone()).collect();
+        let total = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), total);
+        assert!(shards.iter().all(|s| s.len() == shards[0].len()));
+    }
+
+    #[test]
+    fn noniid_differs_from_iid() {
+        let d = ds();
+        let iid = partition(&d, 10, Partition::Iid, 4);
+        let non = partition(&d, 10, Partition::TwoClass, 4);
+        let iid_c: usize = iid.iter().map(|s| s.classes(&d).len()).sum();
+        let non_c: usize = non.iter().map(|s| s.classes(&d).len()).sum();
+        assert!(non_c < iid_c);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let d = ds();
+        let a = partition(&d, 8, Partition::TwoClass, 9);
+        let b = partition(&d, 8, Partition::TwoClass, 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.indices, y.indices);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_clients() {
+        partition(&ds(), 0, Partition::Iid, 0);
+    }
+}

@@ -1,0 +1,308 @@
+//! Deterministic synthetic 28x28 image generators.
+//!
+//! Each class has a smooth prototype field built from Gaussian bumps at
+//! class-specific (seeded) positions; a sample is a randomly shifted,
+//! brightness-jittered, noise-corrupted copy of its class prototype.
+//!
+//! * `Mnist` — 3 compact bumps per class (stroke-like), light noise:
+//!   an easy task, like MNIST.
+//! * `Fashion` — broader bumps plus horizontal texture, heavier noise,
+//!   and consecutive class pairs sharing bumps (shirt/pullover-style
+//!   confusability): deliberately harder, like Fashion-MNIST.
+
+use crate::util::rng::Rng;
+
+pub const HW: usize = 28;
+pub const IMG: usize = HW * HW;
+pub const NUM_CLASSES: usize = 10;
+
+/// Which synthetic distribution to generate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SynthKind {
+    Mnist,
+    Fashion,
+}
+
+impl SynthKind {
+    pub fn parse(s: &str) -> Option<SynthKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "mnist" => Some(SynthKind::Mnist),
+            "fashion" | "fashion-mnist" | "fmnist" => Some(SynthKind::Fashion),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SynthKind::Mnist => "mnist",
+            SynthKind::Fashion => "fashion",
+        }
+    }
+}
+
+/// A labelled image set, images flattened row-major (n * 784 f32 in [0,1]).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.x[i * IMG..(i + 1) * IMG]
+    }
+}
+
+struct Bump {
+    cx: f64,
+    cy: f64,
+    sigma: f64,
+    amp: f64,
+}
+
+fn class_prototype(kind: SynthKind, class: usize, rng: &Rng) -> Vec<f32> {
+    let mut r = rng.fork(1000 + class as u64);
+    let mut bumps: Vec<Bump> = Vec::new();
+    match kind {
+        SynthKind::Mnist => {
+            for _ in 0..3 {
+                bumps.push(Bump {
+                    cx: r.range_f64(6.0, 22.0),
+                    cy: r.range_f64(6.0, 22.0),
+                    sigma: r.range_f64(2.2, 3.4),
+                    amp: r.range_f64(0.75, 1.0),
+                });
+            }
+        }
+        SynthKind::Fashion => {
+            // Shared bumps between class pairs (2k, 2k+1): confusable pairs.
+            let mut pair = rng.fork(2000 + (class / 2) as u64);
+            for _ in 0..2 {
+                bumps.push(Bump {
+                    cx: pair.range_f64(7.0, 21.0),
+                    cy: pair.range_f64(7.0, 21.0),
+                    sigma: pair.range_f64(4.0, 6.0),
+                    amp: pair.range_f64(0.5, 0.8),
+                });
+            }
+            for _ in 0..3 {
+                bumps.push(Bump {
+                    cx: r.range_f64(5.0, 23.0),
+                    cy: r.range_f64(5.0, 23.0),
+                    sigma: r.range_f64(3.0, 5.0),
+                    amp: r.range_f64(0.4, 0.7),
+                });
+            }
+        }
+    }
+    let mut proto = vec![0.0f32; IMG];
+    for (idx, p) in proto.iter_mut().enumerate() {
+        let yy = (idx / HW) as f64;
+        let xx = (idx % HW) as f64;
+        let mut v = 0.0f64;
+        for b in &bumps {
+            let d2 = (xx - b.cx).powi(2) + (yy - b.cy).powi(2);
+            v += b.amp * (-d2 / (2.0 * b.sigma * b.sigma)).exp();
+        }
+        if kind == SynthKind::Fashion {
+            // Class-dependent horizontal texture (garment weave).
+            let freq = 0.5 + 0.15 * class as f64;
+            v += 0.12 * ((yy * freq).sin() * 0.5 + 0.5);
+        }
+        *p = v.min(1.0) as f32;
+    }
+    proto
+}
+
+fn noise_level(kind: SynthKind) -> f32 {
+    match kind {
+        SynthKind::Mnist => 0.08,
+        SynthKind::Fashion => 0.16,
+    }
+}
+
+fn max_shift(kind: SynthKind) -> i64 {
+    match kind {
+        SynthKind::Mnist => 2,
+        SynthKind::Fashion => 3,
+    }
+}
+
+/// Generate one sample of `class` into `out` (784 f32).
+fn sample_into(
+    out: &mut [f32],
+    proto: &[f32],
+    kind: SynthKind,
+    r: &mut Rng,
+) {
+    let ms = max_shift(kind);
+    let dx = r.below((2 * ms + 1) as u64) as i64 - ms;
+    let dy = r.below((2 * ms + 1) as u64) as i64 - ms;
+    let bright = 0.75 + 0.25 * r.f32();
+    let noise = noise_level(kind);
+    for yy in 0..HW as i64 {
+        for xx in 0..HW as i64 {
+            let sx = xx - dx;
+            let sy = yy - dy;
+            let base = if (0..HW as i64).contains(&sx) && (0..HW as i64).contains(&sy) {
+                proto[(sy * HW as i64 + sx) as usize]
+            } else {
+                0.0
+            };
+            let v = base * bright + noise * r.normal();
+            out[(yy * HW as i64 + xx) as usize] = v.clamp(0.0, 1.0);
+        }
+    }
+}
+
+/// Generate a (train, test) pair. Labels are balanced (n rounded up to a
+/// multiple of 10 then truncated back) and shuffled.
+pub fn generate(
+    kind: SynthKind,
+    n_train: usize,
+    n_test: usize,
+    seed: u64,
+) -> (Dataset, Dataset) {
+    let root = Rng::new(seed ^ 0xC5_3A_AF_1u64);
+    let protos: Vec<Vec<f32>> = (0..NUM_CLASSES)
+        .map(|c| class_prototype(kind, c, &root))
+        .collect();
+    let make = |n: usize, label: u64| -> Dataset {
+        let mut r = root.fork(label);
+        let mut y: Vec<i32> = (0..n).map(|i| (i % NUM_CLASSES) as i32).collect();
+        r.shuffle(&mut y);
+        let mut x = vec![0.0f32; n * IMG];
+        for (i, &cls) in y.iter().enumerate() {
+            sample_into(
+                &mut x[i * IMG..(i + 1) * IMG],
+                &protos[cls as usize],
+                kind,
+                &mut r,
+            );
+        }
+        Dataset { x, y }
+    };
+    (make(n_train, 1), make(n_test, 2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let (a, _) = generate(SynthKind::Mnist, 50, 10, 7);
+        let (b, _) = generate(SynthKind::Mnist, 50, 10, 7);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let (c, _) = generate(SynthKind::Mnist, 50, 10, 8);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn pixels_in_unit_range() {
+        for kind in [SynthKind::Mnist, SynthKind::Fashion] {
+            let (tr, te) = generate(kind, 100, 40, 3);
+            for v in tr.x.iter().chain(te.x.iter()) {
+                assert!((0.0..=1.0).contains(v));
+            }
+        }
+    }
+
+    #[test]
+    fn labels_balanced() {
+        let (tr, _) = generate(SynthKind::Mnist, 200, 10, 1);
+        let mut counts = [0usize; NUM_CLASSES];
+        for &c in &tr.y {
+            counts[c as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 20), "{counts:?}");
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Nearest-prototype classification on clean samples should beat
+        // random guessing by a wide margin: the task must be learnable.
+        for kind in [SynthKind::Mnist, SynthKind::Fashion] {
+            let root = Rng::new(7 ^ 0xC5_3A_AF_1u64);
+            let protos: Vec<Vec<f32>> = (0..NUM_CLASSES)
+                .map(|c| class_prototype(kind, c, &root))
+                .collect();
+            let (tr, _) = generate(kind, 400, 10, 7);
+            let mut correct = 0usize;
+            for i in 0..tr.len() {
+                let img = tr.image(i);
+                let mut best = (f32::MAX, 0usize);
+                for (c, p) in protos.iter().enumerate() {
+                    let d: f32 = img
+                        .iter()
+                        .zip(p.iter())
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum();
+                    if d < best.0 {
+                        best = (d, c);
+                    }
+                }
+                if best.1 == tr.y[i] as usize {
+                    correct += 1;
+                }
+            }
+            let acc = correct as f64 / tr.len() as f64;
+            assert!(acc > 0.5, "{kind:?} nearest-proto acc {acc}");
+        }
+    }
+
+    #[test]
+    fn fashion_is_harder_than_mnist() {
+        // Same nearest-prototype probe: fashion accuracy should be lower.
+        let probe = |kind: SynthKind| -> f64 {
+            let root = Rng::new(11 ^ 0xC5_3A_AF_1u64);
+            let protos: Vec<Vec<f32>> = (0..NUM_CLASSES)
+                .map(|c| class_prototype(kind, c, &root))
+                .collect();
+            let (tr, _) = generate(kind, 400, 10, 11);
+            let mut correct = 0usize;
+            for i in 0..tr.len() {
+                let img = tr.image(i);
+                let mut best = (f32::MAX, 0usize);
+                for (c, p) in protos.iter().enumerate() {
+                    let d: f32 = img
+                        .iter()
+                        .zip(p.iter())
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum();
+                    if d < best.0 {
+                        best = (d, c);
+                    }
+                }
+                if best.1 == tr.y[i] as usize {
+                    correct += 1;
+                }
+            }
+            correct as f64 / tr.len() as f64
+        };
+        assert!(probe(SynthKind::Mnist) > probe(SynthKind::Fashion));
+    }
+
+    #[test]
+    fn train_test_disjoint_noise() {
+        let (tr, te) = generate(SynthKind::Mnist, 30, 30, 5);
+        // Same prototypes but different sample streams.
+        assert_ne!(tr.x[..IMG], te.x[..IMG]);
+    }
+
+    #[test]
+    fn parse_kind() {
+        assert_eq!(SynthKind::parse("MNIST"), Some(SynthKind::Mnist));
+        assert_eq!(SynthKind::parse("fmnist"), Some(SynthKind::Fashion));
+        assert_eq!(SynthKind::parse("cifar"), None);
+    }
+}

@@ -1,0 +1,241 @@
+//! Pure-Rust multinomial logistic regression learner.
+//!
+//! Same `Learner` contract as the PJRT CNN, no artifacts needed. Used by
+//! the coordinator's unit/property tests and the scheduler benches, and as
+//! a sanity baseline: on the synthetic datasets a linear model is weaker
+//! than the CNN but still learns, so FL dynamics (convergence, staleness
+//! effects) are visible at a fraction of the cost.
+
+use anyhow::{ensure, Result};
+
+use super::Learner;
+use crate::data::Dataset;
+use crate::model::{ParamSet, Tensor, TensorSpec};
+use crate::util::rng::Rng;
+
+const IMG: usize = 28 * 28;
+const K: usize = 10;
+
+/// Softmax regression: W (784x10) + b (10), SGD on NLL.
+#[derive(Debug, Clone)]
+pub struct LinearLearner {
+    pub lr: f32,
+    pub batch: usize,
+}
+
+impl Default for LinearLearner {
+    fn default() -> Self {
+        LinearLearner { lr: 0.05, batch: 5 }
+    }
+}
+
+impl LinearLearner {
+    pub fn new(lr: f32, batch: usize) -> Self {
+        assert!(batch > 0);
+        LinearLearner { lr, batch }
+    }
+
+    fn logits(p: &ParamSet, img: &[f32], out: &mut [f32]) {
+        let w = &p.tensors[0].data; // row-major (784, 10)
+        let b = &p.tensors[1].data;
+        out.copy_from_slice(b);
+        for (i, &xv) in img.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let row = &w[i * K..(i + 1) * K];
+            for k in 0..K {
+                out[k] += xv * row[k];
+            }
+        }
+    }
+
+    /// Softmax in place; returns log-sum-exp for loss computation.
+    fn softmax(logits: &mut [f32]) -> f32 {
+        let max = logits.iter().cloned().fold(f32::MIN, f32::max);
+        let mut sum = 0.0f32;
+        for v in logits.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in logits.iter_mut() {
+            *v /= sum;
+        }
+        sum.ln() + max
+    }
+}
+
+impl Learner for LinearLearner {
+    fn specs(&self) -> Vec<TensorSpec> {
+        vec![
+            TensorSpec {
+                name: "w".into(),
+                shape: vec![IMG, K],
+            },
+            TensorSpec {
+                name: "b".into(),
+                shape: vec![K],
+            },
+        ]
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn init(&self, seed: u32) -> Result<ParamSet> {
+        let mut r = Rng::new(seed as u64 ^ 0x11ea12);
+        let mut w = vec![0.0f32; IMG * K];
+        for v in &mut w {
+            *v = 0.01 * r.normal();
+        }
+        Ok(ParamSet {
+            tensors: vec![
+                Tensor::from_data(self.specs()[0].clone(), w),
+                Tensor::from_data(self.specs()[1].clone(), vec![0.0; K]),
+            ],
+        })
+    }
+
+    fn train(&self, p: &ParamSet, xs: &[f32], ys: &[i32], steps: usize) -> Result<(ParamSet, f32)> {
+        ensure!(xs.len() == steps * self.batch * IMG, "xs size mismatch");
+        ensure!(ys.len() == steps * self.batch, "ys size mismatch");
+        let mut p = p.clone();
+        let mut probs = [0.0f32; K];
+        let mut loss_acc = 0.0f64;
+        let inv_b = 1.0 / self.batch as f32;
+        for s in 0..steps {
+            // Accumulate gradient over the mini-batch, then apply.
+            let mut gw = vec![0.0f32; IMG * K];
+            let mut gb = [0.0f32; K];
+            for b in 0..self.batch {
+                let n = s * self.batch + b;
+                let img = &xs[n * IMG..(n + 1) * IMG];
+                let y = ys[n] as usize;
+                Self::logits(&p, img, &mut probs);
+                Self::softmax(&mut probs);
+                // NLL = -ln p_y (probs hold the softmax now).
+                loss_acc -= probs[y].max(1e-12).ln() as f64;
+                // d(logit_k) = p_k - 1[k==y]
+                let mut delta = probs;
+                delta[y] -= 1.0;
+                for (i, &xv) in img.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let row = &mut gw[i * K..(i + 1) * K];
+                    for k in 0..K {
+                        row[k] += xv * delta[k];
+                    }
+                }
+                for k in 0..K {
+                    gb[k] += delta[k];
+                }
+            }
+            let w = &mut p.tensors[0].data;
+            let lr = self.lr * inv_b;
+            for (wv, gv) in w.iter_mut().zip(&gw) {
+                *wv -= lr * gv;
+            }
+            let bt = &mut p.tensors[1].data;
+            for k in 0..K {
+                bt[k] -= lr * gb[k];
+            }
+        }
+        let mean_loss = (loss_acc / (steps * self.batch) as f64) as f32;
+        Ok((p, mean_loss))
+    }
+
+    fn evaluate(&self, p: &ParamSet, test: &Dataset) -> Result<(f64, f64)> {
+        let mut probs = [0.0f32; K];
+        let mut correct = 0usize;
+        let mut loss = 0.0f64;
+        for i in 0..test.len() {
+            let img = test.image(i);
+            Self::logits(p, img, &mut probs);
+            Self::softmax(&mut probs);
+            let y = test.y[i] as usize;
+            let pred = probs
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == y {
+                correct += 1;
+            }
+            loss -= probs[y].max(1e-12).ln() as f64;
+        }
+        let n = test.len() as f64;
+        Ok((correct as f64 / n, loss / n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, SynthKind};
+
+    #[test]
+    fn init_deterministic() {
+        let l = LinearLearner::default();
+        assert_eq!(l.init(3).unwrap(), l.init(3).unwrap());
+        assert_ne!(l.init(3).unwrap(), l.init(4).unwrap());
+    }
+
+    #[test]
+    fn learns_synthetic_mnist() {
+        let l = LinearLearner::default();
+        let (tr, te) = generate(SynthKind::Mnist, 300, 100, 5);
+        let mut p = l.init(0).unwrap();
+        let (acc0, _) = l.evaluate(&p, &te).unwrap();
+        // 30 epochs of 60 steps over the whole training set.
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        let mut cur = super::super::BatchCursor::new((0..tr.len()).collect());
+        for _ in 0..10 {
+            cur.fill(&tr, 60 * l.batch(), IMG, &mut xs, &mut ys);
+            let (p2, loss) = l.train(&p, &xs, &ys, 60).unwrap();
+            assert!(loss.is_finite());
+            p = p2;
+        }
+        let (acc, _) = l.evaluate(&p, &te).unwrap();
+        assert!(acc > acc0 + 0.3, "acc {acc0} -> {acc}");
+        assert!(acc > 0.6, "final acc {acc}");
+    }
+
+    #[test]
+    fn train_is_deterministic() {
+        let l = LinearLearner::default();
+        let (tr, _) = generate(SynthKind::Mnist, 50, 10, 6);
+        let p = l.init(1).unwrap();
+        let xs = tr.x[..10 * IMG].to_vec();
+        let ys = tr.y[..10].to_vec();
+        let (a, la) = l.train(&p, &xs, &ys, 2).unwrap();
+        let (b, lb) = l.train(&p, &xs, &ys, 2).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn train_validates_sizes() {
+        let l = LinearLearner::default();
+        let p = l.init(0).unwrap();
+        assert!(l.train(&p, &[0.0; 10], &[0; 5], 1).is_err());
+    }
+
+    #[test]
+    fn loss_decreases_on_fixed_batch() {
+        let l = LinearLearner::new(0.1, 5);
+        let (tr, _) = generate(SynthKind::Mnist, 5, 5, 9);
+        let xs = tr.x.clone();
+        let ys = tr.y.clone();
+        let mut p = l.init(2).unwrap();
+        let (_, first) = l.train(&p, &xs, &ys, 1).unwrap();
+        for _ in 0..50 {
+            p = l.train(&p, &xs, &ys, 1).unwrap().0;
+        }
+        let (_, last) = l.train(&p, &xs, &ys, 1).unwrap();
+        assert!(last < first * 0.5, "{first} -> {last}");
+    }
+}

@@ -1,0 +1,93 @@
+//! The local-learning abstraction the coordinator drives.
+//!
+//! `Learner` hides *what* model is trained: the production implementation
+//! (`PjrtLearner`) executes the AOT CNN artifacts through PJRT; the
+//! pure-Rust `LinearLearner` (multinomial logistic regression) exercises
+//! identical coordinator logic orders of magnitude faster, for unit /
+//! property tests and scheduler benches. Both are deterministic.
+
+mod linear;
+mod pjrt;
+
+pub use linear::LinearLearner;
+pub use pjrt::PjrtLearner;
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::model::{ParamSet, TensorSpec};
+
+/// A batch-oriented local trainer + evaluator.
+pub trait Learner {
+    /// Ordered parameter tensor specs (the manifest contract).
+    fn specs(&self) -> Vec<TensorSpec>;
+
+    /// Mini-batch size of one SGD step.
+    fn batch(&self) -> usize;
+
+    /// Deterministic parameter initialization.
+    fn init(&self, seed: u32) -> Result<ParamSet>;
+
+    /// Run `steps` SGD steps. `xs` holds `steps*batch` flattened images,
+    /// `ys` the matching labels. Returns updated params + mean loss.
+    fn train(&self, p: &ParamSet, xs: &[f32], ys: &[i32], steps: usize) -> Result<(ParamSet, f32)>;
+
+    /// Full test-set evaluation: (accuracy, mean loss).
+    fn evaluate(&self, p: &ParamSet, test: &Dataset) -> Result<(f64, f64)>;
+}
+
+/// Cyclic batch assembler: builds the (steps*batch) training slab for a
+/// client shard, advancing a persistent cursor so successive local rounds
+/// walk the shard like an epoch iterator.
+#[derive(Debug, Clone)]
+pub struct BatchCursor {
+    pub indices: Vec<usize>,
+    pos: usize,
+}
+
+impl BatchCursor {
+    pub fn new(indices: Vec<usize>) -> Self {
+        assert!(!indices.is_empty(), "empty shard");
+        BatchCursor { indices, pos: 0 }
+    }
+
+    /// Fill `xs`/`ys` with the next `count` samples (wrapping).
+    pub fn fill(&mut self, ds: &Dataset, count: usize, img: usize, xs: &mut Vec<f32>, ys: &mut Vec<i32>) {
+        xs.clear();
+        ys.clear();
+        xs.reserve(count * img);
+        ys.reserve(count);
+        for _ in 0..count {
+            let idx = self.indices[self.pos];
+            xs.extend_from_slice(&ds.x[idx * img..(idx + 1) * img]);
+            ys.push(ds.y[idx]);
+            self.pos = (self.pos + 1) % self.indices.len();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, SynthKind};
+
+    #[test]
+    fn cursor_wraps_and_is_exhaustive() {
+        let (ds, _) = generate(SynthKind::Mnist, 10, 10, 1);
+        let mut cur = BatchCursor::new((0..10).collect());
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        cur.fill(&ds, 25, 784, &mut xs, &mut ys);
+        assert_eq!(ys.len(), 25);
+        assert_eq!(xs.len(), 25 * 784);
+        // First 10 labels = the shard in order; then it wraps.
+        assert_eq!(&ys[..10], &ds.y[..10]);
+        assert_eq!(&ys[10..20], &ds.y[..10]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn cursor_rejects_empty() {
+        BatchCursor::new(vec![]);
+    }
+}

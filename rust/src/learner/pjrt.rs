@@ -1,0 +1,82 @@
+//! The production learner: AOT CNN artifacts executed through PJRT.
+//!
+//! Wraps `runtime::Engine`, decomposing an arbitrary `steps` request into
+//! scan-fused `train_chunk` dispatches plus single `train_step` calls for
+//! the remainder (the chunk size is baked into the artifact at lowering).
+
+use anyhow::{ensure, Result};
+
+use super::Learner;
+use crate::data::Dataset;
+use crate::model::{ParamSet, TensorSpec};
+use crate::runtime::Engine;
+
+pub struct PjrtLearner {
+    engine: Engine,
+}
+
+impl PjrtLearner {
+    pub fn new(engine: Engine) -> Self {
+        PjrtLearner { engine }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    fn img(&self) -> usize {
+        self.engine.model().image_numel()
+    }
+}
+
+impl Learner for PjrtLearner {
+    fn specs(&self) -> Vec<TensorSpec> {
+        self.engine.model().params.clone()
+    }
+
+    fn batch(&self) -> usize {
+        self.engine.model().batch
+    }
+
+    fn init(&self, seed: u32) -> Result<ParamSet> {
+        self.engine.init(seed)
+    }
+
+    fn train(&self, p: &ParamSet, xs: &[f32], ys: &[i32], steps: usize) -> Result<(ParamSet, f32)> {
+        let m = self.engine.model();
+        let (batch, chunk, img) = (m.batch, m.chunk_steps, self.img());
+        ensure!(xs.len() == steps * batch * img, "xs size mismatch");
+        ensure!(ys.len() == steps * batch, "ys size mismatch");
+        let mut params = p.clone();
+        let mut loss_acc = 0.0f64;
+        let mut steps_done = 0usize;
+        // Fused chunks first (one PJRT dispatch per `chunk` steps)…
+        while steps - steps_done >= chunk {
+            let xs_c = &xs[steps_done * batch * img..(steps_done + chunk) * batch * img];
+            let ys_c = &ys[steps_done * batch..(steps_done + chunk) * batch];
+            let (p2, loss) = self.engine.train_chunk(&params, xs_c, ys_c)?;
+            params = p2;
+            loss_acc += loss as f64 * chunk as f64;
+            steps_done += chunk;
+        }
+        // …then single steps for the remainder.
+        while steps_done < steps {
+            let xs_s = &xs[steps_done * batch * img..(steps_done + 1) * batch * img];
+            let ys_s = &ys[steps_done * batch..(steps_done + 1) * batch];
+            let (p2, loss) = self.engine.train_step(&params, xs_s, ys_s)?;
+            params = p2;
+            loss_acc += loss as f64;
+            steps_done += 1;
+        }
+        let mean = if steps > 0 {
+            (loss_acc / steps as f64) as f32
+        } else {
+            0.0
+        };
+        Ok((params, mean))
+    }
+
+    fn evaluate(&self, p: &ParamSet, test: &Dataset) -> Result<(f64, f64)> {
+        self.engine.evaluate_set(p, &test.x, &test.y)
+    }
+}

@@ -1,0 +1,41 @@
+//! # CSMAAFL — Client Scheduling and Model Aggregation in Asynchronous FL
+//!
+//! Production-grade reproduction of *CSMAAFL: Client Scheduling and Model
+//! Aggregation in Asynchronous Federated Learning* (Ma, Wang, Sun, Hu,
+//! Qian; 2023) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the asynchronous FL server: TDMA upload-slot
+//!   scheduling with staleness priority ([`coordinator::scheduler`]),
+//!   eq.-(11) staleness-aware aggregation ([`coordinator::staleness`]),
+//!   the Sec.-III-B exact-equivalence β solver
+//!   ([`coordinator::beta_solver`]), a synchronous FedAvg comparator, and
+//!   a discrete-event virtual-time simulator of the paper's Sec.-II-C
+//!   time model ([`sim`]).
+//! * **L2/L1 (build time)** — `python/compile/`: the paper's CNN in JAX
+//!   with Pallas kernels on the dense layers and the aggregation axpy,
+//!   AOT-lowered to HLO text executed through PJRT ([`runtime`]).
+//!
+//! Quickstart (after `make artifacts && cargo build --release`):
+//!
+//! ```text
+//! repro train --config configs/mnist_iid.json --set gamma=0.2
+//! repro figures --fig fig3 --out results/
+//! ```
+
+pub mod analyze;
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod data;
+pub mod learner;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod runtime;
+pub mod session;
+pub mod sim;
+pub mod util;
+
+pub use config::{Algorithm, RunConfig};
+pub use coordinator::{run, FlContext};
+pub use metrics::RunResult;

@@ -1,0 +1,396 @@
+//! `repro` — the CSMAAFL launcher CLI.
+//!
+//! Subcommands:
+//!   train     run one federated experiment from a config file
+//!   compare   run all four algorithms paired on one config
+//!   figures   regenerate the paper's figures (fig3 fig4 fig5a fig5b)
+//!   timeline  emit the Sec. II-C SFL-vs-AFL time comparison (Fig. 2)
+//!   inspect   analytic tables (naive-decay, beta-solver)
+//!   smoke     compile + run every artifact once (installation check)
+//!
+//! The argument parser is hand-rolled: the offline build vendors only the
+//! `xla` crate closure (no clap).
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use csmaafl::config::{Algorithm, RunConfig};
+use csmaafl::figures::{self, FigureSpec, FIGURES};
+use csmaafl::metrics::write_series_csv;
+use csmaafl::session::{LearnerKind, Session};
+use csmaafl::sim::TimeModel;
+use csmaafl::util::logging::{self, Level};
+
+const USAGE: &str = "\
+repro — CSMAAFL asynchronous federated learning reproduction
+
+USAGE:
+  repro <COMMAND> [OPTIONS]
+
+COMMANDS:
+  train     --config <file> [--set key=value ...] [--learner pjrt|linear]
+            [--out results/] [--label name]
+  compare   --config <file> [--learner pjrt|linear] [--out results/]
+  figures   [--fig fig3|fig4|fig5a|fig5b|all] [--learner pjrt|linear]
+            [--set key=value ...] [--out results/]
+  sweep     --param gamma --values 0.1,0.2,0.4,0.6 [--config <file>]
+            [--learner pjrt|linear] [--out results/]   (E-GAMMA table)
+  analyze   [--results results/]   (comparison tables from stored records)
+  timeline  [--clients M] [--local-steps E] [--slow-factor a] [--out results/]
+  inspect   naive-decay [--clients M] | betas [--clients M]
+  smoke     [--artifacts artifacts]
+  serve     --bind 0.0.0.0:7070 --clients N [--iterations J] [--gamma g]
+            [--learner pjrt|linear]          (TCP deployment leader)
+  join      --connect host:7070 --worker-id K --workers N
+            [--learner pjrt|linear] [--local-steps E]   (TCP worker)
+
+COMMON OPTIONS:
+  --artifacts <dir>   artifacts directory (default: artifacts)
+  -v / -q             raise / lower log verbosity
+  --help              this text
+";
+
+/// Minimal option parser: flags with values, repeated --set collection.
+struct Args {
+    positional: Vec<String>,
+    options: Vec<(String, String)>,
+    sets: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut options = Vec::new();
+        let mut sets = Vec::new();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                print!("{USAGE}");
+                std::process::exit(0);
+            } else if a == "-v" {
+                logging::set_level(Level::Debug);
+            } else if a == "-q" {
+                logging::set_level(Level::Warn);
+            } else if a == "--set" {
+                let kv = it
+                    .next()
+                    .ok_or_else(|| anyhow!("--set expects key=value"))?;
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("--set expects key=value, got {kv:?}"))?;
+                sets.push((k.to_string(), v.to_string()));
+            } else if let Some(name) = a.strip_prefix("--") {
+                let v = it
+                    .next()
+                    .ok_or_else(|| anyhow!("option --{name} expects a value"))?;
+                options.push((name.to_string(), v.clone()));
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Args {
+            positional,
+            options,
+            sets,
+        })
+    }
+
+    fn opt(&self, name: &str) -> Option<&str> {
+        self.options
+            .iter()
+            .rev()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    fn learner(&self) -> Result<LearnerKind> {
+        let s = self.opt_or("learner", "pjrt");
+        LearnerKind::parse(s).ok_or_else(|| anyhow!("unknown learner {s:?}"))
+    }
+}
+
+fn load_config(args: &Args) -> Result<RunConfig> {
+    let cfg = match args.opt("config") {
+        Some(path) => RunConfig::load(path, &args.sets)?,
+        None => {
+            let mut c = RunConfig::default();
+            for (k, v) in &args.sets {
+                c.set_field(k, v)?;
+            }
+            c.validate()?;
+            c
+        }
+    };
+    Ok(cfg)
+}
+
+fn print_run_table(runs: &[&csmaafl::RunResult]) {
+    println!(
+        "{:<18} {:>7} {:>9} {:>9} {:>10} {:>9} {:>9}",
+        "series", "aggs", "final", "best", "stale(avg)", "fairness", "wall(s)"
+    );
+    for r in runs {
+        println!(
+            "{:<18} {:>7} {:>9.4} {:>9.4} {:>10.2} {:>9.3} {:>9.1}",
+            r.label,
+            r.aggregations,
+            r.final_accuracy(),
+            r.best_accuracy(),
+            r.mean_staleness,
+            r.fairness,
+            r.wallclock_secs
+        );
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let out_dir = args.opt_or("out", "results");
+    let session = Session::new(cfg, args.learner()?, args.opt_or("artifacts", "artifacts"))?;
+    let mut run = session.run()?;
+    if let Some(label) = args.opt("label") {
+        run.label = label.to_string();
+    }
+    std::fs::create_dir_all(out_dir)?;
+    let base = format!("{out_dir}/{}", run.label.replace([' ', '='], "_"));
+    write_series_csv(format!("{base}.csv"), &[&run])?;
+    std::fs::write(format!("{base}.json"), run.to_json().to_string_pretty())?;
+    print_run_table(&[&run]);
+    println!("wrote {base}.csv / .json");
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let out_dir = args.opt_or("out", "results");
+    let session = Session::new(cfg, args.learner()?, args.opt_or("artifacts", "artifacts"))?;
+    let mut runs = Vec::new();
+    for alg in [
+        Algorithm::Sfl,
+        Algorithm::AflNaive,
+        Algorithm::AflBaseline,
+        Algorithm::Csmaafl,
+    ] {
+        runs.push(session.run_with(|c| c.algorithm = alg)?);
+    }
+    std::fs::create_dir_all(out_dir)?;
+    write_series_csv(
+        format!("{out_dir}/compare.csv"),
+        &runs.iter().collect::<Vec<_>>(),
+    )?;
+    print_run_table(&runs.iter().collect::<Vec<_>>());
+    println!("wrote {out_dir}/compare.csv");
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let base = load_config(args)?;
+    let out_dir = args.opt_or("out", "results");
+    let which = args.opt_or("fig", "all");
+    let specs: Vec<&FigureSpec> = if which == "all" {
+        FIGURES.iter().collect()
+    } else {
+        vec![figures::figure_spec(which)
+            .ok_or_else(|| anyhow!("unknown figure {which:?} (fig3|fig4|fig5a|fig5b|all)"))?]
+    };
+    for spec in specs {
+        let runs = figures::generate_figure(
+            spec,
+            &base,
+            args.learner()?,
+            args.opt_or("artifacts", "artifacts"),
+            out_dir,
+        )?;
+        println!("--- {} ({}) ---", spec.id, spec.title);
+        print_run_table(&runs.iter().collect::<Vec<_>>());
+    }
+    Ok(())
+}
+
+/// Sweep any config field over a value list on a shared (paired) session.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let out_dir = args.opt_or("out", "results");
+    let param = args.opt_or("param", "gamma").to_string();
+    let values: Vec<String> = args
+        .opt_or("values", "0.1,0.2,0.4,0.6")
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let session = Session::new(cfg, args.learner()?, args.opt_or("artifacts", "artifacts"))?;
+    let mut runs = Vec::new();
+    for v in &values {
+        let mut run = session.run_with(|c| {
+            c.set_field(&param, v).expect("invalid sweep value");
+        })?;
+        run.label = format!("{param}={v}");
+        runs.push(run);
+    }
+    std::fs::create_dir_all(out_dir)?;
+    write_series_csv(
+        format!("{out_dir}/sweep_{param}.csv"),
+        &runs.iter().collect::<Vec<_>>(),
+    )?;
+    print_run_table(&runs.iter().collect::<Vec<_>>());
+    println!("wrote {out_dir}/sweep_{param}.csv");
+    Ok(())
+}
+
+/// Paper-facing comparison tables from the stored figure records.
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let dir = args.opt_or("results", "results");
+    let mut found = false;
+    for fig in ["fig3", "fig4", "fig5a", "fig5b"] {
+        let path = format!("{dir}/{fig}.json");
+        if std::path::Path::new(&path).exists() {
+            let (title, runs) = csmaafl::analyze::load_figure_record(&path)?;
+            println!("{}", csmaafl::analyze::figure_table(&title, &runs));
+            found = true;
+        }
+    }
+    if !found {
+        bail!("no figure records in {dir}/ — run `repro figures` first");
+    }
+    Ok(())
+}
+
+fn cmd_timeline(args: &Args) -> Result<()> {
+    let clients: usize = args.opt_or("clients", "20").parse()?;
+    let local_steps: usize = args.opt_or("local-steps", "16").parse()?;
+    let slow: f64 = args.opt_or("slow-factor", "4.0").parse()?;
+    let out = args.opt_or("out", "results");
+    let path = figures::generate_timeline(clients, local_steps, TimeModel::default(), slow, out)?;
+    println!("{}", std::fs::read_to_string(&path)?);
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let what = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("naive-decay");
+    let clients: usize = args.opt_or("clients", "20").parse()?;
+    match what {
+        "naive-decay" => print!("{}", figures::naive_decay_table(clients)),
+        "betas" => {
+            let alpha = vec![1.0 / clients as f64; clients];
+            let betas = csmaafl::coordinator::solve_betas(&alpha)?;
+            println!("schedule_position,beta");
+            for (t, b) in betas.iter().enumerate() {
+                println!("{},{b:.10}", t + 1);
+            }
+        }
+        other => bail!("unknown inspect target {other:?} (naive-decay|betas)"),
+    }
+    Ok(())
+}
+
+fn cmd_smoke(args: &Args) -> Result<()> {
+    let dir = args.opt_or("artifacts", "artifacts");
+    let manifest = csmaafl::runtime::Manifest::load(dir)?;
+    for name in manifest.configs.keys() {
+        let engine = csmaafl::runtime::Engine::from_manifest(&manifest, name)?;
+        let p = engine.init(0)?;
+        println!(
+            "config {name}: init OK ({} tensors, {} params)",
+            p.tensors.len(),
+            p.numel()
+        );
+        let m = engine.model();
+        let img = m.image_numel();
+        let xs = vec![0.5f32; m.batch * img];
+        let ys: Vec<i32> = (0..m.batch as i32).collect();
+        let (_, loss) = engine.train_step(&p, &xs, &ys)?;
+        println!("config {name}: train_step OK (loss {loss:.4})");
+        let ex = vec![0.5f32; m.eval_batch * img];
+        let ey = vec![0i32; m.eval_batch];
+        let (correct, _) = engine.eval_chunk(&p, &ex, &ey)?;
+        println!("config {name}: eval_chunk OK ({correct}/{} correct)", m.eval_batch);
+        let agg = engine.aggregate(&p, &p, 0.5)?;
+        anyhow::ensure!(agg.max_abs_diff(&p) < 1e-6, "aggregate(p,p) != p");
+        println!("config {name}: aggregate OK");
+    }
+    println!("smoke: all artifacts healthy");
+    Ok(())
+}
+
+/// TCP deployment leader: same Algorithm-1 logic as the simulator, over
+/// real sockets (rust/src/net/).
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let session = Session::new(cfg.clone(), args.learner()?, args.opt_or("artifacts", "artifacts"))?;
+    let leader_cfg = csmaafl::net::LeaderConfig {
+        bind: args.opt_or("bind", "127.0.0.1:7070").to_string(),
+        clients: args.opt_or("clients", "4").parse()?,
+        max_iterations: args.opt_or("iterations", "200").parse()?,
+        gamma: args.opt_or("gamma", &cfg.gamma.to_string()).parse()?,
+        mu_rho: cfg.mu_rho,
+    };
+    let w0 = session.learner().init(cfg.seed as u32)?;
+    let report = csmaafl::net::run_leader(&leader_cfg, w0)?;
+    let (acc, loss) = session.learner().evaluate(&report.final_model, &session.test)?;
+    println!(
+        "leader: {} aggregations, {:.2}s wall, mean staleness {:.2}",
+        report.aggregations, report.wallclock_secs, report.mean_staleness
+    );
+    println!("updates per client: {:?}", report.updates_per_client);
+    println!("final test accuracy {acc:.4}, loss {loss:.4}");
+    Ok(())
+}
+
+/// TCP deployment worker. `--worker-id K --workers N` selects shard K of
+/// an N-way partition so independent processes agree on the data split.
+fn cmd_join(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let session = Session::new(cfg.clone(), args.learner()?, args.opt_or("artifacts", "artifacts"))?;
+    let workers: usize = args.opt_or("workers", "4").parse()?;
+    let worker_id: usize = args.opt_or("worker-id", "0").parse()?;
+    anyhow::ensure!(worker_id < workers, "worker-id out of range");
+    let shards = csmaafl::data::partition(&session.train, workers, cfg.partition, cfg.seed);
+    let uploads = csmaafl::net::run_worker(&csmaafl::net::WorkerConfig {
+        connect: args.opt_or("connect", "127.0.0.1:7070").to_string(),
+        name: format!("worker-{worker_id}"),
+        learner: session.learner(),
+        data: &session.train,
+        indices: shards[worker_id].indices.clone(),
+        local_steps: args.opt_or("local-steps", &cfg.local_steps.to_string()).parse()?,
+    })?;
+    println!("worker-{worker_id}: {uploads} uploads, shutting down");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let args = Args::parse(&argv).context("parsing arguments")?;
+    let cmd = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "compare" => cmd_compare(&args),
+        "figures" => cmd_figures(&args),
+        "sweep" => cmd_sweep(&args),
+        "analyze" => cmd_analyze(&args),
+        "timeline" => cmd_timeline(&args),
+        "inspect" => cmd_inspect(&args),
+        "smoke" => cmd_smoke(&args),
+        "serve" => cmd_serve(&args),
+        "join" => cmd_join(&args),
+        "help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}

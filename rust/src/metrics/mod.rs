@@ -1,0 +1,73 @@
+//! Run metrics: accuracy-vs-virtual-time series, fairness and staleness
+//! statistics, CSV/JSON emission for the figure harness.
+
+mod result;
+mod stats;
+
+pub use result::{EvalPoint, RunResult};
+pub use stats::Summary;
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Write several runs as a long-format CSV:
+/// `series,slot,ticks,iteration,accuracy,loss`.
+/// This is the exact input the paper-figure plots consume.
+pub fn write_series_csv(path: impl AsRef<Path>, runs: &[&RunResult]) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    writeln!(f, "series,slot,ticks,iteration,accuracy,loss")?;
+    for run in runs {
+        for p in &run.points {
+            writeln!(
+                f,
+                "{},{:.4},{},{},{:.6},{:.6}",
+                run.label, p.slot, p.ticks, p.iteration, p.accuracy, p.loss
+            )?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let run = RunResult {
+            label: "test".into(),
+            points: vec![
+                EvalPoint {
+                    slot: 0.0,
+                    ticks: 0,
+                    iteration: 0,
+                    accuracy: 0.1,
+                    loss: 2.3,
+                },
+                EvalPoint {
+                    slot: 1.0,
+                    ticks: 2210,
+                    iteration: 20,
+                    accuracy: 0.4,
+                    loss: 1.9,
+                },
+            ],
+            ..RunResult::empty("test")
+        };
+        let tmp = std::env::temp_dir().join(format!("csmaafl_csv_{}.csv", std::process::id()));
+        write_series_csv(&tmp, &[&run]).unwrap();
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("series,slot"));
+        assert!(lines[1].starts_with("test,0.0000,0,0,0.100000"));
+        std::fs::remove_file(&tmp).ok();
+    }
+}

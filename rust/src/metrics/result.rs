@@ -1,0 +1,158 @@
+//! Per-run result record.
+
+use crate::sim::Ticks;
+use crate::util::json::Json;
+
+/// One evaluation of the global model on the held-out test set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalPoint {
+    /// X axis of the paper's figures: relative time slots (1 slot = one
+    /// synchronous FedAvg round under the run's time model).
+    pub slot: f64,
+    pub ticks: Ticks,
+    /// Global aggregations performed up to this point.
+    pub iteration: u64,
+    pub accuracy: f64,
+    pub loss: f64,
+}
+
+/// Everything a single federated run produced.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    /// Series label, e.g. `fedavg` or `csmaafl g=0.2`.
+    pub label: String,
+    pub points: Vec<EvalPoint>,
+    /// Upload count per client (fairness analysis).
+    pub uploads_per_client: Vec<u64>,
+    /// Total global aggregations.
+    pub aggregations: u64,
+    /// Mean observed staleness (AFL runs; 0 for SFL).
+    pub mean_staleness: f64,
+    /// Jain fairness index over uploads.
+    pub fairness: f64,
+    /// Virtual completion time.
+    pub total_ticks: Ticks,
+    /// Real wall-clock spent (training + eval dispatches).
+    pub wallclock_secs: f64,
+}
+
+impl RunResult {
+    pub fn empty(label: &str) -> Self {
+        RunResult {
+            label: label.to_string(),
+            points: Vec::new(),
+            uploads_per_client: Vec::new(),
+            aggregations: 0,
+            mean_staleness: 0.0,
+            fairness: 1.0,
+            total_ticks: 0,
+            wallclock_secs: 0.0,
+        }
+    }
+
+    pub fn final_accuracy(&self) -> f64 {
+        self.points.last().map_or(0.0, |p| p.accuracy)
+    }
+
+    pub fn best_accuracy(&self) -> f64 {
+        self.points.iter().map(|p| p.accuracy).fold(0.0, f64::max)
+    }
+
+    /// First relative time slot at which accuracy reached `target`
+    /// (the paper's "time to reach the same performance" comparison).
+    pub fn slots_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.accuracy >= target)
+            .map(|p| p.slot)
+    }
+
+    /// JSON summary (for `results/*.json` run records).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("label", Json::Str(self.label.clone()))
+            .set("aggregations", Json::Int(self.aggregations as i64))
+            .set("final_accuracy", Json::Float(self.final_accuracy()))
+            .set("best_accuracy", Json::Float(self.best_accuracy()))
+            .set("mean_staleness", Json::Float(self.mean_staleness))
+            .set("fairness", Json::Float(self.fairness))
+            .set("total_ticks", Json::Int(self.total_ticks as i64))
+            .set("wallclock_secs", Json::Float(self.wallclock_secs))
+            .set(
+                "uploads_per_client",
+                Json::Array(
+                    self.uploads_per_client
+                        .iter()
+                        .map(|&u| Json::Int(u as i64))
+                        .collect(),
+                ),
+            )
+            .set(
+                "points",
+                Json::Array(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            let mut pj = Json::object();
+                            pj.set("slot", Json::Float(p.slot))
+                                .set("ticks", Json::Int(p.ticks as i64))
+                                .set("iteration", Json::Int(p.iteration as i64))
+                                .set("accuracy", Json::Float(p.accuracy))
+                                .set("loss", Json::Float(p.loss));
+                            pj
+                        })
+                        .collect(),
+                ),
+            );
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_with_points(accs: &[f64]) -> RunResult {
+        let mut r = RunResult::empty("x");
+        r.points = accs
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| EvalPoint {
+                slot: i as f64,
+                ticks: i as u64 * 100,
+                iteration: i as u64,
+                accuracy: a,
+                loss: 1.0,
+            })
+            .collect();
+        r
+    }
+
+    #[test]
+    fn accessors() {
+        let r = run_with_points(&[0.1, 0.5, 0.4, 0.8]);
+        assert_eq!(r.final_accuracy(), 0.8);
+        assert_eq!(r.best_accuracy(), 0.8);
+        assert_eq!(r.slots_to_accuracy(0.45), Some(1.0));
+        assert_eq!(r.slots_to_accuracy(0.9), None);
+    }
+
+    #[test]
+    fn json_summary_parses() {
+        let r = run_with_points(&[0.2, 0.6]);
+        let j = r.to_json();
+        let parsed = crate::util::json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("label").unwrap().as_str(), Some("x"));
+        assert_eq!(
+            parsed.get("points").unwrap().as_array().unwrap().len(),
+            2
+        );
+    }
+
+    #[test]
+    fn empty_run_defaults() {
+        let r = RunResult::empty("e");
+        assert_eq!(r.final_accuracy(), 0.0);
+        assert_eq!(r.slots_to_accuracy(0.1), None);
+    }
+}

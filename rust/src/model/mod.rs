@@ -1,0 +1,5 @@
+//! Model parameter containers shared by the runtime and the coordinator.
+
+mod params;
+
+pub use params::{ParamSet, Tensor, TensorSpec};

@@ -1,0 +1,238 @@
+//! Host-side model parameters.
+//!
+//! The manifest fixes an *ordered* list of named tensors; `ParamSet` is the
+//! host representation that flows between the PJRT runtime (as literals /
+//! device buffers) and the coordinator (aggregation, distance metrics).
+
+use std::fmt;
+
+/// Static description of one parameter tensor (from the manifest).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One named f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub spec: TensorSpec,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(spec: TensorSpec) -> Self {
+        let n = spec.numel();
+        Tensor {
+            spec,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn from_data(spec: TensorSpec, data: Vec<f32>) -> Self {
+        assert_eq!(
+            spec.numel(),
+            data.len(),
+            "tensor {}: shape {:?} != data len {}",
+            spec.name,
+            spec.shape,
+            data.len()
+        );
+        Tensor { spec, data }
+    }
+}
+
+/// An ordered set of parameter tensors (the manifest contract).
+#[derive(Clone, PartialEq, Default)]
+pub struct ParamSet {
+    pub tensors: Vec<Tensor>,
+}
+
+impl fmt::Debug for ParamSet {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ParamSet[{} tensors, {} params]", self.tensors.len(), self.numel())
+    }
+}
+
+impl ParamSet {
+    pub fn zeros(specs: &[TensorSpec]) -> Self {
+        ParamSet {
+            tensors: specs.iter().cloned().map(Tensor::zeros).collect(),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.tensors.iter().map(|t| t.spec.numel()).sum()
+    }
+
+    pub fn specs(&self) -> Vec<TensorSpec> {
+        self.tensors.iter().map(|t| t.spec.clone()).collect()
+    }
+
+    /// In-place convex combination: `self = beta*self + (1-beta)*other`
+    /// — the eq.(3) server aggregation (native hot path; see
+    /// coordinator::aggregation for the PJRT/Pallas alternative).
+    pub fn lerp_inplace(&mut self, other: &ParamSet, beta: f32) {
+        assert_eq!(self.tensors.len(), other.tensors.len());
+        let b = beta;
+        let a = 1.0 - beta;
+        for (t, o) in self.tensors.iter_mut().zip(&other.tensors) {
+            debug_assert_eq!(t.spec, o.spec);
+            // Simple indexed loop: LLVM auto-vectorizes this cleanly.
+            for (x, y) in t.data.iter_mut().zip(&o.data) {
+                *x = b * *x + a * *y;
+            }
+        }
+    }
+
+    /// Weighted accumulation: `self += w * other` (FedAvg reduction).
+    pub fn axpy_inplace(&mut self, other: &ParamSet, w: f32) {
+        assert_eq!(self.tensors.len(), other.tensors.len());
+        for (t, o) in self.tensors.iter_mut().zip(&other.tensors) {
+            for (x, y) in t.data.iter_mut().zip(&o.data) {
+                *x += w * *y;
+            }
+        }
+    }
+
+    /// Multiply every element by `s`.
+    pub fn scale_inplace(&mut self, s: f32) {
+        for t in &mut self.tensors {
+            for x in &mut t.data {
+                *x *= s;
+            }
+        }
+    }
+
+    /// L2 distance between two parameter sets (staleness diagnostics).
+    pub fn l2_distance(&self, other: &ParamSet) -> f64 {
+        let mut acc = 0.0f64;
+        for (t, o) in self.tensors.iter().zip(&other.tensors) {
+            for (x, y) in t.data.iter().zip(&o.data) {
+                let d = (*x - *y) as f64;
+                acc += d * d;
+            }
+        }
+        acc.sqrt()
+    }
+
+    /// L2 norm.
+    pub fn l2_norm(&self) -> f64 {
+        let mut acc = 0.0f64;
+        for t in &self.tensors {
+            for x in &t.data {
+                acc += (*x as f64) * (*x as f64);
+            }
+        }
+        acc.sqrt()
+    }
+
+    /// Maximum absolute elementwise difference (equivalence tests).
+    pub fn max_abs_diff(&self, other: &ParamSet) -> f32 {
+        let mut m = 0.0f32;
+        for (t, o) in self.tensors.iter().zip(&other.tensors) {
+            for (x, y) in t.data.iter().zip(&o.data) {
+                m = m.max((x - y).abs());
+            }
+        }
+        m
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.tensors
+            .iter()
+            .all(|t| t.data.iter().all(|x| x.is_finite()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, shape: &[usize]) -> TensorSpec {
+        TensorSpec {
+            name: name.into(),
+            shape: shape.to_vec(),
+        }
+    }
+
+    fn pset(vals: &[&[f32]]) -> ParamSet {
+        ParamSet {
+            tensors: vals
+                .iter()
+                .enumerate()
+                .map(|(i, v)| {
+                    Tensor::from_data(spec(&format!("t{i}"), &[v.len()]), v.to_vec())
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn numel_sums_tensors() {
+        let p = ParamSet::zeros(&[spec("a", &[2, 3]), spec("b", &[4])]);
+        assert_eq!(p.numel(), 10);
+    }
+
+    #[test]
+    fn lerp_endpoints() {
+        let g = pset(&[&[1.0, 2.0], &[3.0]]);
+        let l = pset(&[&[5.0, 6.0], &[7.0]]);
+        let mut a = g.clone();
+        a.lerp_inplace(&l, 1.0);
+        assert_eq!(a, g);
+        let mut b = g.clone();
+        b.lerp_inplace(&l, 0.0);
+        assert_eq!(b, l);
+    }
+
+    #[test]
+    fn lerp_midpoint() {
+        let g = pset(&[&[0.0, 2.0]]);
+        let l = pset(&[&[4.0, 0.0]]);
+        let mut m = g.clone();
+        m.lerp_inplace(&l, 0.5);
+        assert_eq!(m.tensors[0].data, vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn axpy_and_scale_build_fedavg_mean() {
+        let a = pset(&[&[1.0, 3.0]]);
+        let b = pset(&[&[3.0, 5.0]]);
+        let mut acc = ParamSet::zeros(&a.specs());
+        acc.axpy_inplace(&a, 0.5);
+        acc.axpy_inplace(&b, 0.5);
+        assert_eq!(acc.tensors[0].data, vec![2.0, 4.0]);
+        acc.scale_inplace(2.0);
+        assert_eq!(acc.tensors[0].data, vec![4.0, 8.0]);
+    }
+
+    #[test]
+    fn distances() {
+        let a = pset(&[&[0.0, 0.0]]);
+        let b = pset(&[&[3.0, 4.0]]);
+        assert!((a.l2_distance(&b) - 5.0).abs() < 1e-9);
+        assert!((b.l2_norm() - 5.0).abs() < 1e-9);
+        assert_eq!(a.max_abs_diff(&b), 4.0);
+    }
+
+    #[test]
+    fn finiteness() {
+        let mut p = pset(&[&[1.0, 2.0]]);
+        assert!(p.is_finite());
+        p.tensors[0].data[1] = f32::NAN;
+        assert!(!p.is_finite());
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_data_checks_len() {
+        Tensor::from_data(spec("x", &[3]), vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,166 @@
+//! The deployment leader: Algorithm 1's server over real TCP.
+//!
+//! Accepts `clients` workers, broadcasts w_0, then serves Update frames
+//! as they arrive: each is aggregated immediately with the eq.-(11)
+//! staleness coefficient and the fresh global is unicast back to that
+//! worker only. The TCP accept/read loop *is* the TDMA channel (one
+//! frame at a time per connection read); arbitration across concurrently
+//! pending updates follows the same oldest-model-first rule via the
+//! per-worker last-service bookkeeping.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::staleness::{local_weight, StalenessTracker};
+use crate::log_info;
+use crate::model::{ParamSet, TensorSpec};
+use crate::net::wire::{self, Message};
+
+/// Leader-side configuration.
+#[derive(Debug, Clone)]
+pub struct LeaderConfig {
+    pub bind: String,
+    /// Number of workers to wait for before starting.
+    pub clients: usize,
+    /// Stop after this many global aggregations.
+    pub max_iterations: u64,
+    /// Eq. (11) γ.
+    pub gamma: f64,
+    /// μ EMA rate.
+    pub mu_rho: f64,
+}
+
+/// What the leader observed during a run.
+#[derive(Debug, Clone)]
+pub struct LeaderReport {
+    pub aggregations: u64,
+    pub updates_per_client: Vec<u64>,
+    pub mean_staleness: f64,
+    pub wallclock_secs: f64,
+    pub final_model: ParamSet,
+}
+
+enum Inbound {
+    Update {
+        worker: usize,
+        start_iteration: u64,
+        params: ParamSet,
+    },
+    Gone(usize),
+}
+
+/// Run the leader until `max_iterations` aggregations, then shut workers
+/// down. `w0` is the initial global model (its specs define the wire
+/// schema).
+pub fn run_leader(cfg: &LeaderConfig, w0: ParamSet) -> Result<LeaderReport> {
+    let specs: Vec<TensorSpec> = w0.specs();
+    let listener = TcpListener::bind(&cfg.bind)
+        .with_context(|| format!("binding {}", cfg.bind))?;
+    log_info!("leader: listening on {}", listener.local_addr()?);
+
+    // Accept phase: wait for exactly `clients` Hellos.
+    let mut writers: Vec<BufWriter<TcpStream>> = Vec::new();
+    let (tx, rx) = mpsc::channel::<Inbound>();
+    for worker_id in 0..cfg.clients {
+        let (stream, addr) = listener.accept()?;
+        stream.set_nodelay(true).ok();
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let writer = BufWriter::new(stream);
+        let hello = wire::recv(&mut reader, &specs)?;
+        match hello {
+            Message::Hello { name } => {
+                log_info!("leader: worker {worker_id} ({name}) from {addr}");
+            }
+            other => bail!("expected Hello, got {other:?}"),
+        }
+        writers.push(writer);
+        // Reader thread: pump frames into the aggregation loop.
+        let tx = tx.clone();
+        let specs_c = specs.clone();
+        std::thread::spawn(move || loop {
+            match wire::recv(&mut reader, &specs_c) {
+                Ok(Message::Update {
+                    start_iteration,
+                    params,
+                    ..
+                }) => {
+                    if tx
+                        .send(Inbound::Update {
+                            worker: worker_id,
+                            start_iteration,
+                            params,
+                        })
+                        .is_err()
+                    {
+                        break;
+                    }
+                }
+                Ok(_) | Err(_) => {
+                    let _ = tx.send(Inbound::Gone(worker_id));
+                    break;
+                }
+            }
+        });
+    }
+    drop(tx);
+
+    // Broadcast w_0.
+    let mut w = w0;
+    for writer in writers.iter_mut() {
+        wire::send(writer, &Message::Global {
+            iteration: 0,
+            params: w.clone(),
+        })?;
+    }
+
+    // Aggregation loop (Algorithm 1, server side).
+    let started = Instant::now();
+    let mut tracker = StalenessTracker::new(cfg.mu_rho);
+    let mut j: u64 = 0;
+    let mut staleness_sum = 0.0f64;
+    let mut per_client = vec![0u64; cfg.clients];
+    let mut alive = cfg.clients;
+    while j < cfg.max_iterations && alive > 0 {
+        match rx.recv() {
+            Ok(Inbound::Update {
+                worker,
+                start_iteration,
+                params,
+            }) => {
+                let staleness = j.saturating_sub(start_iteration);
+                let weight = local_weight(tracker.mu(), cfg.gamma, j + 1, staleness);
+                tracker.observe(staleness);
+                staleness_sum += staleness as f64;
+                w.lerp_inplace(&params, (1.0 - weight) as f32);
+                j += 1;
+                per_client[worker] += 1;
+                // Fresh global back to this worker only.
+                wire::send(&mut writers[worker], &Message::Global {
+                    iteration: j,
+                    params: w.clone(),
+                })?;
+            }
+            Ok(Inbound::Gone(worker)) => {
+                log_info!("leader: worker {worker} disconnected");
+                alive -= 1;
+            }
+            Err(_) => break,
+        }
+    }
+
+    // Shut everyone down (ignore errors from already-gone workers).
+    for writer in writers.iter_mut() {
+        let _ = wire::send(writer, &Message::Shutdown);
+    }
+    Ok(LeaderReport {
+        aggregations: j,
+        updates_per_client: per_client,
+        mean_staleness: if j > 0 { staleness_sum / j as f64 } else { 0.0 },
+        wallclock_secs: started.elapsed().as_secs_f64(),
+        final_model: w,
+    })
+}

@@ -1,0 +1,21 @@
+//! Distributed deployment runtime: the CSMAAFL server and clients as real
+//! processes talking length-prefixed binary frames over TCP.
+//!
+//! The simulator (`sim/`) reproduces the paper's *virtual-time* results;
+//! this module is the deployment face of the same coordinator logic:
+//! a leader owns the global model, grants upload slots with the same
+//! oldest-model-first policy, aggregates with the same eq.-(11) staleness
+//! rule, and unicasts the fresh global back to the uploading client —
+//! Algorithm 1 over real sockets. Workers run the PJRT CNN (or the linear
+//! learner) on their own shard.
+//!
+//! Protocol (`wire.rs`): hand-rolled frames (the offline vendor set has
+//! no serde): `[u32 len][u8 tag][payload]`, tensors as raw little-endian
+//! f32 runs validated against the manifest's shapes.
+
+pub mod leader;
+pub mod wire;
+pub mod worker;
+
+pub use leader::{run_leader, LeaderConfig, LeaderReport};
+pub use worker::{run_worker, WorkerConfig};

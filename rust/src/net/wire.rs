@@ -1,0 +1,329 @@
+//! Wire protocol for the TCP deployment runtime.
+//!
+//! Frames: `[u32 LE total-payload-len][u8 tag][payload]`. Parameter sets
+//! travel as a u32 tensor count followed by, per tensor, a u32 element
+//! count and that many little-endian f32s; shapes are validated against
+//! the receiver's expected specs (the manifest is the schema — the wire
+//! carries no redundant metadata).
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{ParamSet, Tensor, TensorSpec};
+
+/// Message tags.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Tag {
+    /// worker -> leader: join the federation (payload: client name utf8).
+    Hello = 1,
+    /// leader -> worker: initial/fresh global model + iteration stamp.
+    Global = 2,
+    /// worker -> leader: trained local model + the iteration it started
+    /// from + local step count.
+    Update = 3,
+    /// leader -> worker: training is over; final stats follow.
+    Shutdown = 4,
+}
+
+impl Tag {
+    pub fn from_u8(b: u8) -> Result<Tag> {
+        Ok(match b {
+            1 => Tag::Hello,
+            2 => Tag::Global,
+            3 => Tag::Update,
+            4 => Tag::Shutdown,
+            other => bail!("unknown wire tag {other}"),
+        })
+    }
+}
+
+/// A decoded message.
+#[derive(Debug)]
+pub enum Message {
+    Hello { name: String },
+    Global { iteration: u64, params: ParamSet },
+    Update { start_iteration: u64, steps: u32, params: ParamSet },
+    Shutdown,
+}
+
+// ------------------------------------------------------------ encoding
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_params(buf: &mut Vec<u8>, p: &ParamSet) {
+    put_u32(buf, p.tensors.len() as u32);
+    for t in &p.tensors {
+        put_u32(buf, t.data.len() as u32);
+        for v in &t.data {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Encode a message into a ready-to-send frame.
+pub fn encode(msg: &Message) -> Vec<u8> {
+    let mut payload = Vec::new();
+    let tag = match msg {
+        Message::Hello { name } => {
+            payload.extend_from_slice(name.as_bytes());
+            Tag::Hello
+        }
+        Message::Global { iteration, params } => {
+            put_u64(&mut payload, *iteration);
+            put_params(&mut payload, params);
+            Tag::Global
+        }
+        Message::Update {
+            start_iteration,
+            steps,
+            params,
+        } => {
+            put_u64(&mut payload, *start_iteration);
+            put_u32(&mut payload, *steps);
+            put_params(&mut payload, params);
+            Tag::Update
+        }
+        Message::Shutdown => Tag::Shutdown,
+    };
+    let mut frame = Vec::with_capacity(payload.len() + 5);
+    put_u32(&mut frame, payload.len() as u32 + 1);
+    frame.push(tag as u8);
+    frame.extend_from_slice(&payload);
+    frame
+}
+
+// ------------------------------------------------------------ decoding
+
+/// Hard cap on frame size (128 MiB) — refuse hostile/corrupt lengths.
+const MAX_FRAME: u32 = 128 << 20;
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated frame");
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn params(&mut self, specs: &[TensorSpec]) -> Result<ParamSet> {
+        let n = self.u32()? as usize;
+        if n != specs.len() {
+            bail!("wire params: {n} tensors, expected {}", specs.len());
+        }
+        let mut tensors = Vec::with_capacity(n);
+        for spec in specs {
+            let len = self.u32()? as usize;
+            if len != spec.numel() {
+                bail!(
+                    "wire tensor {}: {len} elems, expected {}",
+                    spec.name,
+                    spec.numel()
+                );
+            }
+            let raw = self.take(len * 4)?;
+            let mut data = Vec::with_capacity(len);
+            for chunk in raw.chunks_exact(4) {
+                data.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+            }
+            tensors.push(Tensor::from_data(spec.clone(), data));
+        }
+        Ok(ParamSet { tensors })
+    }
+}
+
+/// Decode one payload (tag byte + body). `specs` is the expected tensor
+/// layout for messages that carry parameters.
+pub fn decode(payload: &[u8], specs: &[TensorSpec]) -> Result<Message> {
+    if payload.is_empty() {
+        bail!("empty frame");
+    }
+    let tag = Tag::from_u8(payload[0])?;
+    let mut c = Cursor {
+        buf: payload,
+        pos: 1,
+    };
+    let msg = match tag {
+        Tag::Hello => Message::Hello {
+            name: String::from_utf8(c.take(payload.len() - 1)?.to_vec())
+                .context("hello name not utf8")?,
+        },
+        Tag::Global => Message::Global {
+            iteration: c.u64()?,
+            params: c.params(specs)?,
+        },
+        Tag::Update => Message::Update {
+            start_iteration: c.u64()?,
+            steps: c.u32()?,
+            params: c.params(specs)?,
+        },
+        Tag::Shutdown => Message::Shutdown,
+    };
+    if c.pos != payload.len() && tag != Tag::Hello {
+        bail!("trailing bytes in frame ({} of {})", c.pos, payload.len());
+    }
+    Ok(msg)
+}
+
+/// Write one frame to a stream.
+pub fn send(stream: &mut impl Write, msg: &Message) -> Result<()> {
+    let frame = encode(msg);
+    stream.write_all(&frame)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Read one frame from a stream.
+pub fn recv(stream: &mut impl Read, specs: &[TensorSpec]) -> Result<Message> {
+    let mut len_buf = [0u8; 4];
+    stream.read_exact(&mut len_buf).context("reading frame length")?;
+    let len = u32::from_le_bytes(len_buf);
+    if len == 0 || len > MAX_FRAME {
+        bail!("bad frame length {len}");
+    }
+    let mut payload = vec![0u8; len as usize];
+    stream.read_exact(&mut payload).context("reading frame body")?;
+    decode(&payload, specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<TensorSpec> {
+        vec![
+            TensorSpec {
+                name: "w".into(),
+                shape: vec![2, 3],
+            },
+            TensorSpec {
+                name: "b".into(),
+                shape: vec![4],
+            },
+        ]
+    }
+
+    fn pset() -> ParamSet {
+        ParamSet {
+            tensors: vec![
+                Tensor::from_data(specs()[0].clone(), vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.25]),
+                Tensor::from_data(specs()[1].clone(), vec![0.1, 0.2, 0.3, 0.4]),
+            ],
+        }
+    }
+
+    fn roundtrip(msg: &Message) -> Message {
+        let frame = encode(msg);
+        let len = u32::from_le_bytes(frame[..4].try_into().unwrap()) as usize;
+        assert_eq!(len, frame.len() - 4);
+        decode(&frame[4..], &specs()).unwrap()
+    }
+
+    #[test]
+    fn hello_roundtrip() {
+        match roundtrip(&Message::Hello {
+            name: "client-7 ü".into(),
+        }) {
+            Message::Hello { name } => assert_eq!(name, "client-7 ü"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn global_roundtrip_bitexact() {
+        match roundtrip(&Message::Global {
+            iteration: 12345678901,
+            params: pset(),
+        }) {
+            Message::Global { iteration, params } => {
+                assert_eq!(iteration, 12345678901);
+                assert_eq!(params, pset());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn update_roundtrip() {
+        match roundtrip(&Message::Update {
+            start_iteration: 42,
+            steps: 16,
+            params: pset(),
+        }) {
+            Message::Update {
+                start_iteration,
+                steps,
+                params,
+            } => {
+                assert_eq!((start_iteration, steps), (42, 16));
+                assert_eq!(params, pset());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn shutdown_roundtrip() {
+        assert!(matches!(roundtrip(&Message::Shutdown), Message::Shutdown));
+    }
+
+    #[test]
+    fn rejects_wrong_shape() {
+        let frame = encode(&Message::Global {
+            iteration: 1,
+            params: pset(),
+        });
+        let bad_specs = vec![TensorSpec {
+            name: "w".into(),
+            shape: vec![7],
+        }];
+        assert!(decode(&frame[4..], &bad_specs).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decode(&[], &specs()).is_err());
+        assert!(decode(&[99, 0, 0], &specs()).is_err());
+        assert!(decode(&[2, 1, 2, 3], &specs()).is_err()); // truncated Global
+    }
+
+    #[test]
+    fn stream_send_recv() {
+        let mut buf: Vec<u8> = Vec::new();
+        send(&mut buf, &Message::Update {
+            start_iteration: 9,
+            steps: 3,
+            params: pset(),
+        })
+        .unwrap();
+        send(&mut buf, &Message::Shutdown).unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        assert!(matches!(
+            recv(&mut r, &specs()).unwrap(),
+            Message::Update { steps: 3, .. }
+        ));
+        assert!(matches!(recv(&mut r, &specs()).unwrap(), Message::Shutdown));
+    }
+}

@@ -1,0 +1,69 @@
+//! The deployment worker: Algorithm 1's client over real TCP.
+//!
+//! Connects, says Hello, then loops: receive the (fresh) global model,
+//! run local SGD on its own shard, upload the update stamped with the
+//! iteration it started from. Terminates on Shutdown.
+
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Dataset;
+use crate::learner::{BatchCursor, Learner};
+use crate::log_debug;
+use crate::net::wire::{self, Message};
+
+/// Worker-side configuration.
+pub struct WorkerConfig<'a> {
+    pub connect: String,
+    pub name: String,
+    pub learner: &'a dyn Learner,
+    /// This worker's training shard.
+    pub data: &'a Dataset,
+    pub indices: Vec<usize>,
+    /// Local SGD steps per upload.
+    pub local_steps: usize,
+}
+
+/// Run until the leader sends Shutdown. Returns the number of uploads.
+pub fn run_worker(cfg: &WorkerConfig<'_>) -> Result<u64> {
+    let specs = cfg.learner.specs();
+    let stream = TcpStream::connect(&cfg.connect)
+        .with_context(|| format!("connecting {}", cfg.connect))?;
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    wire::send(&mut writer, &Message::Hello {
+        name: cfg.name.clone(),
+    })?;
+
+    let img = cfg.data.x.len() / cfg.data.len();
+    let batch = cfg.learner.batch();
+    let mut cursor = BatchCursor::new(cfg.indices.clone());
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    let mut uploads = 0u64;
+
+    loop {
+        match wire::recv(&mut reader, &specs)? {
+            Message::Global { iteration, params } => {
+                cursor.fill(cfg.data, cfg.local_steps * batch, img, &mut xs, &mut ys);
+                let (local, loss) =
+                    cfg.learner.train(&params, &xs, &ys, cfg.local_steps)?;
+                log_debug!(
+                    "worker {}: iter {iteration} loss {loss:.4}",
+                    cfg.name
+                );
+                wire::send(&mut writer, &Message::Update {
+                    start_iteration: iteration,
+                    steps: cfg.local_steps as u32,
+                    params: local,
+                })?;
+                uploads += 1;
+            }
+            Message::Shutdown => return Ok(uploads),
+            other => bail!("worker: unexpected message {other:?}"),
+        }
+    }
+}

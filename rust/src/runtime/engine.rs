@@ -1,0 +1,229 @@
+//! PJRT execution engine: loads the AOT HLO-text artifacts and runs them.
+//!
+//! One `Engine` per model config. All five entry points are compiled once
+//! at load time; the request path is pure Rust + PJRT (Python is never
+//! invoked). HLO *text* is the interchange format — see DESIGN.md and
+//! /opt/xla-example/README.md for why serialized protos are rejected.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::{Manifest, ModelManifest};
+use crate::log_info;
+use crate::model::{ParamSet, Tensor};
+
+/// Compiled executables for one model config.
+pub struct Engine {
+    model: ModelManifest,
+    init_exe: PjRtLoadedExecutable,
+    train_step_exe: PjRtLoadedExecutable,
+    train_chunk_exe: PjRtLoadedExecutable,
+    eval_chunk_exe: PjRtLoadedExecutable,
+    aggregate_exe: PjRtLoadedExecutable,
+}
+
+impl Engine {
+    /// Load artifacts for `config` from `dir` and compile on the CPU PJRT
+    /// client.
+    pub fn load(dir: impl AsRef<Path>, config: &str) -> Result<Engine> {
+        let manifest = Manifest::load(&dir)?;
+        Self::from_manifest(&manifest, config)
+    }
+
+    pub fn from_manifest(manifest: &Manifest, config: &str) -> Result<Engine> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let model = manifest.config(config)?.clone();
+        let t0 = std::time::Instant::now();
+        let compile = |name: &str| -> Result<PjRtLoadedExecutable> {
+            let meta = model.artifact(name)?;
+            let path = meta.file.to_str().context("non-utf8 artifact path")?;
+            let proto = HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parsing HLO text {path}"))?;
+            let comp = XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))
+        };
+        let e = Engine {
+            init_exe: compile("init")?,
+            train_step_exe: compile("train_step")?,
+            train_chunk_exe: compile("train_chunk")?,
+            eval_chunk_exe: compile("eval_chunk")?,
+            aggregate_exe: compile("aggregate")?,
+            model,
+        };
+        log_info!(
+            "engine[{}]: compiled 5 artifacts in {:.2}s ({} params)",
+            e.model.name,
+            t0.elapsed().as_secs_f64(),
+            e.model.numel()
+        );
+        Ok(e)
+    }
+
+    pub fn model(&self) -> &ModelManifest {
+        &self.model
+    }
+
+    // ------------------------------------------------------------ helpers
+
+    fn tensor_literal(t: &Tensor) -> Result<Literal> {
+        let lit = Literal::vec1(&t.data);
+        if t.spec.shape.len() == 1 {
+            return Ok(lit);
+        }
+        let dims: Vec<i64> = t.spec.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn f32_literal(data: &[f32], shape: &[usize]) -> Result<Literal> {
+        let expected: usize = shape.iter().product();
+        if data.len() != expected {
+            bail!("literal data len {} != shape {:?}", data.len(), shape);
+        }
+        let lit = Literal::vec1(data);
+        if shape.len() == 1 {
+            return Ok(lit);
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn i32_literal(data: &[i32], shape: &[usize]) -> Result<Literal> {
+        let expected: usize = shape.iter().product();
+        if data.len() != expected {
+            bail!("literal data len {} != shape {:?}", data.len(), shape);
+        }
+        let lit = Literal::vec1(data);
+        if shape.len() == 1 {
+            return Ok(lit);
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn params_to_literals(&self, p: &ParamSet) -> Result<Vec<Literal>> {
+        if p.tensors.len() != self.model.params.len() {
+            bail!(
+                "param set has {} tensors, manifest expects {}",
+                p.tensors.len(),
+                self.model.params.len()
+            );
+        }
+        p.tensors.iter().map(Self::tensor_literal).collect()
+    }
+
+    fn literals_to_params(&self, lits: &[Literal]) -> Result<ParamSet> {
+        let n = self.model.params.len();
+        if lits.len() < n {
+            bail!("expected >= {n} output literals, got {}", lits.len());
+        }
+        let mut tensors = Vec::with_capacity(n);
+        for (spec, lit) in self.model.params.iter().zip(lits) {
+            let data = lit.to_vec::<f32>()?;
+            if data.len() != spec.numel() {
+                bail!(
+                    "output tensor {}: got {} elems, want {}",
+                    spec.name,
+                    data.len(),
+                    spec.numel()
+                );
+            }
+            tensors.push(Tensor::from_data(spec.clone(), data));
+        }
+        Ok(ParamSet { tensors })
+    }
+
+    fn run(&self, exe: &PjRtLoadedExecutable, args: &[Literal]) -> Result<Vec<Literal>> {
+        let result = exe.execute::<Literal>(args)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        Ok(result.to_tuple()?)
+    }
+
+    // ------------------------------------------------------- entry points
+
+    /// Initialize parameters from a seed (the lowered He init).
+    pub fn init(&self, seed: u32) -> Result<ParamSet> {
+        let out = self.run(&self.init_exe, &[Literal::scalar(seed)])?;
+        self.literals_to_params(&out)
+    }
+
+    /// One SGD step. `x`: flattened (batch, 28, 28, 1); `y`: (batch,).
+    pub fn train_step(&self, p: &ParamSet, x: &[f32], y: &[i32]) -> Result<(ParamSet, f32)> {
+        let m = &self.model;
+        let mut args = self.params_to_literals(p)?;
+        let mut xshape = vec![m.batch];
+        xshape.extend_from_slice(&m.input_shape);
+        args.push(Self::f32_literal(x, &xshape)?);
+        args.push(Self::i32_literal(y, &[m.batch])?);
+        let out = self.run(&self.train_step_exe, &args)?;
+        let new_p = self.literals_to_params(&out)?;
+        let loss = out[m.params.len()].to_vec::<f32>()?[0];
+        Ok((new_p, loss))
+    }
+
+    /// `chunk_steps` SGD steps under one dispatch.
+    /// `xs`: flattened (S, batch, 28, 28, 1); `ys`: (S, batch).
+    pub fn train_chunk(&self, p: &ParamSet, xs: &[f32], ys: &[i32]) -> Result<(ParamSet, f32)> {
+        let m = &self.model;
+        let mut args = self.params_to_literals(p)?;
+        let mut xshape = vec![m.chunk_steps, m.batch];
+        xshape.extend_from_slice(&m.input_shape);
+        args.push(Self::f32_literal(xs, &xshape)?);
+        args.push(Self::i32_literal(ys, &[m.chunk_steps, m.batch])?);
+        let out = self.run(&self.train_chunk_exe, &args)?;
+        let new_p = self.literals_to_params(&out)?;
+        let loss = out[m.params.len()].to_vec::<f32>()?[0];
+        Ok((new_p, loss))
+    }
+
+    /// Evaluate one eval batch: returns (correct_count, loss_sum).
+    pub fn eval_chunk(&self, p: &ParamSet, x: &[f32], y: &[i32]) -> Result<(u32, f32)> {
+        let m = &self.model;
+        let mut args = self.params_to_literals(p)?;
+        let mut xshape = vec![m.eval_batch];
+        xshape.extend_from_slice(&m.input_shape);
+        args.push(Self::f32_literal(x, &xshape)?);
+        args.push(Self::i32_literal(y, &[m.eval_batch])?);
+        let out = self.run(&self.eval_chunk_exe, &args)?;
+        let correct = out[0].to_vec::<i32>()?[0];
+        let loss_sum = out[1].to_vec::<f32>()?[0];
+        Ok((correct.max(0) as u32, loss_sum))
+    }
+
+    /// Eq.(3) aggregation via the L1 Pallas axpy artifact:
+    /// `beta*global + (1-beta)*local`.
+    pub fn aggregate(&self, global: &ParamSet, local: &ParamSet, beta: f32) -> Result<ParamSet> {
+        let mut args = self.params_to_literals(global)?;
+        args.extend(self.params_to_literals(local)?);
+        args.push(Literal::scalar(beta));
+        let out = self.run(&self.aggregate_exe, &args)?;
+        self.literals_to_params(&out)
+    }
+
+    /// Evaluate a whole test set by batching through `eval_chunk`.
+    /// Trailing examples that do not fill a batch are dropped (the test
+    /// sets generated by `data::` are sized as multiples of eval_batch).
+    pub fn evaluate_set(&self, p: &ParamSet, x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
+        let m = &self.model;
+        let img = m.image_numel();
+        let total = y.len();
+        let nb = total / m.eval_batch;
+        if nb == 0 {
+            bail!("test set smaller than eval_batch ({})", m.eval_batch);
+        }
+        let mut correct = 0u64;
+        let mut loss_sum = 0.0f64;
+        for b in 0..nb {
+            let xs = &x[b * m.eval_batch * img..(b + 1) * m.eval_batch * img];
+            let ys = &y[b * m.eval_batch..(b + 1) * m.eval_batch];
+            let (c, l) = self.eval_chunk(p, xs, ys)?;
+            correct += c as u64;
+            loss_sum += l as f64;
+        }
+        let n = (nb * m.eval_batch) as f64;
+        Ok((correct as f64 / n, loss_sum / n))
+    }
+}

@@ -1,0 +1,289 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` describing every AOT
+//! model config: the ordered parameter tensor list, training
+//! hyper-parameters baked at lowering, and the HLO text file for each entry
+//! point. The runtime refuses to execute artifacts whose manifest does not
+//! parse or whose files are missing — failing loudly beats shape garbage.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::TensorSpec;
+use crate::util::json::{self, Json};
+
+/// The entry points every model config must export.
+pub const REQUIRED_ARTIFACTS: [&str; 5] =
+    ["init", "train_step", "train_chunk", "eval_chunk", "aggregate"];
+
+/// One input of an exported program (shape + dtype, as lowered).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One exported HLO program.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub file: PathBuf,
+    pub sha256: String,
+    pub inputs: Vec<InputSpec>,
+}
+
+/// One AOT-lowered model configuration (e.g. `mnist_small`).
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub params: Vec<TensorSpec>,
+    pub lr: f64,
+    pub batch: usize,
+    pub chunk_steps: usize,
+    pub eval_batch: usize,
+    pub num_classes: usize,
+    pub input_shape: Vec<usize>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl ModelManifest {
+    /// Total scalar parameter count.
+    pub fn numel(&self) -> usize {
+        self.params.iter().map(|s| s.numel()).sum()
+    }
+
+    /// Flattened pixels per image.
+    pub fn image_numel(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("config {}: missing artifact {name}", self.name))
+    }
+}
+
+/// The parsed manifest for an artifacts directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}; run `make artifacts`", path.display()))?;
+        let root = json::parse(&text)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        Self::from_json(dir, &root)
+    }
+
+    fn from_json(dir: PathBuf, root: &Json) -> Result<Manifest> {
+        let version = root
+            .get("version")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| anyhow!("manifest: missing version"))?;
+        if version != 1 {
+            bail!("manifest: unsupported version {version}");
+        }
+        let cfgs = root
+            .get("configs")
+            .and_then(Json::as_object)
+            .ok_or_else(|| anyhow!("manifest: missing configs object"))?;
+        let mut configs = BTreeMap::new();
+        for (name, body) in cfgs {
+            let mm = parse_model(&dir, name, body)
+                .with_context(|| format!("manifest config {name}"))?;
+            configs.insert(name.clone(), mm);
+        }
+        if configs.is_empty() {
+            bail!("manifest: no configs");
+        }
+        Ok(Manifest { dir, configs })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelManifest> {
+        self.configs.get(name).ok_or_else(|| {
+            anyhow!(
+                "model config {name:?} not in manifest (have: {:?}); \
+                 re-run `make artifacts` with --configs including it",
+                self.configs.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_i64)
+        .filter(|v| *v >= 0)
+        .map(|v| v as usize)
+        .ok_or_else(|| anyhow!("missing/invalid field {key}"))
+}
+
+fn parse_model(dir: &Path, name: &str, j: &Json) -> Result<ModelManifest> {
+    let params_json = j
+        .get("params")
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow!("missing params"))?;
+    let mut params = Vec::with_capacity(params_json.len());
+    for p in params_json {
+        let pname = p
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("param missing name"))?;
+        let shape = parse_shape(p.get("shape"))?;
+        params.push(TensorSpec {
+            name: pname.to_string(),
+            shape,
+        });
+    }
+
+    let arts_json = j
+        .get("artifacts")
+        .and_then(Json::as_object)
+        .ok_or_else(|| anyhow!("missing artifacts"))?;
+    let mut artifacts = BTreeMap::new();
+    for (aname, a) in arts_json {
+        let file = a
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("artifact {aname}: missing file"))?;
+        let full = dir.join(file);
+        if !full.exists() {
+            bail!(
+                "artifact {aname}: file {} missing; re-run `make artifacts`",
+                full.display()
+            );
+        }
+        let mut inputs = Vec::new();
+        for i in a.get("inputs").and_then(Json::as_array).unwrap_or(&[]) {
+            inputs.push(InputSpec {
+                shape: parse_shape(i.get("shape"))?,
+                dtype: i
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .unwrap_or("float32")
+                    .to_string(),
+            });
+        }
+        artifacts.insert(
+            aname.clone(),
+            ArtifactMeta {
+                file: full,
+                sha256: a
+                    .get("sha256")
+                    .and_then(Json::as_str)
+                    .unwrap_or_default()
+                    .to_string(),
+                inputs,
+            },
+        );
+    }
+    for required in REQUIRED_ARTIFACTS {
+        if !artifacts.contains_key(required) {
+            bail!("missing required artifact {required}");
+        }
+    }
+
+    Ok(ModelManifest {
+        name: name.to_string(),
+        params,
+        lr: j.get("lr").and_then(Json::as_f64).unwrap_or(0.01),
+        batch: req_usize(j, "batch")?,
+        chunk_steps: req_usize(j, "chunk_steps")?,
+        eval_batch: req_usize(j, "eval_batch")?,
+        num_classes: req_usize(j, "num_classes")?,
+        input_shape: parse_shape(j.get("input_shape"))?,
+        artifacts,
+    })
+}
+
+fn parse_shape(j: Option<&Json>) -> Result<Vec<usize>> {
+    j.and_then(Json::as_array)
+        .map(|a| {
+            a.iter()
+                .map(|d| {
+                    d.as_i64()
+                        .filter(|v| *v >= 0)
+                        .map(|v| v as usize)
+                        .ok_or_else(|| anyhow!("bad shape dim"))
+                })
+                .collect::<Result<Vec<_>>>()
+        })
+        .ok_or_else(|| anyhow!("missing shape"))?
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake_artifacts(dir: &Path) {
+        for name in REQUIRED_ARTIFACTS {
+            std::fs::write(dir.join(format!("{name}_t.hlo.txt")), "HloModule t").unwrap();
+        }
+    }
+
+    fn minimal_manifest_json() -> String {
+        let arts: Vec<String> = REQUIRED_ARTIFACTS
+            .iter()
+            .map(|n| {
+                format!(
+                    r#""{n}": {{"file": "{n}_t.hlo.txt", "sha256": "x", "inputs": [{{"shape": [2,2], "dtype": "float32"}}]}}"#
+                )
+            })
+            .collect();
+        format!(
+            r#"{{"version": 1, "configs": {{"t": {{
+                "params": [{{"name": "w", "shape": [2, 3]}}, {{"name": "b", "shape": [3]}}],
+                "lr": 0.01, "batch": 5, "chunk_steps": 8, "eval_batch": 100,
+                "num_classes": 10, "input_shape": [28, 28, 1],
+                "artifacts": {{{}}}
+            }}}}}}"#,
+            arts.join(",")
+        )
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let tmp = std::env::temp_dir().join(format!("csmaafl_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        write_fake_artifacts(&tmp);
+        std::fs::write(tmp.join("manifest.json"), minimal_manifest_json()).unwrap();
+        let m = Manifest::load(&tmp).unwrap();
+        let c = m.config("t").unwrap();
+        assert_eq!(c.params.len(), 2);
+        assert_eq!(c.numel(), 9);
+        assert_eq!(c.batch, 5);
+        assert_eq!(c.image_numel(), 784);
+        assert!(c.artifact("train_step").is_ok());
+        assert!(m.config("nope").is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn rejects_missing_artifact_file() {
+        let tmp = std::env::temp_dir().join(format!("csmaafl_manifest_miss_{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        // note: artifact files NOT written
+        std::fs::write(tmp.join("manifest.json"), minimal_manifest_json()).unwrap();
+        assert!(Manifest::load(&tmp).is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let tmp = std::env::temp_dir().join(format!("csmaafl_manifest_ver_{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.json"), r#"{"version": 2, "configs": {}}"#).unwrap();
+        assert!(Manifest::load(&tmp).is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

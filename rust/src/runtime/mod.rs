@@ -1,0 +1,10 @@
+//! PJRT runtime: load + execute the AOT artifacts (`artifacts/*.hlo.txt`).
+//!
+//! `xla` crate flow: `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `client.compile` → `execute`. Python runs only at build time.
+
+mod engine;
+pub mod manifest;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactMeta, InputSpec, Manifest, ModelManifest};

@@ -1,0 +1,191 @@
+//! High-level launcher API: build data + learner once, run (paired)
+//! federated experiments against them.
+//!
+//! Pairing matters for the paper's comparisons: FedAvg and every CSMAAFL
+//! γ-variant must see the *same* synthetic dataset, partition, client
+//! speed factors and model init, so accuracy differences are attributable
+//! to the algorithm alone. A `Session` owns those shared pieces.
+
+use anyhow::{Context, Result};
+
+use crate::config::{AggregatorKind, RunConfig};
+use crate::coordinator::{self, FlContext};
+use crate::data::{generate, partition, ClientShard, Dataset};
+use crate::learner::{Learner, LinearLearner, PjrtLearner};
+use crate::log_info;
+use crate::metrics::RunResult;
+use crate::runtime::Engine;
+
+/// Which learner executes local training.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LearnerKind {
+    /// AOT CNN artifacts through PJRT (the production path).
+    Pjrt,
+    /// Pure-Rust softmax regression (fast; tests/benches).
+    Linear,
+}
+
+impl LearnerKind {
+    pub fn parse(s: &str) -> Option<LearnerKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "pjrt" | "cnn" => Some(LearnerKind::Pjrt),
+            "linear" | "native" => Some(LearnerKind::Linear),
+            _ => None,
+        }
+    }
+}
+
+enum SessionLearner {
+    Linear(LinearLearner),
+    Pjrt(PjrtLearner),
+}
+
+/// Shared experiment state: dataset, shards, learner, engine.
+pub struct Session {
+    pub cfg: RunConfig,
+    pub train: Dataset,
+    pub test: Dataset,
+    pub shards: Vec<ClientShard>,
+    learner: SessionLearner,
+}
+
+impl Session {
+    /// Build a session. `artifacts_dir` is only read for `Pjrt` learners.
+    pub fn new(cfg: RunConfig, kind: LearnerKind, artifacts_dir: &str) -> Result<Session> {
+        cfg.validate()?;
+        let (train, test) = generate(
+            cfg.dataset,
+            cfg.train_samples(),
+            cfg.test_samples,
+            cfg.seed,
+        );
+        let shards = partition(&train, cfg.clients, cfg.partition, cfg.seed);
+        let learner = match kind {
+            LearnerKind::Linear => SessionLearner::Linear(LinearLearner::default()),
+            LearnerKind::Pjrt => {
+                let engine = Engine::load(artifacts_dir, &cfg.model_config)
+                    .context("loading PJRT engine (run `make artifacts` first)")?;
+                SessionLearner::Pjrt(PjrtLearner::new(engine))
+            }
+        };
+        log_info!(
+            "session: {} clients x {} samples ({} {}), {} test",
+            cfg.clients,
+            cfg.samples_per_client,
+            cfg.dataset.name(),
+            cfg.partition.name(),
+            cfg.test_samples
+        );
+        Ok(Session {
+            cfg,
+            train,
+            test,
+            shards,
+            learner,
+        })
+    }
+
+    pub fn learner(&self) -> &dyn Learner {
+        match &self.learner {
+            SessionLearner::Linear(l) => l,
+            SessionLearner::Pjrt(p) => p,
+        }
+    }
+
+    pub fn engine(&self) -> Option<&Engine> {
+        match &self.learner {
+            SessionLearner::Pjrt(p) => Some(p.engine()),
+            SessionLearner::Linear(_) => None,
+        }
+    }
+
+    /// Run with the session's config as-is.
+    pub fn run(&self) -> Result<RunResult> {
+        self.run_with(|_| {})
+    }
+
+    /// Run a variant: clone the config, let `mutate` adjust it, execute.
+    /// Data, shards, client speeds and model init stay shared (paired).
+    pub fn run_with(&self, mutate: impl FnOnce(&mut RunConfig)) -> Result<RunResult> {
+        let mut cfg = self.cfg.clone();
+        mutate(&mut cfg);
+        cfg.validate()?;
+        if cfg.aggregator == AggregatorKind::Pjrt && self.engine().is_none() {
+            anyhow::bail!("PJRT aggregator requires the PJRT learner");
+        }
+        let ctx = FlContext {
+            cfg: &cfg,
+            learner: self.learner(),
+            engine: self.engine(),
+            train: &self.train,
+            shards: &self.shards,
+            test: &self.test,
+        };
+        let t0 = std::time::Instant::now();
+        let result = coordinator::run(&ctx)?;
+        log_info!(
+            "run[{}]: {} aggregations, final acc {:.3}, {:.1}s wall",
+            result.label,
+            result.aggregations,
+            result.final_accuracy(),
+            t0.elapsed().as_secs_f64()
+        );
+        Ok(result)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algorithm;
+    use crate::data::Partition;
+
+    fn tiny_cfg() -> RunConfig {
+        let mut c = RunConfig::default();
+        c.clients = 4;
+        c.samples_per_client = 20;
+        c.test_samples = 50;
+        c.local_steps = 4;
+        c.max_slots = 3.0;
+        c
+    }
+
+    #[test]
+    fn linear_session_runs_all_algorithms() {
+        let s = Session::new(tiny_cfg(), LearnerKind::Linear, "artifacts").unwrap();
+        for alg in [
+            Algorithm::Sfl,
+            Algorithm::AflNaive,
+            Algorithm::AflBaseline,
+            Algorithm::Csmaafl,
+        ] {
+            let r = s.run_with(|c| c.algorithm = alg).unwrap();
+            assert!(!r.points.is_empty(), "{alg:?} produced no points");
+            assert!(r.points.iter().all(|p| p.accuracy.is_finite()));
+            assert!(
+                r.points.first().unwrap().slot <= 0.001,
+                "first point at slot 0"
+            );
+        }
+    }
+
+    #[test]
+    fn paired_runs_share_data() {
+        let s = Session::new(tiny_cfg(), LearnerKind::Linear, "artifacts").unwrap();
+        let a = s.run_with(|c| c.algorithm = Algorithm::Sfl).unwrap();
+        let b = s.run_with(|c| c.algorithm = Algorithm::Sfl).unwrap();
+        assert_eq!(a.points.len(), b.points.len());
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            assert_eq!(pa.accuracy, pb.accuracy, "identical reruns");
+        }
+    }
+
+    #[test]
+    fn noniid_session() {
+        let mut cfg = tiny_cfg();
+        cfg.partition = Partition::TwoClass;
+        let s = Session::new(cfg, LearnerKind::Linear, "artifacts").unwrap();
+        let r = s.run_with(|c| c.algorithm = Algorithm::Csmaafl).unwrap();
+        assert!(r.aggregations > 0);
+    }
+}

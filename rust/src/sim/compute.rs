@@ -1,0 +1,238 @@
+//! Client compute-capability heterogeneity (Sec. II-C / Sec. IV).
+//!
+//! Each client m has a speed factor `a_m >= 1` (1 = fastest hardware
+//! class). The paper's simulation randomizes effective speed per trunk
+//! time; we model that with per-round multiplicative jitter on top of the
+//! per-client base factor.
+
+use crate::sim::time_model::{Ticks, TimeModel};
+use crate::util::rng::Rng;
+
+/// How client speed factors are drawn.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum HeterogeneityProfile {
+    /// All clients identical (the paper's homogeneous analysis case).
+    Homogeneous,
+    /// Factors uniform in [1, max_factor].
+    Uniform { max_factor: f64 },
+    /// Log-normal factors: 1 + LogNormal(0, sigma) - exp(-sigma^2/2)-ish
+    /// tail; a realistic long-tail straggler population.
+    Lognormal { sigma: f64 },
+    /// The paper's two extreme scenarios: a fraction of very fast clients
+    /// (factor 1) and a fraction of very slow ones (factor `slow_factor`,
+    /// e.g. 10x), the rest at `mid_factor`.
+    Extreme {
+        fast_frac: f64,
+        slow_frac: f64,
+        mid_factor: f64,
+        slow_factor: f64,
+    },
+}
+
+impl HeterogeneityProfile {
+    pub fn parse(s: &str) -> Option<HeterogeneityProfile> {
+        match s.to_ascii_lowercase().as_str() {
+            "homogeneous" | "homo" => Some(HeterogeneityProfile::Homogeneous),
+            "uniform" => Some(HeterogeneityProfile::Uniform { max_factor: 4.0 }),
+            "lognormal" => Some(HeterogeneityProfile::Lognormal { sigma: 0.5 }),
+            "extreme" => Some(HeterogeneityProfile::Extreme {
+                fast_frac: 0.1,
+                slow_frac: 0.1,
+                mid_factor: 3.0,
+                slow_factor: 10.0,
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// Per-client speed factors + per-round jitter.
+#[derive(Debug, Clone)]
+pub struct ComputeModel {
+    factors: Vec<f64>,
+    /// Multiplicative jitter half-width (0.1 = ±10% per round draw).
+    jitter: f64,
+}
+
+impl ComputeModel {
+    pub fn new(profile: HeterogeneityProfile, clients: usize, jitter: f64, rng: &Rng) -> Self {
+        let mut r = rng.fork(0x5eed_c0de);
+        let factors: Vec<f64> = (0..clients)
+            .map(|i| match profile {
+                HeterogeneityProfile::Homogeneous => 1.0,
+                HeterogeneityProfile::Uniform { max_factor } => {
+                    r.range_f64(1.0, max_factor.max(1.0))
+                }
+                // Always >= 1: unit-speed floor plus a long-tailed surplus.
+                HeterogeneityProfile::Lognormal { sigma } => 1.0 + r.lognormal(0.0, sigma),
+                HeterogeneityProfile::Extreme {
+                    fast_frac,
+                    slow_frac,
+                    mid_factor,
+                    slow_factor,
+                } => {
+                    let u = i as f64 / clients.max(1) as f64;
+                    if u < fast_frac {
+                        1.0
+                    } else if u >= 1.0 - slow_frac {
+                        slow_factor
+                    } else {
+                        mid_factor
+                    }
+                }
+            })
+            .collect();
+        ComputeModel { factors, jitter }
+    }
+
+    pub fn clients(&self) -> usize {
+        self.factors.len()
+    }
+
+    /// Base speed factor of client m.
+    pub fn factor(&self, m: usize) -> f64 {
+        self.factors[m]
+    }
+
+    pub fn slowest_factor(&self) -> f64 {
+        self.factors.iter().cloned().fold(1.0, f64::max)
+    }
+
+    pub fn fastest_factor(&self) -> f64 {
+        self.factors.iter().cloned().fold(f64::MAX, f64::min)
+    }
+
+    /// Clients sorted fastest-first (the baseline-AFL schedule).
+    pub fn fastest_first(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.factors.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.factors[a]
+                .partial_cmp(&self.factors[b])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        idx
+    }
+
+    /// Draw the compute duration for `local_steps` steps on client m.
+    pub fn duration(
+        &self,
+        tm: &TimeModel,
+        m: usize,
+        local_steps: usize,
+        rng: &mut Rng,
+    ) -> Ticks {
+        let jit = if self.jitter > 0.0 {
+            1.0 + self.jitter * (2.0 * rng.f64() - 1.0)
+        } else {
+            1.0
+        };
+        tm.compute_time(local_steps, self.factors[m] * jit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(99)
+    }
+
+    #[test]
+    fn homogeneous_all_ones() {
+        let cm = ComputeModel::new(HeterogeneityProfile::Homogeneous, 10, 0.0, &rng());
+        assert!((0..10).all(|m| cm.factor(m) == 1.0));
+        assert_eq!(cm.slowest_factor(), 1.0);
+    }
+
+    #[test]
+    fn uniform_within_bounds() {
+        let cm = ComputeModel::new(
+            HeterogeneityProfile::Uniform { max_factor: 4.0 },
+            100,
+            0.0,
+            &rng(),
+        );
+        for m in 0..100 {
+            assert!((1.0..=4.0).contains(&cm.factor(m)));
+        }
+        assert!(cm.slowest_factor() > cm.fastest_factor());
+    }
+
+    #[test]
+    fn extreme_has_three_tiers() {
+        let cm = ComputeModel::new(
+            HeterogeneityProfile::Extreme {
+                fast_frac: 0.1,
+                slow_frac: 0.1,
+                mid_factor: 3.0,
+                slow_factor: 10.0,
+            },
+            20,
+            0.0,
+            &rng(),
+        );
+        assert_eq!(cm.factor(0), 1.0);
+        assert_eq!(cm.factor(10), 3.0);
+        assert_eq!(cm.factor(19), 10.0);
+    }
+
+    #[test]
+    fn fastest_first_sorted() {
+        let cm = ComputeModel::new(
+            HeterogeneityProfile::Uniform { max_factor: 5.0 },
+            30,
+            0.0,
+            &rng(),
+        );
+        let order = cm.fastest_first();
+        for w in order.windows(2) {
+            assert!(cm.factor(w[0]) <= cm.factor(w[1]));
+        }
+    }
+
+    #[test]
+    fn duration_deterministic_without_jitter() {
+        let tm = TimeModel::default();
+        let cm = ComputeModel::new(HeterogeneityProfile::Homogeneous, 4, 0.0, &rng());
+        let mut r1 = rng();
+        let mut r2 = rng();
+        assert_eq!(cm.duration(&tm, 0, 16, &mut r1), cm.duration(&tm, 0, 16, &mut r2));
+        assert_eq!(cm.duration(&tm, 0, 16, &mut r1), 160);
+    }
+
+    #[test]
+    fn jitter_bounded() {
+        let tm = TimeModel::default();
+        let cm = ComputeModel::new(HeterogeneityProfile::Homogeneous, 1, 0.2, &rng());
+        let mut r = rng();
+        for _ in 0..200 {
+            let d = cm.duration(&tm, 0, 16, &mut r) as f64;
+            assert!((160.0 * 0.8 - 1.0..=160.0 * 1.2 + 1.0).contains(&d), "{d}");
+        }
+    }
+
+    #[test]
+    fn lognormal_factors_at_least_one() {
+        let cm = ComputeModel::new(
+            HeterogeneityProfile::Lognormal { sigma: 0.8 },
+            200,
+            0.0,
+            &rng(),
+        );
+        for m in 0..200 {
+            assert!(cm.factor(m) >= 1.0, "{}", cm.factor(m));
+        }
+    }
+
+    #[test]
+    fn parse_profiles() {
+        assert_eq!(
+            HeterogeneityProfile::parse("homo"),
+            Some(HeterogeneityProfile::Homogeneous)
+        );
+        assert!(HeterogeneityProfile::parse("uniform").is_some());
+        assert!(HeterogeneityProfile::parse("nope").is_none());
+    }
+}

@@ -1,0 +1,15 @@
+//! Discrete-event virtual-time simulator (Sec. II-C substrate).
+//!
+//! Virtual time is measured in integer `Ticks` so event ordering is exact
+//! and platform-independent. Real computation (PJRT training) is executed
+//! when compute events fire, but its wall-clock cost never leaks into the
+//! virtual timeline — the timeline is governed purely by the paper's time
+//! model (τ compute, τ^u upload, τ^d download, per-client speed factors).
+
+mod compute;
+mod event;
+mod time_model;
+
+pub use compute::{ComputeModel, HeterogeneityProfile};
+pub use event::EventQueue;
+pub use time_model::{Ticks, TimeModel, UplinkChannel};

@@ -1,0 +1,166 @@
+//! The paper's Sec. II-C time model.
+//!
+//! All durations are integer ticks (1 tick = 1 ms of modelled time by
+//! convention; only ratios matter). The model exposes the paper's three
+//! primitives — download `τ^d`, per-local-step compute `τ`, TDMA upload
+//! `τ^u` — plus the analytic round/sweep formulas used by the Fig. 2
+//! comparison and verified against the simulator in tests.
+
+pub type Ticks = u64;
+
+/// Communication + computation time parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TimeModel {
+    /// Time to send the global model to a client (`τ^d`).
+    pub tau_down: Ticks,
+    /// Compute time of ONE local SGD step on the *fastest* hardware class.
+    /// A full local round of `E` steps on client m costs
+    /// `E * tau_step * a_m` (a_m from the heterogeneity profile).
+    pub tau_step: Ticks,
+    /// TDMA upload slot length (`τ^u`).
+    pub tau_up: Ticks,
+}
+
+impl Default for TimeModel {
+    fn default() -> Self {
+        // Communication-heavier-than-one-step regime, as in the paper's
+        // discussion (uploads dominate unless a client is very slow).
+        TimeModel {
+            tau_down: 50,
+            tau_step: 10,
+            tau_up: 100,
+        }
+    }
+}
+
+impl TimeModel {
+    /// `τ` for a client: E local steps at speed factor a.
+    pub fn compute_time(&self, local_steps: usize, factor: f64) -> Ticks {
+        let t = (local_steps as f64) * (self.tau_step as f64) * factor;
+        t.round().max(1.0) as Ticks
+    }
+
+    /// SFL homogeneous round: `τ^d + τ + M·τ^u` (Sec. II-C).
+    pub fn sfl_round_homogeneous(&self, m: usize, local_steps: usize) -> Ticks {
+        self.tau_down + self.compute_time(local_steps, 1.0) + m as Ticks * self.tau_up
+    }
+
+    /// SFL heterogeneous round: `τ^d + a·τ + M·τ^u` with `a` the slowest
+    /// client's factor.
+    pub fn sfl_round_heterogeneous(
+        &self,
+        m: usize,
+        local_steps: usize,
+        slowest_factor: f64,
+    ) -> Ticks {
+        self.tau_down
+            + self.compute_time(local_steps, slowest_factor)
+            + m as Ticks * self.tau_up
+    }
+
+    /// AFL homogeneous full sweep: `M·τ^u + M·τ^d + τ` (Sec. II-C).
+    pub fn afl_sweep_homogeneous(&self, m: usize, local_steps: usize) -> Ticks {
+        m as Ticks * self.tau_up
+            + m as Ticks * self.tau_down
+            + self.compute_time(local_steps, 1.0)
+    }
+
+    /// AFL steady-state inter-aggregation gap: `τ^u + τ^d`.
+    pub fn afl_update_interval(&self) -> Ticks {
+        self.tau_up + self.tau_down
+    }
+}
+
+/// The single TDMA uplink: one model upload at a time.
+#[derive(Debug, Clone, Default)]
+pub struct UplinkChannel {
+    busy_until: Ticks,
+}
+
+impl UplinkChannel {
+    pub fn new() -> Self {
+        UplinkChannel { busy_until: 0 }
+    }
+
+    pub fn is_free(&self, now: Ticks) -> bool {
+        now >= self.busy_until
+    }
+
+    pub fn busy_until(&self) -> Ticks {
+        self.busy_until
+    }
+
+    /// Reserve the channel from `now` for `dur` ticks; returns completion
+    /// time. Panics if the channel is busy — callers must check first.
+    pub fn reserve(&mut self, now: Ticks, dur: Ticks) -> Ticks {
+        assert!(self.is_free(now), "uplink busy until {}", self.busy_until);
+        self.busy_until = now + dur;
+        self.busy_until
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TM: TimeModel = TimeModel {
+        tau_down: 50,
+        tau_step: 10,
+        tau_up: 100,
+    };
+
+    #[test]
+    fn sfl_round_formula() {
+        // τ^d + E·τ_step + M·τ^u = 50 + 16*10 + 20*100 = 2210
+        assert_eq!(TM.sfl_round_homogeneous(20, 16), 2210);
+    }
+
+    #[test]
+    fn sfl_heterogeneous_uses_slowest() {
+        // 50 + 4*16*10 + 20*100 = 2690
+        assert_eq!(TM.sfl_round_heterogeneous(20, 16, 4.0), 2690);
+        assert!(TM.sfl_round_heterogeneous(20, 16, 4.0) > TM.sfl_round_homogeneous(20, 16));
+    }
+
+    #[test]
+    fn afl_sweep_formula() {
+        // M·τ^u + M·τ^d + τ = 2000 + 1000 + 160 = 3160
+        assert_eq!(TM.afl_sweep_homogeneous(20, 16), 3160);
+        // The paper's observation: AFL sweep costs (M-1)·τ^d more than SFL.
+        assert_eq!(
+            TM.afl_sweep_homogeneous(20, 16) - TM.sfl_round_homogeneous(20, 16),
+            19 * TM.tau_down
+        );
+    }
+
+    #[test]
+    fn afl_updates_more_frequently() {
+        assert!(TM.afl_update_interval() < TM.sfl_round_homogeneous(20, 16));
+        assert_eq!(TM.afl_update_interval(), 150);
+    }
+
+    #[test]
+    fn compute_time_scales_and_floors() {
+        assert_eq!(TM.compute_time(16, 1.0), 160);
+        assert_eq!(TM.compute_time(16, 2.5), 400);
+        assert_eq!(TM.compute_time(0, 1.0), 1, "floored at one tick");
+    }
+
+    #[test]
+    fn channel_reservation() {
+        let mut ch = UplinkChannel::new();
+        assert!(ch.is_free(0));
+        let done = ch.reserve(10, 100);
+        assert_eq!(done, 110);
+        assert!(!ch.is_free(50));
+        assert!(ch.is_free(110));
+    }
+
+    #[test]
+    #[should_panic]
+    fn channel_rejects_double_booking() {
+        let mut ch = UplinkChannel::new();
+        ch.reserve(0, 100);
+        ch.reserve(50, 100);
+    }
+}

@@ -1,0 +1,149 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! Usage from a `harness = false` bench target:
+//!
+//! ```no_run
+//! use csmaafl::util::bench::Bencher;
+//! let mut b = Bencher::new("aggregation");
+//! b.bench("native lerp 5k params", || { /* work */ });
+//! b.report();
+//! ```
+//!
+//! Each case is warmed up, then timed over enough iterations to exceed a
+//! minimum measurement window; mean / p50 / p95 / min are reported.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl CaseResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns / 1e9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Collects benchmark cases and prints a table.
+pub struct Bencher {
+    group: String,
+    warmup: u32,
+    min_window: Duration,
+    max_iters: u64,
+    results: Vec<CaseResult>,
+}
+
+impl Bencher {
+    pub fn new(group: &str) -> Self {
+        Bencher {
+            group: group.to_string(),
+            warmup: 2,
+            min_window: Duration::from_millis(300),
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Lower the measurement window for very slow cases (whole-run benches).
+    pub fn with_window(mut self, window: Duration, max_iters: u64) -> Self {
+        self.min_window = window;
+        self.max_iters = max_iters;
+        self
+    }
+
+    /// Time `f`, recording per-iteration samples.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &CaseResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples: Vec<f64> = Vec::new();
+        let window_start = Instant::now();
+        while window_start.elapsed() < self.min_window
+            && (samples.len() as u64) < self.max_iters
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let result = CaseResult {
+            name: name.to_string(),
+            iters: n as u64,
+            mean_ns: mean,
+            p50_ns: samples[n / 2],
+            p95_ns: samples[(n * 95 / 100).min(n - 1)],
+            min_ns: samples[0],
+        };
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Print the group's table to stdout.
+    pub fn report(&self) {
+        println!("\n== bench group: {} ==", self.group);
+        println!(
+            "{:<44} {:>8} {:>12} {:>12} {:>12} {:>12}",
+            "case", "iters", "mean", "p50", "p95", "min"
+        );
+        for r in &self.results {
+            println!(
+                "{:<44} {:>8} {:>12} {:>12} {:>12} {:>12}",
+                r.name,
+                r.iters,
+                fmt_ns(r.mean_ns),
+                fmt_ns(r.p50_ns),
+                fmt_ns(r.p95_ns),
+                fmt_ns(r.min_ns)
+            );
+        }
+    }
+
+    pub fn results(&self) -> &[CaseResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher::new("t").with_window(Duration::from_millis(20), 100);
+        let r = b.bench("noop-ish", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn formats_scales() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,70 @@
+//! Leveled stderr logger with per-run verbosity (no external crates).
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+pub fn set_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level_enabled(level: Level) -> bool {
+    level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
+    if !level_enabled(level) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed();
+    let tag = match level {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{:>9.3}s {}] {}", t.as_secs_f64(), tag, args);
+}
+
+#[macro_export]
+macro_rules! log_error { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_info { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Trace, format_args!($($a)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(level_enabled(Level::Error));
+        assert!(level_enabled(Level::Warn));
+        assert!(!level_enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(level_enabled(Level::Info));
+        assert!(!level_enabled(Level::Debug));
+    }
+}

@@ -1,0 +1,6 @@
+//! Self-contained utility substrates (offline build: no serde/tokio/clap).
+
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod rng;

@@ -1,0 +1,133 @@
+//! Integration: Sec. III-B exact equivalence between the baseline-AFL
+//! sweep and synchronous FedAvg, checked on *model parameters* (not just
+//! accuracy), plus property-style sweeps of the β solver under random
+//! schedules and weights.
+
+use csmaafl::config::{Algorithm, RunConfig};
+use csmaafl::coordinator::{effective_coefficients, solve_betas};
+use csmaafl::data::{generate, partition, Partition, SynthKind};
+use csmaafl::learner::{BatchCursor, Learner, LinearLearner};
+use csmaafl::model::ParamSet;
+use csmaafl::session::{LearnerKind, Session};
+use csmaafl::util::rng::Rng;
+
+const IMG: usize = 784;
+
+/// Manual one-round FedAvg vs one-sweep baseline AFL on the same local
+/// models: the resulting parameter vectors must agree to float tolerance.
+#[test]
+fn sweep_parameters_match_fedavg_parameters() {
+    let learner = LinearLearner::default();
+    let (train, _test) = generate(SynthKind::Mnist, 200, 50, 11);
+    let shards = partition(&train, 10, Partition::Iid, 11);
+    let w0 = learner.init(7).unwrap();
+
+    // Local models: every client trains from w0.
+    let mut locals: Vec<ParamSet> = Vec::new();
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for s in &shards {
+        let mut cur = BatchCursor::new(s.indices.clone());
+        cur.fill(&train, 8 * learner.batch(), IMG, &mut xs, &mut ys);
+        locals.push(learner.train(&w0, &xs, &ys, 8).unwrap().0);
+    }
+
+    // FedAvg: w = Σ (1/M) w_m.
+    let m = locals.len();
+    let alpha = 1.0 / m as f32;
+    let mut fedavg = ParamSet::zeros(&w0.specs());
+    for l in &locals {
+        fedavg.axpy_inplace(l, alpha);
+    }
+
+    // Baseline AFL: sequential lerp with solved betas over a random
+    // schedule (equivalence must hold for ANY predetermined schedule).
+    let mut order: Vec<usize> = (0..m).collect();
+    Rng::new(3).shuffle(&mut order);
+    let alphas = vec![1.0 / m as f64; m];
+    let betas = solve_betas(&alphas).unwrap();
+    let mut w = w0.clone();
+    for (t, &c) in order.iter().enumerate() {
+        w.lerp_inplace(&locals[c], betas[t] as f32);
+    }
+
+    let diff = w.max_abs_diff(&fedavg);
+    assert!(diff < 1e-5, "parameter divergence {diff}");
+    // And the start point is irrelevant (β_1 = 0 wipes it).
+    let mut w2 = learner.init(999).unwrap();
+    for (t, &c) in order.iter().enumerate() {
+        w2.lerp_inplace(&locals[c], betas[t] as f32);
+    }
+    assert!(w2.max_abs_diff(&fedavg) < 1e-5, "init independence");
+}
+
+/// The full engines (virtual-time and all) agree after one round/sweep.
+#[test]
+fn engine_level_equivalence_one_round() {
+    let mut cfg = RunConfig::default();
+    cfg.clients = 8;
+    cfg.samples_per_client = 30;
+    cfg.test_samples = 200;
+    cfg.local_steps = 6;
+    cfg.max_slots = 1.2;
+    cfg.eval_every_slots = 1.2;
+    cfg.jitter = 0.0;
+    let session = Session::new(cfg, LearnerKind::Linear, "artifacts").unwrap();
+    let sfl = session.run_with(|c| c.algorithm = Algorithm::Sfl).unwrap();
+    let base = session
+        .run_with(|c| c.algorithm = Algorithm::AflBaseline)
+        .unwrap();
+    assert_eq!(sfl.points.len(), base.points.len());
+    let diff = (sfl.final_accuracy() - base.final_accuracy()).abs();
+    assert!(diff < 0.011, "accuracy diverged: {diff}");
+    // One aggregation per client per sweep, and the same number of
+    // global cycles as the synchronous run.
+    assert_eq!(base.aggregations % 8, 0, "partial sweep recorded");
+    assert_eq!(
+        base.aggregations / 8,
+        sfl.aggregations,
+        "sweep count != round count"
+    );
+}
+
+/// Longer-horizon: baseline AFL tracks SFL round-for-round (both improve
+/// and stay close) — the Sec. III-B "same learning performance" claim.
+#[test]
+fn multi_round_tracking() {
+    let mut cfg = RunConfig::default();
+    cfg.clients = 8;
+    cfg.samples_per_client = 40;
+    cfg.test_samples = 300;
+    cfg.local_steps = 8;
+    cfg.max_slots = 12.0;
+    cfg.jitter = 0.0;
+    let session = Session::new(cfg, LearnerKind::Linear, "artifacts").unwrap();
+    let sfl = session.run_with(|c| c.algorithm = Algorithm::Sfl).unwrap();
+    let base = session
+        .run_with(|c| c.algorithm = Algorithm::AflBaseline)
+        .unwrap();
+    // Both learn.
+    assert!(sfl.final_accuracy() > 0.5, "sfl {:.3}", sfl.final_accuracy());
+    assert!(base.final_accuracy() > 0.5, "base {:.3}", base.final_accuracy());
+    // And land close (sweeps lag at most one round behind rounds since the
+    // AFL sweep costs (M-1)·τ^d more).
+    let gap = (sfl.final_accuracy() - base.final_accuracy()).abs();
+    assert!(gap < 0.1, "terminal gap {gap}");
+}
+
+/// β solver round-trips arbitrary weights (property sweep).
+#[test]
+fn beta_solver_roundtrip_property() {
+    for seed in 0..200u64 {
+        let mut r = Rng::new(seed);
+        let m = 2 + r.below(30) as usize;
+        let raw: Vec<f64> = (0..m).map(|_| 0.01 + r.f64()).collect();
+        let s: f64 = raw.iter().sum();
+        let alpha: Vec<f64> = raw.into_iter().map(|v| v / s).collect();
+        let betas = solve_betas(&alpha).unwrap();
+        let coeff = effective_coefficients(&betas);
+        for (a, c) in alpha.iter().zip(&coeff) {
+            assert!((a - c).abs() < 1e-9, "seed {seed}");
+        }
+    }
+}

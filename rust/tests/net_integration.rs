@@ -1,0 +1,70 @@
+//! Integration: the TCP deployment runtime (leader + workers over
+//! loopback) reaches the same kind of result as the simulator.
+
+use csmaafl::data::{generate, partition, Partition, SynthKind};
+use csmaafl::learner::{Learner, LinearLearner};
+use csmaafl::net::{run_leader, run_worker, LeaderConfig, WorkerConfig};
+
+fn run_federation(port: u16, clients: usize, iterations: u64) -> (f64, Vec<u64>) {
+    let (train, test) = generate(SynthKind::Mnist, 300, 150, 9);
+    let shards = partition(&train, clients, Partition::Iid, 9);
+    let learner = LinearLearner::default();
+    let w0 = learner.init(9).unwrap();
+    let addr = format!("127.0.0.1:{port}");
+
+    let leader = std::thread::spawn({
+        let cfg = LeaderConfig {
+            bind: addr.clone(),
+            clients,
+            max_iterations: iterations,
+            gamma: 0.2,
+            mu_rho: 0.1,
+        };
+        let w0 = w0.clone();
+        move || run_leader(&cfg, w0)
+    });
+    std::thread::sleep(std::time::Duration::from_millis(100));
+
+    let mut handles = Vec::new();
+    for (i, shard) in shards.into_iter().enumerate() {
+        let train = train.clone();
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let learner = LinearLearner::default();
+            run_worker(&WorkerConfig {
+                connect: addr,
+                name: format!("w{i}"),
+                learner: &learner,
+                data: &train,
+                indices: shard.indices,
+                local_steps: 6,
+            })
+        }));
+    }
+    let report = leader.join().unwrap().unwrap();
+    let mut uploads = Vec::new();
+    for h in handles {
+        uploads.push(h.join().unwrap().unwrap());
+    }
+    let (acc, _) = learner.evaluate(&report.final_model, &test).unwrap();
+    assert_eq!(report.aggregations, iterations);
+    (acc, uploads)
+}
+
+#[test]
+fn loopback_federation_learns() {
+    let (acc, uploads) = run_federation(47911, 4, 120);
+    assert!(acc > 0.55, "accuracy {acc}");
+    // Every worker contributed.
+    assert!(uploads.iter().all(|&u| u > 0), "{uploads:?}");
+    // Uploads + in-flight shutdown race: total delivered >= iterations.
+    let total: u64 = uploads.iter().sum();
+    assert!(total >= 120, "total uploads {total}");
+}
+
+#[test]
+fn single_worker_federation() {
+    let (acc, uploads) = run_federation(47912, 1, 40);
+    assert!(acc > 0.3, "accuracy {acc}");
+    assert_eq!(uploads.len(), 1);
+}

@@ -1,0 +1,178 @@
+//! Integration over the real PJRT runtime (requires `make artifacts`).
+//!
+//! These tests exercise the production path: HLO-text loading, the AOT
+//! CNN's train/eval/aggregate entry points, the PJRT-vs-native aggregator
+//! ablation, and a short end-to-end federated run on the CNN.
+//!
+//! They are skipped (with a loud message) when artifacts/ is absent so
+//! `cargo test` still works in a fresh checkout; `make test` always
+//! builds artifacts first.
+
+use csmaafl::config::{AggregatorKind, Algorithm, RunConfig};
+use csmaafl::learner::{Learner, PjrtLearner};
+use csmaafl::runtime::{Engine, Manifest};
+use csmaafl::session::{LearnerKind, Session};
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIPPING pjrt integration test: {e:#}");
+            None
+        }
+    }
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match manifest() {
+            Some(m) => m,
+            None => return,
+        }
+    };
+}
+
+#[test]
+fn init_is_deterministic_and_spec_conformant() {
+    let m = require_artifacts!();
+    let engine = Engine::from_manifest(&m, "mnist_small").unwrap();
+    let a = engine.init(5).unwrap();
+    let b = engine.init(5).unwrap();
+    let c = engine.init(6).unwrap();
+    assert_eq!(a.max_abs_diff(&b), 0.0, "same seed, same params");
+    assert!(a.max_abs_diff(&c) > 0.0, "different seed differs");
+    let specs = engine.model().params.clone();
+    assert_eq!(a.tensors.len(), specs.len());
+    for (t, s) in a.tensors.iter().zip(&specs) {
+        assert_eq!(t.spec.shape, s.shape);
+    }
+    assert!(a.is_finite());
+}
+
+#[test]
+fn train_step_reduces_loss_on_fixed_batch() {
+    let m = require_artifacts!();
+    let engine = Engine::from_manifest(&m, "mnist_small").unwrap();
+    let model = engine.model().clone();
+    let img = model.image_numel();
+    // Fixed easy batch: class = brightness pattern.
+    let mut xs = vec![0.0f32; model.batch * img];
+    let ys: Vec<i32> = (0..model.batch as i32).collect();
+    for b in 0..model.batch {
+        for p in 0..img {
+            xs[b * img + p] = if p % (b + 2) == 0 { 0.9 } else { 0.05 };
+        }
+    }
+    let mut params = engine.init(0).unwrap();
+    let (_, first_loss) = engine.train_step(&params, &xs, &ys).unwrap();
+    for _ in 0..40 {
+        params = engine.train_step(&params, &xs, &ys).unwrap().0;
+    }
+    let (_, last_loss) = engine.train_step(&params, &xs, &ys).unwrap();
+    assert!(
+        last_loss < first_loss * 0.5,
+        "loss {first_loss} -> {last_loss}"
+    );
+    assert!(params.is_finite());
+}
+
+#[test]
+fn train_chunk_matches_sequential_steps() {
+    let m = require_artifacts!();
+    let engine = Engine::from_manifest(&m, "mnist_small").unwrap();
+    let model = engine.model().clone();
+    let img = model.image_numel();
+    let s = model.chunk_steps;
+    let n = s * model.batch;
+    let xs: Vec<f32> = (0..n * img).map(|i| ((i * 37) % 97) as f32 / 97.0).collect();
+    let ys: Vec<i32> = (0..n).map(|i| (i % 10) as i32).collect();
+    let p0 = engine.init(1).unwrap();
+
+    let (chunked, _) = engine.train_chunk(&p0, &xs, &ys).unwrap();
+    let mut seq = p0;
+    for step in 0..s {
+        let xs_s = &xs[step * model.batch * img..(step + 1) * model.batch * img];
+        let ys_s = &ys[step * model.batch..(step + 1) * model.batch];
+        seq = engine.train_step(&seq, xs_s, ys_s).unwrap().0;
+    }
+    let diff = chunked.max_abs_diff(&seq);
+    assert!(diff < 1e-4, "chunk vs sequential diverged: {diff}");
+}
+
+#[test]
+fn pjrt_aggregate_matches_native() {
+    let m = require_artifacts!();
+    let engine = Engine::from_manifest(&m, "mnist_small").unwrap();
+    let a = engine.init(2).unwrap();
+    let b = engine.init(3).unwrap();
+    for beta in [0.0f32, 0.25, 0.5, 0.9, 1.0] {
+        let via_pjrt = engine.aggregate(&a, &b, beta).unwrap();
+        let mut via_native = a.clone();
+        via_native.lerp_inplace(&b, beta);
+        let diff = via_pjrt.max_abs_diff(&via_native);
+        assert!(diff < 1e-6, "beta={beta}: {diff}");
+    }
+}
+
+#[test]
+fn learner_handles_non_chunk_multiple_steps() {
+    let m = require_artifacts!();
+    let engine = Engine::from_manifest(&m, "mnist_small").unwrap();
+    let model = engine.model().clone();
+    let img = model.image_numel();
+    let learner = PjrtLearner::new(engine);
+    let p = learner.init(0).unwrap();
+    // steps = chunk + 3 exercises both the fused and the remainder path.
+    let steps = model.chunk_steps + 3;
+    let n = steps * model.batch;
+    let xs: Vec<f32> = (0..n * img).map(|i| ((i * 13) % 89) as f32 / 89.0).collect();
+    let ys: Vec<i32> = (0..n).map(|i| (i % 10) as i32).collect();
+    let (p2, loss) = learner.train(&p, &xs, &ys, steps).unwrap();
+    assert!(loss.is_finite());
+    assert!(p2.max_abs_diff(&p) > 0.0);
+}
+
+#[test]
+fn cnn_federated_short_run_learns() {
+    let _ = require_artifacts!();
+    let mut cfg = RunConfig::default();
+    cfg.clients = 6;
+    cfg.samples_per_client = 40;
+    cfg.test_samples = 100;
+    cfg.local_steps = 32;
+    cfg.max_slots = 10.0;
+    let session = Session::new(cfg, LearnerKind::Pjrt, "artifacts").unwrap();
+    let run = session
+        .run_with(|c| c.algorithm = Algorithm::Csmaafl)
+        .unwrap();
+    let first = run.points.first().unwrap().accuracy;
+    let last = run.final_accuracy();
+    assert!(last > first + 0.2, "CNN failed to learn: {first} -> {last}");
+}
+
+#[test]
+fn aggregator_ablation_same_result() {
+    let _ = require_artifacts!();
+    let mut cfg = RunConfig::default();
+    cfg.clients = 4;
+    cfg.samples_per_client = 20;
+    cfg.test_samples = 100;
+    cfg.local_steps = 8;
+    cfg.max_slots = 2.0;
+    let session = Session::new(cfg, LearnerKind::Pjrt, "artifacts").unwrap();
+    let native = session
+        .run_with(|c| c.aggregator = AggregatorKind::Native)
+        .unwrap();
+    let pjrt = session
+        .run_with(|c| c.aggregator = AggregatorKind::Pjrt)
+        .unwrap();
+    assert_eq!(native.aggregations, pjrt.aggregations);
+    for (a, b) in native.points.iter().zip(&pjrt.points) {
+        assert!(
+            (a.accuracy - b.accuracy).abs() < 0.02,
+            "aggregator paths diverged: {} vs {}",
+            a.accuracy,
+            b.accuracy
+        );
+    }
+}

@@ -1,0 +1,326 @@
+//! Property-style test sweeps over coordinator invariants (the offline
+//! vendor set has no proptest; these are seeded random-input sweeps with
+//! the same intent — every case runs hundreds of random instances).
+
+use csmaafl::coordinator::scheduler::{SchedulerPolicy, UploadScheduler};
+use csmaafl::coordinator::staleness::{local_weight, StalenessTracker};
+use csmaafl::model::{ParamSet, Tensor, TensorSpec};
+use csmaafl::sim::EventQueue;
+use csmaafl::util::json::{self, Json};
+use csmaafl::util::rng::Rng;
+
+// ---------------------------------------------------------------- sched
+
+/// No starvation: under arbitrary request patterns, every filed request
+/// is eventually granted once the request stream stops.
+#[test]
+fn scheduler_no_starvation() {
+    for seed in 0..100u64 {
+        let mut r = Rng::new(seed);
+        let m = 2 + r.below(20) as usize;
+        for policy in [SchedulerPolicy::OldestModelFirst, SchedulerPolicy::Fifo] {
+            let mut s = UploadScheduler::new(policy, m);
+            let mut outstanding = vec![false; m];
+            let mut filed = 0u64;
+            let mut granted = 0u64;
+            for t in 0..500u64 {
+                let c = r.below(m as u64) as usize;
+                if !outstanding[c] {
+                    s.request(c, t);
+                    outstanding[c] = true;
+                    filed += 1;
+                }
+                if r.below(3) == 0 {
+                    if let Some(w) = s.grant() {
+                        outstanding[w] = false;
+                        granted += 1;
+                    }
+                }
+            }
+            while let Some(w) = s.grant() {
+                outstanding[w] = false;
+                granted += 1;
+            }
+            assert_eq!(filed, granted, "seed {seed} policy {policy:?}");
+            assert!(outstanding.iter().all(|o| !o));
+        }
+    }
+}
+
+/// Grant conservation: slots_granted equals the sum of per-client grants,
+/// and Jain fairness stays in (0, 1].
+#[test]
+fn scheduler_accounting_invariants() {
+    for seed in 0..100u64 {
+        let mut r = Rng::new(seed * 7 + 1);
+        let m = 1 + r.below(30) as usize;
+        let mut s = UploadScheduler::new(SchedulerPolicy::OldestModelFirst, m);
+        let mut outstanding = vec![false; m];
+        for t in 0..300u64 {
+            let c = r.below(m as u64) as usize;
+            if !outstanding[c] {
+                s.request(c, t);
+                outstanding[c] = true;
+            }
+            if r.below(2) == 0 {
+                if let Some(w) = s.grant() {
+                    outstanding[w] = false;
+                }
+            }
+        }
+        let total: u64 = s.grants().iter().sum();
+        assert_eq!(total, s.slots_granted());
+        let j = s.jain_fairness();
+        assert!(j > 0.0 && j <= 1.0 + 1e-12, "jain {j}");
+    }
+}
+
+/// Round-robin serves clients in strict cyclic order.
+#[test]
+fn round_robin_cyclic_order() {
+    for seed in 0..50u64 {
+        let mut r = Rng::new(seed + 1000);
+        let m = 2 + r.below(10) as usize;
+        let mut s = UploadScheduler::new(SchedulerPolicy::RoundRobin, m);
+        for c in 0..m {
+            s.request(c, r.below(100));
+        }
+        let mut order = Vec::new();
+        while let Some(w) = s.grant() {
+            order.push(w);
+        }
+        assert_eq!(order, (0..m).collect::<Vec<_>>(), "seed {seed}");
+    }
+}
+
+// ------------------------------------------------------------- staleness
+
+/// eq. (11) weight is monotone: non-increasing in j, s, γ; non-decreasing
+/// in μ. Checked over random parameter draws.
+#[test]
+fn staleness_weight_monotonicity() {
+    let mut r = Rng::new(77);
+    for _ in 0..500 {
+        let mu = 0.5 + 50.0 * r.f64();
+        let gamma = 0.05 + r.f64();
+        let j = 1 + r.below(5000);
+        let s = 1 + r.below(200);
+        let w = local_weight(mu, gamma, j, s);
+        assert!((0.0..=1.0).contains(&w));
+        assert!(local_weight(mu, gamma, j + 1 + r.below(100), s) <= w + 1e-12);
+        assert!(local_weight(mu, gamma, j, s + 1 + r.below(100)) <= w + 1e-12);
+        assert!(local_weight(mu, gamma * (1.0 + r.f64()), j, s) <= w + 1e-12);
+        assert!(local_weight(mu * (1.0 + r.f64()), gamma, j, s) + 1e-12 >= w);
+    }
+}
+
+/// The μ tracker stays within the observed range (after seeding).
+#[test]
+fn staleness_tracker_bounded_by_observations() {
+    for seed in 0..50u64 {
+        let mut r = Rng::new(seed * 3 + 5);
+        let rho = 0.05 + 0.9 * r.f64();
+        let mut t = StalenessTracker::new(rho);
+        let mut lo = f64::MAX;
+        let mut hi: f64 = 1.0; // observe() floors staleness at 1
+        for _ in 0..200 {
+            let s = r.below(100);
+            lo = lo.min((s as f64).max(1.0));
+            hi = hi.max(s as f64);
+            t.observe(s);
+            assert!(
+                t.mu() >= lo - 1e-9 && t.mu() <= hi + 1e-9,
+                "mu {} outside [{lo}, {hi}]",
+                t.mu()
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------ aggregation
+
+fn random_pset(r: &mut Rng, tensors: usize, max_len: usize) -> ParamSet {
+    ParamSet {
+        tensors: (0..tensors)
+            .map(|i| {
+                let n = 1 + r.below(max_len as u64) as usize;
+                Tensor::from_data(
+                    TensorSpec {
+                        name: format!("t{i}"),
+                        shape: vec![n],
+                    },
+                    (0..n).map(|_| r.normal()).collect(),
+                )
+            })
+            .collect(),
+    }
+}
+
+/// lerp is a convex combination: every element stays inside the
+/// elementwise interval, endpoints are exact.
+#[test]
+fn lerp_convexity_property() {
+    let mut r = Rng::new(13);
+    for _ in 0..200 {
+        let g = random_pset(&mut r, 3, 50);
+        let l = {
+            // Same shapes, fresh values.
+            let mut l = g.clone();
+            for t in &mut l.tensors {
+                for v in &mut t.data {
+                    *v = r.normal();
+                }
+            }
+            l
+        };
+        let beta = r.f32();
+        let mut out = g.clone();
+        out.lerp_inplace(&l, beta);
+        for ((to, tg), tl) in out.tensors.iter().zip(&g.tensors).zip(&l.tensors) {
+            for ((o, gg), ll) in to.data.iter().zip(&tg.data).zip(&tl.data) {
+                let (lo, hi) = (gg.min(*ll), gg.max(*ll));
+                assert!(*o >= lo - 1e-5 && *o <= hi + 1e-5);
+            }
+        }
+        let mut id = g.clone();
+        id.lerp_inplace(&l, 1.0);
+        assert_eq!(id, g);
+        let mut rep = g.clone();
+        rep.lerp_inplace(&l, 0.0);
+        assert_eq!(rep, l);
+    }
+}
+
+/// A sequential solved-β sweep equals the weighted sum for random scalars
+/// — the algebra behind Sec. III-B, fuzzed at the ParamSet level.
+#[test]
+fn sweep_equals_weighted_sum_paramsets() {
+    let mut r = Rng::new(29);
+    for _ in 0..100 {
+        let m = 2 + r.below(12) as usize;
+        let raw: Vec<f64> = (0..m).map(|_| 0.05 + r.f64()).collect();
+        let s: f64 = raw.iter().sum();
+        let alpha: Vec<f64> = raw.into_iter().map(|v| v / s).collect();
+        let betas = csmaafl::coordinator::solve_betas(&alpha).unwrap();
+        let locals: Vec<ParamSet> = (0..m).map(|_| random_pset(&mut r, 1, 8)).collect();
+        // All must share one shape for aggregation; rebuild with shape of 0.
+        let spec = locals[0].specs();
+        let locals: Vec<ParamSet> = (0..m)
+            .map(|_| {
+                let mut p = ParamSet::zeros(&spec);
+                for t in &mut p.tensors {
+                    for v in &mut t.data {
+                        *v = r.normal();
+                    }
+                }
+                p
+            })
+            .collect();
+        let mut fedavg = ParamSet::zeros(&spec);
+        for (a, l) in alpha.iter().zip(&locals) {
+            fedavg.axpy_inplace(l, *a as f32);
+        }
+        let mut w = random_pset(&mut r, 1, 8);
+        w = {
+            let mut p = ParamSet::zeros(&spec);
+            for t in &mut p.tensors {
+                for v in &mut t.data {
+                    *v = r.normal() * 10.0;
+                }
+            }
+            p
+        };
+        for (t, l) in locals.iter().enumerate() {
+            w.lerp_inplace(l, betas[t] as f32);
+        }
+        let diff = w.max_abs_diff(&fedavg);
+        assert!(diff < 1e-4, "diff {diff}");
+    }
+}
+
+// ---------------------------------------------------------------- events
+
+/// Event queue pops monotonically in time under random schedules.
+#[test]
+fn event_queue_monotone_under_fuzz() {
+    for seed in 0..50u64 {
+        let mut r = Rng::new(seed + 500);
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let mut last = 0u64;
+        for i in 0..200u64 {
+            // Schedule 0-3 future events, pop 0-2.
+            for _ in 0..r.below(4) {
+                q.schedule_in(r.below(1000), i);
+            }
+            for _ in 0..r.below(3) {
+                if let Some((t, _)) = q.pop() {
+                    assert!(t >= last, "time went backwards");
+                    last = t;
+                }
+            }
+        }
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= last);
+            last = t;
+        }
+    }
+}
+
+// ------------------------------------------------------------------ json
+
+/// JSON roundtrip fuzz: random documents survive serialize → parse.
+#[test]
+fn json_roundtrip_fuzz() {
+    fn random_json(r: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { r.below(4) } else { r.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(r.below(2) == 0),
+            2 => Json::Int(r.next_u64() as i64 / 1000),
+            3 => {
+                let s: String = (0..r.below(12))
+                    .map(|_| {
+                        let c = r.below(96) as u8 + 32;
+                        c as char
+                    })
+                    .collect();
+                Json::Str(s)
+            }
+            4 => Json::Array(
+                (0..r.below(5))
+                    .map(|_| random_json(r, depth - 1))
+                    .collect(),
+            ),
+            _ => {
+                let mut o = Json::object();
+                for i in 0..r.below(5) {
+                    o.set(&format!("k{i}"), random_json(r, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    for seed in 0..300u64 {
+        let mut r = Rng::new(seed);
+        let doc = random_json(&mut r, 3);
+        let compact = json::parse(&doc.to_string_compact()).unwrap();
+        assert_eq!(doc, compact, "seed {seed}");
+        let pretty = json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(doc, pretty, "seed {seed}");
+    }
+}
+
+/// Config set_field never panics on arbitrary inputs — it returns errors.
+#[test]
+fn config_set_field_total() {
+    let keys = [
+        "algorithm", "clients", "gamma", "dataset", "partition", "tau_up",
+        "scheduler", "aggregator", "garbage_key", "max_slots",
+    ];
+    let vals = ["", "0", "-1", "abc", "1e9", "fedavg", "noniid", "fifo", "π"];
+    let mut cfg = csmaafl::config::RunConfig::default();
+    for k in keys {
+        for v in vals {
+            let _ = cfg.set_field(k, v); // must not panic
+        }
+    }
+}

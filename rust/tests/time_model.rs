@@ -1,0 +1,130 @@
+//! Integration: the simulated event timelines reproduce the paper's
+//! Sec. II-C analytic formulas (the Fig. 2 comparison).
+
+use csmaafl::config::{Algorithm, RunConfig};
+use csmaafl::session::{LearnerKind, Session};
+use csmaafl::sim::{HeterogeneityProfile, TimeModel};
+
+fn homo_cfg() -> RunConfig {
+    let mut c = RunConfig::default();
+    c.clients = 6;
+    c.samples_per_client = 20;
+    c.test_samples = 100;
+    c.local_steps = 8;
+    c.heterogeneity = HeterogeneityProfile::Homogeneous;
+    c.jitter = 0.0;
+    c.max_slots = 4.0;
+    c.eval_every_slots = 1.0;
+    c
+}
+
+/// In the homogeneous setting the SFL engine's virtual round time must be
+/// exactly τ^d + τ + M·τ^u: with eval cadence of one slot == one round,
+/// the recorded iteration counter increments by exactly 1 per slot.
+#[test]
+fn sfl_round_time_matches_formula() {
+    let cfg = homo_cfg();
+    let tm = cfg.time;
+    let expected_round = tm.sfl_round_homogeneous(cfg.clients, cfg.local_steps);
+    let session = Session::new(cfg, LearnerKind::Linear, "artifacts").unwrap();
+    let run = session.run_with(|c| c.algorithm = Algorithm::Sfl).unwrap();
+    // Point k sits at slot k; the model evaluated there has seen exactly k
+    // aggregations (round k completed exactly at slot boundary k).
+    for (k, p) in run.points.iter().enumerate() {
+        assert_eq!(p.ticks as u64, k as u64 * expected_round);
+        assert!(
+            p.iteration == k as u64 || p.iteration == k as u64 + 1,
+            "slot {k}: iteration {}",
+            p.iteration
+        );
+    }
+}
+
+/// AFL steady-state: after the pipeline fills, aggregations arrive every
+/// τ^u + τ^d... but never slower than uploads become available. Check the
+/// aggregate rate over the run sits near the channel bound.
+#[test]
+fn afl_update_rate_near_channel_bound() {
+    let cfg = homo_cfg();
+    let tm = cfg.time;
+    let session = Session::new(cfg.clone(), LearnerKind::Linear, "artifacts").unwrap();
+    let run = session
+        .run_with(|c| c.algorithm = Algorithm::Csmaafl)
+        .unwrap();
+    let total_ticks = run.total_ticks as f64;
+    // Channel-bound upper limit: one aggregation per τ^u.
+    let upper = total_ticks / tm.tau_up as f64;
+    // The paper's steady-state rate: one per (τ^u + τ^d) when the return
+    // download is on the critical path.
+    let lower = total_ticks / (tm.tau_up + tm.tau_down + tm.tau_step * 2) as f64 * 0.5;
+    let aggs = run.aggregations as f64;
+    assert!(
+        aggs <= upper + 1.0,
+        "aggregations {aggs} exceed channel bound {upper}"
+    );
+    assert!(
+        aggs >= lower,
+        "aggregations {aggs} far below steady-state expectation {lower}"
+    );
+}
+
+/// Heterogeneous SFL is gated by the slowest client: slowing one client
+/// stretches every round.
+#[test]
+fn sfl_round_scales_with_straggler() {
+    let mut cfg = homo_cfg();
+    cfg.heterogeneity = HeterogeneityProfile::Extreme {
+        fast_frac: 0.0,
+        slow_frac: 0.2,
+        mid_factor: 1.0,
+        slow_factor: 6.0,
+    };
+    let tm = cfg.time;
+    let expected_round =
+        tm.sfl_round_heterogeneous(cfg.clients, cfg.local_steps, 6.0);
+    let session = Session::new(cfg, LearnerKind::Linear, "artifacts").unwrap();
+    let run = session.run_with(|c| c.algorithm = Algorithm::Sfl).unwrap();
+    assert!(run.points.len() >= 2);
+    let p1 = &run.points[1];
+    assert_eq!(p1.ticks as u64, expected_round, "slot unit = straggler round");
+}
+
+/// AFL's whole point: within one SFL-round horizon, AFL updates the global
+/// model many times while SFL updates once.
+#[test]
+fn afl_updates_more_frequently_than_sfl() {
+    let cfg = homo_cfg();
+    let session = Session::new(cfg, LearnerKind::Linear, "artifacts").unwrap();
+    let sfl = session.run_with(|c| c.algorithm = Algorithm::Sfl).unwrap();
+    let afl = session
+        .run_with(|c| c.algorithm = Algorithm::Csmaafl)
+        .unwrap();
+    assert!(
+        afl.aggregations >= 4 * sfl.aggregations,
+        "afl {} vs sfl {}",
+        afl.aggregations,
+        sfl.aggregations
+    );
+}
+
+/// The analytic formulas themselves (unit-level identities used by Fig 2).
+#[test]
+fn formula_identities() {
+    let tm = TimeModel {
+        tau_down: 50,
+        tau_step: 10,
+        tau_up: 100,
+    };
+    for m in [1usize, 5, 20, 100] {
+        for e in [1usize, 16, 120] {
+            let sfl = tm.sfl_round_homogeneous(m, e);
+            let afl = tm.afl_sweep_homogeneous(m, e);
+            // AFL sweep = SFL round + (M-1)·τ^d (the paper's comparison).
+            assert_eq!(afl, sfl + (m as u64 - 1) * tm.tau_down);
+            // AFL update interval is much shorter than a round for M > 2.
+            if m > 2 {
+                assert!(tm.afl_update_interval() * 2 < sfl);
+            }
+        }
+    }
+}
