@@ -1,0 +1,32 @@
+# Build entry points referenced by the docs and runtime error messages.
+#
+#   make artifacts   AOT-lower the L2/L1 JAX+Pallas programs to HLO text
+#                    + manifest.json under artifacts/ (requires JAX).
+#   make build       Release build of the Rust crate (default features).
+#   make test        Rust test suite, default features (offline, no JAX).
+#   make test-pjrt   Artifacts + Rust tests with the `pjrt` feature.
+#   make test-python Kernel/model tests for the artifact pipeline.
+
+# The artifacts location is a contract, not a knob: the Rust tests,
+# benches and examples resolve <repo-root>/artifacts (anchored via
+# CARGO_MANIFEST_DIR), and `repro` defaults to ./artifacts from the
+# repo root.
+CONFIGS ?= mnist_small,fashion_small
+
+.PHONY: artifacts build test test-pjrt test-python
+
+artifacts:
+	cd python && python3 -m compile.aot \
+		--out-dir ../artifacts --configs $(CONFIGS)
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+test-pjrt: artifacts
+	cargo test -q --features pjrt
+
+test-python:
+	cd python && python3 -m pytest tests -q

@@ -40,8 +40,10 @@ fn main() {
         println!("  -> {:.1} GB/s effective ({} params)", gbps, n);
     }
 
-    // PJRT/Pallas aggregate artifact (requires `make artifacts`).
-    match Engine::load("artifacts", "mnist_small") {
+    // PJRT/Pallas aggregate artifact (requires `make artifacts`). The
+    // path is anchored: cargo runs benches with CWD = rust/, but the
+    // artifacts live at the repository root.
+    match Engine::load(concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts"), "mnist_small") {
         Ok(engine) => {
             let a = engine.init(1).unwrap();
             let c = engine.init(2).unwrap();

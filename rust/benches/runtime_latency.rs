@@ -10,7 +10,7 @@ use csmaafl::util::rng::Rng;
 use std::time::Duration;
 
 fn main() {
-    let engine = match Engine::load("artifacts", "mnist_small") {
+    let engine = match Engine::load(concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts"), "mnist_small") {
         Ok(e) => e,
         Err(e) => {
             eprintln!("runtime_latency bench requires artifacts: {e:#}");
@@ -65,7 +65,7 @@ fn main() {
     // L1 ablation: identical CNN with XLA-native dense layers instead of
     // the interpret-mode Pallas matmul (build with
     // `--configs ...,mnist_small_nopallas`).
-    let nopallas_chunk = match Engine::load("artifacts", "mnist_small_nopallas") {
+    let nopallas_chunk = match Engine::load(concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts"), "mnist_small_nopallas") {
         Ok(e2) => Some(
             b.bench("train_chunk, XLA-native dense (ablation)", || {
                 let _ = e2.train_chunk(&params, &xsc, &ysc).unwrap();
@@ -79,7 +79,7 @@ fn main() {
     };
 
     // L1 extension: convolutions ALSO via Pallas (im2col + tiled matmul).
-    if let Ok(e4) = Engine::load("artifacts", "mnist_small_pallasconv") {
+    if let Ok(e4) = Engine::load(concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts"), "mnist_small_pallasconv") {
         b.bench("train_chunk, pallas conv too (extension)", || {
             let _ = e4.train_chunk(&params, &xsc, &ysc).unwrap();
         });
@@ -87,7 +87,7 @@ fn main() {
 
     // L2 ablation: train_chunk with the scan left rolled (the default
     // artifact ships unroll=8 after the §Perf pass).
-    let rolled_chunk = match Engine::load("artifacts", "mnist_small_rolled") {
+    let rolled_chunk = match Engine::load(concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts"), "mnist_small_rolled") {
         Ok(e3) => Some(
             b.bench("train_chunk, scan rolled (ablation)", || {
                 let _ = e3.train_chunk(&params, &xsc, &ysc).unwrap();

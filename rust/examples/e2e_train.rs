@@ -1,19 +1,25 @@
 //! End-to-end validation driver (EXPERIMENTS.md §E2E).
 //!
-//! Exercises the full three-layer stack on a real small workload: the AOT
-//! CNN (L1 Pallas matmul + aggregation kernels inside L2 JAX programs,
-//! executed from the L3 Rust coordinator through PJRT) trained federatedly
-//! on synthetic MNIST-like data — FedAvg vs CSMAAFL, paired — and logs
-//! both loss/accuracy curves plus the early-acceleration headline metric.
+//! Exercises the full stack on a real small workload: FedAvg vs CSMAAFL,
+//! paired on synthetic MNIST-like data, logging both loss/accuracy
+//! curves plus the early-acceleration headline metric. Runs on the
+//! build's default learner (artifact-free pure Rust); switching the
+//! `Session` to `LearnerKind::Pjrt` drives the AOT CNN instead (L1
+//! Pallas matmul + aggregation kernels inside L2 JAX programs, executed
+//! from the L3 Rust coordinator through PJRT).
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example e2e_train
+//! cargo run --release --example e2e_train
 //! ```
 
 use anyhow::Result;
 use csmaafl::config::{Algorithm, RunConfig};
 use csmaafl::metrics::write_series_csv;
 use csmaafl::session::{LearnerKind, Session};
+
+// Anchored so the PJRT path finds repo-root artifacts/ regardless of
+// the invocation CWD (cargo may run from the package dir rust/).
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
 
 fn main() -> Result<()> {
     let mut cfg = RunConfig::default();
@@ -24,7 +30,9 @@ fn main() -> Result<()> {
     cfg.max_slots = 25.0;
     cfg.gamma = 0.2;
 
-    let session = Session::new(cfg, LearnerKind::Pjrt, "artifacts")?;
+    // Switch to LearnerKind::Pjrt for full CNN fidelity (needs
+    // `--features pjrt`, artifacts, and a PJRT-bound runtime::xla).
+    let session = Session::new(cfg, LearnerKind::default_for_build(), ARTIFACTS)?;
 
     println!("== running FedAvg (synchronous comparator) ==");
     let fedavg = session.run_with(|c| c.algorithm = Algorithm::Sfl)?;

@@ -1,16 +1,21 @@
 //! Quickstart: the smallest end-to-end CSMAAFL run.
 //!
-//! Loads the AOT CNN artifacts, builds a tiny federation (8 clients,
-//! synthetic MNIST-like data), runs CSMAAFL for 10 relative time slots and
-//! prints the accuracy curve.
+//! Builds a tiny federation (8 clients, synthetic MNIST-like data),
+//! runs CSMAAFL for 10 relative time slots and prints the accuracy
+//! curve — on the build's default learner (artifact-free pure Rust;
+//! see [`LearnerKind::default_for_build`]).
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
 use anyhow::Result;
 use csmaafl::config::RunConfig;
 use csmaafl::session::{LearnerKind, Session};
+
+// Anchored so the PJRT path finds repo-root artifacts/ regardless of
+// the invocation CWD (cargo may run from the package dir rust/).
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
 
 fn main() -> Result<()> {
     let mut cfg = RunConfig::default();
@@ -20,9 +25,9 @@ fn main() -> Result<()> {
     cfg.local_steps = 16;
     cfg.max_slots = 10.0;
 
-    // LearnerKind::Pjrt executes the AOT CNN; switch to Linear for an
-    // artifact-free dry run.
-    let session = Session::new(cfg, LearnerKind::Pjrt, "artifacts")?;
+    // Switch to LearnerKind::Pjrt for the AOT CNN (needs `--features
+    // pjrt`, artifacts, and a PJRT-bound runtime::xla).
+    let session = Session::new(cfg, LearnerKind::default_for_build(), ARTIFACTS)?;
     let run = session.run()?;
 
     println!("\nCSMAAFL quickstart — accuracy vs relative time slot");

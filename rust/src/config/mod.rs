@@ -25,6 +25,8 @@ pub enum Algorithm {
 }
 
 impl Algorithm {
+    /// Parse a CLI/JSON spelling (`fedavg`, `afl-naive`, `baseline`,
+    /// `csmaafl`, ...); returns `None` for unknown names.
     pub fn parse(s: &str) -> Option<Algorithm> {
         match s.to_ascii_lowercase().as_str() {
             "sfl" | "fedavg" => Some(Algorithm::Sfl),
@@ -35,6 +37,7 @@ impl Algorithm {
         }
     }
 
+    /// Canonical series label used in CSVs, JSON records and figures.
     pub fn name(&self) -> &'static str {
         match self {
             Algorithm::Sfl => "fedavg",
@@ -55,6 +58,7 @@ pub enum AggregatorKind {
 }
 
 impl AggregatorKind {
+    /// Parse a CLI/JSON spelling (`native`, `pjrt`/`pallas`).
     pub fn parse(s: &str) -> Option<AggregatorKind> {
         match s.to_ascii_lowercase().as_str() {
             "native" => Some(AggregatorKind::Native),
@@ -67,14 +71,19 @@ impl AggregatorKind {
 /// Full description of one federated run.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
+    /// Which federated algorithm the run executes.
     pub algorithm: Algorithm,
     /// Artifact model config name (manifest key), e.g. `mnist_small`.
     pub model_config: String,
     /// Number of clients M.
     pub clients: usize,
+    /// Training samples owned by each client (equal shards ⇒ uniform α).
     pub samples_per_client: usize,
+    /// Held-out test-set size.
     pub test_samples: usize,
+    /// Which synthetic dataset to generate.
     pub dataset: SynthKind,
+    /// How the training set is split across clients (IID vs two-class).
     pub partition: Partition,
     /// Base local SGD steps E per upload (adaptive policy scales this).
     pub local_steps: usize,
@@ -82,8 +91,11 @@ pub struct RunConfig {
     pub gamma: f64,
     /// μ_ji EMA rate.
     pub mu_rho: f64,
+    /// Root seed for data synthesis, partitioning, speeds and init.
     pub seed: u64,
+    /// Sec. II-C communication/computation time parameters.
     pub time: TimeModel,
+    /// How per-client compute speed factors are drawn.
     pub heterogeneity: HeterogeneityProfile,
     /// Per-round multiplicative compute jitter (0.1 = ±10%).
     pub jitter: f64,
@@ -93,6 +105,7 @@ pub struct RunConfig {
     pub eval_every_slots: f64,
     /// Sec. III-C adaptive local-iteration policy on/off.
     pub adaptive_iters: bool,
+    /// Which eq.-(3) aggregation implementation the server uses.
     pub aggregator: AggregatorKind,
     /// Upload-slot arbitration policy (AFL engines).
     pub scheduler: SchedulerPolicy,
@@ -137,6 +150,8 @@ impl Default for RunConfig {
 }
 
 impl RunConfig {
+    /// Check cross-field invariants; every entry point calls this before
+    /// running so misconfigurations fail fast with a named field.
     pub fn validate(&self) -> Result<()> {
         if self.clients == 0 {
             bail!("clients must be > 0");
@@ -183,6 +198,8 @@ impl RunConfig {
         Ok(cfg)
     }
 
+    /// Build a config from a parsed JSON object: defaults first, then
+    /// every present key applied through [`RunConfig::set_field`].
     pub fn from_json(j: &Json) -> Result<RunConfig> {
         let mut cfg = RunConfig::default();
         let obj = j.as_object().ok_or_else(|| anyhow!("config must be an object"))?;
@@ -238,6 +255,8 @@ impl RunConfig {
         Ok(())
     }
 
+    /// Serialize to the JSON object form accepted by
+    /// [`RunConfig::from_json`] (run-record provenance).
     pub fn to_json(&self) -> Json {
         let mut o = Json::object();
         o.set("algorithm", Json::Str(self.algorithm.name().into()))

@@ -27,7 +27,12 @@ pub enum BetaPolicy {
     /// Sec. III-A: reuse the SFL coefficient (β_j = 1 - α_m).
     NaiveAlpha,
     /// Sec. III-C eq. (11): staleness-aware with moving average μ.
-    Staleness { gamma: f64, rho: f64 },
+    Staleness {
+        /// The γ hyper-parameter of eq. (11).
+        gamma: f64,
+        /// EMA rate of the μ_ji staleness tracker.
+        rho: f64,
+    },
 }
 
 #[derive(Debug)]
@@ -64,6 +69,9 @@ pub fn adaptive_steps(base: usize, factor: f64, enabled: bool) -> usize {
     ((base as f64 / factor).round() as usize).clamp(1, base * 4)
 }
 
+/// Run the event-driven asynchronous engine: Algorithm 1 with the given
+/// β policy (naive vs eq.-11 staleness-aware) and upload-slot
+/// arbitration policy. `label` names the emitted series.
 pub fn run_afl(
     ctx: &FlContext<'_>,
     beta_policy: BetaPolicy,

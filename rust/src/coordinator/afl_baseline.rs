@@ -17,6 +17,9 @@ use crate::metrics::RunResult;
 use crate::sim::ComputeModel;
 use crate::util::rng::Rng;
 
+/// Run the Sec. III-B baseline: predetermined fastest-first sweeps whose
+/// solved β coefficients make every M-upload sweep reproduce one
+/// synchronous FedAvg round exactly.
 pub fn run_afl_baseline(ctx: &FlContext<'_>) -> Result<RunResult> {
     let cfg = ctx.cfg;
     let m = cfg.clients;

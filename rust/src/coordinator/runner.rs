@@ -16,12 +16,17 @@ use crate::sim::Ticks;
 
 /// Everything an engine needs to execute one run.
 pub struct FlContext<'a> {
+    /// The run's full configuration.
     pub cfg: &'a RunConfig,
+    /// Local trainer/evaluator shared by every client.
     pub learner: &'a dyn Learner,
     /// Needed only when `cfg.aggregator == Pjrt`.
     pub engine: Option<&'a Engine>,
+    /// The full training set (clients index into it via shards).
     pub train: &'a Dataset,
+    /// Per-client sample-index shards.
     pub shards: &'a [ClientShard],
+    /// Held-out test set for the evaluation cadence.
     pub test: &'a Dataset,
 }
 
@@ -49,10 +54,10 @@ impl<'a> FlContext<'a> {
 ///
 /// The paper's figures plot test accuracy against *relative time slots*
 /// (one slot = one synchronous round under the run's time model). The
-/// recorder owns that axis: engines call [`catch_up`] with the current
-/// global model right *before* every aggregation at time `T`; every
-/// pending cadence point strictly before `T` is evaluated with the model
-/// that was in force at that point.
+/// recorder owns that axis: engines call [`Recorder::catch_up`] with the
+/// current global model right *before* every aggregation at time `T`;
+/// every pending cadence point strictly before `T` is evaluated with the
+/// model that was in force at that point.
 pub struct Recorder<'a> {
     ctx: &'a FlContext<'a>,
     /// Ticks per relative slot.
@@ -61,11 +66,14 @@ pub struct Recorder<'a> {
     every_ticks: f64,
     /// Index of the next cadence point.
     next_idx: u64,
+    /// Evaluation points recorded so far, in slot order.
     pub points: Vec<EvalPoint>,
     started: std::time::Instant,
 }
 
 impl<'a> Recorder<'a> {
+    /// Build a recorder whose x-axis unit is `slot_ticks` virtual ticks
+    /// (one synchronous round under the run's time model).
     pub fn new(ctx: &'a FlContext<'a>, slot_ticks: Ticks) -> Result<Recorder<'a>> {
         let slot_ticks = slot_ticks.max(1) as f64;
         Ok(Recorder {
@@ -78,6 +86,7 @@ impl<'a> Recorder<'a> {
         })
     }
 
+    /// Virtual ticks per relative time slot.
     pub fn slot_ticks(&self) -> f64 {
         self.slot_ticks
     }
@@ -126,6 +135,7 @@ impl<'a> Recorder<'a> {
         Ok(())
     }
 
+    /// Real time elapsed since the recorder was created.
     pub fn wallclock_secs(&self) -> f64 {
         self.started.elapsed().as_secs_f64()
     }

@@ -22,6 +22,8 @@ pub enum SchedulerPolicy {
 }
 
 impl SchedulerPolicy {
+    /// Parse a CLI/JSON spelling (`oldest`/`csmaafl`, `fifo`,
+    /// `roundrobin`/`rr`).
     pub fn parse(s: &str) -> Option<SchedulerPolicy> {
         match s.to_ascii_lowercase().as_str() {
             "oldest" | "csmaafl" | "oldest-model-first" => Some(SchedulerPolicy::OldestModelFirst),
@@ -35,6 +37,7 @@ impl SchedulerPolicy {
 /// A pending upload request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct UploadRequest {
+    /// The requesting client's id.
     pub client: usize,
     /// Virtual time the request was filed (compute-done time).
     pub requested_at: Ticks,
@@ -58,6 +61,7 @@ pub struct UploadScheduler {
 }
 
 impl UploadScheduler {
+    /// A scheduler for `clients` clients under the given policy.
     pub fn new(policy: SchedulerPolicy, clients: usize) -> Self {
         UploadScheduler {
             policy,
@@ -69,18 +73,22 @@ impl UploadScheduler {
         }
     }
 
+    /// The arbitration policy in force.
     pub fn policy(&self) -> SchedulerPolicy {
         self.policy
     }
 
+    /// Number of requests currently waiting for a slot.
     pub fn pending_len(&self) -> usize {
         self.pending.len()
     }
 
+    /// Per-client grant counts (fairness accounting).
     pub fn grants(&self) -> &[u64] {
         &self.grants
     }
 
+    /// Total slots granted so far (the running slot counter k).
     pub fn slots_granted(&self) -> u64 {
         self.slots_granted
     }

@@ -13,6 +13,8 @@ use crate::model::ParamSet;
 use crate::sim::ComputeModel;
 use crate::util::rng::Rng;
 
+/// Run synchronous FedAvg (optionally client-sampled via
+/// `cfg.sfl_sample_fraction`) on the shared context.
 pub fn run_sfl(ctx: &FlContext<'_>) -> Result<crate::metrics::RunResult> {
     let cfg = ctx.cfg;
     let m = cfg.clients;

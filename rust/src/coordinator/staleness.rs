@@ -35,6 +35,7 @@ impl StalenessTracker {
         self.mu
     }
 
+    /// How many staleness values have been observed so far.
     pub fn observations(&self) -> u64 {
         self.observations
     }

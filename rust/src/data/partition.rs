@@ -10,11 +10,14 @@ use crate::util::rng::Rng;
 /// Data distribution across clients.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Partition {
+    /// Random equal allocation: every shard is class-diverse.
     Iid,
+    /// Each client holds samples of exactly two classes (non-IID).
     TwoClass,
 }
 
 impl Partition {
+    /// Parse a CLI/JSON spelling (`iid`, `noniid`/`twoclass`).
     pub fn parse(s: &str) -> Option<Partition> {
         match s.to_ascii_lowercase().as_str() {
             "iid" => Some(Partition::Iid),
@@ -23,6 +26,7 @@ impl Partition {
         }
     }
 
+    /// Canonical name used in labels and serialized configs.
     pub fn name(&self) -> &'static str {
         match self {
             Partition::Iid => "iid",
@@ -34,14 +38,17 @@ impl Partition {
 /// The sample indices owned by one client.
 #[derive(Debug, Clone)]
 pub struct ClientShard {
+    /// Indices into the training [`Dataset`] this client owns.
     pub indices: Vec<usize>,
 }
 
 impl ClientShard {
+    /// Number of samples on this shard.
     pub fn len(&self) -> usize {
         self.indices.len()
     }
 
+    /// Whether the shard holds no samples.
     pub fn is_empty(&self) -> bool {
         self.indices.is_empty()
     }

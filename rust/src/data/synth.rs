@@ -12,18 +12,25 @@
 
 use crate::util::rng::Rng;
 
+/// Image height/width in pixels.
 pub const HW: usize = 28;
+/// Flattened pixels per image (28×28).
 pub const IMG: usize = HW * HW;
+/// Number of label classes.
 pub const NUM_CLASSES: usize = 10;
 
 /// Which synthetic distribution to generate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SynthKind {
+    /// Easy stroke-like prototypes with light noise (MNIST-like).
     Mnist,
+    /// Broader, textured, pairwise-confusable prototypes with heavier
+    /// noise (Fashion-MNIST-like; deliberately harder).
     Fashion,
 }
 
 impl SynthKind {
+    /// Parse a CLI/JSON spelling (`mnist`, `fashion`/`fmnist`).
     pub fn parse(s: &str) -> Option<SynthKind> {
         match s.to_ascii_lowercase().as_str() {
             "mnist" => Some(SynthKind::Mnist),
@@ -32,6 +39,7 @@ impl SynthKind {
         }
     }
 
+    /// Canonical name used in labels and serialized configs.
     pub fn name(&self) -> &'static str {
         match self {
             SynthKind::Mnist => "mnist",
@@ -43,19 +51,24 @@ impl SynthKind {
 /// A labelled image set, images flattened row-major (n * 784 f32 in [0,1]).
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// Flattened images, `len() * IMG` f32 pixels in [0, 1].
     pub x: Vec<f32>,
+    /// Class labels in `0..NUM_CLASSES`, one per image.
     pub y: Vec<i32>,
 }
 
 impl Dataset {
+    /// Number of labelled images.
     pub fn len(&self) -> usize {
         self.y.len()
     }
 
+    /// Whether the set holds no images.
     pub fn is_empty(&self) -> bool {
         self.y.is_empty()
     }
 
+    /// The `i`-th image as a flat 784-pixel slice.
     pub fn image(&self, i: usize) -> &[f32] {
         &self.x[i * IMG..(i + 1) * IMG]
     }

@@ -21,13 +21,19 @@ pub const GAMMAS: [f64; 4] = [0.1, 0.2, 0.4, 0.6];
 /// Scenario descriptor for Figs. 3, 4, 5(a), 5(b).
 #[derive(Debug, Clone, Copy)]
 pub struct FigureSpec {
+    /// Figure id (`fig3`, `fig4`, `fig5a`, `fig5b`).
     pub id: &'static str,
+    /// Human-readable scenario title.
     pub title: &'static str,
+    /// Synthetic dataset of the scenario.
     pub dataset: SynthKind,
+    /// Client data partition of the scenario.
     pub partition: Partition,
+    /// Artifact model config used on the PJRT path.
     pub model_config: &'static str,
 }
 
+/// The paper's four accuracy-vs-time scenarios (Figs. 3, 4, 5a, 5b).
 pub const FIGURES: [FigureSpec; 4] = [
     FigureSpec {
         id: "fig3",
@@ -59,6 +65,7 @@ pub const FIGURES: [FigureSpec; 4] = [
     },
 ];
 
+/// Look up a figure spec by id.
 pub fn figure_spec(id: &str) -> Option<&'static FigureSpec> {
     FIGURES.iter().find(|f| f.id == id)
 }

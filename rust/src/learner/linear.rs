@@ -19,7 +19,9 @@ const K: usize = 10;
 /// Softmax regression: W (784x10) + b (10), SGD on NLL.
 #[derive(Debug, Clone)]
 pub struct LinearLearner {
+    /// SGD learning rate.
     pub lr: f32,
+    /// Mini-batch size per SGD step.
     pub batch: usize,
 }
 
@@ -30,6 +32,7 @@ impl Default for LinearLearner {
 }
 
 impl LinearLearner {
+    /// A learner with an explicit learning rate and batch size.
     pub fn new(lr: f32, batch: usize) -> Self {
         assert!(batch > 0);
         LinearLearner { lr, batch }

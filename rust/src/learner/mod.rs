@@ -41,11 +41,13 @@ pub trait Learner {
 /// walk the shard like an epoch iterator.
 #[derive(Debug, Clone)]
 pub struct BatchCursor {
+    /// The shard's sample indices, walked cyclically.
     pub indices: Vec<usize>,
     pos: usize,
 }
 
 impl BatchCursor {
+    /// A cursor over a (non-empty) shard, starting at its first sample.
     pub fn new(indices: Vec<usize>) -> Self {
         assert!(!indices.is_empty(), "empty shard");
         BatchCursor { indices, pos: 0 }

@@ -1,8 +1,13 @@
 //! The production learner: AOT CNN artifacts executed through PJRT.
 //!
-//! Wraps `runtime::Engine`, decomposing an arbitrary `steps` request into
+//! Wraps [`Engine`], decomposing an arbitrary `steps` request into
 //! scan-fused `train_chunk` dispatches plus single `train_step` calls for
 //! the remainder (the chunk size is baked into the artifact at lowering).
+//!
+//! This type compiles in every build mode: without the `pjrt` cargo
+//! feature, [`Engine`] is the uninhabited runtime stub, so a
+//! `PjrtLearner` can never be constructed (its only constructor takes an
+//! `Engine`) and callers fall back to [`super::LinearLearner`].
 
 use anyhow::{ensure, Result};
 
@@ -11,15 +16,19 @@ use crate::data::Dataset;
 use crate::model::{ParamSet, TensorSpec};
 use crate::runtime::Engine;
 
+/// [`Learner`] implementation backed by the PJRT [`Engine`].
 pub struct PjrtLearner {
     engine: Engine,
 }
 
 impl PjrtLearner {
+    /// Wrap a compiled engine.
     pub fn new(engine: Engine) -> Self {
         PjrtLearner { engine }
     }
 
+    /// The underlying engine (for direct artifact dispatch, e.g. the
+    /// PJRT aggregator ablation).
     pub fn engine(&self) -> &Engine {
         &self.engine
     }

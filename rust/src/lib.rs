@@ -15,18 +15,35 @@
 //!   with Pallas kernels on the dense layers and the aggregation axpy,
 //!   AOT-lowered to HLO text executed through PJRT ([`runtime`]).
 //!
-//! Quickstart (after `make artifacts && cargo build --release`):
+//! ## Build matrix
+//!
+//! | Build                          | Learners                | Offline |
+//! |--------------------------------|-------------------------|---------|
+//! | `cargo build` (default)        | `linear` (pure Rust)    | yes     |
+//! | `cargo build --features pjrt`  | `linear` + `pjrt` seam  | yes     |
+//!
+//! The default build is pure Rust with `anyhow` as the only dependency;
+//! the PJRT/XLA execution path ([`runtime::Engine`]) is replaced by an
+//! API-compatible stub that fails at load time. The `pjrt` feature
+//! compiles the full execution path against the typed seam in
+//! `runtime::xla`; binding that seam to the native PJRT C API is the
+//! remaining step to run the AOT CNN artifacts.
+//!
+//! ## Quickstart
 //!
 //! ```text
-//! repro train --config configs/mnist_iid.json --set gamma=0.2
-//! repro figures --fig fig3 --out results/
+//! cargo run --release -- train --set clients=10 --learner linear
+//! repro figures --fig fig3 --learner linear --out results/
+//! repro timeline --clients 20
 //! ```
+
+#![warn(missing_docs)]
 
 pub mod analyze;
 pub mod config;
 pub mod coordinator;
-pub mod figures;
 pub mod data;
+pub mod figures;
 pub mod learner;
 pub mod metrics;
 pub mod model;

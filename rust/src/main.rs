@@ -8,8 +8,9 @@
 //!   inspect   analytic tables (naive-decay, beta-solver)
 //!   smoke     compile + run every artifact once (installation check)
 //!
-//! The argument parser is hand-rolled: the offline build vendors only the
-//! `xla` crate closure (no clap).
+//! The argument parser is hand-rolled: the crate stays
+//! dependency-minimal by design (`anyhow` is the only dependency — no
+//! clap).
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -107,8 +108,10 @@ impl Args {
     }
 
     fn learner(&self) -> Result<LearnerKind> {
-        let s = self.opt_or("learner", "pjrt");
-        LearnerKind::parse(s).ok_or_else(|| anyhow!("unknown learner {s:?}"))
+        match self.opt("learner") {
+            Some(s) => LearnerKind::parse(s).ok_or_else(|| anyhow!("unknown learner {s:?}")),
+            None => Ok(LearnerKind::default_for_build()),
+        }
     }
 }
 

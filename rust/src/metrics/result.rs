@@ -9,10 +9,13 @@ pub struct EvalPoint {
     /// X axis of the paper's figures: relative time slots (1 slot = one
     /// synchronous FedAvg round under the run's time model).
     pub slot: f64,
+    /// The same instant in raw virtual ticks.
     pub ticks: Ticks,
     /// Global aggregations performed up to this point.
     pub iteration: u64,
+    /// Test-set accuracy of the global model in force at this instant.
     pub accuracy: f64,
+    /// Mean test-set loss at this instant.
     pub loss: f64,
 }
 
@@ -21,6 +24,7 @@ pub struct EvalPoint {
 pub struct RunResult {
     /// Series label, e.g. `fedavg` or `csmaafl g=0.2`.
     pub label: String,
+    /// Accuracy/loss curve at the evaluation cadence.
     pub points: Vec<EvalPoint>,
     /// Upload count per client (fairness analysis).
     pub uploads_per_client: Vec<u64>,
@@ -37,6 +41,7 @@ pub struct RunResult {
 }
 
 impl RunResult {
+    /// An empty record with the given label (all counters zero).
     pub fn empty(label: &str) -> Self {
         RunResult {
             label: label.to_string(),
@@ -50,10 +55,12 @@ impl RunResult {
         }
     }
 
+    /// Accuracy at the last recorded point (0 when no points exist).
     pub fn final_accuracy(&self) -> f64 {
         self.points.last().map_or(0.0, |p| p.accuracy)
     }
 
+    /// Best accuracy over the whole curve.
     pub fn best_accuracy(&self) -> f64 {
         self.points.iter().map(|p| p.accuracy).fold(0.0, f64::max)
     }

@@ -7,18 +7,22 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// An empty accumulator.
     pub fn new() -> Self {
         Summary { values: Vec::new() }
     }
 
+    /// Record one observation.
     pub fn push(&mut self, v: f64) {
         self.values.push(v);
     }
 
+    /// Number of observations recorded.
     pub fn count(&self) -> usize {
         self.values.len()
     }
 
+    /// Arithmetic mean (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.values.is_empty() {
             return 0.0;
@@ -26,14 +30,17 @@ impl Summary {
         self.values.iter().sum::<f64>() / self.values.len() as f64
     }
 
+    /// Smallest observation (+∞ when empty).
     pub fn min(&self) -> f64 {
         self.values.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest observation (−∞ when empty).
     pub fn max(&self) -> f64 {
         self.values.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     }
 
+    /// Sample standard deviation (0 with fewer than two observations).
     pub fn std(&self) -> f64 {
         if self.values.len() < 2 {
             return 0.0;

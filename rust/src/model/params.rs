@@ -9,11 +9,14 @@ use std::fmt;
 /// Static description of one parameter tensor (from the manifest).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TensorSpec {
+    /// The tensor's manifest name (e.g. `conv1/kernel`).
     pub name: String,
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
 }
 
 impl TensorSpec {
+    /// Total scalar element count.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -22,11 +25,14 @@ impl TensorSpec {
 /// One named f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Shape + name of this tensor.
     pub spec: TensorSpec,
+    /// Row-major element data (`spec.numel()` values).
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// An all-zero tensor of the given spec.
     pub fn zeros(spec: TensorSpec) -> Self {
         let n = spec.numel();
         Tensor {
@@ -35,6 +41,7 @@ impl Tensor {
         }
     }
 
+    /// Wrap existing data; panics if the length does not match the spec.
     pub fn from_data(spec: TensorSpec, data: Vec<f32>) -> Self {
         assert_eq!(
             spec.numel(),
@@ -51,6 +58,7 @@ impl Tensor {
 /// An ordered set of parameter tensors (the manifest contract).
 #[derive(Clone, PartialEq, Default)]
 pub struct ParamSet {
+    /// The model's tensors in manifest order.
     pub tensors: Vec<Tensor>,
 }
 
@@ -61,16 +69,19 @@ impl fmt::Debug for ParamSet {
 }
 
 impl ParamSet {
+    /// An all-zero parameter set over the given specs.
     pub fn zeros(specs: &[TensorSpec]) -> Self {
         ParamSet {
             tensors: specs.iter().cloned().map(Tensor::zeros).collect(),
         }
     }
 
+    /// Total scalar parameter count across all tensors.
     pub fn numel(&self) -> usize {
         self.tensors.iter().map(|t| t.spec.numel()).sum()
     }
 
+    /// The ordered tensor specs (the manifest contract).
     pub fn specs(&self) -> Vec<TensorSpec> {
         self.tensors.iter().map(|t| t.spec.clone()).collect()
     }
@@ -144,6 +155,7 @@ impl ParamSet {
         m
     }
 
+    /// True when every element is finite (no NaN/Inf divergence).
     pub fn is_finite(&self) -> bool {
         self.tensors
             .iter()

@@ -23,6 +23,7 @@ use crate::net::wire::{self, Message};
 /// Leader-side configuration.
 #[derive(Debug, Clone)]
 pub struct LeaderConfig {
+    /// Listen address, e.g. `0.0.0.0:7070`.
     pub bind: String,
     /// Number of workers to wait for before starting.
     pub clients: usize,
@@ -37,10 +38,15 @@ pub struct LeaderConfig {
 /// What the leader observed during a run.
 #[derive(Debug, Clone)]
 pub struct LeaderReport {
+    /// Total global aggregations performed.
     pub aggregations: u64,
+    /// Updates delivered per worker (fairness accounting).
     pub updates_per_client: Vec<u64>,
+    /// Mean observed staleness across aggregations.
     pub mean_staleness: f64,
+    /// Real time from first broadcast to shutdown.
     pub wallclock_secs: f64,
+    /// The final global model.
     pub final_model: ParamSet,
 }
 

@@ -9,8 +9,9 @@
 //! Algorithm 1 over real sockets. Workers run the PJRT CNN (or the linear
 //! learner) on their own shard.
 //!
-//! Protocol (`wire.rs`): hand-rolled frames (the offline vendor set has
-//! no serde): `[u32 len][u8 tag][payload]`, tensors as raw little-endian
+//! Protocol (`wire.rs`): hand-rolled frames (the dependency-minimal
+//! build has no serde): `[u32 len][u8 tag][payload]`, tensors as raw
+//! little-endian
 //! f32 runs validated against the manifest's shapes.
 
 pub mod leader;

@@ -28,6 +28,7 @@ pub enum Tag {
 }
 
 impl Tag {
+    /// Decode a frame's tag byte; fails on unknown tags.
     pub fn from_u8(b: u8) -> Result<Tag> {
         Ok(match b {
             1 => Tag::Hello,
@@ -42,9 +43,28 @@ impl Tag {
 /// A decoded message.
 #[derive(Debug)]
 pub enum Message {
-    Hello { name: String },
-    Global { iteration: u64, params: ParamSet },
-    Update { start_iteration: u64, steps: u32, params: ParamSet },
+    /// worker → leader: join the federation under the given name.
+    Hello {
+        /// Human-readable worker name (logging only).
+        name: String,
+    },
+    /// leader → worker: a global model stamped with its iteration.
+    Global {
+        /// Global aggregation count when this model was sent.
+        iteration: u64,
+        /// The global model parameters.
+        params: ParamSet,
+    },
+    /// worker → leader: a trained local model.
+    Update {
+        /// The global iteration the worker trained from (staleness base).
+        start_iteration: u64,
+        /// Local SGD steps the worker ran.
+        steps: u32,
+        /// The updated local model parameters.
+        params: ParamSet,
+    },
+    /// leader → worker: training is over, disconnect.
     Shutdown,
 }
 

@@ -16,11 +16,15 @@ use crate::net::wire::{self, Message};
 
 /// Worker-side configuration.
 pub struct WorkerConfig<'a> {
+    /// Leader address to connect to, e.g. `127.0.0.1:7070`.
     pub connect: String,
+    /// Name announced in the Hello frame (logging only).
     pub name: String,
+    /// Local trainer for this worker.
     pub learner: &'a dyn Learner,
     /// This worker's training shard.
     pub data: &'a Dataset,
+    /// Sample indices of the shard within `data`.
     pub indices: Vec<usize>,
     /// Local SGD steps per upload.
     pub local_steps: usize,

@@ -1,20 +1,34 @@
 //! PJRT execution engine: loads the AOT HLO-text artifacts and runs them.
 //!
-//! One `Engine` per model config. All five entry points are compiled once
-//! at load time; the request path is pure Rust + PJRT (Python is never
-//! invoked). HLO *text* is the interchange format — see DESIGN.md and
-//! /opt/xla-example/README.md for why serialized protos are rejected.
+//! One [`Engine`] per model config. All five entry points are compiled
+//! once at load time; the request path is pure Rust + PJRT (Python is
+//! never invoked). HLO *text* is the interchange format — serialized
+//! protos are rejected (see `python/compile/aot.py`).
+//!
+//! The whole execution path sits behind the `pjrt` cargo feature. The
+//! default build ships an API-compatible stub whose constructors fail
+//! with an actionable error, so every caller (`session`, `coordinator`,
+//! benches, the `repro smoke` command) compiles unchanged and the
+//! pure-Rust [`crate::learner::LinearLearner`] remains the offline
+//! fallback.
 
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
+#[cfg(feature = "pjrt")]
 use anyhow::{bail, Context, Result};
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
+#[cfg(feature = "pjrt")]
 use super::manifest::{Manifest, ModelManifest};
+#[cfg(feature = "pjrt")]
+use super::xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+#[cfg(feature = "pjrt")]
 use crate::log_info;
+#[cfg(feature = "pjrt")]
 use crate::model::{ParamSet, Tensor};
 
 /// Compiled executables for one model config.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     model: ModelManifest,
     init_exe: PjRtLoadedExecutable,
@@ -24,6 +38,7 @@ pub struct Engine {
     aggregate_exe: PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Load artifacts for `config` from `dir` and compile on the CPU PJRT
     /// client.
@@ -32,6 +47,7 @@ impl Engine {
         Self::from_manifest(&manifest, config)
     }
 
+    /// Compile every required artifact of `config` from a parsed manifest.
     pub fn from_manifest(manifest: &Manifest, config: &str) -> Result<Engine> {
         let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
         let model = manifest.config(config)?.clone();
@@ -63,6 +79,7 @@ impl Engine {
         Ok(e)
     }
 
+    /// The manifest entry this engine was compiled from.
     pub fn model(&self) -> &ModelManifest {
         &self.model
     }
@@ -225,5 +242,118 @@ impl Engine {
         }
         let n = (nb * m.eval_batch) as f64;
         Ok((correct as f64 / n, loss_sum / n))
+    }
+}
+
+// --------------------------------------------------------------- stub
+
+/// Stub engine for builds without the `pjrt` feature.
+///
+/// The type is uninhabited: [`Engine::load`] and [`Engine::from_manifest`]
+/// fail with a message naming the feature and the `linear` fallback, so
+/// no value of this type can ever exist and the per-value methods are
+/// statically unreachable. Everything that *types against* `Engine`
+/// (`session`, `coordinator::runner`, the benches) compiles identically
+/// in both build modes.
+#[cfg(not(feature = "pjrt"))]
+pub enum Engine {}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    fn unavailable() -> anyhow::Error {
+        anyhow::anyhow!(
+            "this build has no PJRT backend (compiled without the `pjrt` \
+             cargo feature); rebuild with `cargo build --features pjrt` \
+             or use the pure-Rust learner (--learner linear)"
+        )
+    }
+
+    /// Always fails: the PJRT path is not compiled into this build.
+    pub fn load(
+        _dir: impl AsRef<std::path::Path>,
+        _config: &str,
+    ) -> anyhow::Result<Engine> {
+        Err(Self::unavailable())
+    }
+
+    /// Always fails: the PJRT path is not compiled into this build.
+    pub fn from_manifest(
+        _manifest: &super::manifest::Manifest,
+        _config: &str,
+    ) -> anyhow::Result<Engine> {
+        Err(Self::unavailable())
+    }
+
+    /// The manifest entry this engine was compiled from.
+    pub fn model(&self) -> &super::manifest::ModelManifest {
+        match *self {}
+    }
+
+    /// Initialize parameters from a seed (the lowered He init).
+    pub fn init(&self, _seed: u32) -> anyhow::Result<crate::model::ParamSet> {
+        match *self {}
+    }
+
+    /// One SGD step.
+    pub fn train_step(
+        &self,
+        _p: &crate::model::ParamSet,
+        _x: &[f32],
+        _y: &[i32],
+    ) -> anyhow::Result<(crate::model::ParamSet, f32)> {
+        match *self {}
+    }
+
+    /// `chunk_steps` SGD steps under one dispatch.
+    pub fn train_chunk(
+        &self,
+        _p: &crate::model::ParamSet,
+        _xs: &[f32],
+        _ys: &[i32],
+    ) -> anyhow::Result<(crate::model::ParamSet, f32)> {
+        match *self {}
+    }
+
+    /// Evaluate one eval batch: returns (correct_count, loss_sum).
+    pub fn eval_chunk(
+        &self,
+        _p: &crate::model::ParamSet,
+        _x: &[f32],
+        _y: &[i32],
+    ) -> anyhow::Result<(u32, f32)> {
+        match *self {}
+    }
+
+    /// Eq.(3) aggregation: `beta*global + (1-beta)*local`.
+    pub fn aggregate(
+        &self,
+        _global: &crate::model::ParamSet,
+        _local: &crate::model::ParamSet,
+        _beta: f32,
+    ) -> anyhow::Result<crate::model::ParamSet> {
+        match *self {}
+    }
+
+    /// Evaluate a whole test set by batching through `eval_chunk`.
+    pub fn evaluate_set(
+        &self,
+        _p: &crate::model::ParamSet,
+        _x: &[f32],
+        _y: &[i32],
+    ) -> anyhow::Result<(f64, f64)> {
+        match *self {}
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::Engine;
+
+    #[test]
+    fn stub_engine_fails_with_actionable_error() {
+        let err = Engine::load("artifacts", "mnist_small").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("pjrt"), "{msg}");
+        assert!(msg.contains("linear"), "{msg}");
     }
 }

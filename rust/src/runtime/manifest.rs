@@ -22,29 +22,43 @@ pub const REQUIRED_ARTIFACTS: [&str; 5] =
 /// One input of an exported program (shape + dtype, as lowered).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct InputSpec {
+    /// Dimension sizes as lowered.
     pub shape: Vec<usize>,
+    /// Element dtype name (e.g. `float32`, `int32`).
     pub dtype: String,
 }
 
 /// One exported HLO program.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
+    /// Absolute path of the `.hlo.txt` file.
     pub file: PathBuf,
+    /// Content hash recorded at lowering time (provenance).
     pub sha256: String,
+    /// The program's input signature.
     pub inputs: Vec<InputSpec>,
 }
 
 /// One AOT-lowered model configuration (e.g. `mnist_small`).
 #[derive(Debug, Clone)]
 pub struct ModelManifest {
+    /// The config's manifest key (e.g. `mnist_small`).
     pub name: String,
+    /// Ordered parameter tensor specs (the wire/runtime contract).
     pub params: Vec<TensorSpec>,
+    /// Learning rate baked into the train artifacts at lowering.
     pub lr: f64,
+    /// Mini-batch size of `train_step`.
     pub batch: usize,
+    /// Scan-fused SGD steps per `train_chunk` dispatch.
     pub chunk_steps: usize,
+    /// Batch size of `eval_chunk`.
     pub eval_batch: usize,
+    /// Number of label classes.
     pub num_classes: usize,
+    /// Per-image input shape (e.g. `[28, 28, 1]`).
     pub input_shape: Vec<usize>,
+    /// Entry-point name → artifact metadata.
     pub artifacts: BTreeMap<String, ArtifactMeta>,
 }
 
@@ -59,6 +73,7 @@ impl ModelManifest {
         self.input_shape.iter().product()
     }
 
+    /// Look up one required entry point's artifact metadata.
     pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
         self.artifacts
             .get(name)
@@ -69,7 +84,9 @@ impl ModelManifest {
 /// The parsed manifest for an artifacts directory.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// The artifacts directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Config name → per-model manifest.
     pub configs: BTreeMap<String, ModelManifest>,
 }
 
@@ -109,6 +126,7 @@ impl Manifest {
         Ok(Manifest { dir, configs })
     }
 
+    /// Look up a model config by name, listing alternatives on miss.
     pub fn config(&self, name: &str) -> Result<&ModelManifest> {
         self.configs.get(name).ok_or_else(|| {
             anyhow!(

@@ -1,10 +1,20 @@
 //! PJRT runtime: load + execute the AOT artifacts (`artifacts/*.hlo.txt`).
 //!
-//! `xla` crate flow: `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
-//! → `client.compile` → `execute`. Python runs only at build time.
+//! Flow (with the `pjrt` cargo feature): `xla::PjRtClient::cpu` →
+//! `xla::HloModuleProto::from_text_file` → `client.compile` →
+//! `execute`. Python runs only at build time (`python/compile/aot.py`
+//! writes the artifacts and [`Manifest`]).
+//!
+//! Without the feature (the default, offline-friendly build) the
+//! [`Manifest`] machinery is still fully available — it is pure Rust —
+//! while [`Engine`] is an API-compatible stub that fails at load time
+//! with a message pointing at `--features pjrt` and the `linear`
+//! learner fallback.
 
 mod engine;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod xla;
 
 pub use engine::Engine;
 pub use manifest::{ArtifactMeta, InputSpec, Manifest, ModelManifest};

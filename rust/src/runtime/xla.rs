@@ -1,0 +1,310 @@
+//! Typed seam to the XLA/PJRT runtime (compiled only with `--features pjrt`).
+//!
+//! This module mirrors the slice of the `xla-rs` API surface that
+//! [`super::Engine`] drives — `PjRtClient::cpu()` → `compile` →
+//! `execute` → `to_literal_sync` — so the engine is written once against
+//! the real interface. The crate itself links no native code: the
+//! host-side types ([`Literal`], [`HloModuleProto`], [`XlaComputation`])
+//! are fully implemented in Rust, while the three device-backed types
+//! ([`PjRtClient`], [`PjRtLoadedExecutable`], [`PjRtBuffer`]) are
+//! uninhabited — creating a client fails with an actionable error rather
+//! than silently computing wrong results. Binding the real PJRT C API
+//! (or vendoring `xla-rs`) replaces only this module; every call site in
+//! `engine.rs` stays unchanged.
+
+use std::borrow::Borrow;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+/// XLA element types representable by this seam.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    /// 32-bit IEEE float (`f32`).
+    F32,
+    /// 32-bit signed integer (`i32`).
+    S32,
+    /// 32-bit unsigned integer (`u32`).
+    U32,
+}
+
+/// Storage for one literal: a typed flat buffer or a tuple of literals.
+#[derive(Debug, Clone, PartialEq)]
+enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    Tuple(Vec<Literal>),
+}
+
+mod sealed {
+    /// Seals [`super::NativeType`] to the scalar types XLA understands.
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+    impl Sealed for u32 {}
+}
+
+/// Rust scalar types that map onto an XLA [`ElementType`].
+pub trait NativeType: Copy + Sized + sealed::Sealed {
+    /// The XLA element type corresponding to `Self`.
+    const TY: ElementType;
+
+    /// Build a literal of the given shape from a flat slice.
+    fn literal_from_slice(data: &[Self], shape: Vec<i64>) -> Literal;
+
+    /// Extract the flat buffer if the literal holds this element type.
+    fn extract(lit: &Literal) -> Option<Vec<Self>>;
+}
+
+macro_rules! native_type {
+    ($t:ty, $ty:expr, $variant:ident) => {
+        impl NativeType for $t {
+            const TY: ElementType = $ty;
+
+            fn literal_from_slice(data: &[Self], shape: Vec<i64>) -> Literal {
+                Literal {
+                    shape,
+                    payload: Payload::$variant(data.to_vec()),
+                }
+            }
+
+            fn extract(lit: &Literal) -> Option<Vec<Self>> {
+                match &lit.payload {
+                    Payload::$variant(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+native_type!(f32, ElementType::F32, F32);
+native_type!(i32, ElementType::S32, I32);
+native_type!(u32, ElementType::U32, U32);
+
+/// A host-side XLA literal: a shaped, typed value (or tuple of values).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    shape: Vec<i64>,
+    payload: Payload,
+}
+
+impl Literal {
+    /// Rank-1 literal over a flat slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::literal_from_slice(data, vec![data.len() as i64])
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        T::literal_from_slice(&[v], Vec::new())
+    }
+
+    /// Reinterpret the literal under a new shape with the same element
+    /// count, reusing the storage (this is the hot path: every parameter
+    /// tensor and batch goes through vec1-then-reshape per dispatch).
+    /// Fails on element-count mismatch or on tuple literals.
+    pub fn reshape(self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.payload, Payload::Tuple(_)) {
+            bail!("cannot reshape a tuple literal");
+        }
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        ensure!(
+            want == have,
+            "reshape to {dims:?} ({want} elems) from {} elems",
+            have
+        );
+        Ok(Literal {
+            shape: dims.to_vec(),
+            payload: self.payload,
+        })
+    }
+
+    /// The literal's array dimensions (empty for scalars and for
+    /// tuples, which have parts rather than a shape).
+    pub fn shape(&self) -> &[i64] {
+        &self.shape
+    }
+
+    /// Number of scalar elements: 1 for scalars, the flat length for
+    /// arrays, and the sum over parts for tuples.
+    pub fn element_count(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+            Payload::U32(v) => v.len(),
+            Payload::Tuple(v) => v.iter().map(Literal::element_count).sum(),
+        }
+    }
+
+    /// Copy the flat buffer out as `Vec<T>`; fails on element-type
+    /// mismatch.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self).ok_or_else(|| {
+            anyhow!("literal does not hold {:?} elements", T::TY)
+        })
+    }
+
+    /// Decompose a tuple literal into its parts (AOT programs are lowered
+    /// with `return_tuple=True`, so every program output is a tuple).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.payload {
+            Payload::Tuple(parts) => Ok(parts),
+            _ => bail!("literal is not a tuple"),
+        }
+    }
+
+    /// Assemble a tuple literal from parts. Tuples carry no array
+    /// shape of their own — query the parts after [`Literal::to_tuple`].
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal {
+            shape: Vec::new(),
+            payload: Payload::Tuple(parts),
+        }
+    }
+}
+
+/// An HLO module in its text form (the artifact interchange format).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read and sanity-check an `.hlo.txt` artifact.
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading HLO text {}", path.display()))?;
+        ensure!(
+            text.contains("HloModule"),
+            "{} does not look like HLO text (no HloModule header)",
+            path.display()
+        );
+        Ok(HloModuleProto { text })
+    }
+
+    /// The raw HLO text.
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// A computation ready for compilation (wraps the parsed HLO module).
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    module: HloModuleProto,
+}
+
+impl XlaComputation {
+    /// Wrap an HLO module as a compilable computation.
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            module: proto.clone(),
+        }
+    }
+
+    /// The underlying HLO module.
+    pub fn module(&self) -> &HloModuleProto {
+        &self.module
+    }
+}
+
+/// Handle to a PJRT device client. Uninhabited in this build: the native
+/// PJRT plugin is not linked, so [`PjRtClient::cpu`] returns an error and
+/// no value of this type can exist.
+pub enum PjRtClient {}
+
+impl PjRtClient {
+    /// Create the CPU PJRT client. Always fails in this build with an
+    /// actionable message; a future PR binds this to the PJRT C API.
+    pub fn cpu() -> Result<PjRtClient> {
+        bail!(
+            "the native PJRT runtime is not linked into this build; the \
+             `pjrt` cargo feature compiles the typed execution path only. \
+             Use `--learner linear` (pure Rust), or bind runtime::xla to \
+             the XLA PJRT plugin (see docs/ARCHITECTURE.md)"
+        )
+    }
+
+    /// Compile a computation for this client's devices.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match *self {}
+    }
+}
+
+/// A compiled, device-loaded executable. Uninhabited in this build (it
+/// can only be produced by a [`PjRtClient`]).
+pub enum PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    /// Execute with one argument list on the default device; returns
+    /// per-device, per-output buffers.
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match *self {}
+    }
+}
+
+/// A device-resident buffer. Uninhabited in this build.
+pub enum PjRtBuffer {}
+
+impl PjRtBuffer {
+    /// Copy the buffer to the host as a [`Literal`], blocking until the
+    /// device computation that produced it completes.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match *self {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.shape(), &[6]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.to_vec::<i32>().is_err(), "element type is checked");
+        let m = l.clone().reshape(&[2, 3]).unwrap();
+        assert_eq!(m.shape(), &[2, 3]);
+        assert_eq!(m.element_count(), 6);
+        assert!(l.reshape(&[4, 2]).is_err(), "element count is checked");
+    }
+
+    #[test]
+    fn scalar_and_tuple() {
+        let s = Literal::scalar(7u32);
+        assert!(s.shape().is_empty());
+        assert_eq!(s.to_vec::<u32>().unwrap(), vec![7]);
+        let t = Literal::tuple(vec![Literal::scalar(1i32), Literal::vec1(&[0.5f32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].to_vec::<i32>().unwrap(), vec![1]);
+        assert!(Literal::scalar(1.0f32).to_tuple().is_err());
+    }
+
+    #[test]
+    fn hlo_text_is_validated() {
+        let dir = std::env::temp_dir().join(format!("csmaafl_xla_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = dir.join("good.hlo.txt");
+        std::fs::write(&good, "HloModule train_step\nENTRY main {}").unwrap();
+        let proto = HloModuleProto::from_text_file(&good).unwrap();
+        assert!(proto.text().starts_with("HloModule"));
+        let comp = XlaComputation::from_proto(&proto);
+        assert!(comp.module().text().contains("train_step"));
+        let bad = dir.join("bad.hlo.txt");
+        std::fs::write(&bad, "not hlo at all").unwrap();
+        assert!(HloModuleProto::from_text_file(&bad).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn client_fails_loudly_without_native_runtime() {
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("linear"), "error names the fallback: {err}");
+    }
+}

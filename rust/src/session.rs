@@ -6,7 +6,9 @@
 //! speed factors and model init, so accuracy differences are attributable
 //! to the algorithm alone. A `Session` owns those shared pieces.
 
-use anyhow::{Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::Result;
 
 use crate::config::{AggregatorKind, RunConfig};
 use crate::coordinator::{self, FlContext};
@@ -26,6 +28,19 @@ pub enum LearnerKind {
 }
 
 impl LearnerKind {
+    /// The learner a stock build can actually execute end-to-end — the
+    /// single source of truth for "no `--learner` flag given".
+    ///
+    /// Always `Linear` for now: the `pjrt` cargo feature compiles the
+    /// CNN execution path, but `runtime::xla` is not yet bound to a
+    /// native PJRT runtime, so defaulting to `Pjrt` would fail every
+    /// flag-less invocation. The PR that lands the native binding
+    /// should make this feature-conditional.
+    pub fn default_for_build() -> LearnerKind {
+        LearnerKind::Linear
+    }
+
+    /// Parse a CLI spelling (`pjrt`/`cnn`, `linear`/`native`).
     pub fn parse(s: &str) -> Option<LearnerKind> {
         match s.to_ascii_lowercase().as_str() {
             "pjrt" | "cnn" => Some(LearnerKind::Pjrt),
@@ -37,14 +52,21 @@ impl LearnerKind {
 
 enum SessionLearner {
     Linear(LinearLearner),
+    // Never constructed without the `pjrt` feature (PjrtLearner wraps the
+    // uninhabited engine stub), but still matched in learner()/engine().
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     Pjrt(PjrtLearner),
 }
 
 /// Shared experiment state: dataset, shards, learner, engine.
 pub struct Session {
+    /// The base configuration variants are derived from.
     pub cfg: RunConfig,
+    /// The shared training set.
     pub train: Dataset,
+    /// The shared held-out test set.
     pub test: Dataset,
+    /// Per-client sample-index shards over `train`.
     pub shards: Vec<ClientShard>,
     learner: SessionLearner,
 }
@@ -62,10 +84,24 @@ impl Session {
         let shards = partition(&train, cfg.clients, cfg.partition, cfg.seed);
         let learner = match kind {
             LearnerKind::Linear => SessionLearner::Linear(LinearLearner::default()),
+            #[cfg(feature = "pjrt")]
             LearnerKind::Pjrt => {
                 let engine = Engine::load(artifacts_dir, &cfg.model_config)
                     .context("loading PJRT engine (run `make artifacts` first)")?;
                 SessionLearner::Pjrt(PjrtLearner::new(engine))
+            }
+            // Without the `pjrt` cargo feature the engine stub would fail
+            // at load time anyway; bail before touching the artifacts
+            // directory so the error names the build flag rather than a
+            // missing manifest.
+            #[cfg(not(feature = "pjrt"))]
+            LearnerKind::Pjrt => {
+                let _ = artifacts_dir;
+                anyhow::bail!(
+                    "the PJRT learner requires a build with `--features \
+                     pjrt`; this binary only ships the pure-Rust learner \
+                     (--learner linear)"
+                );
             }
         };
         log_info!(
@@ -85,6 +121,7 @@ impl Session {
         })
     }
 
+    /// The session's local trainer/evaluator.
     pub fn learner(&self) -> &dyn Learner {
         match &self.learner {
             SessionLearner::Linear(l) => l,
@@ -92,6 +129,7 @@ impl Session {
         }
     }
 
+    /// The PJRT engine, when the session runs the CNN learner.
     pub fn engine(&self) -> Option<&Engine> {
         match &self.learner {
             SessionLearner::Pjrt(p) => Some(p.engine()),

@@ -14,22 +14,34 @@ pub enum HeterogeneityProfile {
     /// All clients identical (the paper's homogeneous analysis case).
     Homogeneous,
     /// Factors uniform in [1, max_factor].
-    Uniform { max_factor: f64 },
+    Uniform {
+        /// Upper bound of the uniform draw (slowest possible client).
+        max_factor: f64,
+    },
     /// Log-normal factors: 1 + LogNormal(0, sigma) - exp(-sigma^2/2)-ish
     /// tail; a realistic long-tail straggler population.
-    Lognormal { sigma: f64 },
+    Lognormal {
+        /// σ of the underlying normal (tail heaviness).
+        sigma: f64,
+    },
     /// The paper's two extreme scenarios: a fraction of very fast clients
     /// (factor 1) and a fraction of very slow ones (factor `slow_factor`,
     /// e.g. 10x), the rest at `mid_factor`.
     Extreme {
+        /// Fraction of clients at factor 1 (the fast tier).
         fast_frac: f64,
+        /// Fraction of clients at `slow_factor` (the straggler tier).
         slow_frac: f64,
+        /// Factor of the middle tier.
         mid_factor: f64,
+        /// Factor of the straggler tier.
         slow_factor: f64,
     },
 }
 
 impl HeterogeneityProfile {
+    /// Parse a CLI/JSON spelling (`homo`, `uniform`, `lognormal`,
+    /// `extreme`) with each profile's default parameters.
     pub fn parse(s: &str) -> Option<HeterogeneityProfile> {
         match s.to_ascii_lowercase().as_str() {
             "homogeneous" | "homo" => Some(HeterogeneityProfile::Homogeneous),
@@ -55,6 +67,8 @@ pub struct ComputeModel {
 }
 
 impl ComputeModel {
+    /// Draw per-client base factors from `profile` (deterministically in
+    /// `rng`'s seed path) with the given per-round jitter half-width.
     pub fn new(profile: HeterogeneityProfile, clients: usize, jitter: f64, rng: &Rng) -> Self {
         let mut r = rng.fork(0x5eed_c0de);
         let factors: Vec<f64> = (0..clients)
@@ -85,6 +99,7 @@ impl ComputeModel {
         ComputeModel { factors, jitter }
     }
 
+    /// Number of clients in the model.
     pub fn clients(&self) -> usize {
         self.factors.len()
     }
@@ -94,10 +109,12 @@ impl ComputeModel {
         self.factors[m]
     }
 
+    /// The largest (slowest) base factor — the straggler bound.
     pub fn slowest_factor(&self) -> f64 {
         self.factors.iter().cloned().fold(1.0, f64::max)
     }
 
+    /// The smallest (fastest) base factor.
     pub fn fastest_factor(&self) -> f64 {
         self.factors.iter().cloned().fold(f64::MAX, f64::min)
     }

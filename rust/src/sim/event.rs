@@ -42,6 +42,7 @@ impl<E> Default for EventQueue<E> {
 }
 
 impl<E> EventQueue<E> {
+    /// An empty queue at virtual time 0.
     pub fn new() -> Self {
         EventQueue {
             heap: BinaryHeap::new(),
@@ -55,10 +56,12 @@ impl<E> EventQueue<E> {
         self.now
     }
 
+    /// Number of scheduled, not-yet-popped events.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// Whether no events remain.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }

@@ -6,6 +6,8 @@
 //! `τ^u` — plus the analytic round/sweep formulas used by the Fig. 2
 //! comparison and verified against the simulator in tests.
 
+/// Virtual time unit: integer ticks (1 tick ≈ 1 ms of modelled time by
+/// convention; only ratios matter).
 pub type Ticks = u64;
 
 /// Communication + computation time parameters.
@@ -78,14 +80,17 @@ pub struct UplinkChannel {
 }
 
 impl UplinkChannel {
+    /// An idle channel.
     pub fn new() -> Self {
         UplinkChannel { busy_until: 0 }
     }
 
+    /// Whether the channel is idle at virtual time `now`.
     pub fn is_free(&self, now: Ticks) -> bool {
         now >= self.busy_until
     }
 
+    /// The virtual time the current reservation ends (0 when never used).
     pub fn busy_until(&self) -> Ticks {
         self.busy_until
     }

@@ -17,15 +17,22 @@ use std::time::{Duration, Instant};
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
 pub struct CaseResult {
+    /// Case label.
     pub name: String,
+    /// Measured iterations (after warmup).
     pub iters: u64,
+    /// Mean per-iteration time in nanoseconds.
     pub mean_ns: f64,
+    /// Median per-iteration time in nanoseconds.
     pub p50_ns: f64,
+    /// 95th-percentile per-iteration time in nanoseconds.
     pub p95_ns: f64,
+    /// Fastest observed iteration in nanoseconds.
     pub min_ns: f64,
 }
 
 impl CaseResult {
+    /// Items per second at the mean iteration time.
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / (self.mean_ns / 1e9)
     }
@@ -53,6 +60,7 @@ pub struct Bencher {
 }
 
 impl Bencher {
+    /// A bencher for one named group with the default window.
     pub fn new(group: &str) -> Self {
         Bencher {
             group: group.to_string(),
@@ -119,6 +127,7 @@ impl Bencher {
         }
     }
 
+    /// All case results recorded so far.
     pub fn results(&self) -> &[CaseResult] {
         &self.results
     }

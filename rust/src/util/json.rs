@@ -1,7 +1,7 @@
 //! Minimal self-contained JSON parser/serializer.
 //!
-//! The offline build environment vendors only the `xla` crate closure (no
-//! serde), so the framework carries its own small JSON implementation. It
+//! The crate is dependency-minimal by design (`anyhow` only, no serde),
+//! so the framework carries its own small JSON implementation. It
 //! supports the full JSON grammar; numbers are parsed as f64 (with an i64
 //! fast path preserved for integers), which is sufficient for the artifact
 //! manifest, run configs and metrics emission.
@@ -12,21 +12,28 @@ use std::fmt;
 /// A JSON value. Objects use a BTreeMap so serialization is deterministic.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// The `null` literal.
     Null,
+    /// `true` / `false`.
     Bool(bool),
     /// Integer-valued number (no fractional part in the source).
     Int(i64),
     /// Any other number.
     Float(f64),
+    /// A string.
     Str(String),
+    /// An ordered array.
     Array(Vec<Json>),
+    /// A key-sorted object.
     Object(BTreeMap<String, Json>),
 }
 
 /// Parse error with byte offset context.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset in the input where parsing failed.
     pub offset: usize,
 }
 
@@ -41,6 +48,7 @@ impl std::error::Error for JsonError {}
 impl Json {
     // ---------------------------------------------------------- accessors
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -48,6 +56,7 @@ impl Json {
         }
     }
 
+    /// The integer value (also accepts fraction-free floats).
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Json::Int(i) => Some(*i),
@@ -56,6 +65,7 @@ impl Json {
         }
     }
 
+    /// The numeric value as f64 (integers widen).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Int(i) => Some(*i as f64),
@@ -64,6 +74,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -71,6 +82,7 @@ impl Json {
         }
     }
 
+    /// The items, if this is an array.
     pub fn as_array(&self) -> Option<&[Json]> {
         match self {
             Json::Array(a) => Some(a),
@@ -78,6 +90,7 @@ impl Json {
         }
     }
 
+    /// The key→value map, if this is an object.
     pub fn as_object(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Object(o) => Some(o),
@@ -101,10 +114,12 @@ impl Json {
 
     // -------------------------------------------------------- constructors
 
+    /// An empty object.
     pub fn object() -> Json {
         Json::Object(BTreeMap::new())
     }
 
+    /// Insert/overwrite a key (no-op on non-objects); chains.
     pub fn set(&mut self, key: &str, val: Json) -> &mut Self {
         if let Json::Object(o) = self {
             o.insert(key.to_string(), val);

@@ -4,13 +4,19 @@ use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
 
+/// Log severity, ordered most to least severe.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
 pub enum Level {
+    /// Unrecoverable problems.
     Error = 0,
+    /// Suspicious but survivable conditions.
     Warn = 1,
+    /// Run-level progress (the default).
     Info = 2,
+    /// Per-iteration detail (`-v`).
     Debug = 3,
+    /// Everything.
     Trace = 4,
 }
 
@@ -18,14 +24,17 @@ static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 
 static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
 
+/// Set the global verbosity threshold.
 pub fn set_level(level: Level) {
     MAX_LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// Whether messages at `level` are currently emitted.
 pub fn level_enabled(level: Level) -> bool {
     level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
 }
 
+/// Emit one formatted record to stderr (used via the `log_*!` macros).
 pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
     if !level_enabled(level) {
         return;
@@ -42,14 +51,19 @@ pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
     let _ = writeln!(err, "[{:>9.3}s {}] {}", t.as_secs_f64(), tag, args);
 }
 
+/// Log at [`crate::util::logging::Level::Error`] with `format!` syntax.
 #[macro_export]
 macro_rules! log_error { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, format_args!($($a)*)) } }
+/// Log at [`crate::util::logging::Level::Warn`] with `format!` syntax.
 #[macro_export]
 macro_rules! log_warn { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($a)*)) } }
+/// Log at [`crate::util::logging::Level::Info`] with `format!` syntax.
 #[macro_export]
 macro_rules! log_info { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($a)*)) } }
+/// Log at [`crate::util::logging::Level::Debug`] with `format!` syntax.
 #[macro_export]
 macro_rules! log_debug { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($a)*)) } }
+/// Log at [`crate::util::logging::Level::Trace`] with `format!` syntax.
 #[macro_export]
 macro_rules! log_trace { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Trace, format_args!($($a)*)) } }
 

@@ -45,6 +45,7 @@ impl Rng {
         Rng::new(splitmix64(&mut sm))
     }
 
+    /// The next raw 64-bit output of the generator.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = (self.s[0].wrapping_add(self.s[3]))

@@ -1,0 +1,211 @@
+//! Smoke coverage for the hand-rolled `repro` argument parser: every
+//! subcommand's usage/help/error path, plus the artifact-free analytic
+//! subcommands end-to-end. No test here runs a federated experiment —
+//! that is `learning_dynamics.rs`'s job — so the suite stays fast.
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+/// Run the built `repro` binary with `args` in a scratch directory.
+fn repro(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(args)
+        .current_dir(std::env::temp_dir())
+        .output()
+        .expect("spawning repro")
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+fn stderr(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("csmaafl_cli_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+// ------------------------------------------------------------- usage
+
+#[test]
+fn no_arguments_prints_usage_and_succeeds() {
+    let out = repro(&[]);
+    assert!(out.status.success());
+    let text = stdout(&out);
+    assert!(text.contains("USAGE"), "{text}");
+    assert!(text.contains("repro <COMMAND>"), "{text}");
+}
+
+#[test]
+fn help_flag_prints_usage_for_every_command_position() {
+    for args in [&["--help"][..], &["-h"][..], &["train", "--help"][..]] {
+        let out = repro(args);
+        assert!(out.status.success(), "{args:?}");
+        assert!(stdout(&out).contains("COMMANDS"), "{args:?}");
+    }
+}
+
+#[test]
+fn help_subcommand_prints_usage() {
+    let out = repro(&["help"]);
+    assert!(out.status.success());
+    assert!(stdout(&out).contains("COMMON OPTIONS"));
+}
+
+#[test]
+fn usage_lists_every_dispatchable_command() {
+    let usage = stdout(&repro(&[]));
+    for cmd in [
+        "train", "compare", "figures", "sweep", "analyze", "timeline",
+        "inspect", "smoke", "serve", "join",
+    ] {
+        assert!(usage.contains(cmd), "usage must mention {cmd}");
+    }
+}
+
+// ------------------------------------------------------------ errors
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let out = repro(&["frobnicate"]);
+    assert!(!out.status.success());
+    let err = stderr(&out);
+    assert!(err.contains("unknown command"), "{err}");
+    assert!(err.contains("USAGE"), "{err}");
+}
+
+#[test]
+fn option_missing_value_is_rejected() {
+    let out = repro(&["train", "--config"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("expects a value"), "{}", stderr(&out));
+}
+
+#[test]
+fn malformed_set_override_is_rejected() {
+    let out = repro(&["train", "--set", "gamma"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("key=value"), "{}", stderr(&out));
+}
+
+#[test]
+fn unknown_config_key_is_rejected() {
+    let out = repro(&["train", "--set", "not_a_knob=1", "--learner", "linear"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("not_a_knob"), "{}", stderr(&out));
+}
+
+#[test]
+fn invalid_config_value_is_rejected() {
+    let out = repro(&["train", "--set", "clients=banana", "--learner", "linear"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("banana"), "{}", stderr(&out));
+}
+
+#[test]
+fn unknown_learner_is_rejected() {
+    let out = repro(&["train", "--learner", "quantum"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("unknown learner"), "{}", stderr(&out));
+}
+
+#[test]
+fn missing_config_file_is_reported_with_path() {
+    let out = repro(&["train", "--config", "definitely_missing_cfg.json"]);
+    assert!(!out.status.success());
+    assert!(
+        stderr(&out).contains("definitely_missing_cfg.json"),
+        "{}",
+        stderr(&out)
+    );
+}
+
+#[test]
+fn inspect_rejects_unknown_target() {
+    let out = repro(&["inspect", "nonsense"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("unknown inspect target"), "{}", stderr(&out));
+}
+
+#[test]
+fn analyze_without_records_says_run_figures_first() {
+    let dir = scratch_dir("analyze");
+    let out = repro(&["analyze", "--results", dir.to_str().unwrap()]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("repro figures"), "{}", stderr(&out));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn smoke_without_artifacts_mentions_make_artifacts() {
+    let dir = scratch_dir("smoke");
+    let out = repro(&["smoke", "--artifacts", dir.to_str().unwrap()]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("make artifacts"), "{}", stderr(&out));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ----------------------------------------------- analytic happy paths
+
+#[test]
+fn inspect_naive_decay_emits_csv_table() {
+    let out = repro(&["inspect", "naive-decay", "--clients", "8"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.starts_with("schedule_position,effective_coefficient"), "{text}");
+    // Header + one row per schedule position.
+    assert_eq!(text.lines().count(), 9, "{text}");
+}
+
+#[test]
+fn inspect_betas_emits_solved_coefficients() {
+    let out = repro(&["inspect", "betas", "--clients", "5"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("schedule_position,beta"), "{text}");
+    assert_eq!(text.lines().count(), 6, "{text}");
+    // β_1 = 0: the first aggregation of a sweep discards the old global.
+    assert!(text.lines().nth(1).unwrap().starts_with("1,0.0"), "{text}");
+}
+
+#[test]
+fn timeline_writes_fig2_csv() {
+    let dir = scratch_dir("timeline");
+    let out = repro(&[
+        "timeline",
+        "--clients",
+        "20",
+        "--local-steps",
+        "16",
+        "--out",
+        dir.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let csv = std::fs::read_to_string(dir.join("fig2_timeline.csv")).unwrap();
+    // The Sec. II-C analytic values for the default time model.
+    assert!(csv.contains("sfl,homogeneous,round_time,2210"), "{csv}");
+    assert!(csv.contains("afl,any,update_interval,150"), "{csv}");
+    // The command also echoes the table to stdout.
+    assert!(stdout(&out).contains("update_interval"), "{}", stdout(&out));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn verbosity_flags_are_accepted() {
+    // -q / -v must parse (they mutate global logger state, not config).
+    let out = repro(&["-q", "inspect", "betas", "--clients", "3"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let out = repro(&["-v", "inspect", "naive-decay", "--clients", "3"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+}
+
+#[test]
+fn repeated_options_last_one_wins() {
+    let out = repro(&["inspect", "betas", "--clients", "3", "--clients", "4"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert_eq!(stdout(&out).lines().count(), 5, "{}", stdout(&out));
+}

@@ -5,37 +5,57 @@
 //! ablation, and a short end-to-end federated run on the CNN.
 //!
 //! They are skipped (with a loud message) when artifacts/ is absent so
-//! `cargo test` still works in a fresh checkout; `make test` always
+//! `cargo test` still works in a fresh checkout; `make test-pjrt`
 //! builds artifacts first.
+//!
+//! The whole file is additionally gated on the `pjrt` cargo feature:
+//! the default build replaces the engine with a stub that cannot
+//! execute artifacts, so these tests only make sense with
+//! `cargo test --features pjrt` (and a PJRT-linked runtime::xla).
+
+#![cfg(feature = "pjrt")]
 
 use csmaafl::config::{AggregatorKind, Algorithm, RunConfig};
 use csmaafl::learner::{Learner, PjrtLearner};
 use csmaafl::runtime::{Engine, Manifest};
 use csmaafl::session::{LearnerKind, Session};
 
-fn manifest() -> Option<Manifest> {
-    match Manifest::load("artifacts") {
-        Ok(m) => Some(m),
-        Err(e) => {
-            eprintln!("SKIPPING pjrt integration test: {e:#}");
-            None
+/// Artifacts directory anchored to the repo root (cargo runs test
+/// binaries with CWD = the package root, `rust/`; `make artifacts`
+/// writes to the repository root).
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
+
+/// Evaluate a setup `Result`. Environment gaps — missing/stale
+/// artifacts (every manifest error path says "make artifacts") or a
+/// `runtime::xla` seam not bound to a native PJRT runtime ("not
+/// linked") — skip the test loudly. Any other setup failure is a
+/// genuine regression in the code under test and fails the test.
+macro_rules! require {
+    ($setup:expr) => {
+        match $setup {
+            Ok(v) => v,
+            Err(e) => {
+                let msg = format!("{e:#}");
+                if msg.contains("make artifacts") || msg.contains("not linked") {
+                    eprintln!("SKIPPING pjrt integration test: {msg}");
+                    return;
+                }
+                panic!("pjrt setup failed: {msg}");
+            }
         }
-    }
+    };
 }
 
 macro_rules! require_artifacts {
     () => {
-        match manifest() {
-            Some(m) => m,
-            None => return,
-        }
+        require!(Manifest::load(ARTIFACTS))
     };
 }
 
 #[test]
 fn init_is_deterministic_and_spec_conformant() {
     let m = require_artifacts!();
-    let engine = Engine::from_manifest(&m, "mnist_small").unwrap();
+    let engine = require!(Engine::from_manifest(&m, "mnist_small"));
     let a = engine.init(5).unwrap();
     let b = engine.init(5).unwrap();
     let c = engine.init(6).unwrap();
@@ -52,7 +72,7 @@ fn init_is_deterministic_and_spec_conformant() {
 #[test]
 fn train_step_reduces_loss_on_fixed_batch() {
     let m = require_artifacts!();
-    let engine = Engine::from_manifest(&m, "mnist_small").unwrap();
+    let engine = require!(Engine::from_manifest(&m, "mnist_small"));
     let model = engine.model().clone();
     let img = model.image_numel();
     // Fixed easy batch: class = brightness pattern.
@@ -79,7 +99,7 @@ fn train_step_reduces_loss_on_fixed_batch() {
 #[test]
 fn train_chunk_matches_sequential_steps() {
     let m = require_artifacts!();
-    let engine = Engine::from_manifest(&m, "mnist_small").unwrap();
+    let engine = require!(Engine::from_manifest(&m, "mnist_small"));
     let model = engine.model().clone();
     let img = model.image_numel();
     let s = model.chunk_steps;
@@ -102,7 +122,7 @@ fn train_chunk_matches_sequential_steps() {
 #[test]
 fn pjrt_aggregate_matches_native() {
     let m = require_artifacts!();
-    let engine = Engine::from_manifest(&m, "mnist_small").unwrap();
+    let engine = require!(Engine::from_manifest(&m, "mnist_small"));
     let a = engine.init(2).unwrap();
     let b = engine.init(3).unwrap();
     for beta in [0.0f32, 0.25, 0.5, 0.9, 1.0] {
@@ -117,7 +137,7 @@ fn pjrt_aggregate_matches_native() {
 #[test]
 fn learner_handles_non_chunk_multiple_steps() {
     let m = require_artifacts!();
-    let engine = Engine::from_manifest(&m, "mnist_small").unwrap();
+    let engine = require!(Engine::from_manifest(&m, "mnist_small"));
     let model = engine.model().clone();
     let img = model.image_numel();
     let learner = PjrtLearner::new(engine);
@@ -141,7 +161,7 @@ fn cnn_federated_short_run_learns() {
     cfg.test_samples = 100;
     cfg.local_steps = 32;
     cfg.max_slots = 10.0;
-    let session = Session::new(cfg, LearnerKind::Pjrt, "artifacts").unwrap();
+    let session = require!(Session::new(cfg, LearnerKind::Pjrt, ARTIFACTS));
     let run = session
         .run_with(|c| c.algorithm = Algorithm::Csmaafl)
         .unwrap();
@@ -159,7 +179,7 @@ fn aggregator_ablation_same_result() {
     cfg.test_samples = 100;
     cfg.local_steps = 8;
     cfg.max_slots = 2.0;
-    let session = Session::new(cfg, LearnerKind::Pjrt, "artifacts").unwrap();
+    let session = require!(Session::new(cfg, LearnerKind::Pjrt, ARTIFACTS));
     let native = session
         .run_with(|c| c.aggregator = AggregatorKind::Native)
         .unwrap();

@@ -1,6 +1,7 @@
-//! Property-style test sweeps over coordinator invariants (the offline
-//! vendor set has no proptest; these are seeded random-input sweeps with
-//! the same intent — every case runs hundreds of random instances).
+//! Property-style test sweeps over coordinator invariants (the
+//! dependency-minimal build has no proptest; these are seeded
+//! random-input sweeps with the same intent — every case runs hundreds
+//! of random instances).
 
 use csmaafl::coordinator::scheduler::{SchedulerPolicy, UploadScheduler};
 use csmaafl::coordinator::staleness::{local_weight, StalenessTracker};
