@@ -23,14 +23,16 @@ fn early_acc(r: &RunResult) -> f64 {
 
 fn main() {
     for spec in &FIGURES {
-        let mut cfg = RunConfig::default();
-        cfg.dataset = spec.dataset;
-        cfg.partition = spec.partition;
-        cfg.clients = 16;
-        cfg.samples_per_client = 50;
-        cfg.test_samples = 300;
-        cfg.local_steps = 24;
-        cfg.max_slots = 25.0;
+        let cfg = RunConfig {
+            dataset: spec.dataset,
+            partition: spec.partition,
+            clients: 16,
+            samples_per_client: 50,
+            test_samples: 300,
+            local_steps: 24,
+            max_slots: 25.0,
+            ..RunConfig::default()
+        };
 
         let t0 = std::time::Instant::now();
         let session = Session::new(cfg, LearnerKind::Linear, "artifacts").unwrap();

@@ -11,17 +11,19 @@ use csmaafl::session::{LearnerKind, Session};
 use csmaafl::sim::HeterogeneityProfile;
 
 fn main() {
-    let mut cfg = RunConfig::default();
-    cfg.clients = 20;
-    cfg.samples_per_client = 50;
-    cfg.test_samples = 300;
-    cfg.local_steps = 24;
-    cfg.max_slots = 15.0;
-    cfg.heterogeneity = HeterogeneityProfile::Extreme {
-        fast_frac: 0.2,
-        slow_frac: 0.2,
-        mid_factor: 3.0,
-        slow_factor: 10.0,
+    let cfg = RunConfig {
+        clients: 20,
+        samples_per_client: 50,
+        test_samples: 300,
+        local_steps: 24,
+        max_slots: 15.0,
+        heterogeneity: HeterogeneityProfile::Extreme {
+            fast_frac: 0.2,
+            slow_frac: 0.2,
+            mid_factor: 3.0,
+            slow_factor: 10.0,
+        },
+        ..RunConfig::default()
     };
     let session = Session::new(cfg, LearnerKind::Linear, "artifacts").unwrap();
 

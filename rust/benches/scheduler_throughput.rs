@@ -39,13 +39,15 @@ fn main() {
 
     // End-to-end AFL iteration rate with the (cheap) linear learner: the
     // virtual-time engine + scheduling + aggregation, everything but PJRT.
-    let mut cfg = RunConfig::default();
-    cfg.clients = 20;
-    cfg.samples_per_client = 40;
-    cfg.test_samples = 100;
-    cfg.local_steps = 8;
-    cfg.max_slots = 10.0;
-    cfg.eval_every_slots = 10.0; // evaluation excluded from the hot loop
+    let cfg = RunConfig {
+        clients: 20,
+        samples_per_client: 40,
+        test_samples: 100,
+        local_steps: 8,
+        max_slots: 10.0,
+        eval_every_slots: 10.0, // evaluation excluded from the hot loop
+        ..RunConfig::default()
+    };
     let session = Session::new(cfg, LearnerKind::Linear, "artifacts").unwrap();
 
     let mut e2e = Bencher::new("end-to-end AFL engine (linear learner)")

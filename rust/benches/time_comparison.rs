@@ -50,15 +50,17 @@ fn simulated_update_counts() {
         "{:<16} {:>12} {:>12} {:>14}",
         "mode", "aggs", "per slot", "fairness"
     );
-    let mut cfg = RunConfig::default();
-    cfg.clients = 20;
-    cfg.samples_per_client = 20;
-    cfg.test_samples = 100;
-    cfg.local_steps = 16;
-    cfg.max_slots = 5.0;
-    cfg.eval_every_slots = 5.0;
-    cfg.heterogeneity = HeterogeneityProfile::Homogeneous;
-    cfg.jitter = 0.0;
+    let cfg = RunConfig {
+        clients: 20,
+        samples_per_client: 20,
+        test_samples: 100,
+        local_steps: 16,
+        max_slots: 5.0,
+        eval_every_slots: 5.0,
+        heterogeneity: HeterogeneityProfile::Homogeneous,
+        jitter: 0.0,
+        ..RunConfig::default()
+    };
     let session = Session::new(cfg, LearnerKind::Linear, "artifacts").unwrap();
     for alg in [Algorithm::Sfl, Algorithm::Csmaafl] {
         let run = session.run_with(|c| c.algorithm = alg).unwrap();

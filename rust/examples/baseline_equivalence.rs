@@ -33,14 +33,16 @@ fn main() -> Result<()> {
 
     // --- end-to-end view ------------------------------------------------
     // One SFL round vs one baseline-AFL sweep over the same local models.
-    let mut cfg = RunConfig::default();
-    cfg.clients = 10;
-    cfg.samples_per_client = 40;
-    cfg.test_samples = 200;
-    cfg.local_steps = 8;
-    cfg.max_slots = 1.2; // just past one round/sweep
-    cfg.eval_every_slots = 1.2;
-    cfg.jitter = 0.0; // identical compute draws
+    let cfg = RunConfig {
+        clients: 10,
+        samples_per_client: 40,
+        test_samples: 200,
+        local_steps: 8,
+        max_slots: 1.2, // just past one round/sweep
+        eval_every_slots: 1.2,
+        jitter: 0.0, // identical compute draws
+        ..RunConfig::default()
+    };
 
     let session = Session::new(cfg, LearnerKind::Linear, "artifacts")?;
     let sfl = session.run_with(|c| c.algorithm = Algorithm::Sfl)?;

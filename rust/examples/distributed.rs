@@ -31,6 +31,7 @@ fn main() -> Result<()> {
         max_iterations: 300,
         gamma: 0.2,
         mu_rho: 0.1,
+        aggregation: None,
     };
 
     let leader = std::thread::spawn({

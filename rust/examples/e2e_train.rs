@@ -22,13 +22,15 @@ use csmaafl::session::{LearnerKind, Session};
 const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
 
 fn main() -> Result<()> {
-    let mut cfg = RunConfig::default();
-    cfg.clients = 20;
-    cfg.samples_per_client = 80;
-    cfg.test_samples = 500;
-    cfg.local_steps = 48;
-    cfg.max_slots = 25.0;
-    cfg.gamma = 0.2;
+    let cfg = RunConfig {
+        clients: 20,
+        samples_per_client: 80,
+        test_samples: 500,
+        local_steps: 48,
+        max_slots: 25.0,
+        gamma: 0.2,
+        ..RunConfig::default()
+    };
 
     // Switch to LearnerKind::Pjrt for full CNN fidelity (needs
     // `--features pjrt`, artifacts, and a PJRT-bound runtime::xla).

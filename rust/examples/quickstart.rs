@@ -18,12 +18,14 @@ use csmaafl::session::{LearnerKind, Session};
 const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
 
 fn main() -> Result<()> {
-    let mut cfg = RunConfig::default();
-    cfg.clients = 8;
-    cfg.samples_per_client = 40;
-    cfg.test_samples = 200;
-    cfg.local_steps = 16;
-    cfg.max_slots = 10.0;
+    let cfg = RunConfig {
+        clients: 8,
+        samples_per_client: 40,
+        test_samples: 200,
+        local_steps: 16,
+        max_slots: 10.0,
+        ..RunConfig::default()
+    };
 
     // Switch to LearnerKind::Pjrt for the AOT CNN (needs `--features
     // pjrt`, artifacts, and a PJRT-bound runtime::xla).

@@ -18,6 +18,7 @@ pub fn run_from_json(j: &Json) -> Result<RunResult> {
     run.aggregations = j.get("aggregations").and_then(Json::as_i64).unwrap_or(0) as u64;
     run.mean_staleness = j.get("mean_staleness").and_then(Json::as_f64).unwrap_or(0.0);
     run.fairness = j.get("fairness").and_then(Json::as_f64).unwrap_or(1.0);
+    run.lost_uploads = j.get("lost_uploads").and_then(Json::as_i64).unwrap_or(0) as u64;
     run.total_ticks = j.get("total_ticks").and_then(Json::as_i64).unwrap_or(0) as u64;
     run.wallclock_secs = j.get("wallclock_secs").and_then(Json::as_f64).unwrap_or(0.0);
     run.uploads_per_client = j
@@ -142,11 +143,13 @@ mod tests {
 
     #[test]
     fn json_record_roundtrip() {
-        let r = fake_run("x", &[0.1, 0.5, 0.9]);
+        let mut r = fake_run("x", &[0.1, 0.5, 0.9]);
+        r.lost_uploads = 3;
         let back = run_from_json(&r.to_json()).unwrap();
         assert_eq!(back.label, "x");
         assert_eq!(back.points.len(), 3);
         assert_eq!(back.points[2].accuracy, 0.9);
+        assert_eq!(back.lost_uploads, 3);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::coordinator::policy::{AggregationPolicy, PolicyParams};
 use crate::coordinator::scheduler::SchedulerPolicy;
 use crate::data::{Partition, SynthKind};
 use crate::sim::{HeterogeneityProfile, TimeModel};
@@ -66,10 +67,18 @@ impl AggregatorKind {
             _ => None,
         }
     }
+
+    /// Canonical config spelling (JSON provenance).
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggregatorKind::Native => "native",
+            AggregatorKind::Pjrt => "pjrt",
+        }
+    }
 }
 
 /// Full description of one federated run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
     /// Which federated algorithm the run executes.
     pub algorithm: Algorithm,
@@ -107,6 +116,10 @@ pub struct RunConfig {
     pub adaptive_iters: bool,
     /// Which eq.-(3) aggregation implementation the server uses.
     pub aggregator: AggregatorKind,
+    /// Aggregation-policy registry spelling (e.g. `staleness:0.4`,
+    /// `fedasync:0.5`) overriding the algorithm's paper default for AFL
+    /// runs; `None` (spelled `auto`) keeps the default.
+    pub aggregation: Option<String>,
     /// Upload-slot arbitration policy (AFL engines).
     pub scheduler: SchedulerPolicy,
     /// Failure injection: probability that a granted upload is lost in
@@ -142,6 +155,7 @@ impl Default for RunConfig {
             eval_every_slots: 1.0,
             adaptive_iters: true,
             aggregator: AggregatorKind::Native,
+            aggregation: None,
             scheduler: SchedulerPolicy::OldestModelFirst,
             upload_loss: 0.0,
             sfl_sample_fraction: 1.0,
@@ -176,6 +190,24 @@ impl RunConfig {
         }
         if !(0.0..=1.0).contains(&self.sfl_sample_fraction) || self.sfl_sample_fraction == 0.0 {
             bail!("sfl_sample_fraction must be in (0,1]");
+        }
+        if let Some(spec) = &self.aggregation {
+            // Only the event-driven AFL engines consult the registry;
+            // accepting the override elsewhere would silently run a
+            // different rule than the user asked for.
+            if !matches!(self.algorithm, Algorithm::AflNaive | Algorithm::Csmaafl) {
+                bail!(
+                    "aggregation overrides apply only to the event-driven AFL \
+                     engines (afl-naive/csmaafl); algorithm {} uses its fixed rule",
+                    self.algorithm.name()
+                );
+            }
+            let params = PolicyParams {
+                clients: self.clients,
+                gamma: self.gamma,
+            };
+            <dyn AggregationPolicy>::parse(spec, &params)
+                .with_context(|| format!("aggregation policy {spec:?}"))?;
         }
         Ok(())
     }
@@ -245,6 +277,15 @@ impl RunConfig {
             "eval_every_slots" => self.eval_every_slots = val.parse().map_err(|_| badval())?,
             "adaptive_iters" => self.adaptive_iters = val.parse().map_err(|_| badval())?,
             "aggregator" => self.aggregator = AggregatorKind::parse(val).ok_or_else(badval)?,
+            // Policy spellings are validated against the registry (with
+            // the final clients/gamma) in `validate`.
+            "aggregation" => {
+                self.aggregation = if val.eq_ignore_ascii_case("auto") {
+                    None
+                } else {
+                    Some(val.to_string())
+                }
+            }
             "scheduler" => self.scheduler = SchedulerPolicy::parse(val).ok_or_else(badval)?,
             "upload_loss" => self.upload_loss = val.parse().map_err(|_| badval())?,
             "sfl_sample_fraction" => {
@@ -279,17 +320,13 @@ impl RunConfig {
             .set("adaptive_iters", Json::Bool(self.adaptive_iters))
             .set("upload_loss", Json::Float(self.upload_loss))
             .set("sfl_sample_fraction", Json::Float(self.sfl_sample_fraction))
+            .set("heterogeneity", Json::Str(self.heterogeneity.spec()))
+            .set("aggregator", Json::Str(self.aggregator.name().into()))
             .set(
-                "scheduler",
-                Json::Str(
-                    match self.scheduler {
-                        SchedulerPolicy::OldestModelFirst => "oldest",
-                        SchedulerPolicy::Fifo => "fifo",
-                        SchedulerPolicy::RoundRobin => "roundrobin",
-                    }
-                    .into(),
-                ),
-            );
+                "aggregation",
+                Json::Str(self.aggregation.clone().unwrap_or_else(|| "auto".into())),
+            )
+            .set("scheduler", Json::Str(self.scheduler.name().into()));
         o
     }
 }
@@ -322,8 +359,31 @@ mod tests {
         assert_eq!(c.scheduler, SchedulerPolicy::Fifo);
         c.set_field("aggregator", "pjrt").unwrap();
         assert_eq!(c.aggregator, AggregatorKind::Pjrt);
+        c.set_field("aggregation", "fedasync:0.5").unwrap();
+        assert_eq!(c.aggregation.as_deref(), Some("fedasync:0.5"));
+        c.set_field("aggregation", "auto").unwrap();
+        assert_eq!(c.aggregation, None);
         assert!(c.set_field("nonsense", "1").is_err());
         assert!(c.set_field("clients", "abc").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_aggregation_spec() {
+        let mut c = RunConfig {
+            aggregation: Some("bogus".into()),
+            ..RunConfig::default()
+        };
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("bogus"), "{err}");
+        c.aggregation = Some("staleness:0.4".into());
+        c.validate().unwrap();
+        // Engines that cannot honor the override must refuse it rather
+        // than silently running their fixed rule.
+        c.algorithm = Algorithm::Sfl;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("fixed rule"), "{err}");
+        c.algorithm = Algorithm::AflBaseline;
+        assert!(c.validate().is_err());
     }
 
     #[test]
@@ -341,24 +401,54 @@ mod tests {
 
     #[test]
     fn validation_catches_bad_values() {
-        let mut c = RunConfig::default();
-        c.clients = 0;
+        let c = RunConfig {
+            clients: 0,
+            ..RunConfig::default()
+        };
         assert!(c.validate().is_err());
-        c = RunConfig::default();
-        c.gamma = 0.0;
+        let c = RunConfig {
+            gamma: 0.0,
+            ..RunConfig::default()
+        };
         assert!(c.validate().is_err());
-        c = RunConfig::default();
-        c.max_slots = -1.0;
+        let c = RunConfig {
+            max_slots: -1.0,
+            ..RunConfig::default()
+        };
         assert!(c.validate().is_err());
     }
 
     #[test]
     fn json_roundtrip() {
+        // Full-struct equality: a stored run record must reproduce the
+        // run, so every field — including heterogeneity, aggregator and
+        // aggregation, which an earlier to_json dropped — roundtrips.
         let c = RunConfig::default();
-        let j = c.to_json();
-        let c2 = RunConfig::from_json(&j).unwrap();
-        assert_eq!(c2.clients, c.clients);
-        assert_eq!(c2.algorithm, c.algorithm);
-        assert_eq!(c2.time, c.time);
+        let c2 = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2, c);
+
+        // And with every provenance-prone field set off-default.
+        let c = RunConfig {
+            heterogeneity: HeterogeneityProfile::Extreme {
+                fast_frac: 0.25,
+                slow_frac: 0.125,
+                mid_factor: 3.5,
+                slow_factor: 12.0,
+            },
+            aggregator: AggregatorKind::Pjrt,
+            aggregation: Some("fedasync:0.5,0.9".into()),
+            scheduler: SchedulerPolicy::RoundRobin,
+            jitter: 0.25,
+            ..RunConfig::default()
+        };
+        let c2 = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2, c);
+
+        let c = RunConfig {
+            heterogeneity: HeterogeneityProfile::Lognormal { sigma: 0.75 },
+            ..RunConfig::default()
+        };
+        let c2 = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2, c);
     }
 }

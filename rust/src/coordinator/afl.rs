@@ -1,39 +1,31 @@
-//! Event-driven asynchronous FL (Sec. II-B) with pluggable scheduling and
-//! aggregation — runs both CSMAAFL (Sec. III-C) and the naive-coefficient
-//! AFL (Sec. III-A).
+//! Event-driven asynchronous FL (Sec. II-B): the virtual-time driver
+//! shell around the sans-IO `ServerCore`.
 //!
 //! Lifecycle per client (Fig. 1 right / Fig. 2 bottom):
 //!   DownloadDone(w_i) → local compute (`a_m·E'·τ_step`) → ComputeDone →
 //!   upload-slot request → grant (TDMA, one at a time) → UploadDone →
 //!   server aggregates w_{j+1} = β_j·w_j + (1-β_j)·w_i^m, sends the fresh
 //!   global back to that client only.
+//!
+//! All server-side decisions — which β, which statistics — live in
+//! `coordinator::core`/`coordinator::policy`; this file only simulates
+//! time, compute and the uplink channel. The same core drives the TCP
+//! deployment leader (`net::leader`), so the simulator and the
+//! deployment share one aggregation code path.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::runner::{FlContext, Recorder};
+use super::core::ServerCore;
+use super::policy::AggregationPolicy;
+use super::runner::{FlContext, Recorder, RunStats};
 use super::scheduler::{SchedulerPolicy, UploadScheduler};
-use super::staleness::{local_weight, StalenessTracker};
 use crate::learner::BatchCursor;
 use crate::metrics::RunResult;
 use crate::model::ParamSet;
-use crate::sim::{ComputeModel, EventQueue, UplinkChannel};
+use crate::sim::{ComputeModel, EventQueue, Ticks, UplinkChannel};
 use crate::util::rng::Rng;
-
-/// How the server picks β_j at each aggregation.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum BetaPolicy {
-    /// Sec. III-A: reuse the SFL coefficient (β_j = 1 - α_m).
-    NaiveAlpha,
-    /// Sec. III-C eq. (11): staleness-aware with moving average μ.
-    Staleness {
-        /// The γ hyper-parameter of eq. (11).
-        gamma: f64,
-        /// EMA rate of the μ_ji staleness tracker.
-        rho: f64,
-    },
-}
 
 #[derive(Debug)]
 enum Event {
@@ -69,12 +61,30 @@ pub fn adaptive_steps(base: usize, factor: f64, enabled: bool) -> usize {
     ((base as f64 / factor).round() as usize).clamp(1, base * 4)
 }
 
+/// If the uplink is idle, grant the next contender a slot and schedule
+/// its upload completion (the TDMA channel-grant step, shared by every
+/// place an upload can start or the channel can free up).
+fn grant_next(
+    scheduler: &mut UploadScheduler,
+    channel: &mut UplinkChannel,
+    queue: &mut EventQueue<Event>,
+    now: Ticks,
+    tau_up: Ticks,
+) {
+    if channel.is_free(now) {
+        if let Some(winner) = scheduler.grant() {
+            let done = channel.reserve(now, tau_up);
+            queue.schedule_at(done, Event::UploadDone { client: winner });
+        }
+    }
+}
+
 /// Run the event-driven asynchronous engine: Algorithm 1 with the given
-/// β policy (naive vs eq.-11 staleness-aware) and upload-slot
-/// arbitration policy. `label` names the emitted series.
+/// aggregation policy and upload-slot arbitration policy. `label` names
+/// the emitted series.
 pub fn run_afl(
     ctx: &FlContext<'_>,
-    beta_policy: BetaPolicy,
+    policy: Box<dyn AggregationPolicy>,
     sched_policy: SchedulerPolicy,
     label: String,
 ) -> Result<RunResult> {
@@ -93,13 +103,11 @@ pub fn run_afl(
 
     let img = ctx.train.x.len() / ctx.train.len();
     let batch = ctx.learner.batch();
-    let alpha = 1.0 / m as f64;
 
-    let mut w = ctx.learner.init(cfg.seed as u32)?;
+    let mut core = ServerCore::new(ctx.learner.init(cfg.seed as u32)?, m, policy, cfg.mu_rho);
     let mut queue: EventQueue<Event> = EventQueue::new();
     let mut channel = UplinkChannel::new();
     let mut scheduler = UploadScheduler::new(sched_policy, m);
-    let mut tracker = StalenessTracker::new(cfg.mu_rho);
     let mut clients: Vec<ClientState> = ctx
         .shards
         .iter()
@@ -109,20 +117,18 @@ pub fn run_afl(
         })
         .collect();
 
-    let mut j: u64 = 0; // global aggregation count
-    let mut staleness_sum: f64 = 0.0;
-    let mut lost_uploads: u64 = 0;
     let mut xs = Vec::new();
     let mut ys = Vec::new();
 
     // t=0: the server broadcasts w_0 to everyone (Algorithm 1 line 1).
     // One shared snapshot for the whole broadcast.
-    let w0 = Arc::new(w.clone());
+    let w0 = Arc::new(core.global().clone());
     for c in 0..m {
+        let i = core.issue_to(c);
         queue.schedule_at(cfg.time.tau_down, Event::DownloadDone {
             client: c,
             w: Arc::clone(&w0),
-            i: 0,
+            i,
         });
     }
     drop(w0);
@@ -150,12 +156,7 @@ pub fn run_afl(
             }
             Event::ComputeDone { client } => {
                 scheduler.request(client, now);
-                if channel.is_free(now) {
-                    if let Some(winner) = scheduler.grant() {
-                        let done = channel.reserve(now, cfg.time.tau_up);
-                        queue.schedule_at(done, Event::UploadDone { client: winner });
-                    }
-                }
+                grant_next(&mut scheduler, &mut channel, &mut queue, now, cfg.time.tau_up);
             }
             Event::UploadDone { client } => {
                 let (local, i) = clients[client]
@@ -166,66 +167,53 @@ pub fn run_afl(
                 // server never sees the model; it re-sends the current
                 // global so the client rejoins the loop.
                 if cfg.upload_loss > 0.0 && jrng.f64() < cfg.upload_loss {
-                    lost_uploads += 1;
+                    core.on_lost_upload(client);
+                    let i = core.issue_to(client);
                     queue.schedule_in(cfg.time.tau_down, Event::DownloadDone {
                         client,
-                        w: Arc::new(w.clone()),
-                        i: j,
+                        w: Arc::new(core.global().clone()),
+                        i,
                     });
-                    if channel.is_free(now) {
-                        if let Some(winner) = scheduler.grant() {
-                            let done = channel.reserve(now, cfg.time.tau_up);
-                            queue.schedule_at(done, Event::UploadDone { client: winner });
-                        }
-                    }
+                    grant_next(&mut scheduler, &mut channel, &mut queue, now, cfg.time.tau_up);
                     continue;
                 }
                 // Evaluate cadence points that precede this aggregation.
-                rec.catch_up(now, &w, j)?;
+                rec.catch_up(now, core.global(), core.iteration())?;
 
-                let staleness = j - i;
-                let weight = match beta_policy {
-                    BetaPolicy::NaiveAlpha => alpha,
-                    BetaPolicy::Staleness { gamma, .. } => {
-                        let lw = local_weight(tracker.mu(), gamma, j + 1, staleness);
-                        tracker.observe(staleness);
-                        lw
-                    }
-                };
-                staleness_sum += staleness as f64;
-                let beta = (1.0 - weight) as f32;
-                ctx.aggregate(&mut w, &local, beta)?; // eq. (3)/(11)
-                j += 1;
+                core.on_update(client, i, &local, ctx)?; // eq. (3)/(11)
 
                 // Fresh global goes back to this client only (a snapshot:
                 // further aggregations must not mutate an in-flight model).
+                let i = core.issue_to(client);
                 queue.schedule_in(cfg.time.tau_down, Event::DownloadDone {
                     client,
-                    w: Arc::new(w.clone()),
-                    i: j,
+                    w: Arc::new(core.global().clone()),
+                    i,
                 });
                 // Channel freed: grant the next contender, if any.
-                if channel.is_free(now) {
-                    if let Some(winner) = scheduler.grant() {
-                        let done = channel.reserve(now, cfg.time.tau_up);
-                        queue.schedule_at(done, Event::UploadDone { client: winner });
-                    }
-                }
+                grant_next(&mut scheduler, &mut channel, &mut queue, now, cfg.time.tau_up);
             }
         }
     }
-    rec.finish(&w, j)?;
-    if lost_uploads > 0 {
+    rec.finish(core.global(), core.iteration())?;
+    if core.lost_uploads() > 0 {
         crate::log_info!(
-            "afl: {lost_uploads} uploads lost in transit ({} delivered)",
-            j
+            "afl: {} uploads lost in transit ({} delivered)",
+            core.lost_uploads(),
+            core.iteration()
         );
     }
 
-    let uploads = scheduler.grants().to_vec();
-    let fairness = scheduler.jain_fairness();
-    let mean_staleness = if j > 0 { staleness_sum / j as f64 } else { 0.0 };
-    Ok(rec.into_result(label, uploads, j, mean_staleness, fairness, max_ticks))
+    let stats = RunStats {
+        label,
+        uploads: scheduler.grants().to_vec(),
+        aggregations: core.iteration(),
+        mean_staleness: core.mean_staleness(),
+        fairness: scheduler.jain_fairness(),
+        lost_uploads: core.lost_uploads(),
+        total_ticks: max_ticks,
+    };
+    Ok(rec.into_result(stats))
 }
 
 #[cfg(test)]

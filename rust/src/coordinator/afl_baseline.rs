@@ -7,13 +7,19 @@
 //! schedule is predetermined — fastest clients first, so uploads overlap
 //! slower clients' compute, (c) the global model is broadcast to all
 //! clients every M iterations.
+//!
+//! The solved β schedule is the `SolvedBeta` aggregation policy; this
+//! driver only simulates the sweep timing and feeds uploads through the
+//! shared sans-IO `ServerCore`.
 
 use anyhow::Result;
 
-use super::beta_solver::solve_betas;
-use super::runner::{FlContext, Recorder};
+use super::core::ServerCore;
+use super::policy::SolvedBeta;
+use super::runner::{FlContext, Recorder, RunStats};
 use crate::learner::BatchCursor;
 use crate::metrics::RunResult;
+use crate::model::ParamSet;
 use crate::sim::ComputeModel;
 use crate::util::rng::Rng;
 
@@ -35,9 +41,14 @@ pub fn run_afl_baseline(ctx: &FlContext<'_>) -> Result<RunResult> {
 
     // Predetermined schedule: fastest first (requirement b).
     let order = cm.fastest_first();
-    // Equal shards ⇒ uniform α; solve the sweep coefficients once.
-    let alpha = vec![1.0 / m as f64; m];
-    let betas = solve_betas(&alpha)?;
+    // Equal shards ⇒ uniform α; the policy holds the solved sweep
+    // coefficients and cycles them per schedule position.
+    let mut core = ServerCore::new(
+        ctx.learner.init(cfg.seed as u32)?,
+        m,
+        Box::new(SolvedBeta::new(m)?),
+        cfg.mu_rho,
+    );
 
     let img = ctx.train.x.len() / ctx.train.len();
     let batch = ctx.learner.batch();
@@ -47,16 +58,18 @@ pub fn run_afl_baseline(ctx: &FlContext<'_>) -> Result<RunResult> {
         .map(|s| BatchCursor::new(s.indices.clone()))
         .collect();
 
-    let mut w = ctx.learner.init(cfg.seed as u32)?;
     let mut now: u64 = 0;
-    let mut j: u64 = 0;
-    let mut uploads = vec![0u64; m];
-    let mut staleness_sum = 0.0f64;
     let mut xs = Vec::new();
     let mut ys = Vec::new();
 
     while now < max_ticks {
         // Broadcast (requirement c): every client starts from this w.
+        // The sweep-start iteration stamps every client's base model, so
+        // the core observes staleness t at schedule position t.
+        let sweep_start = core.iteration();
+        for c in 0..m {
+            core.issue_to(c);
+        }
         let broadcast_done = now + cfg.time.tau_down;
         // Clients compute in parallel; each is ready at a different time.
         let ready: Vec<u64> = (0..m)
@@ -65,42 +78,38 @@ pub fn run_afl_baseline(ctx: &FlContext<'_>) -> Result<RunResult> {
 
         // All local models are trained from the SAME broadcast global —
         // that is what makes the solved-β sweep equal one FedAvg round.
-        let locals: Vec<_> = (0..m)
+        let w = core.global();
+        let locals: Vec<ParamSet> = (0..m)
             .map(|c| {
                 cursors[c].fill(ctx.train, cfg.local_steps * batch, img, &mut xs, &mut ys);
                 ctx.learner
-                    .train(&w, &xs, &ys, cfg.local_steps)
+                    .train(w, &xs, &ys, cfg.local_steps)
                     .map(|(p, _)| p)
             })
             .collect::<Result<_>>()?;
 
         // TDMA uploads in schedule order; the channel serializes them.
         let mut channel_free = broadcast_done;
-        for (t, &c) in order.iter().enumerate() {
+        for &c in order.iter() {
             let start = channel_free.max(ready[c]);
             let end = start + cfg.time.tau_up;
             channel_free = end;
-            rec.catch_up(end.min(max_ticks), &w, j)?;
+            rec.catch_up(end.min(max_ticks), core.global(), core.iteration())?;
             // Aggregation (eq. 3) with the solved coefficient.
-            ctx.aggregate(&mut w, &locals[c], betas[t] as f32)?;
-            j += 1;
-            uploads[c] += 1;
-            // Staleness bookkeeping: client scheduled at position t sees
-            // t aggregations since the sweep's broadcast.
-            staleness_sum += t as f64;
+            core.on_update(c, sweep_start, &locals[c], ctx)?;
         }
         now = channel_free;
     }
-    rec.finish(&w, j)?;
+    rec.finish(core.global(), core.iteration())?;
 
-    let fairness = 1.0; // one upload per client per sweep, by construction
-    let mean_staleness = if j > 0 { staleness_sum / j as f64 } else { 0.0 };
-    Ok(rec.into_result(
-        "afl-baseline".into(),
-        uploads,
-        j,
-        mean_staleness,
-        fairness,
-        max_ticks,
-    ))
+    let stats = RunStats {
+        label: "afl-baseline".into(),
+        uploads: core.updates_per_client().to_vec(),
+        aggregations: core.iteration(),
+        mean_staleness: core.mean_staleness(),
+        fairness: 1.0, // one upload per client per sweep, by construction
+        lost_uploads: 0,
+        total_ticks: max_ticks,
+    };
+    Ok(rec.into_result(stats))
 }

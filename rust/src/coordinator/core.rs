@@ -1,0 +1,274 @@
+//! The sans-IO federated server: one state machine shared verbatim by
+//! the virtual-time simulator (`afl`, `afl_baseline`) and the TCP
+//! deployment leader (`net::leader`).
+//!
+//! `ServerCore` owns the global model, the aggregation counter j, the
+//! μ_ji staleness tracker, per-client model-version bookkeeping and
+//! lost-upload statistics. It is driven entirely by explicit inputs —
+//! `issue_to` when a client is handed the global model, `on_update` when
+//! an upload arrives, `on_lost_upload` when one is dropped in transit —
+//! and knows nothing about virtual time, sockets or event queues. The
+//! aggregation *rule* is a pluggable `AggregationPolicy`; the eq.-(3)
+//! tensor arithmetic is a pluggable [`ModelAggregator`] (host lerp vs
+//! the PJRT Pallas kernel).
+
+use anyhow::Result;
+
+use super::policy::{AggregationPolicy, UpdateObservation};
+use super::staleness::StalenessTracker;
+use crate::model::ParamSet;
+
+/// Executor of eq. (3) `w ← β·w + (1-β)·w_local`: how the aggregation
+/// arithmetic runs, independent of which policy chose β.
+pub trait ModelAggregator {
+    /// Blend `local` into `global` with global-model coefficient `beta`.
+    fn aggregate(&self, global: &mut ParamSet, local: &ParamSet, beta: f32) -> Result<()>;
+}
+
+/// Host-tensor lerp — the default executor (the TCP leader uses this).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NativeAggregator;
+
+impl ModelAggregator for NativeAggregator {
+    fn aggregate(&self, global: &mut ParamSet, local: &ParamSet, beta: f32) -> Result<()> {
+        global.lerp_inplace(local, beta);
+        Ok(())
+    }
+}
+
+/// What one `ServerCore::on_update` did.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AggregationOutcome {
+    /// Global iteration count after this aggregation (1-based).
+    pub iteration: u64,
+    /// Observed staleness j - i of the absorbed update.
+    pub staleness: u64,
+    /// Weight `1-β_j` the policy gave the local model.
+    pub weight: f64,
+    /// The f32 β actually applied to the global model.
+    pub beta: f32,
+}
+
+/// The sans-IO server state machine. See the module docs for the
+/// driving contract.
+pub struct ServerCore {
+    w: ParamSet,
+    policy: Box<dyn AggregationPolicy>,
+    tracker: StalenessTracker,
+    j: u64,
+    alpha: f64,
+    model_version: Vec<u64>,
+    updates_per_client: Vec<u64>,
+    staleness_sum: f64,
+    lost_uploads: u64,
+}
+
+impl ServerCore {
+    /// A fresh server over initial global model `w0` for `clients`
+    /// clients, aggregating per `policy`, tracking μ at EMA rate
+    /// `mu_rho`.
+    pub fn new(
+        w0: ParamSet,
+        clients: usize,
+        policy: Box<dyn AggregationPolicy>,
+        mu_rho: f64,
+    ) -> ServerCore {
+        ServerCore {
+            w: w0,
+            policy,
+            tracker: StalenessTracker::new(mu_rho),
+            j: 0,
+            alpha: 1.0 / clients.max(1) as f64,
+            model_version: vec![0; clients],
+            updates_per_client: vec![0; clients],
+            staleness_sum: 0.0,
+            lost_uploads: 0,
+        }
+    }
+
+    /// The current global model.
+    pub fn global(&self) -> &ParamSet {
+        &self.w
+    }
+
+    /// Consume the core, yielding the final global model.
+    pub fn into_global(self) -> ParamSet {
+        self.w
+    }
+
+    /// Global aggregations performed so far (the paper's j).
+    pub fn iteration(&self) -> u64 {
+        self.j
+    }
+
+    /// Record that `client` is being handed the current global model and
+    /// return the iteration stamp to attach to it. The driver ships the
+    /// actual parameters (snapshot, socket frame, ...).
+    pub fn issue_to(&mut self, client: usize) -> u64 {
+        self.model_version[client] = self.j;
+        self.j
+    }
+
+    /// The iteration stamp of the model most recently issued to `client`.
+    pub fn model_version(&self, client: usize) -> u64 {
+        self.model_version[client]
+    }
+
+    /// Absorb an uploaded local model: ask the policy for the weight,
+    /// apply eq. (3) through `agg`, advance j and all statistics.
+    /// `start_iteration` is the stamp the client trained from (clients
+    /// self-report it in the TCP deployment; the simulator threads it
+    /// through its download events).
+    pub fn on_update(
+        &mut self,
+        client: usize,
+        start_iteration: u64,
+        local: &ParamSet,
+        agg: &dyn ModelAggregator,
+    ) -> Result<AggregationOutcome> {
+        let staleness = self.j.saturating_sub(start_iteration);
+        let update_norm = if self.policy.needs_update_norm() {
+            self.w.l2_distance(local)
+        } else {
+            0.0
+        };
+        let obs = UpdateObservation {
+            client,
+            iteration: self.j + 1,
+            staleness,
+            mu: self.tracker.mu(),
+            alpha: self.alpha,
+            update_norm,
+        };
+        let weight = self.policy.weight(&obs).clamp(0.0, 1.0);
+        let beta = self.policy.beta(weight);
+        self.tracker.observe(staleness);
+        self.staleness_sum += staleness as f64;
+        agg.aggregate(&mut self.w, local, beta)?;
+        self.j += 1;
+        self.updates_per_client[client] += 1;
+        Ok(AggregationOutcome {
+            iteration: self.j,
+            staleness,
+            weight,
+            beta,
+        })
+    }
+
+    /// Record an upload lost in transit (failure injection / network
+    /// drop). No aggregation happens; only the statistic advances.
+    pub fn on_lost_upload(&mut self, _client: usize) {
+        self.lost_uploads += 1;
+    }
+
+    /// Uploads lost in transit so far.
+    pub fn lost_uploads(&self) -> u64 {
+        self.lost_uploads
+    }
+
+    /// Mean observed staleness across aggregations (0 before the first).
+    pub fn mean_staleness(&self) -> f64 {
+        if self.j > 0 {
+            self.staleness_sum / self.j as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Updates absorbed per client (fairness accounting).
+    pub fn updates_per_client(&self) -> &[u64] {
+        &self.updates_per_client
+    }
+
+    /// Current μ_ji estimate of the staleness tracker.
+    pub fn mu(&self) -> f64 {
+        self.tracker.mu()
+    }
+
+    /// The aggregation policy's canonical label.
+    pub fn policy_label(&self) -> String {
+        self.policy.label()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::{NaiveAlpha, StalenessEq11};
+    use crate::coordinator::staleness::local_weight;
+    use crate::model::{Tensor, TensorSpec};
+
+    fn pset(vals: &[f32]) -> ParamSet {
+        let spec = TensorSpec {
+            name: "w".into(),
+            shape: vec![vals.len()],
+        };
+        ParamSet {
+            tensors: vec![Tensor::from_data(spec, vals.to_vec())],
+        }
+    }
+
+    #[test]
+    fn core_replays_the_pre_refactor_eq11_loop_bit_for_bit() {
+        // The exact aggregation loop `afl.rs` ran before the refactor,
+        // inlined: weight from (μ, γ, j+1, staleness), observe, lerp.
+        let w0 = pset(&[1.0, -2.0, 0.5, 3.0]);
+        let updates: Vec<(u64, ParamSet)> = (0..40u64)
+            .map(|k| {
+                let vals: Vec<f32> = (0..4u64)
+                    .map(|t| ((k * 7 + t) % 13) as f32 * 0.25 - 1.0)
+                    .collect();
+                (k.saturating_sub(k % 5), pset(&vals))
+            })
+            .collect();
+
+        let gamma = 0.2;
+        let mut w = w0.clone();
+        let mut tracker = StalenessTracker::new(0.1);
+        let mut j = 0u64;
+        let mut staleness_sum = 0.0;
+        for (i, local) in &updates {
+            let staleness = j.saturating_sub(*i);
+            let lw = local_weight(tracker.mu(), gamma, j + 1, staleness);
+            tracker.observe(staleness);
+            staleness_sum += staleness as f64;
+            w.lerp_inplace(local, (1.0 - lw) as f32);
+            j += 1;
+        }
+
+        let mut core = ServerCore::new(
+            w0,
+            4,
+            Box::new(StalenessEq11::new(gamma).unwrap()),
+            0.1,
+        );
+        for (i, local) in &updates {
+            core.on_update(0, *i, local, &NativeAggregator).unwrap();
+        }
+        assert_eq!(core.iteration(), j);
+        assert_eq!(core.global().max_abs_diff(&w), 0.0, "bit-identical global");
+        assert!((core.mean_staleness() - staleness_sum / j as f64).abs() < 1e-15);
+    }
+
+    #[test]
+    fn issue_to_tracks_model_versions() {
+        let mut core = ServerCore::new(pset(&[0.0, 0.0]), 2, Box::new(NaiveAlpha), 0.1);
+        assert_eq!(core.issue_to(0), 0);
+        core.on_update(0, 0, &pset(&[1.0, 1.0]), &NativeAggregator)
+            .unwrap();
+        assert_eq!(core.issue_to(1), 1);
+        assert_eq!(core.model_version(0), 0);
+        assert_eq!(core.model_version(1), 1);
+        assert_eq!(core.updates_per_client(), &[1, 0]);
+    }
+
+    #[test]
+    fn lost_uploads_do_not_aggregate() {
+        let mut core = ServerCore::new(pset(&[1.0]), 1, Box::new(NaiveAlpha), 0.1);
+        core.on_lost_upload(0);
+        core.on_lost_upload(0);
+        assert_eq!(core.lost_uploads(), 2);
+        assert_eq!(core.iteration(), 0);
+        assert_eq!(core.global().max_abs_diff(&pset(&[1.0])), 0.0);
+    }
+}

@@ -1,53 +1,87 @@
 //! The paper's coordination layer: client scheduling + model aggregation.
 //!
-//! Four algorithms share one harness (`runner::FlContext`):
+//! The server side is a sans-IO state machine (`core::ServerCore`) with
+//! two open policy seams (`policy::AggregationPolicy`,
+//! `policy::SchedulingPolicy`); engines are thin drivers that feed it
+//! events. Four algorithms share one harness (`runner::FlContext`):
 //!
-//! | Algorithm       | Section | Engine                |
-//! |-----------------|---------|-----------------------|
-//! | `Sfl` (FedAvg)  | II-A    | [`sfl::run_sfl`]      |
-//! | `AflNaive`      | III-A   | [`afl::run_afl`]      |
-//! | `AflBaseline`   | III-B   | [`afl_baseline`]      |
-//! | `Csmaafl`       | III-C   | [`afl::run_afl`]      |
+//! | Algorithm       | Section | Driver                | Aggregation policy |
+//! |-----------------|---------|-----------------------|--------------------|
+//! | `Sfl` (FedAvg)  | II-A    | [`sfl::run_sfl`]      | (synchronous mean) |
+//! | `AflNaive`      | III-A   | [`afl::run_afl`]      | `NaiveAlpha`       |
+//! | `AflBaseline`   | III-B   | [`afl_baseline`]      | `SolvedBeta`       |
+//! | `Csmaafl`       | III-C   | [`afl::run_afl`]      | `StalenessEq11`    |
+//!
+//! Any AFL run can swap its aggregation rule via the config's
+//! `aggregation` spelling (e.g. `--set aggregation=fedasync:0.5`) —
+//! including the two related-work policies `FedAsyncPoly` and
+//! `AdaptiveDistance`. The TCP deployment leader (`net::leader`) drives
+//! the same `ServerCore`, so the simulator and the deployment share one
+//! aggregation code path.
 
 pub mod afl;
 pub mod afl_baseline;
 pub mod beta_solver;
+pub mod core;
+pub mod policy;
 pub mod runner;
 pub mod scheduler;
 pub mod sfl;
 pub mod staleness;
 
-pub use afl::{adaptive_steps, run_afl, BetaPolicy};
+pub use self::core::{AggregationOutcome, ModelAggregator, NativeAggregator, ServerCore};
+pub use afl::{adaptive_steps, run_afl};
 pub use afl_baseline::run_afl_baseline;
 pub use beta_solver::{effective_coefficients, naive_effective_coefficients, solve_betas};
-pub use runner::{FlContext, Recorder};
+pub use policy::{
+    AdaptiveDistance, AggregationPolicy, FedAsyncPoly, NaiveAlpha, PolicyParams, SchedulingPolicy,
+    SolvedBeta, StalenessEq11, UpdateObservation,
+};
+pub use runner::{FlContext, Recorder, RunStats};
 pub use scheduler::{SchedulerPolicy, UploadScheduler};
 pub use staleness::{local_weight, StalenessTracker};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::config::Algorithm;
+use crate::config::{Algorithm, RunConfig};
 use crate::metrics::RunResult;
+
+/// Resolve the aggregation policy (and its series label) for an AFL run:
+/// the config's explicit `aggregation` spelling when set, else the
+/// algorithm's paper default.
+pub fn resolve_policy(cfg: &RunConfig) -> Result<(Box<dyn AggregationPolicy>, String)> {
+    let params = PolicyParams {
+        clients: cfg.clients,
+        gamma: cfg.gamma,
+    };
+    match &cfg.aggregation {
+        Some(spec) => {
+            let policy = <dyn AggregationPolicy>::parse(spec, &params)
+                .with_context(|| format!("aggregation policy {spec:?}"))?;
+            let label = policy.label();
+            Ok((policy, label))
+        }
+        None => match cfg.algorithm {
+            Algorithm::AflNaive => Ok((
+                Box::new(NaiveAlpha) as Box<dyn AggregationPolicy>,
+                "afl-naive".to_string(),
+            )),
+            _ => Ok((
+                Box::new(StalenessEq11::new(cfg.gamma)?) as Box<dyn AggregationPolicy>,
+                format!("csmaafl g={}", cfg.gamma),
+            )),
+        },
+    }
+}
 
 /// Dispatch one run according to `ctx.cfg.algorithm`.
 pub fn run(ctx: &FlContext<'_>) -> Result<RunResult> {
     match ctx.cfg.algorithm {
         Algorithm::Sfl => sfl::run_sfl(ctx),
-        Algorithm::AflNaive => run_afl(
-            ctx,
-            BetaPolicy::NaiveAlpha,
-            ctx.cfg.scheduler,
-            "afl-naive".into(),
-        ),
         Algorithm::AflBaseline => run_afl_baseline(ctx),
-        Algorithm::Csmaafl => run_afl(
-            ctx,
-            BetaPolicy::Staleness {
-                gamma: ctx.cfg.gamma,
-                rho: ctx.cfg.mu_rho,
-            },
-            ctx.cfg.scheduler,
-            format!("csmaafl g={}", ctx.cfg.gamma),
-        ),
+        Algorithm::AflNaive | Algorithm::Csmaafl => {
+            let (policy, label) = resolve_policy(ctx.cfg)?;
+            run_afl(ctx, policy, ctx.cfg.scheduler, label)
+        }
     }
 }

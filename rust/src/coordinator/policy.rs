@@ -1,0 +1,560 @@
+//! The open policy layer: how the server weighs an incoming update
+//! ([`AggregationPolicy`]) and which upload-slot contender is served
+//! next ([`SchedulingPolicy`]).
+//!
+//! The paper's contribution is exactly this seam — Sec. III studies three
+//! aggregation rules over one engine, and related work (Hu et al.,
+//! arXiv:2107.11415; AsyncFedED, arXiv:2205.13797) treats scheduling and
+//! aggregation as independent axes. Both traits are object-safe so new
+//! strategies are ~50-line plug-ins consumed by `ServerCore` and the
+//! event-loop drivers, never new engines.
+//!
+//! Built-in aggregation policies (registry spelling → rule):
+//!
+//! | Spelling                 | Rule                                   | Source |
+//! |--------------------------|----------------------------------------|--------|
+//! | `naive`                  | constant α = 1/M                       | Sec. III-A |
+//! | `solved`                 | per-sweep solved β schedule            | Sec. III-B |
+//! | `staleness[:γ]`          | eq. (11) min(1, μ/(γ·j·(j-i)))         | Sec. III-C |
+//! | `fedasync[:a[,mix]]`     | mix·(1+s)^(-a) polynomial decay        | Xie et al., FedAsync |
+//! | `adaptive[:η[,ρ]]`       | update-norm-normalized, staleness-damped | AsyncFedED-style |
+//!
+//! Parse a spelling with `<dyn AggregationPolicy>::parse`.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use super::beta_solver::solve_betas;
+use super::scheduler::UploadRequest;
+use super::staleness::local_weight;
+
+/// Everything the server knows about an incoming update at the moment it
+/// must choose an aggregation weight. Built by `ServerCore`; policies
+/// read from it and never touch IO or global state.
+#[derive(Debug, Clone, Copy)]
+pub struct UpdateObservation {
+    /// Uploading client id.
+    pub client: usize,
+    /// 1-based global iteration j of the aggregation being performed.
+    pub iteration: u64,
+    /// Staleness j - i: aggregations since the client fetched its base.
+    pub staleness: u64,
+    /// Running mean staleness μ_ji *before* observing this update.
+    pub mu: f64,
+    /// Uniform data share α = 1/M (equal shards).
+    pub alpha: f64,
+    /// L2 norm of `local - global`; populated only when the policy
+    /// declares [`AggregationPolicy::needs_update_norm`] (it costs a
+    /// full pass over the parameters), else 0.
+    pub update_norm: f64,
+}
+
+/// How the server picks the weight `1-β_j` given to an uploaded local
+/// model (eq. 3: `w ← β_j·w + (1-β_j)·w_local`). Object-safe: engines
+/// hold `Box<dyn AggregationPolicy>`.
+pub trait AggregationPolicy: Send {
+    /// The weight in `[0, 1]` given to the local model for this update.
+    /// May mutate internal state (trackers, schedules); called exactly
+    /// once per aggregation, in aggregation order.
+    fn weight(&mut self, obs: &UpdateObservation) -> f64;
+
+    /// Canonical series label, e.g. `staleness g=0.2` or `fedasync a=0.5`.
+    fn label(&self) -> String;
+
+    /// Clear mutable state so the policy can drive a fresh run. Default
+    /// no-op for stateless policies; `SolvedBeta`/`AdaptiveDistance`
+    /// override it. (Engines construct policies fresh per run, so this
+    /// matters only when a caller reuses one across runs.)
+    fn reset(&mut self) {}
+
+    /// Whether [`UpdateObservation::update_norm`] must be populated.
+    /// Defaults to false because the norm costs a pass over the model.
+    fn needs_update_norm(&self) -> bool {
+        false
+    }
+
+    /// The f32 β applied to the *global* model for the weight just
+    /// returned. Default `1 - weight`; policies whose natural
+    /// parameterization is β itself (the solved Sec. III-B schedule)
+    /// override this to avoid a lossy double rounding.
+    fn beta(&self, weight: f64) -> f32 {
+        (1.0 - weight) as f32
+    }
+}
+
+/// Context the registry needs to instantiate policies whose defaults
+/// derive from the run configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyParams {
+    /// Number of clients M (α = 1/M, solved-β schedule length).
+    pub clients: usize,
+    /// Default eq.-(11) γ when the spelling names none.
+    pub gamma: f64,
+}
+
+/// One canonical registry spelling per built-in policy (tests iterate
+/// these; docs list them).
+pub const POLICY_SPECS: [&str; 5] = ["naive", "solved", "staleness", "fedasync:0.5", "adaptive"];
+
+impl dyn AggregationPolicy {
+    /// Instantiate a policy from its registry spelling
+    /// `name[:p1[,p2...]]` — e.g. `staleness:0.4` or `fedasync:0.5,0.9`.
+    /// Unknown names and malformed parameters are errors naming the
+    /// offending token.
+    pub fn parse(spec: &str, params: &PolicyParams) -> Result<Box<dyn AggregationPolicy>> {
+        let (name, args) = match spec.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (spec, None),
+        };
+        let floats = |args: Option<&str>| -> Result<Vec<f64>> {
+            match args {
+                None => Ok(Vec::new()),
+                Some(a) => a
+                    .split(',')
+                    .map(|p| {
+                        p.trim().parse::<f64>().map_err(|_| {
+                            anyhow!("invalid numeric parameter {p:?} in aggregation spec {spec:?}")
+                        })
+                    })
+                    .collect(),
+            }
+        };
+        match name.to_ascii_lowercase().as_str() {
+            "naive" | "alpha" => {
+                ensure!(args.is_none(), "policy {name:?} takes no parameters");
+                Ok(Box::new(NaiveAlpha))
+            }
+            "solved" | "solved-beta" | "baseline" => {
+                ensure!(args.is_none(), "policy {name:?} takes no parameters");
+                Ok(Box::new(SolvedBeta::new(params.clients)?))
+            }
+            "staleness" | "csmaafl" | "eq11" => {
+                let f = floats(args)?;
+                ensure!(f.len() <= 1, "staleness takes at most one parameter (γ)");
+                let gamma = f.first().copied().unwrap_or(params.gamma);
+                Ok(Box::new(StalenessEq11::new(gamma)?))
+            }
+            "fedasync" => {
+                let f = floats(args)?;
+                ensure!(f.len() <= 2, "fedasync takes at most two parameters (a, mix)");
+                let a = f.first().copied().unwrap_or(0.5);
+                let mix = f.get(1).copied().unwrap_or(0.6);
+                Ok(Box::new(FedAsyncPoly::new(a, mix)?))
+            }
+            "adaptive" | "adaptive-distance" | "asyncfeded" => {
+                let f = floats(args)?;
+                ensure!(f.len() <= 2, "adaptive takes at most two parameters (η, ρ)");
+                let eta = f.first().copied().unwrap_or(0.5);
+                let rho = f.get(1).copied().unwrap_or(0.1);
+                Ok(Box::new(AdaptiveDistance::new(eta, rho)?))
+            }
+            other => bail!(
+                "unknown aggregation policy {other:?} \
+                 (naive | solved | staleness[:g] | fedasync[:a[,mix]] | adaptive[:eta[,rho]])"
+            ),
+        }
+    }
+}
+
+/// Sec. III-A: reuse the synchronous coefficient asynchronously —
+/// constant weight α = 1/M (the paper's negative result). Reads the
+/// core-supplied data share, so the α definition lives in one place.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NaiveAlpha;
+
+impl AggregationPolicy for NaiveAlpha {
+    fn weight(&mut self, obs: &UpdateObservation) -> f64 {
+        obs.alpha
+    }
+
+    fn label(&self) -> String {
+        "naive".into()
+    }
+}
+
+/// Sec. III-B: the predetermined per-sweep β schedule solved so every
+/// M-upload sweep reproduces one synchronous FedAvg round exactly
+/// (eqs. 9–10). Cycles through schedule positions; `reset` rewinds to a
+/// sweep boundary.
+///
+/// Caveat: the equivalence (and the forced β=0 at position 0, which
+/// *replaces* the global with one client's model) presumes the
+/// Sec. III-B driver — all M clients trained from the same broadcast,
+/// one upload each per sweep, as `run_afl_baseline` schedules. Under
+/// the free-running event engine or the TCP leader the schedule has no
+/// such guarantee and this policy is only a diagnostic.
+#[derive(Debug, Clone)]
+pub struct SolvedBeta {
+    betas: Vec<f64>,
+    pos: usize,
+    last_beta: f32,
+}
+
+impl SolvedBeta {
+    /// Solve the sweep schedule for `clients` equal shards.
+    pub fn new(clients: usize) -> Result<SolvedBeta> {
+        ensure!(clients > 0, "solved-beta needs at least one client");
+        let alpha = vec![1.0 / clients as f64; clients];
+        let betas = solve_betas(&alpha)?;
+        Ok(SolvedBeta {
+            betas,
+            pos: 0,
+            last_beta: 1.0,
+        })
+    }
+}
+
+impl AggregationPolicy for SolvedBeta {
+    fn weight(&mut self, _obs: &UpdateObservation) -> f64 {
+        let t = self.pos;
+        self.pos = (self.pos + 1) % self.betas.len();
+        self.last_beta = self.betas[t] as f32;
+        1.0 - self.betas[t]
+    }
+
+    fn label(&self) -> String {
+        "solved-beta".into()
+    }
+
+    fn reset(&mut self) {
+        self.pos = 0;
+        self.last_beta = 1.0;
+    }
+
+    // β is the solved quantity: hand it over exactly as solved rather
+    // than reconstructing it as 1-(1-β) through two roundings.
+    fn beta(&self, _weight: f64) -> f32 {
+        self.last_beta
+    }
+}
+
+/// Sec. III-C eq. (11): `1-β_j = min(1, μ_ji / (γ·j·(j-i)))` — the
+/// paper's staleness-aware rule. μ comes from the core's tracker via the
+/// observation, so the simulator and the TCP leader provably share one
+/// implementation.
+#[derive(Debug, Clone)]
+pub struct StalenessEq11 {
+    gamma: f64,
+}
+
+impl StalenessEq11 {
+    /// Eq.-(11) policy with hyper-parameter γ > 0.
+    pub fn new(gamma: f64) -> Result<StalenessEq11> {
+        ensure!(gamma > 0.0, "gamma must be > 0, got {gamma}");
+        Ok(StalenessEq11 { gamma })
+    }
+}
+
+impl AggregationPolicy for StalenessEq11 {
+    fn weight(&mut self, obs: &UpdateObservation) -> f64 {
+        local_weight(obs.mu, self.gamma, obs.iteration, obs.staleness)
+    }
+
+    fn label(&self) -> String {
+        format!("staleness g={}", self.gamma)
+    }
+}
+
+/// FedAsync polynomial staleness decay (Xie et al., arXiv:1903.03934, as
+/// in the APPFL `FedAsyncAggregator`): weight = mix·(1+s)^(-a), with
+/// `mix` the mixing rate α and `a` the decay exponent.
+#[derive(Debug, Clone)]
+pub struct FedAsyncPoly {
+    a: f64,
+    mix: f64,
+}
+
+impl FedAsyncPoly {
+    /// Polynomial decay with exponent `a >= 0` and mixing rate
+    /// `mix ∈ (0, 1]`.
+    pub fn new(a: f64, mix: f64) -> Result<FedAsyncPoly> {
+        ensure!(a >= 0.0, "fedasync exponent must be >= 0, got {a}");
+        ensure!(
+            mix > 0.0 && mix <= 1.0,
+            "fedasync mix must be in (0,1], got {mix}"
+        );
+        Ok(FedAsyncPoly { a, mix })
+    }
+}
+
+impl AggregationPolicy for FedAsyncPoly {
+    fn weight(&mut self, obs: &UpdateObservation) -> f64 {
+        self.mix * (1.0 + obs.staleness as f64).powf(-self.a)
+    }
+
+    fn label(&self) -> String {
+        // Both parameters, so distinct configs never share a label (the
+        // label names result files and CSV series).
+        format!("fedasync a={} mix={}", self.a, self.mix)
+    }
+}
+
+/// AsyncFedED-style adaptive weighting (arXiv:2205.13797): normalize by
+/// the update's distance `‖w_local - w_global‖` relative to a running
+/// mean of observed distances, then damp by staleness. Outlier-sized
+/// updates (divergent stale clients) are shrunk; typical-sized fresh
+/// updates get the base weight η.
+#[derive(Debug, Clone)]
+pub struct AdaptiveDistance {
+    eta: f64,
+    rho: f64,
+    ref_norm: f64,
+    seen: u64,
+}
+
+impl AdaptiveDistance {
+    /// Base weight `eta ∈ (0, 1]`, reference-norm EMA rate `rho ∈ (0, 1]`.
+    pub fn new(eta: f64, rho: f64) -> Result<AdaptiveDistance> {
+        ensure!(
+            eta > 0.0 && eta <= 1.0,
+            "adaptive eta must be in (0,1], got {eta}"
+        );
+        ensure!(
+            rho > 0.0 && rho <= 1.0,
+            "adaptive rho must be in (0,1], got {rho}"
+        );
+        Ok(AdaptiveDistance {
+            eta,
+            rho,
+            ref_norm: 1.0,
+            seen: 0,
+        })
+    }
+}
+
+impl AggregationPolicy for AdaptiveDistance {
+    fn weight(&mut self, obs: &UpdateObservation) -> f64 {
+        let norm = obs.update_norm.max(1e-12);
+        if self.seen == 0 {
+            // Seed with the first real observation, like the μ tracker.
+            self.ref_norm = norm;
+        } else {
+            self.ref_norm = (1.0 - self.rho) * self.ref_norm + self.rho * norm;
+        }
+        self.seen += 1;
+        // Cap the amplification of unusually small updates at 2x.
+        let scale = (self.ref_norm / norm).min(2.0);
+        let damp = 1.0 + obs.staleness as f64;
+        (self.eta * scale / damp).clamp(0.0, 1.0)
+    }
+
+    fn label(&self) -> String {
+        format!("adaptive e={} r={}", self.eta, self.rho)
+    }
+
+    fn reset(&mut self) {
+        self.ref_norm = 1.0;
+        self.seen = 0;
+    }
+
+    fn needs_update_norm(&self) -> bool {
+        true
+    }
+}
+
+// --------------------------------------------------------- scheduling
+
+/// Read-only scheduler bookkeeping a [`SchedulingPolicy`] may consult
+/// when arbitrating a slot.
+#[derive(Debug)]
+pub struct SchedulerView<'a> {
+    /// Slot index of each client's previous upload; `None` = never
+    /// uploaded. Length = number of clients.
+    pub last_slot: &'a [Option<u64>],
+}
+
+/// Upload-slot arbitration: given the pending requests, pick which one
+/// is granted the TDMA slot now. Object-safe; the bookkeeping
+/// (`last_slot`, grant counts) lives in `UploadScheduler`, so policies
+/// stay pure arbitration rules.
+pub trait SchedulingPolicy: Send + std::fmt::Debug {
+    /// Canonical name (config spelling).
+    fn label(&self) -> &'static str;
+
+    /// Index into `pending` of the request to grant, or `None` to leave
+    /// the slot idle (e.g. round-robin waiting for the next in cycle).
+    /// A returned index is always granted immediately.
+    fn pick(&mut self, pending: &[UploadRequest], view: &SchedulerView<'_>) -> Option<usize>;
+}
+
+/// First-come-first-served on request time; ties broken by client id.
+#[derive(Debug, Default, Clone)]
+pub struct Fifo;
+
+impl SchedulingPolicy for Fifo {
+    fn label(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn pick(&mut self, pending: &[UploadRequest], _view: &SchedulerView<'_>) -> Option<usize> {
+        pending
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, r)| (r.requested_at, r.client))
+            .map(|(i, _)| i)
+    }
+}
+
+/// CSMAAFL Sec. III-C: the client whose last upload is oldest wins (the
+/// paper's `(k-m') > (k-n')` rule); ties by request time, then id.
+/// Never-uploaded clients sort before any slot index.
+#[derive(Debug, Default, Clone)]
+pub struct OldestModelFirst;
+
+impl SchedulingPolicy for OldestModelFirst {
+    fn label(&self) -> &'static str {
+        "oldest"
+    }
+
+    fn pick(&mut self, pending: &[UploadRequest], view: &SchedulerView<'_>) -> Option<usize> {
+        pending
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, r)| {
+                let last = view.last_slot[r.client].map_or(-1i64, |s| s as i64);
+                (last, r.requested_at, r.client)
+            })
+            .map(|(i, _)| i)
+    }
+}
+
+/// Strict cyclic order over client ids (the Sec. III-B requirement: a
+/// client is re-scheduled only after all others uploaded). Leaves the
+/// slot idle until the next client in cycle has requested.
+#[derive(Debug, Default, Clone)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl SchedulingPolicy for RoundRobin {
+    fn label(&self) -> &'static str {
+        "roundrobin"
+    }
+
+    fn pick(&mut self, pending: &[UploadRequest], view: &SchedulerView<'_>) -> Option<usize> {
+        let pos = pending.iter().position(|r| r.client == self.next)?;
+        self.next = (self.next + 1) % view.last_slot.len().max(1);
+        Some(pos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(staleness: u64, iteration: u64) -> UpdateObservation {
+        UpdateObservation {
+            client: 0,
+            iteration,
+            staleness,
+            mu: 4.0,
+            alpha: 0.1,
+            update_norm: 1.0,
+        }
+    }
+
+    #[test]
+    fn registry_parses_every_canonical_spelling() {
+        let params = PolicyParams {
+            clients: 10,
+            gamma: 0.2,
+        };
+        for spec in POLICY_SPECS {
+            let p = <dyn AggregationPolicy>::parse(spec, &params).unwrap();
+            assert!(!p.label().is_empty(), "{spec}");
+        }
+    }
+
+    #[test]
+    fn registry_rejects_unknown_and_malformed() {
+        let params = PolicyParams {
+            clients: 10,
+            gamma: 0.2,
+        };
+        assert!(<dyn AggregationPolicy>::parse("bogus", &params).is_err());
+        assert!(<dyn AggregationPolicy>::parse("fedasync:x", &params).is_err());
+        assert!(<dyn AggregationPolicy>::parse("staleness:0.1,0.2", &params).is_err());
+        assert!(<dyn AggregationPolicy>::parse("naive:1", &params).is_err());
+        assert!(<dyn AggregationPolicy>::parse("staleness:-1", &params).is_err());
+        assert!(<dyn AggregationPolicy>::parse("fedasync:0.5,2.0", &params).is_err());
+    }
+
+    #[test]
+    fn parameterized_spellings_override_defaults() {
+        let params = PolicyParams {
+            clients: 10,
+            gamma: 0.2,
+        };
+        let p = <dyn AggregationPolicy>::parse("staleness:0.4", &params).unwrap();
+        assert_eq!(p.label(), "staleness g=0.4");
+        let p = <dyn AggregationPolicy>::parse("fedasync:1.0,0.9", &params).unwrap();
+        assert_eq!(p.label(), "fedasync a=1 mix=0.9");
+        let p = <dyn AggregationPolicy>::parse("adaptive:0.8,0.2", &params).unwrap();
+        assert_eq!(p.label(), "adaptive e=0.8 r=0.2");
+    }
+
+    #[test]
+    fn naive_echoes_the_core_supplied_alpha() {
+        let mut p = NaiveAlpha;
+        assert_eq!(p.weight(&obs(0, 1)), 0.1);
+        assert_eq!(p.weight(&obs(50, 900)), 0.1, "staleness-independent");
+    }
+
+    #[test]
+    fn staleness_policy_matches_local_weight() {
+        let mut p = StalenessEq11::new(0.2).unwrap();
+        let o = obs(5, 40);
+        assert_eq!(p.weight(&o), local_weight(4.0, 0.2, 40, 5));
+    }
+
+    #[test]
+    fn solved_beta_cycles_and_hands_over_exact_f32() {
+        for m in [1usize, 2, 5, 20, 64] {
+            let alpha = vec![1.0 / m as f64; m];
+            let betas = solve_betas(&alpha).unwrap();
+            let mut p = SolvedBeta::new(m).unwrap();
+            // Two full sweeps: position must cycle, β must be bit-exact.
+            for sweep in 0..2 {
+                for (t, &b) in betas.iter().enumerate() {
+                    let w = p.weight(&obs(t as u64, 1 + t as u64));
+                    assert_eq!(p.beta(w), b as f32, "m={m} sweep={sweep} t={t}");
+                    assert!((w - (1.0 - b)).abs() < 1e-15);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fedasync_decays_polynomially() {
+        let mut p = FedAsyncPoly::new(1.0, 0.6).unwrap();
+        assert!((p.weight(&obs(0, 1)) - 0.6).abs() < 1e-12);
+        assert!((p.weight(&obs(1, 2)) - 0.3).abs() < 1e-12);
+        assert!((p.weight(&obs(5, 6)) - 0.1).abs() < 1e-12);
+        // a = 0 disables the decay entirely.
+        let mut flat = FedAsyncPoly::new(0.0, 0.6).unwrap();
+        assert!((flat.weight(&obs(40, 41)) - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn adaptive_damps_outsized_and_stale_updates() {
+        let mut p = AdaptiveDistance::new(0.5, 0.1).unwrap();
+        // First observation seeds the reference: typical fresh update.
+        let base = p.weight(&obs(0, 1));
+        assert!((base - 0.5).abs() < 1e-12);
+        // A 10x-larger update is shrunk well below the base weight.
+        let mut big = obs(0, 2);
+        big.update_norm = 10.0;
+        assert!(p.weight(&big) < base / 2.0);
+        // Staleness damps hyperbolically.
+        p.reset();
+        let fresh = p.weight(&obs(0, 1));
+        let stale = p.weight(&obs(9, 10));
+        assert!(stale < fresh / 5.0);
+    }
+
+    #[test]
+    fn scheduling_policies_report_labels() {
+        assert_eq!(Fifo.label(), "fifo");
+        assert_eq!(OldestModelFirst.label(), "oldest");
+        assert_eq!(RoundRobin::default().label(), "roundrobin");
+    }
+}

@@ -6,6 +6,7 @@
 
 use anyhow::Result;
 
+use super::core::ModelAggregator;
 use crate::config::{AggregatorKind, RunConfig};
 use crate::data::{ClientShard, Dataset};
 use crate::learner::Learner;
@@ -48,6 +49,34 @@ impl<'a> FlContext<'a> {
             }
         }
     }
+}
+
+impl ModelAggregator for FlContext<'_> {
+    // The context's aggregator dispatch (native lerp vs the PJRT Pallas
+    // artifact) is what `ServerCore` runs eq. (3) through in simulation.
+    fn aggregate(&self, global: &mut ParamSet, local: &ParamSet, beta: f32) -> Result<()> {
+        FlContext::aggregate(self, global, local, beta)
+    }
+}
+
+/// Everything an engine hands the [`Recorder`] to assemble a
+/// [`RunResult`] besides the curve itself.
+#[derive(Debug, Clone)]
+pub struct RunStats {
+    /// Series label, e.g. `fedavg` or `csmaafl g=0.2`.
+    pub label: String,
+    /// Upload count per client (fairness analysis).
+    pub uploads: Vec<u64>,
+    /// Total global aggregations.
+    pub aggregations: u64,
+    /// Mean observed staleness (AFL runs; 0 for SFL).
+    pub mean_staleness: f64,
+    /// Jain fairness index over uploads.
+    pub fairness: f64,
+    /// Uploads lost in transit (failure injection; 0 = reliable).
+    pub lost_uploads: u64,
+    /// Virtual completion time.
+    pub total_ticks: Ticks,
 }
 
 /// Evaluation-cadence recorder.
@@ -141,24 +170,17 @@ impl<'a> Recorder<'a> {
     }
 
     /// Assemble the RunResult.
-    pub fn into_result(
-        self,
-        label: String,
-        uploads: Vec<u64>,
-        aggregations: u64,
-        mean_staleness: f64,
-        fairness: f64,
-        total_ticks: Ticks,
-    ) -> RunResult {
+    pub fn into_result(self, stats: RunStats) -> RunResult {
         let wallclock = self.wallclock_secs();
         RunResult {
-            label,
+            label: stats.label,
             points: self.points,
-            uploads_per_client: uploads,
-            aggregations,
-            mean_staleness,
-            fairness,
-            total_ticks,
+            uploads_per_client: stats.uploads,
+            aggregations: stats.aggregations,
+            mean_staleness: stats.mean_staleness,
+            fairness: stats.fairness,
+            lost_uploads: stats.lost_uploads,
+            total_ticks: stats.total_ticks,
             wallclock_secs: wallclock,
         }
     }

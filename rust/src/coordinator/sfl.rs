@@ -7,7 +7,7 @@
 
 use anyhow::Result;
 
-use super::runner::{FlContext, Recorder};
+use super::runner::{FlContext, Recorder, RunStats};
 use crate::learner::BatchCursor;
 use crate::model::ParamSet;
 use crate::sim::ComputeModel;
@@ -81,13 +81,14 @@ pub fn run_sfl(ctx: &FlContext<'_>) -> Result<crate::metrics::RunResult> {
     }
     rec.finish(&w, rounds)?;
 
-    let uploads = vec![rounds; m];
-    Ok(rec.into_result(
-        "fedavg".into(),
-        uploads,
-        rounds,
-        0.0,
-        1.0,
-        now,
-    ))
+    let stats = RunStats {
+        label: "fedavg".into(),
+        uploads: vec![rounds; m],
+        aggregations: rounds,
+        mean_staleness: 0.0,
+        fairness: 1.0,
+        lost_uploads: 0,
+        total_ticks: now,
+    };
+    Ok(rec.into_result(stats))
 }

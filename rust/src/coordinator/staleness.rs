@@ -10,6 +10,10 @@
 //! observed staleness (j - i), and γ > 0 a hyper-parameter. The 1/j term
 //! makes individual contributions shrink as training progresses; the
 //! μ/(j-i) term discounts stale updates relative to typical staleness.
+//!
+//! These are the pure math primitives; the `StalenessEq11` policy in
+//! `coordinator::policy` wraps [`local_weight`] for the server core,
+//! which owns the [`StalenessTracker`].
 
 /// Exponential moving average of observed staleness values.
 #[derive(Debug, Clone)]

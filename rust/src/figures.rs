@@ -87,10 +87,18 @@ pub fn generate_figure(
     let session = Session::new(cfg, learner, artifacts_dir)?;
 
     let mut runs: Vec<RunResult> = Vec::new();
-    runs.push(session.run_with(|c| c.algorithm = Algorithm::Sfl)?);
+    runs.push(session.run_with(|c| {
+        c.algorithm = Algorithm::Sfl;
+        // FedAvg has no pluggable rule; drop any base-config override
+        // (validate would otherwise reject it).
+        c.aggregation = None;
+    })?);
     for gamma in GAMMAS {
         runs.push(session.run_with(|c| {
             c.algorithm = Algorithm::Csmaafl;
+            // The paper's legend is the eq.-(11) γ sweep: pin the policy
+            // so a base-config `aggregation` override can't leak in.
+            c.aggregation = None;
             c.gamma = gamma;
         })?);
     }

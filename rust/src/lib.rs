@@ -4,13 +4,16 @@
 //! Aggregation in Asynchronous Federated Learning* (Ma, Wang, Sun, Hu,
 //! Qian; 2023) as a three-layer Rust + JAX + Pallas stack:
 //!
-//! * **L3 (this crate)** — the asynchronous FL server: TDMA upload-slot
-//!   scheduling with staleness priority ([`coordinator::scheduler`]),
-//!   eq.-(11) staleness-aware aggregation ([`coordinator::staleness`]),
-//!   the Sec.-III-B exact-equivalence β solver
-//!   ([`coordinator::beta_solver`]), a synchronous FedAvg comparator, and
-//!   a discrete-event virtual-time simulator of the paper's Sec.-II-C
-//!   time model ([`sim`]).
+//! * **L3 (this crate)** — the asynchronous FL server: a sans-IO server
+//!   state machine (`coordinator::core::ServerCore`) with pluggable
+//!   aggregation and scheduling policies ([`coordinator::policy`]) —
+//!   eq.-(11) staleness-aware weighting, the solved Sec.-III-B β
+//!   schedule ([`coordinator::beta_solver`]), FedAsync polynomial decay
+//!   and AsyncFedED-style adaptive weighting — TDMA upload-slot
+//!   arbitration with staleness priority ([`coordinator::scheduler`]),
+//!   a synchronous FedAvg comparator, and a discrete-event virtual-time
+//!   simulator of the paper's Sec.-II-C time model ([`sim`]). The same
+//!   `ServerCore` drives the TCP deployment runtime ([`net`]).
 //! * **L2/L1 (build time)** — `python/compile/`: the paper's CNN in JAX
 //!   with Pallas kernels on the dense layers and the aggregation axpy,
 //!   AOT-lowered to HLO text executed through PJRT ([`runtime`]).

@@ -31,6 +31,7 @@ COMMANDS:
   train     --config <file> [--set key=value ...] [--learner pjrt|linear]
             [--out results/] [--label name]
   compare   --config <file> [--learner pjrt|linear] [--out results/]
+            (four paper series + fedasync/adaptive policy series)
   figures   [--fig fig3|fig4|fig5a|fig5b|all] [--learner pjrt|linear]
             [--set key=value ...] [--out results/]
   sweep     --param gamma --values 0.1,0.2,0.4,0.6 [--config <file>]
@@ -48,6 +49,9 @@ COMMON OPTIONS:
   --artifacts <dir>   artifacts directory (default: artifacts)
   -v / -q             raise / lower log verbosity
   --help              this text
+
+AGGREGATION POLICIES (--set aggregation=<spec>, also honored by serve):
+  naive | solved | staleness[:g] | fedasync[:a[,mix]] | adaptive[:eta[,rho]]
 ";
 
 /// Minimal option parser: flags with values, repeated --set collection.
@@ -132,18 +136,19 @@ fn load_config(args: &Args) -> Result<RunConfig> {
 
 fn print_run_table(runs: &[&csmaafl::RunResult]) {
     println!(
-        "{:<18} {:>7} {:>9} {:>9} {:>10} {:>9} {:>9}",
-        "series", "aggs", "final", "best", "stale(avg)", "fairness", "wall(s)"
+        "{:<18} {:>7} {:>9} {:>9} {:>10} {:>9} {:>6} {:>9}",
+        "series", "aggs", "final", "best", "stale(avg)", "fairness", "lost", "wall(s)"
     );
     for r in runs {
         println!(
-            "{:<18} {:>7} {:>9.4} {:>9.4} {:>10.2} {:>9.3} {:>9.1}",
+            "{:<18} {:>7} {:>9.4} {:>9.4} {:>10.2} {:>9.3} {:>6} {:>9.1}",
             r.label,
             r.aggregations,
             r.final_accuracy(),
             r.best_accuracy(),
             r.mean_staleness,
             r.fairness,
+            r.lost_uploads,
             r.wallclock_secs
         );
     }
@@ -177,7 +182,20 @@ fn cmd_compare(args: &Args) -> Result<()> {
         Algorithm::AflBaseline,
         Algorithm::Csmaafl,
     ] {
-        runs.push(session.run_with(|c| c.algorithm = alg)?);
+        // The four paper series always use each algorithm's own default
+        // aggregation rule, whatever the base config says.
+        runs.push(session.run_with(|c| {
+            c.algorithm = alg;
+            c.aggregation = None;
+        })?);
+    }
+    // Related-work policies on the same event-driven engine: FedAsync
+    // polynomial decay and AsyncFedED-style adaptive weighting.
+    for spec in ["fedasync:0.5", "adaptive"] {
+        runs.push(session.run_with(|c| {
+            c.algorithm = Algorithm::Csmaafl;
+            c.aggregation = Some(spec.to_string());
+        })?);
     }
     std::fs::create_dir_all(out_dir)?;
     write_series_csv(
@@ -226,8 +244,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let session = Session::new(cfg, args.learner()?, args.opt_or("artifacts", "artifacts"))?;
     let mut runs = Vec::new();
     for v in &values {
-        let mut run = session.run_with(|c| {
-            c.set_field(&param, v).expect("invalid sweep value");
+        let mut run = session.run_with_try(|c| {
+            c.set_field(&param, v)
+                .with_context(|| format!("sweep: invalid value {v:?} for --param {param}"))
         })?;
         run.label = format!("{param}={v}");
         runs.push(run);
@@ -333,6 +352,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_iterations: args.opt_or("iterations", "200").parse()?,
         gamma: args.opt_or("gamma", &cfg.gamma.to_string()).parse()?,
         mu_rho: cfg.mu_rho,
+        aggregation: cfg.aggregation.clone(),
     };
     let w0 = session.learner().init(cfg.seed as u32)?;
     let report = csmaafl::net::run_leader(&leader_cfg, w0)?;

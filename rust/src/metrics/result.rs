@@ -34,6 +34,8 @@ pub struct RunResult {
     pub mean_staleness: f64,
     /// Jain fairness index over uploads.
     pub fairness: f64,
+    /// Uploads lost in transit (failure injection; 0 = reliable channel).
+    pub lost_uploads: u64,
     /// Virtual completion time.
     pub total_ticks: Ticks,
     /// Real wall-clock spent (training + eval dispatches).
@@ -50,6 +52,7 @@ impl RunResult {
             aggregations: 0,
             mean_staleness: 0.0,
             fairness: 1.0,
+            lost_uploads: 0,
             total_ticks: 0,
             wallclock_secs: 0.0,
         }
@@ -83,6 +86,7 @@ impl RunResult {
             .set("best_accuracy", Json::Float(self.best_accuracy()))
             .set("mean_staleness", Json::Float(self.mean_staleness))
             .set("fairness", Json::Float(self.fairness))
+            .set("lost_uploads", Json::Int(self.lost_uploads as i64))
             .set("total_ticks", Json::Int(self.total_ticks as i64))
             .set("wallclock_secs", Json::Float(self.wallclock_secs))
             .set(
@@ -146,10 +150,12 @@ mod tests {
 
     #[test]
     fn json_summary_parses() {
-        let r = run_with_points(&[0.2, 0.6]);
+        let mut r = run_with_points(&[0.2, 0.6]);
+        r.lost_uploads = 7;
         let j = r.to_json();
         let parsed = crate::util::json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(parsed.get("label").unwrap().as_str(), Some("x"));
+        assert_eq!(parsed.get("lost_uploads").unwrap().as_i64(), Some(7));
         assert_eq!(
             parsed.get("points").unwrap().as_array().unwrap().len(),
             2

@@ -1,12 +1,11 @@
 //! The deployment leader: Algorithm 1's server over real TCP.
 //!
 //! Accepts `clients` workers, broadcasts w_0, then serves Update frames
-//! as they arrive: each is aggregated immediately with the eq.-(11)
-//! staleness coefficient and the fresh global is unicast back to that
-//! worker only. The TCP accept/read loop *is* the TDMA channel (one
-//! frame at a time per connection read); arbitration across concurrently
-//! pending updates follows the same oldest-model-first rule via the
-//! per-worker last-service bookkeeping.
+//! as they arrive, feeding each into the same sans-IO
+//! `coordinator::core::ServerCore` that drives the simulator — the
+//! leader computes no aggregation weight of its own. The fresh global is
+//! unicast back to the uploading worker only. The TCP accept/read loop
+//! *is* the TDMA channel (one frame at a time per connection read).
 
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream};
@@ -15,7 +14,8 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::staleness::{local_weight, StalenessTracker};
+use crate::coordinator::core::{NativeAggregator, ServerCore};
+use crate::coordinator::policy::{AggregationPolicy, PolicyParams, StalenessEq11};
 use crate::log_info;
 use crate::model::{ParamSet, TensorSpec};
 use crate::net::wire::{self, Message};
@@ -29,10 +29,13 @@ pub struct LeaderConfig {
     pub clients: usize,
     /// Stop after this many global aggregations.
     pub max_iterations: u64,
-    /// Eq. (11) γ.
+    /// Eq. (11) γ (the default policy's hyper-parameter).
     pub gamma: f64,
     /// μ EMA rate.
     pub mu_rho: f64,
+    /// Aggregation-policy registry spelling; `None` = eq.-(11)
+    /// staleness weighting with `gamma` (the paper's deployment).
+    pub aggregation: Option<String>,
 }
 
 /// What the leader observed during a run.
@@ -64,6 +67,18 @@ enum Inbound {
 /// schema).
 pub fn run_leader(cfg: &LeaderConfig, w0: ParamSet) -> Result<LeaderReport> {
     let specs: Vec<TensorSpec> = w0.specs();
+    let params = PolicyParams {
+        clients: cfg.clients,
+        gamma: cfg.gamma,
+    };
+    let policy: Box<dyn AggregationPolicy> = match &cfg.aggregation {
+        Some(spec) => <dyn AggregationPolicy>::parse(spec, &params)
+            .with_context(|| format!("leader aggregation policy {spec:?}"))?,
+        None => Box::new(StalenessEq11::new(cfg.gamma)?),
+    };
+    log_info!("leader: aggregation policy {}", policy.label());
+    let mut core = ServerCore::new(w0, cfg.clients, policy, cfg.mu_rho);
+
     let listener = TcpListener::bind(&cfg.bind)
         .with_context(|| format!("binding {}", cfg.bind))?;
     log_info!("leader: listening on {}", listener.local_addr()?);
@@ -115,39 +130,31 @@ pub fn run_leader(cfg: &LeaderConfig, w0: ParamSet) -> Result<LeaderReport> {
     drop(tx);
 
     // Broadcast w_0.
-    let mut w = w0;
-    for writer in writers.iter_mut() {
+    for (worker, writer) in writers.iter_mut().enumerate() {
+        let iteration = core.issue_to(worker);
         wire::send(writer, &Message::Global {
-            iteration: 0,
-            params: w.clone(),
+            iteration,
+            params: core.global().clone(),
         })?;
     }
 
-    // Aggregation loop (Algorithm 1, server side).
+    // Aggregation loop (Algorithm 1, server side): every weight decision
+    // happens inside ServerCore, shared bit-for-bit with the simulator.
     let started = Instant::now();
-    let mut tracker = StalenessTracker::new(cfg.mu_rho);
-    let mut j: u64 = 0;
-    let mut staleness_sum = 0.0f64;
-    let mut per_client = vec![0u64; cfg.clients];
     let mut alive = cfg.clients;
-    while j < cfg.max_iterations && alive > 0 {
+    while core.iteration() < cfg.max_iterations && alive > 0 {
         match rx.recv() {
             Ok(Inbound::Update {
                 worker,
                 start_iteration,
                 params,
             }) => {
-                let staleness = j.saturating_sub(start_iteration);
-                let weight = local_weight(tracker.mu(), cfg.gamma, j + 1, staleness);
-                tracker.observe(staleness);
-                staleness_sum += staleness as f64;
-                w.lerp_inplace(&params, (1.0 - weight) as f32);
-                j += 1;
-                per_client[worker] += 1;
+                core.on_update(worker, start_iteration, &params, &NativeAggregator)?;
                 // Fresh global back to this worker only.
+                let iteration = core.issue_to(worker);
                 wire::send(&mut writers[worker], &Message::Global {
-                    iteration: j,
-                    params: w.clone(),
+                    iteration,
+                    params: core.global().clone(),
                 })?;
             }
             Ok(Inbound::Gone(worker)) => {
@@ -163,10 +170,10 @@ pub fn run_leader(cfg: &LeaderConfig, w0: ParamSet) -> Result<LeaderReport> {
         let _ = wire::send(writer, &Message::Shutdown);
     }
     Ok(LeaderReport {
-        aggregations: j,
-        updates_per_client: per_client,
-        mean_staleness: if j > 0 { staleness_sum / j as f64 } else { 0.0 },
+        aggregations: core.iteration(),
+        updates_per_client: core.updates_per_client().to_vec(),
+        mean_staleness: core.mean_staleness(),
         wallclock_secs: started.elapsed().as_secs_f64(),
-        final_model: w,
+        final_model: core.into_global(),
     })
 }

@@ -145,8 +145,21 @@ impl Session {
     /// Run a variant: clone the config, let `mutate` adjust it, execute.
     /// Data, shards, client speeds and model init stay shared (paired).
     pub fn run_with(&self, mutate: impl FnOnce(&mut RunConfig)) -> Result<RunResult> {
+        self.run_with_try(|cfg| {
+            mutate(cfg);
+            Ok(())
+        })
+    }
+
+    /// Like [`Session::run_with`] but the mutation itself can fail (e.g.
+    /// a sweep applying an untrusted `--set`-style override); its error
+    /// propagates instead of panicking.
+    pub fn run_with_try(
+        &self,
+        mutate: impl FnOnce(&mut RunConfig) -> Result<()>,
+    ) -> Result<RunResult> {
         let mut cfg = self.cfg.clone();
-        mutate(&mut cfg);
+        mutate(&mut cfg)?;
         cfg.validate()?;
         if cfg.aggregator == AggregatorKind::Pjrt && self.engine().is_none() {
             anyhow::bail!("PJRT aggregator requires the PJRT learner");
@@ -179,13 +192,14 @@ mod tests {
     use crate::data::Partition;
 
     fn tiny_cfg() -> RunConfig {
-        let mut c = RunConfig::default();
-        c.clients = 4;
-        c.samples_per_client = 20;
-        c.test_samples = 50;
-        c.local_steps = 4;
-        c.max_slots = 3.0;
-        c
+        RunConfig {
+            clients: 4,
+            samples_per_client: 20,
+            test_samples: 50,
+            local_steps: 4,
+            max_slots: 3.0,
+            ..RunConfig::default()
+        }
     }
 
     #[test]

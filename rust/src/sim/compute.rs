@@ -40,20 +40,73 @@ pub enum HeterogeneityProfile {
 }
 
 impl HeterogeneityProfile {
-    /// Parse a CLI/JSON spelling (`homo`, `uniform`, `lognormal`,
-    /// `extreme`) with each profile's default parameters.
+    /// Parse a CLI/JSON spelling: a profile name (`homo`, `uniform`,
+    /// `lognormal`, `extreme`) optionally followed by `:`-separated
+    /// numeric parameters (`uniform:6`, `lognormal:0.75`,
+    /// `extreme:0.1,0.1,3,10`). A bare name uses default parameters.
     pub fn parse(s: &str) -> Option<HeterogeneityProfile> {
-        match s.to_ascii_lowercase().as_str() {
-            "homogeneous" | "homo" => Some(HeterogeneityProfile::Homogeneous),
-            "uniform" => Some(HeterogeneityProfile::Uniform { max_factor: 4.0 }),
-            "lognormal" => Some(HeterogeneityProfile::Lognormal { sigma: 0.5 }),
-            "extreme" => Some(HeterogeneityProfile::Extreme {
+        let (name, args) = match s.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (s, None),
+        };
+        let nums: Vec<f64> = match args {
+            None => Vec::new(),
+            Some(a) => {
+                let parsed: Option<Vec<f64>> =
+                    a.split(',').map(|p| p.trim().parse::<f64>().ok()).collect();
+                parsed?
+            }
+        };
+        match (name.to_ascii_lowercase().as_str(), nums.as_slice()) {
+            ("homogeneous" | "homo", []) => Some(HeterogeneityProfile::Homogeneous),
+            ("uniform", []) => Some(HeterogeneityProfile::Uniform { max_factor: 4.0 }),
+            // Speed factors are >= 1 by construction (1 = fastest class),
+            // so out-of-range parameters are parse errors, not silent
+            // clamps — consistent with every other config field.
+            ("uniform", &[max_factor]) if max_factor >= 1.0 => {
+                Some(HeterogeneityProfile::Uniform { max_factor })
+            }
+            ("lognormal", []) => Some(HeterogeneityProfile::Lognormal { sigma: 0.5 }),
+            ("lognormal", &[sigma]) if sigma > 0.0 => {
+                Some(HeterogeneityProfile::Lognormal { sigma })
+            }
+            ("extreme", []) => Some(HeterogeneityProfile::Extreme {
                 fast_frac: 0.1,
                 slow_frac: 0.1,
                 mid_factor: 3.0,
                 slow_factor: 10.0,
             }),
+            ("extreme", &[fast_frac, slow_frac, mid_factor, slow_factor])
+                if (0.0..=1.0).contains(&fast_frac)
+                    && (0.0..=1.0).contains(&slow_frac)
+                    && fast_frac + slow_frac <= 1.0
+                    && mid_factor >= 1.0
+                    && slow_factor >= 1.0 =>
+            {
+                Some(HeterogeneityProfile::Extreme {
+                    fast_frac,
+                    slow_frac,
+                    mid_factor,
+                    slow_factor,
+                })
+            }
             _ => None,
+        }
+    }
+
+    /// Canonical parameterized spelling, accepted back by
+    /// [`HeterogeneityProfile::parse`] (JSON provenance roundtrip).
+    pub fn spec(&self) -> String {
+        match self {
+            HeterogeneityProfile::Homogeneous => "homo".into(),
+            HeterogeneityProfile::Uniform { max_factor } => format!("uniform:{max_factor}"),
+            HeterogeneityProfile::Lognormal { sigma } => format!("lognormal:{sigma}"),
+            HeterogeneityProfile::Extreme {
+                fast_frac,
+                slow_frac,
+                mid_factor,
+                slow_factor,
+            } => format!("extreme:{fast_frac},{slow_frac},{mid_factor},{slow_factor}"),
         }
     }
 }
@@ -251,5 +304,48 @@ mod tests {
         );
         assert!(HeterogeneityProfile::parse("uniform").is_some());
         assert!(HeterogeneityProfile::parse("nope").is_none());
+    }
+
+    #[test]
+    fn parse_accepts_parameterized_spellings() {
+        assert_eq!(
+            HeterogeneityProfile::parse("uniform:6"),
+            Some(HeterogeneityProfile::Uniform { max_factor: 6.0 })
+        );
+        assert_eq!(
+            HeterogeneityProfile::parse("extreme:0.2,0.2,3,10"),
+            Some(HeterogeneityProfile::Extreme {
+                fast_frac: 0.2,
+                slow_frac: 0.2,
+                mid_factor: 3.0,
+                slow_factor: 10.0,
+            })
+        );
+        assert!(HeterogeneityProfile::parse("uniform:x").is_none());
+        assert!(HeterogeneityProfile::parse("extreme:1,2").is_none());
+        assert!(HeterogeneityProfile::parse("homo:1").is_none());
+        // Out-of-range parameters are rejected, not clamped.
+        assert!(HeterogeneityProfile::parse("uniform:0.5").is_none());
+        assert!(HeterogeneityProfile::parse("lognormal:-1").is_none());
+        assert!(HeterogeneityProfile::parse("extreme:0.6,0.6,3,10").is_none());
+        assert!(HeterogeneityProfile::parse("extreme:0.1,0.1,3,-10").is_none());
+        assert!(HeterogeneityProfile::parse("extreme:0.1,0.1,0.5,10").is_none());
+    }
+
+    #[test]
+    fn spec_roundtrips_every_profile() {
+        for p in [
+            HeterogeneityProfile::Homogeneous,
+            HeterogeneityProfile::Uniform { max_factor: 4.0 },
+            HeterogeneityProfile::Lognormal { sigma: 0.5 },
+            HeterogeneityProfile::Extreme {
+                fast_frac: 0.1,
+                slow_frac: 0.3,
+                mid_factor: 2.5,
+                slow_factor: 8.0,
+            },
+        ] {
+            assert_eq!(HeterogeneityProfile::parse(&p.spec()), Some(p), "{}", p.spec());
+        }
     }
 }

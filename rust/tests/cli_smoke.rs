@@ -107,6 +107,39 @@ fn invalid_config_value_is_rejected() {
 }
 
 #[test]
+fn sweep_invalid_value_is_an_error_not_a_panic() {
+    // A bad --values entry used to hit `.expect("invalid sweep value")`;
+    // it must surface as a named error through the Result chain.
+    let out = repro(&[
+        "sweep", "--param", "gamma", "--values", "banana", "--learner", "linear",
+        "--set", "clients=2", "--set", "samples_per_client=4",
+        "--set", "test_samples=10", "--set", "max_slots=1",
+    ]);
+    assert!(!out.status.success());
+    let err = stderr(&out);
+    assert!(err.contains("banana"), "{err}");
+    assert!(err.contains("gamma"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+}
+
+#[test]
+fn unknown_aggregation_policy_is_rejected() {
+    let out = repro(&["train", "--set", "aggregation=bogus", "--learner", "linear"]);
+    assert!(!out.status.success());
+    let err = stderr(&out);
+    assert!(err.contains("bogus"), "{err}");
+}
+
+#[test]
+fn usage_lists_aggregation_policy_registry() {
+    let usage = stdout(&repro(&[]));
+    assert!(usage.contains("AGGREGATION POLICIES"), "{usage}");
+    for name in ["naive", "solved", "staleness", "fedasync", "adaptive"] {
+        assert!(usage.contains(name), "usage must mention {name}");
+    }
+}
+
+#[test]
 fn unknown_learner_is_rejected() {
     let out = repro(&["train", "--learner", "quantum"]);
     assert!(!out.status.success());

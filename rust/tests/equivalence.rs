@@ -64,14 +64,16 @@ fn sweep_parameters_match_fedavg_parameters() {
 /// The full engines (virtual-time and all) agree after one round/sweep.
 #[test]
 fn engine_level_equivalence_one_round() {
-    let mut cfg = RunConfig::default();
-    cfg.clients = 8;
-    cfg.samples_per_client = 30;
-    cfg.test_samples = 200;
-    cfg.local_steps = 6;
-    cfg.max_slots = 1.2;
-    cfg.eval_every_slots = 1.2;
-    cfg.jitter = 0.0;
+    let cfg = RunConfig {
+        clients: 8,
+        samples_per_client: 30,
+        test_samples: 200,
+        local_steps: 6,
+        max_slots: 1.2,
+        eval_every_slots: 1.2,
+        jitter: 0.0,
+        ..RunConfig::default()
+    };
     let session = Session::new(cfg, LearnerKind::Linear, "artifacts").unwrap();
     let sfl = session.run_with(|c| c.algorithm = Algorithm::Sfl).unwrap();
     let base = session
@@ -94,13 +96,15 @@ fn engine_level_equivalence_one_round() {
 /// and stay close) — the Sec. III-B "same learning performance" claim.
 #[test]
 fn multi_round_tracking() {
-    let mut cfg = RunConfig::default();
-    cfg.clients = 8;
-    cfg.samples_per_client = 40;
-    cfg.test_samples = 300;
-    cfg.local_steps = 8;
-    cfg.max_slots = 12.0;
-    cfg.jitter = 0.0;
+    let cfg = RunConfig {
+        clients: 8,
+        samples_per_client: 40,
+        test_samples: 300,
+        local_steps: 8,
+        max_slots: 12.0,
+        jitter: 0.0,
+        ..RunConfig::default()
+    };
     let session = Session::new(cfg, LearnerKind::Linear, "artifacts").unwrap();
     let sfl = session.run_with(|c| c.algorithm = Algorithm::Sfl).unwrap();
     let base = session

@@ -7,13 +7,14 @@ use csmaafl::session::{LearnerKind, Session};
 use csmaafl::sim::HeterogeneityProfile;
 
 fn base_cfg() -> RunConfig {
-    let mut c = RunConfig::default();
-    c.clients = 12;
-    c.samples_per_client = 50;
-    c.test_samples = 300;
-    c.local_steps = 20;
-    c.max_slots = 20.0;
-    c
+    RunConfig {
+        clients: 12,
+        samples_per_client: 50,
+        test_samples: 300,
+        local_steps: 20,
+        max_slots: 20.0,
+        ..RunConfig::default()
+    }
 }
 
 /// Both FedAvg and CSMAAFL must actually learn the synthetic task.
@@ -195,6 +196,10 @@ fn survives_lossy_uplink() {
         lossy.final_accuracy()
     );
     assert!(lossy.points.iter().all(|p| p.accuracy.is_finite()));
+    // The drop count is now a first-class result field, not just a log
+    // line: reliable runs report 0, lossy runs report every loss.
+    assert_eq!(reliable.lost_uploads, 0);
+    assert!(lossy.lost_uploads > 0, "30% loss must drop some uploads");
 }
 
 /// Client-sampling FedAvg ([2]): sampling K<M shortens rounds but still

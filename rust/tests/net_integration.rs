@@ -1,8 +1,11 @@
 //! Integration: the TCP deployment runtime (leader + workers over
-//! loopback) reaches the same kind of result as the simulator.
+//! loopback) reaches the same kind of result as the simulator — and,
+//! since both now drive the same sans-IO `ServerCore`, the *same exact*
+//! aggregation arithmetic.
 
+use csmaafl::coordinator::{NativeAggregator, ServerCore, StalenessEq11};
 use csmaafl::data::{generate, partition, Partition, SynthKind};
-use csmaafl::learner::{Learner, LinearLearner};
+use csmaafl::learner::{BatchCursor, Learner, LinearLearner};
 use csmaafl::net::{run_leader, run_worker, LeaderConfig, WorkerConfig};
 
 fn run_federation(port: u16, clients: usize, iterations: u64) -> (f64, Vec<u64>) {
@@ -19,6 +22,7 @@ fn run_federation(port: u16, clients: usize, iterations: u64) -> (f64, Vec<u64>)
             max_iterations: iterations,
             gamma: 0.2,
             mu_rho: 0.1,
+            aggregation: None,
         };
         let w0 = w0.clone();
         move || run_leader(&cfg, w0)
@@ -67,4 +71,80 @@ fn single_worker_federation() {
     let (acc, uploads) = run_federation(47912, 1, 40);
     assert!(acc > 0.3, "accuracy {acc}");
     assert_eq!(uploads.len(), 1);
+}
+
+/// The acceptance check for the sans-IO refactor: leader aggregation
+/// over real TCP equals a local `ServerCore` replay of the same update
+/// sequence, bit for bit. A single worker makes the sequence
+/// deterministic (train → upload → receive fresh global → repeat), so
+/// we can reproduce it exactly without sockets.
+#[test]
+fn leader_aggregation_equals_server_core_replay() {
+    let iterations = 25u64;
+    let local_steps = 6usize;
+    let (train, _test) = generate(SynthKind::Mnist, 120, 40, 17);
+    let shards = partition(&train, 1, Partition::Iid, 17);
+    let learner = LinearLearner::default();
+    let w0 = learner.init(17).unwrap();
+    let addr = "127.0.0.1:47913".to_string();
+
+    let leader = std::thread::spawn({
+        let cfg = LeaderConfig {
+            bind: addr.clone(),
+            clients: 1,
+            max_iterations: iterations,
+            gamma: 0.2,
+            mu_rho: 0.1,
+            aggregation: None,
+        };
+        let w0 = w0.clone();
+        move || run_leader(&cfg, w0)
+    });
+    std::thread::sleep(std::time::Duration::from_millis(100));
+
+    let worker = std::thread::spawn({
+        let train = train.clone();
+        let indices = shards[0].indices.clone();
+        move || {
+            let learner = LinearLearner::default();
+            run_worker(&WorkerConfig {
+                connect: addr,
+                name: "replayed".into(),
+                learner: &learner,
+                data: &train,
+                indices,
+                local_steps,
+            })
+        }
+    });
+    let report = leader.join().unwrap().unwrap();
+    worker.join().unwrap().unwrap();
+    assert_eq!(report.aggregations, iterations);
+
+    // Local sans-IO replay of exactly what the wire carried.
+    let mut core = ServerCore::new(
+        w0,
+        1,
+        Box::new(StalenessEq11::new(0.2).unwrap()),
+        0.1,
+    );
+    let img = train.x.len() / train.len();
+    let batch = learner.batch();
+    let mut cursor = BatchCursor::new(shards[0].indices.clone());
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for _ in 0..iterations {
+        let start = core.issue_to(0);
+        let global = core.global().clone();
+        cursor.fill(&train, local_steps * batch, img, &mut xs, &mut ys);
+        let (local, _) = learner.train(&global, &xs, &ys, local_steps).unwrap();
+        core.on_update(0, start, &local, &NativeAggregator).unwrap();
+    }
+    assert_eq!(core.iteration(), report.aggregations);
+    assert_eq!(
+        report.final_model.max_abs_diff(core.global()),
+        0.0,
+        "TCP leader and ServerCore replay must agree bit-for-bit"
+    );
+    assert_eq!(report.mean_staleness, core.mean_staleness());
 }

@@ -155,12 +155,14 @@ fn learner_handles_non_chunk_multiple_steps() {
 #[test]
 fn cnn_federated_short_run_learns() {
     let _ = require_artifacts!();
-    let mut cfg = RunConfig::default();
-    cfg.clients = 6;
-    cfg.samples_per_client = 40;
-    cfg.test_samples = 100;
-    cfg.local_steps = 32;
-    cfg.max_slots = 10.0;
+    let cfg = RunConfig {
+        clients: 6,
+        samples_per_client: 40,
+        test_samples: 100,
+        local_steps: 32,
+        max_slots: 10.0,
+        ..RunConfig::default()
+    };
     let session = require!(Session::new(cfg, LearnerKind::Pjrt, ARTIFACTS));
     let run = session
         .run_with(|c| c.algorithm = Algorithm::Csmaafl)
@@ -173,12 +175,14 @@ fn cnn_federated_short_run_learns() {
 #[test]
 fn aggregator_ablation_same_result() {
     let _ = require_artifacts!();
-    let mut cfg = RunConfig::default();
-    cfg.clients = 4;
-    cfg.samples_per_client = 20;
-    cfg.test_samples = 100;
-    cfg.local_steps = 8;
-    cfg.max_slots = 2.0;
+    let cfg = RunConfig {
+        clients: 4,
+        samples_per_client: 20,
+        test_samples: 100,
+        local_steps: 8,
+        max_slots: 2.0,
+        ..RunConfig::default()
+    };
     let session = require!(Session::new(cfg, LearnerKind::Pjrt, ARTIFACTS));
     let native = session
         .run_with(|c| c.aggregator = AggregatorKind::Native)

@@ -1,0 +1,196 @@
+//! Integration coverage for the sans-IO policy layer: the aggregation
+//! registry's invariants, `ServerCore` regression against the
+//! pre-refactor CSMAAFL aggregation loop, and the new related-work
+//! policies end-to-end through the event-driven engine.
+
+use csmaafl::config::{Algorithm, RunConfig};
+use csmaafl::coordinator::policy::{
+    AggregationPolicy, PolicyParams, UpdateObservation, POLICY_SPECS,
+};
+use csmaafl::coordinator::{NativeAggregator, ServerCore, StalenessEq11};
+use csmaafl::coordinator::{local_weight, StalenessTracker};
+use csmaafl::data::{generate, partition, Partition, SynthKind};
+use csmaafl::learner::{BatchCursor, Learner, LinearLearner};
+use csmaafl::model::ParamSet;
+use csmaafl::session::{LearnerKind, Session};
+
+fn tiny_cfg() -> RunConfig {
+    RunConfig {
+        clients: 4,
+        samples_per_client: 20,
+        test_samples: 50,
+        local_steps: 4,
+        max_slots: 4.0,
+        ..RunConfig::default()
+    }
+}
+
+/// Every registered aggregation policy must emit weights in [0,1] across
+/// the whole staleness range the engines can produce.
+#[test]
+fn every_registered_policy_weights_in_unit_interval() {
+    let params = PolicyParams {
+        clients: 8,
+        gamma: 0.2,
+    };
+    for spec in POLICY_SPECS {
+        let mut policy = <dyn AggregationPolicy>::parse(spec, &params).unwrap();
+        for pass in 0..2 {
+            policy.reset();
+            let mut iteration = 0u64;
+            for staleness in 0..=64u64 {
+                iteration += 1;
+                let obs = UpdateObservation {
+                    client: (staleness % 8) as usize,
+                    iteration,
+                    staleness,
+                    mu: 1.0 + (staleness % 7) as f64,
+                    alpha: 1.0 / 8.0,
+                    update_norm: 0.25 + (staleness % 5) as f64,
+                };
+                let w = policy.weight(&obs);
+                assert!(
+                    (0.0..=1.0).contains(&w),
+                    "{spec}: pass {pass} staleness {staleness} -> weight {w}"
+                );
+                let beta = policy.beta(w) as f64;
+                assert!(
+                    (0.0..=1.0).contains(&beta),
+                    "{spec}: staleness {staleness} -> beta {beta}"
+                );
+            }
+        }
+    }
+}
+
+/// `StalenessEq11` through `ServerCore` must reproduce, bit for bit, the
+/// aggregation loop the engines ran before the refactor (weight from
+/// (μ, γ, j+1, staleness), observe, then lerp) — on real learner
+/// updates from the default seed.
+#[test]
+fn server_core_matches_pre_refactor_csmaafl_loop_bit_for_bit() {
+    let cfg = RunConfig::default();
+    let learner = LinearLearner::default();
+    let (train, _test) = generate(SynthKind::Mnist, 200, 50, cfg.seed);
+    let shards = partition(&train, 4, Partition::Iid, cfg.seed);
+    let w0 = learner.init(cfg.seed as u32).unwrap();
+    let img = train.x.len() / train.len();
+    let batch = learner.batch();
+
+    // A staleness-diverse update schedule: (client, start_iteration).
+    let schedule: Vec<(usize, u64)> = (0..32u64)
+        .map(|k| ((k % 4) as usize, k.saturating_sub(1 + k % 4)))
+        .collect();
+
+    // Generate the local models once, from the evolving global of a
+    // reference (pre-refactor-style) server.
+    let mut cursors: Vec<BatchCursor> = shards
+        .iter()
+        .map(|s| BatchCursor::new(s.indices.clone()))
+        .collect();
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+
+    let mut w_ref = w0.clone();
+    let mut tracker = StalenessTracker::new(cfg.mu_rho);
+    let mut j = 0u64;
+    let mut locals: Vec<ParamSet> = Vec::new();
+    for &(client, start) in &schedule {
+        cursors[client].fill(&train, 4 * batch, img, &mut xs, &mut ys);
+        let (local, _) = learner.train(&w_ref, &xs, &ys, 4).unwrap();
+        let staleness = j.saturating_sub(start);
+        let lw = local_weight(tracker.mu(), cfg.gamma, j + 1, staleness);
+        tracker.observe(staleness);
+        w_ref.lerp_inplace(&local, (1.0 - lw) as f32);
+        j += 1;
+        locals.push(local);
+    }
+
+    // The same updates through ServerCore with the eq.-(11) policy.
+    let mut core = ServerCore::new(
+        w0,
+        4,
+        Box::new(StalenessEq11::new(cfg.gamma).unwrap()),
+        cfg.mu_rho,
+    );
+    for (&(client, start), local) in schedule.iter().zip(&locals) {
+        let outcome = core.on_update(client, start, local, &NativeAggregator).unwrap();
+        assert!(outcome.weight <= 1.0);
+    }
+    assert_eq!(core.iteration(), j);
+    assert_eq!(
+        core.global().max_abs_diff(&w_ref),
+        0.0,
+        "ServerCore must be bit-identical to the pre-refactor loop"
+    );
+}
+
+/// The registry path (`aggregation=staleness`) and the algorithm-default
+/// path must produce bit-identical curves: the refactor may add series,
+/// never perturb existing ones.
+#[test]
+fn explicit_staleness_spec_matches_default_csmaafl_curve() {
+    let session = Session::new(tiny_cfg(), LearnerKind::Linear, "artifacts").unwrap();
+    let implicit = session.run_with(|c| c.algorithm = Algorithm::Csmaafl).unwrap();
+    let explicit = session
+        .run_with(|c| {
+            c.algorithm = Algorithm::Csmaafl;
+            c.aggregation = Some("staleness".into());
+        })
+        .unwrap();
+    assert_eq!(implicit.points.len(), explicit.points.len());
+    for (a, b) in implicit.points.iter().zip(&explicit.points) {
+        assert_eq!(a.accuracy, b.accuracy, "curves must be bit-identical");
+        assert_eq!(a.loss, b.loss);
+    }
+    assert_eq!(implicit.aggregations, explicit.aggregations);
+    assert_eq!(implicit.mean_staleness, explicit.mean_staleness);
+    // Only the label differs (registry spelling vs paper legend).
+    assert_eq!(implicit.label, format!("csmaafl g={}", tiny_cfg().gamma));
+    assert_eq!(explicit.label, format!("staleness g={}", tiny_cfg().gamma));
+}
+
+/// The two related-work policies run end-to-end on the event-driven
+/// engine, emit finite curves and actually learn a little.
+#[test]
+fn new_policies_run_end_to_end() {
+    let session = Session::new(tiny_cfg(), LearnerKind::Linear, "artifacts").unwrap();
+    for spec in ["fedasync:0.5", "adaptive", "fedasync:1.0,0.9", "adaptive:0.8,0.2"] {
+        let run = session
+            .run_with(|c| {
+                c.algorithm = Algorithm::Csmaafl;
+                c.aggregation = Some(spec.to_string());
+            })
+            .unwrap();
+        assert!(run.aggregations > 0, "{spec}");
+        assert!(!run.points.is_empty(), "{spec}");
+        assert!(
+            run.points.iter().all(|p| p.accuracy.is_finite()),
+            "{spec} diverged"
+        );
+        let first = run.points.first().unwrap().accuracy;
+        assert!(
+            run.best_accuracy() > first,
+            "{spec} never improved: {first:.3}"
+        );
+    }
+}
+
+/// The naive registry spelling matches the AflNaive algorithm exactly.
+#[test]
+fn naive_spec_matches_afl_naive_algorithm() {
+    let session = Session::new(tiny_cfg(), LearnerKind::Linear, "artifacts").unwrap();
+    let by_algorithm = session
+        .run_with(|c| c.algorithm = Algorithm::AflNaive)
+        .unwrap();
+    let by_spec = session
+        .run_with(|c| {
+            c.algorithm = Algorithm::Csmaafl;
+            c.aggregation = Some("naive".into());
+        })
+        .unwrap();
+    assert_eq!(by_algorithm.points.len(), by_spec.points.len());
+    for (a, b) in by_algorithm.points.iter().zip(&by_spec.points) {
+        assert_eq!(a.accuracy, b.accuracy);
+    }
+}

@@ -6,16 +6,17 @@ use csmaafl::session::{LearnerKind, Session};
 use csmaafl::sim::{HeterogeneityProfile, TimeModel};
 
 fn homo_cfg() -> RunConfig {
-    let mut c = RunConfig::default();
-    c.clients = 6;
-    c.samples_per_client = 20;
-    c.test_samples = 100;
-    c.local_steps = 8;
-    c.heterogeneity = HeterogeneityProfile::Homogeneous;
-    c.jitter = 0.0;
-    c.max_slots = 4.0;
-    c.eval_every_slots = 1.0;
-    c
+    RunConfig {
+        clients: 6,
+        samples_per_client: 20,
+        test_samples: 100,
+        local_steps: 8,
+        heterogeneity: HeterogeneityProfile::Homogeneous,
+        jitter: 0.0,
+        max_slots: 4.0,
+        eval_every_slots: 1.0,
+        ..RunConfig::default()
+    }
 }
 
 /// In the homogeneous setting the SFL engine's virtual round time must be
