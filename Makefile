@@ -6,6 +6,9 @@
 #   make test        Rust test suite, default features (offline, no JAX).
 #   make test-pjrt   Artifacts + Rust tests with the `pjrt` feature.
 #   make test-python Kernel/model tests for the artifact pipeline.
+#   make grid-smoke  Tiny end-to-end pass over the docs/EXPERIMENTS.md
+#                    commands: a parallel scenario x gamma grid, a sweep,
+#                    the Fig.-2 timeline and the beta table.
 
 # The artifacts location is a contract, not a knob: the Rust tests,
 # benches and examples resolve <repo-root>/artifacts (anchored via
@@ -13,7 +16,7 @@
 # repo root.
 CONFIGS ?= mnist_small,fashion_small
 
-.PHONY: artifacts build test test-pjrt test-python
+.PHONY: artifacts build test test-pjrt test-python grid-smoke
 
 artifacts:
 	cd python && python3 -m compile.aot \
@@ -30,3 +33,22 @@ test-pjrt: artifacts
 
 test-python:
 	cd python && python3 -m pytest tests -q
+
+# Exercises the cookbook's command lines (docs/EXPERIMENTS.md) on a
+# deliberately tiny config so CI can afford it: an 8-job grid across all
+# four scenarios, a gamma sweep, the analytic timeline and beta tables.
+grid-smoke: build
+	./target/release/repro grid --learner linear --jobs 4 \
+	    --set clients=4 --set samples_per_client=20 --set test_samples=50 \
+	    --set local_steps=2 --set max_slots=2 \
+	    --axis gamma=0.1,0.4 \
+	    --axis scenario=static,dropout:0.2,churn:0.4,drift:2 \
+	    --out results/grid-smoke
+	./target/release/repro sweep --param gamma --values 0.1,0.4 --jobs 2 \
+	    --learner linear --set clients=4 --set samples_per_client=20 \
+	    --set test_samples=50 --set local_steps=2 --set max_slots=2 \
+	    --out results/grid-smoke
+	./target/release/repro timeline --clients 8 --out results/grid-smoke
+	./target/release/repro inspect betas --clients 8 \
+	    > results/grid-smoke/betas.csv
+	@echo "grid-smoke: OK (see results/grid-smoke/)"

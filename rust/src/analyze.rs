@@ -26,6 +26,11 @@ pub fn run_from_json(j: &Json) -> Result<RunResult> {
         .and_then(Json::as_array)
         .map(|a| a.iter().filter_map(Json::as_i64).map(|v| v as u64).collect())
         .unwrap_or_default();
+    run.lost_per_client = j
+        .get("lost_per_client")
+        .and_then(Json::as_array)
+        .map(|a| a.iter().filter_map(Json::as_i64).map(|v| v as u64).collect())
+        .unwrap_or_default();
     for p in j
         .get("points")
         .and_then(Json::as_array)
@@ -145,11 +150,13 @@ mod tests {
     fn json_record_roundtrip() {
         let mut r = fake_run("x", &[0.1, 0.5, 0.9]);
         r.lost_uploads = 3;
+        r.lost_per_client = vec![1, 2];
         let back = run_from_json(&r.to_json()).unwrap();
         assert_eq!(back.label, "x");
         assert_eq!(back.points.len(), 3);
         assert_eq!(back.points[2].accuracy, 0.9);
         assert_eq!(back.lost_uploads, 3);
+        assert_eq!(back.lost_per_client, vec![1, 2]);
     }
 
     #[test]

@@ -9,7 +9,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::policy::{AggregationPolicy, PolicyParams};
 use crate::coordinator::scheduler::SchedulerPolicy;
 use crate::data::{Partition, SynthKind};
-use crate::sim::{HeterogeneityProfile, TimeModel};
+use crate::sim::{scenario, HeterogeneityProfile, TimeModel};
 use crate::util::json::{self, Json};
 
 /// Which federated algorithm to run.
@@ -120,6 +120,11 @@ pub struct RunConfig {
     /// `fedasync:0.5`) overriding the algorithm's paper default for AFL
     /// runs; `None` (spelled `auto`) keeps the default.
     pub aggregation: Option<String>,
+    /// Scenario-registry spelling (e.g. `dropout:0.1`, `churn:0.3`,
+    /// `drift:8`) selecting the world model the event-driven AFL
+    /// engines simulate; `None` (spelled `static`) keeps today's fixed
+    /// world and is bit-identical to the pre-scenario engine.
+    pub scenario: Option<String>,
     /// Upload-slot arbitration policy (AFL engines).
     pub scheduler: SchedulerPolicy,
     /// Failure injection: probability that a granted upload is lost in
@@ -156,6 +161,7 @@ impl Default for RunConfig {
             adaptive_iters: true,
             aggregator: AggregatorKind::Native,
             aggregation: None,
+            scenario: None,
             scheduler: SchedulerPolicy::OldestModelFirst,
             upload_loss: 0.0,
             sfl_sample_fraction: 1.0,
@@ -208,6 +214,20 @@ impl RunConfig {
             };
             <dyn AggregationPolicy>::parse(spec, &params)
                 .with_context(|| format!("aggregation policy {spec:?}"))?;
+        }
+        if let Some(spec) = &self.scenario {
+            // Only the event-driven AFL engines consult the scenario
+            // hooks; accepting the spelling elsewhere would silently run
+            // a different world than the user asked for.
+            if !matches!(self.algorithm, Algorithm::AflNaive | Algorithm::Csmaafl) {
+                bail!(
+                    "scenario overrides apply only to the event-driven AFL \
+                     engines (afl-naive/csmaafl); algorithm {} simulates the \
+                     static world",
+                    self.algorithm.name()
+                );
+            }
+            scenario::parse(spec).with_context(|| format!("scenario {spec:?}"))?;
         }
         Ok(())
     }
@@ -286,6 +306,16 @@ impl RunConfig {
                     Some(val.to_string())
                 }
             }
+            // Scenario spellings are validated against the registry in
+            // `validate` (like aggregation); `static` is the pinned
+            // default, stored as None so provenance roundtrips.
+            "scenario" => {
+                self.scenario = if val.eq_ignore_ascii_case("static") {
+                    None
+                } else {
+                    Some(val.to_string())
+                }
+            }
             "scheduler" => self.scheduler = SchedulerPolicy::parse(val).ok_or_else(badval)?,
             "upload_loss" => self.upload_loss = val.parse().map_err(|_| badval())?,
             "sfl_sample_fraction" => {
@@ -326,6 +356,10 @@ impl RunConfig {
                 "aggregation",
                 Json::Str(self.aggregation.clone().unwrap_or_else(|| "auto".into())),
             )
+            .set(
+                "scenario",
+                Json::Str(self.scenario.clone().unwrap_or_else(|| "static".into())),
+            )
             .set("scheduler", Json::Str(self.scheduler.name().into()));
         o
     }
@@ -363,6 +397,10 @@ mod tests {
         assert_eq!(c.aggregation.as_deref(), Some("fedasync:0.5"));
         c.set_field("aggregation", "auto").unwrap();
         assert_eq!(c.aggregation, None);
+        c.set_field("scenario", "dropout:0.1").unwrap();
+        assert_eq!(c.scenario.as_deref(), Some("dropout:0.1"));
+        c.set_field("scenario", "static").unwrap();
+        assert_eq!(c.scenario, None);
         assert!(c.set_field("nonsense", "1").is_err());
         assert!(c.set_field("clients", "abc").is_err());
     }
@@ -382,6 +420,25 @@ mod tests {
         c.algorithm = Algorithm::Sfl;
         let err = c.validate().unwrap_err().to_string();
         assert!(err.contains("fixed rule"), "{err}");
+        c.algorithm = Algorithm::AflBaseline;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_scenario_spec() {
+        let mut c = RunConfig {
+            scenario: Some("bogus".into()),
+            ..RunConfig::default()
+        };
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("bogus"), "{err}");
+        c.scenario = Some("churn:0.3,2".into());
+        c.validate().unwrap();
+        // Engines that never consult the scenario hooks must refuse the
+        // override rather than silently simulating the static world.
+        c.algorithm = Algorithm::Sfl;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("static world"), "{err}");
         c.algorithm = Algorithm::AflBaseline;
         assert!(c.validate().is_err());
     }
@@ -437,6 +494,7 @@ mod tests {
             },
             aggregator: AggregatorKind::Pjrt,
             aggregation: Some("fedasync:0.5,0.9".into()),
+            scenario: Some("drift:8,2.5".into()),
             scheduler: SchedulerPolicy::RoundRobin,
             jitter: 0.25,
             ..RunConfig::default()

@@ -12,6 +12,16 @@
 //! time, compute and the uplink channel. The same core drives the TCP
 //! deployment leader (`net::leader`), so the simulator and the
 //! deployment share one aggregation code path.
+//!
+//! The *world* being simulated is a pluggable [`Scenario`]
+//! (`sim::scenario`, config spelling `scenario=<name[:params]>`): the
+//! loop consults it when drawing compute durations (`drift`), when a
+//! client contends for the channel (`churn` — an offline client holds
+//! its local model and re-contends on rejoin, so its eventual upload is
+//! stale), and when an upload completes (`dropout`). The pinned
+//! `static` default answers every hook with the identity and draws no
+//! randomness, so default runs are bit-identical to the pre-scenario
+//! engine.
 
 use std::sync::Arc;
 
@@ -24,7 +34,7 @@ use super::scheduler::{SchedulerPolicy, UploadScheduler};
 use crate::learner::BatchCursor;
 use crate::metrics::RunResult;
 use crate::model::ParamSet;
-use crate::sim::{ComputeModel, EventQueue, Ticks, UplinkChannel};
+use crate::sim::{scenario, ComputeModel, EventQueue, Scenario, Ticks, UplinkChannel};
 use crate::util::rng::Rng;
 
 #[derive(Debug)]
@@ -101,6 +111,14 @@ pub fn run_afl(
     let mut rec = Recorder::new(ctx, slot_ticks)?;
     let max_ticks = rec.max_ticks();
 
+    // The world model (static | dropout | churn | drift). Stochastic
+    // scenarios draw from their own forked streams, never from `jrng`.
+    let mut world: Box<dyn Scenario> = scenario::resolve(cfg.scenario.as_deref())?;
+    world.bind(m, slot_ticks, cfg.seed);
+    if cfg.scenario.is_some() {
+        crate::log_info!("afl[{}]: scenario {}", label, world.label());
+    }
+
     let img = ctx.train.x.len() / ctx.train.len();
     let batch = ctx.learner.batch();
 
@@ -151,10 +169,20 @@ pub fn run_afl(
                     .fill(ctx.train, steps * batch, img, &mut xs, &mut ys);
                 let (local, _loss) = ctx.learner.train(&w_recv, &xs, &ys, steps)?;
                 clients[client].pending = Some((local, i));
-                let dur = cm.duration(&cfg.time, client, steps, &mut jrng);
+                // Scenario drift: time-varying compute (scale 1.0 under
+                // the static default — bit-identical draw).
+                let scale = world.compute_scale(client, now);
+                let dur = cm.duration_scaled(&cfg.time, client, steps, &mut jrng, scale);
                 queue.schedule_in(dur, Event::ComputeDone { client });
             }
             Event::ComputeDone { client } => {
+                // Scenario churn: an offline client holds its local
+                // model and re-contends only when it rejoins, by which
+                // point the version it trained from is stale.
+                if let Some(rejoin) = world.offline_until(client, now) {
+                    queue.schedule_at(rejoin, Event::ComputeDone { client });
+                    continue;
+                }
                 scheduler.request(client, now);
                 grant_next(&mut scheduler, &mut channel, &mut queue, now, cfg.time.tau_up);
             }
@@ -163,10 +191,14 @@ pub fn run_afl(
                     .pending
                     .take()
                     .expect("upload without a pending local model");
-                // Failure injection: the upload is lost in transit. The
-                // server never sees the model; it re-sends the current
-                // global so the client rejoins the loop.
-                if cfg.upload_loss > 0.0 && jrng.f64() < cfg.upload_loss {
+                // Failure injection (`upload_loss` knob or `dropout`
+                // scenario): the upload is lost in transit. The server
+                // never sees the model; it re-sends the current global
+                // so the client rejoins the loop. The scenario draw
+                // comes first and from its own stream, so it cannot
+                // perturb the legacy `upload_loss` sequence.
+                let scenario_lost = world.upload_lost(client, now);
+                if scenario_lost || (cfg.upload_loss > 0.0 && jrng.f64() < cfg.upload_loss) {
                     core.on_lost_upload(client);
                     let i = core.issue_to(client);
                     queue.schedule_in(cfg.time.tau_down, Event::DownloadDone {
@@ -211,6 +243,7 @@ pub fn run_afl(
         mean_staleness: core.mean_staleness(),
         fairness: scheduler.jain_fairness(),
         lost_uploads: core.lost_uploads(),
+        lost_per_client: core.lost_per_client().to_vec(),
         total_ticks: max_ticks,
     };
     Ok(rec.into_result(stats))

@@ -11,6 +11,12 @@
 //! The solved β schedule is the `SolvedBeta` aggregation policy; this
 //! driver only simulates the sweep timing and feeds uploads through the
 //! shared sans-IO `ServerCore`.
+//!
+//! The sweep structure presumes the static world — every client uploads
+//! exactly once per broadcast — so `RunConfig::validate` rejects
+//! non-`static` `scenario=` spellings for this algorithm (dropout or
+//! churn would break the exact-equivalence guarantee the solved β
+//! coefficients encode).
 
 use anyhow::Result;
 
@@ -109,6 +115,7 @@ pub fn run_afl_baseline(ctx: &FlContext<'_>) -> Result<RunResult> {
         mean_staleness: core.mean_staleness(),
         fairness: 1.0, // one upload per client per sweep, by construction
         lost_uploads: 0,
+        lost_per_client: vec![0; m],
         total_ticks: max_ticks,
     };
     Ok(rec.into_result(stats))

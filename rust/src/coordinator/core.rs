@@ -61,6 +61,7 @@ pub struct ServerCore {
     updates_per_client: Vec<u64>,
     staleness_sum: f64,
     lost_uploads: u64,
+    lost_per_client: Vec<u64>,
 }
 
 impl ServerCore {
@@ -83,6 +84,7 @@ impl ServerCore {
             updates_per_client: vec![0; clients],
             staleness_sum: 0.0,
             lost_uploads: 0,
+            lost_per_client: vec![0; clients],
         }
     }
 
@@ -156,14 +158,22 @@ impl ServerCore {
     }
 
     /// Record an upload lost in transit (failure injection / network
-    /// drop). No aggregation happens; only the statistic advances.
-    pub fn on_lost_upload(&mut self, _client: usize) {
+    /// drop / `dropout` scenario). No aggregation happens; only the
+    /// statistics advance.
+    pub fn on_lost_upload(&mut self, client: usize) {
         self.lost_uploads += 1;
+        self.lost_per_client[client] += 1;
     }
 
     /// Uploads lost in transit so far.
     pub fn lost_uploads(&self) -> u64 {
         self.lost_uploads
+    }
+
+    /// Uploads lost in transit, per client — the systematic-bias signal
+    /// under dropout (which clients the model stops hearing from).
+    pub fn lost_per_client(&self) -> &[u64] {
+        &self.lost_per_client
     }
 
     /// Mean observed staleness across aggregations (0 before the first).
@@ -264,10 +274,12 @@ mod tests {
 
     #[test]
     fn lost_uploads_do_not_aggregate() {
-        let mut core = ServerCore::new(pset(&[1.0]), 1, Box::new(NaiveAlpha), 0.1);
+        let mut core = ServerCore::new(pset(&[1.0]), 2, Box::new(NaiveAlpha), 0.1);
         core.on_lost_upload(0);
         core.on_lost_upload(0);
-        assert_eq!(core.lost_uploads(), 2);
+        core.on_lost_upload(1);
+        assert_eq!(core.lost_uploads(), 3);
+        assert_eq!(core.lost_per_client(), &[2, 1]);
         assert_eq!(core.iteration(), 0);
         assert_eq!(core.global().max_abs_diff(&pset(&[1.0])), 0.0);
     }

@@ -15,7 +15,9 @@
 //! Any AFL run can swap its aggregation rule via the config's
 //! `aggregation` spelling (e.g. `--set aggregation=fedasync:0.5`) —
 //! including the two related-work policies `FedAsyncPoly` and
-//! `AdaptiveDistance`. The TCP deployment leader (`net::leader`) drives
+//! `AdaptiveDistance` — and its *world model* via the `scenario`
+//! spelling (`sim::scenario`: `static` | `dropout:p` | `churn:rate` |
+//! `drift:period`). The TCP deployment leader (`net::leader`) drives
 //! the same `ServerCore`, so the simulator and the deployment share one
 //! aggregation code path.
 

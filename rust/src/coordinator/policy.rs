@@ -21,11 +21,12 @@
 //!
 //! Parse a spelling with `<dyn AggregationPolicy>::parse`.
 
-use anyhow::{anyhow, bail, ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use super::beta_solver::solve_betas;
 use super::scheduler::UploadRequest;
 use super::staleness::local_weight;
+use crate::util::spec::parse_spec;
 
 /// Everything the server knows about an incoming update at the moment it
 /// must choose an aggregation weight. Built by `ServerCore`; policies
@@ -101,47 +102,28 @@ impl dyn AggregationPolicy {
     /// Unknown names and malformed parameters are errors naming the
     /// offending token.
     pub fn parse(spec: &str, params: &PolicyParams) -> Result<Box<dyn AggregationPolicy>> {
-        let (name, args) = match spec.split_once(':') {
-            Some((n, a)) => (n, Some(a)),
-            None => (spec, None),
-        };
-        let floats = |args: Option<&str>| -> Result<Vec<f64>> {
-            match args {
-                None => Ok(Vec::new()),
-                Some(a) => a
-                    .split(',')
-                    .map(|p| {
-                        p.trim().parse::<f64>().map_err(|_| {
-                            anyhow!("invalid numeric parameter {p:?} in aggregation spec {spec:?}")
-                        })
-                    })
-                    .collect(),
-            }
-        };
+        let (name, f) = parse_spec(spec)?;
         match name.to_ascii_lowercase().as_str() {
             "naive" | "alpha" => {
-                ensure!(args.is_none(), "policy {name:?} takes no parameters");
+                ensure!(f.is_empty(), "policy {name:?} takes no parameters");
                 Ok(Box::new(NaiveAlpha))
             }
             "solved" | "solved-beta" | "baseline" => {
-                ensure!(args.is_none(), "policy {name:?} takes no parameters");
+                ensure!(f.is_empty(), "policy {name:?} takes no parameters");
                 Ok(Box::new(SolvedBeta::new(params.clients)?))
             }
             "staleness" | "csmaafl" | "eq11" => {
-                let f = floats(args)?;
                 ensure!(f.len() <= 1, "staleness takes at most one parameter (γ)");
                 let gamma = f.first().copied().unwrap_or(params.gamma);
                 Ok(Box::new(StalenessEq11::new(gamma)?))
             }
             "fedasync" => {
-                let f = floats(args)?;
                 ensure!(f.len() <= 2, "fedasync takes at most two parameters (a, mix)");
                 let a = f.first().copied().unwrap_or(0.5);
                 let mix = f.get(1).copied().unwrap_or(0.6);
                 Ok(Box::new(FedAsyncPoly::new(a, mix)?))
             }
             "adaptive" | "adaptive-distance" | "asyncfeded" => {
-                let f = floats(args)?;
                 ensure!(f.len() <= 2, "adaptive takes at most two parameters (η, ρ)");
                 let eta = f.first().copied().unwrap_or(0.5);
                 let rho = f.get(1).copied().unwrap_or(0.1);

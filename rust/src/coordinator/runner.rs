@@ -75,6 +75,9 @@ pub struct RunStats {
     pub fairness: f64,
     /// Uploads lost in transit (failure injection; 0 = reliable).
     pub lost_uploads: u64,
+    /// Uploads lost in transit, per client (dropout-bias accounting;
+    /// empty or all-zero on reliable channels).
+    pub lost_per_client: Vec<u64>,
     /// Virtual completion time.
     pub total_ticks: Ticks,
 }
@@ -180,6 +183,7 @@ impl<'a> Recorder<'a> {
             mean_staleness: stats.mean_staleness,
             fairness: stats.fairness,
             lost_uploads: stats.lost_uploads,
+            lost_per_client: stats.lost_per_client,
             total_ticks: stats.total_ticks,
             wallclock_secs: wallclock,
         }

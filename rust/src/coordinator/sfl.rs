@@ -88,6 +88,7 @@ pub fn run_sfl(ctx: &FlContext<'_>) -> Result<crate::metrics::RunResult> {
         mean_staleness: 0.0,
         fairness: 1.0,
         lost_uploads: 0,
+        lost_per_client: vec![0; m],
         total_ticks: now,
     };
     Ok(rec.into_result(stats))

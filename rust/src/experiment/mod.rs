@@ -1,0 +1,26 @@
+//! The parallel experiment engine: declarative multi-run [`Plan`]s
+//! executed across OS threads by [`PlanRunner`].
+//!
+//! Everything the paper claims is comparative — CSMAAFL vs. synchronous
+//! FL vs. naive-α, across heterogeneity levels and (now) scenarios — so
+//! the repository's unit of work is rarely one run; it is a *grid* of
+//! runs. This module makes that grid a first-class object:
+//!
+//! * [`Plan`] (`plan.rs`) — explicit job rows, cartesian sweep axes in
+//!   the `--set key=value` spelling, and replicates with
+//!   deterministically derived seeds ([`derive_seed`]).
+//! * [`PlanRunner`] (`runner.rs`) — `std::thread::scope` workers over
+//!   an atomic job counter with ordered result collection; output is
+//!   byte-identical for `--jobs 1` and `--jobs N`.
+//! * [`grid_record`] — the `repro grid` JSON results matrix, built from
+//!   deterministic run summaries only.
+//!
+//! `repro sweep`, `repro compare`, `repro figures` and `repro grid` all
+//! execute through this engine; see `docs/EXPERIMENTS.md` for the
+//! cookbook.
+
+mod plan;
+mod runner;
+
+pub use plan::{derive_seed, Axis, Job, Plan};
+pub use runner::{effective_jobs, grid_record, PlanRunner};

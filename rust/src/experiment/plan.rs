@@ -1,0 +1,340 @@
+//! Experiment plans: cartesian grids of `RunConfig` overrides expanded
+//! into an ordered list of independent jobs.
+//!
+//! A [`Plan`] is declarative — explicit job rows (the `compare`
+//! series), sweep axes (the `--axis`/`--set` grid spelling), and an
+//! optional replicate count with deterministically derived per-job
+//! seeds. [`Plan::expand`] flattens it into [`Job`]s in a stable order
+//! (explicit rows outermost, then axes first-to-last, replicates
+//! innermost), so job indices — and therefore result files — are
+//! byte-identical however many threads later execute them.
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+
+/// One sweep axis: a config key and the values it takes, both in the
+/// `--set key=value` string spelling.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Axis {
+    /// The [`RunConfig::set_field`] key.
+    pub key: String,
+    /// The values the key sweeps over.
+    pub values: Vec<String>,
+}
+
+/// One expanded job: the overrides applied to the base config.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Job {
+    /// Position in the plan's expansion order (stable across runs and
+    /// thread counts).
+    pub index: usize,
+    /// `(key, value)` overrides, applied in order via
+    /// [`RunConfig::set_field`].
+    pub overrides: Vec<(String, String)>,
+    /// Series-label override; `None` keeps the engine-assigned label.
+    pub label: Option<String>,
+}
+
+impl Job {
+    /// Apply the job's overrides to `cfg`, in override order.
+    pub fn apply(&self, cfg: &mut RunConfig) -> Result<()> {
+        for (k, v) in &self.overrides {
+            cfg.set_field(k, v)?;
+        }
+        Ok(())
+    }
+
+    /// The `k1=v1 k2=v2` spelling of the job's overrides (error
+    /// context, matrix rows).
+    pub fn spec(&self) -> String {
+        self.overrides
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Derive the seed for replicate `replicate` of a plan rooted at
+/// `root`. Replicate 0 keeps the root seed (so un-replicated plans are
+/// bit-identical to direct runs); later replicates mix the index
+/// through a splitmix64 finalizer, giving well-separated, platform-
+/// independent streams.
+pub fn derive_seed(root: u64, replicate: u64) -> u64 {
+    if replicate == 0 {
+        return root;
+    }
+    let mut z = root ^ replicate.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A declarative multi-run experiment: explicit job rows × sweep axes ×
+/// replicates over one base config.
+///
+/// ```
+/// use csmaafl::experiment::Plan;
+///
+/// let plan = Plan::new()
+///     .axis("gamma", ["0.1", "0.2"])
+///     .axis("scheduler", ["oldest", "fifo"]);
+/// let jobs = plan.expand(42);
+/// assert_eq!(jobs.len(), 4);
+/// // First axis outermost, second innermost:
+/// assert_eq!(jobs[0].spec(), "gamma=0.1 scheduler=oldest");
+/// assert_eq!(jobs[1].spec(), "gamma=0.1 scheduler=fifo");
+/// assert_eq!(jobs[3].spec(), "gamma=0.2 scheduler=fifo");
+/// assert_eq!(jobs[3].label.as_deref(), Some("gamma=0.2 scheduler=fifo"));
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct Plan {
+    explicit: Vec<Vec<(String, String)>>,
+    axes: Vec<Axis>,
+    replicates: usize,
+}
+
+impl Plan {
+    /// An empty plan (expands to one job with no overrides).
+    pub fn new() -> Plan {
+        Plan::default()
+    }
+
+    /// Append an explicit job row (a fixed override set, e.g. one
+    /// `compare` series). Explicit rows vary outermost in the
+    /// expansion, in insertion order.
+    pub fn job<K, V>(mut self, overrides: impl IntoIterator<Item = (K, V)>) -> Plan
+    where
+        K: Into<String>,
+        V: Into<String>,
+    {
+        self.explicit.push(
+            overrides
+                .into_iter()
+                .map(|(k, v)| (k.into(), v.into()))
+                .collect(),
+        );
+        self
+    }
+
+    /// Append a sweep axis. Axes vary in declaration order, the first
+    /// axis outermost. An axis with no values expands to zero jobs.
+    pub fn axis<V>(mut self, key: &str, values: impl IntoIterator<Item = V>) -> Plan
+    where
+        V: Into<String>,
+    {
+        self.axes.push(Axis {
+            key: key.to_string(),
+            values: values.into_iter().map(Into::into).collect(),
+        });
+        self
+    }
+
+    /// Run every cell `n` times with per-replicate derived seeds
+    /// ([`derive_seed`]; replicate 0 keeps the cell's seed — the cell's
+    /// own `seed` axis/override when present, else the base seed).
+    /// Replicates vary innermost. `n <= 1` means a single run per cell.
+    pub fn replicates(mut self, n: usize) -> Plan {
+        self.replicates = n;
+        self
+    }
+
+    /// The plan's sweep axes (matrix-record provenance).
+    pub fn axes(&self) -> &[Axis] {
+        &self.axes
+    }
+
+    /// Number of jobs [`Plan::expand`] will produce.
+    pub fn job_count(&self) -> usize {
+        let rows = self.explicit.len().max(1);
+        let cells: usize = self.axes.iter().map(|a| a.values.len()).product();
+        rows * cells * self.replicates.max(1)
+    }
+
+    /// Expand into the ordered job list. `base_seed` roots the
+    /// replicate-seed derivation (pass the base config's seed).
+    pub fn expand(&self, base_seed: u64) -> Vec<Job> {
+        let rows: Vec<Vec<(String, String)>> = if self.explicit.is_empty() {
+            vec![Vec::new()]
+        } else {
+            self.explicit.clone()
+        };
+        // Cartesian product over axes: first axis outermost.
+        let mut combos: Vec<Vec<(String, String)>> = vec![Vec::new()];
+        for ax in &self.axes {
+            let mut next = Vec::with_capacity(combos.len() * ax.values.len());
+            for combo in &combos {
+                for v in &ax.values {
+                    let mut c = combo.clone();
+                    c.push((ax.key.clone(), v.clone()));
+                    next.push(c);
+                }
+            }
+            combos = next;
+        }
+        let reps = self.replicates.max(1);
+        let mut jobs = Vec::with_capacity(rows.len() * combos.len() * reps);
+        for row in &rows {
+            for combo in &combos {
+                for rep in 0..reps {
+                    let mut overrides = row.clone();
+                    overrides.extend(combo.iter().cloned());
+                    let mut label_parts: Vec<String> =
+                        combo.iter().map(|(k, v)| format!("{k}={v}")).collect();
+                    if reps > 1 {
+                        // Root the replicate derivation at the cell's
+                        // *effective* seed: a `seed` axis or explicit
+                        // `seed` override wins over the base seed, so a
+                        // seed-swept grid replicates each cell from its
+                        // own root instead of silently clobbering the
+                        // axis with base-derived values.
+                        let root = overrides
+                            .iter()
+                            .rev()
+                            .find(|(k, _)| k == "seed")
+                            .and_then(|(_, v)| v.parse::<u64>().ok())
+                            .unwrap_or(base_seed);
+                        let seed = derive_seed(root, rep as u64);
+                        overrides.push(("seed".to_string(), seed.to_string()));
+                        label_parts.push(format!("rep={rep}"));
+                    }
+                    let label = if label_parts.is_empty() {
+                        None
+                    } else {
+                        Some(label_parts.join(" "))
+                    };
+                    jobs.push(Job {
+                        index: jobs.len(),
+                        overrides,
+                        label,
+                    });
+                }
+            }
+        }
+        jobs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_one_bare_job() {
+        let jobs = Plan::new().expand(1);
+        assert_eq!(jobs.len(), 1);
+        assert!(jobs[0].overrides.is_empty());
+        assert_eq!(jobs[0].label, None);
+        assert_eq!(Plan::new().job_count(), 1);
+    }
+
+    #[test]
+    fn three_axis_grid_expands_in_row_major_order() {
+        let plan = Plan::new()
+            .axis("a", ["1", "2"])
+            .axis("b", ["x"])
+            .axis("c", ["7", "8", "9"]);
+        assert_eq!(plan.job_count(), 6);
+        let jobs = plan.expand(0);
+        assert_eq!(jobs.len(), 6);
+        assert_eq!(jobs[0].spec(), "a=1 b=x c=7");
+        assert_eq!(jobs[1].spec(), "a=1 b=x c=8");
+        assert_eq!(jobs[2].spec(), "a=1 b=x c=9");
+        assert_eq!(jobs[3].spec(), "a=2 b=x c=7");
+        assert_eq!(jobs[5].spec(), "a=2 b=x c=9");
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.index, i);
+        }
+    }
+
+    #[test]
+    fn explicit_rows_keep_engine_labels() {
+        let plan = Plan::new()
+            .job([("algorithm", "fedavg")])
+            .job([("algorithm", "csmaafl"), ("gamma", "0.4")]);
+        let jobs = plan.expand(0);
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].label, None, "engine label wins for explicit rows");
+        assert_eq!(jobs[1].spec(), "algorithm=csmaafl gamma=0.4");
+    }
+
+    #[test]
+    fn explicit_rows_cross_with_axes() {
+        let plan = Plan::new()
+            .job([("algorithm", "fedavg")])
+            .job([("algorithm", "csmaafl")])
+            .axis("clients", ["4", "8"]);
+        let jobs = plan.expand(0);
+        assert_eq!(jobs.len(), 4);
+        assert_eq!(jobs[0].spec(), "algorithm=fedavg clients=4");
+        assert_eq!(jobs[3].spec(), "algorithm=csmaafl clients=8");
+        assert_eq!(jobs[1].label.as_deref(), Some("clients=8"));
+    }
+
+    #[test]
+    fn replicates_derive_seeds_and_keep_rep0_at_root() {
+        let plan = Plan::new().axis("gamma", ["0.2"]).replicates(3);
+        let jobs = plan.expand(42);
+        assert_eq!(jobs.len(), 3);
+        let seed_of = |j: &Job| {
+            j.overrides
+                .iter()
+                .find(|(k, _)| k == "seed")
+                .map(|(_, v)| v.clone())
+                .unwrap()
+        };
+        assert_eq!(seed_of(&jobs[0]), "42", "replicate 0 keeps the root seed");
+        assert_ne!(seed_of(&jobs[1]), seed_of(&jobs[2]));
+        assert_ne!(seed_of(&jobs[1]), "42");
+        assert_eq!(jobs[1].label.as_deref(), Some("gamma=0.2 rep=1"));
+        // Derivation is pure: same inputs, same seeds.
+        assert_eq!(derive_seed(42, 2), derive_seed(42, 2));
+        assert_ne!(derive_seed(42, 1), derive_seed(43, 1));
+    }
+
+    #[test]
+    fn replicates_root_at_each_cell_of_a_seed_axis() {
+        // A seed axis must not be clobbered by replicate derivation:
+        // each cell replicates from its own seed.
+        let plan = Plan::new().axis("seed", ["1", "2"]).replicates(2);
+        let jobs = plan.expand(42);
+        assert_eq!(jobs.len(), 4);
+        let seed_of = |j: &Job| {
+            j.overrides
+                .iter()
+                .rev()
+                .find(|(k, _)| k == "seed")
+                .map(|(_, v)| v.clone())
+                .unwrap()
+        };
+        assert_eq!(seed_of(&jobs[0]), "1", "cell seed=1, rep 0 keeps 1");
+        assert_eq!(seed_of(&jobs[2]), "2", "cell seed=2, rep 0 keeps 2");
+        assert_eq!(seed_of(&jobs[1]), derive_seed(1, 1).to_string());
+        assert_eq!(seed_of(&jobs[3]), derive_seed(2, 1).to_string());
+        assert_ne!(seed_of(&jobs[1]), seed_of(&jobs[3]), "cells stay distinct");
+    }
+
+    #[test]
+    fn jobs_apply_overrides_to_configs() {
+        let plan = Plan::new().axis("gamma", ["0.4"]).axis("clients", ["8"]);
+        let job = &plan.expand(0)[0];
+        let mut cfg = RunConfig::default();
+        job.apply(&mut cfg).unwrap();
+        assert_eq!(cfg.gamma, 0.4);
+        assert_eq!(cfg.clients, 8);
+        let bad = Job {
+            index: 0,
+            overrides: vec![("gamma".into(), "banana".into())],
+            label: None,
+        };
+        assert!(bad.apply(&mut cfg).is_err());
+    }
+
+    #[test]
+    fn empty_axis_expands_to_zero_jobs() {
+        let plan = Plan::new().axis("gamma", Vec::<String>::new());
+        assert!(plan.expand(0).is_empty());
+        assert_eq!(plan.job_count(), 0);
+    }
+}

@@ -1,0 +1,206 @@
+//! Parallel plan execution over OS threads (std-only).
+//!
+//! Every job of a [`Plan`] is an independent, fully seed-deterministic
+//! run, so parallelism is pure scheduling: workers pull jobs from a
+//! shared atomic counter, results are collected *by job index*, and the
+//! first error (in job order, not completion order) wins. Output is
+//! therefore byte-identical for `--jobs 1` and `--jobs N`.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+use anyhow::{Context, Result};
+
+use super::plan::{Job, Plan};
+use crate::metrics::RunResult;
+use crate::session::Session;
+use crate::util::json::Json;
+
+/// Config keys whose override invalidates the shared session's data or
+/// learner state; jobs touching one get a private rebuilt session.
+const SESSION_KEYS: [&str; 7] = [
+    "clients",
+    "samples_per_client",
+    "test_samples",
+    "dataset",
+    "partition",
+    "seed",
+    "model_config",
+];
+
+/// The number of worker threads a request resolves to: `requested == 0`
+/// means the machine's available parallelism, and the result is clamped
+/// to `[1, job_count]` so small plans never spawn idle threads.
+pub fn effective_jobs(requested: usize, job_count: usize) -> usize {
+    let auto = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let n = if requested == 0 { auto } else { requested };
+    n.clamp(1, job_count.max(1))
+}
+
+/// Executes a [`Plan`]'s jobs against a base [`Session`] across worker
+/// threads, preserving the paired-experiment guarantees: jobs whose
+/// overrides leave the shared data valid run against the base session
+/// (same dataset, shards, init — exactly like a sequential
+/// `Session::run_with` loop), while jobs that change data-shaping keys
+/// (`clients`, `dataset`, `seed`, ...) get a private session built from
+/// their own config.
+pub struct PlanRunner<'a> {
+    session: &'a Session,
+    jobs: usize,
+}
+
+impl<'a> PlanRunner<'a> {
+    /// A runner over `session` with automatic thread count.
+    pub fn new(session: &'a Session) -> PlanRunner<'a> {
+        PlanRunner { session, jobs: 0 }
+    }
+
+    /// Set the worker-thread count (`0` = available parallelism).
+    pub fn jobs(mut self, n: usize) -> PlanRunner<'a> {
+        self.jobs = n;
+        self
+    }
+
+    /// Expand `plan` (seeding replicates from the session's config) and
+    /// execute every job. Results come back in job order.
+    pub fn run(&self, plan: &Plan) -> Result<Vec<RunResult>> {
+        let jobs = plan.expand(self.session.cfg.seed);
+        self.run_jobs(&jobs)
+    }
+
+    /// Execute an already-expanded job list. Results come back in job
+    /// order; the first failing job (by index) aborts the batch with an
+    /// error naming the job's overrides. Overrides are pre-validated
+    /// before anything runs, so a typo in cell N fails in milliseconds
+    /// instead of after the N-1 cells before it trained; a failure at
+    /// run time stops workers from starting further jobs.
+    pub fn run_jobs(&self, jobs: &[Job]) -> Result<Vec<RunResult>> {
+        for (i, job) in jobs.iter().enumerate() {
+            let mut cfg = self.session.cfg.clone();
+            job.apply(&mut cfg)
+                .and_then(|()| cfg.validate())
+                .with_context(|| format!("job {i} ({})", job.spec()))?;
+        }
+        let threads = effective_jobs(self.jobs, jobs.len());
+        let mut slots: Vec<Option<Result<RunResult>>> = Vec::new();
+        if threads <= 1 {
+            for job in jobs {
+                let result = self.run_job(job);
+                let failed = result.is_err();
+                slots.push(Some(result));
+                if failed {
+                    break;
+                }
+            }
+        } else {
+            slots.resize_with(jobs.len(), || None);
+            let next = AtomicUsize::new(0);
+            let abort = AtomicBool::new(false);
+            let (tx, rx) = mpsc::channel::<(usize, Result<RunResult>)>();
+            std::thread::scope(|scope| {
+                for _ in 0..threads {
+                    let tx = tx.clone();
+                    let next = &next;
+                    let abort = &abort;
+                    scope.spawn(move || loop {
+                        if abort.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= jobs.len() {
+                            break;
+                        }
+                        let result = self.run_job(&jobs[i]);
+                        if result.is_err() {
+                            abort.store(true, Ordering::Relaxed);
+                        }
+                        if tx.send((i, result)).is_err() {
+                            break;
+                        }
+                    });
+                }
+                drop(tx);
+                // Collect by index: completion order is load-dependent,
+                // slot order is not.
+                for (i, result) in rx {
+                    slots[i] = Some(result);
+                }
+            });
+        }
+        // The job counter hands indices out monotonically and started
+        // jobs always complete, so the lowest failing index is always
+        // present and everything below it succeeded — the first error
+        // in job order is deterministic even with the abort flag.
+        let mut out = Vec::with_capacity(slots.len());
+        for (i, slot) in slots.into_iter().enumerate() {
+            match slot {
+                Some(Ok(run)) => out.push(run),
+                Some(Err(e)) => {
+                    return Err(e.context(format!("job {i} ({})", jobs[i].spec())))
+                }
+                None => anyhow::bail!("job {i} skipped after an earlier failure"),
+            }
+        }
+        Ok(out)
+    }
+
+    fn run_job(&self, job: &Job) -> Result<RunResult> {
+        let needs_fresh = job
+            .overrides
+            .iter()
+            .any(|(k, _)| SESSION_KEYS.contains(&k.as_str()));
+        let mut run = if needs_fresh {
+            let mut cfg = self.session.cfg.clone();
+            job.apply(&mut cfg)?;
+            self.session.rebuild(cfg)?.run()?
+        } else {
+            self.session.run_with_try(|cfg| job.apply(cfg))?
+        };
+        if let Some(label) = &job.label {
+            run.label = label.clone();
+        }
+        Ok(run)
+    }
+}
+
+/// Assemble the `repro grid` results matrix: the plan's axes plus one
+/// row per job (its overrides and the run's deterministic summary).
+/// Built exclusively from [`RunResult::summary_json`], so the record is
+/// byte-identical across thread counts.
+pub fn grid_record(plan: &Plan, jobs: &[Job], runs: &[RunResult]) -> Json {
+    let axes = plan
+        .axes()
+        .iter()
+        .map(|ax| {
+            let mut a = Json::object();
+            a.set("key", Json::Str(ax.key.clone())).set(
+                "values",
+                Json::Array(ax.values.iter().map(|v| Json::Str(v.clone())).collect()),
+            );
+            a
+        })
+        .collect();
+    let rows = jobs
+        .iter()
+        .zip(runs)
+        .map(|(job, run)| {
+            let mut overrides = Json::object();
+            for (k, v) in &job.overrides {
+                overrides.set(k, Json::Str(v.clone()));
+            }
+            let mut row = Json::object();
+            row.set("index", Json::Int(job.index as i64))
+                .set("spec", Json::Str(job.spec()))
+                .set("overrides", overrides)
+                .set("summary", run.summary_json());
+            row
+        })
+        .collect();
+    let mut record = Json::object();
+    record
+        .set("axes", Json::Array(axes))
+        .set("jobs", Json::Array(rows));
+    record
+}

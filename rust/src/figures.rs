@@ -7,8 +7,9 @@
 
 use anyhow::{bail, Result};
 
-use crate::config::{Algorithm, RunConfig};
+use crate::config::RunConfig;
 use crate::data::{Partition, SynthKind};
+use crate::experiment::{Plan, PlanRunner};
 use crate::log_info;
 use crate::metrics::{write_series_csv, RunResult};
 use crate::session::{LearnerKind, Session};
@@ -70,38 +71,49 @@ pub fn figure_spec(id: &str) -> Option<&'static FigureSpec> {
     FIGURES.iter().find(|f| f.id == id)
 }
 
-/// Run one accuracy-vs-time figure: FedAvg + CSMAAFL γ sweep.
+/// The figure's series as an experiment plan: FedAvg plus the CSMAAFL
+/// γ sweep, every row pinned to `aggregation=auto` / `scenario=static`
+/// so base-config overrides can't leak into the paper's legend.
+pub fn figure_plan() -> Plan {
+    let mut plan = Plan::new().job([
+        ("algorithm", "fedavg"),
+        ("aggregation", "auto"),
+        ("scenario", "static"),
+    ]);
+    for gamma in GAMMAS {
+        plan = plan.job([
+            ("algorithm".to_string(), "csmaafl".to_string()),
+            ("aggregation".to_string(), "auto".to_string()),
+            ("scenario".to_string(), "static".to_string()),
+            ("gamma".to_string(), format!("{gamma}")),
+        ]);
+    }
+    plan
+}
+
+/// Run one accuracy-vs-time figure: FedAvg + CSMAAFL γ sweep, executed
+/// through the plan runner on `jobs` worker threads (0 = auto). The
+/// emitted series are byte-identical at any thread count.
 pub fn generate_figure(
     spec: &FigureSpec,
     base: &RunConfig,
     learner: LearnerKind,
     artifacts_dir: &str,
     out_dir: &str,
+    jobs: usize,
 ) -> Result<Vec<RunResult>> {
     let mut cfg = base.clone();
     cfg.dataset = spec.dataset;
     cfg.partition = spec.partition;
     cfg.model_config = spec.model_config.to_string();
+    // The figure rows pin algorithm/aggregation/scenario themselves;
+    // clear base overrides so the base config validates for every row.
+    cfg.aggregation = None;
+    cfg.scenario = None;
 
     log_info!("=== {} ({}) ===", spec.id, spec.title);
     let session = Session::new(cfg, learner, artifacts_dir)?;
-
-    let mut runs: Vec<RunResult> = Vec::new();
-    runs.push(session.run_with(|c| {
-        c.algorithm = Algorithm::Sfl;
-        // FedAvg has no pluggable rule; drop any base-config override
-        // (validate would otherwise reject it).
-        c.aggregation = None;
-    })?);
-    for gamma in GAMMAS {
-        runs.push(session.run_with(|c| {
-            c.algorithm = Algorithm::Csmaafl;
-            // The paper's legend is the eq.-(11) γ sweep: pin the policy
-            // so a base-config `aggregation` override can't leak in.
-            c.aggregation = None;
-            c.gamma = gamma;
-        })?);
-    }
+    let runs = PlanRunner::new(&session).jobs(jobs).run(&figure_plan())?;
 
     std::fs::create_dir_all(out_dir)?;
     let csv_path = format!("{out_dir}/{}.csv", spec.id);

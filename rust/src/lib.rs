@@ -12,8 +12,13 @@
 //!   and AsyncFedED-style adaptive weighting — TDMA upload-slot
 //!   arbitration with staleness priority ([`coordinator::scheduler`]),
 //!   a synchronous FedAvg comparator, and a discrete-event virtual-time
-//!   simulator of the paper's Sec.-II-C time model ([`sim`]). The same
-//!   `ServerCore` drives the TCP deployment runtime ([`net`]).
+//!   simulator of the paper's Sec.-II-C time model ([`sim`]) with a
+//!   pluggable scenario library ([`sim::scenario`]: `static` |
+//!   `dropout` | `churn` | `drift`). Multi-run experiments are
+//!   declarative [`experiment::Plan`]s executed in parallel by
+//!   [`experiment::PlanRunner`] with byte-identical output at any
+//!   `--jobs` count. The same `ServerCore` drives the TCP deployment
+//!   runtime ([`net`]).
 //! * **L2/L1 (build time)** — `python/compile/`: the paper's CNN in JAX
 //!   with Pallas kernels on the dense layers and the aggregation axpy,
 //!   AOT-lowered to HLO text executed through PJRT ([`runtime`]).
@@ -36,7 +41,8 @@
 //!
 //! ```text
 //! cargo run --release -- train --set clients=10 --learner linear
-//! repro figures --fig fig3 --learner linear --out results/
+//! repro figures --fig fig3 --learner linear --out results/ --jobs 4
+//! repro grid --axis gamma=0.1,0.2,0.4 --axis scenario=static,dropout:0.1
 //! repro timeline --clients 20
 //! ```
 
@@ -46,6 +52,7 @@ pub mod analyze;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod experiment;
 pub mod figures;
 pub mod learner;
 pub mod metrics;
@@ -58,4 +65,5 @@ pub mod util;
 
 pub use config::{Algorithm, RunConfig};
 pub use coordinator::{run, FlContext};
+pub use experiment::{Plan, PlanRunner};
 pub use metrics::RunResult;

@@ -4,17 +4,24 @@
 //!   train     run one federated experiment from a config file
 //!   compare   run all four algorithms paired on one config
 //!   figures   regenerate the paper's figures (fig3 fig4 fig5a fig5b)
+//!   sweep     sweep one config field over a value list
+//!   grid      cartesian multi-axis sweep -> JSON/table results matrix
 //!   timeline  emit the Sec. II-C SFL-vs-AFL time comparison (Fig. 2)
 //!   inspect   analytic tables (naive-decay, beta-solver)
 //!   smoke     compile + run every artifact once (installation check)
+//!
+//! Every multi-run command (`compare`, `figures`, `sweep`, `grid`)
+//! executes through the experiment engine (`csmaafl::experiment`) on
+//! `--jobs N` worker threads with byte-identical output at any N.
 //!
 //! The argument parser is hand-rolled: the crate stays
 //! dependency-minimal by design (`anyhow` is the only dependency — no
 //! clap).
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use csmaafl::config::{Algorithm, RunConfig};
+use csmaafl::config::RunConfig;
+use csmaafl::experiment::{self, Plan, PlanRunner};
 use csmaafl::figures::{self, FigureSpec, FIGURES};
 use csmaafl::metrics::write_series_csv;
 use csmaafl::session::{LearnerKind, Session};
@@ -30,12 +37,21 @@ USAGE:
 COMMANDS:
   train     --config <file> [--set key=value ...] [--learner pjrt|linear]
             [--out results/] [--label name]
-  compare   --config <file> [--learner pjrt|linear] [--out results/]
+  compare   --config <file> [--learner pjrt|linear] [--jobs N]
+            [--out results/]
             (four paper series + fedasync/adaptive policy series)
   figures   [--fig fig3|fig4|fig5a|fig5b|all] [--learner pjrt|linear]
-            [--set key=value ...] [--out results/]
+            [--set key=value ...] [--jobs N] [--out results/]
   sweep     --param gamma --values 0.1,0.2,0.4,0.6 [--config <file>]
-            [--learner pjrt|linear] [--out results/]   (E-GAMMA table)
+            [--learner pjrt|linear] [--jobs N] [--out results/]
+            (E-GAMMA table)
+  grid      --axis key=v1,v2,... [--axis ...] [--set key=value ...]
+            [--replicates R] [--jobs N] [--format table|json]
+            [--config <file>] [--learner pjrt|linear] [--out results/]
+            (cartesian results matrix -> grid.json + grid.csv; a key
+            repeated across --set flags also forms an axis; separate
+            axis values with ';' when they contain commas, e.g.
+            --axis scenario=static;churn:0.3,2)
   analyze   [--results results/]   (comparison tables from stored records)
   timeline  [--clients M] [--local-steps E] [--slow-factor a] [--out results/]
   inspect   naive-decay [--clients M] | betas [--clients M]
@@ -47,11 +63,17 @@ COMMANDS:
 
 COMMON OPTIONS:
   --artifacts <dir>   artifacts directory (default: artifacts)
+  --jobs <N>          worker threads for multi-run commands
+                      (default: available cores; results are
+                      byte-identical at any N)
   -v / -q             raise / lower log verbosity
   --help              this text
 
 AGGREGATION POLICIES (--set aggregation=<spec>, also honored by serve):
   naive | solved | staleness[:g] | fedasync[:a[,mix]] | adaptive[:eta[,rho]]
+
+SCENARIOS (--set scenario=<spec>, event-driven AFL engines):
+  static | dropout:p | churn:rate[,cycle] | drift:period[,factor]
 ";
 
 /// Minimal option parser: flags with values, repeated --set collection.
@@ -105,6 +127,25 @@ impl Args {
             .rev()
             .find(|(k, _)| k == name)
             .map(|(_, v)| v.as_str())
+    }
+
+    /// All values of a repeatable option (`--axis`), in order.
+    fn opts(&self, name: &str) -> Vec<&str> {
+        self.options
+            .iter()
+            .filter(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+            .collect()
+    }
+
+    /// The `--jobs` worker-thread count (0 = auto).
+    fn jobs(&self) -> Result<usize> {
+        match self.opt("jobs") {
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("--jobs expects an integer, got {s:?}")),
+            None => Ok(0),
+        }
     }
 
     fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
@@ -175,28 +216,34 @@ fn cmd_compare(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let out_dir = args.opt_or("out", "results");
     let session = Session::new(cfg, args.learner()?, args.opt_or("artifacts", "artifacts"))?;
-    let mut runs = Vec::new();
-    for alg in [
-        Algorithm::Sfl,
-        Algorithm::AflNaive,
-        Algorithm::AflBaseline,
-        Algorithm::Csmaafl,
+    // The four paper series always use each algorithm's own default
+    // aggregation rule, whatever the base config says; the two
+    // related-work policies (FedAsync polynomial decay, AsyncFedED-style
+    // adaptive weighting) ride the same event-driven engine.
+    // FedAvg and the solved-β baseline cannot simulate dynamic worlds,
+    // so their rows pin `scenario=static`; the event-driven rows inherit
+    // the base config's scenario (e.g. `--set scenario=dropout:0.1`
+    // compares async-under-dropout against the clean sync baseline).
+    let mut plan = Plan::new();
+    for (alg, pin_static) in [
+        ("fedavg", true),
+        ("afl-naive", false),
+        ("afl-baseline", true),
+        ("csmaafl", false),
     ] {
-        // The four paper series always use each algorithm's own default
-        // aggregation rule, whatever the base config says.
-        runs.push(session.run_with(|c| {
-            c.algorithm = alg;
-            c.aggregation = None;
-        })?);
+        let mut row = vec![
+            ("algorithm".to_string(), alg.to_string()),
+            ("aggregation".to_string(), "auto".to_string()),
+        ];
+        if pin_static {
+            row.push(("scenario".to_string(), "static".to_string()));
+        }
+        plan = plan.job(row);
     }
-    // Related-work policies on the same event-driven engine: FedAsync
-    // polynomial decay and AsyncFedED-style adaptive weighting.
     for spec in ["fedasync:0.5", "adaptive"] {
-        runs.push(session.run_with(|c| {
-            c.algorithm = Algorithm::Csmaafl;
-            c.aggregation = Some(spec.to_string());
-        })?);
+        plan = plan.job([("algorithm", "csmaafl"), ("aggregation", spec)]);
     }
+    let runs = PlanRunner::new(&session).jobs(args.jobs()?).run(&plan)?;
     std::fs::create_dir_all(out_dir)?;
     write_series_csv(
         format!("{out_dir}/compare.csv"),
@@ -224,6 +271,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
             args.learner()?,
             args.opt_or("artifacts", "artifacts"),
             out_dir,
+            args.jobs()?,
         )?;
         println!("--- {} ({}) ---", spec.id, spec.title);
         print_run_table(&runs.iter().collect::<Vec<_>>());
@@ -231,7 +279,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Sweep any config field over a value list on a shared (paired) session.
+/// Sweep any config field over a value list: a one-axis plan on the
+/// parallel runner (paired session; data-shaping params get per-job
+/// sessions).
 fn cmd_sweep(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let out_dir = args.opt_or("out", "results");
@@ -242,15 +292,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .map(str::to_string)
         .collect();
     let session = Session::new(cfg, args.learner()?, args.opt_or("artifacts", "artifacts"))?;
-    let mut runs = Vec::new();
-    for v in &values {
-        let mut run = session.run_with_try(|c| {
-            c.set_field(&param, v)
-                .with_context(|| format!("sweep: invalid value {v:?} for --param {param}"))
-        })?;
-        run.label = format!("{param}={v}");
-        runs.push(run);
-    }
+    let plan = Plan::new().axis(&param, values);
+    let runs = PlanRunner::new(&session)
+        .jobs(args.jobs()?)
+        .run(&plan)
+        .with_context(|| format!("sweep over --param {param}"))?;
     std::fs::create_dir_all(out_dir)?;
     write_series_csv(
         format!("{out_dir}/sweep_{param}.csv"),
@@ -258,6 +304,101 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     )?;
     print_run_table(&runs.iter().collect::<Vec<_>>());
     println!("wrote {out_dir}/sweep_{param}.csv");
+    Ok(())
+}
+
+/// Cartesian multi-axis sweep: `--axis key=v1,v2` flags (and any key
+/// repeated across `--set` flags) become plan axes; single-valued
+/// `--set` keys configure the base. Emits a JSON results matrix plus
+/// the long-format curves CSV.
+fn cmd_grid(args: &Args) -> Result<()> {
+    let out_dir = args.opt_or("out", "results");
+    let format = args.opt_or("format", "table");
+    ensure!(
+        format == "table" || format == "json",
+        "unknown --format {format:?} (table|json)"
+    );
+    // Partition --set pairs: a repeated key is an axis, a unique key is
+    // a base-config override.
+    let mut scalars: Vec<(String, String)> = Vec::new();
+    let mut axes: Vec<(String, Vec<String>)> = Vec::new();
+    for (k, v) in &args.sets {
+        if let Some((_, vs)) = axes.iter_mut().find(|(ak, _)| ak == k) {
+            vs.push(v.clone());
+        } else if let Some(pos) = scalars.iter().position(|(sk, _)| sk == k) {
+            let (_, first) = scalars.remove(pos);
+            axes.push((k.clone(), vec![first, v.clone()]));
+        } else {
+            scalars.push((k.clone(), v.clone()));
+        }
+    }
+    for spec in args.opts("axis") {
+        let (k, vs) = spec
+            .split_once('=')
+            .ok_or_else(|| anyhow!("--axis expects key=v1,v2,..., got {spec:?}"))?;
+        // Values containing commas (churn:0.3,2 / fedasync:0.5,0.9) can
+        // be separated with ';' instead: `--axis scenario=static;churn:0.3,2`.
+        let sep = if vs.contains(';') { ';' } else { ',' };
+        let values: Vec<String> = vs.split(sep).map(|s| s.trim().to_string()).collect();
+        ensure!(
+            values.iter().all(|v| !v.is_empty()),
+            "--axis {k} has an empty value in {vs:?}"
+        );
+        ensure!(
+            !axes.iter().any(|(ak, _)| ak == k) && !scalars.iter().any(|(sk, _)| sk == k),
+            "axis {k:?} conflicts with an earlier --set/--axis for the same key"
+        );
+        axes.push((k.to_string(), values));
+    }
+
+    let cfg = match args.opt("config") {
+        Some(path) => RunConfig::load(path, &scalars)?,
+        None => {
+            let mut c = RunConfig::default();
+            for (k, v) in &scalars {
+                c.set_field(k, v)?;
+            }
+            c.validate()?;
+            c
+        }
+    };
+
+    let mut plan = Plan::new();
+    for (k, vs) in axes {
+        plan = plan.axis(&k, vs);
+    }
+    if let Some(r) = args.opt("replicates") {
+        let r: usize = r
+            .parse()
+            .map_err(|_| anyhow!("--replicates expects an integer, got {r:?}"))?;
+        plan = plan.replicates(r);
+    }
+    let jobs = plan.expand(cfg.seed);
+    ensure!(!jobs.is_empty(), "grid expanded to zero jobs (empty axis?)");
+
+    let session = Session::new(cfg, args.learner()?, args.opt_or("artifacts", "artifacts"))?;
+    let threads = experiment::effective_jobs(args.jobs()?, jobs.len());
+    let t0 = std::time::Instant::now();
+    let runs = PlanRunner::new(&session).jobs(threads).run_jobs(&jobs)?;
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    std::fs::create_dir_all(out_dir)?;
+    let record = experiment::grid_record(&plan, &jobs, &runs);
+    std::fs::write(format!("{out_dir}/grid.json"), record.to_string_pretty())?;
+    write_series_csv(
+        format!("{out_dir}/grid.csv"),
+        &runs.iter().collect::<Vec<_>>(),
+    )?;
+    if format == "json" {
+        println!("{}", record.to_string_pretty());
+    } else {
+        print_run_table(&runs.iter().collect::<Vec<_>>());
+    }
+    println!(
+        "grid: {} jobs on {} thread(s) in {elapsed:.1}s; wrote {out_dir}/grid.json + grid.csv",
+        jobs.len(),
+        threads
+    );
     Ok(())
 }
 
@@ -345,7 +486,8 @@ fn cmd_smoke(args: &Args) -> Result<()> {
 /// real sockets (rust/src/net/).
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let session = Session::new(cfg.clone(), args.learner()?, args.opt_or("artifacts", "artifacts"))?;
+    let session =
+        Session::new(cfg.clone(), args.learner()?, args.opt_or("artifacts", "artifacts"))?;
     let leader_cfg = csmaafl::net::LeaderConfig {
         bind: args.opt_or("bind", "127.0.0.1:7070").to_string(),
         clients: args.opt_or("clients", "4").parse()?,
@@ -370,7 +512,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// an N-way partition so independent processes agree on the data split.
 fn cmd_join(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let session = Session::new(cfg.clone(), args.learner()?, args.opt_or("artifacts", "artifacts"))?;
+    let session =
+        Session::new(cfg.clone(), args.learner()?, args.opt_or("artifacts", "artifacts"))?;
     let workers: usize = args.opt_or("workers", "4").parse()?;
     let worker_id: usize = args.opt_or("worker-id", "0").parse()?;
     anyhow::ensure!(worker_id < workers, "worker-id out of range");
@@ -404,6 +547,7 @@ fn main() -> Result<()> {
         "compare" => cmd_compare(&args),
         "figures" => cmd_figures(&args),
         "sweep" => cmd_sweep(&args),
+        "grid" => cmd_grid(&args),
         "analyze" => cmd_analyze(&args),
         "timeline" => cmd_timeline(&args),
         "inspect" => cmd_inspect(&args),

@@ -36,6 +36,9 @@ pub struct RunResult {
     pub fairness: f64,
     /// Uploads lost in transit (failure injection; 0 = reliable channel).
     pub lost_uploads: u64,
+    /// Uploads lost in transit, per client (dropout-bias accounting;
+    /// empty or all-zero on reliable channels).
+    pub lost_per_client: Vec<u64>,
     /// Virtual completion time.
     pub total_ticks: Ticks,
     /// Real wall-clock spent (training + eval dispatches).
@@ -53,6 +56,7 @@ impl RunResult {
             mean_staleness: 0.0,
             fairness: 1.0,
             lost_uploads: 0,
+            lost_per_client: Vec::new(),
             total_ticks: 0,
             wallclock_secs: 0.0,
         }
@@ -77,8 +81,11 @@ impl RunResult {
             .map(|p| p.slot)
     }
 
-    /// JSON summary (for `results/*.json` run records).
-    pub fn to_json(&self) -> Json {
+    /// Deterministic scalar summary: every field is a pure function of
+    /// the run's config + seed (no wall-clock, no curve), so `repro
+    /// grid` matrices built from it are byte-identical regardless of
+    /// `--jobs` thread count, machine, or load.
+    pub fn summary_json(&self) -> Json {
         let mut o = Json::object();
         o.set("label", Json::Str(self.label.clone()))
             .set("aggregations", Json::Int(self.aggregations as i64))
@@ -87,12 +94,27 @@ impl RunResult {
             .set("mean_staleness", Json::Float(self.mean_staleness))
             .set("fairness", Json::Float(self.fairness))
             .set("lost_uploads", Json::Int(self.lost_uploads as i64))
-            .set("total_ticks", Json::Int(self.total_ticks as i64))
-            .set("wallclock_secs", Json::Float(self.wallclock_secs))
+            .set("total_ticks", Json::Int(self.total_ticks as i64));
+        o
+    }
+
+    /// JSON summary (for `results/*.json` run records).
+    pub fn to_json(&self) -> Json {
+        let mut o = self.summary_json();
+        o.set("wallclock_secs", Json::Float(self.wallclock_secs))
             .set(
                 "uploads_per_client",
                 Json::Array(
                     self.uploads_per_client
+                        .iter()
+                        .map(|&u| Json::Int(u as i64))
+                        .collect(),
+                ),
+            )
+            .set(
+                "lost_per_client",
+                Json::Array(
+                    self.lost_per_client
                         .iter()
                         .map(|&u| Json::Int(u as i64))
                         .collect(),
@@ -152,14 +174,29 @@ mod tests {
     fn json_summary_parses() {
         let mut r = run_with_points(&[0.2, 0.6]);
         r.lost_uploads = 7;
+        r.lost_per_client = vec![3, 4];
         let j = r.to_json();
         let parsed = crate::util::json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(parsed.get("label").unwrap().as_str(), Some("x"));
         assert_eq!(parsed.get("lost_uploads").unwrap().as_i64(), Some(7));
         assert_eq!(
+            parsed.get("lost_per_client").unwrap().as_array().unwrap().len(),
+            2
+        );
+        assert_eq!(
             parsed.get("points").unwrap().as_array().unwrap().len(),
             2
         );
+    }
+
+    #[test]
+    fn summary_json_is_wallclock_free() {
+        let mut r = run_with_points(&[0.2, 0.6]);
+        r.wallclock_secs = 123.4;
+        let s = r.summary_json().to_string_pretty();
+        assert!(!s.contains("wallclock"), "{s}");
+        assert!(!s.contains("points"), "{s}");
+        assert!(s.contains("best_accuracy"), "{s}");
     }
 
     #[test]

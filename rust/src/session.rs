@@ -69,6 +69,8 @@ pub struct Session {
     /// Per-client sample-index shards over `train`.
     pub shards: Vec<ClientShard>,
     learner: SessionLearner,
+    kind: LearnerKind,
+    artifacts_dir: String,
 }
 
 impl Session {
@@ -118,7 +120,29 @@ impl Session {
             test,
             shards,
             learner,
+            kind,
+            artifacts_dir: artifacts_dir.to_string(),
         })
+    }
+
+    /// The learner kind the session was built with.
+    pub fn learner_kind(&self) -> LearnerKind {
+        self.kind
+    }
+
+    /// The artifacts directory the session was built with.
+    pub fn artifacts_dir(&self) -> &str {
+        &self.artifacts_dir
+    }
+
+    /// Build a sibling session over a different config with the same
+    /// learner kind and artifacts directory. The experiment plan runner
+    /// uses this when a job's overrides invalidate the shared data
+    /// (clients, dataset, partition, seed, ...), so such jobs stay
+    /// self-paired on their own config instead of silently reusing
+    /// mismatched shards.
+    pub fn rebuild(&self, cfg: RunConfig) -> Result<Session> {
+        Session::new(cfg, self.kind, &self.artifacts_dir)
     }
 
     /// The session's local trainer/evaluator.
@@ -230,6 +254,18 @@ mod tests {
         for (pa, pb) in a.points.iter().zip(&b.points) {
             assert_eq!(pa.accuracy, pb.accuracy, "identical reruns");
         }
+    }
+
+    #[test]
+    fn rebuild_produces_a_sibling_with_its_own_data() {
+        let s = Session::new(tiny_cfg(), LearnerKind::Linear, "artifacts").unwrap();
+        assert_eq!(s.learner_kind(), LearnerKind::Linear);
+        assert_eq!(s.artifacts_dir(), "artifacts");
+        let mut cfg = tiny_cfg();
+        cfg.clients = 2;
+        let sib = s.rebuild(cfg).unwrap();
+        assert_eq!(sib.shards.len(), 2);
+        assert!(sib.run().unwrap().aggregations > 0);
     }
 
     #[test]

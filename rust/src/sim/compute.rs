@@ -192,12 +192,27 @@ impl ComputeModel {
         local_steps: usize,
         rng: &mut Rng,
     ) -> Ticks {
+        self.duration_scaled(tm, m, local_steps, rng, 1.0)
+    }
+
+    /// Like [`ComputeModel::duration`] with an extra multiplicative
+    /// `scale` on the effective speed factor — the seam scenarios (e.g.
+    /// `drift`) use for time-varying compute. Applied *before* rounding,
+    /// so `scale == 1.0` is bit-identical to the unscaled draw.
+    pub fn duration_scaled(
+        &self,
+        tm: &TimeModel,
+        m: usize,
+        local_steps: usize,
+        rng: &mut Rng,
+        scale: f64,
+    ) -> Ticks {
         let jit = if self.jitter > 0.0 {
             1.0 + self.jitter * (2.0 * rng.f64() - 1.0)
         } else {
             1.0
         };
-        tm.compute_time(local_steps, self.factors[m] * jit)
+        tm.compute_time(local_steps, self.factors[m] * jit * scale)
     }
 }
 
@@ -270,6 +285,28 @@ mod tests {
         let mut r2 = rng();
         assert_eq!(cm.duration(&tm, 0, 16, &mut r1), cm.duration(&tm, 0, 16, &mut r2));
         assert_eq!(cm.duration(&tm, 0, 16, &mut r1), 160);
+    }
+
+    #[test]
+    fn duration_scaled_is_exact_at_unit_scale() {
+        let tm = TimeModel::default();
+        let cm = ComputeModel::new(
+            HeterogeneityProfile::Uniform { max_factor: 4.0 },
+            4,
+            0.2,
+            &rng(),
+        );
+        let mut r1 = rng();
+        let mut r2 = rng();
+        for m in 0..4 {
+            assert_eq!(
+                cm.duration(&tm, m, 16, &mut r1),
+                cm.duration_scaled(&tm, m, 16, &mut r2, 1.0)
+            );
+        }
+        let mut r = rng();
+        let cm = ComputeModel::new(HeterogeneityProfile::Homogeneous, 1, 0.0, &rng());
+        assert_eq!(cm.duration_scaled(&tm, 0, 16, &mut r, 2.0), 320);
     }
 
     #[test]

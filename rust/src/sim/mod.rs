@@ -8,8 +8,10 @@
 
 mod compute;
 mod event;
+pub mod scenario;
 mod time_model;
 
 pub use compute::{ComputeModel, HeterogeneityProfile};
 pub use event::EventQueue;
+pub use scenario::Scenario;
 pub use time_model::{Ticks, TimeModel, UplinkChannel};

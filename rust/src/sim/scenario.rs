@@ -1,0 +1,414 @@
+//! Scenario library: pluggable world models for the event-driven engine.
+//!
+//! The paper evaluates CSMAAFL in a *static* world — client speed
+//! factors are drawn once and every upload arrives. Related work shows
+//! the interesting regimes are dynamic: Hu et al. (arXiv:2107.11415)
+//! schedule under intermittent client availability, and Gao et al.
+//! (arXiv:2401.13366) show resource-constrained async FL develops
+//! systematic bias when slow clients drop out. A [`Scenario`] injects
+//! exactly those dynamics into the event loop without touching the
+//! aggregation or scheduling policies.
+//!
+//! Like aggregation policies, scenarios are a registry spelling —
+//! `scenario=<name[:params]>` on any config or `--set` — parsed by
+//! [`parse`]:
+//!
+//! | Spelling                  | World                                        |
+//! |---------------------------|----------------------------------------------|
+//! | `static`                  | today's fixed world (the pinned default)     |
+//! | `dropout:p`               | each upload lost in transit w.p. `p`         |
+//! | `churn:rate[,cycle]`      | clients leave/rejoin (offline `rate` of the  |
+//! |                           | time, mean on+off cycle `cycle` slots);      |
+//! |                           | a rejoining client uploads the stale model   |
+//! |                           | it was holding when it left                  |
+//! | `drift:period[,factor]`   | periodic slow-down: every other `period`-slot|
+//! |                           | epoch, compute runs `factor`× slower         |
+//!
+//! The event loop consults the scenario at three points: when drawing a
+//! compute duration ([`Scenario::compute_scale`]), when a client asks
+//! for the channel ([`Scenario::offline_until`]), and when an upload
+//! completes ([`Scenario::upload_lost`]). `static` answers all three
+//! with the identity, so the pinned default is bit-identical to the
+//! pre-scenario engine. Stochastic scenarios draw from their own forked
+//! RNG streams (seeded in [`Scenario::bind`]), never from the engine's,
+//! so adding a scenario cannot perturb jitter or loss draws elsewhere.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::sim::time_model::Ticks;
+use crate::util::rng::Rng;
+use crate::util::spec::parse_spec;
+
+/// A world model the event-driven AFL engine consults while simulating.
+///
+/// All hooks default to the static world (no scaling, no loss, always
+/// online), so implementations override only the dynamics they model.
+/// Hooks may mutate internal state; the engine calls them in
+/// deterministic event order, and stochastic implementations must draw
+/// only from RNG streams derived in [`Scenario::bind`].
+pub trait Scenario: Send {
+    /// Canonical label (names series and log lines).
+    fn label(&self) -> String;
+
+    /// Called once before the run with the population size, the ticks
+    /// per relative time slot, and the run seed. Implementations derive
+    /// their RNG streams and per-client state here.
+    fn bind(&mut self, _clients: usize, _slot_ticks: Ticks, _seed: u64) {}
+
+    /// Multiplier on the client's effective speed factor for the
+    /// compute draw starting at `now` (> 1 = slower). Applied before
+    /// rounding, so `1.0` is exactly the unscaled duration.
+    fn compute_scale(&mut self, _client: usize, _now: Ticks) -> f64 {
+        1.0
+    }
+
+    /// Whether the upload completing at `now` is lost in transit.
+    fn upload_lost(&mut self, _client: usize, _now: Ticks) -> bool {
+        false
+    }
+
+    /// If the client is offline at `now`, the (strictly later) tick at
+    /// which it rejoins; `None` when it is online.
+    fn offline_until(&mut self, _client: usize, _now: Ticks) -> Option<Ticks> {
+        None
+    }
+}
+
+/// One canonical registry spelling per built-in scenario (tests iterate
+/// these; docs list them).
+pub const SCENARIO_SPECS: [&str; 4] = ["static", "dropout:0.1", "churn:0.3", "drift:8"];
+
+/// Instantiate a scenario from its registry spelling `name[:p1[,p2]]`.
+///
+/// ```
+/// use csmaafl::sim::scenario;
+/// let s = scenario::parse("dropout:0.3").unwrap();
+/// assert_eq!(s.label(), "dropout p=0.3");
+/// assert!(scenario::parse("bogus").is_err());
+/// assert_eq!(scenario::resolve(None).unwrap().label(), "static");
+/// ```
+pub fn parse(spec: &str) -> Result<Box<dyn Scenario>> {
+    let (name, f) = parse_spec(spec)?;
+    match name.to_ascii_lowercase().as_str() {
+        "static" => {
+            ensure!(f.is_empty(), "scenario {name:?} takes no parameters");
+            Ok(Box::new(StaticWorld))
+        }
+        "dropout" => {
+            ensure!(f.len() == 1, "dropout takes exactly one parameter (p)");
+            Ok(Box::new(Dropout::new(f[0])?))
+        }
+        "churn" => {
+            ensure!(
+                !f.is_empty() && f.len() <= 2,
+                "churn takes one or two parameters (rate[,cycle_slots])"
+            );
+            let cycle = f.get(1).copied().unwrap_or(4.0);
+            Ok(Box::new(Churn::new(f[0], cycle)?))
+        }
+        "drift" => {
+            ensure!(
+                !f.is_empty() && f.len() <= 2,
+                "drift takes one or two parameters (period_slots[,factor])"
+            );
+            let factor = f.get(1).copied().unwrap_or(2.0);
+            Ok(Box::new(Drift::new(f[0], factor)?))
+        }
+        other => bail!(
+            "unknown scenario {other:?} \
+             (static | dropout:p | churn:rate[,cycle] | drift:period[,factor])"
+        ),
+    }
+}
+
+/// Resolve a config's optional spelling: `None` means the pinned
+/// `static` default.
+pub fn resolve(spec: Option<&str>) -> Result<Box<dyn Scenario>> {
+    match spec {
+        None => Ok(Box::new(StaticWorld)),
+        Some(s) => parse(s),
+    }
+}
+
+/// The paper's fixed world: no departures, no transit loss, constant
+/// compute factors. Every hook is the identity, so runs under this
+/// scenario are bit-identical to the pre-scenario engine.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StaticWorld;
+
+impl Scenario for StaticWorld {
+    fn label(&self) -> String {
+        "static".into()
+    }
+}
+
+/// Uploads are lost in transit with probability `p` (Bernoulli per
+/// upload, own RNG stream). Lost uploads feed the engine's existing
+/// lost-upload statistics: the server re-downloads the current global
+/// so the client rejoins, its local work wasted.
+#[derive(Debug, Clone)]
+pub struct Dropout {
+    p: f64,
+    rng: Rng,
+}
+
+impl Dropout {
+    /// A transit-loss world with loss probability `p ∈ (0, 1)`.
+    pub fn new(p: f64) -> Result<Dropout> {
+        ensure!(
+            p > 0.0 && p < 1.0,
+            "dropout probability must be in (0,1), got {p}"
+        );
+        Ok(Dropout { p, rng: Rng::new(0) })
+    }
+}
+
+impl Scenario for Dropout {
+    fn label(&self) -> String {
+        format!("dropout p={}", self.p)
+    }
+
+    fn bind(&mut self, _clients: usize, _slot_ticks: Ticks, seed: u64) {
+        self.rng = Rng::new(seed).fork(0xd709);
+    }
+
+    fn upload_lost(&mut self, _client: usize, _now: Ticks) -> bool {
+        self.rng.f64() < self.p
+    }
+}
+
+/// Per-client availability state of the churn world.
+#[derive(Debug, Clone)]
+struct ClientChurn {
+    online: bool,
+    /// Tick at which the current on/off period ends.
+    until: Ticks,
+    rng: Rng,
+}
+
+/// Clients alternately leave and rejoin: each client is offline a
+/// long-run fraction `rate` of the time, in alternating on/off windows
+/// whose mean combined length is `cycle_slots` relative time slots
+/// (window lengths jitter uniformly in ±50% of their mean). A client
+/// that finishes local compute while offline holds its local model and
+/// re-contends for the channel only when it rejoins — by which point
+/// the model version it trained from is stale, so churn stresses
+/// exactly the staleness handling of the aggregation policies.
+#[derive(Debug, Clone)]
+pub struct Churn {
+    rate: f64,
+    cycle_slots: f64,
+    on_mean: f64,
+    off_mean: f64,
+    state: Vec<ClientChurn>,
+}
+
+impl Churn {
+    /// A churn world: offline fraction `rate ∈ (0, 1)`, mean on+off
+    /// cycle `cycle_slots > 0` relative slots.
+    pub fn new(rate: f64, cycle_slots: f64) -> Result<Churn> {
+        ensure!(
+            rate > 0.0 && rate < 1.0,
+            "churn rate must be in (0,1), got {rate}"
+        );
+        ensure!(
+            cycle_slots > 0.0,
+            "churn cycle must be > 0 slots, got {cycle_slots}"
+        );
+        Ok(Churn {
+            rate,
+            cycle_slots,
+            on_mean: 0.0,
+            off_mean: 0.0,
+            state: Vec::new(),
+        })
+    }
+
+    fn draw(mean: f64, rng: &mut Rng) -> Ticks {
+        ((mean * (0.5 + rng.f64())).round() as Ticks).max(1)
+    }
+}
+
+impl Scenario for Churn {
+    fn label(&self) -> String {
+        format!("churn r={} c={}", self.rate, self.cycle_slots)
+    }
+
+    fn bind(&mut self, clients: usize, slot_ticks: Ticks, seed: u64) {
+        let cycle_ticks = self.cycle_slots * slot_ticks as f64;
+        self.on_mean = (1.0 - self.rate) * cycle_ticks;
+        self.off_mean = self.rate * cycle_ticks;
+        let root = Rng::new(seed).fork(0xc4a2);
+        self.state = (0..clients)
+            .map(|c| {
+                let mut rng = root.fork(c as u64);
+                let until = Self::draw(self.on_mean, &mut rng);
+                ClientChurn {
+                    online: true,
+                    until,
+                    rng,
+                }
+            })
+            .collect();
+    }
+
+    fn offline_until(&mut self, client: usize, now: Ticks) -> Option<Ticks> {
+        let (on_mean, off_mean) = (self.on_mean, self.off_mean);
+        let s = &mut self.state[client];
+        while s.until <= now {
+            s.online = !s.online;
+            let mean = if s.online { on_mean } else { off_mean };
+            s.until += Self::draw(mean, &mut s.rng);
+        }
+        if s.online {
+            None
+        } else {
+            Some(s.until)
+        }
+    }
+}
+
+/// Periodic compute slow-down: virtual time is divided into epochs of
+/// `period_slots` relative slots; during every other epoch all clients'
+/// compute runs `factor`× slower (a coarse model of diurnal load or
+/// shared-cluster contention — time-varying compute factors).
+#[derive(Debug, Clone)]
+pub struct Drift {
+    period_slots: f64,
+    factor: f64,
+    period_ticks: f64,
+}
+
+impl Drift {
+    /// A drift world: epoch length `period_slots > 0`, slow-epoch
+    /// factor `factor >= 1`.
+    pub fn new(period_slots: f64, factor: f64) -> Result<Drift> {
+        ensure!(
+            period_slots > 0.0,
+            "drift period must be > 0 slots, got {period_slots}"
+        );
+        ensure!(factor >= 1.0, "drift factor must be >= 1, got {factor}");
+        Ok(Drift {
+            period_slots,
+            factor,
+            period_ticks: 0.0,
+        })
+    }
+}
+
+impl Scenario for Drift {
+    fn label(&self) -> String {
+        format!("drift p={} x={}", self.period_slots, self.factor)
+    }
+
+    fn bind(&mut self, _clients: usize, slot_ticks: Ticks, _seed: u64) {
+        self.period_ticks = self.period_slots * slot_ticks as f64;
+    }
+
+    fn compute_scale(&mut self, _client: usize, now: Ticks) -> f64 {
+        if self.period_ticks <= 0.0 {
+            return 1.0;
+        }
+        if ((now as f64 / self.period_ticks).floor() as u64) % 2 == 1 {
+            self.factor
+        } else {
+            1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_parses_every_canonical_spelling() {
+        for spec in SCENARIO_SPECS {
+            let s = parse(spec).unwrap();
+            assert!(!s.label().is_empty(), "{spec}");
+        }
+    }
+
+    #[test]
+    fn registry_rejects_unknown_and_malformed() {
+        assert!(parse("bogus").is_err());
+        assert!(parse("static:1").is_err());
+        assert!(parse("dropout").is_err());
+        assert!(parse("dropout:x").is_err());
+        assert!(parse("dropout:0").is_err());
+        assert!(parse("dropout:1.5").is_err());
+        assert!(parse("churn:0.2,1,1").is_err());
+        assert!(parse("churn:-0.1").is_err());
+        assert!(parse("drift:0").is_err());
+        assert!(parse("drift:4,0.5").is_err());
+    }
+
+    #[test]
+    fn static_world_is_the_identity() {
+        let mut s = StaticWorld;
+        s.bind(8, 1000, 42);
+        assert_eq!(s.compute_scale(0, 500), 1.0);
+        assert!(!s.upload_lost(0, 500));
+        assert_eq!(s.offline_until(0, 500), None);
+    }
+
+    #[test]
+    fn dropout_rate_is_roughly_p() {
+        let mut d = Dropout::new(0.25).unwrap();
+        d.bind(4, 1000, 7);
+        let lost = (0..10_000u64)
+            .filter(|&i| d.upload_lost((i % 4) as usize, i))
+            .count();
+        assert!((2000..3000).contains(&lost), "{lost}");
+    }
+
+    #[test]
+    fn dropout_streams_are_seed_deterministic() {
+        let mut a = Dropout::new(0.5).unwrap();
+        let mut b = Dropout::new(0.5).unwrap();
+        a.bind(2, 1000, 9);
+        b.bind(2, 1000, 9);
+        for t in 0..100 {
+            assert_eq!(a.upload_lost(0, t), b.upload_lost(0, t));
+        }
+    }
+
+    #[test]
+    fn churn_alternates_and_rejoins_strictly_later() {
+        let mut c = Churn::new(0.5, 2.0).unwrap();
+        c.bind(3, 1000, 11);
+        let mut saw_offline = false;
+        for t in (0..40_000u64).step_by(97) {
+            if let Some(rejoin) = c.offline_until(1, t) {
+                saw_offline = true;
+                assert!(rejoin > t, "rejoin {rejoin} must be after now {t}");
+                // At the rejoin tick the client is online again.
+                assert_eq!(c.offline_until(1, rejoin), None);
+            }
+        }
+        assert!(saw_offline, "client never went offline over 40k ticks");
+    }
+
+    #[test]
+    fn churn_offline_fraction_tracks_rate() {
+        let mut c = Churn::new(0.7, 1.0).unwrap();
+        c.bind(1, 1000, 5);
+        let samples = 50_000u64;
+        let off = (0..samples)
+            .filter(|&t| c.offline_until(0, t).is_some())
+            .count() as f64;
+        let frac = off / samples as f64;
+        assert!((0.55..0.85).contains(&frac), "offline fraction {frac}");
+    }
+
+    #[test]
+    fn drift_is_a_square_wave_over_epochs() {
+        let mut d = Drift::new(2.0, 3.0).unwrap();
+        d.bind(4, 100, 0); // epoch = 200 ticks
+        assert_eq!(d.compute_scale(0, 0), 1.0);
+        assert_eq!(d.compute_scale(0, 199), 1.0);
+        assert_eq!(d.compute_scale(0, 200), 3.0);
+        assert_eq!(d.compute_scale(0, 399), 3.0);
+        assert_eq!(d.compute_scale(0, 400), 1.0);
+    }
+}

@@ -36,7 +36,9 @@ impl Default for TimeModel {
 }
 
 impl TimeModel {
-    /// `τ` for a client: E local steps at speed factor a.
+    /// `τ` for a client: E local steps at speed factor a. (Scenario
+    /// compute scaling — `sim::scenario` — multiplies into the factor
+    /// before this rounding, never after.)
     pub fn compute_time(&self, local_steps: usize, factor: f64) -> Ticks {
         let t = (local_steps as f64) * (self.tau_step as f64) * factor;
         t.round().max(1.0) as Ticks

@@ -4,3 +4,4 @@ pub mod bench;
 pub mod json;
 pub mod logging;
 pub mod rng;
+pub mod spec;

@@ -1,0 +1,58 @@
+//! Shared registry-spelling parser.
+//!
+//! All three run-time registries (`aggregation=`, `scenario=`, and any
+//! future ones) use the same spelling `name[:p1[,p2...]]` with numeric
+//! parameters; this is the one place that grammar is parsed so error
+//! wording and whitespace handling cannot drift between registries.
+
+use anyhow::{anyhow, Result};
+
+/// Split a registry spelling into its name and parsed numeric
+/// parameters: `"fedasync:0.5,0.9"` → `("fedasync", vec![0.5, 0.9])`,
+/// `"naive"` → `("naive", vec![])`. A malformed number is an error
+/// naming the offending token and the full spec; whether the *count*
+/// of parameters is legal is the caller's (per-entry) decision.
+pub fn parse_spec(spec: &str) -> Result<(&str, Vec<f64>)> {
+    let (name, args) = match spec.split_once(':') {
+        Some((n, a)) => (n, Some(a)),
+        None => (spec, None),
+    };
+    let params = match args {
+        None => Vec::new(),
+        Some(a) => a
+            .split(',')
+            .map(|p| {
+                p.trim()
+                    .parse::<f64>()
+                    .map_err(|_| anyhow!("invalid numeric parameter {p:?} in spec {spec:?}"))
+            })
+            .collect::<Result<_>>()?,
+    };
+    Ok((name, params))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bare_name_has_no_params() {
+        assert_eq!(parse_spec("naive").unwrap(), ("naive", vec![]));
+    }
+
+    #[test]
+    fn params_parse_with_whitespace() {
+        assert_eq!(
+            parse_spec("fedasync:0.5, 0.9").unwrap(),
+            ("fedasync", vec![0.5, 0.9])
+        );
+        assert_eq!(parse_spec("drift:8").unwrap(), ("drift", vec![8.0]));
+    }
+
+    #[test]
+    fn malformed_numbers_name_the_token() {
+        let err = parse_spec("fedasync:x").unwrap_err().to_string();
+        assert!(err.contains("\"x\""), "{err}");
+        assert!(parse_spec("staleness:").is_err(), "empty parameter");
+    }
+}

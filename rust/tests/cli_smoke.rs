@@ -1,7 +1,8 @@
 //! Smoke coverage for the hand-rolled `repro` argument parser: every
 //! subcommand's usage/help/error path, plus the artifact-free analytic
-//! subcommands end-to-end. No test here runs a federated experiment —
-//! that is `learning_dynamics.rs`'s job — so the suite stays fast.
+//! subcommands end-to-end. The only federated runs here are the tiny
+//! `repro grid` happy paths (2 clients, 1 slot) — heavier dynamics live
+//! in `learning_dynamics.rs` — so the suite stays fast.
 
 use std::path::PathBuf;
 use std::process::{Command, Output};
@@ -60,8 +61,8 @@ fn help_subcommand_prints_usage() {
 fn usage_lists_every_dispatchable_command() {
     let usage = stdout(&repro(&[]));
     for cmd in [
-        "train", "compare", "figures", "sweep", "analyze", "timeline",
-        "inspect", "smoke", "serve", "join",
+        "train", "compare", "figures", "sweep", "grid", "analyze",
+        "timeline", "inspect", "smoke", "serve", "join",
     ] {
         assert!(usage.contains(cmd), "usage must mention {cmd}");
     }
@@ -137,6 +138,60 @@ fn usage_lists_aggregation_policy_registry() {
     for name in ["naive", "solved", "staleness", "fedasync", "adaptive"] {
         assert!(usage.contains(name), "usage must mention {name}");
     }
+}
+
+#[test]
+fn usage_lists_scenario_registry() {
+    let usage = stdout(&repro(&[]));
+    assert!(usage.contains("SCENARIOS"), "{usage}");
+    for name in ["static", "dropout", "churn", "drift"] {
+        assert!(usage.contains(name), "usage must mention {name}");
+    }
+}
+
+#[test]
+fn unknown_scenario_is_rejected() {
+    let out = repro(&["train", "--set", "scenario=blizzard", "--learner", "linear"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("blizzard"), "{}", stderr(&out));
+}
+
+#[test]
+fn grid_rejects_malformed_axis() {
+    let out = repro(&["grid", "--axis", "gamma", "--learner", "linear"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("key=v1,v2"), "{}", stderr(&out));
+}
+
+#[test]
+fn grid_rejects_conflicting_axis_and_set() {
+    let out = repro(&[
+        "grid", "--set", "gamma=0.1", "--axis", "gamma=0.2,0.4", "--learner", "linear",
+    ]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("conflicts"), "{}", stderr(&out));
+}
+
+#[test]
+fn grid_rejects_unknown_format() {
+    let out = repro(&[
+        "grid", "--axis", "gamma=0.1,0.2", "--format", "xml", "--learner", "linear",
+        "--set", "clients=2", "--set", "samples_per_client=4",
+        "--set", "test_samples=10", "--set", "max_slots=1",
+    ]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("xml"), "{}", stderr(&out));
+}
+
+#[test]
+fn jobs_flag_rejects_non_integers() {
+    let out = repro(&[
+        "sweep", "--jobs", "many", "--learner", "linear",
+        "--set", "clients=2", "--set", "samples_per_client=4",
+        "--set", "test_samples=10", "--set", "max_slots=1",
+    ]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("--jobs"), "{}", stderr(&out));
 }
 
 #[test]
@@ -224,6 +279,65 @@ fn timeline_writes_fig2_csv() {
     assert!(csv.contains("afl,any,update_interval,150"), "{csv}");
     // The command also echoes the table to stdout.
     assert!(stdout(&out).contains("update_interval"), "{}", stdout(&out));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn grid_runs_a_tiny_matrix_end_to_end() {
+    let dir = scratch_dir("grid");
+    let out = repro(&[
+        "grid", "--learner", "linear", "--jobs", "2",
+        "--set", "clients=2", "--set", "samples_per_client=4",
+        "--set", "test_samples=10", "--set", "local_steps=1",
+        "--set", "max_slots=1",
+        "--axis", "gamma=0.2,0.4",
+        "--out", dir.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("gamma=0.2"), "{text}");
+    assert!(text.contains("wrote"), "{text}");
+    let json = std::fs::read_to_string(dir.join("grid.json")).unwrap();
+    assert!(json.contains("\"gamma\""), "{json}");
+    assert!(json.contains("gamma=0.4"), "{json}");
+    assert!(!json.contains("wallclock"), "matrix must be deterministic");
+    let csv = std::fs::read_to_string(dir.join("grid.csv")).unwrap();
+    assert!(csv.starts_with("series,slot"), "{csv}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn grid_semicolon_axis_separator_allows_comma_parameterized_values() {
+    let dir = scratch_dir("grid_semi");
+    let out = repro(&[
+        "grid", "--learner", "linear", "--jobs", "2",
+        "--set", "clients=2", "--set", "samples_per_client=4",
+        "--set", "test_samples=10", "--set", "local_steps=1",
+        "--set", "max_slots=1",
+        "--axis", "scenario=static;churn:0.3,2",
+        "--out", dir.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let json = std::fs::read_to_string(dir.join("grid.json")).unwrap();
+    assert!(json.contains("churn:0.3,2"), "{json}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn grid_treats_repeated_set_keys_as_axes() {
+    let dir = scratch_dir("grid_sets");
+    let out = repro(&[
+        "grid", "--learner", "linear", "--format", "json",
+        "--set", "clients=2", "--set", "samples_per_client=4",
+        "--set", "test_samples=10", "--set", "local_steps=1",
+        "--set", "max_slots=1",
+        "--set", "gamma=0.2", "--set", "gamma=0.4",
+        "--out", dir.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("\"spec\": \"gamma=0.2\""), "{text}");
+    assert!(text.contains("\"spec\": \"gamma=0.4\""), "{text}");
     std::fs::remove_dir_all(&dir).ok();
 }
 

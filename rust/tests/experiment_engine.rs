@@ -1,0 +1,248 @@
+//! Integration coverage for the parallel experiment engine and the
+//! scenario library: thread-count determinism (the engine's core
+//! guarantee), the `scenario=static` bit-for-bit pin, and sanity bounds
+//! for the dynamic scenarios.
+
+use csmaafl::config::RunConfig;
+use csmaafl::experiment::{grid_record, Plan, PlanRunner};
+use csmaafl::metrics::write_series_csv;
+use csmaafl::session::{LearnerKind, Session};
+
+fn tiny_cfg() -> RunConfig {
+    RunConfig {
+        clients: 4,
+        samples_per_client: 20,
+        test_samples: 50,
+        local_steps: 4,
+        max_slots: 4.0,
+        ..RunConfig::default()
+    }
+}
+
+/// A compute-bound variant (small τ^u, more local steps) so scenarios
+/// that slow or interrupt compute visibly reduce the aggregation count
+/// instead of hiding behind a saturated uplink.
+fn compute_bound_cfg() -> RunConfig {
+    let mut cfg = tiny_cfg();
+    cfg.local_steps = 8;
+    cfg.time.tau_up = 20;
+    cfg.max_slots = 8.0;
+    cfg
+}
+
+// -------------------------------------------------- thread determinism
+
+/// The acceptance bar for the engine: a 3-axis grid produces
+/// byte-identical JSON and CSV for `--jobs 1` and `--jobs 8`.
+#[test]
+fn three_axis_grid_is_byte_identical_across_thread_counts() {
+    let session = Session::new(tiny_cfg(), LearnerKind::Linear, "artifacts").unwrap();
+    let plan = Plan::new()
+        .axis("gamma", ["0.1", "0.4"])
+        .axis("scheduler", ["oldest", "fifo"])
+        .axis("scenario", ["static", "dropout:0.3"]);
+    let jobs = plan.expand(session.cfg.seed);
+    assert_eq!(jobs.len(), 8);
+
+    let seq = PlanRunner::new(&session).jobs(1).run_jobs(&jobs).unwrap();
+    let par = PlanRunner::new(&session).jobs(8).run_jobs(&jobs).unwrap();
+
+    let record_seq = grid_record(&plan, &jobs, &seq).to_string_pretty();
+    let record_par = grid_record(&plan, &jobs, &par).to_string_pretty();
+    assert_eq!(
+        record_seq, record_par,
+        "grid JSON must be byte-identical regardless of thread count"
+    );
+
+    let dir = std::env::temp_dir().join(format!("csmaafl_grid_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let (a, b) = (dir.join("seq.csv"), dir.join("par.csv"));
+    write_series_csv(&a, &seq.iter().collect::<Vec<_>>()).unwrap();
+    write_series_csv(&b, &par.iter().collect::<Vec<_>>()).unwrap();
+    assert_eq!(
+        std::fs::read(&a).unwrap(),
+        std::fs::read(&b).unwrap(),
+        "grid CSV must be byte-identical regardless of thread count"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+
+    // The labels carry the axis spellings in expansion order.
+    assert_eq!(seq[0].label, "gamma=0.1 scheduler=oldest scenario=static");
+    assert_eq!(seq[7].label, "gamma=0.4 scheduler=fifo scenario=dropout:0.3");
+}
+
+/// Jobs overriding data-shaping keys (clients) run on private sessions
+/// whose shards match their config — and stay deterministic in
+/// parallel.
+#[test]
+fn data_shaping_axes_rebuild_sessions_per_job() {
+    let session = Session::new(tiny_cfg(), LearnerKind::Linear, "artifacts").unwrap();
+    let plan = Plan::new().axis("clients", ["2", "4", "6"]);
+    let a = PlanRunner::new(&session).jobs(1).run(&plan).unwrap();
+    let b = PlanRunner::new(&session).jobs(3).run(&plan).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.label, y.label);
+        assert_eq!(x.uploads_per_client.len(), y.uploads_per_client.len());
+        assert_eq!(x.final_accuracy(), y.final_accuracy());
+    }
+    assert_eq!(a[0].uploads_per_client.len(), 2);
+    assert_eq!(a[2].uploads_per_client.len(), 6);
+}
+
+/// A bad axis value surfaces as a named error (not a panic), whatever
+/// the thread count, and names the offending job.
+#[test]
+fn invalid_axis_value_is_a_named_error() {
+    let session = Session::new(tiny_cfg(), LearnerKind::Linear, "artifacts").unwrap();
+    let plan = Plan::new().axis("gamma", ["0.1", "banana"]);
+    for jobs in [1usize, 4] {
+        let err = PlanRunner::new(&session)
+            .jobs(jobs)
+            .run(&plan)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("gamma=banana"), "jobs={jobs}: {err}");
+    }
+}
+
+/// Replicates derive distinct seeds, so replicate curves differ while
+/// replicate 0 matches the un-replicated run exactly.
+#[test]
+fn replicates_vary_the_world_deterministically() {
+    let session = Session::new(tiny_cfg(), LearnerKind::Linear, "artifacts").unwrap();
+    let single = PlanRunner::new(&session).run(&Plan::new()).unwrap();
+    let reps = PlanRunner::new(&session)
+        .jobs(3)
+        .run(&Plan::new().replicates(3))
+        .unwrap();
+    assert_eq!(reps.len(), 3);
+    assert_eq!(
+        reps[0].final_accuracy(),
+        single[0].final_accuracy(),
+        "replicate 0 keeps the base seed"
+    );
+    assert!(
+        reps[1].final_accuracy() != reps[0].final_accuracy()
+            || reps[1].aggregations != reps[0].aggregations
+            || reps[2].final_accuracy() != reps[0].final_accuracy(),
+        "replicates must see different worlds"
+    );
+}
+
+// --------------------------------------------------- scenario library
+
+/// `scenario=static` (spelled explicitly) is bit-identical to the
+/// default path: the scenario seam must not perturb existing series.
+#[test]
+fn explicit_static_scenario_matches_default_bit_for_bit() {
+    let session = Session::new(tiny_cfg(), LearnerKind::Linear, "artifacts").unwrap();
+    let implicit = session.run().unwrap();
+    let explicit = session
+        .run_with(|c| c.scenario = Some("static".into()))
+        .unwrap();
+    assert_eq!(implicit.points.len(), explicit.points.len());
+    for (a, b) in implicit.points.iter().zip(&explicit.points) {
+        assert_eq!(a.accuracy, b.accuracy, "curves must be bit-identical");
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.iteration, b.iteration);
+    }
+    assert_eq!(implicit.aggregations, explicit.aggregations);
+    assert_eq!(implicit.mean_staleness, explicit.mean_staleness);
+    assert_eq!(implicit.fairness, explicit.fairness);
+    assert_eq!(implicit.lost_uploads, 0);
+    assert_eq!(explicit.lost_uploads, 0);
+}
+
+/// Dropout feeds the existing lost-upload statistics and still learns.
+#[test]
+fn dropout_scenario_loses_uploads() {
+    let session = Session::new(tiny_cfg(), LearnerKind::Linear, "artifacts").unwrap();
+    let run = session
+        .run_with(|c| c.scenario = Some("dropout:0.5".into()))
+        .unwrap();
+    assert!(run.lost_uploads > 0, "p=0.5 over dozens of uploads");
+    assert_eq!(
+        run.lost_per_client.iter().sum::<u64>(),
+        run.lost_uploads,
+        "per-client accounting must add up"
+    );
+    assert!(run.aggregations > 0);
+    assert!(run.points.iter().all(|p| p.accuracy.is_finite()));
+    // Deterministic: same seed, same losses.
+    let again = session
+        .run_with(|c| c.scenario = Some("dropout:0.5".into()))
+        .unwrap();
+    assert_eq!(again.lost_uploads, run.lost_uploads);
+}
+
+/// Churn keeps clients offline a large fraction of the time, so a
+/// compute-bound run completes strictly fewer aggregations; rejoining
+/// clients upload stale models.
+#[test]
+fn churn_scenario_delays_uploads() {
+    let session = Session::new(compute_bound_cfg(), LearnerKind::Linear, "artifacts").unwrap();
+    let base = session.run().unwrap();
+    let churn = session
+        .run_with(|c| c.scenario = Some("churn:0.7,2".into()))
+        .unwrap();
+    assert!(churn.aggregations > 0, "churned clients still upload");
+    assert!(
+        churn.aggregations < base.aggregations,
+        "offline time must cost uploads: churn {} vs static {}",
+        churn.aggregations,
+        base.aggregations
+    );
+    assert!(churn.points.iter().all(|p| p.accuracy.is_finite()));
+}
+
+/// Drift slows compute periodically: never more aggregations than the
+/// static world, and the timing shift perturbs the run.
+#[test]
+fn drift_scenario_slows_compute_periodically() {
+    let session = Session::new(compute_bound_cfg(), LearnerKind::Linear, "artifacts").unwrap();
+    let base = session.run().unwrap();
+    let drift = session
+        .run_with(|c| c.scenario = Some("drift:1,8".into()))
+        .unwrap();
+    assert!(drift.aggregations > 0);
+    assert!(
+        drift.aggregations <= base.aggregations,
+        "slow epochs cannot add uploads: drift {} vs static {}",
+        drift.aggregations,
+        base.aggregations
+    );
+    let differs = drift.aggregations != base.aggregations
+        || drift
+            .points
+            .iter()
+            .zip(&base.points)
+            .any(|(d, b)| d.accuracy != b.accuracy);
+    assert!(differs, "an 8x slow-down every other slot must be visible");
+    assert!(drift.points.iter().all(|p| p.accuracy.is_finite()));
+}
+
+/// The figure harness pins `scenario=static`: a dynamic base-config
+/// scenario must not leak into the paper series.
+#[test]
+fn figure_plan_pins_static_scenario() {
+    let session = Session::new(tiny_cfg(), LearnerKind::Linear, "artifacts").unwrap();
+    let clean = PlanRunner::new(&session)
+        .run(&csmaafl::figures::figure_plan())
+        .unwrap();
+    let mut cfg = tiny_cfg();
+    cfg.scenario = Some("dropout:0.4".into());
+    let dirty_base = Session::new(cfg, LearnerKind::Linear, "artifacts").unwrap();
+    let pinned = PlanRunner::new(&dirty_base)
+        .run(&csmaafl::figures::figure_plan())
+        .unwrap();
+    assert_eq!(clean.len(), pinned.len());
+    for (a, b) in clean.iter().zip(&pinned) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.aggregations, b.aggregations);
+        assert_eq!(a.lost_uploads, 0);
+        assert_eq!(b.lost_uploads, 0);
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            assert_eq!(pa.accuracy, pb.accuracy, "{}", a.label);
+        }
+    }
+}
