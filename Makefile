@@ -9,6 +9,8 @@
 #   make grid-smoke  Tiny end-to-end pass over the docs/EXPERIMENTS.md
 #                    commands: a parallel scenario x gamma grid, a sweep,
 #                    the Fig.-2 timeline and the beta table.
+#   make bench       Quick pinned-seed perf suite checked against the
+#                    committed BENCH_baseline.json (docs/BENCHMARKS.md).
 
 # The artifacts location is a contract, not a knob: the Rust tests,
 # benches and examples resolve <repo-root>/artifacts (anchored via
@@ -16,7 +18,7 @@
 # repo root.
 CONFIGS ?= mnist_small,fashion_small
 
-.PHONY: artifacts build test test-pjrt test-python grid-smoke
+.PHONY: artifacts build test test-pjrt test-python grid-smoke bench
 
 artifacts:
 	cd python && python3 -m compile.aot \
@@ -37,18 +39,31 @@ test-python:
 # Exercises the cookbook's command lines (docs/EXPERIMENTS.md) on a
 # deliberately tiny config so CI can afford it: an 8-job grid across all
 # four scenarios, a gamma sweep, the analytic timeline and beta tables.
+# Output accumulates in a mktemp scratch dir removed by an EXIT trap, so
+# a failing run leaves nothing behind; on success it is promoted to
+# results/grid-smoke/ for inspection.
 grid-smoke: build
+	@tmp=$$(mktemp -d -t grid-smoke.XXXXXX); \
+	trap 'rm -rf "$$tmp"' EXIT; \
+	set -e; \
 	./target/release/repro grid --learner linear --jobs 4 \
 	    --set clients=4 --set samples_per_client=20 --set test_samples=50 \
 	    --set local_steps=2 --set max_slots=2 \
 	    --axis gamma=0.1,0.4 \
 	    --axis scenario=static,dropout:0.2,churn:0.4,drift:2 \
-	    --out results/grid-smoke
+	    --out "$$tmp"; \
 	./target/release/repro sweep --param gamma --values 0.1,0.4 --jobs 2 \
 	    --learner linear --set clients=4 --set samples_per_client=20 \
 	    --set test_samples=50 --set local_steps=2 --set max_slots=2 \
-	    --out results/grid-smoke
-	./target/release/repro timeline --clients 8 --out results/grid-smoke
-	./target/release/repro inspect betas --clients 8 \
-	    > results/grid-smoke/betas.csv
-	@echo "grid-smoke: OK (see results/grid-smoke/)"
+	    --out "$$tmp"; \
+	./target/release/repro timeline --clients 8 --out "$$tmp"; \
+	./target/release/repro inspect betas --clients 8 > "$$tmp/betas.csv"; \
+	mkdir -p results; \
+	rm -rf results/grid-smoke; \
+	mv "$$tmp" results/grid-smoke; \
+	trap - EXIT; \
+	echo "grid-smoke: OK (see results/grid-smoke/)"
+
+bench: build
+	./target/release/repro bench --quick --format json \
+	    --out results/bench --check BENCH_baseline.json

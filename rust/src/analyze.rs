@@ -19,6 +19,7 @@ pub fn run_from_json(j: &Json) -> Result<RunResult> {
     run.mean_staleness = j.get("mean_staleness").and_then(Json::as_f64).unwrap_or(0.0);
     run.fairness = j.get("fairness").and_then(Json::as_f64).unwrap_or(1.0);
     run.lost_uploads = j.get("lost_uploads").and_then(Json::as_i64).unwrap_or(0) as u64;
+    run.mean_train_loss = j.get("mean_train_loss").and_then(Json::as_f64).unwrap_or(0.0);
     run.total_ticks = j.get("total_ticks").and_then(Json::as_i64).unwrap_or(0) as u64;
     run.wallclock_secs = j.get("wallclock_secs").and_then(Json::as_f64).unwrap_or(0.0);
     run.uploads_per_client = j

@@ -167,7 +167,8 @@ pub fn run_afl(
                 clients[client]
                     .cursor
                     .fill(ctx.train, steps * batch, img, &mut xs, &mut ys);
-                let (local, _loss) = ctx.learner.train(&w_recv, &xs, &ys, steps)?;
+                let (local, loss) = ctx.learner.train(&w_recv, &xs, &ys, steps)?;
+                core.record_loss(client, loss as f64);
                 clients[client].pending = Some((local, i));
                 // Scenario drift: time-varying compute (scale 1.0 under
                 // the static default — bit-identical draw).
@@ -244,6 +245,7 @@ pub fn run_afl(
         fairness: scheduler.jain_fairness(),
         lost_uploads: core.lost_uploads(),
         lost_per_client: core.lost_per_client().to_vec(),
+        mean_train_loss: core.mean_train_loss(),
         total_ticks: max_ticks,
     };
     Ok(rec.into_result(stats))

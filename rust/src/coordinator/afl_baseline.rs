@@ -84,15 +84,20 @@ pub fn run_afl_baseline(ctx: &FlContext<'_>) -> Result<RunResult> {
 
         // All local models are trained from the SAME broadcast global —
         // that is what makes the solved-β sweep equal one FedAvg round.
-        let w = core.global();
-        let locals: Vec<ParamSet> = (0..m)
-            .map(|c| {
-                cursors[c].fill(ctx.train, cfg.local_steps * batch, img, &mut xs, &mut ys);
-                ctx.learner
-                    .train(w, &xs, &ys, cfg.local_steps)
-                    .map(|(p, _)| p)
-            })
-            .collect::<Result<_>>()?;
+        let mut locals: Vec<ParamSet> = Vec::with_capacity(m);
+        let mut losses: Vec<f32> = Vec::with_capacity(m);
+        {
+            let w = core.global();
+            for cursor in &mut cursors {
+                cursor.fill(ctx.train, cfg.local_steps * batch, img, &mut xs, &mut ys);
+                let (p, loss) = ctx.learner.train(w, &xs, &ys, cfg.local_steps)?;
+                locals.push(p);
+                losses.push(loss);
+            }
+        }
+        for (c, &loss) in losses.iter().enumerate() {
+            core.record_loss(c, loss as f64);
+        }
 
         // TDMA uploads in schedule order; the channel serializes them.
         let mut channel_free = broadcast_done;
@@ -116,6 +121,7 @@ pub fn run_afl_baseline(ctx: &FlContext<'_>) -> Result<RunResult> {
         fairness: 1.0, // one upload per client per sweep, by construction
         lost_uploads: 0,
         lost_per_client: vec![0; m],
+        mean_train_loss: core.mean_train_loss(),
         total_ticks: max_ticks,
     };
     Ok(rec.into_result(stats))

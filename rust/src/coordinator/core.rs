@@ -12,7 +12,7 @@
 //! tensor arithmetic is a pluggable [`ModelAggregator`] (host lerp vs
 //! the PJRT Pallas kernel).
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use super::policy::{AggregationPolicy, UpdateObservation};
 use super::staleness::StalenessTracker;
@@ -49,6 +49,36 @@ pub struct AggregationOutcome {
     pub beta: f32,
 }
 
+/// Dense, index-keyed per-client bookkeeping (structure-of-arrays).
+/// At million-client scale this state is touched on every event, so it
+/// lives in parallel flat vectors — cache-friendly, O(1) indexed, no
+/// per-client heap objects.
+#[derive(Debug, Clone, Default)]
+struct ClientTable {
+    /// Iteration stamp of the model most recently issued to each client.
+    model_version: Vec<u64>,
+    /// Updates absorbed per client (fairness accounting).
+    updates: Vec<u64>,
+    /// Uploads lost in transit per client (dropout-bias accounting).
+    lost: Vec<u64>,
+    /// Sum of client-reported local training losses.
+    loss_sum: Vec<f64>,
+    /// Number of loss reports behind `loss_sum`.
+    loss_n: Vec<u64>,
+}
+
+impl ClientTable {
+    fn new(clients: usize) -> ClientTable {
+        ClientTable {
+            model_version: vec![0; clients],
+            updates: vec![0; clients],
+            lost: vec![0; clients],
+            loss_sum: vec![0.0; clients],
+            loss_n: vec![0; clients],
+        }
+    }
+}
+
 /// The sans-IO server state machine. See the module docs for the
 /// driving contract.
 pub struct ServerCore {
@@ -57,11 +87,9 @@ pub struct ServerCore {
     tracker: StalenessTracker,
     j: u64,
     alpha: f64,
-    model_version: Vec<u64>,
-    updates_per_client: Vec<u64>,
+    clients: ClientTable,
     staleness_sum: f64,
     lost_uploads: u64,
-    lost_per_client: Vec<u64>,
 }
 
 impl ServerCore {
@@ -80,11 +108,9 @@ impl ServerCore {
             tracker: StalenessTracker::new(mu_rho),
             j: 0,
             alpha: 1.0 / clients.max(1) as f64,
-            model_version: vec![0; clients],
-            updates_per_client: vec![0; clients],
+            clients: ClientTable::new(clients),
             staleness_sum: 0.0,
             lost_uploads: 0,
-            lost_per_client: vec![0; clients],
         }
     }
 
@@ -107,13 +133,41 @@ impl ServerCore {
     /// return the iteration stamp to attach to it. The driver ships the
     /// actual parameters (snapshot, socket frame, ...).
     pub fn issue_to(&mut self, client: usize) -> u64 {
-        self.model_version[client] = self.j;
+        self.clients.model_version[client] = self.j;
         self.j
     }
 
     /// The iteration stamp of the model most recently issued to `client`.
     pub fn model_version(&self, client: usize) -> u64 {
-        self.model_version[client]
+        self.clients.model_version[client]
+    }
+
+    /// The shared decision step of both update paths — everything except
+    /// the tensor arithmetic (staleness, policy weight/β, μ tracking) —
+    /// so [`ServerCore::on_update`] and [`ServerCore::on_update_flat`]
+    /// provably make bit-identical decisions.
+    fn decide(&mut self, client: usize, start_iteration: u64, update_norm: f64) -> (u64, f64, f32) {
+        let staleness = self.j.saturating_sub(start_iteration);
+        let obs = UpdateObservation {
+            client,
+            iteration: self.j + 1,
+            staleness,
+            mu: self.tracker.mu(),
+            alpha: self.alpha,
+            update_norm,
+        };
+        let weight = self.policy.weight(&obs).clamp(0.0, 1.0);
+        let beta = self.policy.beta(weight);
+        self.tracker.observe(staleness);
+        self.staleness_sum += staleness as f64;
+        (staleness, weight, beta)
+    }
+
+    /// Advance the iteration counter and per-client statistics after an
+    /// absorbed update.
+    fn advance(&mut self, client: usize) {
+        self.j += 1;
+        self.clients.updates[client] += 1;
     }
 
     /// Absorb an uploaded local model: ask the policy for the weight,
@@ -128,27 +182,48 @@ impl ServerCore {
         local: &ParamSet,
         agg: &dyn ModelAggregator,
     ) -> Result<AggregationOutcome> {
-        let staleness = self.j.saturating_sub(start_iteration);
         let update_norm = if self.policy.needs_update_norm() {
             self.w.l2_distance(local)
         } else {
             0.0
         };
-        let obs = UpdateObservation {
-            client,
-            iteration: self.j + 1,
-            staleness,
-            mu: self.tracker.mu(),
-            alpha: self.alpha,
-            update_norm,
-        };
-        let weight = self.policy.weight(&obs).clamp(0.0, 1.0);
-        let beta = self.policy.beta(weight);
-        self.tracker.observe(staleness);
-        self.staleness_sum += staleness as f64;
+        let (staleness, weight, beta) = self.decide(client, start_iteration, update_norm);
         agg.aggregate(&mut self.w, local, beta)?;
-        self.j += 1;
-        self.updates_per_client[client] += 1;
+        self.advance(client);
+        Ok(AggregationOutcome {
+            iteration: self.j,
+            staleness,
+            weight,
+            beta,
+        })
+    }
+
+    /// The arena hot path: absorb a local model given as one flat buffer
+    /// in manifest order (e.g. a [`crate::model::ParamArena`] slot),
+    /// aggregating in place with the [`crate::model::lerp_flat`] kernel
+    /// — no allocation, no `ParamSet` construction. Bit-identical to
+    /// [`ServerCore::on_update`] with the native aggregator (asserted in
+    /// `tests/properties.rs`).
+    pub fn on_update_flat(
+        &mut self,
+        client: usize,
+        start_iteration: u64,
+        local: &[f32],
+    ) -> Result<AggregationOutcome> {
+        ensure!(
+            local.len() == self.w.numel(),
+            "flat update has {} elements, global model has {}",
+            local.len(),
+            self.w.numel()
+        );
+        let update_norm = if self.policy.needs_update_norm() {
+            self.w.l2_distance_flat(local)
+        } else {
+            0.0
+        };
+        let (staleness, weight, beta) = self.decide(client, start_iteration, update_norm);
+        self.w.lerp_inplace_flat(local, beta);
+        self.advance(client);
         Ok(AggregationOutcome {
             iteration: self.j,
             staleness,
@@ -162,7 +237,34 @@ impl ServerCore {
     /// statistics advance.
     pub fn on_lost_upload(&mut self, client: usize) {
         self.lost_uploads += 1;
-        self.lost_per_client[client] += 1;
+        self.clients.lost[client] += 1;
+    }
+
+    /// Record a client-reported local training loss (dense per-client
+    /// accounting; drivers call this when a trained model surfaces).
+    pub fn record_loss(&mut self, client: usize, loss: f64) {
+        self.clients.loss_sum[client] += loss;
+        self.clients.loss_n[client] += 1;
+    }
+
+    /// Mean reported training loss of one client (0 before any report).
+    pub fn mean_loss(&self, client: usize) -> f64 {
+        if self.clients.loss_n[client] > 0 {
+            self.clients.loss_sum[client] / self.clients.loss_n[client] as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean reported training loss across every report from every
+    /// client (0 before any report).
+    pub fn mean_train_loss(&self) -> f64 {
+        let n: u64 = self.clients.loss_n.iter().sum();
+        if n > 0 {
+            self.clients.loss_sum.iter().sum::<f64>() / n as f64
+        } else {
+            0.0
+        }
     }
 
     /// Uploads lost in transit so far.
@@ -173,7 +275,7 @@ impl ServerCore {
     /// Uploads lost in transit, per client — the systematic-bias signal
     /// under dropout (which clients the model stops hearing from).
     pub fn lost_per_client(&self) -> &[u64] {
-        &self.lost_per_client
+        &self.clients.lost
     }
 
     /// Mean observed staleness across aggregations (0 before the first).
@@ -187,7 +289,7 @@ impl ServerCore {
 
     /// Updates absorbed per client (fairness accounting).
     pub fn updates_per_client(&self) -> &[u64] {
-        &self.updates_per_client
+        &self.clients.updates
     }
 
     /// Current μ_ji estimate of the staleness tracker.
@@ -270,6 +372,55 @@ mod tests {
         assert_eq!(core.model_version(0), 0);
         assert_eq!(core.model_version(1), 1);
         assert_eq!(core.updates_per_client(), &[1, 0]);
+    }
+
+    #[test]
+    fn flat_update_path_is_bit_identical_to_tensor_path() {
+        let w0 = pset(&[1.0, -2.0, 0.5, 3.0]);
+        let mut a = ServerCore::new(
+            w0.clone(),
+            4,
+            Box::new(StalenessEq11::new(0.2).unwrap()),
+            0.1,
+        );
+        let mut b = ServerCore::new(
+            w0,
+            4,
+            Box::new(StalenessEq11::new(0.2).unwrap()),
+            0.1,
+        );
+        for k in 0..25u64 {
+            let vals: Vec<f32> = (0..4u64)
+                .map(|t| ((k * 11 + t) % 7) as f32 * 0.5 - 1.5)
+                .collect();
+            let local = pset(&vals);
+            let client = (k % 4) as usize;
+            let start = k.saturating_sub(k % 3);
+            let oa = a.on_update(client, start, &local, &NativeAggregator).unwrap();
+            let ob = b.on_update_flat(client, start, &vals).unwrap();
+            assert_eq!(oa, ob, "k={k}");
+        }
+        assert_eq!(a.global().max_abs_diff(b.global()), 0.0);
+        assert_eq!(a.updates_per_client(), b.updates_per_client());
+    }
+
+    #[test]
+    fn flat_update_rejects_wrong_length() {
+        let mut core = ServerCore::new(pset(&[0.0, 0.0]), 1, Box::new(NaiveAlpha), 0.1);
+        assert!(core.on_update_flat(0, 0, &[1.0, 2.0, 3.0]).is_err());
+    }
+
+    #[test]
+    fn loss_accounting_is_per_client_means() {
+        let mut core = ServerCore::new(pset(&[0.0]), 3, Box::new(NaiveAlpha), 0.1);
+        assert_eq!(core.mean_train_loss(), 0.0);
+        core.record_loss(0, 2.0);
+        core.record_loss(0, 4.0);
+        core.record_loss(2, 1.0);
+        assert_eq!(core.mean_loss(0), 3.0);
+        assert_eq!(core.mean_loss(1), 0.0);
+        assert_eq!(core.mean_loss(2), 1.0);
+        assert!((core.mean_train_loss() - 7.0 / 3.0).abs() < 1e-12);
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub mod beta_solver;
 pub mod core;
 pub mod policy;
 pub mod runner;
+pub mod scale;
 pub mod scheduler;
 pub mod sfl;
 pub mod staleness;
@@ -40,6 +41,7 @@ pub use policy::{
     SolvedBeta, StalenessEq11, UpdateObservation,
 };
 pub use runner::{FlContext, Recorder, RunStats};
+pub use scale::{run_scale_sim, ScaleSimConfig, ScaleSimReport};
 pub use scheduler::{SchedulerPolicy, UploadScheduler};
 pub use staleness::{local_weight, StalenessTracker};
 

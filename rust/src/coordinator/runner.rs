@@ -78,6 +78,10 @@ pub struct RunStats {
     /// Uploads lost in transit, per client (dropout-bias accounting;
     /// empty or all-zero on reliable channels).
     pub lost_per_client: Vec<u64>,
+    /// Mean client-reported local training loss across the run (from
+    /// the core's dense per-client loss table; 0 for engines that do
+    /// not report it, e.g. SFL).
+    pub mean_train_loss: f64,
     /// Virtual completion time.
     pub total_ticks: Ticks,
 }
@@ -184,6 +188,7 @@ impl<'a> Recorder<'a> {
             fairness: stats.fairness,
             lost_uploads: stats.lost_uploads,
             lost_per_client: stats.lost_per_client,
+            mean_train_loss: stats.mean_train_loss,
             total_ticks: stats.total_ticks,
             wallclock_secs: wallclock,
         }

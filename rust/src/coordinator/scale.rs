@@ -1,0 +1,448 @@
+//! The million-client scale simulator (`repro sim`): the coordinator
+//! hot path — discrete-event queue, TDMA slot arbitration, sans-IO
+//! `ServerCore` aggregation over the arena-backed flat parameter store —
+//! with *synthetic* local training instead of a learner, so the pure
+//! coordination cost at 10^5–10^6 clients is measurable on one machine.
+//!
+//! What is real: the event loop (`sim::EventQueue`), the scheduler
+//! (`coordinator::scheduler`, heap/cursor fast paths), the aggregation
+//! policies (`coordinator::policy`) and the eq.-(3) arithmetic
+//! ([`crate::model::lerp_flat`] through [`ServerCore::on_update_flat`]),
+//! the heterogeneous compute-time model, and all per-client bookkeeping.
+//! What is synthetic: the local "training" — each upload is the current
+//! global model contracted toward zero plus a per-upload scalar offset
+//! (an O(params) transform into a recycled [`ParamArena`] slot, zero
+//! allocation at steady state). Clients therefore train from an
+//! approximation of their download snapshot; staleness bookkeeping still
+//! uses the true issued iteration stamp.
+//!
+//! Everything is seeded, so two runs with one config produce identical
+//! aggregation counts, staleness and fairness statistics; only the
+//! wall-clock fields differ.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use super::afl::adaptive_steps;
+use super::core::ServerCore;
+use super::policy::{AggregationPolicy, PolicyParams, StalenessEq11};
+use super::scheduler::{SchedulerPolicy, UploadScheduler};
+use crate::model::{ParamArena, ParamLayout, ParamSet, SlotId, TensorSpec};
+use crate::sim::{ComputeModel, EventQueue, HeterogeneityProfile, Ticks, TimeModel, UplinkChannel};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Configuration of one scale-simulation run. All fields have CLI
+/// spellings on `repro sim`.
+#[derive(Debug, Clone)]
+pub struct ScaleSimConfig {
+    /// Number of simulated clients M.
+    pub clients: usize,
+    /// Aggregations to perform before stopping; 0 = one per client
+    /// (`clients` total).
+    pub iterations: u64,
+    /// Flat model size in f32 elements (one tensor).
+    pub params: usize,
+    /// Root seed for speeds, jitter and synthetic updates.
+    pub seed: u64,
+    /// Upload-slot arbitration policy.
+    pub scheduler: SchedulerPolicy,
+    /// Aggregation-policy registry spelling; `None` = eq. (11) at
+    /// `gamma`.
+    pub aggregation: Option<String>,
+    /// Eq.-(11) γ (also the registry default parameter).
+    pub gamma: f64,
+    /// μ_ji EMA rate.
+    pub mu_rho: f64,
+    /// Base local step count E (scaled by the adaptive policy).
+    pub local_steps: usize,
+    /// How per-client compute speed factors are drawn.
+    pub heterogeneity: HeterogeneityProfile,
+    /// Per-round multiplicative compute jitter.
+    pub jitter: f64,
+    /// Sec. II-C communication/computation time parameters.
+    pub time: TimeModel,
+}
+
+impl Default for ScaleSimConfig {
+    fn default() -> Self {
+        ScaleSimConfig {
+            clients: 1000,
+            iterations: 0,
+            params: 64,
+            seed: 42,
+            scheduler: SchedulerPolicy::OldestModelFirst,
+            aggregation: None,
+            gamma: 0.2,
+            mu_rho: 0.1,
+            local_steps: 48,
+            heterogeneity: HeterogeneityProfile::Uniform { max_factor: 4.0 },
+            jitter: 0.1,
+            time: TimeModel::default(),
+        }
+    }
+}
+
+/// What one scale-simulation run did, plus its throughput.
+#[derive(Debug, Clone)]
+pub struct ScaleSimReport {
+    /// Simulated client count.
+    pub clients: usize,
+    /// Flat model size in f32 elements.
+    pub params: usize,
+    /// Aggregation-policy label in force.
+    pub policy: String,
+    /// Scheduler spelling in force.
+    pub scheduler: &'static str,
+    /// Global aggregations performed.
+    pub aggregations: u64,
+    /// Events processed by the loop.
+    pub events: u64,
+    /// Virtual time reached (ticks).
+    pub virtual_ticks: Ticks,
+    /// Real time spent.
+    pub wall_secs: f64,
+    /// Events per wall-clock second.
+    pub events_per_sec: f64,
+    /// Aggregations per wall-clock second.
+    pub aggs_per_sec: f64,
+    /// Mean observed staleness.
+    pub mean_staleness: f64,
+    /// Jain fairness over granted slots.
+    pub fairness: f64,
+    /// Mean synthetic training loss recorded through the dense
+    /// per-client loss table.
+    pub mean_train_loss: f64,
+    /// Arena high-water mark (slots ever created).
+    pub arena_slots: usize,
+    /// Arena slots still allocated at exit (in-flight locals).
+    pub arena_live: usize,
+    /// L2 norm of the final global model (finite-ness sanity value).
+    pub final_norm: f64,
+}
+
+impl ScaleSimReport {
+    /// Machine-readable form (the `repro sim --format json` output).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("clients", Json::Int(self.clients as i64))
+            .set("params", Json::Int(self.params as i64))
+            .set("policy", Json::Str(self.policy.clone()))
+            .set("scheduler", Json::Str(self.scheduler.into()))
+            .set("aggregations", Json::Int(self.aggregations as i64))
+            .set("events", Json::Int(self.events as i64))
+            .set("virtual_ticks", Json::Int(self.virtual_ticks as i64))
+            .set("wall_secs", Json::Float(self.wall_secs))
+            .set("events_per_sec", Json::Float(self.events_per_sec))
+            .set("aggs_per_sec", Json::Float(self.aggs_per_sec))
+            .set("mean_staleness", Json::Float(self.mean_staleness))
+            .set("fairness", Json::Float(self.fairness))
+            .set("mean_train_loss", Json::Float(self.mean_train_loss))
+            .set("arena_slots", Json::Int(self.arena_slots as i64))
+            .set("arena_live", Json::Int(self.arena_live as i64))
+            .set("final_norm", Json::Float(self.final_norm));
+        o
+    }
+
+    /// Human-readable table (the default `repro sim` output).
+    pub fn table(&self) -> String {
+        format!(
+            "scale sim: {} clients, {} params, policy {}, scheduler {}\n\
+             {:<18} {}\n{:<18} {}\n{:<18} {}\n{:<18} {:.2}\n\
+             {:<18} {:.0}\n{:<18} {:.0}\n{:<18} {:.2}\n{:<18} {:.4}\n\
+             {:<18} {:.4}\n{:<18} {} (live {})\n{:<18} {:.4}",
+            self.clients,
+            self.params,
+            self.policy,
+            self.scheduler,
+            "aggregations",
+            self.aggregations,
+            "events",
+            self.events,
+            "virtual ticks",
+            self.virtual_ticks,
+            "wall (s)",
+            self.wall_secs,
+            "events/sec",
+            self.events_per_sec,
+            "aggs/sec",
+            self.aggs_per_sec,
+            "mean staleness",
+            self.mean_staleness,
+            "fairness",
+            self.fairness,
+            "mean train loss",
+            self.mean_train_loss,
+            "arena slots",
+            self.arena_slots,
+            self.arena_live,
+            "final |w|",
+            self.final_norm
+        )
+    }
+}
+
+/// Scale-sim event. Unlike the learner-driven engine (`afl.rs`), no
+/// event carries model parameters — the bookkeeping travels as iteration
+/// stamps and locals live in the arena — so the queue stays small at
+/// 10^6 clients.
+#[derive(Debug)]
+enum Event {
+    /// Client received the global model issued at iteration `i`.
+    Download { client: usize, i: u64 },
+    /// Client finished local compute on the model from iteration `i`.
+    Compute { client: usize, i: u64 },
+    /// Client's TDMA upload completed.
+    Upload { client: usize },
+}
+
+/// If the uplink is idle, grant the next contender a slot and schedule
+/// its upload completion (the same TDMA channel-grant step as the
+/// learner-driven engine).
+fn grant_next(
+    scheduler: &mut UploadScheduler,
+    channel: &mut UplinkChannel,
+    queue: &mut EventQueue<Event>,
+    now: Ticks,
+    tau_up: Ticks,
+) {
+    if channel.is_free(now) {
+        if let Some(winner) = scheduler.grant() {
+            let done = channel.reserve(now, tau_up);
+            queue.schedule_at(done, Event::Upload { client: winner });
+        }
+    }
+}
+
+/// Run the coordinator-only scale simulation. Deterministic up to the
+/// wall-clock fields of the report.
+pub fn run_scale_sim(cfg: &ScaleSimConfig) -> Result<ScaleSimReport> {
+    ensure!(cfg.clients > 0, "sim requires clients > 0");
+    ensure!(cfg.params > 0, "sim requires params > 0");
+    ensure!(cfg.local_steps > 0, "sim requires local_steps > 0");
+    let m = cfg.clients;
+    let target = if cfg.iterations == 0 {
+        m as u64
+    } else {
+        cfg.iterations
+    };
+
+    let root = Rng::new(cfg.seed);
+    let cm = ComputeModel::new(cfg.heterogeneity, m, cfg.jitter, &root);
+    let mut jrng = root.fork(0xd1ce);
+    let mut urng = root.fork(0x10ca1);
+    let mut irng = root.fork(0x1217);
+
+    let layout = ParamLayout::new(vec![TensorSpec {
+        name: "w".into(),
+        shape: vec![cfg.params],
+    }]);
+    let w0_flat: Vec<f32> = (0..cfg.params).map(|_| 0.1 * irng.normal()).collect();
+    let w0 = ParamSet::from_flat(&layout, &w0_flat);
+
+    let params = PolicyParams {
+        clients: m,
+        gamma: cfg.gamma,
+    };
+    let policy: Box<dyn AggregationPolicy> = match &cfg.aggregation {
+        Some(spec) => <dyn AggregationPolicy>::parse(spec, &params)?,
+        None => Box::new(StalenessEq11::new(cfg.gamma)?),
+    };
+    let policy_label = policy.label();
+
+    let mut core = ServerCore::new(w0, m, policy, cfg.mu_rho);
+    let mut scheduler = UploadScheduler::new(cfg.scheduler, m);
+    let mut channel = UplinkChannel::new();
+    let mut queue: EventQueue<Event> = EventQueue::new();
+    let mut arena = ParamArena::new(layout);
+    // Pending local update per client: arena slot + start iteration.
+    let mut pending: Vec<Option<(SlotId, u64)>> = vec![None; m];
+
+    let started = Instant::now();
+    let mut events = 0u64;
+
+    // t=0 broadcast: every client is issued w_0 (stamps only — the
+    // synthetic trainer reads the live global at compute time).
+    for c in 0..m {
+        let i = core.issue_to(c);
+        queue.schedule_at(cfg.time.tau_down, Event::Download { client: c, i });
+    }
+
+    while core.iteration() < target {
+        let Some((now, ev)) = queue.pop() else {
+            break;
+        };
+        events += 1;
+        match ev {
+            Event::Download { client, i } => {
+                let steps = adaptive_steps(cfg.local_steps, cm.factor(client), true);
+                let dur = cm.duration(&cfg.time, client, steps, &mut jrng);
+                queue.schedule_in(dur, Event::Compute { client, i });
+            }
+            Event::Compute { client, i } => {
+                // Synthetic local training into a recycled arena slot:
+                // local = 0.999·global + δ, one scalar δ per upload.
+                let slot = arena.alloc();
+                let d = 0.02 * urng.f32() - 0.01;
+                core.global().copy_to_flat(arena.get_mut(slot));
+                for x in arena.get_mut(slot) {
+                    *x = 0.999 * *x + d;
+                }
+                core.record_loss(client, (d as f64).abs());
+                pending[client] = Some((slot, i));
+                scheduler.request(client, now);
+                grant_next(&mut scheduler, &mut channel, &mut queue, now, cfg.time.tau_up);
+            }
+            Event::Upload { client } => {
+                let (slot, i) = pending[client]
+                    .take()
+                    .expect("upload without a pending local model");
+                core.on_update_flat(client, i, arena.get(slot))?;
+                arena.free(slot);
+                let i = core.issue_to(client);
+                queue.schedule_in(cfg.time.tau_down, Event::Download { client, i });
+                grant_next(&mut scheduler, &mut channel, &mut queue, now, cfg.time.tau_up);
+            }
+        }
+    }
+
+    let wall = started.elapsed().as_secs_f64().max(1e-9);
+    Ok(ScaleSimReport {
+        clients: m,
+        params: cfg.params,
+        policy: policy_label,
+        scheduler: cfg.scheduler.name(),
+        aggregations: core.iteration(),
+        events,
+        virtual_ticks: queue.now(),
+        wall_secs: wall,
+        events_per_sec: events as f64 / wall,
+        aggs_per_sec: core.iteration() as f64 / wall,
+        mean_staleness: core.mean_staleness(),
+        fairness: scheduler.jain_fairness(),
+        mean_train_loss: core.mean_train_loss(),
+        arena_slots: arena.slots(),
+        arena_live: arena.live(),
+        final_norm: core.global().l2_norm(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn completes_and_reports_invariants() {
+        let cfg = ScaleSimConfig {
+            clients: 200,
+            iterations: 400,
+            params: 16,
+            ..ScaleSimConfig::default()
+        };
+        let r = run_scale_sim(&cfg).unwrap();
+        assert_eq!(r.aggregations, 400);
+        assert!(r.events >= r.aggregations, "{r:?}");
+        assert!(r.final_norm.is_finite());
+        assert!(r.fairness > 0.0 && r.fairness <= 1.0 + 1e-12);
+        assert!(r.mean_train_loss > 0.0 && r.mean_train_loss <= 0.01);
+        // At most one in-flight local per client, and the live count at
+        // exit never exceeds the pool's high-water mark.
+        assert!(r.arena_slots <= 200, "{}", r.arena_slots);
+        assert!(r.arena_live <= r.arena_slots);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let cfg = ScaleSimConfig {
+            clients: 100,
+            iterations: 250,
+            params: 8,
+            ..ScaleSimConfig::default()
+        };
+        let a = run_scale_sim(&cfg).unwrap();
+        let b = run_scale_sim(&cfg).unwrap();
+        assert_eq!(a.aggregations, b.aggregations);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.virtual_ticks, b.virtual_ticks);
+        assert_eq!(a.mean_staleness, b.mean_staleness);
+        assert_eq!(a.final_norm, b.final_norm);
+        assert_eq!(a.mean_train_loss, b.mean_train_loss);
+    }
+
+    #[test]
+    fn iterations_zero_defaults_to_one_per_client() {
+        let cfg = ScaleSimConfig {
+            clients: 64,
+            params: 4,
+            ..ScaleSimConfig::default()
+        };
+        let r = run_scale_sim(&cfg).unwrap();
+        assert_eq!(r.aggregations, 64);
+    }
+
+    #[test]
+    fn every_scheduler_and_policy_spelling_runs() {
+        for sched in [
+            SchedulerPolicy::OldestModelFirst,
+            SchedulerPolicy::Fifo,
+            SchedulerPolicy::RoundRobin,
+        ] {
+            for agg in [None, Some("fedasync:0.5".to_string()), Some("adaptive".to_string())] {
+                let cfg = ScaleSimConfig {
+                    clients: 50,
+                    iterations: 100,
+                    params: 8,
+                    scheduler: sched,
+                    aggregation: agg.clone(),
+                    ..ScaleSimConfig::default()
+                };
+                let r = run_scale_sim(&cfg).unwrap();
+                assert_eq!(r.aggregations, 100, "{sched:?} {agg:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_degenerate_configs() {
+        let bad = ScaleSimConfig {
+            clients: 0,
+            ..ScaleSimConfig::default()
+        };
+        assert!(run_scale_sim(&bad).is_err());
+        let bad = ScaleSimConfig {
+            params: 0,
+            ..ScaleSimConfig::default()
+        };
+        assert!(run_scale_sim(&bad).is_err());
+        let bad = ScaleSimConfig {
+            aggregation: Some("bogus".into()),
+            ..ScaleSimConfig::default()
+        };
+        assert!(run_scale_sim(&bad).is_err());
+    }
+
+    #[test]
+    fn json_report_has_the_contract_fields() {
+        let cfg = ScaleSimConfig {
+            clients: 20,
+            iterations: 40,
+            params: 4,
+            ..ScaleSimConfig::default()
+        };
+        let j = run_scale_sim(&cfg).unwrap().to_json();
+        for key in [
+            "clients",
+            "aggregations",
+            "events",
+            "events_per_sec",
+            "mean_staleness",
+            "fairness",
+            "mean_train_loss",
+            "arena_slots",
+            "final_norm",
+        ] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+    }
+}

@@ -7,6 +7,29 @@
 //! `coordinator::policy`): CSMAAFL's oldest-model-first rule, FIFO, or
 //! strict round-robin. New arbitration rules are trait impls, not
 //! engine changes.
+//!
+//! ## Complexity at scale
+//!
+//! The three built-in policies run on specialized index structures so a
+//! million-client simulation stays event-loop-bound, not
+//! arbitration-bound:
+//!
+//! | Policy                | request       | grant         | structure |
+//! |-----------------------|---------------|---------------|-----------|
+//! | `oldest` (CSMAAFL)    | O(log n)      | O(log n)      | binary heap keyed `(last-slot, request-time, id)` |
+//! | `fifo`                | O(log n)      | O(log n)      | binary heap keyed `(request-time, id)` |
+//! | `roundrobin`          | O(1)          | O(1)          | cyclic cursor over dense in-flight flags |
+//!
+//! The heap key of a pending `oldest` request is fixed at request time:
+//! a client's last-upload slot can only change when it is *granted*, and
+//! a client cannot be granted while its request is still pending — so
+//! request-time priorities never go stale. Custom `SchedulingPolicy`
+//! impls (via [`UploadScheduler::with_policy`]) fall back to the O(n)
+//! reference scan; `tests/properties.rs` asserts the fast paths pick
+//! the same winners as that scan on random workloads.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 use super::policy::{Fifo, OldestModelFirst, RoundRobin, SchedulerView, SchedulingPolicy};
 use crate::sim::Ticks;
@@ -63,15 +86,42 @@ pub struct UploadRequest {
     pub requested_at: Ticks,
 }
 
+/// The arbitration engine behind [`UploadScheduler`]: a policy-shaped
+/// index structure for the built-ins, or the O(n) reference scan for
+/// arbitrary [`SchedulingPolicy`] impls.
+#[derive(Debug)]
+enum Arbiter {
+    /// Min-heap over `(priority, request-time, client)`. `by_last_slot`
+    /// keys priority on the requester's previous upload slot (-1 =
+    /// never; the `oldest` rule); FIFO uses constant priority so the
+    /// order is pure `(request-time, client)`.
+    Heap {
+        heap: BinaryHeap<Reverse<(i64, Ticks, usize)>>,
+        by_last_slot: bool,
+    },
+    /// Strict cyclic cursor over the dense in-flight flags (roundrobin).
+    Cursor { next: usize },
+    /// Reference path: linear scan through an arbitrary policy impl.
+    Scan {
+        policy: Box<dyn SchedulingPolicy>,
+        pending: Vec<UploadRequest>,
+    },
+}
+
 /// The upload-slot scheduler. Tracks, per client, the slot index of its
 /// most recent upload (the `m'` of the paper's priority rule) and the
 /// total number of granted slots (fairness accounting); the winner
-/// among contenders is chosen by the wrapped `SchedulingPolicy`.
+/// among contenders is chosen by the policy's arbitration structure
+/// (see the module docs for the complexity table).
 #[derive(Debug)]
 pub struct UploadScheduler {
     kind: SchedulerPolicy,
-    policy: Box<dyn SchedulingPolicy>,
-    pending: Vec<UploadRequest>,
+    arbiter: Arbiter,
+    /// Dense per-client flag: request filed, not yet granted. O(1)
+    /// duplicate detection and the roundrobin cursor's state.
+    in_flight: Vec<bool>,
+    /// Number of requests currently waiting for a slot.
+    pending: usize,
     /// Slot index of each client's previous upload; None = never uploaded.
     last_slot: Vec<Option<u64>>,
     /// Total slots granted so far (the running slot counter k).
@@ -81,22 +131,47 @@ pub struct UploadScheduler {
 }
 
 impl UploadScheduler {
-    /// A scheduler for `clients` clients under the given built-in policy.
+    /// A scheduler for `clients` clients under the given built-in policy
+    /// (heap / cursor fast path).
     pub fn new(policy: SchedulerPolicy, clients: usize) -> Self {
-        Self::with_policy(policy, policy.build(), clients)
+        let arbiter = match policy {
+            SchedulerPolicy::OldestModelFirst => Arbiter::Heap {
+                heap: BinaryHeap::new(),
+                by_last_slot: true,
+            },
+            SchedulerPolicy::Fifo => Arbiter::Heap {
+                heap: BinaryHeap::new(),
+                by_last_slot: false,
+            },
+            SchedulerPolicy::RoundRobin => Arbiter::Cursor { next: 0 },
+        };
+        Self::build_with(policy, arbiter, clients)
     }
 
-    /// A scheduler driven by an arbitrary `SchedulingPolicy` impl.
-    /// `kind` names the nearest built-in for provenance accessors.
+    /// A scheduler driven by an arbitrary `SchedulingPolicy` impl via
+    /// the O(n) reference scan. `kind` names the nearest built-in for
+    /// provenance accessors.
     pub fn with_policy(
         kind: SchedulerPolicy,
         policy: Box<dyn SchedulingPolicy>,
         clients: usize,
     ) -> Self {
+        Self::build_with(
+            kind,
+            Arbiter::Scan {
+                policy,
+                pending: Vec::new(),
+            },
+            clients,
+        )
+    }
+
+    fn build_with(kind: SchedulerPolicy, arbiter: Arbiter, clients: usize) -> Self {
         UploadScheduler {
             kind,
-            policy,
-            pending: Vec::new(),
+            arbiter,
+            in_flight: vec![false; clients],
+            pending: 0,
             last_slot: vec![None; clients],
             slots_granted: 0,
             grants: vec![0; clients],
@@ -110,7 +185,7 @@ impl UploadScheduler {
 
     /// Number of requests currently waiting for a slot.
     pub fn pending_len(&self) -> usize {
-        self.pending.len()
+        self.pending
     }
 
     /// Per-client grant counts (fairness accounting).
@@ -127,31 +202,63 @@ impl UploadScheduler {
     /// a client cannot request twice before being granted.
     pub fn request(&mut self, client: usize, now: Ticks) {
         assert!(
-            !self.pending.iter().any(|r| r.client == client),
+            !self.in_flight[client],
             "client {client} already has a pending request"
         );
-        self.pending.push(UploadRequest {
-            client,
-            requested_at: now,
-        });
+        self.in_flight[client] = true;
+        self.pending += 1;
+        match &mut self.arbiter {
+            Arbiter::Heap { heap, by_last_slot } => {
+                let priority = if *by_last_slot {
+                    self.last_slot[client].map_or(-1i64, |s| s as i64)
+                } else {
+                    0
+                };
+                heap.push(Reverse((priority, now, client)));
+            }
+            // The in-flight flags are the cursor's entire state.
+            Arbiter::Cursor { .. } => {}
+            Arbiter::Scan { pending, .. } => pending.push(UploadRequest {
+                client,
+                requested_at: now,
+            }),
+        }
     }
 
     /// Grant the next slot per policy. Returns the winning client, or
     /// None if no request is pending (or the policy leaves the slot
     /// idle, e.g. round-robin waiting for the next client in cycle).
     pub fn grant(&mut self) -> Option<usize> {
-        if self.pending.is_empty() {
+        if self.pending == 0 {
             return None;
         }
-        let view = SchedulerView {
-            last_slot: &self.last_slot,
+        let client = match &mut self.arbiter {
+            Arbiter::Heap { heap, .. } => {
+                let Reverse((_, _, client)) = heap.pop()?;
+                client
+            }
+            Arbiter::Cursor { next } => {
+                if !self.in_flight[*next] {
+                    return None;
+                }
+                let client = *next;
+                *next = (*next + 1) % self.in_flight.len().max(1);
+                client
+            }
+            Arbiter::Scan { policy, pending } => {
+                let view = SchedulerView {
+                    last_slot: &self.last_slot,
+                };
+                let pos = policy.pick(pending, &view)?;
+                pending.swap_remove(pos).client
+            }
         };
-        let pos = self.policy.pick(&self.pending, &view)?;
-        let req = self.pending.swap_remove(pos);
+        self.in_flight[client] = false;
+        self.pending -= 1;
         self.slots_granted += 1;
-        self.last_slot[req.client] = Some(self.slots_granted);
-        self.grants[req.client] += 1;
-        Some(req.client)
+        self.last_slot[client] = Some(self.slots_granted);
+        self.grants[client] += 1;
+        Some(client)
     }
 
     /// Jain's fairness index over per-client grant counts (1 = perfectly

@@ -89,6 +89,7 @@ pub fn run_sfl(ctx: &FlContext<'_>) -> Result<crate::metrics::RunResult> {
         fairness: 1.0,
         lost_uploads: 0,
         lost_per_client: vec![0; m],
+        mean_train_loss: 0.0, // SFL does not report per-client losses
         total_ticks: now,
     };
     Ok(rec.into_result(stats))

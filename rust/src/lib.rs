@@ -18,7 +18,11 @@
 //!   declarative [`experiment::Plan`]s executed in parallel by
 //!   [`experiment::PlanRunner`] with byte-identical output at any
 //!   `--jobs` count. The same `ServerCore` drives the TCP deployment
-//!   runtime ([`net`]).
+//!   runtime ([`net`]). The coordinator hot path scales to 10^6
+//!   simulated clients (`repro sim`, [`coordinator::scale`]) over the
+//!   arena-backed flat parameter store ([`model::ParamArena`]) and
+//!   O(log n) slot arbitration; [`perf`] is the pinned benchmark suite
+//!   (`repro bench`) whose `BENCH_<date>.json` records CI gates on.
 //! * **L2/L1 (build time)** — `python/compile/`: the paper's CNN in JAX
 //!   with Pallas kernels on the dense layers and the aggregation axpy,
 //!   AOT-lowered to HLO text executed through PJRT ([`runtime`]).
@@ -58,6 +62,7 @@ pub mod learner;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod perf;
 pub mod runtime;
 pub mod session;
 pub mod sim;

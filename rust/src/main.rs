@@ -9,6 +9,8 @@
 //!   timeline  emit the Sec. II-C SFL-vs-AFL time comparison (Fig. 2)
 //!   inspect   analytic tables (naive-decay, beta-solver)
 //!   smoke     compile + run every artifact once (installation check)
+//!   sim       coordinator-only scale simulation (10^6 clients, no learner)
+//!   bench     pinned-seed perf suite -> `BENCH_<date>.json` (+ CI --check gate)
 //!
 //! Every multi-run command (`compare`, `figures`, `sweep`, `grid`)
 //! executes through the experiment engine (`csmaafl::experiment`) on
@@ -21,11 +23,14 @@
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use csmaafl::config::RunConfig;
+use csmaafl::coordinator::{run_scale_sim, ScaleSimConfig, SchedulerPolicy};
 use csmaafl::experiment::{self, Plan, PlanRunner};
 use csmaafl::figures::{self, FigureSpec, FIGURES};
 use csmaafl::metrics::write_series_csv;
+use csmaafl::perf;
 use csmaafl::session::{LearnerKind, Session};
-use csmaafl::sim::TimeModel;
+use csmaafl::sim::{HeterogeneityProfile, TimeModel};
+use csmaafl::util::json::{self, Json};
 use csmaafl::util::logging::{self, Level};
 
 const USAGE: &str = "\
@@ -56,6 +61,18 @@ COMMANDS:
   timeline  [--clients M] [--local-steps E] [--slow-factor a] [--out results/]
   inspect   naive-decay [--clients M] | betas [--clients M]
   smoke     [--artifacts artifacts]
+  sim       [--clients N] [--iterations J] [--params P]
+            [--scheduler oldest|fifo|roundrobin] [--aggregation spec]
+            [--heterogeneity prof] [--gamma g] [--seed S]
+            [--format table|json]
+            (coordinator-only scale simulation: real event loop,
+            scheduler and arena aggregation; synthetic local training —
+            completes at --clients 1000000)
+  bench     [--quick] [--suite aggregation|scheduler|event_loop|end_to_end]
+            [--format table|json] [--out results/]
+            [--check BENCH_baseline.json] [--factor 2.0]
+            (pinned-seed perf suite -> <out>/BENCH_<date>.json; --check
+            fails when any case regresses past factor x the baseline)
   serve     --bind 0.0.0.0:7070 --clients N [--iterations J] [--gamma g]
             [--learner pjrt|linear]          (TCP deployment leader)
   join      --connect host:7070 --worker-id K --workers N
@@ -76,11 +93,17 @@ SCENARIOS (--set scenario=<spec>, event-driven AFL engines):
   static | dropout:p | churn:rate[,cycle] | drift:period[,factor]
 ";
 
-/// Minimal option parser: flags with values, repeated --set collection.
+/// Boolean options (present/absent, no value) — everything else spelled
+/// `--name` expects a value.
+const BOOL_FLAGS: [&str; 1] = ["quick"];
+
+/// Minimal option parser: flags with values, repeated --set collection,
+/// whitelisted boolean flags.
 struct Args {
     positional: Vec<String>,
     options: Vec<(String, String)>,
     sets: Vec<(String, String)>,
+    flags: Vec<String>,
 }
 
 impl Args {
@@ -88,6 +111,7 @@ impl Args {
         let mut positional = Vec::new();
         let mut options = Vec::new();
         let mut sets = Vec::new();
+        let mut flags = Vec::new();
         let mut it = argv.iter().peekable();
         while let Some(a) = it.next() {
             if a == "--help" || a == "-h" {
@@ -97,6 +121,8 @@ impl Args {
                 logging::set_level(Level::Debug);
             } else if a == "-q" {
                 logging::set_level(Level::Warn);
+            } else if let Some(name) = a.strip_prefix("--").filter(|n| BOOL_FLAGS.contains(n)) {
+                flags.push(name.to_string());
             } else if a == "--set" {
                 let kv = it
                     .next()
@@ -118,7 +144,13 @@ impl Args {
             positional,
             options,
             sets,
+            flags,
         })
+    }
+
+    /// Whether a whitelisted boolean flag (e.g. `--quick`) was passed.
+    fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
     }
 
     fn opt(&self, name: &str) -> Option<&str> {
@@ -482,6 +514,111 @@ fn cmd_smoke(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Coordinator-only scale simulation: the real event loop, scheduler
+/// fast paths and arena-backed aggregation at up to 10^6 clients, with
+/// synthetic local training (no learner, no dataset).
+fn cmd_sim(args: &Args) -> Result<()> {
+    let format = args.opt_or("format", "table");
+    ensure!(
+        format == "table" || format == "json",
+        "unknown --format {format:?} (table|json)"
+    );
+    let sched_spec = args.opt_or("scheduler", "oldest");
+    let scheduler = SchedulerPolicy::parse(sched_spec)
+        .ok_or_else(|| anyhow!("unknown scheduler {sched_spec:?}"))?;
+    let het_spec = args.opt_or("heterogeneity", "uniform:4");
+    let heterogeneity = HeterogeneityProfile::parse(het_spec)
+        .ok_or_else(|| anyhow!("unknown heterogeneity {het_spec:?}"))?;
+    let cfg = ScaleSimConfig {
+        clients: args.opt_or("clients", "100000").parse()?,
+        iterations: args.opt_or("iterations", "0").parse()?,
+        params: args.opt_or("params", "64").parse()?,
+        seed: args.opt_or("seed", "42").parse()?,
+        scheduler,
+        aggregation: args.opt("aggregation").map(str::to_string),
+        gamma: args.opt_or("gamma", "0.2").parse()?,
+        heterogeneity,
+        ..ScaleSimConfig::default()
+    };
+    let report = run_scale_sim(&cfg)?;
+    if format == "json" {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        println!("{}", report.table());
+    }
+    Ok(())
+}
+
+/// Pinned-seed perf suite -> `BENCH_<date>.json`, with the optional
+/// `--check <baseline>` regression gate CI runs.
+fn cmd_bench(args: &Args) -> Result<()> {
+    let format = args.opt_or("format", "table");
+    ensure!(
+        format == "table" || format == "json",
+        "unknown --format {format:?} (table|json)"
+    );
+    let factor: f64 = args
+        .opt_or("factor", "2.0")
+        .parse()
+        .map_err(|_| anyhow!("--factor expects a number"))?;
+    let cfg = perf::BenchConfig {
+        quick: args.flag("quick"),
+        suite: args.opt("suite").map(str::to_string),
+    };
+    // Load and schema-check the baseline up front so a bad path, bad
+    // JSON or wrong-schema file fails before the (slow) suites run —
+    // and before anything is written to --out.
+    let baseline = match args.opt("check") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading baseline {path}"))?;
+            let j = json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+            let schema = j.get("schema").and_then(Json::as_str);
+            ensure!(
+                schema == Some(perf::BENCH_SCHEMA),
+                "baseline {path}: schema {schema:?} != {:?} — re-record it",
+                perf::BENCH_SCHEMA
+            );
+            Some((path, j))
+        }
+        None => None,
+    };
+    let record = perf::run(&cfg)?;
+    let out_dir = args.opt_or("out", "results");
+    std::fs::create_dir_all(out_dir)?;
+    // Name the file by the record's own date stamp so the two can
+    // never disagree across a UTC midnight boundary.
+    let date = record
+        .get("date")
+        .and_then(Json::as_str)
+        .unwrap_or("undated")
+        .to_string();
+    let path = format!("{out_dir}/BENCH_{date}.json");
+    std::fs::write(&path, record.to_string_pretty())?;
+    if format == "json" {
+        println!("{}", record.to_string_pretty());
+    } else {
+        perf::print_table(&record);
+    }
+    // Status lines go to stderr: `--format json` stdout stays parseable.
+    eprintln!("wrote {path}");
+    if let Some((baseline_path, baseline)) = baseline {
+        // An unfiltered run must measure every baseline suite; with a
+        // --suite filter only the measured suites are compared.
+        let strict = cfg.suite.is_none();
+        let (failures, compared) = perf::check(&record, &baseline, factor, strict)?;
+        if failures.is_empty() {
+            eprintln!("bench check: {compared} case(s) within {factor}x of {baseline_path}");
+        } else {
+            for f in &failures {
+                eprintln!("bench check: {f}");
+            }
+            bail!("{} case(s) regressed beyond {factor}x vs {baseline_path}", failures.len());
+        }
+    }
+    Ok(())
+}
+
 /// TCP deployment leader: same Algorithm-1 logic as the simulator, over
 /// real sockets (rust/src/net/).
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -552,6 +689,8 @@ fn main() -> Result<()> {
         "timeline" => cmd_timeline(&args),
         "inspect" => cmd_inspect(&args),
         "smoke" => cmd_smoke(&args),
+        "sim" => cmd_sim(&args),
+        "bench" => cmd_bench(&args),
         "serve" => cmd_serve(&args),
         "join" => cmd_join(&args),
         "help" => {

@@ -39,6 +39,9 @@ pub struct RunResult {
     /// Uploads lost in transit, per client (dropout-bias accounting;
     /// empty or all-zero on reliable channels).
     pub lost_per_client: Vec<u64>,
+    /// Mean client-reported local training loss across the run (0 for
+    /// engines that do not report it, e.g. SFL).
+    pub mean_train_loss: f64,
     /// Virtual completion time.
     pub total_ticks: Ticks,
     /// Real wall-clock spent (training + eval dispatches).
@@ -57,6 +60,7 @@ impl RunResult {
             fairness: 1.0,
             lost_uploads: 0,
             lost_per_client: Vec::new(),
+            mean_train_loss: 0.0,
             total_ticks: 0,
             wallclock_secs: 0.0,
         }
@@ -94,6 +98,7 @@ impl RunResult {
             .set("mean_staleness", Json::Float(self.mean_staleness))
             .set("fairness", Json::Float(self.fairness))
             .set("lost_uploads", Json::Int(self.lost_uploads as i64))
+            .set("mean_train_loss", Json::Float(self.mean_train_loss))
             .set("total_ticks", Json::Int(self.total_ticks as i64));
         o
     }

@@ -2,4 +2,7 @@
 
 mod params;
 
-pub use params::{ParamSet, Tensor, TensorSpec};
+pub use params::{
+    axpy_flat, l2_accumulate, lerp_flat, ParamArena, ParamLayout, ParamSet, SlotId, Tensor,
+    TensorSpec,
+};

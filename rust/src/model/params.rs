@@ -3,6 +3,20 @@
 //! The manifest fixes an *ordered* list of named tensors; `ParamSet` is the
 //! host representation that flows between the PJRT runtime (as literals /
 //! device buffers) and the coordinator (aggregation, distance metrics).
+//!
+//! Two storage forms share one arithmetic:
+//!
+//! * [`ParamSet`] — the interchange form (named tensors, one `Vec<f32>`
+//!   each) used by learners, the PJRT seam and run records.
+//! * [`ParamArena`] — the hot-path form: a structure-of-arrays pool of
+//!   parameter vectors over one [`ParamLayout`], flat and contiguous,
+//!   with freelist slot recycling so steady-state aggregation performs
+//!   **zero** per-update heap allocation.
+//!
+//! All weighted-average arithmetic bottoms out in the flat kernels
+//! ([`lerp_flat`], [`axpy_flat`], [`l2_accumulate`]); the `ParamSet`
+//! methods are per-tensor wrappers over the same code, so the two forms
+//! are bit-identical by construction (asserted in `tests/properties.rs`).
 
 use std::fmt;
 
@@ -55,6 +69,42 @@ impl Tensor {
     }
 }
 
+// ------------------------------------------------------- flat kernels
+
+/// In-place convex combination over flat buffers:
+/// `global[k] = beta*global[k] + (1-beta)*local[k]` — the eq. (3) server
+/// aggregation kernel every storage form shares.
+pub fn lerp_flat(global: &mut [f32], local: &[f32], beta: f32) {
+    assert_eq!(global.len(), local.len(), "lerp over mismatched buffers");
+    let b = beta;
+    let a = 1.0 - beta;
+    // Simple indexed loop: LLVM auto-vectorizes this cleanly.
+    for (x, y) in global.iter_mut().zip(local) {
+        *x = b * *x + a * *y;
+    }
+}
+
+/// Weighted accumulation over flat buffers: `acc[k] += w * other[k]`
+/// (the FedAvg reduction kernel).
+pub fn axpy_flat(acc: &mut [f32], other: &[f32], w: f32) {
+    assert_eq!(acc.len(), other.len(), "axpy over mismatched buffers");
+    for (x, y) in acc.iter_mut().zip(other) {
+        *x += w * *y;
+    }
+}
+
+/// Accumulate the squared L2 distance of two flat buffers into `acc`
+/// (element-sequential f64 accumulation, so callers chaining several
+/// tensor ranges through one accumulator reproduce the exact rounding
+/// of a single pass over the concatenated data).
+pub fn l2_accumulate(acc: &mut f64, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "distance over mismatched buffers");
+    for (x, y) in a.iter().zip(b) {
+        let d = (*x - *y) as f64;
+        *acc += d * d;
+    }
+}
+
 /// An ordered set of parameter tensors (the manifest contract).
 #[derive(Clone, PartialEq, Default)]
 pub struct ParamSet {
@@ -89,16 +139,13 @@ impl ParamSet {
     /// In-place convex combination: `self = beta*self + (1-beta)*other`
     /// — the eq.(3) server aggregation (native hot path; see
     /// coordinator::aggregation for the PJRT/Pallas alternative).
+    /// Per-tensor wrapper over [`lerp_flat`], so this path and the
+    /// arena's flat path are the same arithmetic.
     pub fn lerp_inplace(&mut self, other: &ParamSet, beta: f32) {
         assert_eq!(self.tensors.len(), other.tensors.len());
-        let b = beta;
-        let a = 1.0 - beta;
         for (t, o) in self.tensors.iter_mut().zip(&other.tensors) {
             debug_assert_eq!(t.spec, o.spec);
-            // Simple indexed loop: LLVM auto-vectorizes this cleanly.
-            for (x, y) in t.data.iter_mut().zip(&o.data) {
-                *x = b * *x + a * *y;
-            }
+            lerp_flat(&mut t.data, &o.data, beta);
         }
     }
 
@@ -106,9 +153,7 @@ impl ParamSet {
     pub fn axpy_inplace(&mut self, other: &ParamSet, w: f32) {
         assert_eq!(self.tensors.len(), other.tensors.len());
         for (t, o) in self.tensors.iter_mut().zip(&other.tensors) {
-            for (x, y) in t.data.iter_mut().zip(&o.data) {
-                *x += w * *y;
-            }
+            axpy_flat(&mut t.data, &o.data, w);
         }
     }
 
@@ -125,12 +170,73 @@ impl ParamSet {
     pub fn l2_distance(&self, other: &ParamSet) -> f64 {
         let mut acc = 0.0f64;
         for (t, o) in self.tensors.iter().zip(&other.tensors) {
-            for (x, y) in t.data.iter().zip(&o.data) {
-                let d = (*x - *y) as f64;
-                acc += d * d;
-            }
+            l2_accumulate(&mut acc, &t.data, &o.data);
         }
         acc.sqrt()
+    }
+
+    /// In-place convex combination against a flat buffer laid out in
+    /// manifest order — the arena-path twin of
+    /// [`ParamSet::lerp_inplace`], bit-identical because both run every
+    /// element through [`lerp_flat`]. Keeps the offset walk here so the
+    /// flat layout is defined in exactly one module.
+    pub fn lerp_inplace_flat(&mut self, flat: &[f32], beta: f32) {
+        assert_eq!(flat.len(), self.numel(), "flat buffer length mismatch");
+        let mut off = 0;
+        for t in &mut self.tensors {
+            let n = t.data.len();
+            lerp_flat(&mut t.data, &flat[off..off + n], beta);
+            off += n;
+        }
+    }
+
+    /// L2 distance between this set and a flat buffer laid out in
+    /// manifest order — the arena-path twin of [`ParamSet::l2_distance`],
+    /// bit-identical because both chain [`l2_accumulate`] through one
+    /// accumulator in tensor order.
+    pub fn l2_distance_flat(&self, flat: &[f32]) -> f64 {
+        assert_eq!(flat.len(), self.numel(), "flat buffer length mismatch");
+        let mut acc = 0.0f64;
+        let mut off = 0;
+        for t in &self.tensors {
+            let n = t.data.len();
+            l2_accumulate(&mut acc, &t.data, &flat[off..off + n]);
+            off += n;
+        }
+        acc.sqrt()
+    }
+
+    /// Copy every tensor, in manifest order, into one contiguous flat
+    /// buffer (`dst.len()` must equal [`ParamSet::numel`]).
+    pub fn copy_to_flat(&self, dst: &mut [f32]) {
+        assert_eq!(dst.len(), self.numel(), "flat buffer length mismatch");
+        let mut off = 0;
+        for t in &self.tensors {
+            let n = t.data.len();
+            dst[off..off + n].copy_from_slice(&t.data);
+            off += n;
+        }
+    }
+
+    /// Overwrite every tensor from one contiguous flat buffer in
+    /// manifest order (the inverse of [`ParamSet::copy_to_flat`]).
+    pub fn copy_from_flat(&mut self, src: &[f32]) {
+        assert_eq!(src.len(), self.numel(), "flat buffer length mismatch");
+        let mut off = 0;
+        for t in &mut self.tensors {
+            let n = t.data.len();
+            t.data.copy_from_slice(&src[off..off + n]);
+            off += n;
+        }
+    }
+
+    /// Build a set over `layout`'s specs from a flat buffer in manifest
+    /// order.
+    pub fn from_flat(layout: &ParamLayout, src: &[f32]) -> ParamSet {
+        assert_eq!(src.len(), layout.numel(), "flat buffer length mismatch");
+        let mut p = ParamSet::zeros(layout.specs());
+        p.copy_from_flat(src);
+        p
     }
 
     /// L2 norm.
@@ -160,6 +266,154 @@ impl ParamSet {
         self.tensors
             .iter()
             .all(|t| t.data.iter().all(|x| x.is_finite()))
+    }
+}
+
+// ----------------------------------------------------- arena (SoA pool)
+
+/// Flat memory layout of a parameter set: the ordered tensor specs plus
+/// each tensor's offset into one contiguous f32 buffer. Shared by every
+/// slot of a [`ParamArena`] (structure-of-arrays: one layout, many
+/// parameter vectors).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamLayout {
+    specs: Vec<TensorSpec>,
+    offsets: Vec<usize>,
+    numel: usize,
+}
+
+impl ParamLayout {
+    /// A layout over the given ordered specs.
+    pub fn new(specs: Vec<TensorSpec>) -> ParamLayout {
+        let mut offsets = Vec::with_capacity(specs.len());
+        let mut numel = 0;
+        for s in &specs {
+            offsets.push(numel);
+            numel += s.numel();
+        }
+        ParamLayout {
+            specs,
+            offsets,
+            numel,
+        }
+    }
+
+    /// The layout of an existing parameter set.
+    pub fn of(set: &ParamSet) -> ParamLayout {
+        ParamLayout::new(set.specs())
+    }
+
+    /// Total scalar element count across all tensors.
+    pub fn numel(&self) -> usize {
+        self.numel
+    }
+
+    /// The ordered tensor specs.
+    pub fn specs(&self) -> &[TensorSpec] {
+        &self.specs
+    }
+
+    /// Flat element range of tensor `i`.
+    pub fn range(&self, i: usize) -> std::ops::Range<usize> {
+        let start = self.offsets[i];
+        start..start + self.specs[i].numel()
+    }
+}
+
+/// Handle to one parameter vector inside a [`ParamArena`]. Plain index,
+/// `Copy`; validity is the owner's responsibility (freed slots are
+/// caught by the arena's in-use tracking).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotId(u32);
+
+/// Arena-backed, structure-of-arrays parameter store: `slots × numel`
+/// f32 values in one contiguous buffer, all slots sharing one
+/// [`ParamLayout`]. `alloc`/`free` recycle slots through a freelist, so
+/// a steady-state aggregation loop (allocate local, aggregate, free)
+/// performs no heap allocation after warm-up — the requirement for the
+/// million-client hot path (`repro sim`, `coordinator::scale`).
+#[derive(Debug)]
+pub struct ParamArena {
+    layout: ParamLayout,
+    data: Vec<f32>,
+    free: Vec<u32>,
+    in_use: Vec<bool>,
+}
+
+impl ParamArena {
+    /// An empty arena over `layout` (slots are created on first alloc).
+    pub fn new(layout: ParamLayout) -> ParamArena {
+        ParamArena {
+            layout,
+            data: Vec::new(),
+            free: Vec::new(),
+            in_use: Vec::new(),
+        }
+    }
+
+    /// The shared layout of every slot.
+    pub fn layout(&self) -> &ParamLayout {
+        &self.layout
+    }
+
+    /// Total slots ever created (high-water mark of concurrent use).
+    pub fn slots(&self) -> usize {
+        self.in_use.len()
+    }
+
+    /// Slots currently allocated.
+    pub fn live(&self) -> usize {
+        self.in_use.len() - self.free.len()
+    }
+
+    /// Allocate a slot. Reuses a freed slot when one exists (contents
+    /// are then whatever the previous occupant left — overwrite before
+    /// reading); grows the pool otherwise.
+    pub fn alloc(&mut self) -> SlotId {
+        if let Some(idx) = self.free.pop() {
+            self.in_use[idx as usize] = true;
+            return SlotId(idx);
+        }
+        let idx = self.in_use.len() as u32;
+        self.data.resize(self.data.len() + self.layout.numel(), 0.0);
+        self.in_use.push(true);
+        SlotId(idx)
+    }
+
+    /// Allocate a slot holding a flat copy of `set` (manifest order).
+    pub fn alloc_from_set(&mut self, set: &ParamSet) -> SlotId {
+        let id = self.alloc();
+        set.copy_to_flat(self.get_mut(id));
+        id
+    }
+
+    /// Return a slot to the freelist. Panics on double-free.
+    pub fn free(&mut self, id: SlotId) {
+        assert!(self.in_use[id.0 as usize], "double free of slot {id:?}");
+        self.in_use[id.0 as usize] = false;
+        self.free.push(id.0);
+    }
+
+    /// The flat parameter vector of a live slot.
+    pub fn get(&self, id: SlotId) -> &[f32] {
+        assert!(self.in_use[id.0 as usize], "read of freed slot {id:?}");
+        let n = self.layout.numel();
+        let start = id.0 as usize * n;
+        &self.data[start..start + n]
+    }
+
+    /// Mutable access to the flat parameter vector of a live slot.
+    pub fn get_mut(&mut self, id: SlotId) -> &mut [f32] {
+        assert!(self.in_use[id.0 as usize], "write to freed slot {id:?}");
+        let n = self.layout.numel();
+        let start = id.0 as usize * n;
+        &mut self.data[start..start + n]
+    }
+
+    /// Materialize a slot as a [`ParamSet`] (diagnostics/interchange —
+    /// allocates, so keep it off the hot path).
+    pub fn to_set(&self, id: SlotId) -> ParamSet {
+        ParamSet::from_flat(&self.layout, self.get(id))
     }
 }
 
@@ -246,5 +500,87 @@ mod tests {
     #[should_panic]
     fn from_data_checks_len() {
         Tensor::from_data(spec("x", &[3]), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn layout_offsets_and_ranges() {
+        let l = ParamLayout::new(vec![spec("a", &[2, 3]), spec("b", &[4])]);
+        assert_eq!(l.numel(), 10);
+        assert_eq!(l.range(0), 0..6);
+        assert_eq!(l.range(1), 6..10);
+        assert_eq!(l.specs().len(), 2);
+    }
+
+    #[test]
+    fn flat_copy_roundtrips() {
+        let p = pset(&[&[1.0, 2.0, 3.0], &[4.0, 5.0]]);
+        let layout = ParamLayout::of(&p);
+        let mut flat = vec![0.0f32; layout.numel()];
+        p.copy_to_flat(&mut flat);
+        assert_eq!(flat, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        let back = ParamSet::from_flat(&layout, &flat);
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn flat_kernels_match_tensor_paths_bitwise() {
+        let g = pset(&[&[1.0, -2.5, 0.125], &[3.0, 7.5]]);
+        let l = pset(&[&[0.3, 4.0, -1.0], &[-2.0, 0.01]]);
+        let layout = ParamLayout::of(&g);
+        let mut gf = vec![0.0f32; layout.numel()];
+        let mut lf = vec![0.0f32; layout.numel()];
+        g.copy_to_flat(&mut gf);
+        l.copy_to_flat(&mut lf);
+        for &beta in &[0.0f32, 0.37, 0.93, 1.0] {
+            let mut a = g.clone();
+            a.lerp_inplace(&l, beta);
+            let mut b = gf.clone();
+            lerp_flat(&mut b, &lf, beta);
+            let mut af = vec![0.0f32; layout.numel()];
+            a.copy_to_flat(&mut af);
+            assert_eq!(af, b, "beta={beta}");
+            let mut c = g.clone();
+            c.lerp_inplace_flat(&lf, beta);
+            assert_eq!(c, a, "beta={beta} (flat-local twin)");
+        }
+        assert_eq!(g.l2_distance(&l), g.l2_distance_flat(&lf));
+    }
+
+    #[test]
+    fn arena_recycles_slots_without_growth() {
+        let layout = ParamLayout::new(vec![spec("w", &[4])]);
+        let mut a = ParamArena::new(layout);
+        let s0 = a.alloc();
+        a.get_mut(s0).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        let s1 = a.alloc();
+        assert_eq!(a.slots(), 2);
+        assert_eq!(a.live(), 2);
+        a.free(s0);
+        assert_eq!(a.live(), 1);
+        // The freed slot is reused: pool does not grow.
+        let s2 = a.alloc();
+        assert_eq!(s2, s0);
+        assert_eq!(a.slots(), 2);
+        a.free(s1);
+        a.free(s2);
+        assert_eq!(a.live(), 0);
+    }
+
+    #[test]
+    fn arena_copies_sets_in_and_out() {
+        let p = pset(&[&[1.0, 2.0], &[3.0]]);
+        let mut a = ParamArena::new(ParamLayout::of(&p));
+        let s = a.alloc_from_set(&p);
+        assert_eq!(a.get(s), &[1.0, 2.0, 3.0]);
+        assert_eq!(a.to_set(s), p);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arena_rejects_double_free() {
+        let mut a = ParamArena::new(ParamLayout::new(vec![spec("w", &[2])]));
+        let s = a.alloc();
+        a.free(s);
+        a.free(s);
     }
 }

@@ -1,0 +1,529 @@
+//! The pinned-seed performance suite behind `repro bench`: the repo's
+//! perf trajectory as machine-readable `BENCH_<date>.json` records.
+//!
+//! Four suites cover the hot paths this crate optimizes:
+//!
+//! | Suite         | Cases                              | What it measures |
+//! |---------------|------------------------------------|------------------|
+//! | `aggregation` | `lerp_<n>`, `arena_cycle_<n>`      | eq.-(3) flat kernel throughput; arena alloc/copy/free recycling |
+//! | `scheduler`   | `<policy>_<m>`                     | request+grant drain of the heap/cursor fast paths |
+//! | `event_loop`  | `sim_<m>_clients`                  | full coordinator event loop (`coordinator::scale`), ns per event |
+//! | `end_to_end`  | `grid_2x_gamma`                    | tiny learner-driven grid through the `PlanRunner` |
+//!
+//! The record schema (`csmaafl-bench-v1`) is
+//! `suites → <suite> → <case> → {iters, ns_per_iter, clients}` plus
+//! top-level `schema`, `date` and `quick` fields. Case *names and
+//! inputs* are pinned and deterministic; the measured `ns_per_iter`
+//! values are, of course, machine-dependent. [`check`] compares a fresh
+//! run against a stored baseline and reports every case slower than
+//! `factor ×` its baseline — the CI `perf-smoke` gate
+//! (see `docs/BENCHMARKS.md`).
+
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::{run_scale_sim, ScaleSimConfig, SchedulerPolicy, UploadScheduler};
+use crate::experiment::{Plan, PlanRunner};
+use crate::model::{lerp_flat, ParamArena, ParamLayout, ParamSet, TensorSpec};
+use crate::session::{LearnerKind, Session};
+use crate::util::bench::Bencher;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Schema tag every bench record carries (bumped on layout changes).
+pub const BENCH_SCHEMA: &str = "csmaafl-bench-v1";
+
+/// The suite names, in run order (the `--suite` filter vocabulary).
+pub const SUITES: [&str; 4] = ["aggregation", "scheduler", "event_loop", "end_to_end"];
+
+/// How to run the suite.
+#[derive(Debug, Clone, Default)]
+pub struct BenchConfig {
+    /// Shrink measurement windows and problem sizes (the CI setting).
+    pub quick: bool,
+    /// Run only this suite (must be one of [`SUITES`]); `None` = all.
+    pub suite: Option<String>,
+}
+
+/// One measured case, pre-JSON.
+struct Case {
+    name: String,
+    iters: u64,
+    ns_per_iter: f64,
+    clients: u64,
+}
+
+fn bencher(group: &str, quick: bool) -> Bencher {
+    if quick {
+        Bencher::new(group).with_window(Duration::from_millis(40), 200)
+    } else {
+        Bencher::new(group).with_window(Duration::from_millis(250), 2000)
+    }
+}
+
+fn random_flat(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    (0..n).map(|_| r.normal()).collect()
+}
+
+fn suite_aggregation(quick: bool) -> Vec<Case> {
+    let mut out = Vec::new();
+    let mut b = bencher("aggregation", quick);
+    // 5.4k = the mnist_small CNN, 431k ≈ the paper's full CNN.
+    for &n in &[5_370usize, 431_080] {
+        let mut acc = random_flat(n, 1);
+        let local = random_flat(n, 2);
+        let r = b.bench(&format!("lerp_{n}"), || {
+            lerp_flat(&mut acc, &local, 0.9);
+        });
+        out.push(Case {
+            name: format!("lerp_{n}"),
+            iters: r.iters,
+            ns_per_iter: r.mean_ns,
+            clients: 0,
+        });
+    }
+    // Steady-state arena recycling: alloc + flat copy-in + free.
+    let n = 5_370usize;
+    let spec = TensorSpec {
+        name: "w".into(),
+        shape: vec![n],
+    };
+    let layout = ParamLayout::new(vec![spec]);
+    let src = ParamSet::from_flat(&layout, &random_flat(n, 3));
+    let mut arena = ParamArena::new(layout);
+    let r = b.bench(&format!("arena_cycle_{n}"), || {
+        let slot = arena.alloc_from_set(&src);
+        arena.free(slot);
+    });
+    out.push(Case {
+        name: format!("arena_cycle_{n}"),
+        iters: r.iters,
+        ns_per_iter: r.mean_ns,
+        clients: 0,
+    });
+    out
+}
+
+fn suite_scheduler(quick: bool) -> Vec<Case> {
+    let mut out = Vec::new();
+    let mut b = bencher("scheduler", quick);
+    let mut cases: Vec<(SchedulerPolicy, usize)> = vec![
+        (SchedulerPolicy::OldestModelFirst, 1_000),
+        (SchedulerPolicy::OldestModelFirst, 100_000),
+        (SchedulerPolicy::Fifo, 100_000),
+        (SchedulerPolicy::RoundRobin, 100_000),
+    ];
+    if !quick {
+        cases.push((SchedulerPolicy::OldestModelFirst, 1_000_000));
+    }
+    for (policy, m) in cases {
+        let name = format!("{}_{m}", policy.name());
+        let r = b.bench(&name, || {
+            let mut s = UploadScheduler::new(policy, m);
+            for c in 0..m {
+                s.request(c, c as u64);
+            }
+            while s.grant().is_some() {}
+        });
+        out.push(Case {
+            name,
+            iters: r.iters,
+            ns_per_iter: r.mean_ns,
+            clients: m as u64,
+        });
+    }
+    out
+}
+
+fn suite_event_loop(quick: bool) -> Result<Vec<Case>> {
+    let clients = if quick { 10_000 } else { 50_000 };
+    let cfg = ScaleSimConfig {
+        clients,
+        iterations: clients as u64,
+        params: 32,
+        ..ScaleSimConfig::default()
+    };
+    let r = run_scale_sim(&cfg)?;
+    Ok(vec![Case {
+        name: format!("sim_{clients}_clients"),
+        iters: r.events,
+        ns_per_iter: r.wall_secs * 1e9 / r.events.max(1) as f64,
+        clients: clients as u64,
+    }])
+}
+
+fn suite_end_to_end(quick: bool) -> Result<Vec<Case>> {
+    let cfg = RunConfig {
+        clients: 4,
+        samples_per_client: 20,
+        test_samples: 50,
+        local_steps: 2,
+        max_slots: if quick { 1.0 } else { 2.0 },
+        ..RunConfig::default()
+    };
+    let session = Session::new(cfg, LearnerKind::Linear, "artifacts")?;
+    let plan = Plan::new().axis("gamma", vec!["0.1".to_string(), "0.4".to_string()]);
+    let t0 = Instant::now();
+    let runs = PlanRunner::new(&session).jobs(2).run(&plan)?;
+    let ns = t0.elapsed().as_nanos() as f64;
+    ensure!(runs.len() == 2, "grid produced {} runs", runs.len());
+    Ok(vec![Case {
+        name: "grid_2x_gamma".into(),
+        iters: runs.len() as u64,
+        ns_per_iter: ns / runs.len() as f64,
+        clients: 4,
+    }])
+}
+
+fn cases_json(cases: Vec<Case>) -> Json {
+    let mut o = Json::object();
+    for c in cases {
+        let mut cj = Json::object();
+        cj.set("iters", Json::Int(c.iters as i64))
+            .set("ns_per_iter", Json::Float(c.ns_per_iter))
+            .set("clients", Json::Int(c.clients as i64));
+        o.set(&c.name, cj);
+    }
+    o
+}
+
+/// Run the selected suites and return the full bench record.
+pub fn run(cfg: &BenchConfig) -> Result<Json> {
+    if let Some(s) = &cfg.suite {
+        ensure!(
+            SUITES.contains(&s.as_str()),
+            "unknown suite {s:?} (aggregation|scheduler|event_loop|end_to_end)"
+        );
+    }
+    let selected = |name: &str| match cfg.suite.as_deref() {
+        Some(s) => s == name,
+        None => true,
+    };
+    let mut suites = Json::object();
+    if selected("aggregation") {
+        suites.set("aggregation", cases_json(suite_aggregation(cfg.quick)));
+    }
+    if selected("scheduler") {
+        suites.set("scheduler", cases_json(suite_scheduler(cfg.quick)));
+    }
+    if selected("event_loop") {
+        suites.set("event_loop", cases_json(suite_event_loop(cfg.quick)?));
+    }
+    if selected("end_to_end") {
+        suites.set("end_to_end", cases_json(suite_end_to_end(cfg.quick)?));
+    }
+    let mut root = Json::object();
+    root.set("schema", Json::Str(BENCH_SCHEMA.into()))
+        .set("date", Json::Str(utc_date_string()))
+        .set("quick", Json::Bool(cfg.quick))
+        .set("suites", suites);
+    Ok(root)
+}
+
+/// Print a bench record as an aligned table (the `--format table` view).
+pub fn print_table(record: &Json) {
+    println!(
+        "{:<13} {:<22} {:>10} {:>16} {:>10}",
+        "suite", "case", "iters", "ns/iter", "clients"
+    );
+    let Some(suites) = record.get("suites").and_then(Json::as_object) else {
+        return;
+    };
+    for (sname, cases) in suites {
+        let Some(cases) = cases.as_object() else {
+            continue;
+        };
+        for (cname, c) in cases {
+            println!(
+                "{:<13} {:<22} {:>10} {:>16.0} {:>10}",
+                sname,
+                cname,
+                c.get("iters").and_then(Json::as_i64).unwrap_or(0),
+                c.get("ns_per_iter").and_then(Json::as_f64).unwrap_or(0.0),
+                c.get("clients").and_then(Json::as_i64).unwrap_or(0)
+            );
+        }
+    }
+}
+
+/// Compare `current` against `baseline`. Returns the list of failures
+/// (regressions beyond `factor ×` the baseline `ns_per_iter`, plus
+/// baseline cases the current run should have measured but did not)
+/// and the number of cases compared.
+///
+/// Comparison semantics:
+/// - When both records declare a `quick` flag and they differ, the
+///   comparison is refused: quick and full mode measure different case
+///   names (problem sizes), so every mismatch would read as a
+///   regression.
+/// - A baseline *suite* entirely absent from the current record fails
+///   under `strict_suites` (the unfiltered CI gate) and is skipped
+///   otherwise (a `--suite`-filtered local check).
+/// - Within a measured suite, a baseline *case* the run did not emit
+///   is always a failure (a vanished or renamed case must not pass
+///   silently).
+/// - Cases new relative to the baseline are ignored — they enter the
+///   gate when the baseline is re-recorded.
+pub fn check(
+    current: &Json,
+    baseline: &Json,
+    factor: f64,
+    strict_suites: bool,
+) -> Result<(Vec<String>, usize)> {
+    ensure!(factor > 0.0, "--factor must be > 0, got {factor}");
+    let schema = baseline.get("schema").and_then(Json::as_str);
+    ensure!(
+        schema == Some(BENCH_SCHEMA),
+        "baseline schema {schema:?} != {BENCH_SCHEMA:?} — re-record the baseline"
+    );
+    let cq = current.get("quick").and_then(Json::as_bool);
+    let bq = baseline.get("quick").and_then(Json::as_bool);
+    if let (Some(c), Some(b)) = (cq, bq) {
+        ensure!(
+            c == b,
+            "bench mode mismatch: baseline quick={b}, this run quick={c} — \
+             quick and full mode measure different cases, compare like with like"
+        );
+    }
+    let bsuites = baseline
+        .get("suites")
+        .and_then(Json::as_object)
+        .ok_or_else(|| anyhow!("baseline has no suites object"))?;
+    let csuites = current
+        .get("suites")
+        .and_then(Json::as_object)
+        .ok_or_else(|| anyhow!("current record has no suites object"))?;
+    let mut failures = Vec::new();
+    let mut compared = 0usize;
+    for (sname, bcases) in bsuites {
+        // A malformed baseline must disarm the gate *loudly*, never by
+        // silently comparing zero cases.
+        let Some(bcases) = bcases.as_object() else {
+            bail!("baseline suite {sname:?} is not an object — re-record the baseline");
+        };
+        let Some(ccases) = csuites.get(sname) else {
+            if strict_suites {
+                failures.push(format!("{sname}: suite in baseline but not measured"));
+            }
+            continue;
+        };
+        for (cname, bcase) in bcases {
+            let Some(base_ns) = bcase.get("ns_per_iter").and_then(Json::as_f64) else {
+                bail!(
+                    "baseline case {sname}/{cname} has no numeric ns_per_iter — \
+                     re-record the baseline"
+                );
+            };
+            let cur_ns = ccases
+                .get(cname)
+                .and_then(|c| c.get("ns_per_iter"))
+                .and_then(Json::as_f64);
+            match cur_ns {
+                None => failures.push(format!(
+                    "{sname}/{cname}: in baseline but not measured by this run"
+                )),
+                Some(cur) => {
+                    compared += 1;
+                    if cur > factor * base_ns {
+                        failures.push(format!(
+                            "{sname}/{cname}: {cur:.0} ns/iter vs baseline {base_ns:.0} \
+                             (> {factor}x)"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    ensure!(
+        compared > 0 || !failures.is_empty(),
+        "no comparable cases between this run and the baseline \
+         (--suite filter too narrow, or empty baseline) — nothing was gated"
+    );
+    Ok((failures, compared))
+}
+
+/// Today's UTC date as `YYYY-MM-DD` (names the `BENCH_<date>.json`
+/// record; no chrono — the crate is dependency-minimal).
+pub fn utc_date_string() -> String {
+    let secs = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let (y, m, d) = civil_from_days((secs / 86_400) as i64);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// Days-since-epoch → (year, month, day), Howard Hinnant's civil
+/// algorithm. The `era` division is written so truncating integer
+/// division behaves like floor for negative inputs; every later
+/// quantity is non-negative.
+fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719_468;
+    let era = if z >= 0 { z } else { z - 146_096 } / 146_097;
+    let doe = z - era * 146_097; // [0, 146096]
+    let yoe = (doe - doe / 1_460 + doe / 36_524 - doe / 146_096) / 365; // [0, 399]
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100); // [0, 365]
+    let mp = (5 * doy + 2) / 153; // [0, 11]
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32; // [1, 31]
+    let m = (if mp < 10 { mp + 3 } else { mp - 9 }) as u32;
+    let y = yoe + era * 400;
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn civil_dates_match_known_values() {
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(59), (1970, 3, 1));
+        assert_eq!(civil_from_days(789), (1972, 2, 29));
+        assert_eq!(civil_from_days(11_016), (2000, 2, 29));
+        assert_eq!(civil_from_days(18_321), (2020, 2, 29));
+        assert_eq!(civil_from_days(19_723), (2024, 1, 1));
+        assert_eq!(civil_from_days(20_665), (2026, 7, 31));
+    }
+
+    #[test]
+    fn date_string_shape() {
+        let s = utc_date_string();
+        assert_eq!(s.len(), 10, "{s}");
+        assert_eq!(s.as_bytes()[4], b'-');
+        assert_eq!(s.as_bytes()[7], b'-');
+    }
+
+    fn record(suite: &str, case: &str, ns: f64) -> Json {
+        let mut cj = Json::object();
+        cj.set("iters", Json::Int(10))
+            .set("ns_per_iter", Json::Float(ns))
+            .set("clients", Json::Int(0));
+        let mut cases = Json::object();
+        cases.set(case, cj);
+        let mut suites = Json::object();
+        suites.set(suite, cases);
+        let mut root = Json::object();
+        root.set("schema", Json::Str(BENCH_SCHEMA.into()))
+            .set("date", Json::Str("2026-01-01".into()))
+            .set("quick", Json::Bool(true))
+            .set("suites", suites);
+        root
+    }
+
+    #[test]
+    fn check_passes_within_factor_and_fails_beyond() {
+        let baseline = record("aggregation", "lerp_8", 1000.0);
+        let same = record("aggregation", "lerp_8", 1500.0);
+        let (fails, compared) = check(&same, &baseline, 2.0, true).unwrap();
+        assert!(fails.is_empty(), "{fails:?}");
+        assert_eq!(compared, 1);
+        let slow = record("aggregation", "lerp_8", 2500.0);
+        let (fails, _) = check(&slow, &baseline, 2.0, true).unwrap();
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].contains("lerp_8"), "{fails:?}");
+    }
+
+    #[test]
+    fn check_flags_missing_cases_and_ignores_new_ones() {
+        let baseline = record("aggregation", "lerp_8", 1000.0);
+        let other = record("aggregation", "lerp_16", 1000.0);
+        let (fails, compared) = check(&other, &baseline, 2.0, true).unwrap();
+        assert_eq!(compared, 0);
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].contains("not measured"), "{fails:?}");
+        // The reverse direction (new case, old baseline) is clean.
+        let (fails, _) = check(&baseline, &baseline, 2.0, true).unwrap();
+        assert!(fails.is_empty());
+    }
+
+    #[test]
+    fn check_suite_strictness_matches_the_filter_semantics() {
+        // Baseline has two suites; the current run measured only one.
+        let baseline = json::parse(
+            r#"{"schema": "csmaafl-bench-v1", "quick": true, "suites": {
+                "aggregation": {"lerp_8": {"iters": 1, "ns_per_iter": 1000.0, "clients": 0}},
+                "scheduler": {"oldest_8": {"iters": 1, "ns_per_iter": 1000.0, "clients": 8}}}}"#,
+        )
+        .unwrap();
+        let current = record("aggregation", "lerp_8", 1000.0);
+        // Unfiltered (strict) run: the vanished suite fails the gate.
+        let (fails, compared) = check(&current, &baseline, 2.0, true).unwrap();
+        assert_eq!(compared, 1);
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].contains("scheduler"), "{fails:?}");
+        // A --suite-filtered check skips suites it did not measure but
+        // still compares the overlap.
+        let (fails, compared) = check(&current, &baseline, 2.0, false).unwrap();
+        assert_eq!(compared, 1);
+        assert!(fails.is_empty(), "{fails:?}");
+    }
+
+    #[test]
+    fn check_refuses_vacuous_and_malformed_comparisons() {
+        // Zero overlap is an error, not a silent pass.
+        let baseline = record("scheduler", "oldest_8", 1000.0);
+        let current = record("aggregation", "lerp_8", 1000.0);
+        let err = check(&current, &baseline, 2.0, false).unwrap_err().to_string();
+        assert!(err.contains("no comparable cases"), "{err}");
+        // A baseline case without numeric ns_per_iter is an error.
+        let broken = json::parse(
+            r#"{"schema": "csmaafl-bench-v1",
+                "suites": {"aggregation": {"lerp_8": {"iters": 1, "ns_per_itr": 5}}}}"#,
+        )
+        .unwrap();
+        let err = check(&current, &broken, 2.0, true).unwrap_err().to_string();
+        assert!(err.contains("ns_per_iter"), "{err}");
+    }
+
+    #[test]
+    fn check_refuses_quick_vs_full_comparison() {
+        let mut baseline = record("aggregation", "lerp_8", 1000.0);
+        let current = record("aggregation", "lerp_8", 1000.0);
+        // Same mode (both quick): fine.
+        assert!(check(&current, &baseline, 2.0, true).is_ok());
+        // Differing declared modes: refused with an actionable error.
+        if let Json::Object(o) = &mut baseline {
+            o.insert("quick".into(), Json::Bool(false));
+        }
+        let err = check(&current, &baseline, 2.0, true).unwrap_err().to_string();
+        assert!(err.contains("mode mismatch"), "{err}");
+        // A baseline without a quick flag (hand-built) is accepted.
+        if let Json::Object(o) = &mut baseline {
+            o.remove("quick");
+        }
+        assert!(check(&current, &baseline, 2.0, true).is_ok());
+    }
+
+    #[test]
+    fn check_rejects_schema_mismatch() {
+        let baseline = json::parse(r#"{"schema": "other-v9", "suites": {}}"#).unwrap();
+        let current = record("aggregation", "lerp_8", 1.0);
+        assert!(check(&current, &baseline, 2.0, true).is_err());
+    }
+
+    #[test]
+    fn run_rejects_unknown_suite() {
+        let cfg = BenchConfig {
+            quick: true,
+            suite: Some("bogus".into()),
+        };
+        assert!(run(&cfg).is_err());
+    }
+
+    #[test]
+    fn aggregation_suite_emits_schema_shaped_cases() {
+        // The cheapest real suite end-to-end: case names pinned, fields
+        // present, values positive.
+        let cases = suite_aggregation(true);
+        assert_eq!(cases.len(), 3);
+        assert!(cases.iter().any(|c| c.name == "lerp_5370"));
+        assert!(cases.iter().any(|c| c.name == "arena_cycle_5370"));
+        for c in &cases {
+            assert!(c.iters > 0 && c.ns_per_iter > 0.0, "{}", c.name);
+        }
+    }
+}

@@ -62,7 +62,7 @@ fn usage_lists_every_dispatchable_command() {
     let usage = stdout(&repro(&[]));
     for cmd in [
         "train", "compare", "figures", "sweep", "grid", "analyze",
-        "timeline", "inspect", "smoke", "serve", "join",
+        "timeline", "inspect", "smoke", "sim", "bench", "serve", "join",
     ] {
         assert!(usage.contains(cmd), "usage must mention {cmd}");
     }
@@ -338,6 +338,127 @@ fn grid_treats_repeated_set_keys_as_axes() {
     let text = stdout(&out);
     assert!(text.contains("\"spec\": \"gamma=0.2\""), "{text}");
     assert!(text.contains("\"spec\": \"gamma=0.4\""), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ------------------------------------------------------------ sim/bench
+
+#[test]
+fn sim_rejects_bad_flags() {
+    let out = repro(&["sim", "--clients", "0"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("clients"), "{}", stderr(&out));
+    let out = repro(&["sim", "--format", "xml"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("xml"), "{}", stderr(&out));
+    let out = repro(&["sim", "--scheduler", "lottery"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("lottery"), "{}", stderr(&out));
+    let out = repro(&["sim", "--heterogeneity", "warp9"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("warp9"), "{}", stderr(&out));
+    let out = repro(&["sim", "--clients", "10", "--aggregation", "bogus"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("bogus"), "{}", stderr(&out));
+}
+
+#[test]
+fn sim_runs_a_tiny_simulation_to_json() {
+    let out = repro(&[
+        "sim", "--clients", "50", "--iterations", "100", "--params", "8",
+        "--format", "json",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("\"aggregations\": 100"), "{text}");
+    assert!(text.contains("\"clients\": 50"), "{text}");
+    assert!(text.contains("\"events_per_sec\""), "{text}");
+    assert!(text.contains("\"arena_slots\""), "{text}");
+}
+
+#[test]
+fn sim_prints_a_table_by_default() {
+    let out = repro(&["sim", "--clients", "20", "--iterations", "10", "--params", "4"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("scale sim: 20 clients"), "{text}");
+    assert!(text.contains("aggregations"), "{text}");
+}
+
+#[test]
+fn bench_rejects_bad_flags() {
+    let out = repro(&["bench", "--format", "xml"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("xml"), "{}", stderr(&out));
+    let out = repro(&["bench", "--quick", "--suite", "bogus"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("bogus"), "{}", stderr(&out));
+    let out = repro(&["bench", "--factor", "abc"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("--factor"), "{}", stderr(&out));
+}
+
+#[test]
+fn bench_check_reports_missing_baseline_path() {
+    let out = repro(&[
+        "bench", "--quick", "--suite", "aggregation",
+        "--check", "definitely_missing_baseline.json",
+    ]);
+    assert!(!out.status.success());
+    assert!(
+        stderr(&out).contains("definitely_missing_baseline.json"),
+        "{}",
+        stderr(&out)
+    );
+}
+
+#[test]
+fn bench_writes_schema_valid_record_and_checks_against_baseline() {
+    let dir = scratch_dir("bench");
+    let out_flag = dir.to_str().unwrap();
+    let out = repro(&[
+        "bench", "--quick", "--suite", "aggregation", "--out", out_flag,
+        "--format", "json",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("\"schema\": \"csmaafl-bench-v1\""), "{text}");
+    assert!(text.contains("lerp_5370"), "{text}");
+    assert!(text.contains("\"ns_per_iter\""), "{text}");
+    // The record landed as BENCH_<date>.json in --out.
+    let records: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        .collect();
+    assert_eq!(records.len(), 1, "{records:?}");
+
+    // --check exercises the comparison logic, not the timings: a huge
+    // baseline passes, an impossibly small one fails with "regressed".
+    let case = r#"{"iters": 1, "ns_per_iter": NS, "clients": 0}"#;
+    let rec = |ns: &str| {
+        format!(
+            r#"{{"schema": "csmaafl-bench-v1", "suites": {{"aggregation": {{"lerp_5370": {}}}}}}}"#,
+            case.replace("NS", ns)
+        )
+    };
+    std::fs::write(dir.join("generous.json"), rec("1e15")).unwrap();
+    let out = repro(&[
+        "bench", "--quick", "--suite", "aggregation", "--out", out_flag,
+        "--check", dir.join("generous.json").to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    // Status lines live on stderr so --format json stdout stays pure.
+    assert!(stderr(&out).contains("bench check"), "{}", stderr(&out));
+
+    std::fs::write(dir.join("impossible.json"), rec("0.0001")).unwrap();
+    let out = repro(&[
+        "bench", "--quick", "--suite", "aggregation", "--out", out_flag,
+        "--check", dir.join("impossible.json").to_str().unwrap(),
+    ]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("regressed"), "{}", stderr(&out));
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -5,7 +5,10 @@
 
 use csmaafl::coordinator::scheduler::{SchedulerPolicy, UploadScheduler};
 use csmaafl::coordinator::staleness::{local_weight, StalenessTracker};
-use csmaafl::model::{ParamSet, Tensor, TensorSpec};
+use csmaafl::coordinator::{
+    run_scale_sim, NativeAggregator, ScaleSimConfig, ServerCore, StalenessEq11,
+};
+use csmaafl::model::{ParamArena, ParamLayout, ParamSet, Tensor, TensorSpec};
 use csmaafl::sim::EventQueue;
 use csmaafl::util::json::{self, Json};
 use csmaafl::util::rng::Rng;
@@ -73,6 +76,53 @@ fn scheduler_accounting_invariants() {
         assert_eq!(total, s.slots_granted());
         let j = s.jain_fairness();
         assert!(j > 0.0 && j <= 1.0 + 1e-12, "jain {j}");
+    }
+}
+
+/// The O(log n) heap / O(1) cursor fast paths pick exactly the winners
+/// the O(n) reference scan (the same policy as a trait object) picks,
+/// under arbitrary request/grant interleavings.
+#[test]
+fn scheduler_fast_paths_match_reference_scan() {
+    for seed in 0..60u64 {
+        let mut r = Rng::new(seed * 31 + 3);
+        let m = 2 + r.below(40) as usize;
+        for policy in [
+            SchedulerPolicy::OldestModelFirst,
+            SchedulerPolicy::Fifo,
+            SchedulerPolicy::RoundRobin,
+        ] {
+            let mut fast = UploadScheduler::new(policy, m);
+            let mut scan = UploadScheduler::with_policy(policy, policy.build(), m);
+            let mut outstanding = vec![false; m];
+            for t in 0..400u64 {
+                let c = r.below(m as u64) as usize;
+                if !outstanding[c] {
+                    fast.request(c, t);
+                    scan.request(c, t);
+                    outstanding[c] = true;
+                }
+                if r.below(3) == 0 {
+                    let a = fast.grant();
+                    let b = scan.grant();
+                    assert_eq!(a, b, "seed {seed} policy {policy:?} t {t}");
+                    if let Some(w) = a {
+                        outstanding[w] = false;
+                    }
+                }
+            }
+            loop {
+                let a = fast.grant();
+                assert_eq!(a, scan.grant(), "seed {seed} policy {policy:?} drain");
+                match a {
+                    Some(w) => outstanding[w] = false,
+                    None => break,
+                }
+            }
+            assert_eq!(fast.grants(), scan.grants(), "seed {seed} {policy:?}");
+            assert_eq!(fast.slots_granted(), scan.slots_granted());
+            assert_eq!(fast.pending_len(), scan.pending_len());
+        }
     }
 }
 
@@ -237,6 +287,118 @@ fn sweep_equals_weighted_sum_paramsets() {
         let diff = w.max_abs_diff(&fedavg);
         assert!(diff < 1e-4, "diff {diff}");
     }
+}
+
+/// The tentpole equivalence: in-place aggregation — both the tensor
+/// path (`on_update` + native lerp) and the arena/flat path
+/// (`on_update_flat` over recycled slots) — is bit-for-bit identical to
+/// the clone-based allocate-and-replace reference across random
+/// staleness patterns and policy weights.
+#[test]
+fn inplace_aggregation_equals_clone_based_aggregation_bitwise() {
+    for seed in 0..30u64 {
+        let mut r = Rng::new(seed * 13 + 7);
+        let tensors = 1 + r.below(4) as usize;
+        let g0 = random_pset(&mut r, tensors, 40);
+        let specs = g0.specs();
+        let numel = g0.numel();
+        let gamma = 0.1 + r.f64();
+
+        let mut core_tensor = ServerCore::new(
+            g0.clone(),
+            8,
+            Box::new(StalenessEq11::new(gamma).unwrap()),
+            0.1,
+        );
+        let mut core_flat = ServerCore::new(
+            g0.clone(),
+            8,
+            Box::new(StalenessEq11::new(gamma).unwrap()),
+            0.1,
+        );
+        // Clone-based reference: a fresh parameter set is allocated per
+        // update and swapped in (the pre-arena arithmetic, spelled out).
+        let mut w_ref = g0.clone();
+        let mut tracker = StalenessTracker::new(0.1);
+        let mut j = 0u64;
+        let mut arena = ParamArena::new(ParamLayout::of(&g0));
+        let mut flat = vec![0.0f32; numel];
+
+        for _ in 0..40 {
+            let mut local = g0.clone();
+            for t in &mut local.tensors {
+                for v in &mut t.data {
+                    *v = r.normal();
+                }
+            }
+            local.copy_to_flat(&mut flat);
+            let start = j.saturating_sub(r.below(6));
+            let staleness = j - start;
+
+            let lw = local_weight(tracker.mu(), gamma, j + 1, staleness);
+            tracker.observe(staleness);
+            let beta = (1.0 - lw) as f32;
+            let mut fresh = ParamSet::zeros(&specs);
+            for ((ft, wt), lt) in fresh
+                .tensors
+                .iter_mut()
+                .zip(&w_ref.tensors)
+                .zip(&local.tensors)
+            {
+                for ((o, x), y) in ft.data.iter_mut().zip(&wt.data).zip(&lt.data) {
+                    *o = beta * *x + (1.0 - beta) * *y;
+                }
+            }
+            w_ref = fresh;
+            j += 1;
+
+            let client = (j % 8) as usize;
+            core_tensor
+                .on_update(client, start, &local, &NativeAggregator)
+                .unwrap();
+            let slot = arena.alloc();
+            arena.get_mut(slot).copy_from_slice(&flat);
+            core_flat.on_update_flat(client, start, arena.get(slot)).unwrap();
+            arena.free(slot);
+        }
+        assert_eq!(
+            core_tensor.global().max_abs_diff(&w_ref),
+            0.0,
+            "seed {seed}: tensor path != clone reference"
+        );
+        assert_eq!(
+            core_flat.global().max_abs_diff(&w_ref),
+            0.0,
+            "seed {seed}: arena path != clone reference"
+        );
+        assert_eq!(core_tensor.iteration(), j);
+        assert_eq!(core_flat.iteration(), j);
+        assert_eq!(arena.live(), 0, "every slot recycled");
+        assert_eq!(arena.slots(), 1, "steady state reuses one slot");
+    }
+}
+
+// ---------------------------------------------------------------- scale
+
+/// 100k-client scale smoke for the arena + heap-scheduler hot path.
+/// `#[ignore]`d in the dev loop; CI's perf-smoke job runs it via
+/// `cargo test --release -- --ignored`.
+#[test]
+#[ignore = "scale smoke: run in CI perf-smoke (cargo test --release -- --ignored)"]
+fn scale_smoke_100k_clients() {
+    let cfg = ScaleSimConfig {
+        clients: 100_000,
+        iterations: 100_000,
+        params: 32,
+        ..ScaleSimConfig::default()
+    };
+    let r = run_scale_sim(&cfg).unwrap();
+    assert_eq!(r.aggregations, 100_000);
+    assert!(r.events >= r.aggregations);
+    assert!(r.final_norm.is_finite());
+    assert!(r.fairness > 0.0 && r.fairness <= 1.0 + 1e-12);
+    assert!(r.mean_staleness >= 0.0);
+    assert!(r.arena_slots <= 100_000, "{}", r.arena_slots);
 }
 
 // ---------------------------------------------------------------- events
