@@ -9,8 +9,11 @@
 #   make grid-smoke  Tiny end-to-end pass over the docs/EXPERIMENTS.md
 #                    commands: a parallel scenario x gamma grid, a sweep,
 #                    the Fig.-2 timeline and the beta table.
-#   make bench       Quick pinned-seed perf suite checked against the
-#                    committed BENCH_baseline.json (docs/BENCHMARKS.md).
+#   make bench       Full pinned-seed perf suite checked against the
+#                    committed BENCH_baseline.json (docs/BENCHMARKS.md);
+#                    mirrors the CI perf-smoke gate.
+#   make bench-baseline  Run the full suite and rewrite BENCH_baseline.json
+#                    in place (commit the result with a rationale).
 
 # The artifacts location is a contract, not a knob: the Rust tests,
 # benches and examples resolve <repo-root>/artifacts (anchored via
@@ -18,7 +21,7 @@
 # repo root.
 CONFIGS ?= mnist_small,fashion_small
 
-.PHONY: artifacts build test test-pjrt test-python grid-smoke bench
+.PHONY: artifacts build test test-pjrt test-python grid-smoke bench bench-baseline
 
 artifacts:
 	cd python && python3 -m compile.aot \
@@ -65,5 +68,17 @@ grid-smoke: build
 	echo "grid-smoke: OK (see results/grid-smoke/)"
 
 bench: build
-	./target/release/repro bench --quick --format json \
+	./target/release/repro bench --format json \
 	    --out results/bench --check BENCH_baseline.json
+
+# Re-record the committed baseline from a full (non-quick) run on the
+# current machine — replaces the hand-seeded-values workflow described
+# in docs/BENCHMARKS.md. The record is produced in a scratch dir first
+# so a failed run cannot leave a truncated baseline behind.
+bench-baseline: build
+	@tmp=$$(mktemp -d -t bench-baseline.XXXXXX); \
+	trap 'rm -rf "$$tmp"' EXIT; \
+	set -e; \
+	./target/release/repro bench --format json --out "$$tmp" > /dev/null; \
+	cp "$$tmp"/BENCH_*.json BENCH_baseline.json; \
+	echo "bench-baseline: rewrote BENCH_baseline.json (full suite)"

@@ -20,6 +20,12 @@
 //! `drift:period`). The TCP deployment leader (`net::leader`) drives
 //! the same `ServerCore`, so the simulator and the deployment share one
 //! aggregation code path.
+//!
+//! At scale, the coordinator-only simulator has two engines over one
+//! semantics: the sequential reference ([`scale`], `repro sim
+//! --shards 1` equivalent) and the multi-core sharded pipeline
+//! ([`shard`], `repro sim --shards N`) — bit-identical by contract
+//! (`rust/tests/sharded.rs`), differing only in wall-clock.
 
 pub mod afl;
 pub mod afl_baseline;
@@ -30,6 +36,7 @@ pub mod runner;
 pub mod scale;
 pub mod scheduler;
 pub mod sfl;
+pub mod shard;
 pub mod staleness;
 
 pub use self::core::{AggregationOutcome, ModelAggregator, NativeAggregator, ServerCore};
@@ -41,8 +48,9 @@ pub use policy::{
     SolvedBeta, StalenessEq11, UpdateObservation,
 };
 pub use runner::{FlContext, Recorder, RunStats};
-pub use scale::{run_scale_sim, ScaleSimConfig, ScaleSimReport};
+pub use scale::{run_scale_sim, run_scale_sim_full, ScaleSimConfig, ScaleSimReport};
 pub use scheduler::{SchedulerPolicy, UploadScheduler};
+pub use shard::{run_sharded_sim, run_sharded_sim_full};
 pub use staleness::{local_weight, StalenessTracker};
 
 use anyhow::{Context, Result};

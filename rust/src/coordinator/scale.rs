@@ -8,13 +8,22 @@
 //! (`coordinator::scheduler`, heap/cursor fast paths), the aggregation
 //! policies (`coordinator::policy`) and the eq.-(3) arithmetic
 //! ([`crate::model::lerp_flat`] through [`ServerCore::on_update_flat`]),
-//! the heterogeneous compute-time model, and all per-client bookkeeping.
-//! What is synthetic: the local "training" — each upload is the current
-//! global model contracted toward zero plus a per-upload scalar offset
-//! (an O(params) transform into a recycled [`ParamArena`] slot, zero
-//! allocation at steady state). Clients therefore train from an
-//! approximation of their download snapshot; staleness bookkeeping still
-//! uses the true issued iteration stamp.
+//! the heterogeneous compute-time model, the scenario hooks
+//! (`sim::scenario`: `dropout` transit loss, `churn` leave/rejoin,
+//! `drift` compute slow-down) and all per-client bookkeeping. What is
+//! synthetic: the local "training" — each upload is the current global
+//! model contracted toward zero plus a per-upload scalar offset
+//! (`synth_train`: `train_passes` elementwise passes into a recycled
+//! [`ParamArena`] slot, zero allocation at steady state). Clients
+//! therefore train from an approximation of their download snapshot;
+//! staleness bookkeeping still uses the true issued iteration stamp.
+//!
+//! This file is the *sequential reference*: one thread does everything,
+//! in pure event order. `coordinator::shard` is the multi-core engine
+//! over the same semantics — `rust/tests/sharded.rs` asserts the two
+//! agree bit-for-bit (summary JSON and final global model) at every
+//! shard count, so this loop doubles as the executable spec of the
+//! sharded pipeline. When editing one, edit both.
 //!
 //! Everything is seeded, so two runs with one config produce identical
 //! aggregation counts, staleness and fairness statistics; only the
@@ -29,7 +38,10 @@ use super::core::ServerCore;
 use super::policy::{AggregationPolicy, PolicyParams, StalenessEq11};
 use super::scheduler::{SchedulerPolicy, UploadScheduler};
 use crate::model::{ParamArena, ParamLayout, ParamSet, SlotId, TensorSpec};
-use crate::sim::{ComputeModel, EventQueue, HeterogeneityProfile, Ticks, TimeModel, UplinkChannel};
+use crate::sim::{
+    scenario, ComputeModel, EventQueue, HeterogeneityProfile, Scenario, Ticks, TimeModel,
+    UplinkChannel,
+};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -51,12 +63,20 @@ pub struct ScaleSimConfig {
     /// Aggregation-policy registry spelling; `None` = eq. (11) at
     /// `gamma`.
     pub aggregation: Option<String>,
+    /// Scenario registry spelling (`sim::scenario`); `None` = the
+    /// pinned `static` world.
+    pub scenario: Option<String>,
     /// Eq.-(11) γ (also the registry default parameter).
     pub gamma: f64,
     /// μ_ji EMA rate.
     pub mu_rho: f64,
     /// Base local step count E (scaled by the adaptive policy).
     pub local_steps: usize,
+    /// Elementwise passes of the synthetic trainer per upload (>= 1).
+    /// 1 reproduces the historical single-pass transform; larger values
+    /// model heavier local training, which is the work the sharded
+    /// engine (`coordinator::shard`) parallelizes.
+    pub train_passes: u32,
     /// How per-client compute speed factors are drawn.
     pub heterogeneity: HeterogeneityProfile,
     /// Per-round multiplicative compute jitter.
@@ -74,13 +94,74 @@ impl Default for ScaleSimConfig {
             seed: 42,
             scheduler: SchedulerPolicy::OldestModelFirst,
             aggregation: None,
+            scenario: None,
             gamma: 0.2,
             mu_rho: 0.1,
             local_steps: 48,
+            train_passes: 1,
             heterogeneity: HeterogeneityProfile::Uniform { max_factor: 4.0 },
             jitter: 0.1,
             time: TimeModel::default(),
         }
+    }
+}
+
+impl ScaleSimConfig {
+    /// Apply one `key=value` override in the `repro grid --sim`
+    /// spelling. Numeric fields parse their natural types; `scheduler`,
+    /// `aggregation`, `scenario` and `heterogeneity` take their
+    /// registry spellings. Unknown keys and malformed values are
+    /// errors (validated per-cell before any cell runs).
+    pub fn set_field(&mut self, key: &str, val: &str) -> Result<()> {
+        let bad = |what: &str| anyhow::anyhow!("sim field {key}: invalid {what} {val:?}");
+        match key {
+            "clients" => self.clients = val.parse().map_err(|_| bad("count"))?,
+            "iterations" => self.iterations = val.parse().map_err(|_| bad("count"))?,
+            "params" => self.params = val.parse().map_err(|_| bad("count"))?,
+            "seed" => self.seed = val.parse().map_err(|_| bad("seed"))?,
+            "gamma" => self.gamma = val.parse().map_err(|_| bad("number"))?,
+            "mu_rho" => self.mu_rho = val.parse().map_err(|_| bad("number"))?,
+            "local_steps" => self.local_steps = val.parse().map_err(|_| bad("count"))?,
+            "train_passes" => self.train_passes = val.parse().map_err(|_| bad("count"))?,
+            "jitter" => self.jitter = val.parse().map_err(|_| bad("number"))?,
+            "scheduler" => {
+                self.scheduler = SchedulerPolicy::parse(val).ok_or_else(|| bad("scheduler"))?;
+            }
+            "aggregation" => self.aggregation = Some(val.to_string()),
+            "scenario" => self.scenario = Some(val.to_string()),
+            "heterogeneity" => {
+                self.heterogeneity =
+                    HeterogeneityProfile::parse(val).ok_or_else(|| bad("profile"))?;
+            }
+            other => anyhow::bail!(
+                "unknown sim field {other:?} (clients | iterations | params | seed | \
+                 gamma | mu_rho | local_steps | train_passes | jitter | scheduler | \
+                 aggregation | scenario | heterogeneity)"
+            ),
+        }
+        Ok(())
+    }
+
+    /// Cheap whole-config validation (no population-sized allocation):
+    /// numeric bounds plus registry parses of the `aggregation` and
+    /// `scenario` spellings — the two fields [`ScaleSimConfig::set_field`]
+    /// stores unparsed (their parse can depend on other fields, e.g.
+    /// `clients`/`gamma`). The engines re-check internally; `repro grid
+    /// --sim` calls this on every cell before any cell runs.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.clients > 0, "sim requires clients > 0");
+        ensure!(self.params > 0, "sim requires params > 0");
+        ensure!(self.local_steps > 0, "sim requires local_steps > 0");
+        ensure!(self.train_passes > 0, "sim requires train_passes > 0");
+        if let Some(spec) = &self.aggregation {
+            let params = PolicyParams {
+                clients: self.clients,
+                gamma: self.gamma,
+            };
+            <dyn AggregationPolicy>::parse(spec, &params)?;
+        }
+        scenario::resolve(self.scenario.as_deref())?;
+        Ok(())
     }
 }
 
@@ -95,6 +176,12 @@ pub struct ScaleSimReport {
     pub policy: String,
     /// Scheduler spelling in force.
     pub scheduler: &'static str,
+    /// Scenario label in force (`static` for the pinned default).
+    pub scenario: String,
+    /// Shard workers the run executed on (1 = the sequential reference
+    /// path). Every other field except the wall-clock ones is
+    /// bit-identical across shard counts (`rust/tests/sharded.rs`).
+    pub shards: usize,
     /// Global aggregations performed.
     pub aggregations: u64,
     /// Events processed by the loop.
@@ -111,10 +198,13 @@ pub struct ScaleSimReport {
     pub mean_staleness: f64,
     /// Jain fairness over granted slots.
     pub fairness: f64,
+    /// Uploads lost in transit (`dropout` scenario; 0 under `static`).
+    pub lost_uploads: u64,
     /// Mean synthetic training loss recorded through the dense
     /// per-client loss table.
     pub mean_train_loss: f64,
-    /// Arena high-water mark (slots ever created).
+    /// Arena high-water mark: the most local models ever in flight at
+    /// once (slots ever created, given freelist recycling).
     pub arena_slots: usize,
     /// Arena slots still allocated at exit (in-flight locals).
     pub arena_live: usize,
@@ -123,21 +213,25 @@ pub struct ScaleSimReport {
 }
 
 impl ScaleSimReport {
-    /// Machine-readable form (the `repro sim --format json` output).
-    pub fn to_json(&self) -> Json {
+    /// The deterministic sub-record: every field that is a pure
+    /// function of the config — excludes the wall-clock fields and the
+    /// shard count, so `--shards N` summaries are bit-identical for
+    /// every N (and identical to the sequential reference). This is
+    /// what `rust/tests/sharded.rs` compares and what `repro grid
+    /// --sim` matrices are built from.
+    pub fn summary_json(&self) -> Json {
         let mut o = Json::object();
         o.set("clients", Json::Int(self.clients as i64))
             .set("params", Json::Int(self.params as i64))
             .set("policy", Json::Str(self.policy.clone()))
             .set("scheduler", Json::Str(self.scheduler.into()))
+            .set("scenario", Json::Str(self.scenario.clone()))
             .set("aggregations", Json::Int(self.aggregations as i64))
             .set("events", Json::Int(self.events as i64))
             .set("virtual_ticks", Json::Int(self.virtual_ticks as i64))
-            .set("wall_secs", Json::Float(self.wall_secs))
-            .set("events_per_sec", Json::Float(self.events_per_sec))
-            .set("aggs_per_sec", Json::Float(self.aggs_per_sec))
             .set("mean_staleness", Json::Float(self.mean_staleness))
             .set("fairness", Json::Float(self.fairness))
+            .set("lost_uploads", Json::Int(self.lost_uploads as i64))
             .set("mean_train_loss", Json::Float(self.mean_train_loss))
             .set("arena_slots", Json::Int(self.arena_slots as i64))
             .set("arena_live", Json::Int(self.arena_live as i64))
@@ -145,17 +239,32 @@ impl ScaleSimReport {
         o
     }
 
+    /// Machine-readable form (the `repro sim --format json` output):
+    /// the deterministic summary plus the shard count and the
+    /// wall-clock throughput fields.
+    pub fn to_json(&self) -> Json {
+        let mut o = self.summary_json();
+        o.set("shards", Json::Int(self.shards as i64))
+            .set("wall_secs", Json::Float(self.wall_secs))
+            .set("events_per_sec", Json::Float(self.events_per_sec))
+            .set("aggs_per_sec", Json::Float(self.aggs_per_sec));
+        o
+    }
+
     /// Human-readable table (the default `repro sim` output).
     pub fn table(&self) -> String {
         format!(
-            "scale sim: {} clients, {} params, policy {}, scheduler {}\n\
+            "scale sim: {} clients, {} params, policy {}, scheduler {}, \
+             scenario {}, {} shard(s)\n\
              {:<18} {}\n{:<18} {}\n{:<18} {}\n{:<18} {:.2}\n\
              {:<18} {:.0}\n{:<18} {:.0}\n{:<18} {:.2}\n{:<18} {:.4}\n\
-             {:<18} {:.4}\n{:<18} {} (live {})\n{:<18} {:.4}",
+             {:<18} {}\n{:<18} {:.4}\n{:<18} {} (live {})\n{:<18} {:.4}",
             self.clients,
             self.params,
             self.policy,
             self.scheduler,
+            self.scenario,
+            self.shards,
             "aggregations",
             self.aggregations,
             "events",
@@ -172,6 +281,8 @@ impl ScaleSimReport {
             self.mean_staleness,
             "fairness",
             self.fairness,
+            "lost uploads",
+            self.lost_uploads,
             "mean train loss",
             self.mean_train_loss,
             "arena slots",
@@ -186,9 +297,10 @@ impl ScaleSimReport {
 /// Scale-sim event. Unlike the learner-driven engine (`afl.rs`), no
 /// event carries model parameters — the bookkeeping travels as iteration
 /// stamps and locals live in the arena — so the queue stays small at
-/// 10^6 clients.
+/// 10^6 clients. Shared with the sharded engine (`coordinator::shard`),
+/// which processes the identical event stream.
 #[derive(Debug)]
-enum Event {
+pub(crate) enum Event {
     /// Client received the global model issued at iteration `i`.
     Download { client: usize, i: u64 },
     /// Client finished local compute on the model from iteration `i`.
@@ -197,10 +309,23 @@ enum Event {
     Upload { client: usize },
 }
 
+/// The synthetic local trainer: `passes` elementwise contractions
+/// `x ← 0.999·x + δ` over the slot buffer. One definition shared by the
+/// sequential reference (this file) and the shard workers
+/// (`coordinator::shard`), so the two paths are op-for-op identical by
+/// construction.
+pub(crate) fn synth_train(buf: &mut [f32], delta: f32, passes: u32) {
+    for _ in 0..passes {
+        for x in buf.iter_mut() {
+            *x = 0.999 * *x + delta;
+        }
+    }
+}
+
 /// If the uplink is idle, grant the next contender a slot and schedule
 /// its upload completion (the same TDMA channel-grant step as the
 /// learner-driven engine).
-fn grant_next(
+pub(crate) fn grant_next(
     scheduler: &mut UploadScheduler,
     channel: &mut UplinkChannel,
     queue: &mut EventQueue<Event>,
@@ -215,12 +340,24 @@ fn grant_next(
     }
 }
 
-/// Run the coordinator-only scale simulation. Deterministic up to the
-/// wall-clock fields of the report.
-pub fn run_scale_sim(cfg: &ScaleSimConfig) -> Result<ScaleSimReport> {
-    ensure!(cfg.clients > 0, "sim requires clients > 0");
-    ensure!(cfg.params > 0, "sim requires params > 0");
-    ensure!(cfg.local_steps > 0, "sim requires local_steps > 0");
+/// Shared validation + setup of both scale engines. Returns everything
+/// whose construction order (and RNG fork labels) must match between
+/// the reference and sharded paths.
+pub(crate) struct SimSetup {
+    pub m: usize,
+    pub target: u64,
+    pub cm: ComputeModel,
+    pub jrng: Rng,
+    pub urng: Rng,
+    pub layout: ParamLayout,
+    pub core: ServerCore,
+    pub policy_label: String,
+    pub world: Box<dyn Scenario>,
+    pub world_label: String,
+}
+
+pub(crate) fn setup(cfg: &ScaleSimConfig) -> Result<SimSetup> {
+    cfg.validate()?;
     let m = cfg.clients;
     let target = if cfg.iterations == 0 {
         m as u64
@@ -230,8 +367,8 @@ pub fn run_scale_sim(cfg: &ScaleSimConfig) -> Result<ScaleSimReport> {
 
     let root = Rng::new(cfg.seed);
     let cm = ComputeModel::new(cfg.heterogeneity, m, cfg.jitter, &root);
-    let mut jrng = root.fork(0xd1ce);
-    let mut urng = root.fork(0x10ca1);
+    let jrng = root.fork(0xd1ce);
+    let urng = root.fork(0x10ca1);
     let mut irng = root.fork(0x1217);
 
     let layout = ParamLayout::new(vec![TensorSpec {
@@ -251,7 +388,56 @@ pub fn run_scale_sim(cfg: &ScaleSimConfig) -> Result<ScaleSimReport> {
     };
     let policy_label = policy.label();
 
-    let mut core = ServerCore::new(w0, m, policy, cfg.mu_rho);
+    // The world model (static | dropout | churn | drift). Stochastic
+    // scenarios draw from their own forked streams, never from `jrng`
+    // or `urng`. The relative slot unit here is the steady-state
+    // τ^u + τ^d inter-aggregation gap, not the SFL round the
+    // learner-driven engine uses: at 10^6 clients one SFL round
+    // (M·τ^u + ...) would exceed the whole simulated horizon, leaving
+    // churn/drift epochs unreachable.
+    let mut world = scenario::resolve(cfg.scenario.as_deref())?;
+    world.bind(m, cfg.time.afl_update_interval(), cfg.seed);
+    let world_label = world.label();
+
+    let core = ServerCore::new(w0, m, policy, cfg.mu_rho);
+    Ok(SimSetup {
+        m,
+        target,
+        cm,
+        jrng,
+        urng,
+        layout,
+        core,
+        policy_label,
+        world,
+        world_label,
+    })
+}
+
+/// Run the coordinator-only scale simulation on the sequential
+/// reference path. Deterministic up to the wall-clock fields of the
+/// report.
+pub fn run_scale_sim(cfg: &ScaleSimConfig) -> Result<ScaleSimReport> {
+    run_scale_sim_full(cfg).map(|(report, _)| report)
+}
+
+/// As [`run_scale_sim`], also yielding the final global model (the
+/// bit-identity witness `rust/tests/sharded.rs` compares across
+/// engines).
+pub fn run_scale_sim_full(cfg: &ScaleSimConfig) -> Result<(ScaleSimReport, ParamSet)> {
+    let SimSetup {
+        m,
+        target,
+        cm,
+        mut jrng,
+        mut urng,
+        layout,
+        mut core,
+        policy_label,
+        mut world,
+        world_label,
+    } = setup(cfg)?;
+
     let mut scheduler = UploadScheduler::new(cfg.scheduler, m);
     let mut channel = UplinkChannel::new();
     let mut queue: EventQueue<Event> = EventQueue::new();
@@ -277,18 +463,26 @@ pub fn run_scale_sim(cfg: &ScaleSimConfig) -> Result<ScaleSimReport> {
         match ev {
             Event::Download { client, i } => {
                 let steps = adaptive_steps(cfg.local_steps, cm.factor(client), true);
-                let dur = cm.duration(&cfg.time, client, steps, &mut jrng);
+                // Scenario drift: time-varying compute (scale 1.0 under
+                // the static default — bit-identical draw).
+                let scale = world.compute_scale(client, now);
+                let dur = cm.duration_scaled(&cfg.time, client, steps, &mut jrng, scale);
                 queue.schedule_in(dur, Event::Compute { client, i });
             }
             Event::Compute { client, i } => {
+                // Scenario churn: an offline client re-contends only
+                // when it rejoins; its synthetic local is produced then,
+                // but the staleness stamp `i` stays the issued one.
+                if let Some(rejoin) = world.offline_until(client, now) {
+                    queue.schedule_at(rejoin, Event::Compute { client, i });
+                    continue;
+                }
                 // Synthetic local training into a recycled arena slot:
                 // local = 0.999·global + δ, one scalar δ per upload.
                 let slot = arena.alloc();
                 let d = 0.02 * urng.f32() - 0.01;
                 core.global().copy_to_flat(arena.get_mut(slot));
-                for x in arena.get_mut(slot) {
-                    *x = 0.999 * *x + d;
-                }
+                synth_train(arena.get_mut(slot), d, cfg.train_passes);
                 core.record_loss(client, (d as f64).abs());
                 pending[client] = Some((slot, i));
                 scheduler.request(client, now);
@@ -298,8 +492,15 @@ pub fn run_scale_sim(cfg: &ScaleSimConfig) -> Result<ScaleSimReport> {
                 let (slot, i) = pending[client]
                     .take()
                     .expect("upload without a pending local model");
-                core.on_update_flat(client, i, arena.get(slot))?;
-                arena.free(slot);
+                // Scenario dropout: the upload is lost in transit; the
+                // local work is wasted and the client re-downloads.
+                if world.upload_lost(client, now) {
+                    core.on_lost_upload(client);
+                    arena.free(slot);
+                } else {
+                    core.on_update_flat(client, i, arena.get(slot))?;
+                    arena.free(slot);
+                }
                 let i = core.issue_to(client);
                 queue.schedule_in(cfg.time.tau_down, Event::Download { client, i });
                 grant_next(&mut scheduler, &mut channel, &mut queue, now, cfg.time.tau_up);
@@ -308,11 +509,13 @@ pub fn run_scale_sim(cfg: &ScaleSimConfig) -> Result<ScaleSimReport> {
     }
 
     let wall = started.elapsed().as_secs_f64().max(1e-9);
-    Ok(ScaleSimReport {
+    let report = ScaleSimReport {
         clients: m,
         params: cfg.params,
         policy: policy_label,
         scheduler: cfg.scheduler.name(),
+        scenario: world_label,
+        shards: 1,
         aggregations: core.iteration(),
         events,
         virtual_ticks: queue.now(),
@@ -321,11 +524,13 @@ pub fn run_scale_sim(cfg: &ScaleSimConfig) -> Result<ScaleSimReport> {
         aggs_per_sec: core.iteration() as f64 / wall,
         mean_staleness: core.mean_staleness(),
         fairness: scheduler.jain_fairness(),
+        lost_uploads: core.lost_uploads(),
         mean_train_loss: core.mean_train_loss(),
         arena_slots: arena.slots(),
         arena_live: arena.live(),
         final_norm: core.global().l2_norm(),
-    })
+    };
+    Ok((report, core.into_global()))
 }
 
 #[cfg(test)]
@@ -346,6 +551,9 @@ mod tests {
         assert!(r.final_norm.is_finite());
         assert!(r.fairness > 0.0 && r.fairness <= 1.0 + 1e-12);
         assert!(r.mean_train_loss > 0.0 && r.mean_train_loss <= 0.01);
+        assert_eq!(r.lost_uploads, 0, "static world loses nothing");
+        assert_eq!(r.scenario, "static");
+        assert_eq!(r.shards, 1);
         // At most one in-flight local per client, and the live count at
         // exit never exceeds the pool's high-water mark.
         assert!(r.arena_slots <= 200, "{}", r.arena_slots);
@@ -362,12 +570,11 @@ mod tests {
         };
         let a = run_scale_sim(&cfg).unwrap();
         let b = run_scale_sim(&cfg).unwrap();
-        assert_eq!(a.aggregations, b.aggregations);
-        assert_eq!(a.events, b.events);
-        assert_eq!(a.virtual_ticks, b.virtual_ticks);
-        assert_eq!(a.mean_staleness, b.mean_staleness);
-        assert_eq!(a.final_norm, b.final_norm);
-        assert_eq!(a.mean_train_loss, b.mean_train_loss);
+        assert_eq!(
+            a.summary_json().to_string_compact(),
+            b.summary_json().to_string_compact(),
+            "full deterministic summary"
+        );
     }
 
     #[test]
@@ -404,6 +611,65 @@ mod tests {
     }
 
     #[test]
+    fn every_scenario_spelling_runs_and_dropout_loses_uploads() {
+        for spec in crate::sim::scenario::SCENARIO_SPECS {
+            let cfg = ScaleSimConfig {
+                clients: 60,
+                iterations: 150,
+                params: 4,
+                scenario: Some(spec.to_string()),
+                ..ScaleSimConfig::default()
+            };
+            let r = run_scale_sim(&cfg).unwrap();
+            assert_eq!(r.aggregations, 150, "{spec}");
+            if spec.starts_with("dropout") {
+                assert!(r.lost_uploads > 0, "{spec}: {r:?}");
+            } else {
+                assert_eq!(r.lost_uploads, 0, "{spec}");
+            }
+        }
+    }
+
+    #[test]
+    fn static_scenario_spelling_is_bit_identical_to_none() {
+        let base = ScaleSimConfig {
+            clients: 80,
+            iterations: 200,
+            params: 8,
+            ..ScaleSimConfig::default()
+        };
+        let pinned = ScaleSimConfig {
+            scenario: Some("static".into()),
+            ..base.clone()
+        };
+        let (ra, wa) = run_scale_sim_full(&base).unwrap();
+        let (rb, wb) = run_scale_sim_full(&pinned).unwrap();
+        assert_eq!(ra.summary_json().to_string_compact(), rb.summary_json().to_string_compact());
+        assert_eq!(wa, wb, "final models must agree bit-for-bit");
+    }
+
+    #[test]
+    fn multi_pass_training_changes_the_model_but_not_the_timeline() {
+        let base = ScaleSimConfig {
+            clients: 40,
+            iterations: 100,
+            params: 8,
+            ..ScaleSimConfig::default()
+        };
+        let heavy = ScaleSimConfig {
+            train_passes: 4,
+            ..base.clone()
+        };
+        let a = run_scale_sim(&base).unwrap();
+        let b = run_scale_sim(&heavy).unwrap();
+        // Training cost is synthetic work, not virtual time: the event
+        // stream is identical, only the model values differ.
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.virtual_ticks, b.virtual_ticks);
+        assert_ne!(a.final_norm, b.final_norm);
+    }
+
+    #[test]
     fn rejects_degenerate_configs() {
         let bad = ScaleSimConfig {
             clients: 0,
@@ -416,7 +682,17 @@ mod tests {
         };
         assert!(run_scale_sim(&bad).is_err());
         let bad = ScaleSimConfig {
+            train_passes: 0,
+            ..ScaleSimConfig::default()
+        };
+        assert!(run_scale_sim(&bad).is_err());
+        let bad = ScaleSimConfig {
             aggregation: Some("bogus".into()),
+            ..ScaleSimConfig::default()
+        };
+        assert!(run_scale_sim(&bad).is_err());
+        let bad = ScaleSimConfig {
+            scenario: Some("blizzard".into()),
             ..ScaleSimConfig::default()
         };
         assert!(run_scale_sim(&bad).is_err());
@@ -438,11 +714,73 @@ mod tests {
             "events_per_sec",
             "mean_staleness",
             "fairness",
+            "lost_uploads",
             "mean_train_loss",
             "arena_slots",
             "final_norm",
+            "scenario",
+            "shards",
         ] {
             assert!(j.get(key).is_some(), "missing {key}");
         }
+        // The deterministic summary must exclude anything wall-clock-
+        // or thread-count-dependent.
+        let s = run_scale_sim(&cfg).unwrap().summary_json();
+        for key in ["wall_secs", "events_per_sec", "aggs_per_sec", "shards"] {
+            assert!(s.get(key).is_none(), "summary must not carry {key}");
+        }
+    }
+
+    #[test]
+    fn set_field_covers_every_key_and_rejects_unknown() {
+        let mut cfg = ScaleSimConfig::default();
+        for (k, v) in [
+            ("clients", "123"),
+            ("iterations", "7"),
+            ("params", "9"),
+            ("seed", "5"),
+            ("gamma", "0.3"),
+            ("mu_rho", "0.2"),
+            ("local_steps", "12"),
+            ("train_passes", "3"),
+            ("jitter", "0.05"),
+            ("scheduler", "fifo"),
+            ("aggregation", "fedasync:0.5"),
+            ("scenario", "dropout:0.1"),
+            ("heterogeneity", "lognormal:0.5"),
+        ] {
+            cfg.set_field(k, v).unwrap_or_else(|e| panic!("{k}: {e}"));
+        }
+        assert_eq!(cfg.clients, 123);
+        assert_eq!(cfg.scheduler, SchedulerPolicy::Fifo);
+        assert_eq!(cfg.scenario.as_deref(), Some("dropout:0.1"));
+        assert!(cfg.set_field("clients", "banana").is_err());
+        assert!(cfg.set_field("scheduler", "lottery").is_err());
+        assert!(cfg.set_field("warp", "9").is_err());
+    }
+
+    #[test]
+    fn validate_catches_the_spellings_set_field_stores_unparsed() {
+        let ok = ScaleSimConfig {
+            aggregation: Some("staleness:0.3".into()),
+            scenario: Some("dropout:0.1".into()),
+            ..ScaleSimConfig::default()
+        };
+        ok.validate().unwrap();
+        let bad = ScaleSimConfig {
+            aggregation: Some("bogus".into()),
+            ..ScaleSimConfig::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = ScaleSimConfig {
+            scenario: Some("blizzard".into()),
+            ..ScaleSimConfig::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = ScaleSimConfig {
+            train_passes: 0,
+            ..ScaleSimConfig::default()
+        };
+        assert!(bad.validate().is_err());
     }
 }

@@ -1,0 +1,371 @@
+//! The sharded scale coordinator (`repro sim --shards N`): the
+//! multi-core engine over the exact semantics of the sequential
+//! reference in `coordinator::scale`.
+//!
+//! ## Architecture
+//!
+//! One **coordinator** thread owns everything whose *order* defines the
+//! run: the discrete-event queue, the scheduler and uplink channel, all
+//! RNG streams, the `ServerCore` (staleness decisions + the eq.-(3)
+//! lerp) and the arena's alloc/free bookkeeping. K **shard workers**
+//! (`std::thread::scope`, the same idiom as the experiment engine's
+//! `PlanRunner`) each own a disjoint client partition
+//! ([`crate::sim::ClientPartition`]) and execute the one part of the
+//! pipeline that is pure data-parallel arithmetic: the synthetic local
+//! training ([`crate::coordinator::scale`]'s `synth_train`) into
+//! recycled [`ParamArena`] slots.
+//!
+//! Per round of one client: at its Compute event the coordinator
+//! allocates a slot, snapshots the live global into it, draws the
+//! update offset δ from the shared stream, and ships `(slot, δ)` to the
+//! client's shard worker; at the Upload event it joins on that worker's
+//! completion message and feeds the slot through
+//! [`crate::coordinator::ServerCore::on_update_flat`] — a single
+//! ordered aggregation stage
+//! whose order is the event queue's `(virtual time, insertion seq)`
+//! key. Upload completions have strictly increasing virtual times (the
+//! TDMA channel serializes them), so this *is* the deterministic
+//! `(virtual time, client id)` aggregation order; the deployment leader
+//! applies the same discipline to concurrent TCP bursts through
+//! [`crate::sim::OrderedMerge`].
+//!
+//! ## Why `--shards N` is bit-identical to `--shards 1` and to the
+//! sequential reference
+//!
+//! * Every decision input (RNG draw, scheduler grant, staleness stamp,
+//!   policy weight) is computed on the coordinator in event order —
+//!   identical to the reference loop.
+//! * Worker output is a pure function of its inputs (`snapshot`, δ,
+//!   pass count): the same f32 op sequence over the same values,
+//!   whichever thread runs it, whenever it runs.
+//! * Workers touch only disjoint slots, published and joined over
+//!   channels (happens-before edges both ways); the coordinator never
+//!   reads a slot before joining on its completion.
+//!
+//! Thread count therefore changes wall-clock only. `rust/tests/sharded.rs`
+//! asserts the bit-identity (summary JSON + final global model) across
+//! shard counts, schedulers, aggregation policies and random scenario
+//! mixes; the `sharded` bench suite (`repro bench --suite sharded`)
+//! measures the speedup instead of claiming it.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use super::afl::adaptive_steps;
+use super::scale::{
+    grant_next, setup, synth_train, Event, ScaleSimConfig, ScaleSimReport, SimSetup,
+};
+use super::scheduler::UploadScheduler;
+use crate::model::{ParamArena, ParamSet, SlotId, SlotWindow};
+use crate::sim::{ClientPartition, EventQueue, UplinkChannel};
+
+/// One unit of shard-worker work: run the synthetic trainer over `slot`
+/// (which the coordinator has pre-filled with the global snapshot) with
+/// offset `delta`, then report `client` done.
+struct Task {
+    client: u32,
+    slot: u32,
+    delta: f32,
+}
+
+/// Run the scale simulation on `shards` shard workers plus the
+/// coordinator thread. `shards` is clamped to the client count; pass 1
+/// for a single worker (still pipelined). Output is bit-identical to
+/// [`super::scale::run_scale_sim`] for every shard count.
+pub fn run_sharded_sim(cfg: &ScaleSimConfig, shards: usize) -> Result<ScaleSimReport> {
+    run_sharded_sim_full(cfg, shards).map(|(report, _)| report)
+}
+
+/// As [`run_sharded_sim`], also yielding the final global model (the
+/// bit-identity witness `rust/tests/sharded.rs` compares across
+/// engines).
+pub fn run_sharded_sim_full(
+    cfg: &ScaleSimConfig,
+    shards: usize,
+) -> Result<(ScaleSimReport, ParamSet)> {
+    ensure!(shards >= 1, "sim requires shards >= 1");
+    let SimSetup {
+        m,
+        target,
+        cm,
+        mut jrng,
+        mut urng,
+        layout,
+        mut core,
+        policy_label,
+        mut world,
+        world_label,
+    } = setup(cfg)?;
+
+    let partition = ClientPartition::new(m, shards);
+    let k_shards = partition.shards();
+
+    let mut scheduler = UploadScheduler::new(cfg.scheduler, m);
+    let mut channel = UplinkChannel::new();
+    let mut queue: EventQueue<Event> = EventQueue::new();
+    // Every slot exists up front (at most one in-flight local per
+    // client), so the backing buffer never reallocates while workers
+    // hold raw views into it — the SlotWindow storage contract.
+    let mut arena = ParamArena::preallocated(layout, m);
+    let window: SlotWindow = arena.slot_window();
+    // Pending local update per client: arena slot + start iteration.
+    let mut pending: Vec<Option<(SlotId, u64)>> = vec![None; m];
+    // Whether the client's dispatched training task has completed.
+    let mut ready: Vec<bool> = vec![true; m];
+    // Concurrency stats the reference reads off its lazily grown arena
+    // (slots() == peak live there); tracked explicitly here because the
+    // preallocated pool creates every slot up front.
+    let mut live = 0usize;
+    let mut peak_live = 0usize;
+
+    let started = Instant::now();
+    let mut events = 0u64;
+
+    let (report, model) = std::thread::scope(|scope| -> Result<(ScaleSimReport, ParamSet)> {
+        let (done_tx, done_rx) = mpsc::channel::<u32>();
+        let mut task_txs: Vec<mpsc::Sender<Task>> = Vec::with_capacity(k_shards);
+        for _ in 0..k_shards {
+            let (tx, rx) = mpsc::channel::<Task>();
+            task_txs.push(tx);
+            let done_tx = done_tx.clone();
+            let passes = cfg.train_passes;
+            scope.spawn(move || {
+                for t in rx {
+                    // SAFETY: the coordinator published this slot to
+                    // exactly this worker and will not read or free it
+                    // until our completion message below is received
+                    // (see SlotWindow's exclusivity protocol).
+                    let buf = unsafe { window.slot_mut(t.slot as usize) };
+                    synth_train(buf, t.delta, passes);
+                    if done_tx.send(t.client).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        // Workers hold the only clones; completions stop when they exit.
+        drop(done_tx);
+
+        // t=0 broadcast: every client is issued w_0 (stamps only — the
+        // synthetic trainer reads the live global at compute time).
+        for c in 0..m {
+            let i = core.issue_to(c);
+            queue.schedule_at(cfg.time.tau_down, Event::Download { client: c, i });
+        }
+
+        while core.iteration() < target {
+            let Some((now, ev)) = queue.pop() else {
+                break;
+            };
+            events += 1;
+            match ev {
+                Event::Download { client, i } => {
+                    let steps = adaptive_steps(cfg.local_steps, cm.factor(client), true);
+                    let scale = world.compute_scale(client, now);
+                    let dur = cm.duration_scaled(&cfg.time, client, steps, &mut jrng, scale);
+                    queue.schedule_in(dur, Event::Compute { client, i });
+                }
+                Event::Compute { client, i } => {
+                    if let Some(rejoin) = world.offline_until(client, now) {
+                        queue.schedule_at(rejoin, Event::Compute { client, i });
+                        continue;
+                    }
+                    // Snapshot + dispatch: the coordinator fills the
+                    // slot with the live global (it owns the only
+                    // mutable view of the global), then hands the
+                    // elementwise training passes to the client's
+                    // shard worker.
+                    let slot = arena.alloc();
+                    let d = 0.02 * urng.f32() - 0.01;
+                    // SAFETY: freshly allocated slot; no worker holds it.
+                    core.global().copy_to_flat(unsafe { window.slot_mut(slot.index()) });
+                    ready[client] = false;
+                    task_txs[partition.shard_of(client)]
+                        .send(Task {
+                            client: client as u32,
+                            slot: slot.index() as u32,
+                            delta: d,
+                        })
+                        .map_err(|_| anyhow::anyhow!("shard worker exited early"))?;
+                    core.record_loss(client, (d as f64).abs());
+                    pending[client] = Some((slot, i));
+                    live += 1;
+                    peak_live = peak_live.max(live);
+                    scheduler.request(client, now);
+                    grant_next(&mut scheduler, &mut channel, &mut queue, now, cfg.time.tau_up);
+                }
+                Event::Upload { client } => {
+                    let (slot, i) = pending[client]
+                        .take()
+                        .expect("upload without a pending local model");
+                    // Join: absorb completions (in whatever order the
+                    // workers finished) until this client's local is
+                    // ready. Which *other* flags get set early is
+                    // timing-dependent but unobservable — no decision
+                    // reads them.
+                    while !ready[client] {
+                        let done = done_rx
+                            .recv()
+                            .context("shard worker died before completing its task")?;
+                        ready[done as usize] = true;
+                    }
+                    live -= 1;
+                    if world.upload_lost(client, now) {
+                        core.on_lost_upload(client);
+                        arena.free(slot);
+                    } else {
+                        // SAFETY: completion joined above; no worker
+                        // touches this slot anymore.
+                        core.on_update_flat(client, i, unsafe { window.slot(slot.index()) })?;
+                        arena.free(slot);
+                    }
+                    let i = core.issue_to(client);
+                    queue.schedule_in(cfg.time.tau_down, Event::Download { client, i });
+                    grant_next(&mut scheduler, &mut channel, &mut queue, now, cfg.time.tau_up);
+                }
+            }
+        }
+
+        // Dropping the task senders ends the worker loops; the scope
+        // joins them (outstanding tasks for never-uploaded locals just
+        // finish into slots nobody reads).
+        drop(task_txs);
+
+        let wall = started.elapsed().as_secs_f64().max(1e-9);
+        let report = ScaleSimReport {
+            clients: m,
+            params: cfg.params,
+            policy: policy_label,
+            scheduler: cfg.scheduler.name(),
+            scenario: world_label,
+            shards: k_shards,
+            aggregations: core.iteration(),
+            events,
+            virtual_ticks: queue.now(),
+            wall_secs: wall,
+            events_per_sec: events as f64 / wall,
+            aggs_per_sec: core.iteration() as f64 / wall,
+            mean_staleness: core.mean_staleness(),
+            fairness: scheduler.jain_fairness(),
+            lost_uploads: core.lost_uploads(),
+            mean_train_loss: core.mean_train_loss(),
+            arena_slots: peak_live,
+            arena_live: live,
+            final_norm: core.global().l2_norm(),
+        };
+        Ok((report, core.into_global()))
+    })?;
+
+    Ok((report, model))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scale::run_scale_sim_full;
+    use super::*;
+    use crate::coordinator::SchedulerPolicy;
+
+    fn small_cfg() -> ScaleSimConfig {
+        ScaleSimConfig {
+            clients: 60,
+            iterations: 150,
+            params: 8,
+            ..ScaleSimConfig::default()
+        }
+    }
+
+    #[test]
+    fn matches_the_sequential_reference_bit_for_bit() {
+        let cfg = small_cfg();
+        let (r_ref, w_ref) = run_scale_sim_full(&cfg).unwrap();
+        for shards in [1, 2, 3, 7] {
+            let (r, w) = run_sharded_sim_full(&cfg, shards).unwrap();
+            assert_eq!(
+                r.summary_json().to_string_compact(),
+                r_ref.summary_json().to_string_compact(),
+                "shards={shards}"
+            );
+            assert_eq!(w, w_ref, "final model, shards={shards}");
+        }
+    }
+
+    #[test]
+    fn shard_count_is_clamped_to_clients() {
+        let cfg = ScaleSimConfig {
+            clients: 3,
+            iterations: 9,
+            params: 4,
+            ..ScaleSimConfig::default()
+        };
+        let r = run_sharded_sim(&cfg, 16).unwrap();
+        assert_eq!(r.shards, 3);
+        assert_eq!(r.aggregations, 9);
+    }
+
+    #[test]
+    fn rejects_zero_shards_and_degenerate_configs() {
+        assert!(run_sharded_sim(&small_cfg(), 0).is_err());
+        let bad = ScaleSimConfig {
+            clients: 0,
+            ..ScaleSimConfig::default()
+        };
+        assert!(run_sharded_sim(&bad, 2).is_err());
+        let bad = ScaleSimConfig {
+            aggregation: Some("bogus".into()),
+            ..ScaleSimConfig::default()
+        };
+        assert!(run_sharded_sim(&bad, 2).is_err());
+    }
+
+    #[test]
+    fn multi_pass_sharded_run_still_matches_reference() {
+        let cfg = ScaleSimConfig {
+            train_passes: 5,
+            ..small_cfg()
+        };
+        let (r_ref, w_ref) = run_scale_sim_full(&cfg).unwrap();
+        let (r, w) = run_sharded_sim_full(&cfg, 4).unwrap();
+        assert_eq!(r.summary_json().to_string_compact(), r_ref.summary_json().to_string_compact());
+        assert_eq!(w, w_ref);
+    }
+
+    #[test]
+    fn dropout_scenario_loses_uploads_identically_across_shards() {
+        let cfg = ScaleSimConfig {
+            scenario: Some("dropout:0.2".into()),
+            ..small_cfg()
+        };
+        let a = run_sharded_sim(&cfg, 1).unwrap();
+        let b = run_sharded_sim(&cfg, 3).unwrap();
+        assert!(a.lost_uploads > 0, "{a:?}");
+        assert_eq!(a.lost_uploads, b.lost_uploads);
+        assert_eq!(a.summary_json().to_string_compact(), b.summary_json().to_string_compact());
+    }
+
+    #[test]
+    fn report_carries_the_effective_shard_count() {
+        let r = run_sharded_sim(&small_cfg(), 2).unwrap();
+        assert_eq!(r.shards, 2);
+        // Shards never appear in the deterministic summary.
+        assert!(r.summary_json().get("shards").is_none());
+        assert_eq!(r.to_json().get("shards").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn scheduler_policies_run_sharded() {
+        for sched in [
+            SchedulerPolicy::OldestModelFirst,
+            SchedulerPolicy::Fifo,
+            SchedulerPolicy::RoundRobin,
+        ] {
+            let cfg = ScaleSimConfig {
+                scheduler: sched,
+                ..small_cfg()
+            };
+            let r = run_sharded_sim(&cfg, 3).unwrap();
+            assert_eq!(r.aggregations, 150, "{sched:?}");
+        }
+    }
+}

@@ -21,8 +21,13 @@
 //!   runtime ([`net`]). The coordinator hot path scales to 10^6
 //!   simulated clients (`repro sim`, [`coordinator::scale`]) over the
 //!   arena-backed flat parameter store ([`model::ParamArena`]) and
-//!   O(log n) slot arbitration; [`perf`] is the pinned benchmark suite
-//!   (`repro bench`) whose `BENCH_<date>.json` records CI gates on.
+//!   O(log n) slot arbitration, and shards across cores
+//!   ([`coordinator::shard`], `repro sim --shards N`): disjoint client
+//!   partitions ([`sim::ClientPartition`]) feed one ordered
+//!   aggregation stage with bit-identical output at any shard count;
+//!   [`perf`] is the pinned benchmark suite (`repro bench`) whose
+//!   `BENCH_<date>.json` records CI gates on, including the measured
+//!   multi-shard speedup.
 //! * **L2/L1 (build time)** — `python/compile/`: the paper's CNN in JAX
 //!   with Pallas kernels on the dense layers and the aggregation axpy,
 //!   AOT-lowered to HLO text executed through PJRT ([`runtime`]).

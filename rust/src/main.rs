@@ -23,7 +23,7 @@
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use csmaafl::config::RunConfig;
-use csmaafl::coordinator::{run_scale_sim, ScaleSimConfig, SchedulerPolicy};
+use csmaafl::coordinator::{run_sharded_sim, ScaleSimConfig, SchedulerPolicy};
 use csmaafl::experiment::{self, Plan, PlanRunner};
 use csmaafl::figures::{self, FigureSpec, FIGURES};
 use csmaafl::metrics::write_series_csv;
@@ -57,22 +57,31 @@ COMMANDS:
             repeated across --set flags also forms an axis; separate
             axis values with ';' when they contain commas, e.g.
             --axis scenario=static;churn:0.3,2)
+            with --sim: sweep the coordinator scale simulator instead
+            (keys: clients iterations params seed gamma mu_rho
+            local_steps train_passes jitter scheduler aggregation
+            scenario heterogeneity shards) -> grid.json of deterministic
+            sim summaries, e.g. --sim --axis shards=1,2,4,8
   analyze   [--results results/]   (comparison tables from stored records)
   timeline  [--clients M] [--local-steps E] [--slow-factor a] [--out results/]
   inspect   naive-decay [--clients M] | betas [--clients M]
   smoke     [--artifacts artifacts]
-  sim       [--clients N] [--iterations J] [--params P]
+  sim       [--clients N] [--iterations J] [--params P] [--shards K]
             [--scheduler oldest|fifo|roundrobin] [--aggregation spec]
+            [--scenario spec | --set scenario=spec] [--train-passes P]
             [--heterogeneity prof] [--gamma g] [--seed S]
             [--format table|json]
             (coordinator-only scale simulation: real event loop,
             scheduler and arena aggregation; synthetic local training —
-            completes at --clients 1000000)
-  bench     [--quick] [--suite aggregation|scheduler|event_loop|end_to_end]
-            [--format table|json] [--out results/]
-            [--check BENCH_baseline.json] [--factor 2.0]
+            completes at --clients 1000000. --shards K runs K shard
+            workers, default = available cores; every non-wall-clock
+            field is bit-identical at any K)
+  bench     [--quick] [--suite aggregation|scheduler|event_loop|
+            end_to_end|sharded] [--shards K] [--format table|json]
+            [--out results/] [--check BENCH_baseline.json] [--factor 2.0]
             (pinned-seed perf suite -> <out>/BENCH_<date>.json; --check
-            fails when any case regresses past factor x the baseline)
+            fails when any case regresses past factor x the baseline;
+            --shards sets the multi-shard case of the sharded suite)
   serve     --bind 0.0.0.0:7070 --clients N [--iterations J] [--gamma g]
             [--learner pjrt|linear]          (TCP deployment leader)
   join      --connect host:7070 --worker-id K --workers N
@@ -95,7 +104,7 @@ SCENARIOS (--set scenario=<spec>, event-driven AFL engines):
 
 /// Boolean options (present/absent, no value) — everything else spelled
 /// `--name` expects a value.
-const BOOL_FLAGS: [&str; 1] = ["quick"];
+const BOOL_FLAGS: [&str; 2] = ["quick", "sim"];
 
 /// Minimal option parser: flags with values, repeated --set collection,
 /// whitelisted boolean flags.
@@ -339,19 +348,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Cartesian multi-axis sweep: `--axis key=v1,v2` flags (and any key
-/// repeated across `--set` flags) become plan axes; single-valued
-/// `--set` keys configure the base. Emits a JSON results matrix plus
-/// the long-format curves CSV.
-fn cmd_grid(args: &Args) -> Result<()> {
-    let out_dir = args.opt_or("out", "results");
-    let format = args.opt_or("format", "table");
-    ensure!(
-        format == "table" || format == "json",
-        "unknown --format {format:?} (table|json)"
-    );
-    // Partition --set pairs: a repeated key is an axis, a unique key is
-    // a base-config override.
+/// Scalar `--set` overrides plus sweep axes, in CLI order.
+type GridAxes = (Vec<(String, String)>, Vec<(String, Vec<String>)>);
+
+/// Partition `--set` pairs (a repeated key is an axis, a unique key is
+/// a base override) and parse `--axis` flags. Shared by the learner
+/// grid and the `--sim` grid.
+fn collect_axes(args: &Args) -> Result<GridAxes> {
     let mut scalars: Vec<(String, String)> = Vec::new();
     let mut axes: Vec<(String, Vec<String>)> = Vec::new();
     for (k, v) in &args.sets {
@@ -382,6 +385,25 @@ fn cmd_grid(args: &Args) -> Result<()> {
         );
         axes.push((k.to_string(), values));
     }
+    Ok((scalars, axes))
+}
+
+/// Cartesian multi-axis sweep: `--axis key=v1,v2` flags (and any key
+/// repeated across `--set` flags) become plan axes; single-valued
+/// `--set` keys configure the base. Emits a JSON results matrix plus
+/// the long-format curves CSV. With `--sim`, sweeps the coordinator
+/// scale simulator instead (`cmd_grid_sim`).
+fn cmd_grid(args: &Args) -> Result<()> {
+    if args.flag("sim") {
+        return cmd_grid_sim(args);
+    }
+    let out_dir = args.opt_or("out", "results");
+    let format = args.opt_or("format", "table");
+    ensure!(
+        format == "table" || format == "json",
+        "unknown --format {format:?} (table|json)"
+    );
+    let (scalars, axes) = collect_axes(args)?;
 
     let cfg = match args.opt("config") {
         Some(path) => RunConfig::load(path, &scalars)?,
@@ -432,6 +454,147 @@ fn cmd_grid(args: &Args) -> Result<()> {
         threads
     );
     Ok(())
+}
+
+/// `repro grid --sim`: cartesian sweep over the coordinator scale
+/// simulator. Axes/overrides use `ScaleSimConfig::set_field` keys plus
+/// the engine's `shards` knob; cells run sequentially (each cell is
+/// itself multi-threaded) and the matrix rows are the deterministic
+/// `ScaleSimReport::summary_json` records, so `grid.json` is
+/// byte-identical whatever hardware parallelism each cell used.
+fn cmd_grid_sim(args: &Args) -> Result<()> {
+    let out_dir = args.opt_or("out", "results");
+    let format = args.opt_or("format", "table");
+    ensure!(
+        format == "table" || format == "json",
+        "unknown --format {format:?} (table|json)"
+    );
+    ensure!(
+        args.opt("config").is_none(),
+        "--config does not apply to --sim grids (use --set/--axis sim keys)"
+    );
+    ensure!(
+        args.opt("replicates").is_none(),
+        "--replicates does not apply to --sim grids (sweep seed=... instead)"
+    );
+    let (scalars, axes) = collect_axes(args)?;
+    ensure!(!axes.is_empty(), "--sim grid needs at least one --axis");
+
+    let mut base = ScaleSimConfig::default();
+    let mut base_shards = parse_shards(args.opt("shards"))?;
+    for (k, v) in &scalars {
+        if k == "shards" {
+            base_shards = parse_shards(Some(v))?;
+        } else {
+            base.set_field(k, v)?;
+        }
+    }
+
+    // Expand through the experiment engine's Plan (first axis
+    // outermost, last innermost — the same stable order and `k=v`
+    // spelling as learner grids), with the sim keys as overrides.
+    let mut plan = Plan::new();
+    for (k, vs) in &axes {
+        plan = plan.axis(k, vs.clone());
+    }
+    let cells = plan.expand(base.seed);
+    ensure!(!cells.is_empty(), "grid expanded to zero cells (empty axis?)");
+
+    // Validate every cell before any cell runs (same fail-fast contract
+    // as the learner grid): `shards` parses here, everything else
+    // through set_field + the registry-spelling validation.
+    let mut jobs = Vec::with_capacity(cells.len());
+    for cell in &cells {
+        let mut cfg = base.clone();
+        let mut shards = base_shards;
+        let mut outcome = Ok(());
+        for (k, v) in &cell.overrides {
+            outcome = if k == "shards" {
+                parse_shards(Some(v)).map(|n| shards = n)
+            } else {
+                cfg.set_field(k, v)
+            };
+            if outcome.is_err() {
+                break;
+            }
+        }
+        outcome
+            .and_then(|()| cfg.validate())
+            .with_context(|| format!("cell {} ({})", cell.index, cell.spec()))?;
+        jobs.push((cfg, shards));
+    }
+
+    let t0 = std::time::Instant::now();
+    let mut rows = Vec::with_capacity(jobs.len());
+    for (cell, (cfg, shards)) in cells.iter().zip(&jobs) {
+        let report = run_sharded_sim(cfg, *shards)
+            .with_context(|| format!("cell {} ({})", cell.index, cell.spec()))?;
+        if format == "table" {
+            println!(
+                "{:<40} aggs={:<8} events={:<9} ticks={:<10} lost={:<6} wall={:.2}s",
+                cell.spec(),
+                report.aggregations,
+                report.events,
+                report.virtual_ticks,
+                report.lost_uploads,
+                report.wall_secs
+            );
+        }
+        let mut overrides = Json::object();
+        for (k, v) in &cell.overrides {
+            overrides.set(k, Json::Str(v.clone()));
+        }
+        let mut row = Json::object();
+        row.set("index", Json::Int(cell.index as i64))
+            .set("spec", Json::Str(cell.spec()))
+            .set("overrides", overrides)
+            .set("summary", report.summary_json());
+        rows.push(row);
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let axes_json = axes
+        .iter()
+        .map(|(key, values)| {
+            let mut a = Json::object();
+            a.set("key", Json::Str(key.clone())).set(
+                "values",
+                Json::Array(values.iter().map(|v| Json::Str(v.clone())).collect()),
+            );
+            a
+        })
+        .collect();
+    let mut record = Json::object();
+    record
+        .set("axes", Json::Array(axes_json))
+        .set("jobs", Json::Array(rows));
+    std::fs::create_dir_all(out_dir)?;
+    std::fs::write(format!("{out_dir}/grid.json"), record.to_string_pretty())?;
+    if format == "json" {
+        println!("{}", record.to_string_pretty());
+    }
+    println!(
+        "sim grid: {} cell(s) in {elapsed:.1}s; wrote {out_dir}/grid.json",
+        jobs.len()
+    );
+    Ok(())
+}
+
+/// Parse a `--shards` value: a positive worker count, defaulting to the
+/// machine's available parallelism when absent.
+fn parse_shards(opt: Option<&str>) -> Result<usize> {
+    match opt {
+        Some(s) => {
+            let n: usize = s
+                .parse()
+                .map_err(|_| anyhow!("--shards expects a positive integer, got {s:?}"))?;
+            ensure!(n >= 1, "--shards must be >= 1, got {n}");
+            Ok(n)
+        }
+        None => Ok(std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)),
+    }
 }
 
 /// Paper-facing comparison tables from the stored figure records.
@@ -516,7 +679,8 @@ fn cmd_smoke(args: &Args) -> Result<()> {
 
 /// Coordinator-only scale simulation: the real event loop, scheduler
 /// fast paths and arena-backed aggregation at up to 10^6 clients, with
-/// synthetic local training (no learner, no dataset).
+/// synthetic local training (no learner, no dataset) parallelized over
+/// `--shards` workers — bit-identical output at any shard count.
 fn cmd_sim(args: &Args) -> Result<()> {
     let format = args.opt_or("format", "table");
     ensure!(
@@ -529,6 +693,19 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let het_spec = args.opt_or("heterogeneity", "uniform:4");
     let heterogeneity = HeterogeneityProfile::parse(het_spec)
         .ok_or_else(|| anyhow!("unknown heterogeneity {het_spec:?}"))?;
+    let shards = parse_shards(args.opt("shards"))?;
+    // `--set` on sim is reserved for the registry spellings shared with
+    // the experiment engine; everything else has a dedicated flag.
+    let mut scenario = args.opt("scenario").map(str::to_string);
+    for (k, v) in &args.sets {
+        match k.as_str() {
+            "scenario" => scenario = Some(v.clone()),
+            other => bail!(
+                "repro sim --set supports only scenario=<spec> \
+                 (got {other:?}; use the dedicated --{other} flag if one exists)"
+            ),
+        }
+    }
     let cfg = ScaleSimConfig {
         clients: args.opt_or("clients", "100000").parse()?,
         iterations: args.opt_or("iterations", "0").parse()?,
@@ -536,11 +713,13 @@ fn cmd_sim(args: &Args) -> Result<()> {
         seed: args.opt_or("seed", "42").parse()?,
         scheduler,
         aggregation: args.opt("aggregation").map(str::to_string),
+        scenario,
         gamma: args.opt_or("gamma", "0.2").parse()?,
+        train_passes: args.opt_or("train-passes", "1").parse()?,
         heterogeneity,
         ..ScaleSimConfig::default()
     };
-    let report = run_scale_sim(&cfg)?;
+    let report = run_sharded_sim(&cfg, shards)?;
     if format == "json" {
         println!("{}", report.to_json().to_string_pretty());
     } else {
@@ -564,6 +743,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let cfg = perf::BenchConfig {
         quick: args.flag("quick"),
         suite: args.opt("suite").map(str::to_string),
+        // Only an explicit --shards is forwarded; the suite otherwise
+        // picks min(4, available cores) for its multi-shard case.
+        shards: args.opt("shards").map(|s| parse_shards(Some(s))).transpose()?,
     };
     // Load and schema-check the baseline up front so a bad path, bad
     // JSON or wrong-schema file fails before the (slow) suites run —

@@ -6,3 +6,4 @@ pub use params::{
     axpy_flat, l2_accumulate, lerp_flat, ParamArena, ParamLayout, ParamSet, SlotId, Tensor,
     TensorSpec,
 };
+pub(crate) use params::SlotWindow;

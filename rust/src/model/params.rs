@@ -326,6 +326,13 @@ impl ParamLayout {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SlotId(u32);
 
+impl SlotId {
+    /// The slot's dense pool index (stable for the slot's lifetime).
+    pub fn index(&self) -> usize {
+        self.0 as usize
+    }
+}
+
 /// Arena-backed, structure-of-arrays parameter store: `slots × numel`
 /// f32 values in one contiguous buffer, all slots sharing one
 /// [`ParamLayout`]. `alloc`/`free` recycle slots through a freelist, so
@@ -338,6 +345,10 @@ pub struct ParamArena {
     data: Vec<f32>,
     free: Vec<u32>,
     in_use: Vec<bool>,
+    /// True for [`ParamArena::preallocated`] arenas: the backing buffer
+    /// must never be reallocated (raw slot windows may point into it),
+    /// so exhausting the freelist panics instead of growing.
+    fixed: bool,
 }
 
 impl ParamArena {
@@ -348,6 +359,43 @@ impl ParamArena {
             data: Vec::new(),
             free: Vec::new(),
             in_use: Vec::new(),
+            fixed: false,
+        }
+    }
+
+    /// An arena with all `slots` slots pre-created (zeroed) and the
+    /// backing buffer at its final size. `alloc` recycles through the
+    /// freelist exactly as on a grown arena but can never reallocate the
+    /// backing storage; requesting more than `slots` concurrent slots
+    /// panics instead of growing. This is the storage contract the
+    /// sharded coordinator's raw slot window (`slot_window`, crate
+    /// internal) relies on: pointers into the buffer stay valid for
+    /// the arena's whole lifetime. Note that [`ParamArena::slots`]
+    /// reports `slots` from the start (every slot exists), so callers
+    /// needing a concurrency high-water mark must track it themselves.
+    pub fn preallocated(layout: ParamLayout, slots: usize) -> ParamArena {
+        let numel = layout.numel();
+        ParamArena {
+            layout,
+            data: vec![0.0; slots * numel],
+            // Reverse order so the first allocations hand out slot 0, 1,
+            // ... — same visible order as a freshly grown arena.
+            free: (0..slots as u32).rev().collect(),
+            in_use: vec![false; slots],
+            fixed: true,
+        }
+    }
+
+    /// A raw, `Send` view over this arena's slot storage for concurrent
+    /// disjoint-slot access from worker threads. Only sound over a
+    /// [`ParamArena::preallocated`] arena (fixed-size buffer); see
+    /// [`SlotWindow`] for the exclusivity protocol the caller must
+    /// uphold.
+    pub(crate) fn slot_window(&mut self) -> SlotWindow {
+        SlotWindow {
+            base: self.data.as_mut_ptr(),
+            numel: self.layout.numel(),
+            slots: self.in_use.len(),
         }
     }
 
@@ -374,6 +422,11 @@ impl ParamArena {
             self.in_use[idx as usize] = true;
             return SlotId(idx);
         }
+        assert!(
+            !self.fixed,
+            "preallocated arena exhausted ({} slots)",
+            self.in_use.len()
+        );
         let idx = self.in_use.len() as u32;
         self.data.resize(self.data.len() + self.layout.numel(), 0.0);
         self.in_use.push(true);
@@ -414,6 +467,62 @@ impl ParamArena {
     /// allocates, so keep it off the hot path).
     pub fn to_set(&self, id: SlotId) -> ParamSet {
         ParamSet::from_flat(&self.layout, self.get(id))
+    }
+}
+
+/// Raw, `Send + Copy` view over a [`ParamArena::preallocated`] arena's
+/// slot storage: base pointer + slot stride. The sharded coordinator
+/// (`coordinator::shard`) copies one of these into every worker thread
+/// so disjoint slots can be filled in parallel without locking.
+///
+/// # Exclusivity protocol (upheld by the owner, checked nowhere)
+///
+/// * All views derive from one `slot_window` call; the arena's backing
+///   buffer is fixed-size, so the base pointer stays valid for the
+///   arena's lifetime.
+/// * At most one thread touches a given slot at a time. The sharded
+///   coordinator enforces this by construction: a slot is published to
+///   exactly one worker over a channel and not read back (or freed)
+///   until that worker's completion message has been received — both
+///   channel operations are happens-before edges.
+/// * While any view is live, the owner must not create references into
+///   the arena's buffer through safe accessors ([`ParamArena::get`] /
+///   [`ParamArena::get_mut`]); `alloc`/`free` remain fine (they touch
+///   only the freelist bookkeeping on a preallocated arena).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct SlotWindow {
+    base: *mut f32,
+    numel: usize,
+    slots: usize,
+}
+
+// SAFETY: the window is a plain (pointer, stride) pair; cross-thread use
+// is governed by the exclusivity protocol above.
+unsafe impl Send for SlotWindow {}
+
+impl SlotWindow {
+    /// Mutable view of slot `idx`. The window is `Copy`, so the caller
+    /// picks the view's lifetime — it must not outlive the arena.
+    ///
+    /// # Safety
+    ///
+    /// The caller must hold exclusive access to slot `idx` per the
+    /// protocol in the type docs, `idx` must be in range (checked), and
+    /// the chosen lifetime must end before the arena is dropped.
+    pub(crate) unsafe fn slot_mut<'a>(self, idx: usize) -> &'a mut [f32] {
+        assert!(idx < self.slots, "slot {idx} out of window ({})", self.slots);
+        std::slice::from_raw_parts_mut(self.base.add(idx * self.numel), self.numel)
+    }
+
+    /// Shared view of slot `idx`.
+    ///
+    /// # Safety
+    ///
+    /// As [`SlotWindow::slot_mut`]: no other thread may be writing the
+    /// slot concurrently, and the view must not outlive the arena.
+    pub(crate) unsafe fn slot<'a>(self, idx: usize) -> &'a [f32] {
+        assert!(idx < self.slots, "slot {idx} out of window ({})", self.slots);
+        std::slice::from_raw_parts(self.base.add(idx * self.numel), self.numel)
     }
 }
 
@@ -573,6 +682,52 @@ mod tests {
         let s = a.alloc_from_set(&p);
         assert_eq!(a.get(s), &[1.0, 2.0, 3.0]);
         assert_eq!(a.to_set(s), p);
+    }
+
+    #[test]
+    fn preallocated_arena_recycles_without_reallocating() {
+        let layout = ParamLayout::new(vec![spec("w", &[3])]);
+        let mut a = ParamArena::preallocated(layout, 4);
+        assert_eq!(a.slots(), 4);
+        assert_eq!(a.live(), 0);
+        let base = a.slot_window().base;
+        let s0 = a.alloc();
+        assert_eq!(s0.index(), 0, "first alloc hands out slot 0");
+        a.get_mut(s0).copy_from_slice(&[1.0, 2.0, 3.0]);
+        let s1 = a.alloc();
+        assert_eq!(s1.index(), 1);
+        a.free(s0);
+        let s2 = a.alloc();
+        assert_eq!(s2, s0, "freelist recycling as on a grown arena");
+        assert_eq!(a.live(), 2);
+        // The backing buffer never moved.
+        assert_eq!(a.slot_window().base, base);
+    }
+
+    #[test]
+    #[should_panic]
+    fn preallocated_arena_panics_when_exhausted() {
+        let layout = ParamLayout::new(vec![spec("w", &[2])]);
+        let mut a = ParamArena::preallocated(layout, 1);
+        let _s0 = a.alloc();
+        let _s1 = a.alloc();
+    }
+
+    #[test]
+    fn slot_window_views_match_safe_accessors() {
+        let layout = ParamLayout::new(vec![spec("w", &[2])]);
+        let mut a = ParamArena::preallocated(layout, 2);
+        let s0 = a.alloc();
+        let s1 = a.alloc();
+        let w = a.slot_window();
+        // SAFETY: single-threaded test, no overlapping views held.
+        unsafe {
+            w.slot_mut(s0.index()).copy_from_slice(&[1.5, -2.5]);
+            w.slot_mut(s1.index()).copy_from_slice(&[9.0, 8.0]);
+            assert_eq!(w.slot(s0.index()), &[1.5, -2.5]);
+        }
+        assert_eq!(a.get(s0), &[1.5, -2.5]);
+        assert_eq!(a.get(s1), &[9.0, 8.0]);
     }
 
     #[test]

@@ -19,6 +19,7 @@ use crate::coordinator::policy::{AggregationPolicy, PolicyParams, StalenessEq11}
 use crate::log_info;
 use crate::model::{ParamSet, TensorSpec};
 use crate::net::wire::{self, Message};
+use crate::sim::OrderedMerge;
 
 /// Leader-side configuration.
 #[derive(Debug, Clone)]
@@ -140,28 +141,50 @@ pub fn run_leader(cfg: &LeaderConfig, w0: ParamSet) -> Result<LeaderReport> {
 
     // Aggregation loop (Algorithm 1, server side): every weight decision
     // happens inside ServerCore, shared bit-for-bit with the simulator.
-    let started = Instant::now();
-    let mut alive = cfg.clients;
-    while core.iteration() < cfg.max_iterations && alive > 0 {
-        match rx.recv() {
-            Ok(Inbound::Update {
+    // Concurrent uploads are staged through the simulator's ordered
+    // fan-in type (`sim::partition::OrderedMerge`): block for one
+    // inbound frame, drain whatever else has already arrived, then
+    // apply the burst in ascending (start iteration, worker id) order.
+    // Within a drained burst, socket arrival order therefore no longer
+    // decides aggregation order; burst *membership* still depends on
+    // real-world timing, so this is a tie-break discipline, not the
+    // sharded simulator's full determinism (which needs virtual time).
+    fn stage(inbound: Inbound, staged: &mut OrderedMerge<ParamSet>, alive: &mut usize) {
+        match inbound {
+            Inbound::Update {
                 worker,
                 start_iteration,
                 params,
-            }) => {
-                core.on_update(worker, start_iteration, &params, &NativeAggregator)?;
-                // Fresh global back to this worker only.
-                let iteration = core.issue_to(worker);
-                wire::send(&mut writers[worker], &Message::Global {
-                    iteration,
-                    params: core.global().clone(),
-                })?;
-            }
-            Ok(Inbound::Gone(worker)) => {
+            } => staged.push(start_iteration, worker, params),
+            Inbound::Gone(worker) => {
                 log_info!("leader: worker {worker} disconnected");
-                alive -= 1;
+                *alive -= 1;
             }
+        }
+    }
+
+    let started = Instant::now();
+    let mut alive = cfg.clients;
+    let mut staged: OrderedMerge<ParamSet> = OrderedMerge::new();
+    'serve: while core.iteration() < cfg.max_iterations && alive > 0 {
+        match rx.recv() {
+            Ok(inbound) => stage(inbound, &mut staged, &mut alive),
             Err(_) => break,
+        }
+        while let Ok(inbound) = rx.try_recv() {
+            stage(inbound, &mut staged, &mut alive);
+        }
+        while let Some((start_iteration, worker, params)) = staged.pop() {
+            core.on_update(worker, start_iteration, &params, &NativeAggregator)?;
+            // Fresh global back to this worker only.
+            let iteration = core.issue_to(worker);
+            wire::send(&mut writers[worker], &Message::Global {
+                iteration,
+                params: core.global().clone(),
+            })?;
+            if core.iteration() >= cfg.max_iterations {
+                break 'serve;
+            }
         }
     }
 

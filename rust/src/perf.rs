@@ -1,7 +1,7 @@
 //! The pinned-seed performance suite behind `repro bench`: the repo's
 //! perf trajectory as machine-readable `BENCH_<date>.json` records.
 //!
-//! Four suites cover the hot paths this crate optimizes:
+//! Five suites cover the hot paths this crate optimizes:
 //!
 //! | Suite         | Cases                              | What it measures |
 //! |---------------|------------------------------------|------------------|
@@ -9,13 +9,18 @@
 //! | `scheduler`   | `<policy>_<m>`                     | request+grant drain of the heap/cursor fast paths |
 //! | `event_loop`  | `sim_<m>_clients`                  | full coordinator event loop (`coordinator::scale`), ns per event |
 //! | `end_to_end`  | `grid_2x_gamma`                    | tiny learner-driven grid through the `PlanRunner` |
+//! | `sharded`     | `sim_<m>_shards1`, `sim_<m>_multi`, `speedup_multi_vs_1` | the sharded coordinator (`coordinator::shard`) at heavy synthetic training: ns per event single- vs multi-shard, plus their ratio (multi/single — dimensionless, < 1 means speedup) |
 //!
 //! The record schema (`csmaafl-bench-v1`) is
 //! `suites → <suite> → <case> → {iters, ns_per_iter, clients}` plus
-//! top-level `schema`, `date` and `quick` fields. Case *names and
-//! inputs* are pinned and deterministic; the measured `ns_per_iter`
-//! values are, of course, machine-dependent. [`check`] compares a fresh
-//! run against a stored baseline and reports every case slower than
+//! top-level `schema`, `date` and `quick` fields; `sharded` cases carry
+//! an extra `shards` field (consumers must ignore unknown per-case
+//! keys). Case *names and inputs* are pinned and deterministic; the
+//! measured `ns_per_iter` values are, of course, machine-dependent —
+//! except `speedup_multi_vs_1`, whose "ns_per_iter" holds the
+//! multi/single wall-clock ratio so the regression gate bounds the
+//! parallel path losing its advantage. [`check`] compares a fresh run
+//! against a stored baseline and reports every case slower than
 //! `factor ×` its baseline — the CI `perf-smoke` gate
 //! (see `docs/BENCHMARKS.md`).
 
@@ -24,7 +29,9 @@ use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::config::RunConfig;
-use crate::coordinator::{run_scale_sim, ScaleSimConfig, SchedulerPolicy, UploadScheduler};
+use crate::coordinator::{
+    run_scale_sim, run_sharded_sim, ScaleSimConfig, SchedulerPolicy, UploadScheduler,
+};
 use crate::experiment::{Plan, PlanRunner};
 use crate::model::{lerp_flat, ParamArena, ParamLayout, ParamSet, TensorSpec};
 use crate::session::{LearnerKind, Session};
@@ -36,7 +43,13 @@ use crate::util::rng::Rng;
 pub const BENCH_SCHEMA: &str = "csmaafl-bench-v1";
 
 /// The suite names, in run order (the `--suite` filter vocabulary).
-pub const SUITES: [&str; 4] = ["aggregation", "scheduler", "event_loop", "end_to_end"];
+pub const SUITES: [&str; 5] = [
+    "aggregation",
+    "scheduler",
+    "event_loop",
+    "end_to_end",
+    "sharded",
+];
 
 /// How to run the suite.
 #[derive(Debug, Clone, Default)]
@@ -45,6 +58,9 @@ pub struct BenchConfig {
     pub quick: bool,
     /// Run only this suite (must be one of [`SUITES`]); `None` = all.
     pub suite: Option<String>,
+    /// Shard count of the `sharded` suite's multi-shard case; `None` =
+    /// min(4, available cores).
+    pub shards: Option<usize>,
 }
 
 /// One measured case, pre-JSON.
@@ -53,6 +69,8 @@ struct Case {
     iters: u64,
     ns_per_iter: f64,
     clients: u64,
+    /// Shard-worker count, for `sharded`-suite cases only.
+    shards: Option<u64>,
 }
 
 fn bencher(group: &str, quick: bool) -> Bencher {
@@ -83,6 +101,7 @@ fn suite_aggregation(quick: bool) -> Vec<Case> {
             iters: r.iters,
             ns_per_iter: r.mean_ns,
             clients: 0,
+            shards: None,
         });
     }
     // Steady-state arena recycling: alloc + flat copy-in + free.
@@ -103,6 +122,7 @@ fn suite_aggregation(quick: bool) -> Vec<Case> {
         iters: r.iters,
         ns_per_iter: r.mean_ns,
         clients: 0,
+        shards: None,
     });
     out
 }
@@ -133,6 +153,7 @@ fn suite_scheduler(quick: bool) -> Vec<Case> {
             iters: r.iters,
             ns_per_iter: r.mean_ns,
             clients: m as u64,
+            shards: None,
         });
     }
     out
@@ -152,6 +173,7 @@ fn suite_event_loop(quick: bool) -> Result<Vec<Case>> {
         iters: r.events,
         ns_per_iter: r.wall_secs * 1e9 / r.events.max(1) as f64,
         clients: clients as u64,
+        shards: None,
     }])
 }
 
@@ -175,7 +197,58 @@ fn suite_end_to_end(quick: bool) -> Result<Vec<Case>> {
         iters: runs.len() as u64,
         ns_per_iter: ns / runs.len() as f64,
         clients: 4,
+        shards: None,
     }])
+}
+
+/// The `sharded` suite: the same pinned scale-sim config on 1 shard
+/// worker vs `shards` workers, at `train_passes` heavy enough that the
+/// parallelizable synthetic-training work dominates the sequential
+/// aggregation stage. Also asserts the engines' deterministic summaries
+/// agree — the bench would be meaningless if the fast path diverged.
+fn suite_sharded(quick: bool, shards: usize) -> Result<Vec<Case>> {
+    let clients = if quick { 5_000 } else { 20_000 };
+    let cfg = ScaleSimConfig {
+        clients,
+        iterations: clients as u64,
+        params: 64,
+        train_passes: 8,
+        ..ScaleSimConfig::default()
+    };
+    let single = run_sharded_sim(&cfg, 1)?;
+    let multi = run_sharded_sim(&cfg, shards)?;
+    ensure!(
+        single.summary_json().to_string_compact() == multi.summary_json().to_string_compact(),
+        "sharded determinism violated: 1-shard and {}-shard summaries differ",
+        multi.shards
+    );
+    let ns = |r: &crate::coordinator::ScaleSimReport| r.wall_secs * 1e9 / r.events.max(1) as f64;
+    Ok(vec![
+        Case {
+            name: format!("sim_{clients}_shards1"),
+            iters: single.events,
+            ns_per_iter: ns(&single),
+            clients: clients as u64,
+            shards: Some(1),
+        },
+        Case {
+            name: format!("sim_{clients}_multi"),
+            iters: multi.events,
+            ns_per_iter: ns(&multi),
+            clients: clients as u64,
+            shards: Some(multi.shards as u64),
+        },
+        Case {
+            // Dimensionless multi/single ratio in the ns_per_iter slot:
+            // < 1 means the shards paid off; the --check gate bounds it
+            // like any other case, so losing the speedup regresses CI.
+            name: "speedup_multi_vs_1".into(),
+            iters: 1,
+            ns_per_iter: ns(&multi) / ns(&single).max(1e-9),
+            clients: clients as u64,
+            shards: Some(multi.shards as u64),
+        },
+    ])
 }
 
 fn cases_json(cases: Vec<Case>) -> Json {
@@ -185,6 +258,9 @@ fn cases_json(cases: Vec<Case>) -> Json {
         cj.set("iters", Json::Int(c.iters as i64))
             .set("ns_per_iter", Json::Float(c.ns_per_iter))
             .set("clients", Json::Int(c.clients as i64));
+        if let Some(s) = c.shards {
+            cj.set("shards", Json::Int(s as i64));
+        }
         o.set(&c.name, cj);
     }
     o
@@ -195,7 +271,7 @@ pub fn run(cfg: &BenchConfig) -> Result<Json> {
     if let Some(s) = &cfg.suite {
         ensure!(
             SUITES.contains(&s.as_str()),
-            "unknown suite {s:?} (aggregation|scheduler|event_loop|end_to_end)"
+            "unknown suite {s:?} (aggregation|scheduler|event_loop|end_to_end|sharded)"
         );
     }
     let selected = |name: &str| match cfg.suite.as_deref() {
@@ -214,6 +290,14 @@ pub fn run(cfg: &BenchConfig) -> Result<Json> {
     }
     if selected("end_to_end") {
         suites.set("end_to_end", cases_json(suite_end_to_end(cfg.quick)?));
+    }
+    if selected("sharded") {
+        let shards = cfg.shards.unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get().min(4))
+                .unwrap_or(1)
+        });
+        suites.set("sharded", cases_json(suite_sharded(cfg.quick, shards)?));
     }
     let mut root = Json::object();
     root.set("schema", Json::Str(BENCH_SCHEMA.into()))
@@ -510,8 +594,23 @@ mod tests {
         let cfg = BenchConfig {
             quick: true,
             suite: Some("bogus".into()),
+            shards: None,
         };
         assert!(run(&cfg).is_err());
+    }
+
+    #[test]
+    fn sharded_suite_emits_both_shard_counts_and_the_ratio() {
+        let cases = suite_sharded(true, 2).unwrap();
+        let names: Vec<&str> = cases.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(names, ["sim_5000_shards1", "sim_5000_multi", "speedup_multi_vs_1"]);
+        assert_eq!(cases[0].shards, Some(1));
+        assert_eq!(cases[1].shards, Some(2));
+        for c in &cases {
+            assert!(c.ns_per_iter > 0.0, "{}", c.name);
+        }
+        // The ratio case is dimensionless and sane (not a raw timing).
+        assert!(cases[2].ns_per_iter < 100.0, "{}", cases[2].ns_per_iter);
     }
 
     #[test]

@@ -8,10 +8,12 @@
 
 mod compute;
 mod event;
+pub mod partition;
 pub mod scenario;
 mod time_model;
 
 pub use compute::{ComputeModel, HeterogeneityProfile};
 pub use event::EventQueue;
+pub use partition::{ClientPartition, OrderedMerge};
 pub use scenario::Scenario;
 pub use time_model::{Ticks, TimeModel, UplinkChannel};

@@ -1,0 +1,245 @@
+//! Client partitioning and deterministic merge — the two structural
+//! primitives of the sharded coordinator (`coordinator::shard`), shared
+//! with the TCP deployment leader (`net::leader`) so the simulator and
+//! the deployment keep one aggregation discipline.
+//!
+//! * [`ClientPartition`] splits a client population into K contiguous,
+//!   disjoint shards (sizes differing by at most one). The sharded
+//!   simulator routes each client's local-training work to the worker
+//!   owning its shard; which shard a client lands in can affect only
+//!   *which thread* does the arithmetic, never the result.
+//! * [`OrderedMerge`] is the ordered fan-in: items arriving in
+//!   nondeterministic order are staged and released in ascending
+//!   `(key, client)` order. It packages, for consumers without a
+//!   virtual clock, the same `(time, insertion seq)` discipline the
+//!   sharded simulator gets from [`crate::sim::EventQueue`]: the
+//!   deployment leader stages each drained burst of concurrent TCP
+//!   uploads under `(start iteration, worker id)`, so socket races
+//!   within a burst cannot reorder aggregation (burst membership
+//!   itself remains wall-clock-dependent — full determinism needs the
+//!   simulator's virtual time). Ties on the full key are broken by
+//!   insertion sequence, exactly like the event queue.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// A disjoint, contiguous K-way split of clients `0..clients`.
+///
+/// The shard count is clamped to `[1, clients]` (an empty shard would be
+/// a worker with no possible work). Shard sizes differ by at most one,
+/// with the remainder spread over the lowest-numbered shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClientPartition {
+    clients: usize,
+    shards: usize,
+}
+
+impl ClientPartition {
+    /// A partition of `clients` clients into (at most) `shards` shards.
+    /// `shards` is clamped to `[1, max(clients, 1)]`.
+    pub fn new(clients: usize, shards: usize) -> ClientPartition {
+        ClientPartition {
+            clients,
+            shards: shards.clamp(1, clients.max(1)),
+        }
+    }
+
+    /// The effective shard count after clamping.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The client population size.
+    pub fn clients(&self) -> usize {
+        self.clients
+    }
+
+    /// The shard owning `client`.
+    pub fn shard_of(&self, client: usize) -> usize {
+        debug_assert!(client < self.clients, "client {client} out of range");
+        let base = self.clients / self.shards;
+        let rem = self.clients % self.shards;
+        // The first `rem` shards own `base + 1` clients each.
+        let wide = rem * (base + 1);
+        if client < wide {
+            client / (base + 1)
+        } else {
+            rem + (client - wide) / base
+        }
+    }
+
+    /// The contiguous client range of shard `k`.
+    pub fn range(&self, k: usize) -> std::ops::Range<usize> {
+        assert!(k < self.shards, "shard {k} out of range ({})", self.shards);
+        let base = self.clients / self.shards;
+        let rem = self.clients % self.shards;
+        let start = k * base + k.min(rem);
+        let len = base + usize::from(k < rem);
+        start..start + len
+    }
+}
+
+/// Wrapper keeping the heap ordering independent of the payload (the
+/// same idiom as the event queue's `EventBox`).
+#[derive(Debug)]
+struct Item<T>(T);
+
+impl<T> PartialEq for Item<T> {
+    fn eq(&self, _: &Self) -> bool {
+        true
+    }
+}
+impl<T> Eq for Item<T> {}
+impl<T> PartialOrd for Item<T> {
+    fn partial_cmp(&self, _: &Self) -> Option<std::cmp::Ordering> {
+        Some(std::cmp::Ordering::Equal)
+    }
+}
+impl<T> Ord for Item<T> {
+    fn cmp(&self, _: &Self) -> std::cmp::Ordering {
+        std::cmp::Ordering::Equal
+    }
+}
+
+/// Ordered fan-in stage: items pushed in any order pop in ascending
+/// `(key, client, insertion sequence)` order.
+///
+/// Consumption order of a staged set is a pure function of the items
+/// themselves, whatever order threads or sockets delivered them in.
+/// The deployment leader stages each drained burst of concurrent
+/// uploads here (key = start iteration); the sharded simulator's
+/// aggregation stage gets the equivalent ordering from its event
+/// queue's `(virtual time, insertion seq)` key, which is why the two
+/// paths share this module's docs rather than this type's heap.
+#[derive(Debug)]
+pub struct OrderedMerge<T> {
+    heap: BinaryHeap<Reverse<(u64, usize, u64, Item<T>)>>,
+    seq: u64,
+}
+
+impl<T> Default for OrderedMerge<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> OrderedMerge<T> {
+    /// An empty merge stage.
+    pub fn new() -> OrderedMerge<T> {
+        OrderedMerge {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    /// Stage `item` under `(key, client)`.
+    pub fn push(&mut self, key: u64, client: usize, item: T) {
+        self.heap.push(Reverse((key, client, self.seq, Item(item))));
+        self.seq += 1;
+    }
+
+    /// Release the staged item with the smallest `(key, client)`.
+    pub fn pop(&mut self) -> Option<(u64, usize, T)> {
+        let Reverse((key, client, _, Item(item))) = self.heap.pop()?;
+        Some((key, client, item))
+    }
+
+    /// The `(key, client)` that [`OrderedMerge::pop`] would release next.
+    pub fn peek_key(&self) -> Option<(u64, usize)> {
+        self.heap.peek().map(|Reverse((k, c, _, _))| (*k, *c))
+    }
+
+    /// Number of staged items.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Whether nothing is staged.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_population_disjointly() {
+        for (clients, shards) in [(10, 3), (7, 7), (12, 4), (5, 1), (1, 8), (100, 16)] {
+            let p = ClientPartition::new(clients, shards);
+            assert!(p.shards() >= 1 && p.shards() <= clients.max(1));
+            let mut seen = vec![false; clients];
+            for k in 0..p.shards() {
+                for c in p.range(k) {
+                    assert!(!seen[c], "client {c} in two shards ({clients}x{shards})");
+                    seen[c] = true;
+                    assert_eq!(p.shard_of(c), k, "shard_of({c}) ({clients}x{shards})");
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "uncovered client ({clients}x{shards})");
+        }
+    }
+
+    #[test]
+    fn partition_sizes_differ_by_at_most_one() {
+        let p = ClientPartition::new(10, 3);
+        let sizes: Vec<usize> = (0..3).map(|k| p.range(k).len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert_eq!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap(), 1);
+    }
+
+    #[test]
+    fn partition_clamps_degenerate_shard_counts() {
+        assert_eq!(ClientPartition::new(4, 0).shards(), 1);
+        assert_eq!(ClientPartition::new(4, 99).shards(), 4);
+        assert_eq!(ClientPartition::new(0, 3).shards(), 1);
+    }
+
+    #[test]
+    fn merge_releases_in_key_then_client_order() {
+        let mut m = OrderedMerge::new();
+        m.push(20, 1, "c");
+        m.push(10, 5, "b");
+        m.push(10, 2, "a");
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.peek_key(), Some((10, 2)));
+        assert_eq!(m.pop(), Some((10, 2, "a")));
+        assert_eq!(m.pop(), Some((10, 5, "b")));
+        assert_eq!(m.pop(), Some((20, 1, "c")));
+        assert_eq!(m.pop(), None);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn merge_breaks_full_ties_by_insertion() {
+        let mut m = OrderedMerge::new();
+        m.push(7, 0, 1);
+        m.push(7, 0, 2);
+        m.push(7, 0, 3);
+        assert_eq!(m.pop().unwrap().2, 1);
+        assert_eq!(m.pop().unwrap().2, 2);
+        assert_eq!(m.pop().unwrap().2, 3);
+    }
+
+    #[test]
+    fn merge_order_is_independent_of_arrival_order() {
+        let entries = [(3u64, 1usize), (1, 9), (2, 0), (1, 1), (3, 0)];
+        let mut a = OrderedMerge::new();
+        let mut b = OrderedMerge::new();
+        for &(k, c) in &entries {
+            a.push(k, c, (k, c));
+        }
+        for &(k, c) in entries.iter().rev() {
+            b.push(k, c, (k, c));
+        }
+        let drain = |mut m: OrderedMerge<(u64, usize)>| {
+            let mut out = Vec::new();
+            while let Some(e) = m.pop() {
+                out.push(e);
+            }
+            out
+        };
+        assert_eq!(drain(a), drain(b));
+    }
+}

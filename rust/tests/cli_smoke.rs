@@ -386,6 +386,150 @@ fn sim_prints_a_table_by_default() {
 }
 
 #[test]
+fn sim_rejects_zero_or_malformed_shards() {
+    let out = repro(&["sim", "--clients", "10", "--shards", "0"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("--shards"), "{}", stderr(&out));
+    let out = repro(&["sim", "--clients", "10", "--shards", "many"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("--shards"), "{}", stderr(&out));
+}
+
+#[test]
+fn sim_shards_only_change_wall_clock_fields() {
+    let run = |shards: &str| {
+        let out = repro(&[
+            "sim", "--clients", "60", "--iterations", "120", "--params", "8",
+            "--shards", shards, "--format", "json",
+        ]);
+        assert!(out.status.success(), "{}", stderr(&out));
+        csmaafl::util::json::parse(&stdout(&out)).unwrap()
+    };
+    let strip = |j: &csmaafl::util::json::Json| {
+        let mut o = j.as_object().unwrap().clone();
+        for k in ["shards", "wall_secs", "events_per_sec", "aggs_per_sec"] {
+            o.remove(k);
+        }
+        o
+    };
+    let a = run("1");
+    let b = run("3");
+    assert_eq!(a.get("shards").unwrap().as_i64(), Some(1));
+    assert_eq!(b.get("shards").unwrap().as_i64(), Some(3));
+    assert_eq!(strip(&a), strip(&b), "non-wall-clock fields must be bit-identical");
+}
+
+#[test]
+fn sim_default_shards_is_available_parallelism() {
+    // Clients far above any plausible core count, so the partition
+    // clamp cannot mask the default.
+    let out = repro(&[
+        "sim", "--clients", "4096", "--iterations", "64", "--params", "4",
+        "--format", "json",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let j = csmaafl::util::json::parse(&stdout(&out)).unwrap();
+    let expect = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1) as i64;
+    assert_eq!(j.get("shards").unwrap().as_i64(), Some(expect));
+}
+
+#[test]
+fn sim_scenario_override_changes_lost_uploads() {
+    let run = |extra: &[&str]| {
+        let mut args = vec![
+            "sim", "--clients", "5000", "--iterations", "5000", "--params", "8",
+            "--format", "json",
+        ];
+        args.extend_from_slice(extra);
+        let out = repro(&args);
+        assert!(out.status.success(), "{}", stderr(&out));
+        let j = csmaafl::util::json::parse(&stdout(&out)).unwrap();
+        j.get("lost_uploads").unwrap().as_i64().unwrap()
+    };
+    assert_eq!(run(&[]), 0, "static world loses nothing");
+    assert!(
+        run(&["--set", "scenario=dropout:0.1"]) > 0,
+        "dropout must surface in lost_uploads"
+    );
+}
+
+#[test]
+fn sim_rejects_unknown_set_keys_and_scenarios() {
+    let out = repro(&["sim", "--clients", "10", "--set", "gamma=0.3"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("scenario"), "{}", stderr(&out));
+    let out = repro(&["sim", "--clients", "10", "--set", "scenario=blizzard"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("blizzard"), "{}", stderr(&out));
+    let out = repro(&["sim", "--clients", "10", "--train-passes", "0"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("train_passes"), "{}", stderr(&out));
+}
+
+#[test]
+fn grid_sim_sweeps_shards_with_identical_summaries() {
+    let dir = scratch_dir("grid_sim");
+    let out = repro(&[
+        "grid", "--sim", "--format", "json",
+        "--set", "clients=200", "--set", "iterations=150", "--set", "params=8",
+        "--axis", "shards=1,2",
+        "--out", dir.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let json = std::fs::read_to_string(dir.join("grid.json")).unwrap();
+    let record = csmaafl::util::json::parse(&json).unwrap();
+    let jobs = match record.get("jobs").unwrap() {
+        csmaafl::util::json::Json::Array(jobs) => jobs.clone(),
+        other => panic!("jobs is not an array: {other:?}"),
+    };
+    assert_eq!(jobs.len(), 2);
+    assert_eq!(jobs[0].get("spec").unwrap().as_str(), Some("shards=1"));
+    assert_eq!(jobs[1].get("spec").unwrap().as_str(), Some("shards=2"));
+    // A shards axis sweeps hardware parallelism only: the deterministic
+    // summaries of every cell must be byte-identical.
+    assert_eq!(
+        jobs[0].get("summary").unwrap().to_string_compact(),
+        jobs[1].get("summary").unwrap().to_string_compact()
+    );
+    assert!(!json.contains("wall_secs"), "matrix must be deterministic");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn grid_sim_validates_cells_before_running_any() {
+    let out = repro(&[
+        "grid", "--sim",
+        "--set", "clients=100000000",
+        "--axis", "scheduler=oldest;lottery",
+    ]);
+    assert!(!out.status.success());
+    // The bad cell fails fast — long before the absurd base config
+    // could ever have been simulated.
+    assert!(stderr(&out).contains("lottery"), "{}", stderr(&out));
+    // Registry spellings stored unparsed by set_field (aggregation,
+    // scenario) are still validated per cell up front.
+    let out = repro(&[
+        "grid", "--sim",
+        "--set", "clients=100000000",
+        "--axis", "aggregation=staleness:0.3;bogus",
+    ]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("bogus"), "{}", stderr(&out));
+    let out = repro(&["grid", "--sim", "--set", "clients=20"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("--axis"), "{}", stderr(&out));
+}
+
+#[test]
+fn bench_rejects_zero_shards() {
+    let out = repro(&["bench", "--quick", "--suite", "aggregation", "--shards", "0"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("--shards"), "{}", stderr(&out));
+}
+
+#[test]
 fn bench_rejects_bad_flags() {
     let out = repro(&["bench", "--format", "xml"]);
     assert!(!out.status.success());

@@ -1,0 +1,156 @@
+//! The sharded-coordinator determinism contract (the headline invariant
+//! of `coordinator::shard`): `--shards N` is bit-identical to
+//! `--shards 1` and to the sequential pre-shard reference loop in
+//! `coordinator::scale` — same deterministic summary JSON, same final
+//! global model to the last bit — across schedulers, aggregation
+//! policies, scenarios and random configuration mixes. Thread count may
+//! only ever change wall-clock.
+
+use csmaafl::coordinator::{
+    run_scale_sim_full, run_sharded_sim_full, ScaleSimConfig, SchedulerPolicy,
+};
+use csmaafl::sim::HeterogeneityProfile;
+use csmaafl::util::rng::Rng;
+
+/// Run the reference and the sharded engine at several shard counts,
+/// asserting the full deterministic contract. Returns the reference
+/// report for further inspection.
+fn assert_bit_identical(
+    cfg: &ScaleSimConfig,
+    label: &str,
+) -> csmaafl::coordinator::ScaleSimReport {
+    let (r_ref, w_ref) = run_scale_sim_full(cfg).unwrap();
+    let summary = r_ref.summary_json().to_string_compact();
+    for shards in [1usize, 2, 4] {
+        let (r, w) = run_sharded_sim_full(cfg, shards).unwrap();
+        assert_eq!(
+            r.summary_json().to_string_compact(),
+            summary,
+            "{label}: summary diverged at shards={shards}"
+        );
+        // ParamSet equality is exact f32 equality — the bit-identity
+        // witness for the whole lerp/synth-train arithmetic chain.
+        assert_eq!(w, w_ref, "{label}: final model diverged at shards={shards}");
+        assert_eq!(w.max_abs_diff(&w_ref), 0.0, "{label}: shards={shards}");
+    }
+    r_ref
+}
+
+#[test]
+fn every_scheduler_and_policy_combination_is_shard_invariant() {
+    // The acceptance matrix: all three schedulers x (eq.-11 default,
+    // distance-adaptive) — the adaptive policy additionally exercises
+    // the update-norm read of worker-produced slots.
+    for scheduler in [
+        SchedulerPolicy::OldestModelFirst,
+        SchedulerPolicy::Fifo,
+        SchedulerPolicy::RoundRobin,
+    ] {
+        for aggregation in [None, Some("adaptive".to_string())] {
+            let cfg = ScaleSimConfig {
+                clients: 80,
+                iterations: 200,
+                params: 16,
+                scheduler,
+                aggregation: aggregation.clone(),
+                ..ScaleSimConfig::default()
+            };
+            assert_bit_identical(&cfg, &format!("{scheduler:?}/{aggregation:?}"));
+        }
+    }
+}
+
+#[test]
+fn a_third_policy_and_heavy_training_are_shard_invariant() {
+    let cfg = ScaleSimConfig {
+        clients: 60,
+        iterations: 180,
+        params: 24,
+        aggregation: Some("fedasync:0.5".to_string()),
+        train_passes: 6,
+        ..ScaleSimConfig::default()
+    };
+    assert_bit_identical(&cfg, "fedasync/passes=6");
+}
+
+#[test]
+fn every_scenario_is_shard_invariant() {
+    for scenario in ["static", "dropout:0.15", "churn:0.4,2", "drift:2,3"] {
+        let cfg = ScaleSimConfig {
+            clients: 70,
+            iterations: 170,
+            params: 8,
+            scenario: Some(scenario.to_string()),
+            ..ScaleSimConfig::default()
+        };
+        let report = assert_bit_identical(&cfg, scenario);
+        if scenario.starts_with("dropout") {
+            assert!(report.lost_uploads > 0, "{scenario}: expected transit losses");
+        } else {
+            assert_eq!(report.lost_uploads, 0, "{scenario}");
+        }
+    }
+}
+
+#[test]
+fn fuzzed_heterogeneity_and_scenario_mixes_are_shard_invariant() {
+    // Random but seeded mixes over the whole config surface. Every case
+    // must agree between the reference and the sharded engine at 1, 2
+    // and 4 shards.
+    let mut rng = Rng::new(0x5ead_ed);
+    let heterogeneities = [
+        HeterogeneityProfile::Homogeneous,
+        HeterogeneityProfile::Uniform { max_factor: 6.0 },
+        HeterogeneityProfile::Lognormal { sigma: 0.7 },
+        HeterogeneityProfile::Extreme {
+            fast_frac: 0.2,
+            slow_frac: 0.2,
+            mid_factor: 3.0,
+            slow_factor: 10.0,
+        },
+    ];
+    let scenarios = [
+        None,
+        Some("dropout:0.2"),
+        Some("churn:0.3,3"),
+        Some("drift:3,2"),
+    ];
+    let schedulers = [
+        SchedulerPolicy::OldestModelFirst,
+        SchedulerPolicy::Fifo,
+        SchedulerPolicy::RoundRobin,
+    ];
+    let aggregations = [None, Some("staleness:0.3"), Some("adaptive"), Some("fedasync:0.6")];
+    for case in 0..10u64 {
+        let clients = 20 + rng.below(100) as usize;
+        let cfg = ScaleSimConfig {
+            clients,
+            iterations: clients as u64 + rng.below(2 * clients as u64),
+            params: 1 + rng.below(24) as usize,
+            seed: rng.next_u64(),
+            scheduler: schedulers[rng.below(3) as usize],
+            aggregation: aggregations[rng.below(4) as usize].map(str::to_string),
+            scenario: scenarios[rng.below(4) as usize].map(str::to_string),
+            train_passes: 1 + rng.below(3) as u32,
+            jitter: [0.0, 0.1, 0.3][rng.below(3) as usize],
+            heterogeneity: heterogeneities[rng.below(4) as usize],
+            ..ScaleSimConfig::default()
+        };
+        assert_bit_identical(&cfg, &format!("fuzz case {case}: {cfg:?}"));
+    }
+}
+
+#[test]
+fn shard_count_beyond_clients_is_clamped_not_divergent() {
+    let cfg = ScaleSimConfig {
+        clients: 5,
+        iterations: 20,
+        params: 4,
+        ..ScaleSimConfig::default()
+    };
+    let (r_ref, w_ref) = run_scale_sim_full(&cfg).unwrap();
+    let (r, w) = run_sharded_sim_full(&cfg, 64).unwrap();
+    assert_eq!(r.shards, 5, "clamped to the client count");
+    assert_eq!(r.summary_json().to_string_compact(), r_ref.summary_json().to_string_compact());
+    assert_eq!(w, w_ref);
+}
