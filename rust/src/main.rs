@@ -77,15 +77,27 @@ COMMANDS:
             workers, default = available cores; every non-wall-clock
             field is bit-identical at any K)
   bench     [--quick] [--suite aggregation|scheduler|event_loop|
-            end_to_end|sharded] [--shards K] [--format table|json]
+            end_to_end|sharded|net] [--shards K] [--format table|json]
             [--out results/] [--check BENCH_baseline.json] [--factor 2.0]
             (pinned-seed perf suite -> <out>/BENCH_<date>.json; --check
             fails when any case regresses past factor x the baseline;
             --shards sets the multi-shard case of the sharded suite)
   serve     --bind 0.0.0.0:7070 --clients N [--iterations J] [--gamma g]
-            [--learner pjrt|linear]          (TCP deployment leader)
+            [--net-shards K] [--net-timeout-ms MS] [--net-queue CAP]
+            [--lockstep] [--format table|json] [--learner pjrt|linear]
+            (TCP deployment leader: K ingest shards frame-decode
+            uploads concurrently into one ordered aggregation stage;
+            --net-timeout-ms is the per-connection mid-frame stall
+            deadline (0 disables), --net-queue bounds the ingest queue
+            (backpressure), --lockstep gates rounds so the run is
+            bit-identical at any K and to the in-process reference)
   join      --connect host:7070 --worker-id K --workers N
-            [--learner pjrt|linear] [--local-steps E]   (TCP worker)
+            [--learner pjrt|linear] [--local-steps E]
+            [--faults drop=p,cut=p,churn=pxR] [--fault-seed S]
+            [--reconnect-ms MS] [--connect-attempts N]
+            (TCP worker; --faults injects a seeded, replayable
+            socket-fault schedule: in-band drops, mid-frame cuts,
+            churn with reconnect-and-resume)
 
 COMMON OPTIONS:
   --artifacts <dir>   artifacts directory (default: artifacts)
@@ -104,7 +116,7 @@ SCENARIOS (--set scenario=<spec>, event-driven AFL engines):
 
 /// Boolean options (present/absent, no value) — everything else spelled
 /// `--name` expects a value.
-const BOOL_FLAGS: [&str; 2] = ["quick", "sim"];
+const BOOL_FLAGS: [&str; 3] = ["quick", "sim", "lockstep"];
 
 /// Minimal option parser: flags with values, repeated --set collection,
 /// whitelisted boolean flags.
@@ -583,12 +595,18 @@ fn cmd_grid_sim(args: &Args) -> Result<()> {
 /// Parse a `--shards` value: a positive worker count, defaulting to the
 /// machine's available parallelism when absent.
 fn parse_shards(opt: Option<&str>) -> Result<usize> {
+    parse_shard_count("--shards", opt)
+}
+
+/// Shared by `--shards` and `--net-shards`: a positive integer, default
+/// = available cores.
+fn parse_shard_count(flag: &str, opt: Option<&str>) -> Result<usize> {
     match opt {
         Some(s) => {
             let n: usize = s
                 .parse()
-                .map_err(|_| anyhow!("--shards expects a positive integer, got {s:?}"))?;
-            ensure!(n >= 1, "--shards must be >= 1, got {n}");
+                .map_err(|_| anyhow!("{flag} expects a positive integer, got {s:?}"))?;
+            ensure!(n >= 1, "{flag} must be >= 1, got {n}");
             Ok(n)
         }
         None => Ok(std::thread::available_parallelism()
@@ -802,9 +820,27 @@ fn cmd_bench(args: &Args) -> Result<()> {
 }
 
 /// TCP deployment leader: same Algorithm-1 logic as the simulator, over
-/// real sockets (rust/src/net/).
+/// real sockets (rust/src/net/), ingesting through `--net-shards`
+/// concurrent frame-decoding shards into one ordered aggregation stage.
 fn cmd_serve(args: &Args) -> Result<()> {
+    let format = args.opt_or("format", "table");
+    ensure!(
+        format == "table" || format == "json",
+        "unknown --format {format:?} (table|json)"
+    );
     let cfg = load_config(args)?;
+    // Validate every net knob before Session::new generates data, so a
+    // typo'd flag fails fast.
+    let net_shards = parse_shard_count("--net-shards", args.opt("net-shards"))?;
+    let read_timeout_ms: u64 = args
+        .opt_or("net-timeout-ms", "5000")
+        .parse()
+        .map_err(|_| anyhow!("--net-timeout-ms expects milliseconds (integer, 0 disables)"))?;
+    let queue_capacity: usize = args
+        .opt_or("net-queue", "1024")
+        .parse()
+        .map_err(|_| anyhow!("--net-queue expects a positive integer"))?;
+    ensure!(queue_capacity >= 1, "--net-queue must be >= 1, got {queue_capacity}");
     let session =
         Session::new(cfg.clone(), args.learner()?, args.opt_or("artifacts", "artifacts"))?;
     let leader_cfg = csmaafl::net::LeaderConfig {
@@ -814,16 +850,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
         gamma: args.opt_or("gamma", &cfg.gamma.to_string()).parse()?,
         mu_rho: cfg.mu_rho,
         aggregation: cfg.aggregation.clone(),
+        net_shards,
+        read_timeout_ms,
+        queue_capacity,
+        lockstep: args.flag("lockstep"),
     };
     let w0 = session.learner().init(cfg.seed as u32)?;
     let report = csmaafl::net::run_leader(&leader_cfg, w0)?;
     let (acc, loss) = session.learner().evaluate(&report.final_model, &session.test)?;
-    println!(
-        "leader: {} aggregations, {:.2}s wall, mean staleness {:.2}",
-        report.aggregations, report.wallclock_secs, report.mean_staleness
-    );
-    println!("updates per client: {:?}", report.updates_per_client);
-    println!("final test accuracy {acc:.4}, loss {loss:.4}");
+    if format == "json" {
+        // Config (every knob at its effective value, defaults included)
+        // and deterministic summary separated the way `repro sim` does
+        // it: the summary of a lockstep run is bit-identical at any
+        // --net-shards.
+        let mut config = Json::object();
+        config
+            .set("bind", Json::Str(leader_cfg.bind.clone()))
+            .set("clients", Json::Int(leader_cfg.clients as i64))
+            .set("iterations", Json::Int(leader_cfg.max_iterations as i64))
+            .set("net_shards", Json::Int(net_shards as i64))
+            .set("net_timeout_ms", Json::Int(read_timeout_ms as i64))
+            .set("net_queue", Json::Int(queue_capacity as i64))
+            .set("lockstep", Json::Bool(leader_cfg.lockstep))
+            .set("gamma", Json::Float(leader_cfg.gamma));
+        let mut j = Json::object();
+        j.set("schema", Json::Str("csmaafl-serve-v1".to_string()))
+            .set("config", config)
+            .set("summary", report.summary_json())
+            .set("wallclock_secs", Json::Float(report.wallclock_secs))
+            .set("accuracy", Json::Float(acc))
+            .set("loss", Json::Float(loss));
+        println!("{}", j.to_string_pretty());
+    } else {
+        println!(
+            "leader: {} aggregations, {} lost uploads, {:.2}s wall, mean staleness {:.2}",
+            report.aggregations, report.lost_uploads, report.wallclock_secs, report.mean_staleness
+        );
+        println!("updates per client: {:?}", report.updates_per_client);
+        println!("final test accuracy {acc:.4}, loss {loss:.4}");
+    }
     Ok(())
 }
 
@@ -831,19 +896,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// an N-way partition so independent processes agree on the data split.
 fn cmd_join(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let session =
-        Session::new(cfg.clone(), args.learner()?, args.opt_or("artifacts", "artifacts"))?;
     let workers: usize = args.opt_or("workers", "4").parse()?;
     let worker_id: usize = args.opt_or("worker-id", "0").parse()?;
     anyhow::ensure!(worker_id < workers, "worker-id out of range");
+    // Validate the fault spec before Session::new generates data, so a
+    // typo'd flag fails fast.
+    let faults = args
+        .opt("faults")
+        .map(|spec| -> Result<csmaafl::net::FaultPlan> {
+            let seed: u64 = args
+                .opt_or("fault-seed", &cfg.seed.to_string())
+                .parse()
+                .map_err(|_| anyhow!("--fault-seed expects an integer"))?;
+            csmaafl::net::FaultPlan::parse(spec, seed)
+        })
+        .transpose()?;
+    let session =
+        Session::new(cfg.clone(), args.learner()?, args.opt_or("artifacts", "artifacts"))?;
     let shards = csmaafl::data::partition(&session.train, workers, cfg.partition, cfg.seed);
     let uploads = csmaafl::net::run_worker(&csmaafl::net::WorkerConfig {
         connect: args.opt_or("connect", "127.0.0.1:7070").to_string(),
+        worker: worker_id as u32,
         name: format!("worker-{worker_id}"),
         learner: session.learner(),
         data: &session.train,
         indices: shards[worker_id].indices.clone(),
         local_steps: args.opt_or("local-steps", &cfg.local_steps.to_string()).parse()?,
+        faults,
+        reconnect_delay_ms: args.opt_or("reconnect-ms", "50").parse()?,
+        max_connect_attempts: args.opt_or("connect-attempts", "100").parse()?,
     })?;
     println!("worker-{worker_id}: {uploads} uploads, shutting down");
     Ok(())

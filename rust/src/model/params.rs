@@ -267,6 +267,25 @@ impl ParamSet {
             .iter()
             .all(|t| t.data.iter().all(|x| x.is_finite()))
     }
+
+    /// FNV-1a 64 over every tensor's little-endian f32 bytes, in
+    /// manifest order — a compact bit-exact fingerprint. Two models
+    /// share a digest exactly when [`ParamSet::max_abs_diff`] is 0 and
+    /// every element's bit pattern matches (NaN payloads included), so
+    /// cross-process equivalence checks can compare one u64 instead of
+    /// shipping whole models.
+    pub fn digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for t in &self.tensors {
+            for x in &t.data {
+                for b in x.to_le_bytes() {
+                    h ^= b as u64;
+                    h = h.wrapping_mul(0x100000001b3);
+                }
+            }
+        }
+        h
+    }
 }
 
 // ----------------------------------------------------- arena (SoA pool)

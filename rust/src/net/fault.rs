@@ -1,0 +1,207 @@
+//! Seeded socket-layer fault injection for the deployment runtime.
+//!
+//! A [`FaultPlan`] is a *pure function* `(seed, worker, decision index)
+//! → action`, built on the simulator's deterministic PRNG
+//! (`util::rng`). Workers consult it once per received global model to
+//! decide whether this round's upload proceeds, is dropped, dies
+//! mid-frame, or the worker churns away — and because the plan is
+//! stateless, an in-process `ServerCore` replay (`net::leader::
+//! run_reference`) can re-derive the exact same fault sequence without
+//! sockets, which is what makes the bit-identity assertions of
+//! `tests/net_integration.rs` possible under fault injection.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::rng::Rng;
+
+/// What happens to one worker round under fault injection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Train and upload normally.
+    None,
+    /// Train, then report the upload lost in-band (a clean `Lost`
+    /// frame — the transport survives, the payload does not).
+    Drop,
+    /// Train, write half the upload frame, then sever the connection —
+    /// the leader sees a mid-frame close and must account the loss from
+    /// the socket error alone. The worker reconnects afterwards.
+    Cut,
+    /// Churn: announce departure, disconnect for `rounds` leader
+    /// rounds, then reconnect and upload the (now stale) held update.
+    Churn {
+        /// Leader rounds the worker sits out (≥ 1).
+        rounds: u64,
+    },
+}
+
+/// A deterministic fault schedule shared by workers and the replay.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    seed: u64,
+    p_drop: f64,
+    p_cut: f64,
+    p_churn: f64,
+    churn_rounds: u64,
+}
+
+impl FaultPlan {
+    /// A plan drawing Drop/Cut/Churn with the given per-round
+    /// probabilities (each in [0, 1], summing to at most 1); churn
+    /// keeps a worker away for `churn_rounds` (≥ 1) leader rounds.
+    pub fn new(
+        seed: u64,
+        p_drop: f64,
+        p_cut: f64,
+        p_churn: f64,
+        churn_rounds: u64,
+    ) -> Result<FaultPlan> {
+        for (name, p) in [("drop", p_drop), ("cut", p_cut), ("churn", p_churn)] {
+            ensure!(
+                (0.0..=1.0).contains(&p),
+                "fault probability {name}={p} outside [0, 1]"
+            );
+        }
+        ensure!(
+            p_drop + p_cut + p_churn <= 1.0,
+            "fault probabilities sum to {} > 1",
+            p_drop + p_cut + p_churn
+        );
+        ensure!(churn_rounds >= 1, "churn rounds must be >= 1");
+        Ok(FaultPlan {
+            seed,
+            p_drop,
+            p_cut,
+            p_churn,
+            churn_rounds,
+        })
+    }
+
+    /// Parse a spec like `drop=0.1,cut=0.05,churn=0.1x3` (each key
+    /// optional; `x3` on churn sets the away-rounds, default 2).
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan> {
+        let (mut p_drop, mut p_cut, mut p_churn, mut churn_rounds) = (0.0, 0.0, 0.0, 2u64);
+        for part in spec.split(',').filter(|s| !s.is_empty()) {
+            let (key, val) = match part.split_once('=') {
+                Some(kv) => kv,
+                None => bail!("fault spec part {part:?} is not key=value"),
+            };
+            match key {
+                "drop" => p_drop = parse_prob(key, val)?,
+                "cut" => p_cut = parse_prob(key, val)?,
+                "churn" => {
+                    let (p, rounds) = match val.split_once('x') {
+                        Some((p, r)) => {
+                            let rounds: u64 = r.parse().map_err(|_| {
+                                anyhow::anyhow!("churn rounds {r:?} is not an integer")
+                            })?;
+                            (parse_prob(key, p)?, rounds)
+                        }
+                        None => (parse_prob(key, val)?, churn_rounds),
+                    };
+                    p_churn = p;
+                    churn_rounds = rounds;
+                }
+                other => bail!("unknown fault kind {other:?} (drop|cut|churn)"),
+            }
+        }
+        FaultPlan::new(seed, p_drop, p_cut, p_churn, churn_rounds)
+    }
+
+    /// The action for `worker`'s `index`-th decision. Pure and stable:
+    /// any process (worker, leader test, replay) computes the same
+    /// answer from the same `(seed, worker, index)`.
+    pub fn action(&self, worker: usize, index: u64) -> FaultAction {
+        let mut rng = Rng::new(self.seed).fork(worker as u64 + 1).fork(index + 1);
+        let u = rng.f64();
+        if u < self.p_drop {
+            FaultAction::Drop
+        } else if u < self.p_drop + self.p_cut {
+            FaultAction::Cut
+        } else if u < self.p_drop + self.p_cut + self.p_churn {
+            FaultAction::Churn {
+                rounds: self.churn_rounds,
+            }
+        } else {
+            FaultAction::None
+        }
+    }
+
+    /// The canonical spec string (for run JSON / logging).
+    pub fn label(&self) -> String {
+        format!(
+            "drop={},cut={},churn={}x{}",
+            self.p_drop, self.p_cut, self.p_churn, self.churn_rounds
+        )
+    }
+
+    /// The seed the plan draws from.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+fn parse_prob(name: &str, s: &str) -> Result<f64> {
+    let p: f64 = s
+        .parse()
+        .map_err(|_| anyhow::anyhow!("fault {name} probability {s:?} is not a number"))?;
+    ensure!(
+        (0.0..=1.0).contains(&p),
+        "fault {name} probability {p} outside [0, 1]"
+    );
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn actions_are_deterministic_and_worker_independent() {
+        let plan = FaultPlan::parse("drop=0.3,cut=0.2,churn=0.2x3", 7).unwrap();
+        let again = FaultPlan::parse("drop=0.3,cut=0.2,churn=0.2x3", 7).unwrap();
+        let mut kinds = [0usize; 4];
+        for w in 0..8 {
+            for i in 0..64 {
+                let a = plan.action(w, i);
+                assert_eq!(a, again.action(w, i));
+                match a {
+                    FaultAction::None => kinds[0] += 1,
+                    FaultAction::Drop => kinds[1] += 1,
+                    FaultAction::Cut => kinds[2] += 1,
+                    FaultAction::Churn { rounds } => {
+                        assert_eq!(rounds, 3);
+                        kinds[3] += 1;
+                    }
+                }
+            }
+        }
+        // With 512 draws at these rates every kind appears.
+        assert!(kinds.iter().all(|&k| k > 0), "{kinds:?}");
+        // Different seeds give different schedules.
+        let other = FaultPlan::parse("drop=0.3,cut=0.2,churn=0.2x3", 8).unwrap();
+        assert!(
+            (0..64).any(|i| plan.action(0, i) != other.action(0, i)),
+            "seed had no effect"
+        );
+    }
+
+    #[test]
+    fn parse_accepts_partial_specs_and_defaults() {
+        let plan = FaultPlan::parse("drop=0.25", 1).unwrap();
+        assert_eq!(plan.label(), "drop=0.25,cut=0,churn=0x2");
+        let churn = FaultPlan::parse("churn=0.5", 1).unwrap();
+        assert_eq!(churn.label(), "drop=0,cut=0,churn=0.5x2");
+        let empty = FaultPlan::parse("", 1).unwrap();
+        assert_eq!(empty.action(0, 0), FaultAction::None);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("drop=1.5", 0).is_err());
+        assert!(FaultPlan::parse("drop=x", 0).is_err());
+        assert!(FaultPlan::parse("explode=0.1", 0).is_err());
+        assert!(FaultPlan::parse("drop", 0).is_err());
+        assert!(FaultPlan::parse("churn=0.1x0", 0).is_err());
+        assert!(FaultPlan::parse("drop=0.6,cut=0.6", 0).is_err());
+    }
+}

@@ -1,25 +1,60 @@
-//! The deployment leader: Algorithm 1's server over real TCP.
+//! The deployment leader: Algorithm 1's server over real TCP, sharded
+//! the same way as the PR-5 simulator pipeline.
 //!
-//! Accepts `clients` workers, broadcasts w_0, then serves Update frames
-//! as they arrive, feeding each into the same sans-IO
-//! `coordinator::core::ServerCore` that drives the simulator — the
-//! leader computes no aggregation weight of its own. The fresh global is
-//! unicast back to the uploading worker only. The TCP accept/read loop
-//! *is* the TDMA channel (one frame at a time per connection read).
+//! Three kinds of thread cooperate (all scoped, all joined on exit):
+//!
+//! * **one acceptor** owns the listener for the whole run — initial
+//!   joins and later *re*-joins (churn, cut-upload recovery) go through
+//!   the same Hello handshake, each with a deadline — and routes every
+//!   connection to the ingest shard owning its worker id
+//!   (`sim::partition::ClientPartition`, the simulator's split);
+//! * **K ingest shards** each multiplex their connections with
+//!   nonblocking [`FrameReader`]s: frame-decode uploads concurrently,
+//!   enforce the per-connection mid-frame stall deadline, and feed a
+//!   single **bounded** queue (`mpsc::sync_channel`) — when the
+//!   aggregation stage falls behind, shards stop reading and TCP
+//!   backpressure reaches the workers;
+//! * **one aggregation stage** (the calling thread) drives the same
+//!   sans-IO `coordinator::core::ServerCore` as the simulator. Bursts
+//!   are staged through `sim::partition::OrderedMerge`, so socket races
+//!   within a burst can never reorder aggregation.
+//!
+//! With `lockstep` set, the stage additionally gates on *rounds*: it
+//! waits for exactly one move (update, in-band loss, mid-frame break,
+//! or churn announcement) from every expected worker, then applies the
+//! round in ascending `(start iteration, worker)` order. Round
+//! membership is then a pure function of the fault schedule, which is
+//! what makes `--net-shards N` bit-identical to `--net-shards 1` *and*
+//! to the sans-IO [`run_reference`] replay — the deployment analogue of
+//! `tests/sharded.rs`. Without `lockstep`, the leader keeps the paper's
+//! fully asynchronous semantics (aggregate whenever any upload lands)
+//! and the ordering discipline is per-burst only.
+//!
+//! A worker that disconnects while an upload is owed is accounted a
+//! lost upload (`ServerCore::on_lost_upload`) and its fresh global is
+//! *deferred* until it re-Hellos; a churning worker keeps its stale
+//! model across the gap and resumes exactly like the simulator's
+//! `churn` scenario — downtime accrues as staleness.
 
-use std::io::{BufReader, BufWriter};
+use std::collections::VecDeque;
+use std::io::BufWriter;
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::core::{NativeAggregator, ServerCore};
 use crate::coordinator::policy::{AggregationPolicy, PolicyParams, StalenessEq11};
+use crate::data::Dataset;
+use crate::learner::{BatchCursor, Learner};
 use crate::log_info;
 use crate::model::{ParamSet, TensorSpec};
-use crate::net::wire::{self, Message};
-use crate::sim::OrderedMerge;
+use crate::net::fault::{FaultAction, FaultPlan};
+use crate::net::wire::{self, FrameReader, Message, WireError};
+use crate::sim::{ClientPartition, OrderedMerge};
+use crate::util::json::Json;
 
 /// Leader-side configuration.
 #[derive(Debug, Clone)]
@@ -37,6 +72,39 @@ pub struct LeaderConfig {
     /// Aggregation-policy registry spelling; `None` = eq.-(11)
     /// staleness weighting with `gamma` (the paper's deployment).
     pub aggregation: Option<String>,
+    /// Ingest shard count (clamped to `[1, clients]`, like the
+    /// simulator's shard workers). Affects only which thread decodes a
+    /// worker's frames, never the result.
+    pub net_shards: usize,
+    /// Per-connection deadline in ms for a frame that started arriving
+    /// but stalled (and for the Hello handshake). 0 disables.
+    pub read_timeout_ms: u64,
+    /// Capacity of the bounded ingest→aggregation queue (≥ 1). A full
+    /// queue blocks the ingest shards, which stops socket reads —
+    /// backpressure all the way to the workers.
+    pub queue_capacity: usize,
+    /// Round-gated deterministic mode (see module docs).
+    pub lockstep: bool,
+}
+
+impl LeaderConfig {
+    /// A config with the production defaults for every robustness knob
+    /// (single ingest shard, 5 s stall deadline, 1024-slot queue,
+    /// asynchronous semantics).
+    pub fn new(bind: impl Into<String>, clients: usize, max_iterations: u64) -> LeaderConfig {
+        LeaderConfig {
+            bind: bind.into(),
+            clients,
+            max_iterations,
+            gamma: 0.2,
+            mu_rho: 0.1,
+            aggregation: None,
+            net_shards: 1,
+            read_timeout_ms: 5_000,
+            queue_capacity: 1024,
+            lockstep: false,
+        }
+    }
 }
 
 /// What the leader observed during a run.
@@ -46,157 +114,862 @@ pub struct LeaderReport {
     pub aggregations: u64,
     /// Updates delivered per worker (fairness accounting).
     pub updates_per_client: Vec<u64>,
+    /// Uploads lost in transit (socket breaks, stalls, in-band drops).
+    pub lost_uploads: u64,
+    /// Lost uploads per worker (dropout-bias accounting).
+    pub lost_per_client: Vec<u64>,
     /// Mean observed staleness across aggregations.
     pub mean_staleness: f64,
-    /// Real time from first broadcast to shutdown.
+    /// Real time from first broadcast to shutdown (0 for the replay).
     pub wallclock_secs: f64,
+    /// The aggregation policy's canonical label.
+    pub policy: String,
     /// The final global model.
     pub final_model: ParamSet,
 }
 
-enum Inbound {
-    Update {
-        worker: usize,
-        start_iteration: u64,
-        params: ParamSet,
-    },
-    Gone(usize),
+impl LeaderReport {
+    /// The deterministic results of the run: every field is a pure
+    /// function of the inputs (model, data, seeds, fault schedule) in
+    /// lockstep mode — wall-clock never appears here, so two equivalent
+    /// runs serialize byte-identically (the `tests/sharded.rs`
+    /// discipline).
+    pub fn summary_json(&self) -> Json {
+        let ints = |xs: &[u64]| Json::Array(xs.iter().map(|&u| Json::Int(u as i64)).collect());
+        let mut j = Json::object();
+        j.set("aggregations", Json::Int(self.aggregations as i64))
+            .set("lost_uploads", Json::Int(self.lost_uploads as i64))
+            .set("lost_per_client", ints(&self.lost_per_client))
+            .set("updates_per_client", ints(&self.updates_per_client))
+            .set("mean_staleness", Json::Float(self.mean_staleness))
+            .set("model_digest", Json::Str(format!("{:016x}", self.final_model.digest())))
+            .set("policy", Json::Str(self.policy.clone()));
+        j
+    }
 }
+
+/// One worker's pending contribution, keyed for the ordered merge by
+/// the iteration stamp it trained from.
+enum Move {
+    /// A completed upload.
+    Update { stamp: u64, params: ParamSet },
+    /// An in-band loss report (`Lost` frame): the transport survived,
+    /// the payload did not.
+    Lost { stamp: u64 },
+    /// A churn announcement: away for `rounds`, holding a stale model.
+    Leave { stamp: u64, rounds: u64 },
+    /// The connection broke while this upload was owed.
+    Broken { stamp: u64 },
+}
+
+impl Move {
+    fn stamp(&self) -> u64 {
+        match self {
+            Move::Update { stamp, .. }
+            | Move::Lost { stamp }
+            | Move::Leave { stamp, .. }
+            | Move::Broken { stamp } => *stamp,
+        }
+    }
+}
+
+/// Events the ingest side feeds the aggregation stage.
+enum Inbound {
+    /// A worker completed the Hello handshake (join or rejoin); the
+    /// write half of its connection travels with the event.
+    Joined {
+        worker: usize,
+        name: String,
+        writer: BufWriter<TcpStream>,
+    },
+    /// A decoded worker→leader frame.
+    Frame { worker: usize, msg: Message },
+    /// The connection died (close, mid-frame break, stall deadline, or
+    /// protocol violation).
+    ConnLost {
+        worker: usize,
+        mid_frame: bool,
+        timed_out: bool,
+    },
+}
+
+/// Aggregation-stage bookkeeping for one worker.
+struct Peer {
+    writer: Option<BufWriter<TcpStream>>,
+    joined: bool,
+    /// A global model has been issued and its move not yet applied.
+    outstanding: bool,
+    /// A Leave frame was seen; the following ConnLost is expected.
+    leaving: bool,
+    /// Moves received but not yet applied.
+    pending: VecDeque<Move>,
+    /// Lockstep: earliest round this worker's next move may apply.
+    due: u64,
+    /// A global issued while the worker had no live connection.
+    deferred: Option<(u64, ParamSet)>,
+}
+
+impl Peer {
+    fn new() -> Peer {
+        Peer {
+            writer: None,
+            joined: false,
+            outstanding: false,
+            leaving: false,
+            pending: VecDeque::new(),
+            due: 0,
+            deferred: None,
+        }
+    }
+
+    /// Hand this worker the current global model: stamp it via the
+    /// core, then ship it now or defer until the worker reconnects.
+    fn issue(&mut self, worker: usize, core: &mut ServerCore) {
+        let iteration = core.issue_to(worker);
+        let params = core.global().clone();
+        self.outstanding = true;
+        let sent = match self.writer.as_mut() {
+            Some(w) => wire::send(w, &Message::Global {
+                iteration,
+                params: params.clone(),
+            })
+            .is_ok(),
+            None => false,
+        };
+        if !sent {
+            self.writer = None;
+            self.deferred = Some((iteration, params));
+        }
+    }
+}
+
+fn parse_policy(
+    aggregation: &Option<String>,
+    clients: usize,
+    gamma: f64,
+) -> Result<Box<dyn AggregationPolicy>> {
+    let params = PolicyParams { clients, gamma };
+    match aggregation {
+        Some(spec) => <dyn AggregationPolicy>::parse(spec, &params)
+            .with_context(|| format!("leader aggregation policy {spec:?}")),
+        None => Ok(Box::new(StalenessEq11::new(gamma)?)),
+    }
+}
+
+// --------------------------------------------------------- ingest side
+
+struct Conn {
+    worker: usize,
+    stream: TcpStream,
+    reader: FrameReader,
+    last_progress: Instant,
+}
+
+enum PollOutcome {
+    Keep { progressed: bool },
+    Drop,
+    Shutdown,
+}
+
+fn forward(out: &mpsc::SyncSender<Inbound>, worker: usize, msg: Message) -> bool {
+    out.send(Inbound::Frame { worker, msg }).is_ok()
+}
+
+/// Pull everything currently available from one connection.
+fn poll_conn(
+    conn: &mut Conn,
+    out: &mpsc::SyncSender<Inbound>,
+    specs: &[TensorSpec],
+    stall: Option<Duration>,
+) -> PollOutcome {
+    let mut progressed = false;
+    loop {
+        let before = conn.reader.buffered();
+        match conn.reader.poll(&mut conn.stream) {
+            Ok(Some(body)) => {
+                progressed = true;
+                conn.last_progress = Instant::now();
+                match wire::decode(&body, specs) {
+                    Ok(msg @ (Message::Update { .. } | Message::Lost { .. }
+                    | Message::Leave { .. })) => {
+                        if !forward(out, conn.worker, msg) {
+                            return PollOutcome::Shutdown;
+                        }
+                    }
+                    Ok(other) => {
+                        log_info!(
+                            "leader: worker {} sent unexpected {other:?}; dropping connection",
+                            conn.worker
+                        );
+                        let _ = out.send(Inbound::ConnLost {
+                            worker: conn.worker,
+                            mid_frame: false,
+                            timed_out: false,
+                        });
+                        return PollOutcome::Drop;
+                    }
+                    Err(e) => {
+                        log_info!("leader: worker {} protocol error: {e}", conn.worker);
+                        let _ = out.send(Inbound::ConnLost {
+                            worker: conn.worker,
+                            mid_frame: true,
+                            timed_out: false,
+                        });
+                        return PollOutcome::Drop;
+                    }
+                }
+            }
+            Ok(None) => {
+                if conn.reader.buffered() > before {
+                    progressed = true;
+                    conn.last_progress = Instant::now();
+                } else if let Some(limit) = stall {
+                    if conn.reader.mid_frame() && conn.last_progress.elapsed() >= limit {
+                        log_info!(
+                            "leader: worker {} stalled mid-frame past {limit:?}; dropping",
+                            conn.worker
+                        );
+                        let _ = out.send(Inbound::ConnLost {
+                            worker: conn.worker,
+                            mid_frame: true,
+                            timed_out: true,
+                        });
+                        return PollOutcome::Drop;
+                    }
+                }
+                return PollOutcome::Keep { progressed };
+            }
+            Err(WireError::Closed { mid_frame }) => {
+                let _ = out.send(Inbound::ConnLost {
+                    worker: conn.worker,
+                    mid_frame,
+                    timed_out: false,
+                });
+                return PollOutcome::Drop;
+            }
+            Err(e) => {
+                log_info!("leader: worker {} read error: {e}", conn.worker);
+                let _ = out.send(Inbound::ConnLost {
+                    worker: conn.worker,
+                    mid_frame: true,
+                    timed_out: false,
+                });
+                return PollOutcome::Drop;
+            }
+        }
+    }
+}
+
+/// A replaced connection may still hold the worker's final frames (a
+/// Leave announcement racing its own reconnect). Read them out — with a
+/// short blocking deadline — before the replacement takes over, so the
+/// per-worker frame order the aggregation stage sees matches the order
+/// the worker sent.
+fn drain_replaced(mut conn: Conn, out: &mpsc::SyncSender<Inbound>, specs: &[TensorSpec]) {
+    let _ = conn.stream.set_nonblocking(false);
+    let _ = conn.stream.set_read_timeout(Some(Duration::from_millis(200)));
+    loop {
+        match conn.reader.poll(&mut conn.stream) {
+            Ok(Some(body)) => match wire::decode(&body, specs) {
+                Ok(msg @ (Message::Update { .. } | Message::Lost { .. }
+                | Message::Leave { .. })) => {
+                    if !forward(out, conn.worker, msg) {
+                        return;
+                    }
+                }
+                _ => return,
+            },
+            Ok(None) => return,
+            Err(WireError::Closed { mid_frame }) => {
+                if mid_frame {
+                    let _ = out.send(Inbound::ConnLost {
+                        worker: conn.worker,
+                        mid_frame: true,
+                        timed_out: false,
+                    });
+                }
+                return;
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// One ingest shard: admit the connections routed here, poll them all
+/// nonblockingly, decode frames, feed the bounded aggregation queue.
+fn run_shard(
+    joins: &mpsc::Receiver<(usize, String, TcpStream)>,
+    out: &mpsc::SyncSender<Inbound>,
+    specs: &[TensorSpec],
+    stall: Option<Duration>,
+    done: &AtomicBool,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    while !done.load(Ordering::Relaxed) {
+        let mut activity = false;
+        while let Ok((worker, name, stream)) = joins.try_recv() {
+            activity = true;
+            if let Some(i) = conns.iter().position(|c| c.worker == worker) {
+                drain_replaced(conns.swap_remove(i), out, specs);
+            }
+            let writer = match stream.try_clone() {
+                Ok(s) => BufWriter::new(s),
+                Err(_) => continue,
+            };
+            if stream.set_nonblocking(true).is_err() {
+                continue;
+            }
+            if out.send(Inbound::Joined { worker, name, writer }).is_err() {
+                return;
+            }
+            conns.push(Conn {
+                worker,
+                stream,
+                reader: FrameReader::new(),
+                last_progress: Instant::now(),
+            });
+        }
+        let mut i = 0;
+        while i < conns.len() {
+            match poll_conn(&mut conns[i], out, specs, stall) {
+                PollOutcome::Keep { progressed } => {
+                    activity |= progressed;
+                    i += 1;
+                }
+                PollOutcome::Drop => {
+                    conns.swap_remove(i);
+                    activity = true;
+                }
+                PollOutcome::Shutdown => return,
+            }
+        }
+        if !activity {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}
+
+/// The acceptor: handshake every incoming connection (with a deadline)
+/// and route it to the ingest shard owning its worker id.
+fn run_acceptor(
+    listener: &TcpListener,
+    shard_txs: &[mpsc::Sender<(usize, String, TcpStream)>],
+    partition: ClientPartition,
+    specs: &[TensorSpec],
+    hello_timeout: Option<Duration>,
+    done: &AtomicBool,
+) {
+    while !done.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, addr)) => {
+                let outcome = admit(stream, shard_txs, partition, specs, hello_timeout);
+                if let Err(e) = outcome {
+                    log_info!("leader: rejected connection from {addr}: {e:#}");
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => {
+                log_info!("leader: accept error: {e}");
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    }
+}
+
+fn admit(
+    stream: TcpStream,
+    shard_txs: &[mpsc::Sender<(usize, String, TcpStream)>],
+    partition: ClientPartition,
+    specs: &[TensorSpec],
+    hello_timeout: Option<Duration>,
+) -> Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(hello_timeout)?;
+    stream.set_nodelay(true).ok();
+    let hello = wire::recv(&mut (&stream), specs)?;
+    match hello {
+        Message::Hello { worker, name } => {
+            let worker = worker as usize;
+            ensure!(
+                worker < partition.clients(),
+                "worker id {worker} out of range (clients = {})",
+                partition.clients()
+            );
+            stream.set_read_timeout(None)?;
+            shard_txs[partition.shard_of(worker)]
+                .send((worker, name, stream))
+                .map_err(|_| anyhow::anyhow!("ingest shard is gone"))?;
+            Ok(())
+        }
+        other => bail!("expected Hello, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------- aggregation side
 
 /// Run the leader until `max_iterations` aggregations, then shut workers
 /// down. `w0` is the initial global model (its specs define the wire
 /// schema).
 pub fn run_leader(cfg: &LeaderConfig, w0: ParamSet) -> Result<LeaderReport> {
+    ensure!(cfg.clients >= 1, "leader needs at least one client");
+    ensure!(cfg.queue_capacity >= 1, "queue capacity must be >= 1");
     let specs: Vec<TensorSpec> = w0.specs();
-    let params = PolicyParams {
-        clients: cfg.clients,
-        gamma: cfg.gamma,
-    };
-    let policy: Box<dyn AggregationPolicy> = match &cfg.aggregation {
-        Some(spec) => <dyn AggregationPolicy>::parse(spec, &params)
-            .with_context(|| format!("leader aggregation policy {spec:?}"))?,
-        None => Box::new(StalenessEq11::new(cfg.gamma)?),
-    };
+    let policy = parse_policy(&cfg.aggregation, cfg.clients, cfg.gamma)?;
     log_info!("leader: aggregation policy {}", policy.label());
-    let mut core = ServerCore::new(w0, cfg.clients, policy, cfg.mu_rho);
+    let core = ServerCore::new(w0, cfg.clients, policy, cfg.mu_rho);
 
-    let listener = TcpListener::bind(&cfg.bind)
-        .with_context(|| format!("binding {}", cfg.bind))?;
+    let listener =
+        TcpListener::bind(&cfg.bind).with_context(|| format!("binding {}", cfg.bind))?;
+    listener.set_nonblocking(true)?;
     log_info!("leader: listening on {}", listener.local_addr()?);
 
-    // Accept phase: wait for exactly `clients` Hellos.
-    let mut writers: Vec<BufWriter<TcpStream>> = Vec::new();
-    let (tx, rx) = mpsc::channel::<Inbound>();
-    for worker_id in 0..cfg.clients {
-        let (stream, addr) = listener.accept()?;
-        stream.set_nodelay(true).ok();
-        let mut reader = BufReader::new(stream.try_clone()?);
-        let writer = BufWriter::new(stream);
-        let hello = wire::recv(&mut reader, &specs)?;
-        match hello {
-            Message::Hello { name } => {
-                log_info!("leader: worker {worker_id} ({name}) from {addr}");
-            }
-            other => bail!("expected Hello, got {other:?}"),
+    let partition = ClientPartition::new(cfg.clients, cfg.net_shards);
+    let timeout = (cfg.read_timeout_ms > 0).then(|| Duration::from_millis(cfg.read_timeout_ms));
+    let done = AtomicBool::new(false);
+    let (agg_tx, agg_rx) = mpsc::sync_channel::<Inbound>(cfg.queue_capacity);
+    let mut shard_txs = Vec::with_capacity(partition.shards());
+    let mut shard_rxs = Vec::with_capacity(partition.shards());
+    for _ in 0..partition.shards() {
+        let (tx, rx) = mpsc::channel();
+        shard_txs.push(tx);
+        shard_rxs.push(rx);
+    }
+
+    std::thread::scope(|scope| {
+        let done = &done;
+        let specs = &specs;
+        let listener = &listener;
+        let shard_txs_ref = &shard_txs;
+        scope.spawn(move || {
+            run_acceptor(listener, shard_txs_ref, partition, specs, timeout, done)
+        });
+        for rx in shard_rxs {
+            let tx = agg_tx.clone();
+            scope.spawn(move || run_shard(&rx, &tx, specs, timeout, done));
         }
-        writers.push(writer);
-        // Reader thread: pump frames into the aggregation loop.
-        let tx = tx.clone();
-        let specs_c = specs.clone();
-        std::thread::spawn(move || loop {
-            match wire::recv(&mut reader, &specs_c) {
-                Ok(Message::Update {
+        drop(agg_tx);
+        let out = aggregate(cfg, core, &agg_rx);
+        done.store(true, Ordering::Relaxed);
+        // Drop the receiver so shards blocked sending into a full queue
+        // error out instead of wedging the scope join.
+        drop(agg_rx);
+        out
+    })
+}
+
+/// The aggregation stage. Runs on the caller's thread; everything the
+/// core sees flows through here in a deterministic per-burst (or, in
+/// lockstep, per-round) order.
+fn aggregate(
+    cfg: &LeaderConfig,
+    mut core: ServerCore,
+    rx: &mpsc::Receiver<Inbound>,
+) -> Result<LeaderReport> {
+    let mut peers: Vec<Peer> = (0..cfg.clients).map(|_| Peer::new()).collect();
+    let mut joined = 0usize;
+
+    // Join barrier: wait for every worker's first Hello.
+    while joined < cfg.clients {
+        let ev = rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("ingest pipeline exited before all workers joined"))?;
+        if let Inbound::Joined { worker, .. } = &ev {
+            if !peers[*worker].joined {
+                joined += 1;
+            }
+        }
+        handle(&mut peers, &mut core, ev);
+    }
+    log_info!("leader: all {} workers joined; broadcasting w0", cfg.clients);
+
+    let started = Instant::now();
+    for worker in 0..cfg.clients {
+        peers[worker].issue(worker, &mut core);
+    }
+
+    let mut staged: OrderedMerge<Move> = OrderedMerge::new();
+    let mut round = 0u64;
+    'serve: while core.iteration() < cfg.max_iterations {
+        match rx.recv() {
+            Ok(ev) => handle(&mut peers, &mut core, ev),
+            Err(_) => break,
+        }
+        while let Ok(ev) = rx.try_recv() {
+            handle(&mut peers, &mut core, ev);
+        }
+        if cfg.lockstep {
+            // Apply every round whose full move set has arrived.
+            loop {
+                if !peers.iter().any(|p| p.outstanding) {
+                    break;
+                }
+                let min_due = peers
+                    .iter()
+                    .filter(|p| p.outstanding)
+                    .map(|p| p.due)
+                    .min()
+                    .unwrap_or(round);
+                if min_due > round {
+                    round = min_due;
+                }
+                let expected: Vec<usize> = (0..cfg.clients)
+                    .filter(|&w| peers[w].outstanding && peers[w].due <= round)
+                    .collect();
+                if expected.iter().any(|&w| peers[w].pending.is_empty()) {
+                    break;
+                }
+                let mut batch: OrderedMerge<Move> = OrderedMerge::new();
+                for &w in &expected {
+                    let mv = peers[w].pending.pop_front().expect("checked nonempty");
+                    batch.push(mv.stamp(), w, mv);
+                }
+                while let Some((_, w, mv)) = batch.pop() {
+                    apply(&mut peers, &mut core, w, mv, Some(round))?;
+                    if core.iteration() >= cfg.max_iterations {
+                        break 'serve;
+                    }
+                }
+                round += 1;
+            }
+        } else {
+            // Asynchronous burst discipline: stage everything that has
+            // arrived, apply in (start iteration, worker) order.
+            for w in 0..cfg.clients {
+                while let Some(mv) = peers[w].pending.pop_front() {
+                    staged.push(mv.stamp(), w, mv);
+                }
+            }
+            while let Some((_, w, mv)) = staged.pop() {
+                apply(&mut peers, &mut core, w, mv, None)?;
+                if core.iteration() >= cfg.max_iterations {
+                    break 'serve;
+                }
+            }
+        }
+    }
+
+    // Shut down every connected worker, then keep answering late
+    // re-joiners (churn/cut reconnects in flight) with Shutdown for a
+    // grace window so none is left dialing a dead address.
+    for p in peers.iter_mut() {
+        if let Some(w) = p.writer.as_mut() {
+            let _ = wire::send(w, &Message::Shutdown);
+        }
+    }
+    let deadline = Instant::now() + Duration::from_millis(600);
+    loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            break;
+        }
+        match rx.recv_timeout(left) {
+            Ok(Inbound::Joined { mut writer, .. }) => {
+                let _ = wire::send(&mut writer, &Message::Shutdown);
+            }
+            Ok(_) => {}
+            Err(_) => break,
+        }
+    }
+
+    Ok(LeaderReport {
+        aggregations: core.iteration(),
+        updates_per_client: core.updates_per_client().to_vec(),
+        lost_uploads: core.lost_uploads(),
+        lost_per_client: core.lost_per_client().to_vec(),
+        mean_staleness: core.mean_staleness(),
+        wallclock_secs: started.elapsed().as_secs_f64(),
+        policy: core.policy_label(),
+        final_model: core.into_global(),
+    })
+}
+
+/// Fold one ingest event into the peer table.
+fn handle(peers: &mut [Peer], core: &mut ServerCore, ev: Inbound) {
+    match ev {
+        Inbound::Joined { worker, name, writer } => {
+            let p = &mut peers[worker];
+            let rejoin = p.joined;
+            p.joined = true;
+            p.leaving = false;
+            p.writer = Some(writer);
+            if rejoin {
+                log_info!("leader: worker {worker} ({name}) rejoined");
+            } else {
+                log_info!("leader: worker {worker} ({name}) joined");
+            }
+            if let Some((iteration, params)) = p.deferred.take() {
+                let sent = match p.writer.as_mut() {
+                    Some(w) => wire::send(w, &Message::Global {
+                        iteration,
+                        params: params.clone(),
+                    })
+                    .is_ok(),
+                    None => false,
+                };
+                if !sent {
+                    p.writer = None;
+                    p.deferred = Some((iteration, params));
+                }
+            }
+        }
+        Inbound::Frame { worker, msg } => {
+            let p = &mut peers[worker];
+            match msg {
+                Message::Update {
                     start_iteration,
                     params,
                     ..
-                }) => {
-                    if tx
-                        .send(Inbound::Update {
-                            worker: worker_id,
-                            start_iteration,
-                            params,
-                        })
-                        .is_err()
-                    {
-                        break;
-                    }
+                } => p.pending.push_back(Move::Update {
+                    stamp: start_iteration,
+                    params,
+                }),
+                Message::Lost { start_iteration } => p.pending.push_back(Move::Lost {
+                    stamp: start_iteration,
+                }),
+                Message::Leave {
+                    start_iteration,
+                    rounds,
+                } => {
+                    p.leaving = true;
+                    p.pending.push_back(Move::Leave {
+                        stamp: start_iteration,
+                        rounds: rounds.max(1),
+                    });
                 }
-                Ok(_) | Err(_) => {
-                    let _ = tx.send(Inbound::Gone(worker_id));
-                    break;
-                }
+                other => log_info!("leader: ignoring unexpected {other:?} from {worker}"),
             }
-        });
-    }
-    drop(tx);
-
-    // Broadcast w_0.
-    for (worker, writer) in writers.iter_mut().enumerate() {
-        let iteration = core.issue_to(worker);
-        wire::send(writer, &Message::Global {
-            iteration,
-            params: core.global().clone(),
-        })?;
-    }
-
-    // Aggregation loop (Algorithm 1, server side): every weight decision
-    // happens inside ServerCore, shared bit-for-bit with the simulator.
-    // Concurrent uploads are staged through the simulator's ordered
-    // fan-in type (`sim::partition::OrderedMerge`): block for one
-    // inbound frame, drain whatever else has already arrived, then
-    // apply the burst in ascending (start iteration, worker id) order.
-    // Within a drained burst, socket arrival order therefore no longer
-    // decides aggregation order; burst *membership* still depends on
-    // real-world timing, so this is a tie-break discipline, not the
-    // sharded simulator's full determinism (which needs virtual time).
-    fn stage(inbound: Inbound, staged: &mut OrderedMerge<ParamSet>, alive: &mut usize) {
-        match inbound {
-            Inbound::Update {
-                worker,
-                start_iteration,
-                params,
-            } => staged.push(start_iteration, worker, params),
-            Inbound::Gone(worker) => {
+        }
+        Inbound::ConnLost {
+            worker,
+            mid_frame,
+            timed_out,
+        } => {
+            let p = &mut peers[worker];
+            p.writer = None;
+            if p.leaving {
+                // The close a Leave announced; not a loss.
+                p.leaving = false;
+            } else if p.outstanding && p.pending.is_empty() {
+                log_info!(
+                    "leader: worker {worker} gone with an upload owed \
+                     (mid_frame={mid_frame}, timed_out={timed_out}); counting it lost"
+                );
+                p.pending.push_back(Move::Broken {
+                    stamp: core.model_version(worker),
+                });
+            } else {
                 log_info!("leader: worker {worker} disconnected");
-                *alive -= 1;
             }
         }
     }
+}
 
-    let started = Instant::now();
-    let mut alive = cfg.clients;
-    let mut staged: OrderedMerge<ParamSet> = OrderedMerge::new();
-    'serve: while core.iteration() < cfg.max_iterations && alive > 0 {
-        match rx.recv() {
-            Ok(inbound) => stage(inbound, &mut staged, &mut alive),
-            Err(_) => break,
+/// Apply one move to the core, then (for anything but a Leave) hand the
+/// worker a fresh global. `round` is Some in lockstep mode.
+fn apply(
+    peers: &mut [Peer],
+    core: &mut ServerCore,
+    worker: usize,
+    mv: Move,
+    round: Option<u64>,
+) -> Result<()> {
+    match mv {
+        Move::Update { stamp, params } => {
+            core.on_update(worker, stamp, &params, &NativeAggregator)?;
+            peers[worker].outstanding = false;
+            peers[worker].issue(worker, core);
+            if let Some(r) = round {
+                peers[worker].due = r + 1;
+            }
         }
-        while let Ok(inbound) = rx.try_recv() {
-            stage(inbound, &mut staged, &mut alive);
+        Move::Lost { .. } | Move::Broken { .. } => {
+            core.on_lost_upload(worker);
+            peers[worker].outstanding = false;
+            peers[worker].issue(worker, core);
+            if let Some(r) = round {
+                peers[worker].due = r + 1;
+            }
         }
-        while let Some((start_iteration, worker, params)) = staged.pop() {
-            core.on_update(worker, start_iteration, &params, &NativeAggregator)?;
-            // Fresh global back to this worker only.
-            let iteration = core.issue_to(worker);
-            wire::send(&mut writers[worker], &Message::Global {
-                iteration,
-                params: core.global().clone(),
-            })?;
+        Move::Leave { rounds, .. } => {
+            if let Some(r) = round {
+                peers[worker].due = r + rounds;
+            }
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------ sans-IO replay
+
+/// Inputs for [`run_reference`]: the same federation a lockstep
+/// deployment run would execute, minus the sockets.
+pub struct ReferenceConfig<'a> {
+    /// Worker count.
+    pub clients: usize,
+    /// Stop after this many global aggregations.
+    pub max_iterations: u64,
+    /// Eq. (11) γ.
+    pub gamma: f64,
+    /// μ EMA rate.
+    pub mu_rho: f64,
+    /// Aggregation-policy registry spelling (`None` = eq. 11).
+    pub aggregation: Option<String>,
+    /// The local trainer every worker runs.
+    pub learner: &'a dyn Learner,
+    /// The shared training set.
+    pub data: &'a Dataset,
+    /// Per-worker sample indices into `data`.
+    pub shards: &'a [Vec<usize>],
+    /// Local SGD steps per upload.
+    pub local_steps: usize,
+    /// The fault schedule the workers follow (`None` = fault-free).
+    pub faults: Option<FaultPlan>,
+}
+
+struct SimWorker {
+    cursor: BatchCursor,
+    move_idx: u64,
+    pending: VecDeque<Move>,
+    outstanding: bool,
+    due: u64,
+}
+
+/// The in-process `ServerCore` reference: replays, without sockets, the
+/// exact event order a lockstep `run_leader` produces for the same
+/// inputs — the acceptance oracle for the TCP pipeline. Bit-identity
+/// (final model and [`LeaderReport::summary_json`]) against the real
+/// deployment at any `net_shards` is asserted in
+/// `tests/net_integration.rs`.
+pub fn run_reference(cfg: &ReferenceConfig<'_>, w0: ParamSet) -> Result<LeaderReport> {
+    ensure!(cfg.clients >= 1, "reference needs at least one client");
+    ensure!(
+        cfg.shards.len() == cfg.clients,
+        "reference: {} shards for {} clients",
+        cfg.shards.len(),
+        cfg.clients
+    );
+    let policy = parse_policy(&cfg.aggregation, cfg.clients, cfg.gamma)?;
+    let mut core = ServerCore::new(w0, cfg.clients, policy, cfg.mu_rho);
+    let img = cfg.data.x.len() / cfg.data.len();
+    let batch = cfg.learner.batch();
+    let mut xs: Vec<f32> = Vec::new();
+    let mut ys: Vec<i32> = Vec::new();
+    let mut workers: Vec<SimWorker> = cfg
+        .shards
+        .iter()
+        .map(|idx| SimWorker {
+            cursor: BatchCursor::new(idx.clone()),
+            move_idx: 0,
+            pending: VecDeque::new(),
+            outstanding: false,
+            due: 0,
+        })
+        .collect();
+
+    // What a worker does upon receiving a stamped global: train, then
+    // queue the move(s) its fault schedule dictates. Mirrors
+    // `net::worker::run_worker` decision for decision.
+    let respond = |sim: &mut SimWorker,
+                   w: usize,
+                   stamp: u64,
+                   params: &ParamSet,
+                   xs: &mut Vec<f32>,
+                   ys: &mut Vec<i32>|
+     -> Result<()> {
+        sim.cursor.fill(cfg.data, cfg.local_steps * batch, img, xs, ys);
+        let (local, _) = cfg.learner.train(params, xs, ys, cfg.local_steps)?;
+        let action = match cfg.faults {
+            Some(plan) => plan.action(w, sim.move_idx),
+            None => FaultAction::None,
+        };
+        sim.move_idx += 1;
+        match action {
+            FaultAction::None => sim.pending.push_back(Move::Update {
+                stamp,
+                params: local,
+            }),
+            FaultAction::Drop => sim.pending.push_back(Move::Lost { stamp }),
+            FaultAction::Cut => sim.pending.push_back(Move::Broken { stamp }),
+            FaultAction::Churn { rounds } => {
+                sim.pending.push_back(Move::Leave { stamp, rounds });
+                sim.pending.push_back(Move::Update {
+                    stamp,
+                    params: local,
+                });
+            }
+        }
+        Ok(())
+    };
+
+    // w0 broadcast, in worker order — exactly like the leader.
+    for w in 0..cfg.clients {
+        let stamp = core.issue_to(w);
+        let params = core.global().clone();
+        workers[w].outstanding = true;
+        respond(&mut workers[w], w, stamp, &params, &mut xs, &mut ys)?;
+    }
+
+    let mut round = 0u64;
+    'serve: while core.iteration() < cfg.max_iterations {
+        if !workers.iter().any(|p| p.outstanding) {
+            break;
+        }
+        let min_due = workers
+            .iter()
+            .filter(|p| p.outstanding)
+            .map(|p| p.due)
+            .min()
+            .unwrap_or(round);
+        if min_due > round {
+            round = min_due;
+        }
+        let mut batch_moves: OrderedMerge<Move> = OrderedMerge::new();
+        for (w, sim) in workers.iter_mut().enumerate() {
+            if sim.outstanding && sim.due <= round {
+                let mv = sim.pending.pop_front().expect("worker owes a move");
+                batch_moves.push(mv.stamp(), w, mv);
+            }
+        }
+        if batch_moves.is_empty() {
+            break;
+        }
+        while let Some((_, w, mv)) = batch_moves.pop() {
+            match mv {
+                Move::Update { stamp, params } => {
+                    core.on_update(w, stamp, &params, &NativeAggregator)?;
+                    let fresh = core.issue_to(w);
+                    let snapshot = core.global().clone();
+                    workers[w].due = round + 1;
+                    respond(&mut workers[w], w, fresh, &snapshot, &mut xs, &mut ys)?;
+                }
+                Move::Lost { .. } | Move::Broken { .. } => {
+                    core.on_lost_upload(w);
+                    let fresh = core.issue_to(w);
+                    let snapshot = core.global().clone();
+                    workers[w].due = round + 1;
+                    respond(&mut workers[w], w, fresh, &snapshot, &mut xs, &mut ys)?;
+                }
+                Move::Leave { rounds, .. } => {
+                    workers[w].due = round + rounds;
+                }
+            }
             if core.iteration() >= cfg.max_iterations {
                 break 'serve;
             }
         }
+        round += 1;
     }
 
-    // Shut everyone down (ignore errors from already-gone workers).
-    for writer in writers.iter_mut() {
-        let _ = wire::send(writer, &Message::Shutdown);
-    }
     Ok(LeaderReport {
         aggregations: core.iteration(),
         updates_per_client: core.updates_per_client().to_vec(),
+        lost_uploads: core.lost_uploads(),
+        lost_per_client: core.lost_per_client().to_vec(),
         mean_staleness: core.mean_staleness(),
-        wallclock_secs: started.elapsed().as_secs_f64(),
+        wallclock_secs: 0.0,
+        policy: core.policy_label(),
         final_model: core.into_global(),
     })
 }

@@ -9,14 +9,26 @@
 //! Algorithm 1 over real sockets. Workers run the PJRT CNN (or the linear
 //! learner) on their own shard.
 //!
+//! The leader ingests through K shard threads reusing the simulator's
+//! `ClientPartition`/`OrderedMerge` split (see `leader`), absorbs
+//! disconnects, stalls, and churn as first-class events, and — in
+//! lockstep mode — is bit-identical across shard counts and to the
+//! sans-IO [`run_reference`] replay. Fault schedules come from the
+//! seeded, replayable [`FaultPlan`] (see `fault`).
+//!
 //! Protocol (`wire.rs`): hand-rolled frames (the dependency-minimal
-//! build has no serde): `[u32 len][u8 tag][payload]`, tensors as raw
-//! little-endian
-//! f32 runs validated against the manifest's shapes.
+//! build has no serde): `[u32 len][u8 version][u8 tag][payload]` with an
+//! explicit version byte and a hard frame-length cap, tensors as raw
+//! little-endian f32 runs validated against the manifest's shapes.
+//! Malformed input surfaces as typed [`wire::WireError`]s, never a
+//! panic — `tests/wire_proptest.rs` throws 100k+ adversarial frames at
+//! the parser to keep it that way.
 
+pub mod fault;
 pub mod leader;
 pub mod wire;
 pub mod worker;
 
-pub use leader::{run_leader, LeaderConfig, LeaderReport};
+pub use fault::{FaultAction, FaultPlan};
+pub use leader::{run_leader, run_reference, LeaderConfig, LeaderReport, ReferenceConfig};
 pub use worker::{run_worker, WorkerConfig};

@@ -1,22 +1,148 @@
 //! Wire protocol for the TCP deployment runtime.
 //!
-//! Frames: `[u32 LE total-payload-len][u8 tag][payload]`. Parameter sets
-//! travel as a u32 tensor count followed by, per tensor, a u32 element
-//! count and that many little-endian f32s; shapes are validated against
-//! the receiver's expected specs (the manifest is the schema — the wire
-//! carries no redundant metadata).
+//! Frames: `[u32 LE frame-len][u8 version][u8 tag][payload]`, where
+//! `frame-len` counts the version byte, the tag byte and the payload.
+//! Parameter sets travel as a u32 tensor count followed by, per tensor,
+//! a u32 element count and that many little-endian f32s; shapes are
+//! validated against the receiver's expected specs (the manifest is the
+//! schema — the wire carries no redundant metadata).
+//!
+//! Every way a frame can be refused is a typed [`WireError`] variant:
+//! the length prefix is checked against [`MAX_FRAME`] before any
+//! allocation, the version byte is checked before the tag, and the
+//! parser never panics on arbitrary bytes (`tests/wire_proptest.rs`
+//! throws ≥100k adversarial frames at it to keep that true).
+//!
+//! Two readers share one decoder:
+//! * [`recv`] — blocking, for the worker's simple request/response loop;
+//! * [`FrameReader`] — incremental, for the leader's ingest shards,
+//!   which multiplex many nonblocking connections and need to resume a
+//!   partially-read frame on the next poll (and to notice a connection
+//!   that stalls *mid-frame*, the server-side timeout path).
 
 use std::io::{Read, Write};
 
-use anyhow::{bail, Context, Result};
-
 use crate::model::{ParamSet, Tensor, TensorSpec};
+
+/// The protocol version this build speaks. A peer announcing any other
+/// version is rejected with [`WireError::UnsupportedVersion`] before its
+/// tag byte is even looked at.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Hard cap on frame size (128 MiB) — hostile or corrupt length
+/// prefixes are refused with [`WireError::FrameTooLarge`] before any
+/// buffer is allocated.
+pub const MAX_FRAME: u32 = 128 << 20;
+
+/// Everything that can go wrong reading or decoding a frame.
+#[derive(Debug)]
+pub enum WireError {
+    /// The length prefix exceeds [`MAX_FRAME`].
+    FrameTooLarge {
+        /// The announced frame length.
+        len: u32,
+        /// The enforced cap ([`MAX_FRAME`]).
+        max: u32,
+    },
+    /// The length prefix was zero (no room for version + tag).
+    EmptyFrame,
+    /// The version byte is not [`WIRE_VERSION`].
+    UnsupportedVersion {
+        /// The version the peer announced.
+        version: u8,
+    },
+    /// The tag byte maps to no known [`Tag`].
+    UnknownTag {
+        /// The unrecognized tag byte.
+        tag: u8,
+    },
+    /// The payload ended before the message's fixed fields did.
+    Truncated,
+    /// The payload continued past the message's last field.
+    TrailingBytes {
+        /// Bytes consumed by the decoder.
+        used: usize,
+        /// Bytes the frame actually carried.
+        len: usize,
+    },
+    /// A parameter block's tensor count disagrees with the schema.
+    TensorCountMismatch {
+        /// Tensor count announced on the wire.
+        got: u32,
+        /// Tensor count the receiver's specs expect.
+        expected: usize,
+    },
+    /// One tensor's element count disagrees with the schema.
+    TensorLenMismatch {
+        /// Name of the offending tensor (from the receiver's specs).
+        name: String,
+        /// Element count announced on the wire.
+        got: u32,
+        /// Element count the spec expects.
+        expected: usize,
+    },
+    /// A Hello name was not valid UTF-8.
+    BadUtf8,
+    /// The peer closed the connection.
+    Closed {
+        /// True when the close landed in the middle of a frame (a lost
+        /// in-flight upload rather than a clean between-frames exit).
+        mid_frame: bool,
+    },
+    /// An underlying I/O failure other than close/timeout.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::FrameTooLarge { len, max } => {
+                write!(f, "frame length {len} exceeds the {max}-byte limit")
+            }
+            WireError::EmptyFrame => write!(f, "zero-length frame"),
+            WireError::UnsupportedVersion { version } => write!(
+                f,
+                "unsupported wire protocol version {version} (this build speaks {WIRE_VERSION})"
+            ),
+            WireError::UnknownTag { tag } => write!(f, "unknown wire tag {tag}"),
+            WireError::Truncated => write!(f, "truncated frame"),
+            WireError::TrailingBytes { used, len } => {
+                write!(f, "trailing bytes in frame ({used} of {len} consumed)")
+            }
+            WireError::TensorCountMismatch { got, expected } => {
+                write!(f, "wire params: {got} tensors, expected {expected}")
+            }
+            WireError::TensorLenMismatch { name, got, expected } => {
+                write!(f, "wire tensor {name}: {got} elems, expected {expected}")
+            }
+            WireError::BadUtf8 => write!(f, "hello name is not valid utf-8"),
+            WireError::Closed { mid_frame: true } => write!(f, "connection closed mid-frame"),
+            WireError::Closed { mid_frame: false } => write!(f, "connection closed"),
+            WireError::Io(e) => write!(f, "wire i/o: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WireError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
 
 /// Message tags.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 #[repr(u8)]
 pub enum Tag {
-    /// worker -> leader: join the federation (payload: client name utf8).
+    /// worker -> leader: join (or rejoin) the federation.
     Hello = 1,
     /// leader -> worker: initial/fresh global model + iteration stamp.
     Global = 2,
@@ -25,17 +151,25 @@ pub enum Tag {
     Update = 3,
     /// leader -> worker: training is over; final stats follow.
     Shutdown = 4,
+    /// worker -> leader: an upload was lost in transit (socket-layer
+    /// fault injection reporting in-band, so accounting stays exact).
+    Lost = 5,
+    /// worker -> leader: churn announcement — the worker is
+    /// disconnecting and will return with its (now stale) model.
+    Leave = 6,
 }
 
 impl Tag {
-    /// Decode a frame's tag byte; fails on unknown tags.
-    pub fn from_u8(b: u8) -> Result<Tag> {
+    /// Decode a frame's tag byte; unknown tags are a typed error.
+    pub fn from_u8(b: u8) -> Result<Tag, WireError> {
         Ok(match b {
             1 => Tag::Hello,
             2 => Tag::Global,
             3 => Tag::Update,
             4 => Tag::Shutdown,
-            other => bail!("unknown wire tag {other}"),
+            5 => Tag::Lost,
+            6 => Tag::Leave,
+            tag => return Err(WireError::UnknownTag { tag }),
         })
     }
 }
@@ -43,8 +177,11 @@ impl Tag {
 /// A decoded message.
 #[derive(Debug)]
 pub enum Message {
-    /// worker → leader: join the federation under the given name.
+    /// worker → leader: join (or rejoin) the federation.
     Hello {
+        /// Stable worker id — the leader keys all per-client state on
+        /// it, so a reconnecting worker resumes its own bookkeeping.
+        worker: u32,
         /// Human-readable worker name (logging only).
         name: String,
     },
@@ -66,6 +203,18 @@ pub enum Message {
     },
     /// leader → worker: training is over, disconnect.
     Shutdown,
+    /// worker → leader: the upload for this round was lost in transit.
+    Lost {
+        /// The iteration stamp the lost upload trained from.
+        start_iteration: u64,
+    },
+    /// worker → leader: churn — going away, returning with a stale model.
+    Leave {
+        /// The iteration stamp of the model the worker still holds.
+        start_iteration: u64,
+        /// How many leader rounds the worker will sit out (≥ 1).
+        rounds: u64,
+    },
 }
 
 // ------------------------------------------------------------ encoding
@@ -88,11 +237,13 @@ fn put_params(buf: &mut Vec<u8>, p: &ParamSet) {
     }
 }
 
-/// Encode a message into a ready-to-send frame.
+/// Encode a message into a ready-to-send frame (length prefix,
+/// [`WIRE_VERSION`], tag, payload).
 pub fn encode(msg: &Message) -> Vec<u8> {
     let mut payload = Vec::new();
     let tag = match msg {
-        Message::Hello { name } => {
+        Message::Hello { worker, name } => {
+            put_u32(&mut payload, *worker);
             payload.extend_from_slice(name.as_bytes());
             Tag::Hello
         }
@@ -112,9 +263,22 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             Tag::Update
         }
         Message::Shutdown => Tag::Shutdown,
+        Message::Lost { start_iteration } => {
+            put_u64(&mut payload, *start_iteration);
+            Tag::Lost
+        }
+        Message::Leave {
+            start_iteration,
+            rounds,
+        } => {
+            put_u64(&mut payload, *start_iteration);
+            put_u64(&mut payload, *rounds);
+            Tag::Leave
+        }
     };
-    let mut frame = Vec::with_capacity(payload.len() + 5);
-    put_u32(&mut frame, payload.len() as u32 + 1);
+    let mut frame = Vec::with_capacity(payload.len() + 6);
+    put_u32(&mut frame, payload.len() as u32 + 2);
+    frame.push(WIRE_VERSION);
     frame.push(tag as u8);
     frame.extend_from_slice(&payload);
     frame
@@ -122,49 +286,55 @@ pub fn encode(msg: &Message) -> Vec<u8> {
 
 // ------------------------------------------------------------ decoding
 
-/// Hard cap on frame size (128 MiB) — refuse hostile/corrupt lengths.
-const MAX_FRAME: u32 = 128 << 20;
-
 struct Cursor<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Cursor<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.buf.len() {
-            bail!("truncated frame");
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if n > self.buf.len() - self.pos {
+            return Err(WireError::Truncated);
         }
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    fn u32(&mut self) -> Result<u32, WireError> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> Result<u64> {
+    fn u64(&mut self) -> Result<u64, WireError> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn params(&mut self, specs: &[TensorSpec]) -> Result<ParamSet> {
-        let n = self.u32()? as usize;
-        if n != specs.len() {
-            bail!("wire params: {n} tensors, expected {}", specs.len());
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
+    }
+
+    fn params(&mut self, specs: &[TensorSpec]) -> Result<ParamSet, WireError> {
+        let n = self.u32()?;
+        if n as usize != specs.len() {
+            return Err(WireError::TensorCountMismatch {
+                got: n,
+                expected: specs.len(),
+            });
         }
-        let mut tensors = Vec::with_capacity(n);
+        let mut tensors = Vec::with_capacity(n as usize);
         for spec in specs {
-            let len = self.u32()? as usize;
-            if len != spec.numel() {
-                bail!(
-                    "wire tensor {}: {len} elems, expected {}",
-                    spec.name,
-                    spec.numel()
-                );
+            let len = self.u32()?;
+            if len as usize != spec.numel() {
+                return Err(WireError::TensorLenMismatch {
+                    name: spec.name.clone(),
+                    got: len,
+                    expected: spec.numel(),
+                });
             }
-            let raw = self.take(len * 4)?;
-            let mut data = Vec::with_capacity(len);
+            let raw = self.take(len as usize * 4)?;
+            let mut data = Vec::with_capacity(len as usize);
             for chunk in raw.chunks_exact(4) {
                 data.push(f32::from_le_bytes(chunk.try_into().unwrap()));
             }
@@ -174,22 +344,30 @@ impl<'a> Cursor<'a> {
     }
 }
 
-/// Decode one payload (tag byte + body). `specs` is the expected tensor
-/// layout for messages that carry parameters.
-pub fn decode(payload: &[u8], specs: &[TensorSpec]) -> Result<Message> {
+/// Decode one frame body (version byte + tag byte + payload). `specs`
+/// is the expected tensor layout for messages that carry parameters.
+pub fn decode(payload: &[u8], specs: &[TensorSpec]) -> Result<Message, WireError> {
     if payload.is_empty() {
-        bail!("empty frame");
+        return Err(WireError::EmptyFrame);
     }
-    let tag = Tag::from_u8(payload[0])?;
+    let version = payload[0];
+    if version != WIRE_VERSION {
+        return Err(WireError::UnsupportedVersion { version });
+    }
+    if payload.len() < 2 {
+        return Err(WireError::Truncated);
+    }
+    let tag = Tag::from_u8(payload[1])?;
     let mut c = Cursor {
         buf: payload,
-        pos: 1,
+        pos: 2,
     };
     let msg = match tag {
-        Tag::Hello => Message::Hello {
-            name: String::from_utf8(c.take(payload.len() - 1)?.to_vec())
-                .context("hello name not utf8")?,
-        },
+        Tag::Hello => {
+            let worker = c.u32()?;
+            let name = String::from_utf8(c.rest().to_vec()).map_err(|_| WireError::BadUtf8)?;
+            Message::Hello { worker, name }
+        }
         Tag::Global => Message::Global {
             iteration: c.u64()?,
             params: c.params(specs)?,
@@ -200,32 +378,164 @@ pub fn decode(payload: &[u8], specs: &[TensorSpec]) -> Result<Message> {
             params: c.params(specs)?,
         },
         Tag::Shutdown => Message::Shutdown,
+        Tag::Lost => Message::Lost {
+            start_iteration: c.u64()?,
+        },
+        Tag::Leave => Message::Leave {
+            start_iteration: c.u64()?,
+            rounds: c.u64()?,
+        },
     };
-    if c.pos != payload.len() && tag != Tag::Hello {
-        bail!("trailing bytes in frame ({} of {})", c.pos, payload.len());
+    if c.pos != payload.len() {
+        return Err(WireError::TrailingBytes {
+            used: c.pos,
+            len: payload.len(),
+        });
     }
     Ok(msg)
 }
 
+// ------------------------------------------------------- stream access
+
 /// Write one frame to a stream.
-pub fn send(stream: &mut impl Write, msg: &Message) -> Result<()> {
+pub fn send(stream: &mut impl Write, msg: &Message) -> Result<(), WireError> {
     let frame = encode(msg);
     stream.write_all(&frame)?;
     stream.flush()?;
     Ok(())
 }
 
-/// Read one frame from a stream.
-pub fn recv(stream: &mut impl Read, specs: &[TensorSpec]) -> Result<Message> {
-    let mut len_buf = [0u8; 4];
-    stream.read_exact(&mut len_buf).context("reading frame length")?;
-    let len = u32::from_le_bytes(len_buf);
-    if len == 0 || len > MAX_FRAME {
-        bail!("bad frame length {len}");
+fn read_exact_wire(
+    stream: &mut impl Read,
+    buf: &mut [u8],
+    mid_frame: bool,
+) -> Result<(), WireError> {
+    match stream.read_exact(buf) {
+        Ok(()) => Ok(()),
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            Err(WireError::Closed { mid_frame })
+        }
+        Err(e) => Err(WireError::Io(e)),
     }
+}
+
+/// Check a frame's announced length against the protocol limits.
+fn check_len(len: u32) -> Result<(), WireError> {
+    if len == 0 {
+        return Err(WireError::EmptyFrame);
+    }
+    if len > MAX_FRAME {
+        return Err(WireError::FrameTooLarge {
+            len,
+            max: MAX_FRAME,
+        });
+    }
+    Ok(())
+}
+
+/// Blocking read of one raw frame body (version + tag + payload).
+pub fn recv_frame(stream: &mut impl Read) -> Result<Vec<u8>, WireError> {
+    let mut len_buf = [0u8; 4];
+    read_exact_wire(stream, &mut len_buf, false)?;
+    let len = u32::from_le_bytes(len_buf);
+    check_len(len)?;
     let mut payload = vec![0u8; len as usize];
-    stream.read_exact(&mut payload).context("reading frame body")?;
+    read_exact_wire(stream, &mut payload, true)?;
+    Ok(payload)
+}
+
+/// Blocking read of one frame from a stream.
+pub fn recv(stream: &mut impl Read, specs: &[TensorSpec]) -> Result<Message, WireError> {
+    let payload = recv_frame(stream)?;
     decode(&payload, specs)
+}
+
+/// Incremental frame reader for nonblocking / read-timeout sockets.
+///
+/// [`FrameReader::poll`] pulls whatever bytes the stream has,
+/// accumulating a frame across calls: `Ok(Some(body))` when a complete
+/// frame body is buffered, `Ok(None)` when the stream would block (or
+/// its read timeout expired) before one completed. The length prefix is
+/// validated against [`MAX_FRAME`] the moment its 4 bytes are in, so a
+/// hostile length never allocates. The leader's ingest shards keep one
+/// reader per connection and use [`FrameReader::mid_frame`] +
+/// [`FrameReader::buffered`] to detect connections stalling in the
+/// middle of an upload (the per-connection deadline path).
+#[derive(Debug)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+    filled: usize,
+}
+
+impl Default for FrameReader {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FrameReader {
+    /// A reader with no buffered bytes.
+    pub fn new() -> FrameReader {
+        FrameReader {
+            buf: vec![0; 4],
+            filled: 0,
+        }
+    }
+
+    /// True when a frame has started arriving but is not complete.
+    pub fn mid_frame(&self) -> bool {
+        self.filled > 0
+    }
+
+    /// Bytes of the in-progress frame buffered so far (progress signal
+    /// for stall deadlines).
+    pub fn buffered(&self) -> usize {
+        self.filled
+    }
+
+    /// Total bytes the in-progress frame needs (4 until the length
+    /// prefix is complete).
+    fn target(&self) -> Result<usize, WireError> {
+        if self.filled < 4 {
+            return Ok(4);
+        }
+        let len = u32::from_le_bytes(self.buf[..4].try_into().unwrap());
+        check_len(len)?;
+        Ok(4 + len as usize)
+    }
+
+    /// Pull available bytes from `stream`; yield a complete frame body
+    /// if one finished. See the type docs for the contract.
+    pub fn poll(&mut self, stream: &mut impl Read) -> Result<Option<Vec<u8>>, WireError> {
+        loop {
+            let target = self.target()?;
+            if self.buf.len() < target {
+                self.buf.resize(target, 0);
+            }
+            if self.filled == target && target > 4 {
+                let body = self.buf[4..target].to_vec();
+                self.buf.clear();
+                self.buf.resize(4, 0);
+                self.filled = 0;
+                return Ok(Some(body));
+            }
+            match stream.read(&mut self.buf[self.filled..target]) {
+                Ok(0) => {
+                    return Err(WireError::Closed {
+                        mid_frame: self.filled > 0,
+                    })
+                }
+                Ok(n) => self.filled += n,
+                Err(e) => {
+                    return match e.kind() {
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => Ok(None),
+                        std::io::ErrorKind::Interrupted => continue,
+                        _ => Err(WireError::Io(e)),
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -258,15 +568,23 @@ mod tests {
         let frame = encode(msg);
         let len = u32::from_le_bytes(frame[..4].try_into().unwrap()) as usize;
         assert_eq!(len, frame.len() - 4);
-        decode(&frame[4..], &specs()).unwrap()
+        assert_eq!(frame[4], WIRE_VERSION);
+        let decoded = decode(&frame[4..], &specs()).unwrap();
+        // Byte-for-byte: re-encoding a decoded frame reproduces it.
+        assert_eq!(encode(&decoded), frame);
+        decoded
     }
 
     #[test]
     fn hello_roundtrip() {
         match roundtrip(&Message::Hello {
+            worker: 7,
             name: "client-7 ü".into(),
         }) {
-            Message::Hello { name } => assert_eq!(name, "client-7 ü"),
+            Message::Hello { worker, name } => {
+                assert_eq!(worker, 7);
+                assert_eq!(name, "client-7 ü");
+            }
             other => panic!("{other:?}"),
         }
     }
@@ -305,8 +623,22 @@ mod tests {
     }
 
     #[test]
-    fn shutdown_roundtrip() {
+    fn shutdown_lost_leave_roundtrip() {
         assert!(matches!(roundtrip(&Message::Shutdown), Message::Shutdown));
+        assert!(matches!(
+            roundtrip(&Message::Lost { start_iteration: 9 }),
+            Message::Lost { start_iteration: 9 }
+        ));
+        assert!(matches!(
+            roundtrip(&Message::Leave {
+                start_iteration: 5,
+                rounds: 3
+            }),
+            Message::Leave {
+                start_iteration: 5,
+                rounds: 3
+            }
+        ));
     }
 
     #[test]
@@ -319,14 +651,58 @@ mod tests {
             name: "w".into(),
             shape: vec![7],
         }];
-        assert!(decode(&frame[4..], &bad_specs).is_err());
+        assert!(matches!(
+            decode(&frame[4..], &bad_specs),
+            Err(WireError::TensorCountMismatch { got: 2, expected: 1 })
+        ));
     }
 
     #[test]
-    fn rejects_garbage() {
-        assert!(decode(&[], &specs()).is_err());
-        assert!(decode(&[99, 0, 0], &specs()).is_err());
-        assert!(decode(&[2, 1, 2, 3], &specs()).is_err()); // truncated Global
+    fn rejects_garbage_with_typed_errors() {
+        assert!(matches!(decode(&[], &specs()), Err(WireError::EmptyFrame)));
+        assert!(matches!(
+            decode(&[WIRE_VERSION], &specs()),
+            Err(WireError::Truncated)
+        ));
+        assert!(matches!(
+            decode(&[WIRE_VERSION, 99, 0, 0], &specs()),
+            Err(WireError::UnknownTag { tag: 99 })
+        ));
+        // Truncated Global.
+        assert!(matches!(
+            decode(&[WIRE_VERSION, 2, 1, 2, 3], &specs()),
+            Err(WireError::Truncated)
+        ));
+        // Trailing bytes after a Shutdown.
+        assert!(matches!(
+            decode(&[WIRE_VERSION, 4, 0], &specs()),
+            Err(WireError::TrailingBytes { used: 2, len: 3 })
+        ));
+    }
+
+    #[test]
+    fn rejects_unknown_version_before_tag() {
+        // Even a frame whose tag byte is garbage reports the version
+        // mismatch first: version negotiation precedes interpretation.
+        assert!(matches!(
+            decode(&[9, 255, 1, 2], &specs()),
+            Err(WireError::UnsupportedVersion { version: 9 })
+        ));
+        assert!(matches!(
+            decode(&[0], &specs()),
+            Err(WireError::UnsupportedVersion { version: 0 })
+        ));
+    }
+
+    #[test]
+    fn recv_rejects_oversized_and_empty_lengths() {
+        let mut over = std::io::Cursor::new((MAX_FRAME + 1).to_le_bytes().to_vec());
+        assert!(matches!(
+            recv(&mut over, &specs()),
+            Err(WireError::FrameTooLarge { .. })
+        ));
+        let mut zero = std::io::Cursor::new(0u32.to_le_bytes().to_vec());
+        assert!(matches!(recv(&mut zero, &specs()), Err(WireError::EmptyFrame)));
     }
 
     #[test]
@@ -345,5 +721,118 @@ mod tests {
             Message::Update { steps: 3, .. }
         ));
         assert!(matches!(recv(&mut r, &specs()).unwrap(), Message::Shutdown));
+        // A clean EOF between frames is Closed { mid_frame: false }.
+        assert!(matches!(
+            recv(&mut r, &specs()),
+            Err(WireError::Closed { mid_frame: false })
+        ));
+    }
+
+    /// A reader that hands out one byte per call, then WouldBlock, to
+    /// force the FrameReader through every resumption point.
+    struct Trickle {
+        data: Vec<u8>,
+        pos: usize,
+        ready: bool,
+    }
+
+    impl Read for Trickle {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos >= self.data.len() {
+                return Ok(0);
+            }
+            if !self.ready {
+                self.ready = true;
+                return Err(std::io::ErrorKind::WouldBlock.into());
+            }
+            self.ready = false;
+            buf[0] = self.data[self.pos];
+            self.pos += 1;
+            Ok(1)
+        }
+    }
+
+    #[test]
+    fn frame_reader_resumes_across_would_block() {
+        let mut bytes = encode(&Message::Update {
+            start_iteration: 4,
+            steps: 2,
+            params: pset(),
+        });
+        bytes.extend_from_slice(&encode(&Message::Shutdown));
+        let total = bytes.len();
+        let mut stream = Trickle {
+            data: bytes,
+            pos: 0,
+            ready: false,
+        };
+        let mut reader = FrameReader::new();
+        let mut frames = Vec::new();
+        let mut polls = 0usize;
+        while frames.len() < 2 {
+            polls += 1;
+            assert!(polls < 8 * total, "reader made no progress");
+            if let Some(body) = reader.poll(&mut stream).unwrap() {
+                frames.push(decode(&body, &specs()).unwrap());
+            }
+        }
+        assert!(matches!(frames[0], Message::Update { steps: 2, .. }));
+        assert!(matches!(frames[1], Message::Shutdown));
+        assert!(!reader.mid_frame());
+    }
+
+    #[test]
+    fn frame_reader_reports_mid_frame_close_and_stall() {
+        let full = encode(&Message::Lost { start_iteration: 3 });
+        // Close after half the frame: Closed { mid_frame: true }.
+        let mut half = std::io::Cursor::new(full[..full.len() / 2].to_vec());
+        let mut reader = FrameReader::new();
+        loop {
+            match reader.poll(&mut half) {
+                Ok(Some(_)) => panic!("frame cannot complete"),
+                Ok(None) => continue,
+                Err(e) => {
+                    assert!(matches!(e, WireError::Closed { mid_frame: true }), "{e}");
+                    break;
+                }
+            }
+        }
+        // A stalled (WouldBlock) half-frame is visible via mid_frame().
+        let mut stream = Trickle {
+            data: full[..full.len() / 2].to_vec(),
+            pos: 0,
+            ready: false,
+        };
+        let mut reader = FrameReader::new();
+        for _ in 0..full.len() * 4 {
+            match reader.poll(&mut stream) {
+                Ok(None) => {}
+                other => {
+                    let _ = other;
+                }
+            }
+            if stream.pos >= stream.data.len() {
+                break;
+            }
+        }
+        assert!(reader.mid_frame());
+        assert_eq!(reader.buffered(), full.len() / 2);
+    }
+
+    #[test]
+    fn frame_reader_rejects_hostile_length_before_allocating() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.push(1);
+        let mut stream = std::io::Cursor::new(bytes);
+        let mut reader = FrameReader::new();
+        let err = loop {
+            match reader.poll(&mut stream) {
+                Ok(None) => continue,
+                Ok(Some(_)) => panic!("hostile frame accepted"),
+                Err(e) => break e,
+            }
+        };
+        assert!(matches!(err, WireError::FrameTooLarge { len: u32::MAX, .. }));
     }
 }

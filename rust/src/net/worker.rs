@@ -3,21 +3,35 @@
 //! Connects, says Hello, then loops: receive the (fresh) global model,
 //! run local SGD on its own shard, upload the update stamped with the
 //! iteration it started from. Terminates on Shutdown.
+//!
+//! The worker is *session-structured*: a broken connection (its own
+//! fault injection, a leader-side stall drop, a flaky network) ends the
+//! session, and the worker redials and re-Hellos — the leader treats
+//! that as a rejoin. Under churn ([`FaultAction::Churn`]) the worker
+//! announces its departure, keeps the locally-trained update across the
+//! gap, and uploads it — now stale — on return, exactly like the
+//! simulator's `churn` scenario. All fault decisions come from a seeded
+//! [`FaultPlan`], so an in-process replay (`net::leader::run_reference`)
+//! reproduces the same schedule without sockets.
 
-use std::io::{BufReader, BufWriter};
+use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use crate::data::Dataset;
 use crate::learner::{BatchCursor, Learner};
 use crate::log_debug;
+use crate::net::fault::{FaultAction, FaultPlan};
 use crate::net::wire::{self, Message};
 
 /// Worker-side configuration.
 pub struct WorkerConfig<'a> {
     /// Leader address to connect to, e.g. `127.0.0.1:7070`.
     pub connect: String,
+    /// This worker's id (must be `< clients` on the leader).
+    pub worker: u32,
     /// Name announced in the Hello frame (logging only).
     pub name: String,
     /// Local trainer for this worker.
@@ -28,45 +42,177 @@ pub struct WorkerConfig<'a> {
     pub indices: Vec<usize>,
     /// Local SGD steps per upload.
     pub local_steps: usize,
+    /// Seeded socket-fault schedule (`None` = fault-free).
+    pub faults: Option<FaultPlan>,
+    /// Delay between reconnect attempts (and the churn gap).
+    pub reconnect_delay_ms: u64,
+    /// Give up after this many consecutive failed dials.
+    pub max_connect_attempts: u32,
 }
 
-/// Run until the leader sends Shutdown. Returns the number of uploads.
+impl<'a> WorkerConfig<'a> {
+    /// A fault-free config with the production reconnect defaults.
+    pub fn new(
+        connect: impl Into<String>,
+        worker: u32,
+        name: impl Into<String>,
+        learner: &'a dyn Learner,
+        data: &'a Dataset,
+        indices: Vec<usize>,
+        local_steps: usize,
+    ) -> WorkerConfig<'a> {
+        WorkerConfig {
+            connect: connect.into(),
+            worker,
+            name: name.into(),
+            learner,
+            data,
+            indices,
+            local_steps,
+            faults: None,
+            reconnect_delay_ms: 50,
+            max_connect_attempts: 100,
+        }
+    }
+}
+
+/// How a session ended, seen from the inner receive loop.
+enum SessionEnd {
+    /// Leader said Shutdown: the federation is over.
+    Done,
+    /// The connection is gone (injected fault or transport error);
+    /// redial and resume.
+    Reconnect,
+}
+
+/// Run until the leader sends Shutdown. Returns the number of uploads
+/// (held churn updates count when delivered).
 pub fn run_worker(cfg: &WorkerConfig<'_>) -> Result<u64> {
     let specs = cfg.learner.specs();
-    let stream = TcpStream::connect(&cfg.connect)
-        .with_context(|| format!("connecting {}", cfg.connect))?;
-    stream.set_nodelay(true).ok();
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
-    wire::send(&mut writer, &Message::Hello {
-        name: cfg.name.clone(),
-    })?;
-
     let img = cfg.data.x.len() / cfg.data.len();
     let batch = cfg.learner.batch();
     let mut cursor = BatchCursor::new(cfg.indices.clone());
     let mut xs = Vec::new();
     let mut ys = Vec::new();
     let mut uploads = 0u64;
+    // Fault-decision index: one decision per global model received,
+    // across all sessions — the replay counts the same way.
+    let mut move_idx = 0u64;
+    // An update trained before a churn gap, delivered on return.
+    let mut held: Option<Message> = None;
 
     loop {
-        match wire::recv(&mut reader, &specs)? {
+        let stream = connect_retry(cfg)?;
+        stream.set_nodelay(true).ok();
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = BufWriter::new(stream);
+        wire::send(&mut writer, &Message::Hello {
+            worker: cfg.worker,
+            name: cfg.name.clone(),
+        })?;
+        if let Some(msg) = held.take() {
+            wire::send(&mut writer, &msg)?;
+            uploads += 1;
+            log_debug!("worker {}: delivered held update after churn", cfg.name);
+        }
+        match session(cfg, &specs, &mut reader, &mut writer, &mut cursor, img, batch,
+            &mut xs, &mut ys, &mut uploads, &mut move_idx, &mut held)?
+        {
+            SessionEnd::Done => return Ok(uploads),
+            SessionEnd::Reconnect => {
+                drop(writer);
+                drop(reader);
+                std::thread::sleep(Duration::from_millis(cfg.reconnect_delay_ms));
+            }
+        }
+    }
+}
+
+fn connect_retry(cfg: &WorkerConfig<'_>) -> Result<TcpStream> {
+    let mut last = None;
+    for _ in 0..cfg.max_connect_attempts.max(1) {
+        match TcpStream::connect(&cfg.connect) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                last = Some(e);
+                std::thread::sleep(Duration::from_millis(cfg.reconnect_delay_ms));
+            }
+        }
+    }
+    Err(last.expect("at least one attempt"))
+        .with_context(|| format!("connecting {}", cfg.connect))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn session(
+    cfg: &WorkerConfig<'_>,
+    specs: &[crate::model::TensorSpec],
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut BufWriter<TcpStream>,
+    cursor: &mut BatchCursor,
+    img: usize,
+    batch: usize,
+    xs: &mut Vec<f32>,
+    ys: &mut Vec<i32>,
+    uploads: &mut u64,
+    move_idx: &mut u64,
+    held: &mut Option<Message>,
+) -> Result<SessionEnd> {
+    loop {
+        let msg = match wire::recv(reader, specs) {
+            Ok(msg) => msg,
+            Err(e) => {
+                log_debug!("worker {}: connection lost ({e}); redialing", cfg.name);
+                return Ok(SessionEnd::Reconnect);
+            }
+        };
+        match msg {
             Message::Global { iteration, params } => {
-                cursor.fill(cfg.data, cfg.local_steps * batch, img, &mut xs, &mut ys);
-                let (local, loss) =
-                    cfg.learner.train(&params, &xs, &ys, cfg.local_steps)?;
-                log_debug!(
-                    "worker {}: iter {iteration} loss {loss:.4}",
-                    cfg.name
-                );
-                wire::send(&mut writer, &Message::Update {
+                cursor.fill(cfg.data, cfg.local_steps * batch, img, xs, ys);
+                let (local, loss) = cfg.learner.train(&params, xs, ys, cfg.local_steps)?;
+                log_debug!("worker {}: iter {iteration} loss {loss:.4}", cfg.name);
+                let action = match cfg.faults {
+                    Some(plan) => plan.action(cfg.worker as usize, *move_idx),
+                    None => FaultAction::None,
+                };
+                *move_idx += 1;
+                let update = Message::Update {
                     start_iteration: iteration,
                     steps: cfg.local_steps as u32,
                     params: local,
-                })?;
-                uploads += 1;
+                };
+                match action {
+                    FaultAction::None => {
+                        wire::send(writer, &update)?;
+                        *uploads += 1;
+                    }
+                    FaultAction::Drop => {
+                        // Train, then report the upload lost in-band.
+                        wire::send(writer, &Message::Lost {
+                            start_iteration: iteration,
+                        })?;
+                    }
+                    FaultAction::Cut => {
+                        // Die mid-frame: the leader must account this
+                        // loss from the socket error alone.
+                        let frame = wire::encode(&update);
+                        writer.write_all(&frame[..frame.len() / 2])?;
+                        writer.flush()?;
+                        log_debug!("worker {}: injected mid-frame cut", cfg.name);
+                        return Ok(SessionEnd::Reconnect);
+                    }
+                    FaultAction::Churn { rounds } => {
+                        wire::send(writer, &Message::Leave {
+                            start_iteration: iteration,
+                            rounds,
+                        })?;
+                        *held = Some(update);
+                        log_debug!("worker {}: churning away for {rounds} rounds", cfg.name);
+                        return Ok(SessionEnd::Reconnect);
+                    }
+                }
             }
-            Message::Shutdown => return Ok(uploads),
+            Message::Shutdown => return Ok(SessionEnd::Done),
             other => bail!("worker: unexpected message {other:?}"),
         }
     }

@@ -1,7 +1,7 @@
 //! The pinned-seed performance suite behind `repro bench`: the repo's
 //! perf trajectory as machine-readable `BENCH_<date>.json` records.
 //!
-//! Five suites cover the hot paths this crate optimizes:
+//! Six suites cover the hot paths this crate optimizes:
 //!
 //! | Suite         | Cases                              | What it measures |
 //! |---------------|------------------------------------|------------------|
@@ -10,6 +10,7 @@
 //! | `event_loop`  | `sim_<m>_clients`                  | full coordinator event loop (`coordinator::scale`), ns per event |
 //! | `end_to_end`  | `grid_2x_gamma`                    | tiny learner-driven grid through the `PlanRunner` |
 //! | `sharded`     | `sim_<m>_shards1`, `sim_<m>_multi`, `speedup_multi_vs_1` | the sharded coordinator (`coordinator::shard`) at heavy synthetic training: ns per event single- vs multi-shard, plus their ratio (multi/single — dimensionless, < 1 means speedup) |
+//! | `net`         | `encode_<n>`, `decode_<n>`, `reader_chunked_<n>` | wire-protocol hot paths (`net::wire`): frame encode, shape-validated decode, and the leader's incremental `FrameReader` fed in socket-sized chunks |
 //!
 //! The record schema (`csmaafl-bench-v1`) is
 //! `suites → <suite> → <case> → {iters, ns_per_iter, clients}` plus
@@ -34,6 +35,7 @@ use crate::coordinator::{
 };
 use crate::experiment::{Plan, PlanRunner};
 use crate::model::{lerp_flat, ParamArena, ParamLayout, ParamSet, TensorSpec};
+use crate::net::wire::{self, FrameReader, Message};
 use crate::session::{LearnerKind, Session};
 use crate::util::bench::Bencher;
 use crate::util::json::Json;
@@ -43,12 +45,13 @@ use crate::util::rng::Rng;
 pub const BENCH_SCHEMA: &str = "csmaafl-bench-v1";
 
 /// The suite names, in run order (the `--suite` filter vocabulary).
-pub const SUITES: [&str; 5] = [
+pub const SUITES: [&str; 6] = [
     "aggregation",
     "scheduler",
     "event_loop",
     "end_to_end",
     "sharded",
+    "net",
 ];
 
 /// How to run the suite.
@@ -251,6 +254,86 @@ fn suite_sharded(quick: bool, shards: usize) -> Result<Vec<Case>> {
     ])
 }
 
+/// The `net` suite: wire-protocol hot paths. Frame encode and
+/// shape-validated decode at the two pinned model sizes, plus the
+/// leader's incremental [`FrameReader`] fed in 4 KiB chunks — the shape
+/// of work an ingest shard does per nonblocking socket sweep.
+fn suite_net(quick: bool) -> Vec<Case> {
+    let mut out = Vec::new();
+    let mut b = bencher("net", quick);
+    for &n in &[5_370usize, 431_080] {
+        let layout = ParamLayout::new(vec![TensorSpec {
+            name: "w".into(),
+            shape: vec![n],
+        }]);
+        let params = ParamSet::from_flat(&layout, &random_flat(n, 7));
+        let specs = params.specs();
+        let msg = Message::Update {
+            start_iteration: 3,
+            steps: 4,
+            params,
+        };
+        let frame = wire::encode(&msg);
+        let r = b.bench(&format!("encode_{n}"), || {
+            std::hint::black_box(wire::encode(std::hint::black_box(&msg)));
+        });
+        out.push(Case {
+            name: format!("encode_{n}"),
+            iters: r.iters,
+            ns_per_iter: r.mean_ns,
+            clients: 0,
+            shards: None,
+        });
+        let body = &frame[4..];
+        let r = b.bench(&format!("decode_{n}"), || {
+            let m = wire::decode(std::hint::black_box(body), &specs).expect("legal frame");
+            std::hint::black_box(&m);
+        });
+        out.push(Case {
+            name: format!("decode_{n}"),
+            iters: r.iters,
+            ns_per_iter: r.mean_ns,
+            clients: 0,
+            shards: None,
+        });
+        if n == 5_370 {
+            let r = b.bench(&format!("reader_chunked_{n}"), || {
+                let mut rd = Chunked {
+                    data: &frame,
+                    pos: 0,
+                };
+                let mut fr = FrameReader::new();
+                let got = fr.poll(&mut rd).expect("clean read").expect("one full frame");
+                std::hint::black_box(&got);
+            });
+            out.push(Case {
+                name: format!("reader_chunked_{n}"),
+                iters: r.iters,
+                ns_per_iter: r.mean_ns,
+                clients: 0,
+                shards: None,
+            });
+        }
+    }
+    out
+}
+
+/// Hands out a byte slice 4 KiB at a time — a stand-in for what one
+/// nonblocking-socket read returns.
+struct Chunked<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl std::io::Read for Chunked<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = buf.len().min(4096).min(self.data.len() - self.pos);
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
 fn cases_json(cases: Vec<Case>) -> Json {
     let mut o = Json::object();
     for c in cases {
@@ -271,7 +354,7 @@ pub fn run(cfg: &BenchConfig) -> Result<Json> {
     if let Some(s) = &cfg.suite {
         ensure!(
             SUITES.contains(&s.as_str()),
-            "unknown suite {s:?} (aggregation|scheduler|event_loop|end_to_end|sharded)"
+            "unknown suite {s:?} (aggregation|scheduler|event_loop|end_to_end|sharded|net)"
         );
     }
     let selected = |name: &str| match cfg.suite.as_deref() {
@@ -298,6 +381,9 @@ pub fn run(cfg: &BenchConfig) -> Result<Json> {
                 .unwrap_or(1)
         });
         suites.set("sharded", cases_json(suite_sharded(cfg.quick, shards)?));
+    }
+    if selected("net") {
+        suites.set("net", cases_json(suite_net(cfg.quick)));
     }
     let mut root = Json::object();
     root.set("schema", Json::Str(BENCH_SCHEMA.into()))
@@ -611,6 +697,20 @@ mod tests {
         }
         // The ratio case is dimensionless and sane (not a raw timing).
         assert!(cases[2].ns_per_iter < 100.0, "{}", cases[2].ns_per_iter);
+    }
+
+    #[test]
+    fn net_suite_emits_schema_shaped_cases() {
+        let cases = suite_net(true);
+        let names: Vec<&str> = cases.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(
+            names,
+            ["encode_5370", "decode_5370", "reader_chunked_5370", "encode_431080",
+             "decode_431080"]
+        );
+        for c in &cases {
+            assert!(c.iters > 0 && c.ns_per_iter > 0.0, "{}", c.name);
+        }
     }
 
     #[test]

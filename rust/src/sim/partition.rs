@@ -6,8 +6,10 @@
 //! * [`ClientPartition`] splits a client population into K contiguous,
 //!   disjoint shards (sizes differing by at most one). The sharded
 //!   simulator routes each client's local-training work to the worker
-//!   owning its shard; which shard a client lands in can affect only
-//!   *which thread* does the arithmetic, never the result.
+//!   owning its shard; the TCP leader routes each worker's *connection*
+//!   to the ingest shard owning its id (`shard_of`). In both, which
+//!   shard a client lands in can affect only *which thread* does the
+//!   arithmetic or frame-decoding, never the result.
 //! * [`OrderedMerge`] is the ordered fan-in: items arriving in
 //!   nondeterministic order are staged and released in ascending
 //!   `(key, client)` order. It packages, for consumers without a
@@ -17,8 +19,10 @@
 //!   uploads under `(start iteration, worker id)`, so socket races
 //!   within a burst cannot reorder aggregation (burst membership
 //!   itself remains wall-clock-dependent — full determinism needs the
-//!   simulator's virtual time). Ties on the full key are broken by
-//!   insertion sequence, exactly like the event queue.
+//!   simulator's virtual time, or the leader's `lockstep` mode, which
+//!   pins burst membership to fault-schedule-determined rounds). Ties
+//!   on the full key are broken by insertion sequence, exactly like
+//!   the event queue.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;

@@ -621,3 +621,110 @@ fn repeated_options_last_one_wins() {
     assert!(out.status.success(), "{}", stderr(&out));
     assert_eq!(stdout(&out).lines().count(), 5, "{}", stdout(&out));
 }
+
+// -------------------------------------------------------- serve / join
+
+/// A tiny synthetic dataset so serve/join invocations stay fast.
+const TINY_DATA: &[&str] = &[
+    "--learner", "linear",
+    "--set", "clients=2",
+    "--set", "samples_per_client=4",
+    "--set", "test_samples=10",
+];
+
+fn serve_err(extra: &[&str]) -> String {
+    let mut args = vec!["serve"];
+    args.extend_from_slice(extra);
+    args.extend_from_slice(TINY_DATA);
+    let out = repro(&args);
+    assert!(!out.status.success(), "serve {extra:?} must fail");
+    stderr(&out)
+}
+
+#[test]
+fn serve_rejects_bad_net_flags() {
+    for (extra, needle) in [
+        (&["--net-shards", "0"][..], "--net-shards"),
+        (&["--net-shards", "many"][..], "--net-shards"),
+        (&["--net-queue", "0"][..], "--net-queue"),
+        (&["--net-queue", "deep"][..], "--net-queue"),
+        (&["--net-timeout-ms", "soon"][..], "--net-timeout-ms"),
+        (&["--format", "xml"][..], "xml"),
+    ] {
+        let err = serve_err(extra);
+        assert!(err.contains(needle), "serve {extra:?}: {err}");
+    }
+}
+
+#[test]
+fn join_rejects_bad_fault_flags() {
+    for (extra, needle) in [
+        (&["--faults", "explode=0.1"][..], "explode"),
+        (&["--faults", "drop=1.5"][..], "outside"),
+        (&["--faults", "drop"][..], "key=value"),
+        (&["--faults", "churn=0.1x0"][..], "churn rounds"),
+        (&["--faults", "drop=0.1", "--fault-seed", "abc"][..], "--fault-seed"),
+        (&["--worker-id", "5", "--workers", "4"][..], "worker-id"),
+    ] {
+        let mut args = vec!["join"];
+        args.extend_from_slice(extra);
+        args.extend_from_slice(TINY_DATA);
+        let out = repro(&args);
+        assert!(!out.status.success(), "join {extra:?} must fail");
+        assert!(stderr(&out).contains(needle), "join {extra:?}: {}", stderr(&out));
+    }
+}
+
+#[test]
+fn usage_mentions_net_deployment_flags() {
+    let usage = stdout(&repro(&[]));
+    for flag in [
+        "--net-shards", "--net-timeout-ms", "--net-queue", "--lockstep",
+        "--faults", "--fault-seed", "--reconnect-ms", "--connect-attempts",
+    ] {
+        assert!(usage.contains(flag), "usage must mention {flag}");
+    }
+}
+
+/// One real (tiny) serve+join federation: the run JSON surfaces every
+/// net knob at its effective value — defaults included, the way `sim`
+/// surfaces `shards`.
+#[test]
+fn serve_run_json_surfaces_net_knob_defaults() {
+    use std::process::Stdio;
+    let bind = "127.0.0.1:47931";
+    let serve = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["serve", "--bind", bind, "--clients", "1", "--iterations", "2"])
+        .args(["--format", "json"])
+        .args(TINY_DATA)
+        .current_dir(std::env::temp_dir())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawning repro serve");
+    let join = repro(&[
+        "join", "--connect", bind, "--workers", "1", "--worker-id", "0",
+        "--local-steps", "1", "--connect-attempts", "300",
+        "--learner", "linear",
+        "--set", "clients=2", "--set", "samples_per_client=4",
+        "--set", "test_samples=10",
+    ]);
+    assert!(join.status.success(), "{}", stderr(&join));
+    let out = serve.wait_with_output().expect("waiting for serve");
+    assert!(out.status.success(), "{}", stderr(&out));
+    let j = csmaafl::util::json::parse(&stdout(&out)).unwrap();
+    assert_eq!(j.get("schema").unwrap().as_str(), Some("csmaafl-serve-v1"));
+    let cfg = j.get("config").unwrap();
+    let expect_shards = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1) as i64;
+    assert_eq!(cfg.get("net_shards").unwrap().as_i64(), Some(expect_shards));
+    assert_eq!(cfg.get("net_timeout_ms").unwrap().as_i64(), Some(5000));
+    assert_eq!(cfg.get("net_queue").unwrap().as_i64(), Some(1024));
+    assert_eq!(cfg.get("lockstep").unwrap().as_bool(), Some(false));
+    let summary = j.get("summary").unwrap();
+    assert_eq!(summary.get("aggregations").unwrap().as_i64(), Some(2));
+    let digest = summary.get("model_digest").unwrap().as_str().unwrap();
+    assert_eq!(digest.len(), 16, "digest is a 16-hex-digit string: {digest}");
+    assert!(digest.chars().all(|c| c.is_ascii_hexdigit()), "{digest}");
+}

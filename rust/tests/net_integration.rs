@@ -1,12 +1,19 @@
 //! Integration: the TCP deployment runtime (leader + workers over
 //! loopback) reaches the same kind of result as the simulator — and,
-//! since both now drive the same sans-IO `ServerCore`, the *same exact*
-//! aggregation arithmetic.
+//! since both drive the same sans-IO `ServerCore`, the *same exact*
+//! aggregation arithmetic. The fault-injection tests are the PR's
+//! acceptance gate: under seeded drop/cut/churn schedules, a lockstep
+//! leader at any `--net-shards` must be bit-identical (final model and
+//! summary JSON) to the in-process [`run_reference`] replay.
 
 use csmaafl::coordinator::{NativeAggregator, ServerCore, StalenessEq11};
 use csmaafl::data::{generate, partition, Partition, SynthKind};
 use csmaafl::learner::{BatchCursor, Learner, LinearLearner};
-use csmaafl::net::{run_leader, run_worker, LeaderConfig, WorkerConfig};
+use csmaafl::net::wire::{self, Message};
+use csmaafl::net::{
+    run_leader, run_reference, run_worker, FaultAction, FaultPlan, LeaderConfig, LeaderReport,
+    ReferenceConfig, WorkerConfig,
+};
 
 fn run_federation(port: u16, clients: usize, iterations: u64) -> (f64, Vec<u64>) {
     let (train, test) = generate(SynthKind::Mnist, 300, 150, 9);
@@ -16,14 +23,7 @@ fn run_federation(port: u16, clients: usize, iterations: u64) -> (f64, Vec<u64>)
     let addr = format!("127.0.0.1:{port}");
 
     let leader = std::thread::spawn({
-        let cfg = LeaderConfig {
-            bind: addr.clone(),
-            clients,
-            max_iterations: iterations,
-            gamma: 0.2,
-            mu_rho: 0.1,
-            aggregation: None,
-        };
+        let cfg = LeaderConfig::new(addr.clone(), clients, iterations);
         let w0 = w0.clone();
         move || run_leader(&cfg, w0)
     });
@@ -35,14 +35,15 @@ fn run_federation(port: u16, clients: usize, iterations: u64) -> (f64, Vec<u64>)
         let addr = addr.clone();
         handles.push(std::thread::spawn(move || {
             let learner = LinearLearner::default();
-            run_worker(&WorkerConfig {
-                connect: addr,
-                name: format!("w{i}"),
-                learner: &learner,
-                data: &train,
-                indices: shard.indices,
-                local_steps: 6,
-            })
+            run_worker(&WorkerConfig::new(
+                addr,
+                i as u32,
+                format!("w{i}"),
+                &learner,
+                &train,
+                shard.indices,
+                6,
+            ))
         }));
     }
     let report = leader.join().unwrap().unwrap();
@@ -89,14 +90,7 @@ fn leader_aggregation_equals_server_core_replay() {
     let addr = "127.0.0.1:47913".to_string();
 
     let leader = std::thread::spawn({
-        let cfg = LeaderConfig {
-            bind: addr.clone(),
-            clients: 1,
-            max_iterations: iterations,
-            gamma: 0.2,
-            mu_rho: 0.1,
-            aggregation: None,
-        };
+        let cfg = LeaderConfig::new(addr.clone(), 1, iterations);
         let w0 = w0.clone();
         move || run_leader(&cfg, w0)
     });
@@ -107,14 +101,15 @@ fn leader_aggregation_equals_server_core_replay() {
         let indices = shards[0].indices.clone();
         move || {
             let learner = LinearLearner::default();
-            run_worker(&WorkerConfig {
-                connect: addr,
-                name: "replayed".into(),
-                learner: &learner,
-                data: &train,
+            run_worker(&WorkerConfig::new(
+                addr,
+                0,
+                "replayed",
+                &learner,
+                &train,
                 indices,
                 local_steps,
-            })
+            ))
         }
     });
     let report = leader.join().unwrap().unwrap();
@@ -145,6 +140,263 @@ fn leader_aggregation_equals_server_core_replay() {
         report.final_model.max_abs_diff(core.global()),
         0.0,
         "TCP leader and ServerCore replay must agree bit-for-bit"
+    );
+    assert_eq!(report.mean_staleness, core.mean_staleness());
+}
+
+// ------------------------------------------------ fault-injection suite
+
+const FAULT_DATA_SEED: u64 = 21;
+const FAULT_LOCAL_STEPS: usize = 4;
+
+/// A full lockstep federation over loopback TCP with every worker
+/// running the given seeded fault schedule.
+fn run_faulted_tcp(
+    port: u16,
+    clients: usize,
+    iterations: u64,
+    net_shards: usize,
+    faults: FaultPlan,
+) -> LeaderReport {
+    let (train, _test) = generate(SynthKind::Mnist, 240, 60, FAULT_DATA_SEED);
+    let shards = partition(&train, clients, Partition::Iid, FAULT_DATA_SEED);
+    let learner = LinearLearner::default();
+    let w0 = learner.init(FAULT_DATA_SEED as u32).unwrap();
+    let addr = format!("127.0.0.1:{port}");
+
+    let leader = std::thread::spawn({
+        let mut cfg = LeaderConfig::new(addr.clone(), clients, iterations);
+        cfg.net_shards = net_shards;
+        cfg.lockstep = true;
+        move || run_leader(&cfg, w0)
+    });
+    std::thread::sleep(std::time::Duration::from_millis(100));
+
+    let mut handles = Vec::new();
+    for (i, shard) in shards.into_iter().enumerate() {
+        let train = train.clone();
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let learner = LinearLearner::default();
+            let mut cfg = WorkerConfig::new(
+                addr,
+                i as u32,
+                format!("w{i}"),
+                &learner,
+                &train,
+                shard.indices,
+                FAULT_LOCAL_STEPS,
+            );
+            cfg.faults = Some(faults);
+            cfg.reconnect_delay_ms = 10;
+            run_worker(&cfg)
+        }));
+    }
+    let report = leader.join().unwrap().unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    report
+}
+
+/// The sans-IO oracle for the same federation.
+fn run_faulted_reference(
+    clients: usize,
+    iterations: u64,
+    faults: Option<FaultPlan>,
+) -> LeaderReport {
+    let (train, _test) = generate(SynthKind::Mnist, 240, 60, FAULT_DATA_SEED);
+    let indices: Vec<Vec<usize>> = partition(&train, clients, Partition::Iid, FAULT_DATA_SEED)
+        .into_iter()
+        .map(|s| s.indices)
+        .collect();
+    let learner = LinearLearner::default();
+    let w0 = learner.init(FAULT_DATA_SEED as u32).unwrap();
+    run_reference(
+        &ReferenceConfig {
+            clients,
+            max_iterations: iterations,
+            gamma: 0.2,
+            mu_rho: 0.1,
+            aggregation: None,
+            learner: &learner,
+            data: &train,
+            shards: &indices,
+            local_steps: FAULT_LOCAL_STEPS,
+            faults,
+        },
+        w0,
+    )
+    .unwrap()
+}
+
+fn assert_reports_bit_identical(a: &LeaderReport, b: &LeaderReport, what: &str) {
+    assert_eq!(
+        a.summary_json().to_string_compact(),
+        b.summary_json().to_string_compact(),
+        "{what}: summaries diverge"
+    );
+    assert_eq!(
+        a.final_model.max_abs_diff(&b.final_model),
+        0.0,
+        "{what}: final models diverge"
+    );
+    assert_eq!(a.final_model.digest(), b.final_model.digest(), "{what}");
+}
+
+/// How many times each fault kind fires in the first `moves` decisions
+/// of every worker — to prove a schedule actually exercises the path
+/// under test (the schedule is a pure function of the seed, so this is
+/// exact, not probabilistic).
+fn fault_counts(plan: &FaultPlan, clients: usize, moves: u64) -> (u64, u64, u64) {
+    let (mut drops, mut cuts, mut churns) = (0, 0, 0);
+    for w in 0..clients {
+        for i in 0..moves {
+            match plan.action(w, i) {
+                FaultAction::Drop => drops += 1,
+                FaultAction::Cut => cuts += 1,
+                FaultAction::Churn { .. } => churns += 1,
+                FaultAction::None => {}
+            }
+        }
+    }
+    (drops, cuts, churns)
+}
+
+/// A worker dying mid-upload (severed socket, half a frame on the wire)
+/// ends in a clean `lost_uploads` increment, and the run stays
+/// bit-identical to the in-process replay of the same schedule.
+#[test]
+fn disconnect_mid_upload_counts_lost_and_matches_replay() {
+    let plan = FaultPlan::parse("cut=0.4", 101).unwrap();
+    let (_, cuts, _) = fault_counts(&plan, 2, 20);
+    assert!(cuts > 0, "seed must schedule at least one mid-upload cut");
+
+    let tcp = run_faulted_tcp(47914, 2, 30, 1, plan);
+    let reference = run_faulted_reference(2, 30, Some(plan));
+    assert_eq!(tcp.aggregations, 30);
+    assert!(tcp.lost_uploads > 0, "cuts must surface as lost uploads");
+    assert_reports_bit_identical(&tcp, &reference, "cut schedule");
+}
+
+/// A churned worker (announces Leave, sits out, redials) resumes with
+/// the stale model it held across the gap — no upload is lost, and the
+/// run stays bit-identical to the replay, exactly like the simulator's
+/// `churn` scenario.
+#[test]
+fn churned_worker_resumes_with_stale_model_and_matches_replay() {
+    let plan = FaultPlan::parse("churn=0.4x2", 77).unwrap();
+    let (_, _, churns) = fault_counts(&plan, 2, 20);
+    assert!(churns > 0, "seed must schedule at least one churn");
+
+    let tcp = run_faulted_tcp(47915, 2, 30, 1, plan);
+    let reference = run_faulted_reference(2, 30, Some(plan));
+    assert_eq!(tcp.aggregations, 30);
+    assert_eq!(tcp.lost_uploads, 0, "churn announces itself; nothing is lost");
+    assert!(tcp.updates_per_client.iter().all(|&u| u > 0), "resumed workers upload");
+    assert_reports_bit_identical(&tcp, &reference, "churn schedule");
+}
+
+/// The tentpole acceptance: under a mixed drop/cut/churn schedule, the
+/// lockstep leader is bit-identical across ingest shard counts and to
+/// the sans-IO reference — sharding affects only which thread decodes a
+/// worker's frames, never the result.
+#[test]
+fn net_shards_bit_identical_under_faults() {
+    let plan = FaultPlan::parse("drop=0.15,cut=0.1,churn=0.15x2", 9001).unwrap();
+    let (drops, cuts, churns) = fault_counts(&plan, 4, 15);
+    assert!(
+        drops > 0 && cuts > 0 && churns > 0,
+        "seed must exercise all three fault kinds ({drops}/{cuts}/{churns})"
+    );
+
+    let one = run_faulted_tcp(47917, 4, 40, 1, plan);
+    let three = run_faulted_tcp(47918, 4, 40, 3, plan);
+    let reference = run_faulted_reference(4, 40, Some(plan));
+    assert_eq!(one.aggregations, 40);
+    assert!(one.lost_uploads > 0, "drops and cuts must surface as losses");
+    assert_reports_bit_identical(&one, &three, "net-shards 1 vs 3");
+    assert_reports_bit_identical(&one, &reference, "net-shards 1 vs reference");
+}
+
+/// A worker that starts an upload and then stalls trips the leader's
+/// per-connection read deadline: the connection is dropped, the owed
+/// upload counts lost, and a reconnecting worker resumes from the
+/// deferred fresh global. Uses a raw wire-level client so the stall is
+/// exact (`run_worker` never stalls mid-frame on its own).
+#[test]
+fn stalled_upload_hits_read_timeout_and_counts_lost() {
+    use std::io::Write;
+
+    let iterations = 5u64;
+    let learner = LinearLearner::default();
+    let w0 = learner.init(33).unwrap();
+    let specs = w0.specs();
+    let addr = "127.0.0.1:47916".to_string();
+
+    let leader = std::thread::spawn({
+        let mut cfg = LeaderConfig::new(addr.clone(), 1, iterations);
+        cfg.read_timeout_ms = 150;
+        let w0 = w0.clone();
+        move || run_leader(&cfg, w0)
+    });
+    std::thread::sleep(std::time::Duration::from_millis(100));
+
+    // Session 1: say hello, take the global, send two bytes of an
+    // upload frame, then go silent past the deadline.
+    let mut s = std::net::TcpStream::connect(&addr).unwrap();
+    wire::send(&mut s, &Message::Hello { worker: 0, name: "staller".into() }).unwrap();
+    match wire::recv(&mut (&s), &specs).unwrap() {
+        Message::Global { .. } => {}
+        other => panic!("expected initial global, got {other:?}"),
+    }
+    s.write_all(&[0xEE, 0x00]).unwrap();
+    s.flush().unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(700));
+    drop(s);
+
+    // Session 2: rejoin; the leader owes us the deferred fresh global.
+    // Echo every global back as an update until Shutdown.
+    let mut s = std::net::TcpStream::connect(&addr).unwrap();
+    wire::send(&mut s, &Message::Hello { worker: 0, name: "staller".into() }).unwrap();
+    loop {
+        match wire::recv(&mut (&s), &specs).unwrap() {
+            Message::Global { iteration, params } => {
+                wire::send(&mut s, &Message::Update {
+                    start_iteration: iteration,
+                    steps: 1,
+                    params,
+                })
+                .unwrap();
+            }
+            Message::Shutdown => break,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    let report = leader.join().unwrap().unwrap();
+    assert_eq!(report.aggregations, iterations);
+    assert_eq!(report.lost_uploads, 1, "the stalled upload counts lost once");
+    assert_eq!(report.lost_per_client, vec![1]);
+
+    // Sans-IO replay of exactly that event order: issue w0 (lost to the
+    // stall), then echo-updates until done.
+    let mut core = ServerCore::new(
+        w0,
+        1,
+        Box::new(StalenessEq11::new(0.2).unwrap()),
+        0.1,
+    );
+    core.issue_to(0);
+    core.on_lost_upload(0);
+    for _ in 0..iterations {
+        let start = core.issue_to(0);
+        let global = core.global().clone();
+        core.on_update(0, start, &global, &NativeAggregator).unwrap();
+    }
+    assert_eq!(
+        report.final_model.max_abs_diff(core.global()),
+        0.0,
+        "timeout path must replay bit-for-bit on ServerCore"
     );
     assert_eq!(report.mean_staleness, core.mean_staleness());
 }

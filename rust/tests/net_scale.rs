@@ -1,0 +1,183 @@
+//! Multi-process scale harness: one `repro serve` leader and a fleet of
+//! real `repro join` worker *processes* over loopback, with socket-layer
+//! lost-upload and churn injection — the deployment path exercised the
+//! way an actual cluster would, not through in-process threads.
+//!
+//! Ignored by default (they launch hundreds of processes); CI runs them
+//! explicitly in the loopback-scale job:
+//!
+//! ```text
+//! cargo test --release --test net_scale -- --ignored
+//! ```
+
+use std::process::{Child, Command, Output, Stdio};
+
+use csmaafl::util::json::{parse, Json};
+
+/// Flags shared by the leader and every worker so all processes derive
+/// the same synthetic dataset and model shape.
+const DATA: &[&str] = &[
+    "--learner",
+    "linear",
+    "--set",
+    "clients=10",
+    "--set",
+    "samples_per_client=30",
+    "--set",
+    "test_samples=20",
+];
+
+fn repro() -> Command {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_repro"));
+    cmd.current_dir(std::env::temp_dir());
+    cmd
+}
+
+fn spawn_serve(port: u16, workers: usize, iterations: u64, extra: &[&str]) -> Child {
+    let bind = format!("127.0.0.1:{port}");
+    repro()
+        .args(["serve", "--bind", &bind])
+        .args(["--clients", &workers.to_string()])
+        .args(["--iterations", &iterations.to_string()])
+        .args(["--format", "json"])
+        .args(DATA)
+        .args(extra)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawning repro serve")
+}
+
+fn spawn_worker(port: u16, id: usize, workers: usize, faults: Option<&str>) -> Child {
+    let connect = format!("127.0.0.1:{port}");
+    let mut cmd = repro();
+    cmd.args(["join", "--connect", &connect])
+        .args(["--workers", &workers.to_string()])
+        .args(["--worker-id", &id.to_string()])
+        .args(["--local-steps", "1"])
+        .args(["--reconnect-ms", "20", "--connect-attempts", "500"])
+        .args(DATA);
+    if let Some(spec) = faults {
+        cmd.args(["--faults", spec, "--fault-seed", "42"]);
+    }
+    cmd.stdout(Stdio::null())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawning repro join")
+}
+
+fn finish(child: Child, what: &str) -> Output {
+    let out = child.wait_with_output().expect("waiting for child");
+    assert!(
+        out.status.success(),
+        "{what} failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    out
+}
+
+/// Run a whole federation as real processes; return the leader's JSON.
+fn run_cluster(
+    port: u16,
+    workers: usize,
+    iterations: u64,
+    faults: Option<&str>,
+    serve_extra: &[&str],
+) -> Json {
+    let leader = spawn_serve(port, workers, iterations, serve_extra);
+    let mut fleet = Vec::with_capacity(workers);
+    for id in 0..workers {
+        fleet.push(spawn_worker(port, id, workers, faults));
+    }
+    for (id, child) in fleet.into_iter().enumerate() {
+        finish(child, &format!("worker {id}"));
+    }
+    let out = finish(leader, "leader");
+    let text = String::from_utf8_lossy(&out.stdout);
+    parse(&text).unwrap_or_else(|e| panic!("leader JSON unparseable ({e}): {text}"))
+}
+
+fn summary_i64(j: &Json, key: &str) -> i64 {
+    j.get("summary")
+        .and_then(|s| s.get(key))
+        .and_then(|v| v.as_i64())
+        .unwrap_or_else(|| panic!("summary.{key} missing: {j:?}"))
+}
+
+/// Hundreds of worker processes with drop/cut/churn injection at the
+/// socket layer: the leader survives the churn, accounts every lost
+/// upload, and finishes the configured number of aggregations.
+#[test]
+#[ignore = "launches ~150 processes; run explicitly (CI loopback-scale job)"]
+fn hundreds_of_faulty_worker_processes_complete_a_federation() {
+    let workers = 150;
+    let iterations = 300;
+    let report = run_cluster(
+        47950,
+        workers,
+        iterations,
+        Some("drop=0.05,cut=0.02,churn=0.05x2"),
+        &[],
+    );
+    assert_eq!(
+        report.get("schema").and_then(|s| s.as_str()),
+        Some("csmaafl-serve-v1")
+    );
+    assert_eq!(summary_i64(&report, "aggregations"), iterations);
+    let lost = summary_i64(&report, "lost_uploads");
+    assert!(lost > 0, "fault injection must surface in lost_uploads");
+    let per_client = match report.get("summary").and_then(|s| s.get("lost_per_client")) {
+        Some(Json::Array(xs)) => xs.clone(),
+        other => panic!("lost_per_client missing: {other:?}"),
+    };
+    assert_eq!(per_client.len(), workers);
+    let total: i64 = per_client.iter().filter_map(|v| v.as_i64()).sum();
+    assert_eq!(total, lost, "per-client losses must sum to the total");
+    let updates = match report.get("summary").and_then(|s| s.get("updates_per_client")) {
+        Some(Json::Array(xs)) => xs.clone(),
+        other => panic!("updates_per_client missing: {other:?}"),
+    };
+    let delivered: i64 = updates.iter().filter_map(|v| v.as_i64()).sum();
+    assert_eq!(delivered, iterations, "every aggregation consumed one update");
+}
+
+/// The tentpole property at process granularity: a lockstep leader run
+/// twice — once with one ingest shard, once with four — over separately
+/// launched worker fleets produces byte-identical deterministic
+/// summaries (model digest included).
+#[test]
+#[ignore = "launches ~80 processes; run explicitly (CI loopback-scale job)"]
+fn sharded_leader_is_bit_identical_across_processes() {
+    let workers = 40;
+    let iterations = 80;
+    let faults = Some("drop=0.1,churn=0.1x2");
+    let one = run_cluster(
+        47951,
+        workers,
+        iterations,
+        faults,
+        &["--lockstep", "--net-shards", "1"],
+    );
+    let four = run_cluster(
+        47952,
+        workers,
+        iterations,
+        faults,
+        &["--lockstep", "--net-shards", "4"],
+    );
+    assert_eq!(
+        one.get("config").and_then(|c| c.get("net_shards")).and_then(|v| v.as_i64()),
+        Some(1)
+    );
+    assert_eq!(
+        four.get("config").and_then(|c| c.get("net_shards")).and_then(|v| v.as_i64()),
+        Some(4)
+    );
+    let summary = |j: &Json| j.get("summary").unwrap().to_string_compact();
+    assert_eq!(
+        summary(&one),
+        summary(&four),
+        "summary (incl. model digest) must not depend on --net-shards"
+    );
+    assert_eq!(summary_i64(&one, "aggregations"), iterations);
+}

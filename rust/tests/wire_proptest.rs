@@ -1,0 +1,330 @@
+//! Adversarial property harness for the wire protocol (`net::wire`).
+//!
+//! Dependency-free by design: the generator is the crate's own seeded
+//! PRNG (`util::rng`), so every failure reproduces from the printed
+//! iteration seed. CI runs the full ≥100k-input budget; set
+//! `WIRE_PROPTEST_ITERS` to scale the main sweep up or down locally.
+//!
+//! Properties:
+//! 1. the frame decoder never panics on arbitrary bytes — every refusal
+//!    is a typed [`WireError`];
+//! 2. any body the decoder *accepts* re-encodes byte-for-byte (decode
+//!    is the exact inverse of encode, even for mutated inputs);
+//! 3. hostile length prefixes are rejected with a typed
+//!    [`WireError::FrameTooLarge`] before any buffer is allocated;
+//! 4. any version byte other than [`WIRE_VERSION`] is a typed
+//!    [`WireError::UnsupportedVersion`], reported before the tag is
+//!    even interpreted;
+//! 5. every legal frame round-trips byte-for-byte, including raw-bit
+//!    floats (NaN payloads and all), under randomized tensor schemas;
+//! 6. the incremental `FrameReader` delivers the same frame bodies as
+//!    the blocking reader, whatever the chunking.
+
+use std::io::Read;
+
+use csmaafl::model::{ParamSet, Tensor, TensorSpec};
+use csmaafl::net::wire::{self, FrameReader, Message, WireError, MAX_FRAME, WIRE_VERSION};
+use csmaafl::util::rng::Rng;
+
+fn iters() -> u64 {
+    std::env::var("WIRE_PROPTEST_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100_000)
+}
+
+/// The fixed session schema for the adversarial sweep: small, two
+/// tensors, so 100k decodes stay fast.
+fn session_specs() -> Vec<TensorSpec> {
+    vec![
+        TensorSpec {
+            name: "w".into(),
+            shape: vec![3, 2],
+        },
+        TensorSpec {
+            name: "b".into(),
+            shape: vec![5],
+        },
+    ]
+}
+
+/// Parameters matching `specs`, every f32 drawn as raw bits (so NaNs,
+/// infinities and subnormals all travel).
+fn random_params(rng: &mut Rng, specs: &[TensorSpec]) -> ParamSet {
+    ParamSet {
+        tensors: specs
+            .iter()
+            .map(|s| {
+                let data = (0..s.numel())
+                    .map(|_| f32::from_le_bytes((rng.next_u64() as u32).to_le_bytes()))
+                    .collect();
+                Tensor::from_data(s.clone(), data)
+            })
+            .collect(),
+    }
+}
+
+/// A random legal message for `specs` (all six variants).
+fn random_message(rng: &mut Rng, specs: &[TensorSpec]) -> Message {
+    match rng.below(6) {
+        0 => Message::Hello {
+            worker: rng.next_u64() as u32,
+            name: format!("worker-{} é✓", rng.below(1000)),
+        },
+        1 => Message::Global {
+            iteration: rng.next_u64() >> 1,
+            params: random_params(rng, specs),
+        },
+        2 => Message::Update {
+            start_iteration: rng.next_u64() >> 1,
+            steps: rng.next_u64() as u32,
+            params: random_params(rng, specs),
+        },
+        3 => Message::Shutdown,
+        4 => Message::Lost {
+            start_iteration: rng.next_u64() >> 1,
+        },
+        _ => Message::Leave {
+            start_iteration: rng.next_u64() >> 1,
+            rounds: 1 + rng.below(16),
+        },
+    }
+}
+
+/// Pure noise: short bodies mostly (where all the parser's branching
+/// lives), occasionally kilobytes.
+fn random_bytes(rng: &mut Rng) -> Vec<u8> {
+    let len = if rng.below(20) == 0 {
+        rng.below(4096) as usize
+    } else {
+        rng.below(65) as usize
+    };
+    (0..len).map(|_| rng.next_u64() as u8).collect()
+}
+
+/// A legal frame body, damaged: byte flips, truncation, extension, or a
+/// corrupted splice — the mutations most likely to land on a validation
+/// boundary.
+fn mutated_legal(rng: &mut Rng, specs: &[TensorSpec]) -> Vec<u8> {
+    let frame = wire::encode(&random_message(rng, specs));
+    let mut body = frame[4..].to_vec();
+    for _ in 0..1 + rng.below(3) {
+        match rng.below(4) {
+            0 if !body.is_empty() => {
+                let i = rng.below(body.len() as u64) as usize;
+                body[i] ^= rng.next_u64() as u8;
+            }
+            1 => {
+                let keep = rng.below(body.len() as u64 + 1) as usize;
+                body.truncate(keep);
+            }
+            2 => {
+                for _ in 0..1 + rng.below(8) {
+                    body.push(rng.next_u64() as u8);
+                }
+            }
+            _ if body.len() >= 4 => {
+                let i = rng.below(body.len() as u64 - 3) as usize;
+                let v = (rng.next_u64() as u32).to_le_bytes();
+                body[i..i + 4].copy_from_slice(&v);
+            }
+            _ => {}
+        }
+    }
+    body
+}
+
+/// Property 1 + 2, the main ≥100k-input sweep: arbitrary and mutated
+/// bodies never panic, every rejection is typed (Display exercised),
+/// and every *accepted* body re-encodes byte-for-byte.
+#[test]
+fn adversarial_bodies_never_panic_and_accepts_are_exact() {
+    let specs = session_specs();
+    let mut rng = Rng::new(0xC5AAF1);
+    let n = iters();
+    let (mut accepted, mut rejected) = (0u64, 0u64);
+    for i in 0..n {
+        let body = if i % 2 == 0 {
+            random_bytes(&mut rng)
+        } else {
+            mutated_legal(&mut rng, &specs)
+        };
+        match wire::decode(&body, &specs) {
+            Ok(msg) => {
+                accepted += 1;
+                assert_eq!(
+                    &wire::encode(&msg)[4..],
+                    &body[..],
+                    "iteration {i}: accepted body does not re-encode identically"
+                );
+            }
+            Err(e) => {
+                rejected += 1;
+                assert!(!e.to_string().is_empty(), "iteration {i}: empty error text");
+            }
+        }
+    }
+    // Sanity on the sweep itself: mutation must actually exercise both
+    // outcomes, or the property is vacuous.
+    assert!(rejected > n / 4, "only {rejected}/{n} rejected");
+    assert!(accepted > 0, "mutation never produced an accepted frame");
+}
+
+/// Property 3: hostile length prefixes (0 or past [`MAX_FRAME`]) are
+/// typed errors from both the blocking reader and the incremental one,
+/// and the incremental one refuses before allocating the claimed size.
+#[test]
+fn hostile_length_prefixes_are_typed_errors() {
+    let specs = session_specs();
+    let mut rng = Rng::new(0x1E57);
+    for i in 0..2_000u64 {
+        let len = match i {
+            0 => 0u32,
+            1 => MAX_FRAME + 1,
+            2 => u32::MAX,
+            _ => MAX_FRAME + 1 + (rng.below((u32::MAX - MAX_FRAME) as u64 - 1) as u32),
+        };
+        let mut bytes = len.to_le_bytes().to_vec();
+        bytes.push(WIRE_VERSION);
+        let mut blocking = std::io::Cursor::new(bytes.clone());
+        let err = wire::recv(&mut blocking, &specs).unwrap_err();
+        match (len, err) {
+            (0, WireError::EmptyFrame) => {}
+            (l, WireError::FrameTooLarge { len: got, max }) => {
+                assert_eq!(got, l);
+                assert_eq!(max, MAX_FRAME);
+            }
+            (l, other) => panic!("len {l}: unexpected {other}"),
+        }
+        let mut incremental = FrameReader::new();
+        let mut stream = std::io::Cursor::new(bytes);
+        let err = loop {
+            match incremental.poll(&mut stream) {
+                Ok(None) => continue,
+                Ok(Some(_)) => panic!("len {len}: hostile frame accepted"),
+                Err(e) => break e,
+            }
+        };
+        assert!(
+            matches!(err, WireError::FrameTooLarge { .. } | WireError::EmptyFrame),
+            "len {len}: unexpected {err}"
+        );
+    }
+}
+
+/// Property 4: version negotiation precedes interpretation — any other
+/// version byte is a typed rejection that echoes the offending version,
+/// whatever follows it.
+#[test]
+fn unknown_versions_are_typed_rejections() {
+    let specs = session_specs();
+    let mut rng = Rng::new(0xBADC0DE);
+    let mut checked = 0u64;
+    for _ in 0..5_000u64 {
+        let version = rng.next_u64() as u8;
+        if version == WIRE_VERSION {
+            continue;
+        }
+        let mut body = vec![version];
+        for _ in 0..rng.below(16) {
+            body.push(rng.next_u64() as u8);
+        }
+        match wire::decode(&body, &specs) {
+            Err(WireError::UnsupportedVersion { version: got }) => assert_eq!(got, version),
+            other => panic!("version {version}: got {other:?}"),
+        }
+        checked += 1;
+    }
+    assert!(checked > 4_000, "only {checked} non-current versions drawn");
+}
+
+/// Property 5: legal frames round-trip byte-for-byte under randomized
+/// tensor schemas, raw-bit floats included.
+#[test]
+fn legal_frames_roundtrip_byte_for_byte() {
+    let mut rng = Rng::new(0x60017);
+    for i in 0..2_000u64 {
+        let specs: Vec<TensorSpec> = (0..1 + rng.below(3))
+            .map(|t| TensorSpec {
+                name: format!("t{t}"),
+                shape: vec![1 + rng.below(4) as usize, 1 + rng.below(4) as usize],
+            })
+            .collect();
+        let msg = random_message(&mut rng, &specs);
+        let frame = wire::encode(&msg);
+        let len = u32::from_le_bytes(frame[..4].try_into().unwrap()) as usize;
+        assert_eq!(len, frame.len() - 4, "iteration {i}: bad length prefix");
+        let decoded = wire::decode(&frame[4..], &specs)
+            .unwrap_or_else(|e| panic!("iteration {i}: legal frame rejected: {e}"));
+        assert_eq!(
+            wire::encode(&decoded),
+            frame,
+            "iteration {i}: round-trip not byte-for-byte"
+        );
+    }
+}
+
+/// Hands out bytes in random-sized chunks with interspersed WouldBlock,
+/// like a nonblocking socket under load.
+struct RandomChunks {
+    data: Vec<u8>,
+    pos: usize,
+    rng: Rng,
+}
+
+impl Read for RandomChunks {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.pos >= self.data.len() {
+            return Ok(0);
+        }
+        if self.rng.below(3) == 0 {
+            return Err(std::io::ErrorKind::WouldBlock.into());
+        }
+        let n = (1 + self.rng.below(7) as usize)
+            .min(buf.len())
+            .min(self.data.len() - self.pos);
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+/// Property 6: the incremental reader yields the same bodies as the
+/// blocking reader for any chunking of the same byte stream, then
+/// reports the clean close.
+#[test]
+fn frame_reader_matches_blocking_reads_under_any_chunking() {
+    let specs = session_specs();
+    let mut rng = Rng::new(0xFEED);
+    for i in 0..200u64 {
+        let count = 1 + rng.below(5) as usize;
+        let mut stream_bytes = Vec::new();
+        for _ in 0..count {
+            stream_bytes.extend_from_slice(&wire::encode(&random_message(&mut rng, &specs)));
+        }
+        let mut blocking = std::io::Cursor::new(stream_bytes.clone());
+        let mut expected = Vec::new();
+        for _ in 0..count {
+            expected.push(wire::recv_frame(&mut blocking).unwrap());
+        }
+        let mut chunked = RandomChunks {
+            data: stream_bytes,
+            pos: 0,
+            rng: rng.fork(i + 1),
+        };
+        let mut reader = FrameReader::new();
+        let mut got = Vec::new();
+        let close = loop {
+            match reader.poll(&mut chunked) {
+                Ok(Some(body)) => got.push(body),
+                Ok(None) => continue,
+                Err(e) => break e,
+            }
+        };
+        assert_eq!(got, expected, "iteration {i}: bodies diverged");
+        assert!(
+            matches!(close, WireError::Closed { mid_frame: false }),
+            "iteration {i}: unexpected close {close}"
+        );
+    }
+}
