@@ -25,14 +25,7 @@ fn main() -> Result<()> {
     let w0 = learner.init(42)?;
 
     let addr = "127.0.0.1:47831".to_string();
-    let leader_cfg = LeaderConfig {
-        bind: addr.clone(),
-        clients,
-        max_iterations: 300,
-        gamma: 0.2,
-        mu_rho: 0.1,
-        aggregation: None,
-    };
+    let leader_cfg = LeaderConfig::new(addr.clone(), clients, 300);
 
     let leader = std::thread::spawn({
         let cfg = leader_cfg.clone();
@@ -50,14 +43,15 @@ fn main() -> Result<()> {
             // Stagger connects slightly so Hello order is stable-ish.
             std::thread::sleep(std::time::Duration::from_millis(30 * i as u64));
             let learner = LinearLearner::default();
-            run_worker(&WorkerConfig {
-                connect: addr,
-                name: format!("worker-{i}"),
-                learner: &learner,
-                data: &train,
-                indices: shard.indices,
-                local_steps: 10,
-            })
+            run_worker(&WorkerConfig::new(
+                addr,
+                i as u32,
+                format!("worker-{i}"),
+                &learner,
+                &train,
+                shard.indices,
+                10,
+            ))
         }));
     }
 

@@ -84,13 +84,17 @@ COMMANDS:
             --shards sets the multi-shard case of the sharded suite)
   serve     --bind 0.0.0.0:7070 --clients N [--iterations J] [--gamma g]
             [--net-shards K] [--net-timeout-ms MS] [--net-queue CAP]
-            [--lockstep] [--format table|json] [--learner pjrt|linear]
+            [--net-rejoin-ms MS] [--lockstep] [--format table|json]
+            [--learner pjrt|linear]
             (TCP deployment leader: K ingest shards frame-decode
             uploads concurrently into one ordered aggregation stage;
             --net-timeout-ms is the per-connection mid-frame stall
             deadline (0 disables), --net-queue bounds the ingest queue
-            (backpressure), --lockstep gates rounds so the run is
-            bit-identical at any K and to the in-process reference)
+            (backpressure), --net-rejoin-ms aborts the run when a
+            disconnected worker still owes a move after that much event
+            silence (0 waits forever), --lockstep gates rounds so the
+            run is bit-identical at any K and to the in-process
+            reference)
   join      --connect host:7070 --worker-id K --workers N
             [--learner pjrt|linear] [--local-steps E]
             [--faults drop=p,cut=p,churn=pxR] [--fault-seed S]
@@ -841,6 +845,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .parse()
         .map_err(|_| anyhow!("--net-queue expects a positive integer"))?;
     ensure!(queue_capacity >= 1, "--net-queue must be >= 1, got {queue_capacity}");
+    let rejoin_timeout_ms: u64 = args
+        .opt_or("net-rejoin-ms", "30000")
+        .parse()
+        .map_err(|_| anyhow!("--net-rejoin-ms expects milliseconds (integer, 0 disables)"))?;
     let session =
         Session::new(cfg.clone(), args.learner()?, args.opt_or("artifacts", "artifacts"))?;
     let leader_cfg = csmaafl::net::LeaderConfig {
@@ -854,6 +862,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         read_timeout_ms,
         queue_capacity,
         lockstep: args.flag("lockstep"),
+        rejoin_timeout_ms,
     };
     let w0 = session.learner().init(cfg.seed as u32)?;
     let report = csmaafl::net::run_leader(&leader_cfg, w0)?;
@@ -871,6 +880,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .set("net_shards", Json::Int(net_shards as i64))
             .set("net_timeout_ms", Json::Int(read_timeout_ms as i64))
             .set("net_queue", Json::Int(queue_capacity as i64))
+            .set("net_rejoin_ms", Json::Int(rejoin_timeout_ms as i64))
             .set("lockstep", Json::Bool(leader_cfg.lockstep))
             .set("gamma", Json::Float(leader_cfg.gamma));
         let mut j = Json::object();

@@ -35,9 +35,23 @@
 //! *deferred* until it re-Hellos; a churning worker keeps its stale
 //! model across the gap and resumes exactly like the simulator's
 //! `churn` scenario — downtime accrues as staleness.
+//!
+//! Two robustness invariants the tests hold the stage to:
+//!
+//! * **Backpressure is not peer death.** The per-worker write handle
+//!   shares its socket's nonblocking flag with the ingest shard's read
+//!   half, so every leader→worker send goes through
+//!   [`wire::send_retrying`]: `WouldBlock` parks and resumes from the
+//!   same offset (no mid-frame abandonment), and only a real I/O error
+//!   or a write frozen past the stall deadline defers the model for
+//!   the rejoin path.
+//! * **Absent workers cannot wedge the run.** If the event stream goes
+//!   silent for `rejoin_timeout_ms` while a *disconnected* worker still
+//!   owes a move (in lockstep, one dead worker blocks every round),
+//!   the leader aborts with an error naming the absent workers rather
+//!   than waiting forever for a rejoin.
 
 use std::collections::VecDeque;
-use std::io::BufWriter;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
@@ -77,7 +91,8 @@ pub struct LeaderConfig {
     /// worker's frames, never the result.
     pub net_shards: usize,
     /// Per-connection deadline in ms for a frame that started arriving
-    /// but stalled (and for the Hello handshake). 0 disables.
+    /// but stalled (and for the Hello handshake, and for an outbound
+    /// send frozen by a peer that stopped draining). 0 disables.
     pub read_timeout_ms: u64,
     /// Capacity of the bounded ingest→aggregation queue (≥ 1). A full
     /// queue blocks the ingest shards, which stops socket reads —
@@ -85,6 +100,12 @@ pub struct LeaderConfig {
     pub queue_capacity: usize,
     /// Round-gated deterministic mode (see module docs).
     pub lockstep: bool,
+    /// How long (ms) the aggregation stage tolerates total event
+    /// silence while a *disconnected* worker still owes a move, before
+    /// aborting the run with an error instead of waiting forever for a
+    /// rejoin that may never come. Must exceed the longest expected
+    /// churn gap. 0 disables (wait forever — the pre-PR-6 behavior).
+    pub rejoin_timeout_ms: u64,
 }
 
 impl LeaderConfig {
@@ -103,6 +124,7 @@ impl LeaderConfig {
             read_timeout_ms: 5_000,
             queue_capacity: 1024,
             lockstep: false,
+            rejoin_timeout_ms: 30_000,
         }
     }
 }
@@ -176,11 +198,14 @@ impl Move {
 /// Events the ingest side feeds the aggregation stage.
 enum Inbound {
     /// A worker completed the Hello handshake (join or rejoin); the
-    /// write half of its connection travels with the event.
+    /// write half of its connection travels with the event. The handle
+    /// shares the socket (and its nonblocking flag) with the ingest
+    /// shard's read half, so all sends on it go through
+    /// [`wire::send_retrying`].
     Joined {
         worker: usize,
         name: String,
-        writer: BufWriter<TcpStream>,
+        writer: TcpStream,
     },
     /// A decoded worker→leader frame.
     Frame { worker: usize, msg: Message },
@@ -195,7 +220,7 @@ enum Inbound {
 
 /// Aggregation-stage bookkeeping for one worker.
 struct Peer {
-    writer: Option<BufWriter<TcpStream>>,
+    writer: Option<TcpStream>,
     joined: bool,
     /// A global model has been issued and its move not yet applied.
     outstanding: bool,
@@ -224,16 +249,36 @@ impl Peer {
 
     /// Hand this worker the current global model: stamp it via the
     /// core, then ship it now or defer until the worker reconnects.
-    fn issue(&mut self, worker: usize, core: &mut ServerCore) {
+    ///
+    /// The write handle shares its socket's nonblocking flag with the
+    /// ingest shard, so the send retries through `WouldBlock`
+    /// (backpressure is not peer death); only a real I/O failure or a
+    /// `stall`-long write freeze defers the model for the rejoin path.
+    fn issue(&mut self, worker: usize, core: &mut ServerCore, stall: Option<Duration>) {
         let iteration = core.issue_to(worker);
         let params = core.global().clone();
         self.outstanding = true;
+        self.ship(worker, iteration, params, stall);
+    }
+
+    /// Try to deliver a stamped global now; on failure park it in
+    /// `deferred` for the next rejoin.
+    fn ship(&mut self, worker: usize, iteration: u64, params: ParamSet, stall: Option<Duration>) {
         let sent = match self.writer.as_mut() {
-            Some(w) => wire::send(w, &Message::Global {
-                iteration,
-                params: params.clone(),
-            })
-            .is_ok(),
+            Some(w) => match wire::send_retrying(
+                w,
+                &Message::Global {
+                    iteration,
+                    params: params.clone(),
+                },
+                stall,
+            ) {
+                Ok(()) => true,
+                Err(e) => {
+                    log_info!("leader: sending global to worker {worker} failed ({e}); deferring");
+                    false
+                }
+            },
             None => false,
         };
         if !sent {
@@ -361,13 +406,26 @@ fn poll_conn(
 }
 
 /// A replaced connection may still hold the worker's final frames (a
-/// Leave announcement racing its own reconnect). Read them out — with a
-/// short blocking deadline — before the replacement takes over, so the
-/// per-worker frame order the aggregation stage sees matches the order
-/// the worker sent.
+/// Leave announcement racing its own reconnect). Read them out before
+/// the replacement takes over, so the per-worker frame order the
+/// aggregation stage sees matches the order the worker sent.
+///
+/// The drain stays *nonblocking* — an empty poll sleeps 1 ms, bounded
+/// by a 200 ms overall deadline — so one replaced connection can stall
+/// the other connections on this shard only while bytes are genuinely
+/// trickling in, and exits on the first quiet poll once no frame is in
+/// progress. Every exit emits `ConnLost` (with the reader's mid-frame
+/// state), exactly like `poll_conn`'s paths: the old connection is dead
+/// either way, and an owed upload that died with it must be accounted —
+/// swallowing the event here would strand a lockstep round.
 fn drain_replaced(mut conn: Conn, out: &mpsc::SyncSender<Inbound>, specs: &[TensorSpec]) {
-    let _ = conn.stream.set_nonblocking(false);
-    let _ = conn.stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let deadline = Instant::now() + Duration::from_millis(200);
+    let worker = conn.worker;
+    let conn_lost = move |mid_frame: bool, timed_out: bool| Inbound::ConnLost {
+        worker,
+        mid_frame,
+        timed_out,
+    };
     loop {
         match conn.reader.poll(&mut conn.stream) {
             Ok(Some(body)) => match wire::decode(&body, specs) {
@@ -377,20 +435,34 @@ fn drain_replaced(mut conn: Conn, out: &mpsc::SyncSender<Inbound>, specs: &[Tens
                         return;
                     }
                 }
-                _ => return,
-            },
-            Ok(None) => return,
-            Err(WireError::Closed { mid_frame }) => {
-                if mid_frame {
-                    let _ = out.send(Inbound::ConnLost {
-                        worker: conn.worker,
-                        mid_frame: true,
-                        timed_out: false,
-                    });
+                // Protocol violation on the dying connection: same as
+                // poll_conn's decode-error path.
+                _ => {
+                    let _ = out.send(conn_lost(true, false));
+                    return;
                 }
+            },
+            Ok(None) => {
+                if !conn.reader.mid_frame() {
+                    // Quiet and between frames: everything the worker
+                    // sent before redialing has been relayed.
+                    let _ = out.send(conn_lost(false, false));
+                    return;
+                }
+                if Instant::now() >= deadline {
+                    let _ = out.send(conn_lost(true, true));
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(WireError::Closed { mid_frame }) => {
+                let _ = out.send(conn_lost(mid_frame, false));
                 return;
             }
-            Err(_) => return,
+            Err(_) => {
+                let _ = out.send(conn_lost(conn.reader.mid_frame(), false));
+                return;
+            }
         }
     }
 }
@@ -413,7 +485,7 @@ fn run_shard(
                 drain_replaced(conns.swap_remove(i), out, specs);
             }
             let writer = match stream.try_clone() {
-                Ok(s) => BufWriter::new(s),
+                Ok(s) => s,
                 Err(_) => continue,
             };
             if stream.set_nonblocking(true).is_err() {
@@ -516,6 +588,13 @@ pub fn run_leader(cfg: &LeaderConfig, w0: ParamSet) -> Result<LeaderReport> {
     ensure!(cfg.clients >= 1, "leader needs at least one client");
     ensure!(cfg.queue_capacity >= 1, "queue capacity must be >= 1");
     let specs: Vec<TensorSpec> = w0.specs();
+    let model_frame = wire::model_frame_len(&specs);
+    ensure!(
+        model_frame <= wire::MAX_FRAME as u64,
+        "model frames would be {model_frame} bytes on the wire, over the \
+         {}-byte protocol limit (MAX_FRAME); shrink the model or raise the limit",
+        wire::MAX_FRAME
+    );
     let policy = parse_policy(&cfg.aggregation, cfg.clients, cfg.gamma)?;
     log_info!("leader: aggregation policy {}", policy.label());
     let core = ServerCore::new(w0, cfg.clients, policy, cfg.mu_rho);
@@ -559,6 +638,25 @@ pub fn run_leader(cfg: &LeaderConfig, w0: ParamSet) -> Result<LeaderReport> {
     })
 }
 
+/// Receive one ingest event: `Ok(Some)` on an event, `Ok(None)` when
+/// `timeout` elapsed with no event at all, `Err` when the ingest side
+/// hung up (shutdown).
+fn recv_event(rx: &mpsc::Receiver<Inbound>, timeout: Option<Duration>) -> Result<Option<Inbound>> {
+    match timeout {
+        None => rx
+            .recv()
+            .map(Some)
+            .map_err(|_| anyhow::anyhow!("ingest pipeline exited")),
+        Some(limit) => match rx.recv_timeout(limit) {
+            Ok(ev) => Ok(Some(ev)),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(anyhow::anyhow!("ingest pipeline exited"))
+            }
+        },
+    }
+}
+
 /// The aggregation stage. Runs on the caller's thread; everything the
 /// core sees flows through here in a deterministic per-burst (or, in
 /// lockstep, per-round) order.
@@ -567,37 +665,69 @@ fn aggregate(
     mut core: ServerCore,
     rx: &mpsc::Receiver<Inbound>,
 ) -> Result<LeaderReport> {
+    let stall = (cfg.read_timeout_ms > 0).then(|| Duration::from_millis(cfg.read_timeout_ms));
+    let rejoin = (cfg.rejoin_timeout_ms > 0).then(|| Duration::from_millis(cfg.rejoin_timeout_ms));
     let mut peers: Vec<Peer> = (0..cfg.clients).map(|_| Peer::new()).collect();
     let mut joined = 0usize;
 
-    // Join barrier: wait for every worker's first Hello.
+    // Join barrier: wait for every worker's first Hello. `rejoin`
+    // bounds the silence *between* joins, so a worker that never shows
+    // up fails the run instead of wedging it.
     while joined < cfg.clients {
-        let ev = rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("ingest pipeline exited before all workers joined"))?;
+        let ev = match recv_event(rx, rejoin)? {
+            Some(ev) => ev,
+            None => bail!(
+                "leader: only {joined} of {} workers joined within {:?}; aborting",
+                cfg.clients,
+                rejoin.expect("timeout fired only when set")
+            ),
+        };
         if let Inbound::Joined { worker, .. } = &ev {
             if !peers[*worker].joined {
                 joined += 1;
             }
         }
-        handle(&mut peers, &mut core, ev);
+        handle(&mut peers, &mut core, ev, stall);
     }
     log_info!("leader: all {} workers joined; broadcasting w0", cfg.clients);
 
     let started = Instant::now();
     for worker in 0..cfg.clients {
-        peers[worker].issue(worker, &mut core);
+        peers[worker].issue(worker, &mut core, stall);
     }
 
     let mut staged: OrderedMerge<Move> = OrderedMerge::new();
     let mut round = 0u64;
     'serve: while core.iteration() < cfg.max_iterations {
-        match rx.recv() {
-            Ok(ev) => handle(&mut peers, &mut core, ev),
+        match recv_event(rx, rejoin) {
+            Ok(Some(ev)) => handle(&mut peers, &mut core, ev, stall),
+            Ok(None) => {
+                // Event silence for the whole rejoin window. If some
+                // disconnected worker still owes a move, no rejoin is
+                // coming to unwedge it — abort loudly (the recoverable
+                // paths all produce events well inside the window). A
+                // quiet-but-connected federation just keeps waiting.
+                let absent: Vec<usize> = (0..cfg.clients)
+                    .filter(|&w| {
+                        peers[w].outstanding
+                            && peers[w].pending.is_empty()
+                            && peers[w].writer.is_none()
+                    })
+                    .collect();
+                if absent.is_empty() {
+                    continue;
+                }
+                bail!(
+                    "leader: no events for {:?} while disconnected worker(s) {absent:?} \
+                     still owe a move; treating them as permanently lost and aborting \
+                     (raise --net-rejoin-ms if churn gaps can legitimately exceed it)",
+                    rejoin.expect("timeout fired only when set")
+                );
+            }
             Err(_) => break,
         }
         while let Ok(ev) = rx.try_recv() {
-            handle(&mut peers, &mut core, ev);
+            handle(&mut peers, &mut core, ev, stall);
         }
         if cfg.lockstep {
             // Apply every round whose full move set has arrived.
@@ -626,7 +756,7 @@ fn aggregate(
                     batch.push(mv.stamp(), w, mv);
                 }
                 while let Some((_, w, mv)) = batch.pop() {
-                    apply(&mut peers, &mut core, w, mv, Some(round))?;
+                    apply(&mut peers, &mut core, w, mv, Some(round), stall)?;
                     if core.iteration() >= cfg.max_iterations {
                         break 'serve;
                     }
@@ -642,7 +772,7 @@ fn aggregate(
                 }
             }
             while let Some((_, w, mv)) = staged.pop() {
-                apply(&mut peers, &mut core, w, mv, None)?;
+                apply(&mut peers, &mut core, w, mv, None, stall)?;
                 if core.iteration() >= cfg.max_iterations {
                     break 'serve;
                 }
@@ -655,7 +785,7 @@ fn aggregate(
     // grace window so none is left dialing a dead address.
     for p in peers.iter_mut() {
         if let Some(w) = p.writer.as_mut() {
-            let _ = wire::send(w, &Message::Shutdown);
+            let _ = wire::send_retrying(w, &Message::Shutdown, stall);
         }
     }
     let deadline = Instant::now() + Duration::from_millis(600);
@@ -666,7 +796,7 @@ fn aggregate(
         }
         match rx.recv_timeout(left) {
             Ok(Inbound::Joined { mut writer, .. }) => {
-                let _ = wire::send(&mut writer, &Message::Shutdown);
+                let _ = wire::send_retrying(&mut writer, &Message::Shutdown, stall);
             }
             Ok(_) => {}
             Err(_) => break,
@@ -686,7 +816,7 @@ fn aggregate(
 }
 
 /// Fold one ingest event into the peer table.
-fn handle(peers: &mut [Peer], core: &mut ServerCore, ev: Inbound) {
+fn handle(peers: &mut [Peer], core: &mut ServerCore, ev: Inbound, stall: Option<Duration>) {
     match ev {
         Inbound::Joined { worker, name, writer } => {
             let p = &mut peers[worker];
@@ -700,18 +830,7 @@ fn handle(peers: &mut [Peer], core: &mut ServerCore, ev: Inbound) {
                 log_info!("leader: worker {worker} ({name}) joined");
             }
             if let Some((iteration, params)) = p.deferred.take() {
-                let sent = match p.writer.as_mut() {
-                    Some(w) => wire::send(w, &Message::Global {
-                        iteration,
-                        params: params.clone(),
-                    })
-                    .is_ok(),
-                    None => false,
-                };
-                if !sent {
-                    p.writer = None;
-                    p.deferred = Some((iteration, params));
-                }
+                p.ship(worker, iteration, params, stall);
             }
         }
         Inbound::Frame { worker, msg } => {
@@ -774,12 +893,13 @@ fn apply(
     worker: usize,
     mv: Move,
     round: Option<u64>,
+    stall: Option<Duration>,
 ) -> Result<()> {
     match mv {
         Move::Update { stamp, params } => {
             core.on_update(worker, stamp, &params, &NativeAggregator)?;
             peers[worker].outstanding = false;
-            peers[worker].issue(worker, core);
+            peers[worker].issue(worker, core, stall);
             if let Some(r) = round {
                 peers[worker].due = r + 1;
             }
@@ -787,7 +907,7 @@ fn apply(
         Move::Lost { .. } | Move::Broken { .. } => {
             core.on_lost_upload(worker);
             peers[worker].outstanding = false;
-            peers[worker].issue(worker, core);
+            peers[worker].issue(worker, core, stall);
             if let Some(r) = round {
                 peers[worker].due = r + 1;
             }

@@ -21,6 +21,7 @@
 //!   that stalls *mid-frame*, the server-side timeout path).
 
 use std::io::{Read, Write};
+use std::time::{Duration, Instant};
 
 use crate::model::{ParamSet, Tensor, TensorSpec};
 
@@ -237,8 +238,29 @@ fn put_params(buf: &mut Vec<u8>, p: &ParamSet) {
     }
 }
 
+/// Exact frame-body length (version byte + tag byte + payload) of the
+/// largest model-carrying message — an [`Message::Update`] — for a
+/// given tensor layout. Senders check this against [`MAX_FRAME`] once,
+/// up front, so an oversized model fails fast with a clear error
+/// instead of a per-send failure the receiver would only see as a
+/// rejected frame.
+pub fn model_frame_len(specs: &[TensorSpec]) -> u64 {
+    let params: u64 = 4 + specs
+        .iter()
+        .map(|s| 4 + 4 * s.numel() as u64)
+        .sum::<u64>();
+    // version + tag + start_iteration (u64) + steps (u32) + params.
+    2 + 8 + 4 + params
+}
+
 /// Encode a message into a ready-to-send frame (length prefix,
 /// [`WIRE_VERSION`], tag, payload).
+///
+/// Panics if the frame body would exceed [`MAX_FRAME`]: a receiver
+/// would reject such a frame anyway (and a length over `u32::MAX`
+/// could not even be framed), so the sender fails fast here rather
+/// than emitting a stream every peer tears down. Runtime paths guard
+/// this with [`model_frame_len`] before any socket work starts.
 pub fn encode(msg: &Message) -> Vec<u8> {
     let mut payload = Vec::new();
     let tag = match msg {
@@ -276,8 +298,16 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             Tag::Leave
         }
     };
+    // Length arithmetic in usize: `as u32` on a >4 GiB payload would
+    // silently truncate the prefix and mis-frame the whole stream.
+    let body_len = payload.len() + 2;
+    assert!(
+        body_len <= MAX_FRAME as usize,
+        "wire: refusing to encode a {tag:?} frame of {body_len} bytes \
+         (MAX_FRAME is {MAX_FRAME}); every receiver would reject it"
+    );
     let mut frame = Vec::with_capacity(payload.len() + 6);
-    put_u32(&mut frame, payload.len() as u32 + 2);
+    put_u32(&mut frame, body_len as u32);
     frame.push(WIRE_VERSION);
     frame.push(tag as u8);
     frame.extend_from_slice(&payload);
@@ -401,6 +431,48 @@ pub fn decode(payload: &[u8], specs: &[TensorSpec]) -> Result<Message, WireError
 pub fn send(stream: &mut impl Write, msg: &Message) -> Result<(), WireError> {
     let frame = encode(msg);
     stream.write_all(&frame)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Write one frame to a stream that may be nonblocking (the leader's
+/// per-worker write handles share their socket — and therefore its
+/// nonblocking flag — with the ingest shard's read handle).
+///
+/// `WouldBlock` is *not* an error here: it means the socket buffer is
+/// full, so the writer parks briefly and resumes from the same offset —
+/// partial progress is kept, never abandoned mid-frame. Only a real I/O
+/// failure, a closed peer, or `stall` elapsing with zero forward
+/// progress (a peer that stopped draining) is reported, as
+/// [`WireError::Io`]; callers may then treat the connection as dead.
+/// `stall == None` retries indefinitely.
+pub fn send_retrying(
+    stream: &mut impl Write,
+    msg: &Message,
+    stall: Option<Duration>,
+) -> Result<(), WireError> {
+    let frame = encode(msg);
+    let mut off = 0usize;
+    let mut last_progress = Instant::now();
+    while off < frame.len() {
+        match stream.write(&frame[off..]) {
+            Ok(0) => {
+                return Err(WireError::Io(std::io::ErrorKind::WriteZero.into()));
+            }
+            Ok(n) => {
+                off += n;
+                last_progress = Instant::now();
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if stall.is_some_and(|limit| last_progress.elapsed() >= limit) {
+                    return Err(WireError::Io(std::io::ErrorKind::TimedOut.into()));
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
     stream.flush()?;
     Ok(())
 }
@@ -817,6 +889,93 @@ mod tests {
         }
         assert!(reader.mid_frame());
         assert_eq!(reader.buffered(), full.len() / 2);
+    }
+
+    #[test]
+    fn model_frame_len_matches_encoded_update() {
+        let frame = encode(&Message::Update {
+            start_iteration: 1,
+            steps: 1,
+            params: pset(),
+        });
+        // Frame body = everything after the 4-byte length prefix.
+        assert_eq!(model_frame_len(&specs()), (frame.len() - 4) as u64);
+    }
+
+    #[test]
+    #[should_panic(expected = "refusing to encode")]
+    fn encode_refuses_bodies_over_max_frame() {
+        // A Hello whose name alone busts MAX_FRAME: the sender must
+        // fail fast, not emit a frame every receiver rejects.
+        encode(&Message::Hello {
+            worker: 0,
+            name: "x".repeat(MAX_FRAME as usize),
+        });
+    }
+
+    /// A writer that accepts one byte per call and interleaves
+    /// WouldBlock, mimicking a nonblocking socket under backpressure.
+    struct TrickleWriter {
+        data: Vec<u8>,
+        ready: bool,
+    }
+
+    impl Write for TrickleWriter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            if !self.ready {
+                self.ready = true;
+                return Err(std::io::ErrorKind::WouldBlock.into());
+            }
+            self.ready = false;
+            self.data.push(buf[0]);
+            Ok(1)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn send_retrying_survives_would_block_without_corruption() {
+        let msg = Message::Update {
+            start_iteration: 7,
+            steps: 2,
+            params: pset(),
+        };
+        let mut w = TrickleWriter {
+            data: Vec::new(),
+            ready: false,
+        };
+        send_retrying(&mut w, &msg, Some(Duration::from_secs(5))).unwrap();
+        // The byte-at-a-time, WouldBlock-riddled write still lands the
+        // exact frame: resume from the same offset, never restart.
+        assert_eq!(w.data, encode(&msg));
+    }
+
+    /// A writer whose peer never drains: every call is WouldBlock.
+    struct StuckWriter;
+
+    impl Write for StuckWriter {
+        fn write(&mut self, _buf: &[u8]) -> std::io::Result<usize> {
+            Err(std::io::ErrorKind::WouldBlock.into())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn send_retrying_times_out_only_on_sustained_stall() {
+        let err = send_retrying(
+            &mut StuckWriter,
+            &Message::Shutdown,
+            Some(Duration::from_millis(20)),
+        )
+        .unwrap_err();
+        match err {
+            WireError::Io(e) => assert_eq!(e.kind(), std::io::ErrorKind::TimedOut),
+            other => panic!("expected Io(TimedOut), got {other}"),
+        }
     }
 
     #[test]

@@ -89,6 +89,13 @@ enum SessionEnd {
 /// (held churn updates count when delivered).
 pub fn run_worker(cfg: &WorkerConfig<'_>) -> Result<u64> {
     let specs = cfg.learner.specs();
+    let model_frame = wire::model_frame_len(&specs);
+    anyhow::ensure!(
+        model_frame <= wire::MAX_FRAME as u64,
+        "model frames would be {model_frame} bytes on the wire, over the \
+         {}-byte protocol limit (MAX_FRAME)",
+        wire::MAX_FRAME
+    );
     let img = cfg.data.x.len() / cfg.data.len();
     let batch = cfg.learner.batch();
     let mut cursor = BatchCursor::new(cfg.indices.clone());

@@ -649,6 +649,7 @@ fn serve_rejects_bad_net_flags() {
         (&["--net-queue", "0"][..], "--net-queue"),
         (&["--net-queue", "deep"][..], "--net-queue"),
         (&["--net-timeout-ms", "soon"][..], "--net-timeout-ms"),
+        (&["--net-rejoin-ms", "later"][..], "--net-rejoin-ms"),
         (&["--format", "xml"][..], "xml"),
     ] {
         let err = serve_err(extra);
@@ -679,7 +680,7 @@ fn join_rejects_bad_fault_flags() {
 fn usage_mentions_net_deployment_flags() {
     let usage = stdout(&repro(&[]));
     for flag in [
-        "--net-shards", "--net-timeout-ms", "--net-queue", "--lockstep",
+        "--net-shards", "--net-timeout-ms", "--net-queue", "--net-rejoin-ms", "--lockstep",
         "--faults", "--fault-seed", "--reconnect-ms", "--connect-attempts",
     ] {
         assert!(usage.contains(flag), "usage must mention {flag}");
@@ -721,6 +722,7 @@ fn serve_run_json_surfaces_net_knob_defaults() {
     assert_eq!(cfg.get("net_shards").unwrap().as_i64(), Some(expect_shards));
     assert_eq!(cfg.get("net_timeout_ms").unwrap().as_i64(), Some(5000));
     assert_eq!(cfg.get("net_queue").unwrap().as_i64(), Some(1024));
+    assert_eq!(cfg.get("net_rejoin_ms").unwrap().as_i64(), Some(30000));
     assert_eq!(cfg.get("lockstep").unwrap().as_bool(), Some(false));
     let summary = j.get("summary").unwrap();
     assert_eq!(summary.get("aggregations").unwrap().as_i64(), Some(2));

@@ -400,3 +400,48 @@ fn stalled_upload_hits_read_timeout_and_counts_lost() {
     );
     assert_eq!(report.mean_staleness, core.mean_staleness());
 }
+
+/// A worker process that dies permanently must not wedge the leader:
+/// once the rejoin deadline passes with the dead worker still owing a
+/// move, `run_leader` returns an error naming it instead of blocking
+/// forever on a rejoin that never comes.
+#[test]
+fn leader_aborts_when_a_worker_never_rejoins() {
+    let learner = LinearLearner::default();
+    let w0 = learner.init(44).unwrap();
+    let specs = w0.specs();
+    let addr = "127.0.0.1:47920".to_string();
+
+    let leader = std::thread::spawn({
+        let mut cfg = LeaderConfig::new(addr.clone(), 1, 5);
+        cfg.read_timeout_ms = 150;
+        cfg.rejoin_timeout_ms = 400;
+        let w0 = w0.clone();
+        move || run_leader(&cfg, w0)
+    });
+    std::thread::sleep(std::time::Duration::from_millis(100));
+
+    // Join, take the initial global, then die for good: the owed upload
+    // becomes a loss, the fresh global is deferred — and nobody ever
+    // comes back for it.
+    let mut s = std::net::TcpStream::connect(&addr).unwrap();
+    wire::send(&mut s, &Message::Hello { worker: 0, name: "goner".into() }).unwrap();
+    match wire::recv(&mut (&s), &specs).unwrap() {
+        Message::Global { .. } => {}
+        other => panic!("expected initial global, got {other:?}"),
+    }
+    drop(s);
+
+    let start = std::time::Instant::now();
+    let err = leader.join().unwrap().expect_err("leader must abort, not wedge");
+    assert!(
+        start.elapsed() < std::time::Duration::from_secs(10),
+        "abort must land promptly, took {:?}",
+        start.elapsed()
+    );
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("worker(s) [0]"),
+        "error must name the absent worker: {msg}"
+    );
+}
