@@ -7,8 +7,9 @@
 #   make test-pjrt   Artifacts + Rust tests with the `pjrt` feature.
 #   make test-python Kernel/model tests for the artifact pipeline.
 #   make grid-smoke  Tiny end-to-end pass over the docs/EXPERIMENTS.md
-#                    commands: a parallel scenario x gamma grid, a sweep,
-#                    the Fig.-2 timeline and the beta table.
+#                    commands: a parallel scenario x gamma grid, a
+#                    capacity-class grid, a sweep, the Fig.-2 timeline
+#                    and the beta table.
 #   make bench       Full pinned-seed perf suite checked against the
 #                    committed BENCH_baseline.json (docs/BENCHMARKS.md);
 #                    mirrors the CI perf-smoke gate.
@@ -55,6 +56,11 @@ grid-smoke: build
 	    --axis gamma=0.1,0.4 \
 	    --axis scenario=static,dropout:0.2,churn:0.4,drift:2 \
 	    --out "$$tmp"; \
+	./target/release/repro grid --learner linear --jobs 2 \
+	    --set clients=4 --set samples_per_client=20 --set test_samples=50 \
+	    --set local_steps=2 --set max_slots=2 \
+	    --axis "capacity=full;classes:1.0x0.5,0.25x0.5" \
+	    --out "$$tmp/capacity"; \
 	./target/release/repro sweep --param gamma --values 0.1,0.4 --jobs 2 \
 	    --learner linear --set clients=4 --set samples_per_client=20 \
 	    --set test_samples=50 --set local_steps=2 --set max_slots=2 \

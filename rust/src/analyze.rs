@@ -4,7 +4,7 @@
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::metrics::{EvalPoint, RunResult};
+use crate::metrics::{ClassMetrics, EvalPoint, RunResult};
 use crate::util::json::{self, Json};
 
 /// Reload a RunResult from its JSON record (inverse of `to_json`).
@@ -32,6 +32,29 @@ pub fn run_from_json(j: &Json) -> Result<RunResult> {
         .and_then(Json::as_array)
         .map(|a| a.iter().filter_map(Json::as_i64).map(|v| v as u64).collect())
         .unwrap_or_default();
+    // Present only on heterogeneous-capacity records (the key is
+    // omitted entirely under the trivial profile).
+    if let Some(cells) = j.get("classes").and_then(Json::as_array) {
+        for c in cells {
+            run.classes.push(ClassMetrics {
+                label: c
+                    .get("label")
+                    .and_then(Json::as_str)
+                    .unwrap_or("?")
+                    .to_string(),
+                rate: c.get("rate").and_then(Json::as_f64).unwrap_or(0.0),
+                clients: c.get("clients").and_then(Json::as_i64).unwrap_or(0) as usize,
+                uploads: c.get("uploads").and_then(Json::as_i64).unwrap_or(0) as u64,
+                lost_uploads: c.get("lost_uploads").and_then(Json::as_i64).unwrap_or(0) as u64,
+                mean_train_loss: c
+                    .get("mean_train_loss")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0),
+                accuracy: c.get("accuracy").and_then(Json::as_f64).unwrap_or(0.0),
+                loss: c.get("loss").and_then(Json::as_f64).unwrap_or(0.0),
+            });
+        }
+    }
     for p in j
         .get("points")
         .and_then(Json::as_array)
@@ -107,6 +130,33 @@ pub fn figure_table(title: &str, runs: &[RunResult]) -> String {
             r.mean_staleness,
         ));
     }
+    // Per-capacity-class bias breakdown (heterogeneous-capacity runs
+    // only): how each class participated and how well the final global
+    // serves its own data.
+    for r in runs.iter().filter(|r| !r.classes.is_empty()) {
+        out.push_str(&format!(
+            "{:<18} {:>6} {:>8} {:>8} {:>6} {:>10} {:>10}\n",
+            format!("  {} classes", r.label),
+            "rate",
+            "clients",
+            "uploads",
+            "lost",
+            "class-acc",
+            "class-loss"
+        ));
+        for c in &r.classes {
+            out.push_str(&format!(
+                "{:<18} {:>6} {:>8} {:>8} {:>6} {:>10.4} {:>10.4}\n",
+                format!("  {}", c.label),
+                c.rate,
+                c.clients,
+                c.uploads,
+                c.lost_uploads,
+                c.accuracy,
+                c.loss
+            ));
+        }
+    }
     if let Some(fed) = fed {
         let best_early = runs
             .iter()
@@ -158,6 +208,32 @@ mod tests {
         assert_eq!(back.points[2].accuracy, 0.9);
         assert_eq!(back.lost_uploads, 3);
         assert_eq!(back.lost_per_client, vec![1, 2]);
+    }
+
+    #[test]
+    fn class_cells_roundtrip_and_render() {
+        let mut r = fake_run("csmaafl", &[0.1, 0.6]);
+        r.classes.push(ClassMetrics {
+            label: "r0.25".into(),
+            rate: 0.25,
+            clients: 5,
+            uploads: 40,
+            lost_uploads: 2,
+            mean_train_loss: 0.9,
+            accuracy: 0.44,
+            loss: 1.6,
+        });
+        let back = run_from_json(&r.to_json()).unwrap();
+        assert_eq!(back.classes.len(), 1);
+        assert_eq!(back.classes[0].label, "r0.25");
+        assert_eq!(back.classes[0].clients, 5);
+        assert_eq!(back.classes[0].accuracy, 0.44);
+        let table = figure_table("t", std::slice::from_ref(&back));
+        assert!(table.contains("r0.25"), "{table}");
+        assert!(table.contains("0.4400"), "{table}");
+        // Trivial-profile runs render no class block.
+        let plain = figure_table("t", &[fake_run("fedavg", &[0.1])]);
+        assert!(!plain.contains("classes"), "{plain}");
     }
 
     #[test]

@@ -9,7 +9,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::policy::{AggregationPolicy, PolicyParams};
 use crate::coordinator::scheduler::SchedulerPolicy;
 use crate::data::{Partition, SynthKind};
-use crate::sim::{scenario, HeterogeneityProfile, TimeModel};
+use crate::sim::{capacity, scenario, HeterogeneityProfile, TimeModel};
 use crate::util::json::{self, Json};
 
 /// Which federated algorithm to run.
@@ -125,6 +125,12 @@ pub struct RunConfig {
     /// engines simulate; `None` (spelled `static`) keeps today's fixed
     /// world and is bit-identical to the pre-scenario engine.
     pub scenario: Option<String>,
+    /// Capacity-profile registry spelling (e.g. `uniform:0.5`,
+    /// `classes:1.0x0.5,0.5x0.3,0.25x0.2`) assigning each client a
+    /// HeteroFL-style submodel rate; `None` (spelled `full`) keeps
+    /// every client at rate 1.0 and is bit-identical to the
+    /// pre-submodel engines.
+    pub capacity: Option<String>,
     /// Upload-slot arbitration policy (AFL engines).
     pub scheduler: SchedulerPolicy,
     /// Failure injection: probability that a granted upload is lost in
@@ -162,6 +168,7 @@ impl Default for RunConfig {
             aggregator: AggregatorKind::Native,
             aggregation: None,
             scenario: None,
+            capacity: None,
             scheduler: SchedulerPolicy::OldestModelFirst,
             upload_loss: 0.0,
             sfl_sample_fraction: 1.0,
@@ -228,6 +235,21 @@ impl RunConfig {
                 );
             }
             scenario::parse(spec).with_context(|| format!("scenario {spec:?}"))?;
+        }
+        let profile = capacity::resolve(self.capacity.as_deref())?;
+        if !profile.is_trivial()
+            && !matches!(self.algorithm, Algorithm::AflNaive | Algorithm::Csmaafl)
+        {
+            // Only the event-driven AFL engines thread submodels through
+            // aggregation; the SFL and solved-β sweeps presume every
+            // client trains the full model, so accepting the profile
+            // would silently run a different workload.
+            bail!(
+                "capacity profiles apply only to the event-driven AFL \
+                 engines (afl-naive/csmaafl); algorithm {} trains full \
+                 models",
+                self.algorithm.name()
+            );
         }
         Ok(())
     }
@@ -316,6 +338,16 @@ impl RunConfig {
                     Some(val.to_string())
                 }
             }
+            // Capacity spellings are validated against the registry in
+            // `validate`; `full` is the pinned default, stored as None
+            // so provenance roundtrips.
+            "capacity" => {
+                self.capacity = if val.eq_ignore_ascii_case("full") {
+                    None
+                } else {
+                    Some(val.to_string())
+                }
+            }
             "scheduler" => self.scheduler = SchedulerPolicy::parse(val).ok_or_else(badval)?,
             "upload_loss" => self.upload_loss = val.parse().map_err(|_| badval())?,
             "sfl_sample_fraction" => {
@@ -360,6 +392,10 @@ impl RunConfig {
                 "scenario",
                 Json::Str(self.scenario.clone().unwrap_or_else(|| "static".into())),
             )
+            .set(
+                "capacity",
+                Json::Str(self.capacity.clone().unwrap_or_else(|| "full".into())),
+            )
             .set("scheduler", Json::Str(self.scheduler.name().into()));
         o
     }
@@ -401,6 +437,10 @@ mod tests {
         assert_eq!(c.scenario.as_deref(), Some("dropout:0.1"));
         c.set_field("scenario", "static").unwrap();
         assert_eq!(c.scenario, None);
+        c.set_field("capacity", "classes:1.0x0.5,0.5x0.5").unwrap();
+        assert_eq!(c.capacity.as_deref(), Some("classes:1.0x0.5,0.5x0.5"));
+        c.set_field("capacity", "full").unwrap();
+        assert_eq!(c.capacity, None);
         assert!(c.set_field("nonsense", "1").is_err());
         assert!(c.set_field("clients", "abc").is_err());
     }
@@ -441,6 +481,29 @@ mod tests {
         assert!(err.contains("static world"), "{err}");
         c.algorithm = Algorithm::AflBaseline;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_capacity_spec() {
+        let mut c = RunConfig {
+            capacity: Some("bogus".into()),
+            ..RunConfig::default()
+        };
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("bogus"), "{err}");
+        c.capacity = Some("classes:1.0x0.5,0.5x0.5".into());
+        c.validate().unwrap();
+        // Engines that train full models must refuse a non-trivial
+        // profile rather than silently ignoring it...
+        c.algorithm = Algorithm::Sfl;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("full models"), "{err}");
+        c.algorithm = Algorithm::AflBaseline;
+        assert!(c.validate().is_err());
+        // ...but the trivial spelling is fine everywhere (it IS the
+        // full-model workload).
+        c.capacity = Some("uniform:1.0".into());
+        c.validate().unwrap();
     }
 
     #[test]
@@ -495,6 +558,7 @@ mod tests {
             aggregator: AggregatorKind::Pjrt,
             aggregation: Some("fedasync:0.5,0.9".into()),
             scenario: Some("drift:8,2.5".into()),
+            capacity: Some("classes:1.0x0.5,0.5x0.5".into()),
             scheduler: SchedulerPolicy::RoundRobin,
             jitter: 0.25,
             ..RunConfig::default()

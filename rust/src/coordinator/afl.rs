@@ -22,6 +22,16 @@
 //! `static` default answers every hook with the identity and draws no
 //! randomness, so default runs are bit-identical to the pre-scenario
 //! engine.
+//!
+//! Heterogeneous capacity (`capacity=<profile>`, `sim::capacity`):
+//! clients in a rate-r class compute r× faster and upload only the
+//! leading r-slice of each tensor (`model::submodel`), which the server
+//! merges slice-wise. One approximation vs the HeteroFL discipline the
+//! scale sim implements: this engine's learner API has no sliced
+//! training, so clients train the *full* model and upload the covered
+//! slice. Submodel merges always run through the native slice kernels
+//! (the PJRT aggregator has no slice path). The trivial `full` /
+//! `uniform:1.0` profile takes the pre-submodel code path untouched.
 
 use std::sync::Arc;
 
@@ -30,11 +40,13 @@ use anyhow::Result;
 use super::core::ServerCore;
 use super::policy::AggregationPolicy;
 use super::runner::{FlContext, Recorder, RunStats};
+use super::scale::{class_cells, scaled_tau_up, SubmodelCtx};
 use super::scheduler::{SchedulerPolicy, UploadScheduler};
+use crate::data::Dataset;
 use crate::learner::BatchCursor;
-use crate::metrics::RunResult;
-use crate::model::ParamSet;
-use crate::sim::{scenario, ComputeModel, EventQueue, Scenario, Ticks, UplinkChannel};
+use crate::metrics::{ClassMetrics, RunResult};
+use crate::model::{ParamLayout, ParamSet, SubmodelMap};
+use crate::sim::{capacity, scenario, ComputeModel, EventQueue, Scenario, Ticks, UplinkChannel};
 use crate::util::rng::Rng;
 
 #[derive(Debug)]
@@ -79,11 +91,11 @@ fn grant_next(
     channel: &mut UplinkChannel,
     queue: &mut EventQueue<Event>,
     now: Ticks,
-    tau_up: Ticks,
+    tau_up_for: impl Fn(usize) -> Ticks,
 ) {
     if channel.is_free(now) {
         if let Some(winner) = scheduler.grant() {
-            let done = channel.reserve(now, tau_up);
+            let done = channel.reserve(now, tau_up_for(winner));
             queue.schedule_at(done, Event::UploadDone { client: winner });
         }
     }
@@ -122,7 +134,37 @@ pub fn run_afl(
     let img = ctx.train.x.len() / ctx.train.len();
     let batch = ctx.learner.batch();
 
-    let mut core = ServerCore::new(ctx.learner.init(cfg.seed as u32)?, m, policy, cfg.mu_rho);
+    let w_init = ctx.learner.init(cfg.seed as u32)?;
+    // Heterogeneous capacity: assign each client a submodel rate and
+    // precompute one slice map per class. The trivial profile stays
+    // `None` so the pre-submodel paths below run literally unchanged.
+    let profile = capacity::resolve(cfg.capacity.as_deref())?;
+    let subctx: Option<SubmodelCtx> = if profile.is_trivial() {
+        None
+    } else {
+        let layout = ParamLayout::of(&w_init);
+        let class_of = profile.assign(m, &root);
+        let maps: Vec<SubmodelMap> = profile
+            .classes()
+            .iter()
+            .map(|c| SubmodelMap::new(&layout, c.rate))
+            .collect();
+        crate::log_info!("afl[{}]: capacity {}", label, profile.spec());
+        Some(SubmodelCtx {
+            profile,
+            class_of,
+            maps,
+        })
+    };
+    // Reusable packed-slice upload buffer, sized to the largest map.
+    let mut subbuf = vec![
+        0.0f32;
+        subctx.as_ref().map_or(0, |sc| {
+            sc.maps.iter().map(|mp| mp.numel()).max().unwrap_or(0)
+        })
+    ];
+
+    let mut core = ServerCore::new(w_init, m, policy, cfg.mu_rho);
     let mut queue: EventQueue<Event> = EventQueue::new();
     let mut channel = UplinkChannel::new();
     let mut scheduler = UploadScheduler::new(sched_policy, m);
@@ -137,6 +179,13 @@ pub fn run_afl(
 
     let mut xs = Vec::new();
     let mut ys = Vec::new();
+
+    // Upload duration per client: τ^u under the trivial profile (the
+    // pre-submodel constant), scaled by the client's rate otherwise.
+    let tau_up_of = |client: usize| match &subctx {
+        None => cfg.time.tau_up,
+        Some(sc) => scaled_tau_up(cfg.time.tau_up, sc.map_of(client).rate()),
+    };
 
     // t=0: the server broadcasts w_0 to everyone (Algorithm 1 line 1).
     // One shared snapshot for the whole broadcast.
@@ -171,8 +220,12 @@ pub fn run_afl(
                 core.record_loss(client, loss as f64);
                 clients[client].pending = Some((local, i));
                 // Scenario drift: time-varying compute (scale 1.0 under
-                // the static default — bit-identical draw).
-                let scale = world.compute_scale(client, now);
+                // the static default — bit-identical draw). A rate-r
+                // capacity class pays r× the compute cost on top.
+                let mut scale = world.compute_scale(client, now);
+                if let Some(sc) = &subctx {
+                    scale *= sc.map_of(client).rate();
+                }
                 let dur = cm.duration_scaled(&cfg.time, client, steps, &mut jrng, scale);
                 queue.schedule_in(dur, Event::ComputeDone { client });
             }
@@ -185,7 +238,7 @@ pub fn run_afl(
                     continue;
                 }
                 scheduler.request(client, now);
-                grant_next(&mut scheduler, &mut channel, &mut queue, now, cfg.time.tau_up);
+                grant_next(&mut scheduler, &mut channel, &mut queue, now, tau_up_of);
             }
             Event::UploadDone { client } => {
                 let (local, i) = clients[client]
@@ -207,13 +260,25 @@ pub fn run_afl(
                         w: Arc::new(core.global().clone()),
                         i,
                     });
-                    grant_next(&mut scheduler, &mut channel, &mut queue, now, cfg.time.tau_up);
+                    grant_next(&mut scheduler, &mut channel, &mut queue, now, tau_up_of);
                     continue;
                 }
                 // Evaluate cadence points that precede this aggregation.
                 rec.catch_up(now, core.global(), core.iteration())?;
 
-                core.on_update(client, i, &local, ctx)?; // eq. (3)/(11)
+                match &subctx {
+                    None => {
+                        core.on_update(client, i, &local, ctx)?; // eq. (3)/(11)
+                    }
+                    Some(sc) => {
+                        // Pack the client's covered slice and merge it
+                        // slice-wise (uncovered elements keep the
+                        // previous global).
+                        let map = sc.map_of(client);
+                        map.extract_from_set(&local, &mut subbuf[..map.numel()]);
+                        core.on_update_submodel(client, i, &subbuf[..map.numel()], map)?;
+                    }
+                }
 
                 // Fresh global goes back to this client only (a snapshot:
                 // further aggregations must not mutate an in-flight model).
@@ -224,7 +289,7 @@ pub fn run_afl(
                     i,
                 });
                 // Channel freed: grant the next contender, if any.
-                grant_next(&mut scheduler, &mut channel, &mut queue, now, cfg.time.tau_up);
+                grant_next(&mut scheduler, &mut channel, &mut queue, now, tau_up_of);
             }
         }
     }
@@ -237,6 +302,53 @@ pub fn run_afl(
         );
     }
 
+    // Per-class roll-up: participation from the core's dense tables,
+    // plus the final global evaluated on each class's pooled training
+    // data — the system-bias signal (classes that upload less or
+    // smaller slices get modeled worse).
+    let classes: Vec<ClassMetrics> = match &subctx {
+        None => Vec::new(),
+        Some(sc) => {
+            let cells = class_cells(
+                sc,
+                core.updates_per_client(),
+                core.lost_per_client(),
+                core.loss_totals(),
+            );
+            let mut out = Vec::with_capacity(cells.len());
+            for (k, cell) in cells.into_iter().enumerate() {
+                let mut x = Vec::new();
+                let mut y = Vec::new();
+                for (c, &cls) in sc.class_of.iter().enumerate() {
+                    if cls as usize != k {
+                        continue;
+                    }
+                    for &s in &ctx.shards[c].indices {
+                        x.extend_from_slice(ctx.train.image(s));
+                        y.push(ctx.train.y[s]);
+                    }
+                }
+                let (accuracy, loss) = if y.is_empty() {
+                    (0.0, 0.0)
+                } else {
+                    let pooled = Dataset { x, y };
+                    ctx.learner.evaluate(core.global(), &pooled)?
+                };
+                out.push(ClassMetrics {
+                    label: cell.label,
+                    rate: cell.rate,
+                    clients: cell.clients,
+                    uploads: cell.uploads,
+                    lost_uploads: cell.lost_uploads,
+                    mean_train_loss: cell.mean_train_loss,
+                    accuracy,
+                    loss,
+                });
+            }
+            out
+        }
+    };
+
     let stats = RunStats {
         label,
         uploads: scheduler.grants().to_vec(),
@@ -246,6 +358,7 @@ pub fn run_afl(
         lost_uploads: core.lost_uploads(),
         lost_per_client: core.lost_per_client().to_vec(),
         mean_train_loss: core.mean_train_loss(),
+        classes,
         total_ticks: max_ticks,
     };
     Ok(rec.into_result(stats))

@@ -122,6 +122,7 @@ pub fn run_afl_baseline(ctx: &FlContext<'_>) -> Result<RunResult> {
         lost_uploads: 0,
         lost_per_client: vec![0; m],
         mean_train_loss: core.mean_train_loss(),
+        classes: Vec::new(), // capacity is AFL-only (RunConfig::validate)
         total_ticks: max_ticks,
     };
     Ok(rec.into_result(stats))

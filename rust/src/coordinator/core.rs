@@ -16,7 +16,7 @@ use anyhow::{ensure, Result};
 
 use super::policy::{AggregationPolicy, UpdateObservation};
 use super::staleness::StalenessTracker;
-use crate::model::ParamSet;
+use crate::model::{ParamSet, SubmodelMap};
 
 /// Executor of eq. (3) `w ← β·w + (1-β)·w_local`: how the aggregation
 /// arithmetic runs, independent of which policy chose β.
@@ -232,6 +232,54 @@ impl ServerCore {
         })
     }
 
+    /// The heterogeneous-capacity path: absorb a rate-scaled submodel
+    /// given as a packed flat buffer over `map`'s covered slices (see
+    /// [`crate::model::SubmodelMap`]). The policy decides exactly as in
+    /// the full-model paths — same [`ServerCore::decide`], with the
+    /// update norm measured over the covered slice only — and eq. (3)
+    /// is applied only to the covered leading span of every tensor;
+    /// uncovered elements keep the current global (the HeteroFL rule).
+    /// When `map` is the identity (rate 1.0) this delegates to
+    /// [`ServerCore::on_update_flat`], so `capacity=uniform:1.0` is
+    /// bit-identical to the pre-submodel engine.
+    pub fn on_update_submodel(
+        &mut self,
+        client: usize,
+        start_iteration: u64,
+        local_sub: &[f32],
+        map: &SubmodelMap,
+    ) -> Result<AggregationOutcome> {
+        if map.is_full() {
+            return self.on_update_flat(client, start_iteration, local_sub);
+        }
+        ensure!(
+            map.full_numel() == self.w.numel(),
+            "submodel map covers a {}-element model, global model has {}",
+            map.full_numel(),
+            self.w.numel()
+        );
+        ensure!(
+            local_sub.len() == map.numel(),
+            "submodel update has {} elements, map covers {}",
+            local_sub.len(),
+            map.numel()
+        );
+        let update_norm = if self.policy.needs_update_norm() {
+            map.l2_distance_set(&self.w, local_sub)
+        } else {
+            0.0
+        };
+        let (staleness, weight, beta) = self.decide(client, start_iteration, update_norm);
+        map.merge_lerp_set(&mut self.w, local_sub, beta);
+        self.advance(client);
+        Ok(AggregationOutcome {
+            iteration: self.j,
+            staleness,
+            weight,
+            beta,
+        })
+    }
+
     /// Record an upload lost in transit (failure injection / network
     /// drop / `dropout` scenario). No aggregation happens; only the
     /// statistics advance.
@@ -265,6 +313,13 @@ impl ServerCore {
         } else {
             0.0
         }
+    }
+
+    /// Per-client loss accounting totals `(loss_sum, loss_n)` — the raw
+    /// sums behind [`ServerCore::mean_loss`], so drivers can pool them
+    /// into capacity-class means without losing report counts.
+    pub fn loss_totals(&self) -> (&[f64], &[u64]) {
+        (&self.clients.loss_sum, &self.clients.loss_n)
     }
 
     /// Uploads lost in transit so far.
@@ -402,6 +457,64 @@ mod tests {
         }
         assert_eq!(a.global().max_abs_diff(b.global()), 0.0);
         assert_eq!(a.updates_per_client(), b.updates_per_client());
+    }
+
+    #[test]
+    fn submodel_update_at_rate_one_is_bit_identical_to_flat_path() {
+        use crate::model::{ParamLayout, SubmodelMap};
+        let w0 = pset(&[1.0, -2.0, 0.5, 3.0]);
+        let map = SubmodelMap::new(&ParamLayout::of(&w0), 1.0);
+        let mut a = ServerCore::new(
+            w0.clone(),
+            4,
+            Box::new(StalenessEq11::new(0.2).unwrap()),
+            0.1,
+        );
+        let mut b = ServerCore::new(
+            w0,
+            4,
+            Box::new(StalenessEq11::new(0.2).unwrap()),
+            0.1,
+        );
+        for k in 0..25u64 {
+            let vals: Vec<f32> = (0..4u64)
+                .map(|t| ((k * 11 + t) % 7) as f32 * 0.5 - 1.5)
+                .collect();
+            let client = (k % 4) as usize;
+            let start = k.saturating_sub(k % 3);
+            let oa = a.on_update_flat(client, start, &vals).unwrap();
+            let ob = b.on_update_submodel(client, start, &vals, &map).unwrap();
+            assert_eq!(oa, ob, "k={k}");
+        }
+        assert_eq!(a.global().max_abs_diff(b.global()), 0.0);
+    }
+
+    #[test]
+    fn submodel_update_touches_only_the_covered_slice() {
+        use crate::model::{ParamLayout, SubmodelMap};
+        let w0 = pset(&[1.0, 1.0, 1.0, 1.0]);
+        let map = SubmodelMap::new(&ParamLayout::of(&w0), 0.5);
+        assert_eq!(map.numel(), 2);
+        let mut core = ServerCore::new(w0, 1, Box::new(NaiveAlpha), 0.1);
+        let out = core.on_update_submodel(0, 0, &[3.0, 5.0], &map).unwrap();
+        assert_eq!(out.iteration, 1);
+        // NaiveAlpha at 1 client: weight = 1, beta = 0 → covered slice
+        // becomes the local values; the rest keeps the global.
+        let got = &core.global().tensors[0].data;
+        assert_eq!(got, &vec![3.0, 5.0, 1.0, 1.0]);
+        assert_eq!(core.updates_per_client(), &[1]);
+    }
+
+    #[test]
+    fn submodel_update_rejects_wrong_lengths() {
+        use crate::model::{ParamLayout, SubmodelMap};
+        let w0 = pset(&[0.0, 0.0, 0.0, 0.0]);
+        let map = SubmodelMap::new(&ParamLayout::of(&w0), 0.5);
+        let mut core = ServerCore::new(w0, 1, Box::new(NaiveAlpha), 0.1);
+        assert!(core.on_update_submodel(0, 0, &[1.0], &map).is_err());
+        let other = pset(&[0.0, 0.0]);
+        let foreign = SubmodelMap::new(&ParamLayout::of(&other), 0.5);
+        assert!(core.on_update_submodel(0, 0, &[1.0], &foreign).is_err());
     }
 
     #[test]

@@ -48,7 +48,9 @@ pub use policy::{
     SolvedBeta, StalenessEq11, UpdateObservation,
 };
 pub use runner::{FlContext, Recorder, RunStats};
-pub use scale::{run_scale_sim, run_scale_sim_full, ScaleSimConfig, ScaleSimReport};
+pub use scale::{
+    run_scale_sim, run_scale_sim_full, CapacityClassCell, ScaleSimConfig, ScaleSimReport,
+};
 pub use scheduler::{SchedulerPolicy, UploadScheduler};
 pub use shard::{run_sharded_sim, run_sharded_sim_full};
 pub use staleness::{local_weight, StalenessTracker};

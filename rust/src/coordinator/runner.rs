@@ -10,7 +10,7 @@ use super::core::ModelAggregator;
 use crate::config::{AggregatorKind, RunConfig};
 use crate::data::{ClientShard, Dataset};
 use crate::learner::Learner;
-use crate::metrics::{EvalPoint, RunResult};
+use crate::metrics::{ClassMetrics, EvalPoint, RunResult};
 use crate::model::ParamSet;
 use crate::runtime::Engine;
 use crate::sim::Ticks;
@@ -82,6 +82,10 @@ pub struct RunStats {
     /// the core's dense per-client loss table; 0 for engines that do
     /// not report it, e.g. SFL).
     pub mean_train_loss: f64,
+    /// Per-capacity-class metrics (heterogeneous-capacity runs; empty
+    /// under the trivial `full`/`uniform:1.0` profile and for engines
+    /// that do not support capacity).
+    pub classes: Vec<ClassMetrics>,
     /// Virtual completion time.
     pub total_ticks: Ticks,
 }
@@ -189,6 +193,7 @@ impl<'a> Recorder<'a> {
             lost_uploads: stats.lost_uploads,
             lost_per_client: stats.lost_per_client,
             mean_train_loss: stats.mean_train_loss,
+            classes: stats.classes,
             total_ticks: stats.total_ticks,
             wallclock_secs: wallclock,
         }

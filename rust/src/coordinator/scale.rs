@@ -37,10 +37,10 @@ use super::afl::adaptive_steps;
 use super::core::ServerCore;
 use super::policy::{AggregationPolicy, PolicyParams, StalenessEq11};
 use super::scheduler::{SchedulerPolicy, UploadScheduler};
-use crate::model::{ParamArena, ParamLayout, ParamSet, SlotId, TensorSpec};
+use crate::model::{ParamArena, ParamLayout, ParamSet, SlotId, SubmodelMap, TensorSpec};
 use crate::sim::{
-    scenario, ComputeModel, EventQueue, HeterogeneityProfile, Scenario, Ticks, TimeModel,
-    UplinkChannel,
+    capacity, scenario, CapacityProfile, ComputeModel, EventQueue, HeterogeneityProfile, Scenario,
+    Ticks, TimeModel, UplinkChannel,
 };
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -66,6 +66,9 @@ pub struct ScaleSimConfig {
     /// Scenario registry spelling (`sim::scenario`); `None` = the
     /// pinned `static` world.
     pub scenario: Option<String>,
+    /// Capacity-profile registry spelling (`sim::capacity`); `None` =
+    /// the pinned `full` profile (every client trains the full model).
+    pub capacity: Option<String>,
     /// Eq.-(11) γ (also the registry default parameter).
     pub gamma: f64,
     /// μ_ji EMA rate.
@@ -95,6 +98,7 @@ impl Default for ScaleSimConfig {
             scheduler: SchedulerPolicy::OldestModelFirst,
             aggregation: None,
             scenario: None,
+            capacity: None,
             gamma: 0.2,
             mu_rho: 0.1,
             local_steps: 48,
@@ -129,6 +133,7 @@ impl ScaleSimConfig {
             }
             "aggregation" => self.aggregation = Some(val.to_string()),
             "scenario" => self.scenario = Some(val.to_string()),
+            "capacity" => self.capacity = Some(val.to_string()),
             "heterogeneity" => {
                 self.heterogeneity =
                     HeterogeneityProfile::parse(val).ok_or_else(|| bad("profile"))?;
@@ -136,7 +141,7 @@ impl ScaleSimConfig {
             other => anyhow::bail!(
                 "unknown sim field {other:?} (clients | iterations | params | seed | \
                  gamma | mu_rho | local_steps | train_passes | jitter | scheduler | \
-                 aggregation | scenario | heterogeneity)"
+                 aggregation | scenario | capacity | heterogeneity)"
             ),
         }
         Ok(())
@@ -161,8 +166,106 @@ impl ScaleSimConfig {
             <dyn AggregationPolicy>::parse(spec, &params)?;
         }
         scenario::resolve(self.scenario.as_deref())?;
+        capacity::resolve(self.capacity.as_deref())?;
         Ok(())
     }
+}
+
+/// Per-capacity-class roll-up of the dense per-client tables — the
+/// system-bias signal of heterogeneous-capacity runs (which classes the
+/// global model actually hears from).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapacityClassCell {
+    /// Canonical class label (`r1`, `r0.5`, ...).
+    pub label: String,
+    /// Submodel rate of the class.
+    pub rate: f64,
+    /// Clients assigned to the class.
+    pub clients: usize,
+    /// Updates absorbed from the class.
+    pub uploads: u64,
+    /// Uploads from the class lost in transit.
+    pub lost_uploads: u64,
+    /// Mean reported training loss across the class (0 before any
+    /// report).
+    pub mean_train_loss: f64,
+}
+
+impl CapacityClassCell {
+    /// JSON form (one element of the `classes` array in summaries).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("label", Json::Str(self.label.clone()))
+            .set("rate", Json::Float(self.rate))
+            .set("clients", Json::Int(self.clients as i64))
+            .set("uploads", Json::Int(self.uploads as i64))
+            .set("lost_uploads", Json::Int(self.lost_uploads as i64))
+            .set("mean_train_loss", Json::Float(self.mean_train_loss));
+        o
+    }
+}
+
+/// The resolved non-trivial capacity context of a run: which class each
+/// client is in and each class's slice map. `None` in [`SimSetup`] under
+/// the trivial (`full` / `uniform:1.0`) profile, in which case the
+/// engines take their pre-submodel path untouched.
+pub(crate) struct SubmodelCtx {
+    pub profile: CapacityProfile,
+    pub class_of: Vec<u8>,
+    pub maps: Vec<SubmodelMap>,
+}
+
+impl SubmodelCtx {
+    /// The slice map of one client's class.
+    pub fn map_of(&self, client: usize) -> &SubmodelMap {
+        &self.maps[self.class_of[client] as usize]
+    }
+}
+
+/// Upload duration of a rate-`rate` submodel: τ^u scaled by the upload
+/// size ratio, rounded, at least one tick.
+pub(crate) fn scaled_tau_up(tau_up: Ticks, rate: f64) -> Ticks {
+    ((tau_up as f64 * rate).round() as Ticks).max(1)
+}
+
+/// Roll the dense per-client tables up into per-class cells (one per
+/// capacity class, in profile order).
+pub(crate) fn class_cells(
+    ctx: &SubmodelCtx,
+    updates: &[u64],
+    lost: &[u64],
+    loss_totals: (&[f64], &[u64]),
+) -> Vec<CapacityClassCell> {
+    let (loss_sum, loss_n) = loss_totals;
+    ctx.profile
+        .classes()
+        .iter()
+        .enumerate()
+        .map(|(k, class)| {
+            let mut cell = CapacityClassCell {
+                label: class.label.clone(),
+                rate: class.rate,
+                clients: 0,
+                uploads: 0,
+                lost_uploads: 0,
+                mean_train_loss: 0.0,
+            };
+            let (mut sum, mut n) = (0.0f64, 0u64);
+            for (c, &cls) in ctx.class_of.iter().enumerate() {
+                if cls as usize == k {
+                    cell.clients += 1;
+                    cell.uploads += updates[c];
+                    cell.lost_uploads += lost[c];
+                    sum += loss_sum[c];
+                    n += loss_n[c];
+                }
+            }
+            if n > 0 {
+                cell.mean_train_loss = sum / n as f64;
+            }
+            cell
+        })
+        .collect()
 }
 
 /// What one scale-simulation run did, plus its throughput.
@@ -178,6 +281,13 @@ pub struct ScaleSimReport {
     pub scheduler: &'static str,
     /// Scenario label in force (`static` for the pinned default).
     pub scenario: String,
+    /// Capacity-profile spelling in force (`full` for the pinned
+    /// default).
+    pub capacity: String,
+    /// Per-capacity-class roll-ups; empty under the trivial profile, in
+    /// which case the summary JSON is byte-identical to a pre-submodel
+    /// run.
+    pub classes: Vec<CapacityClassCell>,
     /// Shard workers the run executed on (1 = the sequential reference
     /// path). Every other field except the wall-clock ones is
     /// bit-identical across shard counts (`rust/tests/sharded.rs`).
@@ -236,6 +346,15 @@ impl ScaleSimReport {
             .set("arena_slots", Json::Int(self.arena_slots as i64))
             .set("arena_live", Json::Int(self.arena_live as i64))
             .set("final_norm", Json::Float(self.final_norm));
+        // Capacity fields appear only under a non-trivial profile, so
+        // `capacity=uniform:1.0` summaries stay byte-identical to the
+        // pre-submodel engine (`tests/sharded.rs` pins this).
+        if !self.classes.is_empty() {
+            o.set("capacity", Json::Str(self.capacity.clone())).set(
+                "classes",
+                Json::Array(self.classes.iter().map(|c| c.to_json()).collect()),
+            );
+        }
         o
     }
 
@@ -253,6 +372,21 @@ impl ScaleSimReport {
 
     /// Human-readable table (the default `repro sim` output).
     pub fn table(&self) -> String {
+        let mut out = self.base_table();
+        for c in &self.classes {
+            out.push_str(&format!(
+                "\n{:<18} {} clients, {} uploads, {} lost, mean loss {:.4}",
+                format!("class {}", c.label),
+                c.clients,
+                c.uploads,
+                c.lost_uploads,
+                c.mean_train_loss
+            ));
+        }
+        out
+    }
+
+    fn base_table(&self) -> String {
         format!(
             "scale sim: {} clients, {} params, policy {}, scheduler {}, \
              scenario {}, {} shard(s)\n\
@@ -324,17 +458,19 @@ pub(crate) fn synth_train(buf: &mut [f32], delta: f32, passes: u32) {
 
 /// If the uplink is idle, grant the next contender a slot and schedule
 /// its upload completion (the same TDMA channel-grant step as the
-/// learner-driven engine).
+/// learner-driven engine). `tau_up_for` maps the winner to its upload
+/// duration — constant under the trivial capacity profile, scaled by
+/// the winner's submodel rate otherwise.
 pub(crate) fn grant_next(
     scheduler: &mut UploadScheduler,
     channel: &mut UplinkChannel,
     queue: &mut EventQueue<Event>,
     now: Ticks,
-    tau_up: Ticks,
+    tau_up_for: impl Fn(usize) -> Ticks,
 ) {
     if channel.is_free(now) {
         if let Some(winner) = scheduler.grant() {
-            let done = channel.reserve(now, tau_up);
+            let done = channel.reserve(now, tau_up_for(winner));
             queue.schedule_at(done, Event::Upload { client: winner });
         }
     }
@@ -354,6 +490,11 @@ pub(crate) struct SimSetup {
     pub policy_label: String,
     pub world: Box<dyn Scenario>,
     pub world_label: String,
+    /// Canonical capacity spelling (`full` under the trivial profile).
+    pub capacity_label: String,
+    /// Non-trivial capacity context; `None` keeps the engines on their
+    /// pre-submodel path.
+    pub submodel: Option<SubmodelCtx>,
 }
 
 pub(crate) fn setup(cfg: &ScaleSimConfig) -> Result<SimSetup> {
@@ -399,6 +540,29 @@ pub(crate) fn setup(cfg: &ScaleSimConfig) -> Result<SimSetup> {
     world.bind(m, cfg.time.afl_update_interval(), cfg.seed);
     let world_label = world.label();
 
+    // Capacity classes. Assignment draws come from their own fork of
+    // the root RNG (`fork` never advances `root`), and the trivial
+    // profile makes no draws at all, so `full`/`uniform:1.0` perturbs
+    // nothing and `submodel` stays `None` — the engines' pre-submodel
+    // path, bit for bit.
+    let profile = capacity::resolve(cfg.capacity.as_deref())?;
+    let capacity_label = profile.spec();
+    let submodel = if profile.is_trivial() {
+        None
+    } else {
+        let class_of = profile.assign(m, &root);
+        let maps = profile
+            .classes()
+            .iter()
+            .map(|c| SubmodelMap::new(&layout, c.rate))
+            .collect();
+        Some(SubmodelCtx {
+            profile,
+            class_of,
+            maps,
+        })
+    };
+
     let core = ServerCore::new(w0, m, policy, cfg.mu_rho);
     Ok(SimSetup {
         m,
@@ -411,6 +575,8 @@ pub(crate) fn setup(cfg: &ScaleSimConfig) -> Result<SimSetup> {
         policy_label,
         world,
         world_label,
+        capacity_label,
+        submodel,
     })
 }
 
@@ -436,12 +602,20 @@ pub fn run_scale_sim_full(cfg: &ScaleSimConfig) -> Result<(ScaleSimReport, Param
         policy_label,
         mut world,
         world_label,
+        capacity_label,
+        submodel,
     } = setup(cfg)?;
 
     let mut scheduler = UploadScheduler::new(cfg.scheduler, m);
     let mut channel = UplinkChannel::new();
     let mut queue: EventQueue<Event> = EventQueue::new();
     let mut arena = ParamArena::new(layout);
+    // Winner → upload duration: constant under the trivial profile,
+    // scaled by the winner's submodel rate otherwise.
+    let tau_up_of = |client: usize| match &submodel {
+        None => cfg.time.tau_up,
+        Some(ctx) => scaled_tau_up(cfg.time.tau_up, ctx.map_of(client).rate()),
+    };
     // Pending local update per client: arena slot + start iteration.
     let mut pending: Vec<Option<(SlotId, u64)>> = vec![None; m];
 
@@ -464,8 +638,13 @@ pub fn run_scale_sim_full(cfg: &ScaleSimConfig) -> Result<(ScaleSimReport, Param
             Event::Download { client, i } => {
                 let steps = adaptive_steps(cfg.local_steps, cm.factor(client), true);
                 // Scenario drift: time-varying compute (scale 1.0 under
-                // the static default — bit-identical draw).
-                let scale = world.compute_scale(client, now);
+                // the static default — bit-identical draw). A rate-r
+                // submodel trains r× the parameters, so capacity scales
+                // the compute duration the same way.
+                let mut scale = world.compute_scale(client, now);
+                if let Some(ctx) = &submodel {
+                    scale *= ctx.map_of(client).rate();
+                }
                 let dur = cm.duration_scaled(&cfg.time, client, steps, &mut jrng, scale);
                 queue.schedule_in(dur, Event::Compute { client, i });
             }
@@ -478,15 +657,28 @@ pub fn run_scale_sim_full(cfg: &ScaleSimConfig) -> Result<(ScaleSimReport, Param
                     continue;
                 }
                 // Synthetic local training into a recycled arena slot:
-                // local = 0.999·global + δ, one scalar δ per upload.
+                // local = 0.999·global + δ, one scalar δ per upload. A
+                // capacity-constrained client trains only its covered
+                // slices, packed into the slot prefix — same recycled
+                // full-size slot, zero extra allocation.
                 let slot = arena.alloc();
                 let d = 0.02 * urng.f32() - 0.01;
-                core.global().copy_to_flat(arena.get_mut(slot));
-                synth_train(arena.get_mut(slot), d, cfg.train_passes);
+                match &submodel {
+                    None => {
+                        core.global().copy_to_flat(arena.get_mut(slot));
+                        synth_train(arena.get_mut(slot), d, cfg.train_passes);
+                    }
+                    Some(ctx) => {
+                        let map = ctx.map_of(client);
+                        let buf = &mut arena.get_mut(slot)[..map.numel()];
+                        map.extract_from_set(core.global(), buf);
+                        synth_train(buf, d, cfg.train_passes);
+                    }
+                }
                 core.record_loss(client, (d as f64).abs());
                 pending[client] = Some((slot, i));
                 scheduler.request(client, now);
-                grant_next(&mut scheduler, &mut channel, &mut queue, now, cfg.time.tau_up);
+                grant_next(&mut scheduler, &mut channel, &mut queue, now, tau_up_of);
             }
             Event::Upload { client } => {
                 let (slot, i) = pending[client]
@@ -498,23 +690,45 @@ pub fn run_scale_sim_full(cfg: &ScaleSimConfig) -> Result<(ScaleSimReport, Param
                     core.on_lost_upload(client);
                     arena.free(slot);
                 } else {
-                    core.on_update_flat(client, i, arena.get(slot))?;
+                    match &submodel {
+                        None => core.on_update_flat(client, i, arena.get(slot))?,
+                        Some(ctx) => {
+                            let map = ctx.map_of(client);
+                            core.on_update_submodel(
+                                client,
+                                i,
+                                &arena.get(slot)[..map.numel()],
+                                map,
+                            )?
+                        }
+                    };
                     arena.free(slot);
                 }
                 let i = core.issue_to(client);
                 queue.schedule_in(cfg.time.tau_down, Event::Download { client, i });
-                grant_next(&mut scheduler, &mut channel, &mut queue, now, cfg.time.tau_up);
+                grant_next(&mut scheduler, &mut channel, &mut queue, now, tau_up_of);
             }
         }
     }
 
     let wall = started.elapsed().as_secs_f64().max(1e-9);
+    let classes = match &submodel {
+        None => Vec::new(),
+        Some(ctx) => class_cells(
+            ctx,
+            core.updates_per_client(),
+            core.lost_per_client(),
+            core.loss_totals(),
+        ),
+    };
     let report = ScaleSimReport {
         clients: m,
         params: cfg.params,
         policy: policy_label,
         scheduler: cfg.scheduler.name(),
         scenario: world_label,
+        capacity: capacity_label,
+        classes,
         shards: 1,
         aggregations: core.iteration(),
         events,
@@ -747,6 +961,7 @@ mod tests {
             ("scheduler", "fifo"),
             ("aggregation", "fedasync:0.5"),
             ("scenario", "dropout:0.1"),
+            ("capacity", "classes:1.0x0.5,0.5x0.5"),
             ("heterogeneity", "lognormal:0.5"),
         ] {
             cfg.set_field(k, v).unwrap_or_else(|e| panic!("{k}: {e}"));
@@ -754,6 +969,7 @@ mod tests {
         assert_eq!(cfg.clients, 123);
         assert_eq!(cfg.scheduler, SchedulerPolicy::Fifo);
         assert_eq!(cfg.scenario.as_deref(), Some("dropout:0.1"));
+        assert_eq!(cfg.capacity.as_deref(), Some("classes:1.0x0.5,0.5x0.5"));
         assert!(cfg.set_field("clients", "banana").is_err());
         assert!(cfg.set_field("scheduler", "lottery").is_err());
         assert!(cfg.set_field("warp", "9").is_err());
@@ -778,9 +994,97 @@ mod tests {
         };
         assert!(bad.validate().is_err());
         let bad = ScaleSimConfig {
+            capacity: Some("uniform:2.0".into()),
+            ..ScaleSimConfig::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = ScaleSimConfig {
             train_passes: 0,
             ..ScaleSimConfig::default()
         };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn trivial_capacity_spellings_are_bit_identical_to_none() {
+        let base = ScaleSimConfig {
+            clients: 80,
+            iterations: 200,
+            params: 8,
+            ..ScaleSimConfig::default()
+        };
+        let (ra, wa) = run_scale_sim_full(&base).unwrap();
+        for spec in ["full", "uniform:1.0"] {
+            let cfg = ScaleSimConfig {
+                capacity: Some(spec.into()),
+                ..base.clone()
+            };
+            let (rb, wb) = run_scale_sim_full(&cfg).unwrap();
+            assert_eq!(
+                ra.summary_json().to_string_compact(),
+                rb.summary_json().to_string_compact(),
+                "{spec}"
+            );
+            assert_eq!(wa, wb, "{spec}: final models must agree bit-for-bit");
+            assert!(rb.classes.is_empty(), "{spec}");
+        }
+    }
+
+    #[test]
+    fn capacity_classes_run_and_report_per_class_cells() {
+        let cfg = ScaleSimConfig {
+            clients: 120,
+            iterations: 300,
+            params: 32,
+            capacity: Some("classes:1.0x0.5,0.5x0.3,0.25x0.2".into()),
+            ..ScaleSimConfig::default()
+        };
+        let r = run_scale_sim(&cfg).unwrap();
+        assert_eq!(r.aggregations, 300);
+        assert!(r.final_norm.is_finite());
+        assert_eq!(r.classes.len(), 3);
+        assert_eq!(r.capacity, "classes:1.0x0.5,0.5x0.3,0.25x0.2");
+        let clients: usize = r.classes.iter().map(|c| c.clients).sum();
+        let uploads: u64 = r.classes.iter().map(|c| c.uploads).sum();
+        assert_eq!(clients, 120);
+        assert_eq!(uploads, r.aggregations);
+        assert!(r.classes.iter().all(|c| c.clients > 0), "{:?}", r.classes);
+        // Summary carries the class cells; runs stay deterministic.
+        let j = r.summary_json();
+        assert!(j.get("capacity").is_some());
+        assert_eq!(j.get("classes").unwrap().as_array().unwrap().len(), 3);
+        let again = run_scale_sim(&cfg).unwrap();
+        assert_eq!(
+            j.to_string_compact(),
+            again.summary_json().to_string_compact()
+        );
+    }
+
+    #[test]
+    fn uniform_capacity_shrinks_upload_and_compute_time() {
+        let base = ScaleSimConfig {
+            clients: 60,
+            iterations: 150,
+            params: 16,
+            ..ScaleSimConfig::default()
+        };
+        let half = ScaleSimConfig {
+            capacity: Some("uniform:0.5".into()),
+            ..base.clone()
+        };
+        let a = run_scale_sim(&base).unwrap();
+        let b = run_scale_sim(&half).unwrap();
+        // Same aggregation count in less virtual time: rate-0.5 clients
+        // compute and upload half as much.
+        assert_eq!(a.aggregations, b.aggregations);
+        assert!(
+            b.virtual_ticks < a.virtual_ticks,
+            "half-capacity run must finish sooner: {} vs {}",
+            b.virtual_ticks,
+            a.virtual_ticks
+        );
+        assert_eq!(b.classes.len(), 1);
+        assert_eq!(b.classes[0].label, "r0.5");
+        assert_eq!(b.classes[0].clients, 60);
     }
 }

@@ -90,6 +90,7 @@ pub fn run_sfl(ctx: &FlContext<'_>) -> Result<crate::metrics::RunResult> {
         lost_uploads: 0,
         lost_per_client: vec![0; m],
         mean_train_loss: 0.0, // SFL does not report per-client losses
+        classes: Vec::new(), // capacity is AFL-only (RunConfig::validate)
         total_ticks: now,
     };
     Ok(rec.into_result(stats))

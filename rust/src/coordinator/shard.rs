@@ -55,18 +55,23 @@ use anyhow::{ensure, Context, Result};
 
 use super::afl::adaptive_steps;
 use super::scale::{
-    grant_next, setup, synth_train, Event, ScaleSimConfig, ScaleSimReport, SimSetup,
+    class_cells, grant_next, scaled_tau_up, setup, synth_train, Event, ScaleSimConfig,
+    ScaleSimReport, SimSetup,
 };
 use super::scheduler::UploadScheduler;
 use crate::model::{ParamArena, ParamSet, SlotId, SlotWindow};
 use crate::sim::{ClientPartition, EventQueue, UplinkChannel};
 
-/// One unit of shard-worker work: run the synthetic trainer over `slot`
-/// (which the coordinator has pre-filled with the global snapshot) with
-/// offset `delta`, then report `client` done.
+/// One unit of shard-worker work: run the synthetic trainer over the
+/// leading `len` elements of `slot` (which the coordinator has
+/// pre-filled with the client's — possibly rate-scaled — snapshot of
+/// the global) with offset `delta`, then report `client` done.
 struct Task {
     client: u32,
     slot: u32,
+    /// Elements of the slot the client trains: the full model under the
+    /// trivial capacity profile, the packed submodel prefix otherwise.
+    len: u32,
     delta: f32,
 }
 
@@ -97,6 +102,8 @@ pub fn run_sharded_sim_full(
         policy_label,
         mut world,
         world_label,
+        capacity_label,
+        submodel,
     } = setup(cfg)?;
 
     let partition = ClientPartition::new(m, shards);
@@ -105,6 +112,13 @@ pub fn run_sharded_sim_full(
     let mut scheduler = UploadScheduler::new(cfg.scheduler, m);
     let mut channel = UplinkChannel::new();
     let mut queue: EventQueue<Event> = EventQueue::new();
+    // Winner → upload duration: constant under the trivial profile,
+    // scaled by the winner's submodel rate otherwise (same rule as the
+    // sequential reference).
+    let tau_up_of = |client: usize| match &submodel {
+        None => cfg.time.tau_up,
+        Some(ctx) => scaled_tau_up(cfg.time.tau_up, ctx.map_of(client).rate()),
+    };
     // Every slot exists up front (at most one in-flight local per
     // client), so the backing buffer never reallocates while workers
     // hold raw views into it — the SlotWindow storage contract.
@@ -138,7 +152,7 @@ pub fn run_sharded_sim_full(
                     // until our completion message below is received
                     // (see SlotWindow's exclusivity protocol).
                     let buf = unsafe { window.slot_mut(t.slot as usize) };
-                    synth_train(buf, t.delta, passes);
+                    synth_train(&mut buf[..t.len as usize], t.delta, passes);
                     if done_tx.send(t.client).is_err() {
                         break;
                     }
@@ -163,7 +177,10 @@ pub fn run_sharded_sim_full(
             match ev {
                 Event::Download { client, i } => {
                     let steps = adaptive_steps(cfg.local_steps, cm.factor(client), true);
-                    let scale = world.compute_scale(client, now);
+                    let mut scale = world.compute_scale(client, now);
+                    if let Some(ctx) = &submodel {
+                        scale *= ctx.map_of(client).rate();
+                    }
                     let dur = cm.duration_scaled(&cfg.time, client, steps, &mut jrng, scale);
                     queue.schedule_in(dur, Event::Compute { client, i });
                 }
@@ -180,12 +197,27 @@ pub fn run_sharded_sim_full(
                     let slot = arena.alloc();
                     let d = 0.02 * urng.f32() - 0.01;
                     // SAFETY: freshly allocated slot; no worker holds it.
-                    core.global().copy_to_flat(unsafe { window.slot_mut(slot.index()) });
+                    let buf = unsafe { window.slot_mut(slot.index()) };
+                    let len = match &submodel {
+                        None => {
+                            core.global().copy_to_flat(buf);
+                            buf.len()
+                        }
+                        Some(ctx) => {
+                            // Capacity-constrained snapshot: only the
+                            // covered slices, packed into the slot
+                            // prefix (same recycled full-size slot).
+                            let map = ctx.map_of(client);
+                            map.extract_from_set(core.global(), &mut buf[..map.numel()]);
+                            map.numel()
+                        }
+                    };
                     ready[client] = false;
                     task_txs[partition.shard_of(client)]
                         .send(Task {
                             client: client as u32,
                             slot: slot.index() as u32,
+                            len: len as u32,
                             delta: d,
                         })
                         .map_err(|_| anyhow::anyhow!("shard worker exited early"))?;
@@ -194,7 +226,7 @@ pub fn run_sharded_sim_full(
                     live += 1;
                     peak_live = peak_live.max(live);
                     scheduler.request(client, now);
-                    grant_next(&mut scheduler, &mut channel, &mut queue, now, cfg.time.tau_up);
+                    grant_next(&mut scheduler, &mut channel, &mut queue, now, tau_up_of);
                 }
                 Event::Upload { client } => {
                     let (slot, i) = pending[client]
@@ -218,12 +250,19 @@ pub fn run_sharded_sim_full(
                     } else {
                         // SAFETY: completion joined above; no worker
                         // touches this slot anymore.
-                        core.on_update_flat(client, i, unsafe { window.slot(slot.index()) })?;
+                        let buf = unsafe { window.slot(slot.index()) };
+                        match &submodel {
+                            None => core.on_update_flat(client, i, buf)?,
+                            Some(ctx) => {
+                                let map = ctx.map_of(client);
+                                core.on_update_submodel(client, i, &buf[..map.numel()], map)?
+                            }
+                        };
                         arena.free(slot);
                     }
                     let i = core.issue_to(client);
                     queue.schedule_in(cfg.time.tau_down, Event::Download { client, i });
-                    grant_next(&mut scheduler, &mut channel, &mut queue, now, cfg.time.tau_up);
+                    grant_next(&mut scheduler, &mut channel, &mut queue, now, tau_up_of);
                 }
             }
         }
@@ -234,12 +273,23 @@ pub fn run_sharded_sim_full(
         drop(task_txs);
 
         let wall = started.elapsed().as_secs_f64().max(1e-9);
+        let classes = match &submodel {
+            None => Vec::new(),
+            Some(ctx) => class_cells(
+                ctx,
+                core.updates_per_client(),
+                core.lost_per_client(),
+                core.loss_totals(),
+            ),
+        };
         let report = ScaleSimReport {
             clients: m,
             params: cfg.params,
             policy: policy_label,
             scheduler: cfg.scheduler.name(),
             scenario: world_label,
+            capacity: capacity_label,
+            classes,
             shards: k_shards,
             aggregations: core.iteration(),
             events,
@@ -351,6 +401,26 @@ mod tests {
         // Shards never appear in the deterministic summary.
         assert!(r.summary_json().get("shards").is_none());
         assert_eq!(r.to_json().get("shards").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn capacity_class_mix_matches_reference_across_shards() {
+        let cfg = ScaleSimConfig {
+            capacity: Some("classes:1.0x0.5,0.5x0.3,0.25x0.2".into()),
+            ..small_cfg()
+        };
+        let (r_ref, w_ref) = run_scale_sim_full(&cfg).unwrap();
+        assert_eq!(r_ref.classes.len(), 3);
+        for shards in [1, 2, 4] {
+            let (r, w) = run_sharded_sim_full(&cfg, shards).unwrap();
+            assert_eq!(
+                r.summary_json().to_string_compact(),
+                r_ref.summary_json().to_string_compact(),
+                "shards={shards}"
+            );
+            assert_eq!(w, w_ref, "final model, shards={shards}");
+            assert_eq!(r.classes, r_ref.classes, "shards={shards}");
+        }
     }
 
     #[test]

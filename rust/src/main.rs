@@ -60,8 +60,8 @@ COMMANDS:
             with --sim: sweep the coordinator scale simulator instead
             (keys: clients iterations params seed gamma mu_rho
             local_steps train_passes jitter scheduler aggregation
-            scenario heterogeneity shards) -> grid.json of deterministic
-            sim summaries, e.g. --sim --axis shards=1,2,4,8
+            scenario capacity heterogeneity shards) -> grid.json of
+            deterministic sim summaries, e.g. --sim --axis shards=1,2,4,8
   analyze   [--results results/]   (comparison tables from stored records)
   timeline  [--clients M] [--local-steps E] [--slow-factor a] [--out results/]
   inspect   naive-decay [--clients M] | betas [--clients M]
@@ -69,6 +69,7 @@ COMMANDS:
   sim       [--clients N] [--iterations J] [--params P] [--shards K]
             [--scheduler oldest|fifo|roundrobin] [--aggregation spec]
             [--scenario spec | --set scenario=spec] [--train-passes P]
+            [--capacity spec | --set capacity=spec]
             [--heterogeneity prof] [--gamma g] [--seed S]
             [--format table|json]
             (coordinator-only scale simulation: real event loop,
@@ -77,7 +78,8 @@ COMMANDS:
             workers, default = available cores; every non-wall-clock
             field is bit-identical at any K)
   bench     [--quick] [--suite aggregation|scheduler|event_loop|
-            end_to_end|sharded|net] [--shards K] [--format table|json]
+            end_to_end|sharded|submodel|net] [--shards K]
+            [--format table|json]
             [--out results/] [--check BENCH_baseline.json] [--factor 2.0]
             (pinned-seed perf suite -> <out>/BENCH_<date>.json; --check
             fails when any case regresses past factor x the baseline;
@@ -116,6 +118,10 @@ AGGREGATION POLICIES (--set aggregation=<spec>, also honored by serve):
 
 SCENARIOS (--set scenario=<spec>, event-driven AFL engines):
   static | dropout:p | churn:rate[,cycle] | drift:period[,factor]
+
+CAPACITY PROFILES (--set capacity=<spec>, event-driven AFL engines +
+sim; rate-r clients train/upload the leading r-slice of each tensor):
+  full | uniform:rate | classes:r1xf1,r2xf2,...
 ";
 
 /// Boolean options (present/absent, no value) — everything else spelled
@@ -719,11 +725,13 @@ fn cmd_sim(args: &Args) -> Result<()> {
     // `--set` on sim is reserved for the registry spellings shared with
     // the experiment engine; everything else has a dedicated flag.
     let mut scenario = args.opt("scenario").map(str::to_string);
+    let mut capacity = args.opt("capacity").map(str::to_string);
     for (k, v) in &args.sets {
         match k.as_str() {
             "scenario" => scenario = Some(v.clone()),
+            "capacity" => capacity = Some(v.clone()),
             other => bail!(
-                "repro sim --set supports only scenario=<spec> \
+                "repro sim --set supports only scenario=<spec> | capacity=<spec> \
                  (got {other:?}; use the dedicated --{other} flag if one exists)"
             ),
         }
@@ -736,6 +744,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
         scheduler,
         aggregation: args.opt("aggregation").map(str::to_string),
         scenario,
+        capacity,
         gamma: args.opt_or("gamma", "0.2").parse()?,
         train_passes: args.opt_or("train-passes", "1").parse()?,
         heterogeneity,

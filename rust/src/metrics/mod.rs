@@ -4,7 +4,7 @@
 mod result;
 mod stats;
 
-pub use result::{EvalPoint, RunResult};
+pub use result::{ClassMetrics, EvalPoint, RunResult};
 pub use stats::Summary;
 
 use std::io::Write;
@@ -15,6 +15,12 @@ use anyhow::{Context, Result};
 /// Write several runs as a long-format CSV:
 /// `series,slot,ticks,iteration,accuracy,loss`.
 /// This is the exact input the paper-figure plots consume.
+///
+/// Heterogeneous-capacity runs append one column group per capacity
+/// class present in any run
+/// (`<label>_accuracy,<label>_loss,<label>_uploads` — final-model
+/// scalars, constant down a series); under the trivial profile no run
+/// has classes and the file is byte-identical to pre-submodel output.
 pub fn write_series_csv(path: impl AsRef<Path>, runs: &[&RunResult]) -> Result<()> {
     let path = path.as_ref();
     if let Some(dir) = path.parent() {
@@ -22,14 +28,35 @@ pub fn write_series_csv(path: impl AsRef<Path>, runs: &[&RunResult]) -> Result<(
     }
     let mut f = std::fs::File::create(path)
         .with_context(|| format!("creating {}", path.display()))?;
-    writeln!(f, "series,slot,ticks,iteration,accuracy,loss")?;
+    // Class-label union in first-seen order (runs are already in job
+    // order, so this is deterministic).
+    let mut labels: Vec<&str> = Vec::new();
+    for run in runs {
+        for c in &run.classes {
+            if !labels.contains(&c.label.as_str()) {
+                labels.push(&c.label);
+            }
+        }
+    }
+    let mut header = String::from("series,slot,ticks,iteration,accuracy,loss");
+    for l in &labels {
+        header.push_str(&format!(",{l}_accuracy,{l}_loss,{l}_uploads"));
+    }
+    writeln!(f, "{header}")?;
     for run in runs {
         for p in &run.points {
-            writeln!(
+            write!(
                 f,
                 "{},{:.4},{},{},{:.6},{:.6}",
                 run.label, p.slot, p.ticks, p.iteration, p.accuracy, p.loss
             )?;
+            for l in &labels {
+                match run.classes.iter().find(|c| c.label.as_str() == *l) {
+                    Some(c) => write!(f, ",{:.6},{:.6},{}", c.accuracy, c.loss, c.uploads)?,
+                    None => write!(f, ",,,")?,
+                }
+            }
+            writeln!(f)?;
         }
     }
     Ok(())
@@ -67,7 +94,53 @@ mod tests {
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines.len(), 3);
         assert!(lines[0].starts_with("series,slot"));
+        // No capacity classes -> exactly the pre-submodel header/rows.
+        assert_eq!(lines[0], "series,slot,ticks,iteration,accuracy,loss");
         assert!(lines[1].starts_with("test,0.0000,0,0,0.100000"));
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn csv_gains_one_column_group_per_capacity_class() {
+        let mut run = RunResult {
+            points: vec![EvalPoint {
+                slot: 0.0,
+                ticks: 0,
+                iteration: 0,
+                accuracy: 0.1,
+                loss: 2.3,
+            }],
+            ..RunResult::empty("hetero")
+        };
+        for (label, rate) in [("r1", 1.0), ("r0.5", 0.5)] {
+            run.classes.push(ClassMetrics {
+                label: label.into(),
+                rate,
+                clients: 2,
+                uploads: 7,
+                lost_uploads: 0,
+                mean_train_loss: 0.5,
+                accuracy: rate,
+                loss: 1.0,
+            });
+        }
+        let plain = RunResult {
+            points: run.points.clone(),
+            ..RunResult::empty("plain")
+        };
+        let tmp =
+            std::env::temp_dir().join(format!("csmaafl_csv_cls_{}.csv", std::process::id()));
+        write_series_csv(&tmp, &[&run, &plain]).unwrap();
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(
+            lines[0],
+            "series,slot,ticks,iteration,accuracy,loss,\
+             r1_accuracy,r1_loss,r1_uploads,r0.5_accuracy,r0.5_loss,r0.5_uploads"
+        );
+        assert!(lines[1].ends_with(",1.000000,1.000000,7,0.500000,1.000000,7"), "{}", lines[1]);
+        // A classless run in the same file leaves its group cells empty.
+        assert!(lines[2].ends_with(",,,,,,"), "{}", lines[2]);
         std::fs::remove_file(&tmp).ok();
     }
 }

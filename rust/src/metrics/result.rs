@@ -19,6 +19,46 @@ pub struct EvalPoint {
     pub loss: f64,
 }
 
+/// Per-capacity-class outcome of a heterogeneous-capacity run: how much
+/// each class participated and how well the final global model serves
+/// that class's own training data — the system-bias signal (slow
+/// classes that upload less get modeled worse).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassMetrics {
+    /// Canonical class label (`r1`, `r0.5`, ...).
+    pub label: String,
+    /// Submodel rate of the class.
+    pub rate: f64,
+    /// Clients assigned to the class.
+    pub clients: usize,
+    /// Updates absorbed from the class.
+    pub uploads: u64,
+    /// Uploads from the class lost in transit.
+    pub lost_uploads: u64,
+    /// Mean reported local training loss across the class.
+    pub mean_train_loss: f64,
+    /// Final-global-model accuracy on the class members' pooled data.
+    pub accuracy: f64,
+    /// Final-global-model loss on the class members' pooled data.
+    pub loss: f64,
+}
+
+impl ClassMetrics {
+    /// JSON form (one element of the `classes` array).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("label", Json::Str(self.label.clone()))
+            .set("rate", Json::Float(self.rate))
+            .set("clients", Json::Int(self.clients as i64))
+            .set("uploads", Json::Int(self.uploads as i64))
+            .set("lost_uploads", Json::Int(self.lost_uploads as i64))
+            .set("mean_train_loss", Json::Float(self.mean_train_loss))
+            .set("accuracy", Json::Float(self.accuracy))
+            .set("loss", Json::Float(self.loss));
+        o
+    }
+}
+
 /// Everything a single federated run produced.
 #[derive(Debug, Clone)]
 pub struct RunResult {
@@ -42,6 +82,10 @@ pub struct RunResult {
     /// Mean client-reported local training loss across the run (0 for
     /// engines that do not report it, e.g. SFL).
     pub mean_train_loss: f64,
+    /// Per-capacity-class metrics; empty under the trivial (`full` /
+    /// `uniform:1.0`) capacity profile, in which case the emitted JSON
+    /// is byte-identical to a pre-submodel run.
+    pub classes: Vec<ClassMetrics>,
     /// Virtual completion time.
     pub total_ticks: Ticks,
     /// Real wall-clock spent (training + eval dispatches).
@@ -61,6 +105,7 @@ impl RunResult {
             lost_uploads: 0,
             lost_per_client: Vec::new(),
             mean_train_loss: 0.0,
+            classes: Vec::new(),
             total_ticks: 0,
             wallclock_secs: 0.0,
         }
@@ -100,6 +145,15 @@ impl RunResult {
             .set("lost_uploads", Json::Int(self.lost_uploads as i64))
             .set("mean_train_loss", Json::Float(self.mean_train_loss))
             .set("total_ticks", Json::Int(self.total_ticks as i64));
+        // Class cells appear only under a non-trivial capacity profile,
+        // so `capacity=uniform:1.0` summaries stay byte-identical to
+        // the pre-submodel engine.
+        if !self.classes.is_empty() {
+            o.set(
+                "classes",
+                Json::Array(self.classes.iter().map(|c| c.to_json()).collect()),
+            );
+        }
         o
     }
 
@@ -209,5 +263,30 @@ mod tests {
         let r = RunResult::empty("e");
         assert_eq!(r.final_accuracy(), 0.0);
         assert_eq!(r.slots_to_accuracy(0.1), None);
+    }
+
+    #[test]
+    fn class_metrics_appear_only_when_present() {
+        let mut r = run_with_points(&[0.2]);
+        assert!(r.summary_json().get("classes").is_none());
+        assert!(!r.to_json().to_string_compact().contains("classes"));
+        r.classes.push(ClassMetrics {
+            label: "r0.5".into(),
+            rate: 0.5,
+            clients: 3,
+            uploads: 9,
+            lost_uploads: 1,
+            mean_train_loss: 0.7,
+            accuracy: 0.55,
+            loss: 1.2,
+        });
+        let j = r.summary_json();
+        let cells = j.get("classes").unwrap().as_array().unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].get("label").unwrap().as_str(), Some("r0.5"));
+        assert_eq!(cells[0].get("clients").unwrap().as_i64(), Some(3));
+        assert_eq!(cells[0].get("accuracy").unwrap().as_f64(), Some(0.55));
+        // And they ride through the full record too.
+        assert!(r.to_json().get("classes").is_some());
     }
 }

@@ -1,9 +1,11 @@
 //! Model parameter containers shared by the runtime and the coordinator.
 
 mod params;
+mod submodel;
 
 pub use params::{
     axpy_flat, l2_accumulate, lerp_flat, ParamArena, ParamLayout, ParamSet, SlotId, Tensor,
     TensorSpec,
 };
+pub use submodel::{finalize_overlap_mean, SubmodelMap, SubmodelSlice};
 pub(crate) use params::SlotWindow;

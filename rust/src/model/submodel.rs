@@ -1,0 +1,365 @@
+//! HeteroFL-style rate-scaled submodels over the flat parameter layout.
+//!
+//! A capacity-constrained client trains and uploads only a *leading
+//! slice* of every tensor (the HeteroFL selection rule: the first
+//! `ceil(rate * n)` elements of each tensor's flat range — nested, so a
+//! 0.25-rate submodel is contained in the 0.5-rate one). A
+//! [`SubmodelMap`] precomputes those slices from a [`ParamLayout`] once
+//! per capacity class; the flat kernels ([`SubmodelMap::extract_flat`] /
+//! [`SubmodelMap::merge_flat`]) then move parameters between full-model
+//! arena slots and rate-scaled submodel buffers with no allocation, and
+//! the overlap-count kernels ([`SubmodelMap::accumulate_counts`],
+//! [`accumulate_overlap`], [`finalize_overlap_mean`]) implement the
+//! HeteroFL batch average `w[e] = Σ_k sub_k[e] / |{k covering e}|`.
+//!
+//! Rate 1.0 is the identity map by construction: every slice covers its
+//! whole tensor, extract→merge round-trips bitwise, and the slice-wise
+//! aggregation in `ServerCore::on_update_submodel` delegates to the
+//! ordinary flat path — which is what keeps `capacity=uniform:1.0`
+//! bit-identical to the pre-submodel engines (`tests/properties.rs`,
+//! `tests/sharded.rs`).
+
+use super::params::{l2_accumulate, lerp_flat, ParamLayout, ParamSet};
+
+/// One tensor's covered slice: where the tensor starts in the full flat
+/// layout, how many leading elements the submodel keeps, and the
+/// tensor's full element count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubmodelSlice {
+    /// Start of the tensor's range in the full flat layout.
+    pub full_start: usize,
+    /// Leading elements covered (`1 ..= full_len`).
+    pub keep: usize,
+    /// The tensor's full element count.
+    pub full_len: usize,
+}
+
+/// The parameter slices a capacity rate covers, derived from a
+/// [`ParamLayout`]: per tensor, the leading `ceil(rate * n)` elements
+/// (clamped to `[1, n]` so even tiny rates keep every tensor present).
+/// Slices are in layout order, in-bounds and mutually disjoint by
+/// construction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmodelMap {
+    rate: f64,
+    slices: Vec<SubmodelSlice>,
+    numel: usize,
+    full_numel: usize,
+}
+
+impl SubmodelMap {
+    /// The slice map of `rate` over `layout`. `rate` must be in (0, 1]
+    /// (validated by the capacity registry before maps are built).
+    pub fn new(layout: &ParamLayout, rate: f64) -> SubmodelMap {
+        assert!(
+            rate > 0.0 && rate <= 1.0,
+            "submodel rate {rate} outside (0, 1]"
+        );
+        let mut slices = Vec::with_capacity(layout.specs().len());
+        let mut numel = 0;
+        for (i, spec) in layout.specs().iter().enumerate() {
+            let n = spec.numel();
+            let keep = ((rate * n as f64).ceil() as usize).clamp(1, n);
+            slices.push(SubmodelSlice {
+                full_start: layout.range(i).start,
+                keep,
+                full_len: n,
+            });
+            numel += keep;
+        }
+        SubmodelMap {
+            rate,
+            slices,
+            numel,
+            full_numel: layout.numel(),
+        }
+    }
+
+    /// The capacity rate this map was built for.
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Submodel element count (the upload size of this capacity class).
+    pub fn numel(&self) -> usize {
+        self.numel
+    }
+
+    /// Full-model element count of the underlying layout.
+    pub fn full_numel(&self) -> usize {
+        self.full_numel
+    }
+
+    /// The per-tensor slices, in layout order.
+    pub fn slices(&self) -> &[SubmodelSlice] {
+        &self.slices
+    }
+
+    /// Whether every slice covers its whole tensor (rate 1.0 ≡ identity).
+    pub fn is_full(&self) -> bool {
+        self.numel == self.full_numel
+    }
+
+    /// Gather the covered slices of a full flat buffer into a packed
+    /// submodel buffer (`out.len() == self.numel()`).
+    pub fn extract_flat(&self, full: &[f32], out: &mut [f32]) {
+        assert_eq!(full.len(), self.full_numel, "full buffer length mismatch");
+        assert_eq!(out.len(), self.numel, "submodel buffer length mismatch");
+        let mut off = 0;
+        for s in &self.slices {
+            out[off..off + s.keep]
+                .copy_from_slice(&full[s.full_start..s.full_start + s.keep]);
+            off += s.keep;
+        }
+    }
+
+    /// Scatter a packed submodel buffer back into the covered slices of
+    /// a full flat buffer (the inverse of [`SubmodelMap::extract_flat`]
+    /// on the covered elements; uncovered elements are untouched).
+    pub fn merge_flat(&self, full: &mut [f32], sub: &[f32]) {
+        assert_eq!(full.len(), self.full_numel, "full buffer length mismatch");
+        assert_eq!(sub.len(), self.numel, "submodel buffer length mismatch");
+        let mut off = 0;
+        for s in &self.slices {
+            full[s.full_start..s.full_start + s.keep]
+                .copy_from_slice(&sub[off..off + s.keep]);
+            off += s.keep;
+        }
+    }
+
+    /// Gather the covered slices of a [`ParamSet`] (manifest order) into
+    /// a packed submodel buffer — the set-side twin of
+    /// [`SubmodelMap::extract_flat`].
+    pub fn extract_from_set(&self, set: &ParamSet, out: &mut [f32]) {
+        assert_eq!(set.tensors.len(), self.slices.len(), "tensor count mismatch");
+        assert_eq!(out.len(), self.numel, "submodel buffer length mismatch");
+        let mut off = 0;
+        for (t, s) in set.tensors.iter().zip(&self.slices) {
+            debug_assert_eq!(t.data.len(), s.full_len);
+            out[off..off + s.keep].copy_from_slice(&t.data[..s.keep]);
+            off += s.keep;
+        }
+    }
+
+    /// Slice-wise eq.-(3) aggregation: lerp the covered leading span of
+    /// every tensor against the packed submodel buffer, leaving
+    /// uncovered elements untouched. Chunks per tensor through
+    /// [`lerp_flat`] exactly like [`ParamSet::lerp_inplace_flat`], so at
+    /// rate 1.0 the two are the same arithmetic to the last bit.
+    pub fn merge_lerp_set(&self, global: &mut ParamSet, sub: &[f32], beta: f32) {
+        assert_eq!(global.tensors.len(), self.slices.len(), "tensor count mismatch");
+        assert_eq!(sub.len(), self.numel, "submodel buffer length mismatch");
+        let mut off = 0;
+        for (t, s) in global.tensors.iter_mut().zip(&self.slices) {
+            lerp_flat(&mut t.data[..s.keep], &sub[off..off + s.keep], beta);
+            off += s.keep;
+        }
+    }
+
+    /// L2 distance between the covered slices of `set` and a packed
+    /// submodel buffer, chained through one accumulator in tensor order
+    /// (the covered-slice twin of [`ParamSet::l2_distance_flat`]).
+    pub fn l2_distance_set(&self, set: &ParamSet, sub: &[f32]) -> f64 {
+        assert_eq!(set.tensors.len(), self.slices.len(), "tensor count mismatch");
+        assert_eq!(sub.len(), self.numel, "submodel buffer length mismatch");
+        let mut acc = 0.0f64;
+        let mut off = 0;
+        for (t, s) in set.tensors.iter().zip(&self.slices) {
+            l2_accumulate(&mut acc, &t.data[..s.keep], &sub[off..off + s.keep]);
+            off += s.keep;
+        }
+        acc.sqrt()
+    }
+
+    /// Add 1 to the overlap count of every full-layout element this map
+    /// covers (`counts.len() == self.full_numel()`).
+    pub fn accumulate_counts(&self, counts: &mut [u32]) {
+        assert_eq!(counts.len(), self.full_numel, "count buffer length mismatch");
+        for s in &self.slices {
+            for c in &mut counts[s.full_start..s.full_start + s.keep] {
+                *c += 1;
+            }
+        }
+    }
+
+    /// Scatter-add a packed submodel buffer into a full-layout
+    /// accumulator and bump the matching overlap counts — one
+    /// contribution of the HeteroFL batch average (see
+    /// [`finalize_overlap_mean`]).
+    pub fn accumulate_overlap(&self, acc: &mut [f32], counts: &mut [u32], sub: &[f32]) {
+        assert_eq!(acc.len(), self.full_numel, "accumulator length mismatch");
+        assert_eq!(counts.len(), self.full_numel, "count buffer length mismatch");
+        assert_eq!(sub.len(), self.numel, "submodel buffer length mismatch");
+        let mut off = 0;
+        for s in &self.slices {
+            let full = &mut acc[s.full_start..s.full_start + s.keep];
+            let cnt = &mut counts[s.full_start..s.full_start + s.keep];
+            let part = &sub[off..off + s.keep];
+            for ((a, c), v) in full.iter_mut().zip(cnt.iter_mut()).zip(part) {
+                *a += *v;
+                *c += 1;
+            }
+            off += s.keep;
+        }
+    }
+}
+
+/// Turn an overlap accumulator into the per-element mean: every element
+/// covered at least once becomes `acc[e] / counts[e]`; uncovered
+/// elements are left untouched (HeteroFL keeps the previous global
+/// there).
+pub fn finalize_overlap_mean(acc: &mut [f32], counts: &[u32]) {
+    assert_eq!(acc.len(), counts.len(), "count buffer length mismatch");
+    for (a, &c) in acc.iter_mut().zip(counts) {
+        if c > 0 {
+            *a /= c as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Tensor, TensorSpec};
+
+    fn layout(sizes: &[usize]) -> ParamLayout {
+        ParamLayout::new(
+            sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| TensorSpec {
+                    name: format!("t{i}"),
+                    shape: vec![n],
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn rate_one_is_the_identity_map() {
+        let l = layout(&[6, 1, 17]);
+        let m = SubmodelMap::new(&l, 1.0);
+        assert!(m.is_full());
+        assert_eq!(m.numel(), l.numel());
+        for (i, s) in m.slices().iter().enumerate() {
+            assert_eq!(s.keep, s.full_len, "slice {i}");
+        }
+    }
+
+    #[test]
+    fn slices_keep_ceil_rate_and_at_least_one() {
+        let l = layout(&[10, 1, 3]);
+        let m = SubmodelMap::new(&l, 0.25);
+        // ceil(0.25*10)=3, clamp(ceil(0.25*1))=1, ceil(0.25*3)=1.
+        let keeps: Vec<usize> = m.slices().iter().map(|s| s.keep).collect();
+        assert_eq!(keeps, vec![3, 1, 1]);
+        assert_eq!(m.numel(), 5);
+        assert_eq!(m.full_numel(), 14);
+        assert!(!m.is_full());
+    }
+
+    #[test]
+    fn extract_then_merge_covers_exactly_the_slices() {
+        let l = layout(&[4, 3]);
+        let m = SubmodelMap::new(&l, 0.5);
+        let full: Vec<f32> = (0..7).map(|i| i as f32).collect();
+        let mut sub = vec![0.0f32; m.numel()];
+        m.extract_flat(&full, &mut sub);
+        // ceil(0.5*4)=2 of [0,1,2,3]; ceil(0.5*3)=2 of [4,5,6].
+        assert_eq!(sub, vec![0.0, 1.0, 4.0, 5.0]);
+        let mut target = vec![-1.0f32; 7];
+        m.merge_flat(&mut target, &sub);
+        assert_eq!(target, vec![0.0, 1.0, -1.0, -1.0, 4.0, 5.0, -1.0]);
+    }
+
+    #[test]
+    fn extract_from_set_matches_flat_extract() {
+        let l = layout(&[5, 2]);
+        let m = SubmodelMap::new(&l, 0.6);
+        let set = ParamSet {
+            tensors: vec![
+                Tensor::from_data(l.specs()[0].clone(), vec![1.0, 2.0, 3.0, 4.0, 5.0]),
+                Tensor::from_data(l.specs()[1].clone(), vec![6.0, 7.0]),
+            ],
+        };
+        let mut flat = vec![0.0f32; l.numel()];
+        set.copy_to_flat(&mut flat);
+        let mut a = vec![0.0f32; m.numel()];
+        let mut b = vec![0.0f32; m.numel()];
+        m.extract_flat(&flat, &mut a);
+        m.extract_from_set(&set, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn merge_lerp_at_rate_one_matches_lerp_inplace_flat_bitwise() {
+        let l = layout(&[3, 4]);
+        let m = SubmodelMap::new(&l, 1.0);
+        let mk = |vals: &[f32]| ParamSet {
+            tensors: vec![
+                Tensor::from_data(l.specs()[0].clone(), vals[..3].to_vec()),
+                Tensor::from_data(l.specs()[1].clone(), vals[3..].to_vec()),
+            ],
+        };
+        let g = mk(&[0.1, -2.0, 3.5, 0.0, 7.25, -0.125, 9.0]);
+        let local = [1.0f32, 0.3, -4.0, 2.0, 0.0, 5.5, -6.0];
+        for &beta in &[0.0f32, 0.31, 0.77, 1.0] {
+            let mut a = g.clone();
+            a.lerp_inplace_flat(&local, beta);
+            let mut b = g.clone();
+            m.merge_lerp_set(&mut b, &local, beta);
+            assert_eq!(a, b, "beta={beta}");
+            assert_eq!(
+                g.l2_distance_flat(&local),
+                m.l2_distance_set(&g, &local),
+                "distance twin"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_lerp_touches_only_covered_elements() {
+        let l = layout(&[4]);
+        let m = SubmodelMap::new(&l, 0.5);
+        let mut g = ParamSet {
+            tensors: vec![Tensor::from_data(
+                l.specs()[0].clone(),
+                vec![1.0, 1.0, 1.0, 1.0],
+            )],
+        };
+        m.merge_lerp_set(&mut g, &[3.0, 5.0], 0.5);
+        assert_eq!(g.tensors[0].data, vec![2.0, 3.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn overlap_counts_and_mean() {
+        let l = layout(&[4]);
+        let m_half = SubmodelMap::new(&l, 0.5);
+        let m_full = SubmodelMap::new(&l, 1.0);
+        let mut acc = vec![0.0f32; 4];
+        let mut counts = vec![0u32; 4];
+        m_half.accumulate_overlap(&mut acc, &mut counts, &[2.0, 4.0]);
+        m_full.accumulate_overlap(&mut acc, &mut counts, &[4.0, 8.0, 3.0, 7.0]);
+        assert_eq!(counts, vec![2, 2, 1, 1]);
+        finalize_overlap_mean(&mut acc, &counts);
+        assert_eq!(acc, vec![3.0, 6.0, 3.0, 7.0]);
+        let mut only = vec![0u32; 4];
+        m_half.accumulate_counts(&mut only);
+        assert_eq!(only, vec![1, 1, 0, 0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_rate_zero() {
+        SubmodelMap::new(&layout(&[4]), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn extract_checks_buffer_length() {
+        let l = layout(&[4]);
+        let m = SubmodelMap::new(&l, 0.5);
+        let mut out = vec![0.0f32; 1];
+        m.extract_flat(&[0.0; 4], &mut out);
+    }
+}

@@ -1,7 +1,7 @@
 //! The pinned-seed performance suite behind `repro bench`: the repo's
 //! perf trajectory as machine-readable `BENCH_<date>.json` records.
 //!
-//! Six suites cover the hot paths this crate optimizes:
+//! Seven suites cover the hot paths this crate optimizes:
 //!
 //! | Suite         | Cases                              | What it measures |
 //! |---------------|------------------------------------|------------------|
@@ -10,6 +10,7 @@
 //! | `event_loop`  | `sim_<m>_clients`                  | full coordinator event loop (`coordinator::scale`), ns per event |
 //! | `end_to_end`  | `grid_2x_gamma`                    | tiny learner-driven grid through the `PlanRunner` |
 //! | `sharded`     | `sim_<m>_shards1`, `sim_<m>_multi`, `speedup_multi_vs_1` | the sharded coordinator (`coordinator::shard`) at heavy synthetic training: ns per event single- vs multi-shard, plus their ratio (multi/single — dimensionless, < 1 means speedup) |
+//! | `submodel`    | `extract_<n>`, `merge_<n>`, `merge_lerp_<n>` | heterogeneous-capacity slice kernels (`model::submodel`): rate-0.5 extract/merge over a flat buffer, plus the slice-wise eq.-(3) merge into a `ParamSet` |
 //! | `net`         | `encode_<n>`, `decode_<n>`, `reader_chunked_<n>` | wire-protocol hot paths (`net::wire`): frame encode, shape-validated decode, and the leader's incremental `FrameReader` fed in socket-sized chunks |
 //!
 //! The record schema (`csmaafl-bench-v1`) is
@@ -34,7 +35,7 @@ use crate::coordinator::{
     run_scale_sim, run_sharded_sim, ScaleSimConfig, SchedulerPolicy, UploadScheduler,
 };
 use crate::experiment::{Plan, PlanRunner};
-use crate::model::{lerp_flat, ParamArena, ParamLayout, ParamSet, TensorSpec};
+use crate::model::{lerp_flat, ParamArena, ParamLayout, ParamSet, SubmodelMap, TensorSpec};
 use crate::net::wire::{self, FrameReader, Message};
 use crate::session::{LearnerKind, Session};
 use crate::util::bench::Bencher;
@@ -45,12 +46,13 @@ use crate::util::rng::Rng;
 pub const BENCH_SCHEMA: &str = "csmaafl-bench-v1";
 
 /// The suite names, in run order (the `--suite` filter vocabulary).
-pub const SUITES: [&str; 6] = [
+pub const SUITES: [&str; 7] = [
     "aggregation",
     "scheduler",
     "event_loop",
     "end_to_end",
     "sharded",
+    "submodel",
     "net",
 ];
 
@@ -254,6 +256,64 @@ fn suite_sharded(quick: bool, shards: usize) -> Result<Vec<Case>> {
     ])
 }
 
+/// The `submodel` suite: the heterogeneous-capacity slice kernels
+/// (`model::submodel`) at the two pinned model sizes, rate 0.5 — the
+/// mid-rate class of the canonical `classes:1.0x0.5,0.5x0.3,0.25x0.2`
+/// profile. Two tensors so the per-tensor slice walk (not just one
+/// memcpy) is what gets measured.
+fn suite_submodel(quick: bool) -> Vec<Case> {
+    let mut out = Vec::new();
+    let mut b = bencher("submodel", quick);
+    for &n in &[5_370usize, 431_080] {
+        let layout = ParamLayout::new(vec![
+            TensorSpec {
+                name: "w".into(),
+                shape: vec![n - n / 8],
+            },
+            TensorSpec {
+                name: "b".into(),
+                shape: vec![n / 8],
+            },
+        ]);
+        let map = SubmodelMap::new(&layout, 0.5);
+        let full = random_flat(n, 11);
+        let mut sub = vec![0.0f32; map.numel()];
+        let r = b.bench(&format!("extract_{n}"), || {
+            map.extract_flat(std::hint::black_box(&full), &mut sub);
+        });
+        out.push(Case {
+            name: format!("extract_{n}"),
+            iters: r.iters,
+            ns_per_iter: r.mean_ns,
+            clients: 0,
+            shards: None,
+        });
+        let mut dst = random_flat(n, 12);
+        let r = b.bench(&format!("merge_{n}"), || {
+            map.merge_flat(&mut dst, std::hint::black_box(&sub));
+        });
+        out.push(Case {
+            name: format!("merge_{n}"),
+            iters: r.iters,
+            ns_per_iter: r.mean_ns,
+            clients: 0,
+            shards: None,
+        });
+        let mut global = ParamSet::from_flat(&layout, &random_flat(n, 13));
+        let r = b.bench(&format!("merge_lerp_{n}"), || {
+            map.merge_lerp_set(&mut global, std::hint::black_box(&sub), 0.9);
+        });
+        out.push(Case {
+            name: format!("merge_lerp_{n}"),
+            iters: r.iters,
+            ns_per_iter: r.mean_ns,
+            clients: 0,
+            shards: None,
+        });
+    }
+    out
+}
+
 /// The `net` suite: wire-protocol hot paths. Frame encode and
 /// shape-validated decode at the two pinned model sizes, plus the
 /// leader's incremental [`FrameReader`] fed in 4 KiB chunks — the shape
@@ -354,7 +414,8 @@ pub fn run(cfg: &BenchConfig) -> Result<Json> {
     if let Some(s) = &cfg.suite {
         ensure!(
             SUITES.contains(&s.as_str()),
-            "unknown suite {s:?} (aggregation|scheduler|event_loop|end_to_end|sharded|net)"
+            "unknown suite {s:?} \
+             (aggregation|scheduler|event_loop|end_to_end|sharded|submodel|net)"
         );
     }
     let selected = |name: &str| match cfg.suite.as_deref() {
@@ -381,6 +442,9 @@ pub fn run(cfg: &BenchConfig) -> Result<Json> {
                 .unwrap_or(1)
         });
         suites.set("sharded", cases_json(suite_sharded(cfg.quick, shards)?));
+    }
+    if selected("submodel") {
+        suites.set("submodel", cases_json(suite_submodel(cfg.quick)));
     }
     if selected("net") {
         suites.set("net", cases_json(suite_net(cfg.quick)));
@@ -707,6 +771,20 @@ mod tests {
             names,
             ["encode_5370", "decode_5370", "reader_chunked_5370", "encode_431080",
              "decode_431080"]
+        );
+        for c in &cases {
+            assert!(c.iters > 0 && c.ns_per_iter > 0.0, "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn submodel_suite_emits_schema_shaped_cases() {
+        let cases = suite_submodel(true);
+        let names: Vec<&str> = cases.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(
+            names,
+            ["extract_5370", "merge_5370", "merge_lerp_5370", "extract_431080",
+             "merge_431080", "merge_lerp_431080"]
         );
         for c in &cases {
             assert!(c.iters > 0 && c.ns_per_iter > 0.0, "{}", c.name);

@@ -1,0 +1,332 @@
+//! Capacity-class registry: heterogeneous-capacity submodel profiles.
+//!
+//! The paper's premise is that small-capacity clients delay aggregation,
+//! but in the baseline engines capacity shows up only as *time* — every
+//! client still trains the full model. The HeteroFL lineage (and
+//! resource-constrained async FL, arXiv:2401.13366) instead gives each
+//! client a rate-scaled *submodel*: a capacity class with rate `r`
+//! trains and uploads only the leading `ceil(r·n)` elements of every
+//! tensor (see [`crate::model::SubmodelMap`]), so capacity scales both
+//! the `train_passes` cost and the upload size, and the server
+//! aggregates overlapping slices.
+//!
+//! Like scenarios and aggregation policies, capacity is a registry
+//! spelling — `capacity=<name[:params]>` on any config or `--set` —
+//! parsed by [`parse`]:
+//!
+//! | Spelling                   | Population                                  |
+//! |----------------------------|---------------------------------------------|
+//! | `full`                     | every client at rate 1.0 (pinned default)   |
+//! | `uniform:r`                | every client at rate `r ∈ (0, 1]`           |
+//! | `classes:r1xf1,r2xf2,...`  | mixed classes: fraction `f_k` of clients at |
+//! |                            | rate `r_k` (fractions normalized to sum 1)  |
+//!
+//! Class membership is assigned deterministically from the root run RNG
+//! (fork label `0xca9ac1`, one draw per client in client order) exactly
+//! like the `dropout` scenario draws its loss stream — so the
+//! assignment never perturbs jitter, partition, or scenario draws, and
+//! single-class profiles (`full`, any `uniform:r`) make **no** draws at
+//! all. `full` and `uniform:1.0` keep every engine bit-identical to the
+//! pre-submodel code path (`tests/sharded.rs` pins this).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::rng::Rng;
+
+/// One capacity class: a submodel rate and the population fraction
+/// assigned to it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapacityClass {
+    /// Submodel rate in (0, 1]; 1.0 is the full model.
+    pub rate: f64,
+    /// Fraction of the population in this class (normalized, sums to 1
+    /// across the profile).
+    pub fraction: f64,
+    /// Canonical label for metrics columns and log lines (`r1`, `r0.5`).
+    pub label: String,
+}
+
+/// A capacity profile: the capacity classes of a population and how
+/// clients are split among them, in spelling order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapacityProfile {
+    classes: Vec<CapacityClass>,
+}
+
+/// One canonical registry spelling per built-in profile shape (tests
+/// iterate these; docs list them).
+pub const CAPACITY_SPECS: [&str; 3] =
+    ["full", "uniform:0.5", "classes:1.0x0.5,0.5x0.3,0.25x0.2"];
+
+/// RNG fork label of the class-assignment stream.
+const ASSIGN_FORK: u64 = 0xca9ac1;
+
+impl CapacityProfile {
+    /// The pinned default: every client at rate 1.0.
+    pub fn full() -> CapacityProfile {
+        CapacityProfile {
+            classes: vec![CapacityClass {
+                rate: 1.0,
+                fraction: 1.0,
+                label: "r1".into(),
+            }],
+        }
+    }
+
+    fn uniform(rate: f64) -> Result<CapacityProfile> {
+        ensure!(
+            rate.is_finite() && rate > 0.0 && rate <= 1.0,
+            "capacity rate must be in (0,1], got {rate}"
+        );
+        Ok(CapacityProfile {
+            classes: vec![CapacityClass {
+                rate,
+                fraction: 1.0,
+                label: format!("r{rate}"),
+            }],
+        })
+    }
+
+    fn mixed(pairs: Vec<(f64, f64)>) -> Result<CapacityProfile> {
+        ensure!(!pairs.is_empty(), "classes takes at least one rxf pair");
+        ensure!(
+            pairs.len() <= 16,
+            "classes takes at most 16 rxf pairs, got {}",
+            pairs.len()
+        );
+        let total: f64 = pairs.iter().map(|(_, f)| f).sum();
+        let mut classes = Vec::with_capacity(pairs.len());
+        for (i, &(rate, fraction)) in pairs.iter().enumerate() {
+            ensure!(
+                rate.is_finite() && rate > 0.0 && rate <= 1.0,
+                "capacity rate must be in (0,1], got {rate}"
+            );
+            ensure!(
+                fraction.is_finite() && fraction > 0.0,
+                "class fraction must be > 0, got {fraction}"
+            );
+            ensure!(
+                pairs[..i].iter().all(|&(r, _)| r != rate),
+                "duplicate capacity rate {rate}"
+            );
+            classes.push(CapacityClass {
+                rate,
+                fraction: fraction / total,
+                label: format!("r{rate}"),
+            });
+        }
+        Ok(CapacityProfile { classes })
+    }
+
+    /// The capacity classes, in spelling order.
+    pub fn classes(&self) -> &[CapacityClass] {
+        &self.classes
+    }
+
+    /// Whether this is the identity profile: a single class at rate 1.0.
+    /// Trivial profiles take the engines' existing full-model path
+    /// untouched, which is what makes them bit-identical to the
+    /// pre-submodel code.
+    pub fn is_trivial(&self) -> bool {
+        self.classes.len() == 1 && self.classes[0].rate == 1.0
+    }
+
+    /// Canonical registry spelling (round-trips through [`parse`]).
+    pub fn spec(&self) -> String {
+        if self.is_trivial() {
+            "full".into()
+        } else if self.classes.len() == 1 {
+            format!("uniform:{}", self.classes[0].rate)
+        } else {
+            let pairs: Vec<String> = self
+                .classes
+                .iter()
+                .map(|c| format!("{}x{}", c.rate, c.fraction))
+                .collect();
+            format!("classes:{}", pairs.join(","))
+        }
+    }
+
+    /// Assign every client a class index, deterministically from the
+    /// root run RNG: one `f64` draw per client in client order against
+    /// the cumulative class fractions. Single-class profiles make no
+    /// draws (the fork is never advanced), so `full`/`uniform` cannot
+    /// perturb any other stream derived from `root`.
+    pub fn assign(&self, clients: usize, root: &Rng) -> Vec<u8> {
+        if self.classes.len() == 1 {
+            return vec![0; clients];
+        }
+        let mut rng = root.fork(ASSIGN_FORK);
+        (0..clients)
+            .map(|_| {
+                let u = rng.f64();
+                let mut cum = 0.0;
+                for (k, c) in self.classes.iter().enumerate() {
+                    cum += c.fraction;
+                    if u < cum {
+                        return k as u8;
+                    }
+                }
+                (self.classes.len() - 1) as u8
+            })
+            .collect()
+    }
+}
+
+/// Instantiate a capacity profile from its registry spelling.
+///
+/// ```
+/// use csmaafl::sim::capacity;
+/// let p = capacity::parse("classes:1.0x0.5,0.25x0.5").unwrap();
+/// assert_eq!(p.classes().len(), 2);
+/// assert!(!p.is_trivial());
+/// assert!(capacity::parse("bogus").is_err());
+/// assert!(capacity::resolve(None).unwrap().is_trivial());
+/// ```
+pub fn parse(spec: &str) -> Result<CapacityProfile> {
+    let (name, params) = match spec.split_once(':') {
+        Some((n, p)) => (n.trim(), Some(p.trim())),
+        None => (spec.trim(), None),
+    };
+    match name.to_ascii_lowercase().as_str() {
+        "full" => {
+            ensure!(params.is_none(), "capacity profile \"full\" takes no parameters");
+            Ok(CapacityProfile::full())
+        }
+        "uniform" => {
+            let p = match params {
+                Some(p) if !p.is_empty() => p,
+                _ => bail!("uniform takes exactly one parameter (rate)"),
+            };
+            let rate: f64 = p
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad capacity rate {p:?} in {spec:?}"))?;
+            CapacityProfile::uniform(rate)
+        }
+        "classes" => {
+            let p = match params {
+                Some(p) if !p.is_empty() => p,
+                _ => bail!("classes takes rxf pairs (e.g. classes:1.0x0.5,0.25x0.5)"),
+            };
+            let mut pairs = Vec::new();
+            for part in p.split(',') {
+                let part = part.trim();
+                let (r, f) = match part.split_once('x') {
+                    Some(rf) => rf,
+                    None => bail!("bad class pair {part:?} in {spec:?} (expected RATExFRACTION)"),
+                };
+                let rate: f64 = r.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("bad capacity rate {r:?} in {spec:?}")
+                })?;
+                let fraction: f64 = f.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("bad class fraction {f:?} in {spec:?}")
+                })?;
+                pairs.push((rate, fraction));
+            }
+            CapacityProfile::mixed(pairs)
+        }
+        other => bail!(
+            "unknown capacity profile {other:?} \
+             (full | uniform:rate | classes:r1xf1,r2xf2,...)"
+        ),
+    }
+}
+
+/// Resolve a config's optional spelling: `None` means the pinned `full`
+/// default.
+pub fn resolve(spec: Option<&str>) -> Result<CapacityProfile> {
+    match spec {
+        None => Ok(CapacityProfile::full()),
+        Some(s) => parse(s),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_parses_every_canonical_spelling() {
+        for spec in CAPACITY_SPECS {
+            let p = parse(spec).unwrap();
+            assert!(!p.classes().is_empty(), "{spec}");
+            // Canonical spellings round-trip through spec() → parse().
+            assert_eq!(parse(&p.spec()).unwrap(), p, "{spec}");
+        }
+    }
+
+    #[test]
+    fn registry_rejects_unknown_and_malformed() {
+        assert!(parse("bogus").is_err());
+        assert!(parse("full:1").is_err());
+        assert!(parse("uniform").is_err());
+        assert!(parse("uniform:").is_err());
+        assert!(parse("uniform:x").is_err());
+        assert!(parse("uniform:0").is_err());
+        assert!(parse("uniform:1.5").is_err());
+        assert!(parse("uniform:-0.5").is_err());
+        assert!(parse("classes").is_err());
+        assert!(parse("classes:").is_err());
+        assert!(parse("classes:1.0").is_err());
+        assert!(parse("classes:1.0x").is_err());
+        assert!(parse("classes:1.0x0.5,1.0x0.5").is_err());
+        assert!(parse("classes:0x0.5").is_err());
+        assert!(parse("classes:0.5x0").is_err());
+        assert!(parse("classes:0.5x-1").is_err());
+    }
+
+    #[test]
+    fn full_and_uniform_one_are_trivial() {
+        assert!(parse("full").unwrap().is_trivial());
+        assert!(parse("uniform:1.0").unwrap().is_trivial());
+        assert!(!parse("uniform:0.5").unwrap().is_trivial());
+        assert!(resolve(None).unwrap().is_trivial());
+    }
+
+    #[test]
+    fn fractions_normalize_to_one() {
+        let p = parse("classes:1.0x2,0.5x1,0.25x1").unwrap();
+        let sum: f64 = p.classes().iter().map(|c| c.fraction).sum();
+        assert!((sum - 1.0).abs() < 1e-12, "{sum}");
+        assert!((p.classes()[0].fraction - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn labels_come_from_rates() {
+        let p = parse("classes:1.0x0.5,0.5x0.3,0.25x0.2").unwrap();
+        let labels: Vec<&str> = p.classes().iter().map(|c| c.label.as_str()).collect();
+        assert_eq!(labels, vec!["r1", "r0.5", "r0.25"]);
+    }
+
+    #[test]
+    fn single_class_assignment_makes_no_draws() {
+        let root = Rng::new(42);
+        let a = parse("full").unwrap().assign(100, &root);
+        let b = parse("uniform:0.5").unwrap().assign(100, &root);
+        assert!(a.iter().all(|&c| c == 0));
+        assert!(b.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn assignment_is_deterministic_in_the_root_seed() {
+        let p = parse("classes:1.0x0.5,0.25x0.5").unwrap();
+        let a = p.assign(1000, &Rng::new(7));
+        let b = p.assign(1000, &Rng::new(7));
+        let c = p.assign(1000, &Rng::new(8));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn assignment_fractions_track_the_profile() {
+        let p = parse("classes:1.0x0.5,0.5x0.3,0.25x0.2").unwrap();
+        let assign = p.assign(10_000, &Rng::new(3));
+        let mut counts = [0usize; 3];
+        for &c in &assign {
+            counts[c as usize] += 1;
+        }
+        assert!((4500..5500).contains(&counts[0]), "{counts:?}");
+        assert!((2500..3500).contains(&counts[1]), "{counts:?}");
+        assert!((1500..2500).contains(&counts[2]), "{counts:?}");
+    }
+}

@@ -6,12 +6,14 @@
 //! virtual timeline — the timeline is governed purely by the paper's time
 //! model (τ compute, τ^u upload, τ^d download, per-client speed factors).
 
+pub mod capacity;
 mod compute;
 mod event;
 pub mod partition;
 pub mod scenario;
 mod time_model;
 
+pub use capacity::{CapacityClass, CapacityProfile};
 pub use compute::{ComputeModel, HeterogeneityProfile};
 pub use event::EventQueue;
 pub use partition::{ClientPartition, OrderedMerge};

@@ -157,6 +157,66 @@ fn unknown_scenario_is_rejected() {
 }
 
 #[test]
+fn usage_lists_capacity_profile_registry() {
+    let usage = stdout(&repro(&[]));
+    assert!(usage.contains("CAPACITY PROFILES"), "{usage}");
+    for name in ["full", "uniform:rate", "classes:r1xf1"] {
+        assert!(usage.contains(name), "usage must mention {name}");
+    }
+}
+
+#[test]
+fn malformed_capacity_fails_before_any_data_generation() {
+    // Validation runs in RunConfig::validate(), ahead of dataset synth
+    // and training — the error must name the bad spelling.
+    let out = repro(&["train", "--set", "capacity=bogus", "--learner", "linear"]);
+    assert!(!out.status.success());
+    let err = stderr(&out);
+    assert!(err.contains("bogus"), "{err}");
+    assert!(err.contains("unknown capacity profile"), "{err}");
+    // Out-of-range rates are named too.
+    let out = repro(&["train", "--set", "capacity=uniform:0", "--learner", "linear"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("(0,1]"), "{}", stderr(&out));
+    // Submodels need an engine that can train them: the sync baseline
+    // trains full models, so a non-trivial profile is a config error.
+    let out = repro(&[
+        "train", "--set", "algorithm=sfl",
+        "--set", "capacity=classes:1.0x0.5,0.5x0.5", "--learner", "linear",
+    ]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("capacity profiles apply only"), "{}", stderr(&out));
+}
+
+#[test]
+fn grid_with_capacity_mix_emits_per_class_run_fields() {
+    let dir = scratch_dir("grid_capacity");
+    let out = repro(&[
+        "grid", "--learner", "linear", "--format", "json",
+        "--set", "clients=2", "--set", "samples_per_client=4",
+        "--set", "test_samples=10", "--set", "local_steps=1",
+        "--set", "max_slots=1",
+        "--axis", "capacity=full;classes:1.0x0.5,0.5x0.5",
+        "--out", dir.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let json = std::fs::read_to_string(dir.join("grid.json")).unwrap();
+    // The heterogeneous cell carries per-class roll-ups; the trivial
+    // cell must not even have the key.
+    assert!(json.contains("\"classes\""), "{json}");
+    assert!(json.contains("\"r0.5\""), "{json}");
+    let record = csmaafl::util::json::parse(&json).unwrap();
+    let jobs = match record.get("jobs").unwrap() {
+        csmaafl::util::json::Json::Array(jobs) => jobs.clone(),
+        other => panic!("jobs is not an array: {other:?}"),
+    };
+    assert_eq!(jobs.len(), 2);
+    assert!(jobs[0].get("summary").unwrap().get("classes").is_none());
+    assert!(jobs[1].get("summary").unwrap().get("classes").is_some());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn grid_rejects_malformed_axis() {
     let out = repro(&["grid", "--axis", "gamma", "--learner", "linear"]);
     assert!(!out.status.success());
@@ -466,6 +526,52 @@ fn sim_rejects_unknown_set_keys_and_scenarios() {
     let out = repro(&["sim", "--clients", "10", "--train-passes", "0"]);
     assert!(!out.status.success());
     assert!(stderr(&out).contains("train_passes"), "{}", stderr(&out));
+}
+
+#[test]
+fn sim_capacity_flag_surfaces_per_class_cells_in_json() {
+    let out = repro(&[
+        "sim", "--clients", "200", "--iterations", "300", "--params", "8",
+        "--capacity", "classes:1.0x0.5,0.5x0.3,0.25x0.2",
+        "--format", "json",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    // The echoed spelling is the canonical spec() form (1.0 prints as 1).
+    assert!(
+        text.contains("\"capacity\": \"classes:1x0.5,0.5x0.3,0.25x0.2\""),
+        "{text}"
+    );
+    for label in ["\"r1\"", "\"r0.5\"", "\"r0.25\""] {
+        assert!(text.contains(label), "{text}");
+    }
+    // --set spells the same knob; the trivial profile stays silent —
+    // no capacity/classes keys at all, so the record is byte-identical
+    // to a pre-submodel run.
+    let out = repro(&[
+        "sim", "--clients", "50", "--iterations", "60", "--params", "4",
+        "--set", "capacity=uniform:1.0", "--format", "json",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(!text.contains("\"capacity\""), "{text}");
+    assert!(!text.contains("\"classes\""), "{text}");
+}
+
+#[test]
+fn sim_rejects_malformed_capacity() {
+    for bad in [
+        "capacity=bogus",
+        "capacity=uniform:2.0",
+        "capacity=classes:1.0x0.5,2.0x0.5",
+    ] {
+        let out = repro(&["sim", "--clients", "10", "--set", bad]);
+        assert!(!out.status.success(), "{bad} must fail");
+        assert!(stderr(&out).contains("capacity"), "{bad}: {}", stderr(&out));
+    }
+    let out = repro(&["sim", "--clients", "10", "--capacity", "bogus"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("bogus"), "{}", stderr(&out));
 }
 
 #[test]

@@ -8,7 +8,9 @@ use csmaafl::coordinator::staleness::{local_weight, StalenessTracker};
 use csmaafl::coordinator::{
     run_scale_sim, NativeAggregator, ScaleSimConfig, ServerCore, StalenessEq11,
 };
-use csmaafl::model::{ParamArena, ParamLayout, ParamSet, Tensor, TensorSpec};
+use csmaafl::model::{
+    finalize_overlap_mean, ParamArena, ParamLayout, ParamSet, SubmodelMap, Tensor, TensorSpec,
+};
 use csmaafl::sim::EventQueue;
 use csmaafl::util::json::{self, Json};
 use csmaafl::util::rng::Rng;
@@ -378,6 +380,119 @@ fn inplace_aggregation_equals_clone_based_aggregation_bitwise() {
     }
 }
 
+// ------------------------------------------------------------- submodel
+
+fn random_layout(r: &mut Rng) -> ParamLayout {
+    let tensors = 1 + r.below(5) as usize;
+    ParamLayout::new(
+        (0..tensors)
+            .map(|i| TensorSpec {
+                name: format!("t{i}"),
+                shape: vec![1 + r.below(60) as usize],
+            })
+            .collect(),
+    )
+}
+
+/// Rate 1.0 is the identity: extract then merge reproduces the full
+/// buffer bit-for-bit over random layouts and values.
+#[test]
+fn submodel_rate_one_extract_merge_is_identity_bitwise() {
+    for seed in 0..60u64 {
+        let mut r = Rng::new(seed * 11 + 2);
+        let layout = random_layout(&mut r);
+        let map = SubmodelMap::new(&layout, 1.0);
+        assert!(map.is_full());
+        assert_eq!(map.numel(), layout.numel());
+        let full: Vec<f32> = (0..layout.numel()).map(|_| r.normal()).collect();
+        let mut sub = vec![0.0f32; map.numel()];
+        map.extract_flat(&full, &mut sub);
+        let mut back = vec![0.0f32; full.len()];
+        map.merge_flat(&mut back, &sub);
+        assert!(
+            back.iter().zip(&full).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "seed {seed}"
+        );
+    }
+}
+
+/// Slice maps are in-bounds, in layout order and mutually disjoint, and
+/// keep counts stay in `[1, full_len]` — at any fuzzed rate.
+#[test]
+fn submodel_slices_in_bounds_sorted_disjoint() {
+    for seed in 0..100u64 {
+        let mut r = Rng::new(seed * 17 + 9);
+        let layout = random_layout(&mut r);
+        let rate = 0.05 + 0.95 * r.f64();
+        let map = SubmodelMap::new(&layout, rate);
+        let mut prev_end = 0usize;
+        let mut covered = 0usize;
+        for s in map.slices() {
+            assert!(s.keep >= 1 && s.keep <= s.full_len, "seed {seed}");
+            assert!(s.full_start >= prev_end, "seed {seed}: overlap/unsorted");
+            assert!(s.full_start + s.full_len <= map.full_numel(), "seed {seed}");
+            prev_end = s.full_start + s.full_len;
+            covered += s.keep;
+        }
+        assert_eq!(prev_end, map.full_numel(), "layout fully tiled");
+        assert_eq!(covered, map.numel());
+        assert!(map.numel() <= map.full_numel());
+    }
+}
+
+/// Overlap-count aggregation over K random rates equals the scalar
+/// scatter/sum/divide reference loop bit-for-bit (same addition order,
+/// same division).
+#[test]
+fn submodel_overlap_aggregation_matches_scalar_reference_bitwise() {
+    for seed in 0..40u64 {
+        let mut r = Rng::new(seed * 23 + 1);
+        let layout = random_layout(&mut r);
+        let n = layout.numel();
+        let k = 1 + r.below(6) as usize;
+        let maps: Vec<SubmodelMap> = (0..k)
+            .map(|_| SubmodelMap::new(&layout, 0.05 + 0.95 * r.f64()))
+            .collect();
+        let subs: Vec<Vec<f32>> = maps
+            .iter()
+            .map(|m| (0..m.numel()).map(|_| r.normal()).collect())
+            .collect();
+
+        let mut acc = vec![0.0f32; n];
+        let mut counts = vec![0u32; n];
+        for (m, s) in maps.iter().zip(&subs) {
+            m.accumulate_overlap(&mut acc, &mut counts, s);
+        }
+        finalize_overlap_mean(&mut acc, &counts);
+
+        let mut ref_acc = vec![0.0f32; n];
+        let mut ref_cnt = vec![0u32; n];
+        for (m, s) in maps.iter().zip(&subs) {
+            let mut off = 0usize;
+            for sl in m.slices() {
+                for e in 0..sl.keep {
+                    ref_acc[sl.full_start + e] += s[off + e];
+                    ref_cnt[sl.full_start + e] += 1;
+                }
+                off += sl.keep;
+            }
+        }
+        for i in 0..n {
+            if ref_cnt[i] > 0 {
+                ref_acc[i] /= ref_cnt[i] as f32;
+            }
+        }
+        assert_eq!(counts, ref_cnt, "seed {seed}");
+        for i in 0..n {
+            assert_eq!(
+                acc[i].to_bits(),
+                ref_acc[i].to_bits(),
+                "seed {seed} elem {i}"
+            );
+        }
+    }
+}
+
 // ---------------------------------------------------------------- scale
 
 /// 100k-client scale smoke for the arena + heap-scheduler hot path.
@@ -477,9 +592,12 @@ fn json_roundtrip_fuzz() {
 fn config_set_field_total() {
     let keys = [
         "algorithm", "clients", "gamma", "dataset", "partition", "tau_up",
-        "scheduler", "aggregator", "garbage_key", "max_slots",
+        "scheduler", "aggregator", "garbage_key", "max_slots", "capacity",
     ];
-    let vals = ["", "0", "-1", "abc", "1e9", "fedavg", "noniid", "fifo", "π"];
+    let vals = [
+        "", "0", "-1", "abc", "1e9", "fedavg", "noniid", "fifo", "π",
+        "classes:1.0x0.5,0.5x0.5", "uniform:nan",
+    ];
     let mut cfg = csmaafl::config::RunConfig::default();
     for k in keys {
         for v in vals {

@@ -141,6 +141,94 @@ fn fuzzed_heterogeneity_and_scenario_mixes_are_shard_invariant() {
 }
 
 #[test]
+fn trivial_capacity_is_byte_identical_to_no_capacity() {
+    // Satellite guard for the submodel subsystem: the trivial profile
+    // (`uniform:1.0`, or `full` spelled out) must be *byte*-identical to
+    // the pre-submodel default — same summary JSON, same final model —
+    // across schedulers x policies x scenarios, and shard-invariant at
+    // 1/2/4 on top.
+    for scheduler in [
+        SchedulerPolicy::OldestModelFirst,
+        SchedulerPolicy::Fifo,
+        SchedulerPolicy::RoundRobin,
+    ] {
+        for aggregation in [None, Some("adaptive".to_string())] {
+            for scenario in [None, Some("dropout:0.15".to_string())] {
+                let base = ScaleSimConfig {
+                    clients: 50,
+                    iterations: 140,
+                    params: 12,
+                    scheduler,
+                    aggregation: aggregation.clone(),
+                    scenario: scenario.clone(),
+                    ..ScaleSimConfig::default()
+                };
+                let (r_ref, w_ref) = run_scale_sim_full(&base).unwrap();
+                let summary = r_ref.summary_json().to_string_compact();
+                assert!(
+                    !summary.contains("\"classes\""),
+                    "trivial profile must not emit class cells: {summary}"
+                );
+                for spec in ["uniform:1.0", "full"] {
+                    let cfg = ScaleSimConfig {
+                        capacity: Some(spec.to_string()),
+                        ..base.clone()
+                    };
+                    let label =
+                        format!("{scheduler:?}/{aggregation:?}/{scenario:?}/{spec}");
+                    let (r, w) = run_scale_sim_full(&cfg).unwrap();
+                    assert_eq!(
+                        r.summary_json().to_string_compact(),
+                        summary,
+                        "{label}: summary diverged from capacity=None"
+                    );
+                    assert_eq!(w, w_ref, "{label}: model diverged from capacity=None");
+                    assert_bit_identical(&cfg, &label);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn heterogeneous_capacity_mix_is_shard_invariant() {
+    // A non-trivial three-class mix must satisfy the same determinism
+    // contract as every other config axis, and its per-class roll-ups
+    // must partition the population.
+    for aggregation in [None, Some("staleness:0.3".to_string())] {
+        let cfg = ScaleSimConfig {
+            clients: 90,
+            iterations: 260,
+            params: 20,
+            aggregation,
+            capacity: Some("classes:1.0x0.5,0.5x0.3,0.25x0.2".to_string()),
+            ..ScaleSimConfig::default()
+        };
+        let report = assert_bit_identical(&cfg, "capacity mix");
+        // The canonical spec() spelling: 1.0 prints as 1.
+        assert_eq!(report.capacity, "classes:1x0.5,0.5x0.3,0.25x0.2");
+        assert_eq!(report.classes.len(), 3);
+        assert_eq!(
+            report.classes.iter().map(|c| c.clients).sum::<usize>(),
+            cfg.clients,
+            "class cells must partition the population"
+        );
+        assert!(
+            report.classes.iter().all(|c| c.clients > 0),
+            "every class should be populated at 90 clients: {:?}",
+            report.classes
+        );
+        assert_eq!(
+            report.classes.iter().map(|c| c.uploads).sum::<u64>(),
+            report.aggregations,
+            "per-class uploads must sum to the aggregation count"
+        );
+        let summary = report.summary_json().to_string_compact();
+        assert!(summary.contains("\"classes\""), "{summary}");
+    }
+}
+
+#[test]
 fn shard_count_beyond_clients_is_clamped_not_divergent() {
     let cfg = ScaleSimConfig {
         clients: 5,
