@@ -133,6 +133,14 @@ pub struct RunConfig {
     pub capacity: Option<String>,
     /// Upload-slot arbitration policy (AFL engines).
     pub scheduler: SchedulerPolicy,
+    /// Worker threads for the learner-driven AFL engines (`repro
+    /// train/compare/figures`): `None` (spelled `auto`) uses every
+    /// available core. Bit-identical at any value by the
+    /// `coordinator::learner_shard` contract, so — unlike
+    /// aggregation/scenario/capacity — no algorithm gating: engines
+    /// without a sharded twin simply run single-threaded and the
+    /// setting only ever changes wall-clock.
+    pub shards: Option<usize>,
     /// Failure injection: probability that a granted upload is lost in
     /// transit (the server re-downloads the current global so the client
     /// rejoins; its local work is wasted). 0 = reliable channel.
@@ -170,6 +178,7 @@ impl Default for RunConfig {
             scenario: None,
             capacity: None,
             scheduler: SchedulerPolicy::OldestModelFirst,
+            shards: None,
             upload_loss: 0.0,
             sfl_sample_fraction: 1.0,
         }
@@ -235,6 +244,9 @@ impl RunConfig {
                 );
             }
             scenario::parse(spec).with_context(|| format!("scenario {spec:?}"))?;
+        }
+        if self.shards == Some(0) {
+            bail!("shards must be >= 1 (or `auto`)");
         }
         let profile = capacity::resolve(self.capacity.as_deref())?;
         if !profile.is_trivial()
@@ -349,6 +361,19 @@ impl RunConfig {
                 }
             }
             "scheduler" => self.scheduler = SchedulerPolicy::parse(val).ok_or_else(badval)?,
+            // Learner-engine worker count; `auto` (all cores) is the
+            // pinned default, stored as None so provenance roundtrips.
+            "shards" => {
+                self.shards = if val.eq_ignore_ascii_case("auto") {
+                    None
+                } else {
+                    let n: usize = val.parse().map_err(|_| badval())?;
+                    if n == 0 {
+                        bail!("shards must be >= 1 (or `auto`), got 0");
+                    }
+                    Some(n)
+                }
+            }
             "upload_loss" => self.upload_loss = val.parse().map_err(|_| badval())?,
             "sfl_sample_fraction" => {
                 self.sfl_sample_fraction = val.parse().map_err(|_| badval())?
@@ -396,7 +421,14 @@ impl RunConfig {
                 "capacity",
                 Json::Str(self.capacity.clone().unwrap_or_else(|| "full".into())),
             )
-            .set("scheduler", Json::Str(self.scheduler.name().into()));
+            .set("scheduler", Json::Str(self.scheduler.name().into()))
+            .set(
+                "shards",
+                Json::Str(
+                    self.shards
+                        .map_or_else(|| "auto".into(), |n| n.to_string()),
+                ),
+            );
         o
     }
 }
@@ -441,8 +473,32 @@ mod tests {
         assert_eq!(c.capacity.as_deref(), Some("classes:1.0x0.5,0.5x0.5"));
         c.set_field("capacity", "full").unwrap();
         assert_eq!(c.capacity, None);
+        c.set_field("shards", "4").unwrap();
+        assert_eq!(c.shards, Some(4));
+        c.set_field("shards", "auto").unwrap();
+        assert_eq!(c.shards, None);
+        assert!(c.set_field("shards", "0").is_err());
+        assert!(c.set_field("shards", "many").is_err());
         assert!(c.set_field("nonsense", "1").is_err());
         assert!(c.set_field("clients", "abc").is_err());
+    }
+
+    #[test]
+    fn validation_catches_zero_shards() {
+        let c = RunConfig {
+            shards: Some(0),
+            ..RunConfig::default()
+        };
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("shards must be >= 1"), "{err}");
+        // Any positive count is valid for ANY algorithm: engines without
+        // a sharded twin just run single-threaded (wall-clock only).
+        let c = RunConfig {
+            algorithm: Algorithm::Sfl,
+            shards: Some(8),
+            ..RunConfig::default()
+        };
+        c.validate().unwrap();
     }
 
     #[test]
@@ -560,6 +616,7 @@ mod tests {
             scenario: Some("drift:8,2.5".into()),
             capacity: Some("classes:1.0x0.5,0.5x0.5".into()),
             scheduler: SchedulerPolicy::RoundRobin,
+            shards: Some(3),
             jitter: 0.25,
             ..RunConfig::default()
         };

@@ -49,8 +49,11 @@ use crate::model::{ParamLayout, ParamSet, SubmodelMap};
 use crate::sim::{capacity, scenario, ComputeModel, EventQueue, Scenario, Ticks, UplinkChannel};
 use crate::util::rng::Rng;
 
+/// The learner-driven engines' event vocabulary, shared with the
+/// sharded twin (`coordinator::learner_shard`) so both loops schedule
+/// literally the same events at the same times.
 #[derive(Debug)]
-enum Event {
+pub(super) enum Event {
     /// Client received a global model snapshot (sent at iteration `i`).
     /// The snapshot is shared, not cloned: the server never mutates a
     /// model that is in flight (aggregation replaces the Arc).
@@ -85,8 +88,9 @@ pub fn adaptive_steps(base: usize, factor: f64, enabled: bool) -> usize {
 
 /// If the uplink is idle, grant the next contender a slot and schedule
 /// its upload completion (the TDMA channel-grant step, shared by every
-/// place an upload can start or the channel can free up).
-fn grant_next(
+/// place an upload can start or the channel can free up — and by the
+/// sharded twin in `coordinator::learner_shard`).
+pub(super) fn grant_next(
     scheduler: &mut UploadScheduler,
     channel: &mut UplinkChannel,
     queue: &mut EventQueue<Event>,
@@ -110,6 +114,19 @@ pub fn run_afl(
     sched_policy: SchedulerPolicy,
     label: String,
 ) -> Result<RunResult> {
+    run_afl_full(ctx, policy, sched_policy, label).map(|(result, _)| result)
+}
+
+/// As [`run_afl`], also yielding the final global model — the
+/// bit-identity witness `rust/tests/sharded.rs` compares against the
+/// sharded learner engine (`coordinator::learner_shard`), for which
+/// this sequential loop is the executable spec.
+pub fn run_afl_full(
+    ctx: &FlContext<'_>,
+    policy: Box<dyn AggregationPolicy>,
+    sched_policy: SchedulerPolicy,
+    label: String,
+) -> Result<(RunResult, ParamSet)> {
     let cfg = ctx.cfg;
     let m = cfg.clients;
     let root = Rng::new(cfg.seed);
@@ -361,7 +378,7 @@ pub fn run_afl(
         classes,
         total_ticks: max_ticks,
     };
-    Ok(rec.into_result(stats))
+    Ok((rec.into_result(stats), core.into_global()))
 }
 
 #[cfg(test)]

@@ -1,0 +1,512 @@
+//! Multi-core twin of the learner-driven AFL engine (`coordinator::afl`),
+//! built on the snapshot/dispatch/join discipline proven by
+//! `coordinator::shard` for the coordinator-only scale simulator.
+//!
+//! # Architecture
+//!
+//! One **coordinator thread** owns every ordered decision — the event
+//! queue, every `jrng` draw, scheduler requests/grants, capacity
+//! slicing, `ServerCore::decide()` + lerp — exactly as the sequential
+//! engine does. K **shard workers** own the only expensive pure
+//! function on the path: the real [`crate::learner::Learner::train`]
+//! call. Clients are
+//! partitioned across workers with [`ClientPartition`] (contiguous
+//! ranges, same as `repro sim --shards N`), each worker consumes its
+//! own task channel, and completions return on one shared channel.
+//!
+//! Per event, the coordinator:
+//!
+//! 1. **DownloadDone** — assembles the client's training slab from its
+//!    [`BatchCursor`] (ordered, cursor state advances in event order),
+//!    dispatches `(snapshot, slab, steps)` to the client's shard worker,
+//!    then draws the compute duration from `jrng` and schedules
+//!    `ComputeDone` — the same draw, at the same stream position, as the
+//!    sequential engine, because `Learner::train` consumes no RNG.
+//! 2. **ComputeDone** — scheduler request + grant, identical code.
+//! 3. **UploadDone** — **joins** the client's training result (blocking
+//!    on the done channel until this client's model has arrived), then
+//!    runs the loss/lost draws and the aggregation in exact event order.
+//!
+//! Training slabs are recycled through a pool (the recycled-arena idiom
+//! from `coordinator::shard`): buffers travel to the worker inside the
+//! task and come back inside the completion, so steady-state dispatch
+//! allocates nothing for batch data.
+//!
+//! # Why `--shards N` is bit-identical to the sequential engine
+//!
+//! - Every RNG draw (`jrng` durations, loss coin-flips; scenario
+//!   streams) happens on the coordinator at the same point in the same
+//!   event order — workers draw nothing.
+//! - `Learner::train` is a pure function of `(snapshot, slab, steps)`;
+//!   both engines hand it bit-identical inputs, so the returned local
+//!   models are bit-identical regardless of which thread ran them.
+//! - Aggregation order is the event order: the join in `UploadDone`
+//!   forces the client's local model to exist before `ServerCore`
+//!   consumes it, and `ServerCore` only ever runs on the coordinator.
+//! - The one reordering this engine allows is *when*
+//!   [`ServerCore::record_loss`] is called: the sequential engine
+//!   records at `DownloadDone` (training time), this engine records at
+//!   join/drain time, in completion-arrival order. That is observation-
+//!   equivalent: `record_loss` only adds into dense per-client tables
+//!   (`loss_sum[c] += loss`), a single client's results join in its own
+//!   dispatch order, different clients touch disjoint entries, and no
+//!   decision path reads the tables mid-run — `mean_train_loss()` sums
+//!   them once at the end. The final drain below guarantees the *set*
+//!   of recorded losses matches the sequential engine's exactly (one
+//!   per processed `DownloadDone`, including trainings whose upload
+//!   never completed before the horizon).
+//!
+//! The sequential loop in `coordinator::afl` is the executable spec for
+//! this file, the way `scale.rs` is for `shard.rs`; `rust/tests/
+//! sharded.rs` holds the identity to it across schedulers ×
+//! aggregation policies × scenarios × capacity profiles.
+
+use std::sync::{mpsc, Arc};
+
+use anyhow::{ensure, Context, Result};
+
+use super::afl::{adaptive_steps, grant_next, Event};
+use super::core::ServerCore;
+use super::policy::AggregationPolicy;
+use super::runner::{FlContext, Recorder, RunStats};
+use super::scale::{class_cells, scaled_tau_up, SubmodelCtx};
+use super::scheduler::{SchedulerPolicy, UploadScheduler};
+use crate::data::Dataset;
+use crate::learner::BatchCursor;
+use crate::metrics::{ClassMetrics, RunResult};
+use crate::model::{ParamLayout, ParamSet, SubmodelMap};
+use crate::sim::{
+    capacity, scenario, ClientPartition, ComputeModel, EventQueue, Scenario, UplinkChannel,
+};
+use crate::util::rng::Rng;
+
+/// One local-training job: everything `Learner::train` needs, owned, so
+/// the worker touches no coordinator state.
+struct TrainTask {
+    client: usize,
+    /// The global snapshot the client trains from (shared, never
+    /// mutated — aggregation replaces the server's Arc).
+    w: Arc<ParamSet>,
+    /// Pre-assembled training slab; recycled through the pool.
+    xs: Vec<f32>,
+    ys: Vec<i32>,
+    steps: usize,
+}
+
+/// A finished training job, returning the slab buffers for reuse.
+struct TrainDone {
+    client: usize,
+    result: Result<(ParamSet, f32)>,
+    xs: Vec<f32>,
+    ys: Vec<i32>,
+}
+
+/// Run the sharded learner-driven engine: bit-identical results to
+/// [`super::afl::run_afl`] with wall-clock divided across `shards`
+/// worker threads (clamped to the client count).
+pub fn run_afl_sharded(
+    ctx: &FlContext<'_>,
+    policy: Box<dyn AggregationPolicy>,
+    sched_policy: SchedulerPolicy,
+    label: String,
+    shards: usize,
+) -> Result<RunResult> {
+    run_afl_sharded_full(ctx, policy, sched_policy, label, shards).map(|(result, _)| result)
+}
+
+/// As [`run_afl_sharded`], also yielding the final global model — the
+/// identity witness `rust/tests/sharded.rs` compares against the
+/// sequential spec's.
+pub fn run_afl_sharded_full(
+    ctx: &FlContext<'_>,
+    policy: Box<dyn AggregationPolicy>,
+    sched_policy: SchedulerPolicy,
+    label: String,
+    shards: usize,
+) -> Result<(RunResult, ParamSet)> {
+    ensure!(shards >= 1, "train requires shards >= 1");
+    let cfg = ctx.cfg;
+    let m = cfg.clients;
+    let root = Rng::new(cfg.seed);
+    let cm = ComputeModel::new(cfg.heterogeneity, m, cfg.jitter, &root);
+    let mut jrng = root.fork(0xd1ce);
+
+    // Identical slot unit as the paired SFL run: fair x-axis.
+    let slot_ticks =
+        cfg.time
+            .sfl_round_heterogeneous(m, cfg.local_steps, cm.slowest_factor());
+    let mut rec = Recorder::new(ctx, slot_ticks)?;
+    let max_ticks = rec.max_ticks();
+
+    // The world model (static | dropout | churn | drift). Stochastic
+    // scenarios draw from their own forked streams, never from `jrng`.
+    let mut world: Box<dyn Scenario> = scenario::resolve(cfg.scenario.as_deref())?;
+    world.bind(m, slot_ticks, cfg.seed);
+    if cfg.scenario.is_some() {
+        crate::log_info!("afl[{}]: scenario {}", label, world.label());
+    }
+
+    let img = ctx.train.x.len() / ctx.train.len();
+    let batch = ctx.learner.batch();
+
+    let w_init = ctx.learner.init(cfg.seed as u32)?;
+    // Heterogeneous capacity: same resolution (and `root` draws) as the
+    // sequential engine.
+    let profile = capacity::resolve(cfg.capacity.as_deref())?;
+    let subctx: Option<SubmodelCtx> = if profile.is_trivial() {
+        None
+    } else {
+        let layout = ParamLayout::of(&w_init);
+        let class_of = profile.assign(m, &root);
+        let maps: Vec<SubmodelMap> = profile
+            .classes()
+            .iter()
+            .map(|c| SubmodelMap::new(&layout, c.rate))
+            .collect();
+        crate::log_info!("afl[{}]: capacity {}", label, profile.spec());
+        Some(SubmodelCtx {
+            profile,
+            class_of,
+            maps,
+        })
+    };
+    let mut subbuf = vec![
+        0.0f32;
+        subctx.as_ref().map_or(0, |sc| {
+            sc.maps.iter().map(|mp| mp.numel()).max().unwrap_or(0)
+        })
+    ];
+
+    let partition = ClientPartition::new(m, shards);
+    let k_shards = partition.shards();
+
+    let mut core = ServerCore::new(w_init, m, policy, cfg.mu_rho);
+    let mut queue: EventQueue<Event> = EventQueue::new();
+    let mut channel = UplinkChannel::new();
+    let mut scheduler = UploadScheduler::new(sched_policy, m);
+    let mut cursors: Vec<BatchCursor> = ctx
+        .shards
+        .iter()
+        .map(|s| BatchCursor::new(s.indices.clone()))
+        .collect();
+    // Iteration stamp of each client's in-flight training (the model
+    // itself joins from the done channel).
+    let mut pending: Vec<Option<u64>> = vec![None; m];
+    // Joined-but-unconsumed local models, indexed by client.
+    let mut locals: Vec<Option<ParamSet>> = vec![None; m];
+    // `ready[c]` ⇔ client c has no training in flight with the workers.
+    let mut ready: Vec<bool> = vec![true; m];
+    // Recycled (xs, ys) slab buffers — dispatch pops, join pushes back.
+    let mut slab_pool: Vec<(Vec<f32>, Vec<i32>)> = Vec::new();
+    let mut in_flight = 0usize;
+
+    // Upload duration per client: τ^u under the trivial profile, scaled
+    // by the client's rate otherwise.
+    let tau_up_of = |client: usize| match &subctx {
+        None => cfg.time.tau_up,
+        Some(sc) => scaled_tau_up(cfg.time.tau_up, sc.map_of(client).rate()),
+    };
+
+    let learner = ctx.learner;
+    let (result, model) = std::thread::scope(|scope| -> Result<(RunResult, ParamSet)> {
+        let (done_tx, done_rx) = mpsc::channel::<TrainDone>();
+        let mut task_txs: Vec<mpsc::Sender<TrainTask>> = Vec::with_capacity(k_shards);
+        for _ in 0..k_shards {
+            let (tx, rx) = mpsc::channel::<TrainTask>();
+            task_txs.push(tx);
+            let done_tx = done_tx.clone();
+            scope.spawn(move || {
+                for t in rx {
+                    let result = learner.train(&t.w, &t.xs, &t.ys, t.steps);
+                    if done_tx
+                        .send(TrainDone {
+                            client: t.client,
+                            result,
+                            xs: t.xs,
+                            ys: t.ys,
+                        })
+                        .is_err()
+                    {
+                        break; // coordinator gone: stop quietly
+                    }
+                }
+            });
+        }
+        // Workers hold the only other senders; the coordinator's recv
+        // must observe worker death, not self-deadlock.
+        drop(done_tx);
+
+        // t=0: the server broadcasts w_0 to everyone (Algorithm 1
+        // line 1). One shared snapshot for the whole broadcast.
+        let w0 = Arc::new(core.global().clone());
+        for c in 0..m {
+            let i = core.issue_to(c);
+            queue.schedule_at(cfg.time.tau_down, Event::DownloadDone {
+                client: c,
+                w: Arc::clone(&w0),
+                i,
+            });
+        }
+        drop(w0);
+
+        while let Some((now, ev)) = queue.pop() {
+            if now > max_ticks {
+                break;
+            }
+            match ev {
+                Event::DownloadDone { client, w: w_recv, i } => {
+                    // Slab assembly stays on the coordinator so cursor
+                    // state advances in event order; the train call —
+                    // a pure function of what we ship — goes to the
+                    // client's shard worker.
+                    let steps = adaptive_steps(
+                        cfg.local_steps,
+                        cm.factor(client),
+                        cfg.adaptive_iters,
+                    );
+                    let (mut xs, mut ys) = slab_pool.pop().unwrap_or_default();
+                    cursors[client].fill(ctx.train, steps * batch, img, &mut xs, &mut ys);
+                    ready[client] = false;
+                    in_flight += 1;
+                    task_txs[partition.shard_of(client)]
+                        .send(TrainTask {
+                            client,
+                            w: w_recv,
+                            xs,
+                            ys,
+                            steps,
+                        })
+                        .map_err(|_| anyhow::anyhow!("shard worker exited early"))?;
+                    pending[client] = Some(i);
+                    // Same `jrng` draw at the same stream position as
+                    // the sequential engine (training consumes no RNG).
+                    let mut scale = world.compute_scale(client, now);
+                    if let Some(sc) = &subctx {
+                        scale *= sc.map_of(client).rate();
+                    }
+                    let dur = cm.duration_scaled(&cfg.time, client, steps, &mut jrng, scale);
+                    queue.schedule_in(dur, Event::ComputeDone { client });
+                }
+                Event::ComputeDone { client } => {
+                    if let Some(rejoin) = world.offline_until(client, now) {
+                        queue.schedule_at(rejoin, Event::ComputeDone { client });
+                        continue;
+                    }
+                    scheduler.request(client, now);
+                    grant_next(&mut scheduler, &mut channel, &mut queue, now, tau_up_of);
+                }
+                Event::UploadDone { client } => {
+                    let i = pending[client]
+                        .take()
+                        .expect("upload without a pending local model");
+                    // Join: block until THIS client's training result
+                    // has arrived, banking any other completions that
+                    // drain first. Unconditional — even a lost upload
+                    // trained, and its loss must be recorded.
+                    while !ready[client] {
+                        let done = done_rx
+                            .recv()
+                            .context("shard worker died before completing its task")?;
+                        let (local, loss) = done.result?;
+                        core.record_loss(done.client, loss as f64);
+                        locals[done.client] = Some(local);
+                        ready[done.client] = true;
+                        slab_pool.push((done.xs, done.ys));
+                        in_flight -= 1;
+                    }
+                    let local = locals[client]
+                        .take()
+                        .expect("joined without a trained local model");
+                    // Loss draws in exact event order, after the join.
+                    let scenario_lost = world.upload_lost(client, now);
+                    if scenario_lost || (cfg.upload_loss > 0.0 && jrng.f64() < cfg.upload_loss) {
+                        core.on_lost_upload(client);
+                        let i = core.issue_to(client);
+                        queue.schedule_in(cfg.time.tau_down, Event::DownloadDone {
+                            client,
+                            w: Arc::new(core.global().clone()),
+                            i,
+                        });
+                        grant_next(&mut scheduler, &mut channel, &mut queue, now, tau_up_of);
+                        continue;
+                    }
+                    rec.catch_up(now, core.global(), core.iteration())?;
+
+                    match &subctx {
+                        None => {
+                            core.on_update(client, i, &local, ctx)?; // eq. (3)/(11)
+                        }
+                        Some(sc) => {
+                            let map = sc.map_of(client);
+                            map.extract_from_set(&local, &mut subbuf[..map.numel()]);
+                            core.on_update_submodel(client, i, &subbuf[..map.numel()], map)?;
+                        }
+                    }
+
+                    let i = core.issue_to(client);
+                    queue.schedule_in(cfg.time.tau_down, Event::DownloadDone {
+                        client,
+                        w: Arc::new(core.global().clone()),
+                        i,
+                    });
+                    grant_next(&mut scheduler, &mut channel, &mut queue, now, tau_up_of);
+                }
+            }
+        }
+
+        // Horizon reached: close the task queues (ends the workers once
+        // drained) and join every outstanding training. The sequential
+        // spec records a loss for every processed DownloadDone — even
+        // ones whose upload never lands before max_ticks — so the drain
+        // records those losses too; the models are discarded, exactly
+        // as the sequential engine discards a never-uploaded `pending`.
+        drop(task_txs);
+        while in_flight > 0 {
+            let done = done_rx
+                .recv()
+                .context("shard worker died before completing its task")?;
+            let (_, loss) = done.result?;
+            core.record_loss(done.client, loss as f64);
+            in_flight -= 1;
+        }
+
+        rec.finish(core.global(), core.iteration())?;
+        if core.lost_uploads() > 0 {
+            crate::log_info!(
+                "afl: {} uploads lost in transit ({} delivered)",
+                core.lost_uploads(),
+                core.iteration()
+            );
+        }
+
+        // Per-class roll-up, identical to the sequential engine.
+        let classes: Vec<ClassMetrics> = match &subctx {
+            None => Vec::new(),
+            Some(sc) => {
+                let cells = class_cells(
+                    sc,
+                    core.updates_per_client(),
+                    core.lost_per_client(),
+                    core.loss_totals(),
+                );
+                let mut out = Vec::with_capacity(cells.len());
+                for (k, cell) in cells.into_iter().enumerate() {
+                    let mut x = Vec::new();
+                    let mut y = Vec::new();
+                    for (c, &cls) in sc.class_of.iter().enumerate() {
+                        if cls as usize != k {
+                            continue;
+                        }
+                        for &s in &ctx.shards[c].indices {
+                            x.extend_from_slice(ctx.train.image(s));
+                            y.push(ctx.train.y[s]);
+                        }
+                    }
+                    let (accuracy, loss) = if y.is_empty() {
+                        (0.0, 0.0)
+                    } else {
+                        let pooled = Dataset { x, y };
+                        ctx.learner.evaluate(core.global(), &pooled)?
+                    };
+                    out.push(ClassMetrics {
+                        label: cell.label,
+                        rate: cell.rate,
+                        clients: cell.clients,
+                        uploads: cell.uploads,
+                        lost_uploads: cell.lost_uploads,
+                        mean_train_loss: cell.mean_train_loss,
+                        accuracy,
+                        loss,
+                    });
+                }
+                out
+            }
+        };
+
+        let stats = RunStats {
+            label,
+            uploads: scheduler.grants().to_vec(),
+            aggregations: core.iteration(),
+            mean_staleness: core.mean_staleness(),
+            fairness: scheduler.jain_fairness(),
+            lost_uploads: core.lost_uploads(),
+            lost_per_client: core.lost_per_client().to_vec(),
+            mean_train_loss: core.mean_train_loss(),
+            classes,
+            total_ticks: max_ticks,
+        };
+        Ok((rec.into_result(stats), core.into_global()))
+    })?;
+
+    let mut result = result;
+    result.shards = k_shards;
+    Ok((result, model))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::coordinator::resolve_policy;
+    use crate::session::{LearnerKind, Session};
+
+    fn tiny_cfg() -> RunConfig {
+        RunConfig {
+            clients: 5,
+            samples_per_client: 12,
+            test_samples: 40,
+            local_steps: 3,
+            max_slots: 3.0,
+            ..RunConfig::default()
+        }
+    }
+
+    fn ctx_of(s: &Session) -> FlContext<'_> {
+        FlContext {
+            cfg: &s.cfg,
+            learner: s.learner(),
+            engine: s.engine(),
+            train: &s.train,
+            shards: &s.shards,
+            test: &s.test,
+        }
+    }
+
+    #[test]
+    fn matches_the_sequential_engine_bit_for_bit() {
+        let s = Session::new(tiny_cfg(), LearnerKind::Linear, "artifacts").unwrap();
+        let ctx = ctx_of(&s);
+        let (policy, label) = resolve_policy(&s.cfg).unwrap();
+        let (r_ref, w_ref) = super::super::afl::run_afl_full(&ctx, policy, s.cfg.scheduler, label).unwrap();
+        for shards in [1usize, 2, 3, 7] {
+            let (policy, label) = resolve_policy(&s.cfg).unwrap();
+            let (r, w) =
+                run_afl_sharded_full(&ctx, policy, s.cfg.scheduler, label, shards).unwrap();
+            assert_eq!(
+                r.summary_json().to_string_compact(),
+                r_ref.summary_json().to_string_compact(),
+                "summary diverged at shards={shards}"
+            );
+            assert_eq!(w, w_ref, "final model diverged at shards={shards}");
+        }
+    }
+
+    #[test]
+    fn shard_count_is_clamped_and_surfaced_outside_the_summary() {
+        let s = Session::new(tiny_cfg(), LearnerKind::Linear, "artifacts").unwrap();
+        let ctx = ctx_of(&s);
+        let (policy, label) = resolve_policy(&s.cfg).unwrap();
+        let (r, _) = run_afl_sharded_full(&ctx, policy, s.cfg.scheduler, label, 64).unwrap();
+        assert_eq!(r.shards, 5, "clamped to the client count");
+        assert!(r.summary_json().get("shards").is_none());
+    }
+
+    #[test]
+    fn rejects_zero_shards() {
+        let s = Session::new(tiny_cfg(), LearnerKind::Linear, "artifacts").unwrap();
+        let ctx = ctx_of(&s);
+        let (policy, label) = resolve_policy(&s.cfg).unwrap();
+        let err = run_afl_sharded(&ctx, policy, s.cfg.scheduler, label, 0).unwrap_err();
+        assert!(err.to_string().contains("shards >= 1"), "{err}");
+    }
+}

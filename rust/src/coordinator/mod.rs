@@ -21,16 +21,27 @@
 //! the same `ServerCore`, so the simulator and the deployment share one
 //! aggregation code path.
 //!
-//! At scale, the coordinator-only simulator has two engines over one
-//! semantics: the sequential reference ([`scale`], `repro sim
-//! --shards 1` equivalent) and the multi-core sharded pipeline
-//! ([`shard`], `repro sim --shards N`) — bit-identical by contract
-//! (`rust/tests/sharded.rs`), differing only in wall-clock.
+//! Two subsystems ship a sequential/sharded engine *pair* over one
+//! semantics, bit-identical by contract (`rust/tests/sharded.rs`) and
+//! differing only in wall-clock:
+//!
+//! | Path                        | Sequential spec     | Sharded pipeline        |
+//! |-----------------------------|---------------------|-------------------------|
+//! | `repro sim` (synthetic)     | [`scale`]           | [`shard`]               |
+//! | `repro train` (real learner)| [`afl::run_afl`]    | [`learner_shard`]       |
+//!
+//! In each pair the sequential loop is the executable spec; the sharded
+//! twin farms the expensive pure work (synthetic slot training /
+//! [`crate::learner::Learner::train`]) to K workers while one
+//! coordinator thread keeps every ordered decision in exact event
+//! order. `repro train --shards N` picks the learner pair's engine via
+//! [`effective_shards`].
 
 pub mod afl;
 pub mod afl_baseline;
 pub mod beta_solver;
 pub mod core;
+pub mod learner_shard;
 pub mod policy;
 pub mod runner;
 pub mod scale;
@@ -40,7 +51,8 @@ pub mod shard;
 pub mod staleness;
 
 pub use self::core::{AggregationOutcome, ModelAggregator, NativeAggregator, ServerCore};
-pub use afl::{adaptive_steps, run_afl};
+pub use afl::{adaptive_steps, run_afl, run_afl_full};
+pub use learner_shard::{run_afl_sharded, run_afl_sharded_full};
 pub use afl_baseline::run_afl_baseline;
 pub use beta_solver::{effective_coefficients, naive_effective_coefficients, solve_betas};
 pub use policy::{
@@ -88,14 +100,35 @@ pub fn resolve_policy(cfg: &RunConfig) -> Result<(Box<dyn AggregationPolicy>, St
     }
 }
 
-/// Dispatch one run according to `ctx.cfg.algorithm`.
+/// The learner-engine worker count a config asks for: the explicit
+/// `shards` setting when present, else every available core (`auto`).
+/// Bit-identity makes any answer safe; this only decides wall-clock.
+pub fn effective_shards(cfg: &RunConfig) -> usize {
+    match cfg.shards {
+        Some(n) => n,
+        None => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+    }
+}
+
+/// Dispatch one run according to `ctx.cfg.algorithm`. The learner-driven
+/// AFL algorithms route through the sharded engine when
+/// [`effective_shards`] asks for more than one worker; the sequential
+/// loop stays the single-worker production path (and the executable
+/// spec the sharded engine is tested against).
 pub fn run(ctx: &FlContext<'_>) -> Result<RunResult> {
     match ctx.cfg.algorithm {
         Algorithm::Sfl => sfl::run_sfl(ctx),
         Algorithm::AflBaseline => run_afl_baseline(ctx),
         Algorithm::AflNaive | Algorithm::Csmaafl => {
             let (policy, label) = resolve_policy(ctx.cfg)?;
-            run_afl(ctx, policy, ctx.cfg.scheduler, label)
+            let shards = effective_shards(ctx.cfg);
+            if shards == 1 {
+                run_afl(ctx, policy, ctx.cfg.scheduler, label)
+            } else {
+                run_afl_sharded(ctx, policy, ctx.cfg.scheduler, label, shards)
+            }
         }
     }
 }

@@ -196,6 +196,9 @@ impl<'a> Recorder<'a> {
             classes: stats.classes,
             total_ticks: stats.total_ticks,
             wallclock_secs: wallclock,
+            // Engines that ran multi-core overwrite this after assembly
+            // (`coordinator::learner_shard`); everything else is 1.
+            shards: 1,
         }
     }
 }

@@ -18,7 +18,13 @@ use crate::data::Dataset;
 use crate::model::{ParamSet, TensorSpec};
 
 /// A batch-oriented local trainer + evaluator.
-pub trait Learner {
+///
+/// `Sync` is a supertrait because the sharded learner engine
+/// (`coordinator::learner_shard`) calls [`Learner::train`] concurrently
+/// from K shard workers through one `&dyn Learner` while the
+/// coordinator thread runs [`Learner::evaluate`] — every method already
+/// takes `&self` and both implementations are stateless between calls.
+pub trait Learner: Sync {
     /// Ordered parameter tensor specs (the manifest contract).
     fn specs(&self) -> Vec<TensorSpec>;
 

@@ -41,12 +41,16 @@ USAGE:
 
 COMMANDS:
   train     --config <file> [--set key=value ...] [--learner pjrt|linear]
-            [--out results/] [--label name]
+            [--shards K] [--out results/] [--label name]
+            (--shards K runs local training on K worker threads,
+            default = available cores; results are bit-identical at
+            any K — only wall-clock changes)
   compare   --config <file> [--learner pjrt|linear] [--jobs N]
-            [--out results/]
-            (four paper series + fedasync/adaptive policy series)
+            [--shards K] [--out results/]
+            (four paper series + fedasync/adaptive policy series;
+            without --shards each of the --jobs runs is single-threaded)
   figures   [--fig fig3|fig4|fig5a|fig5b|all] [--learner pjrt|linear]
-            [--set key=value ...] [--jobs N] [--out results/]
+            [--set key=value ...] [--jobs N] [--shards K] [--out results/]
   sweep     --param gamma --values 0.1,0.2,0.4,0.6 [--config <file>]
             [--learner pjrt|linear] [--jobs N] [--out results/]
             (E-GAMMA table)
@@ -77,7 +81,7 @@ COMMANDS:
             completes at --clients 1000000. --shards K runs K shard
             workers, default = available cores; every non-wall-clock
             field is bit-identical at any K)
-  bench     [--quick] [--suite aggregation|scheduler|event_loop|
+  bench     [--quick] [--suite aggregation|kernels|scheduler|event_loop|
             end_to_end|sharded|submodel|net] [--shards K]
             [--format table|json]
             [--out results/] [--check BENCH_baseline.json] [--factor 2.0]
@@ -259,7 +263,8 @@ fn print_run_table(runs: &[&csmaafl::RunResult]) {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let cfg = load_config(args)?;
+    let mut cfg = load_config(args)?;
+    apply_train_shards(args, &mut cfg, false)?;
     let out_dir = args.opt_or("out", "results");
     let session = Session::new(cfg, args.learner()?, args.opt_or("artifacts", "artifacts"))?;
     let mut run = session.run()?;
@@ -276,7 +281,8 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_compare(args: &Args) -> Result<()> {
-    let cfg = load_config(args)?;
+    let mut cfg = load_config(args)?;
+    apply_train_shards(args, &mut cfg, true)?;
     let out_dir = args.opt_or("out", "results");
     let session = Session::new(cfg, args.learner()?, args.opt_or("artifacts", "artifacts"))?;
     // The four paper series always use each algorithm's own default
@@ -318,7 +324,8 @@ fn cmd_compare(args: &Args) -> Result<()> {
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {
-    let base = load_config(args)?;
+    let mut base = load_config(args)?;
+    apply_train_shards(args, &mut base, true)?;
     let out_dir = args.opt_or("out", "results");
     let which = args.opt_or("fig", "all");
     let specs: Vec<&FigureSpec> = if which == "all" {
@@ -427,7 +434,7 @@ fn cmd_grid(args: &Args) -> Result<()> {
     );
     let (scalars, axes) = collect_axes(args)?;
 
-    let cfg = match args.opt("config") {
+    let mut cfg = match args.opt("config") {
         Some(path) => RunConfig::load(path, &scalars)?,
         None => {
             let mut c = RunConfig::default();
@@ -438,6 +445,7 @@ fn cmd_grid(args: &Args) -> Result<()> {
             c
         }
     };
+    apply_train_shards(args, &mut cfg, true)?;
 
     let mut plan = Plan::new();
     for (k, vs) in axes {
@@ -606,6 +614,44 @@ fn cmd_grid_sim(args: &Args) -> Result<()> {
 /// machine's available parallelism when absent.
 fn parse_shards(opt: Option<&str>) -> Result<usize> {
     parse_shard_count("--shards", opt)
+}
+
+/// Thread the learner-engine `--shards` flag into a run config.
+///
+/// An explicit value is validated here — before `Session::new`
+/// generates any data — and, on multi-run commands, checked against an
+/// explicit `--jobs` so the two axes of parallelism cannot silently
+/// oversubscribe the machine. When the flag is absent, multi-run
+/// commands pin `shards=1` (the plan-level `--jobs` already owns the
+/// cores) unless the config asked for something else; `repro train`
+/// runs one cell so it keeps the config's `auto` (= all cores).
+fn apply_train_shards(args: &Args, cfg: &mut RunConfig, multi_run: bool) -> Result<()> {
+    match args.opt("shards") {
+        Some(s) => {
+            let shards = parse_shards(Some(s))?;
+            let jobs = args.jobs()?;
+            if jobs >= 2 && shards >= 2 {
+                let cores = std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1);
+                ensure!(
+                    jobs.saturating_mul(shards) <= cores,
+                    "--jobs {jobs} x --shards {shards} = {} worker threads \
+                     oversubscribes this machine's {cores} core(s); lower one of \
+                     them or drop --shards (results are bit-identical at any \
+                     shard count — the flags only change wall-clock)",
+                    jobs.saturating_mul(shards)
+                );
+            }
+            cfg.shards = Some(shards);
+        }
+        None => {
+            if multi_run && cfg.shards.is_none() {
+                cfg.shards = Some(1);
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Shared by `--shards` and `--net-shards`: a positive integer, default

@@ -90,6 +90,11 @@ pub struct RunResult {
     pub total_ticks: Ticks,
     /// Real wall-clock spent (training + eval dispatches).
     pub wallclock_secs: f64,
+    /// Worker threads the engine actually used (after clamping). Like
+    /// wall-clock it can vary per machine (`shards=auto`), so it is
+    /// never part of [`RunResult::summary_json`] — only the full
+    /// record.
+    pub shards: usize,
 }
 
 impl RunResult {
@@ -108,6 +113,7 @@ impl RunResult {
             classes: Vec::new(),
             total_ticks: 0,
             wallclock_secs: 0.0,
+            shards: 1,
         }
     }
 
@@ -161,6 +167,7 @@ impl RunResult {
     pub fn to_json(&self) -> Json {
         let mut o = self.summary_json();
         o.set("wallclock_secs", Json::Float(self.wallclock_secs))
+            .set("shards", Json::Int(self.shards as i64))
             .set(
                 "uploads_per_client",
                 Json::Array(
@@ -252,10 +259,22 @@ mod tests {
     fn summary_json_is_wallclock_free() {
         let mut r = run_with_points(&[0.2, 0.6]);
         r.wallclock_secs = 123.4;
+        r.shards = 8;
         let s = r.summary_json().to_string_pretty();
         assert!(!s.contains("wallclock"), "{s}");
         assert!(!s.contains("points"), "{s}");
+        // Shard count is machine-dependent under `auto`, so like
+        // wall-clock it must never leak into the deterministic summary.
+        assert!(!s.contains("shards"), "{s}");
         assert!(s.contains("best_accuracy"), "{s}");
+    }
+
+    #[test]
+    fn full_record_carries_the_shard_count() {
+        let mut r = run_with_points(&[0.2]);
+        r.shards = 4;
+        assert_eq!(r.to_json().get("shards").unwrap().as_i64(), Some(4));
+        assert_eq!(RunResult::empty("e").to_json().get("shards").unwrap().as_i64(), Some(1));
     }
 
     #[test]

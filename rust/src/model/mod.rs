@@ -4,8 +4,8 @@ mod params;
 mod submodel;
 
 pub use params::{
-    axpy_flat, l2_accumulate, lerp_flat, ParamArena, ParamLayout, ParamSet, SlotId, Tensor,
-    TensorSpec,
+    axpy_flat, axpy_flat_scalar, l2_accumulate, lerp_flat, lerp_flat_par, lerp_flat_scalar,
+    ParamArena, ParamLayout, ParamSet, SlotId, Tensor, TensorSpec, KERNEL_CHUNK,
 };
 pub use submodel::{finalize_overlap_mean, SubmodelMap, SubmodelSlice};
 pub(crate) use params::SlotWindow;

@@ -17,6 +17,13 @@
 //! ([`lerp_flat`], [`axpy_flat`], [`l2_accumulate`]); the `ParamSet`
 //! methods are per-tensor wrappers over the same code, so the two forms
 //! are bit-identical by construction (asserted in `tests/properties.rs`).
+//! The shipping kernels are chunked for reliable autovectorization (SSE2
+//! intrinsics under `--features simd` on x86_64), with the original
+//! scalar loops retained as the executable reference
+//! ([`lerp_flat_scalar`], [`axpy_flat_scalar`]) and a scoped-thread
+//! parallel variant ([`lerp_flat_par`]) for oversized models — every
+//! variant bit-identical to the reference (differential fuzz harness in
+//! `tests/properties.rs`).
 
 use std::fmt;
 
@@ -70,33 +77,210 @@ impl Tensor {
 }
 
 // ------------------------------------------------------- flat kernels
+//
+// Three shapes of the same arithmetic, all bit-identical by
+// construction because every element goes through the *same scalar
+// expression* (`b*x + a*y` as two f32 muls then one add — never an FMA
+// contraction, which would change the rounding) regardless of which
+// loop shape, lane or thread computes it:
+//
+// * `*_scalar`  — the executable reference: the plain zip loop. Kept
+//   public so the differential harness (`tests/properties.rs`) always
+//   compares the shipping kernel against the original code, not against
+//   a copy of itself.
+// * the default — fixed-width chunks of [`KERNEL_CHUNK`] plus a scalar
+//   remainder. The bounded inner loop over an 8-wide array pattern is
+//   the shape LLVM's loop vectorizer reliably turns into packed mul/add
+//   sequences, where the plain zip loop's vectorization depends on
+//   iterator desugaring.
+// * `--features simd` (x86_64 only) — explicit SSE2 intrinsics
+//   (`_mm_mul_ps`/`_mm_add_ps`). SSE2 is baseline on x86_64 (no runtime
+//   detection needed) and has no FMA, so each lane performs exactly the
+//   scalar mul-mul-add rounding. Non-x86_64 builds with the feature get
+//   the chunked path.
+//
+// `l2_accumulate` is deliberately *not* chunked or parallelized: its
+// f64 accumulator chain is a serial dependency in program order, and
+// callers (`ParamSet::l2_distance*`, `SubmodelMap::l2_distance_set`)
+// chain several tensor ranges through one accumulator expecting the
+// exact rounding of a single sequential pass. Any reassociation would
+// change results; keeping it scalar IS the contract.
 
-/// In-place convex combination over flat buffers:
-/// `global[k] = beta*global[k] + (1-beta)*local[k]` — the eq. (3) server
-/// aggregation kernel every storage form shares.
-pub fn lerp_flat(global: &mut [f32], local: &[f32], beta: f32) {
+/// Fixed chunk width of the vector-friendly kernel inner loops. Public
+/// so the differential fuzz harness can probe the remainder boundaries
+/// (`KERNEL_CHUNK − 1`, `KERNEL_CHUNK`, `KERNEL_CHUNK + 1`).
+pub const KERNEL_CHUNK: usize = 8;
+
+/// Scalar reference of [`lerp_flat`]: the original elementwise zip loop.
+/// Every other lerp variant must match this bit-for-bit on every input
+/// (`tests/properties.rs` differential harness).
+pub fn lerp_flat_scalar(global: &mut [f32], local: &[f32], beta: f32) {
     assert_eq!(global.len(), local.len(), "lerp over mismatched buffers");
     let b = beta;
     let a = 1.0 - beta;
-    // Simple indexed loop: LLVM auto-vectorizes this cleanly.
     for (x, y) in global.iter_mut().zip(local) {
         *x = b * *x + a * *y;
     }
 }
 
-/// Weighted accumulation over flat buffers: `acc[k] += w * other[k]`
-/// (the FedAvg reduction kernel).
-pub fn axpy_flat(acc: &mut [f32], other: &[f32], w: f32) {
+/// Scalar reference of [`axpy_flat`] (see [`lerp_flat_scalar`]).
+pub fn axpy_flat_scalar(acc: &mut [f32], other: &[f32], w: f32) {
     assert_eq!(acc.len(), other.len(), "axpy over mismatched buffers");
     for (x, y) in acc.iter_mut().zip(other) {
         *x += w * *y;
     }
 }
 
+/// In-place convex combination over flat buffers:
+/// `global[k] = beta*global[k] + (1-beta)*local[k]` — the eq. (3) server
+/// aggregation kernel every storage form shares. Chunked (or, under
+/// `--features simd` on x86_64, SSE2) but bit-identical to
+/// [`lerp_flat_scalar`]; see the module-section comment above.
+pub fn lerp_flat(global: &mut [f32], local: &[f32], beta: f32) {
+    assert_eq!(global.len(), local.len(), "lerp over mismatched buffers");
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    lerp_flat_sse2(global, local, beta);
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    lerp_flat_chunked(global, local, beta);
+}
+
+/// Weighted accumulation over flat buffers: `acc[k] += w * other[k]`
+/// (the FedAvg reduction kernel). Chunked/SSE2 like [`lerp_flat`];
+/// bit-identical to [`axpy_flat_scalar`].
+pub fn axpy_flat(acc: &mut [f32], other: &[f32], w: f32) {
+    assert_eq!(acc.len(), other.len(), "axpy over mismatched buffers");
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    axpy_flat_sse2(acc, other, w);
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    axpy_flat_chunked(acc, other, w);
+}
+
+#[cfg_attr(all(feature = "simd", target_arch = "x86_64"), allow(dead_code))]
+fn lerp_flat_chunked(global: &mut [f32], local: &[f32], beta: f32) {
+    let b = beta;
+    let a = 1.0 - beta;
+    let mut gc = global.chunks_exact_mut(KERNEL_CHUNK);
+    let mut lc = local.chunks_exact(KERNEL_CHUNK);
+    for (gs, ls) in gc.by_ref().zip(lc.by_ref()) {
+        for k in 0..KERNEL_CHUNK {
+            gs[k] = b * gs[k] + a * ls[k];
+        }
+    }
+    for (x, y) in gc.into_remainder().iter_mut().zip(lc.remainder()) {
+        *x = b * *x + a * *y;
+    }
+}
+
+#[cfg_attr(all(feature = "simd", target_arch = "x86_64"), allow(dead_code))]
+fn axpy_flat_chunked(acc: &mut [f32], other: &[f32], w: f32) {
+    let mut ac = acc.chunks_exact_mut(KERNEL_CHUNK);
+    let mut oc = other.chunks_exact(KERNEL_CHUNK);
+    for (xs, ys) in ac.by_ref().zip(oc.by_ref()) {
+        for k in 0..KERNEL_CHUNK {
+            xs[k] += w * ys[k];
+        }
+    }
+    for (x, y) in ac.into_remainder().iter_mut().zip(oc.remainder()) {
+        *x += w * *y;
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn lerp_flat_sse2(global: &mut [f32], local: &[f32], beta: f32) {
+    use std::arch::x86_64::*;
+    let b = beta;
+    let a = 1.0 - beta;
+    let n = global.len();
+    let head = n - n % 4;
+    // SAFETY: SSE2 is baseline on x86_64; unaligned loads/stores
+    // (`loadu`/`storeu`) over in-bounds ranges (idx + 4 <= head <= n).
+    // `_mm_mul_ps`/`_mm_add_ps` round each lane exactly like the scalar
+    // f32 mul/add — no FMA contraction — so lanes match the reference.
+    unsafe {
+        let vb = _mm_set1_ps(b);
+        let va = _mm_set1_ps(a);
+        let mut idx = 0;
+        while idx < head {
+            let vx = _mm_loadu_ps(global.as_ptr().add(idx));
+            let vy = _mm_loadu_ps(local.as_ptr().add(idx));
+            let r = _mm_add_ps(_mm_mul_ps(vb, vx), _mm_mul_ps(va, vy));
+            _mm_storeu_ps(global.as_mut_ptr().add(idx), r);
+            idx += 4;
+        }
+    }
+    for (x, y) in global[head..].iter_mut().zip(&local[head..]) {
+        *x = b * *x + a * *y;
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn axpy_flat_sse2(acc: &mut [f32], other: &[f32], w: f32) {
+    use std::arch::x86_64::*;
+    let n = acc.len();
+    let head = n - n % 4;
+    // SAFETY: as `lerp_flat_sse2` — baseline SSE2, unaligned in-bounds
+    // accesses, lane rounding identical to the scalar expression.
+    unsafe {
+        let vw = _mm_set1_ps(w);
+        let mut idx = 0;
+        while idx < head {
+            let vx = _mm_loadu_ps(acc.as_ptr().add(idx));
+            let vy = _mm_loadu_ps(other.as_ptr().add(idx));
+            let r = _mm_add_ps(vx, _mm_mul_ps(vw, vy));
+            _mm_storeu_ps(acc.as_mut_ptr().add(idx), r);
+            idx += 4;
+        }
+    }
+    for (x, y) in acc[head..].iter_mut().zip(&other[head..]) {
+        *x += w * *y;
+    }
+}
+
+/// Parallel [`lerp_flat`] over `threads` disjoint contiguous ranges
+/// (sizes differing by at most one), each run through the shipping
+/// kernel on its own scoped thread. Elementwise arithmetic has no
+/// cross-element dependency, so the split is bit-identical to one
+/// sequential pass at every thread count — the differential harness
+/// asserts it.
+///
+/// Worth it only for buffers far larger than the paper's models (the
+/// 431,080-param CNN lerps in well under a millisecond), which is why
+/// the engines call [`lerp_flat`] directly and this entry point exists
+/// for oversized models, the bench suite and the harness.
+pub fn lerp_flat_par(global: &mut [f32], local: &[f32], beta: f32, threads: usize) {
+    assert_eq!(global.len(), local.len(), "lerp over mismatched buffers");
+    let n = global.len();
+    let threads = threads.clamp(1, n.max(1));
+    if threads == 1 {
+        lerp_flat(global, local, beta);
+        return;
+    }
+    let base = n / threads;
+    let rem = n % threads;
+    std::thread::scope(|scope| {
+        let mut g = global;
+        let mut l = local;
+        for k in 0..threads {
+            let len = base + usize::from(k < rem);
+            // `take` moves the tail out so each head keeps the full
+            // scope lifetime (a plain reborrow would not outlive the
+            // loop body).
+            let (gh, gt) = std::mem::take(&mut g).split_at_mut(len);
+            let (lh, lt) = l.split_at(len);
+            g = gt;
+            l = lt;
+            scope.spawn(move || lerp_flat(gh, lh, beta));
+        }
+    });
+}
+
 /// Accumulate the squared L2 distance of two flat buffers into `acc`
 /// (element-sequential f64 accumulation, so callers chaining several
 /// tensor ranges through one accumulator reproduce the exact rounding
-/// of a single pass over the concatenated data).
+/// of a single pass over the concatenated data). Deliberately scalar:
+/// the accumulator is a serial dependency chain, and reassociating it
+/// (chunked partial sums, SIMD lanes, threads) would change the
+/// rounding — see the kernel-section comment above.
 pub fn l2_accumulate(acc: &mut f64, a: &[f32], b: &[f32]) {
     assert_eq!(a.len(), b.len(), "distance over mismatched buffers");
     for (x, y) in a.iter().zip(b) {
@@ -672,6 +856,69 @@ mod tests {
             assert_eq!(c, a, "beta={beta} (flat-local twin)");
         }
         assert_eq!(g.l2_distance(&l), g.l2_distance_flat(&lf));
+    }
+
+    /// Deterministic pseudo-random buffer for kernel equivalence checks
+    /// (no external RNG dependency inside the unit-test module).
+    fn noise(n: usize, seed: u32) -> Vec<f32> {
+        let mut state = seed.wrapping_mul(2654435761).max(1);
+        (0..n)
+            .map(|_| {
+                // xorshift32; map to roughly [-4, 4).
+                state ^= state << 13;
+                state ^= state >> 17;
+                state ^= state << 5;
+                (state as f32 / u32::MAX as f32) * 8.0 - 4.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn chunked_lerp_matches_scalar_reference_bitwise() {
+        for n in [0, 1, KERNEL_CHUNK - 1, KERNEL_CHUNK, KERNEL_CHUNK + 1, 777] {
+            let g0 = noise(n, 11);
+            let l = noise(n, 23);
+            for &beta in &[0.0f32, 0.31, 0.9, 1.0] {
+                let mut a = g0.clone();
+                lerp_flat(&mut a, &l, beta);
+                let mut b = g0.clone();
+                lerp_flat_scalar(&mut b, &l, beta);
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&a), bits(&b), "n={n} beta={beta}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_axpy_matches_scalar_reference_bitwise() {
+        for n in [0, 1, KERNEL_CHUNK - 1, KERNEL_CHUNK, KERNEL_CHUNK + 1, 777] {
+            let a0 = noise(n, 5);
+            let o = noise(n, 7);
+            for &w in &[0.0f32, -0.25, 0.125, 1.0] {
+                let mut a = a0.clone();
+                axpy_flat(&mut a, &o, w);
+                let mut b = a0.clone();
+                axpy_flat_scalar(&mut b, &o, w);
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&a), bits(&b), "n={n} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_lerp_matches_scalar_reference_at_every_thread_count() {
+        for n in [0, 1, 5, 64, 1000] {
+            let g0 = noise(n, 3);
+            let l = noise(n, 9);
+            let mut expect = g0.clone();
+            lerp_flat_scalar(&mut expect, &l, 0.4);
+            for threads in [1, 2, 3, 8, 64] {
+                let mut got = g0.clone();
+                lerp_flat_par(&mut got, &l, 0.4, threads);
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&got), bits(&expect), "n={n} threads={threads}");
+            }
+        }
     }
 
     #[test]

@@ -1,11 +1,12 @@
 //! The pinned-seed performance suite behind `repro bench`: the repo's
 //! perf trajectory as machine-readable `BENCH_<date>.json` records.
 //!
-//! Seven suites cover the hot paths this crate optimizes:
+//! Eight suites cover the hot paths this crate optimizes:
 //!
 //! | Suite         | Cases                              | What it measures |
 //! |---------------|------------------------------------|------------------|
 //! | `aggregation` | `lerp_<n>`, `arena_cycle_<n>`      | eq.-(3) flat kernel throughput; arena alloc/copy/free recycling |
+//! | `kernels`     | `lerp_scalar_<n>`, `lerp_<n>`, `axpy_scalar_<n>`, `axpy_<n>`, `lerp_par4_<n>`, `l2_<n>` | every flat-kernel variant (`model::params`) head-to-head: the retained scalar references, the shipping dispatcher (chunked, or SSE2 under `--features simd`), the 4-thread parallel lerp, and the deliberately-scalar l2 chain |
 //! | `scheduler`   | `<policy>_<m>`                     | request+grant drain of the heap/cursor fast paths |
 //! | `event_loop`  | `sim_<m>_clients`                  | full coordinator event loop (`coordinator::scale`), ns per event |
 //! | `end_to_end`  | `grid_2x_gamma`                    | tiny learner-driven grid through the `PlanRunner` |
@@ -46,8 +47,9 @@ use crate::util::rng::Rng;
 pub const BENCH_SCHEMA: &str = "csmaafl-bench-v1";
 
 /// The suite names, in run order (the `--suite` filter vocabulary).
-pub const SUITES: [&str; 7] = [
+pub const SUITES: [&str; 8] = [
     "aggregation",
+    "kernels",
     "scheduler",
     "event_loop",
     "end_to_end",
@@ -129,6 +131,58 @@ fn suite_aggregation(quick: bool) -> Vec<Case> {
         clients: 0,
         shards: None,
     });
+    out
+}
+
+/// The `kernels` suite: the flat-kernel variants of `model::params`
+/// head-to-head at the two pinned model sizes. `lerp_<n>`/`axpy_<n>`
+/// measure the shipping dispatcher (the chunked loops, or the SSE2
+/// path under `--features simd`), `*_scalar_<n>` the retained
+/// references, `lerp_par4_<n>` the 4-thread parallel lerp (thread
+/// count pinned so the case name is machine-independent), and `l2_<n>`
+/// the deliberately-scalar f64 distance chain. Every variant is
+/// bit-identical to its reference by the `rust/tests/properties.rs`
+/// harness, so this suite is pure throughput — the vectorization win
+/// recorded as a ratio against the scalar rows.
+fn suite_kernels(quick: bool) -> Vec<Case> {
+    use crate::model::{axpy_flat, axpy_flat_scalar, l2_accumulate, lerp_flat_par, lerp_flat_scalar};
+    let mut out = Vec::new();
+    let mut b = bencher("kernels", quick);
+    let mut push = |name: String, r: &crate::util::bench::CaseResult| {
+        out.push(Case {
+            name,
+            iters: r.iters,
+            ns_per_iter: r.mean_ns,
+            clients: 0,
+            shards: None,
+        });
+    };
+    for &n in &[5_370usize, 431_080] {
+        let mut acc = random_flat(n, 21);
+        let other = random_flat(n, 22);
+        let name = format!("lerp_scalar_{n}");
+        let r = b.bench(&name, || lerp_flat_scalar(&mut acc, &other, 0.9));
+        push(name, r);
+        let name = format!("lerp_{n}");
+        let r = b.bench(&name, || lerp_flat(&mut acc, &other, 0.9));
+        push(name, r);
+        let name = format!("axpy_scalar_{n}");
+        let r = b.bench(&name, || axpy_flat_scalar(&mut acc, &other, 0.25));
+        push(name, r);
+        let name = format!("axpy_{n}");
+        let r = b.bench(&name, || axpy_flat(&mut acc, &other, 0.25));
+        push(name, r);
+        let name = format!("lerp_par4_{n}");
+        let r = b.bench(&name, || lerp_flat_par(&mut acc, &other, 0.9, 4));
+        push(name, r);
+        let name = format!("l2_{n}");
+        let r = b.bench(&name, || {
+            let mut d = 0.0f64;
+            l2_accumulate(&mut d, std::hint::black_box(&acc), &other);
+            std::hint::black_box(d);
+        });
+        push(name, r);
+    }
     out
 }
 
@@ -415,7 +469,7 @@ pub fn run(cfg: &BenchConfig) -> Result<Json> {
         ensure!(
             SUITES.contains(&s.as_str()),
             "unknown suite {s:?} \
-             (aggregation|scheduler|event_loop|end_to_end|sharded|submodel|net)"
+             (aggregation|kernels|scheduler|event_loop|end_to_end|sharded|submodel|net)"
         );
     }
     let selected = |name: &str| match cfg.suite.as_deref() {
@@ -425,6 +479,9 @@ pub fn run(cfg: &BenchConfig) -> Result<Json> {
     let mut suites = Json::object();
     if selected("aggregation") {
         suites.set("aggregation", cases_json(suite_aggregation(cfg.quick)));
+    }
+    if selected("kernels") {
+        suites.set("kernels", cases_json(suite_kernels(cfg.quick)));
     }
     if selected("scheduler") {
         suites.set("scheduler", cases_json(suite_scheduler(cfg.quick)));
@@ -785,6 +842,21 @@ mod tests {
             names,
             ["extract_5370", "merge_5370", "merge_lerp_5370", "extract_431080",
              "merge_431080", "merge_lerp_431080"]
+        );
+        for c in &cases {
+            assert!(c.iters > 0 && c.ns_per_iter > 0.0, "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn kernels_suite_emits_schema_shaped_cases() {
+        let cases = suite_kernels(true);
+        let names: Vec<&str> = cases.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(
+            names,
+            ["lerp_scalar_5370", "lerp_5370", "axpy_scalar_5370", "axpy_5370",
+             "lerp_par4_5370", "l2_5370", "lerp_scalar_431080", "lerp_431080",
+             "axpy_scalar_431080", "axpy_431080", "lerp_par4_431080", "l2_431080"]
         );
         for c in &cases {
             assert!(c.iters > 0 && c.ns_per_iter > 0.0, "{}", c.name);

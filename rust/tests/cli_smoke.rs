@@ -712,6 +712,95 @@ fn bench_writes_schema_valid_record_and_checks_against_baseline() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+// ------------------------------------------------------ train --shards
+
+#[test]
+fn train_rejects_zero_or_malformed_shards_before_data_generation() {
+    // `--shards` is validated in apply_train_shards, ahead of
+    // Session::new (dataset synthesis) and the output directory — a bad
+    // value must leave the scratch directory untouched.
+    let dir = scratch_dir("train_shards_bad");
+    for bad in ["0", "many", "-2"] {
+        let out = repro(&[
+            "train", "--shards", bad, "--out", dir.to_str().unwrap(),
+            "--learner", "linear",
+            "--set", "clients=2", "--set", "samples_per_client=4",
+            "--set", "test_samples=10", "--set", "local_steps=1",
+            "--set", "max_slots=1",
+        ]);
+        assert!(!out.status.success(), "--shards {bad} must fail");
+        assert!(stderr(&out).contains("--shards"), "{bad}: {}", stderr(&out));
+        assert_eq!(
+            std::fs::read_dir(&dir).unwrap().count(),
+            0,
+            "--shards {bad} must fail before anything is written"
+        );
+    }
+    // The config spelling is validated the same way.
+    let out = repro(&["train", "--set", "shards=0", "--learner", "linear"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("shards"), "{}", stderr(&out));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn train_surfaces_the_shard_count_in_the_run_json() {
+    let dir = scratch_dir("train_shards_json");
+    let base_args = [
+        "--out", dir.to_str().unwrap(), "--learner", "linear",
+        "--set", "clients=2", "--set", "samples_per_client=4",
+        "--set", "test_samples=10", "--set", "local_steps=1",
+        "--set", "max_slots=1",
+    ];
+    // Explicit --shards lands verbatim in the full record.
+    let mut args = vec!["train", "--shards", "2", "--label", "explicit"];
+    args.extend_from_slice(&base_args);
+    let out = repro(&args);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let json = std::fs::read_to_string(dir.join("explicit.json")).unwrap();
+    let j = csmaafl::util::json::parse(&json).unwrap();
+    assert_eq!(j.get("shards").unwrap().as_i64(), Some(2));
+
+    // The default (`auto` = all cores, clamped to the client count) is
+    // surfaced too, never silent.
+    let mut args = vec!["train", "--label", "auto"];
+    args.extend_from_slice(&base_args);
+    let out = repro(&args);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let json = std::fs::read_to_string(dir.join("auto.json")).unwrap();
+    let j = csmaafl::util::json::parse(&json).unwrap();
+    let shards = j.get("shards").unwrap().as_i64().unwrap();
+    assert!((1..=2).contains(&shards), "auto clamps to [1, clients]: {shards}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn jobs_times_shards_oversubscription_is_rejected_with_both_flags_named() {
+    // An absurd product can never fit any machine; the error must name
+    // both knobs so the fix is obvious, and fire before data generation.
+    let dir = scratch_dir("oversub");
+    let out = repro(&[
+        "compare", "--jobs", "2", "--shards", "1000000",
+        "--out", dir.to_str().unwrap(),
+        "--learner", "linear",
+        "--set", "clients=2", "--set", "samples_per_client=4",
+        "--set", "test_samples=10", "--set", "max_slots=1",
+    ]);
+    assert!(!out.status.success());
+    let err = stderr(&out);
+    assert!(err.contains("--jobs"), "{err}");
+    assert!(err.contains("--shards"), "{err}");
+    assert!(err.contains("oversubscribes"), "{err}");
+    assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 0, "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn usage_mentions_train_shards_flag() {
+    let usage = stdout(&repro(&[]));
+    assert!(usage.contains("--shards"), "{usage}");
+}
+
 #[test]
 fn verbosity_flags_are_accepted() {
     // -q / -v must parse (they mutate global logger state, not config).

@@ -9,7 +9,9 @@ use csmaafl::coordinator::{
     run_scale_sim, NativeAggregator, ScaleSimConfig, ServerCore, StalenessEq11,
 };
 use csmaafl::model::{
-    finalize_overlap_mean, ParamArena, ParamLayout, ParamSet, SubmodelMap, Tensor, TensorSpec,
+    axpy_flat, axpy_flat_scalar, finalize_overlap_mean, lerp_flat, lerp_flat_par,
+    lerp_flat_scalar, ParamArena, ParamLayout, ParamSet, SubmodelMap, Tensor, TensorSpec,
+    KERNEL_CHUNK,
 };
 use csmaafl::sim::EventQueue;
 use csmaafl::util::json::{self, Json};
@@ -377,6 +379,154 @@ fn inplace_aggregation_equals_clone_based_aggregation_bitwise() {
         assert_eq!(core_flat.iteration(), j);
         assert_eq!(arena.live(), 0, "every slot recycled");
         assert_eq!(arena.slots(), 1, "steady state reuses one slot");
+    }
+}
+
+// -------------------------------------------------------------- kernels
+//
+// Differential harness for the flat-kernel variants in `model::params`.
+// The retained straight-line loops (`lerp_flat_scalar`, `axpy_flat_scalar`)
+// are the executable reference; every other variant — the chunked
+// autovectorization-friendly dispatchers, the feature-gated SSE2 path
+// (this same file compiled under `--features simd` exercises it, since
+// the dispatcher IS the SSE2 path there), and the scoped-thread parallel
+// lerp — must match it bit for bit. Lengths sweep the chunking edge
+// cases (0, 1, chunk−1, chunk, chunk+1, large-and-odd), and every case
+// also runs on offset subslices so alignment is fuzzed, not assumed.
+
+/// Kernel-edge lengths: empty, single, around the chunk boundary, a few
+/// chunks plus a remainder, and large-and-odd.
+fn kernel_lengths() -> Vec<usize> {
+    vec![
+        0,
+        1,
+        KERNEL_CHUNK - 1,
+        KERNEL_CHUNK,
+        KERNEL_CHUNK + 1,
+        3 * KERNEL_CHUNK + 5,
+        255,
+        777,
+        4097,
+    ]
+}
+
+fn random_flat(r: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| r.normal()).collect()
+}
+
+/// The chunked/SIMD lerp dispatcher equals the scalar reference bit for
+/// bit at every edge length, beta, and subslice offset.
+#[test]
+fn lerp_flat_matches_scalar_reference_bitwise() {
+    let mut r = Rng::new(401);
+    for n in kernel_lengths() {
+        for beta in [0.0f32, 0.31, 0.9, 1.0, r.f32()] {
+            for off in [0usize, 1, 3] {
+                let off = off.min(n);
+                let g0 = random_flat(&mut r, n);
+                let l = random_flat(&mut r, n);
+                let mut want = g0.clone();
+                lerp_flat_scalar(&mut want[off..], &l[off..], beta);
+                let mut got = g0.clone();
+                lerp_flat(&mut got[off..], &l[off..], beta);
+                assert!(
+                    got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "n {n} beta {beta} off {off}"
+                );
+            }
+        }
+    }
+}
+
+/// The chunked/SIMD axpy dispatcher equals the scalar reference bit for
+/// bit at every edge length, weight, and subslice offset.
+#[test]
+fn axpy_flat_matches_scalar_reference_bitwise() {
+    let mut r = Rng::new(409);
+    for n in kernel_lengths() {
+        for w in [0.0f32, 0.25, 1.0, -0.7, r.f32()] {
+            for off in [0usize, 1, 3] {
+                let off = off.min(n);
+                let a0 = random_flat(&mut r, n);
+                let b = random_flat(&mut r, n);
+                let mut want = a0.clone();
+                axpy_flat_scalar(&mut want[off..], &b[off..], w);
+                let mut got = a0.clone();
+                axpy_flat(&mut got[off..], &b[off..], w);
+                assert!(
+                    got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "n {n} w {w} off {off}"
+                );
+            }
+        }
+    }
+}
+
+/// The scoped-thread parallel lerp equals the scalar reference bit for
+/// bit at any thread count (including counts exceeding the length) —
+/// eq. (3) is elementwise, so the split cannot change a single rounding.
+#[test]
+fn parallel_lerp_matches_scalar_reference_bitwise() {
+    let mut r = Rng::new(419);
+    for n in kernel_lengths() {
+        for threads in [1usize, 2, 3, 4, 7] {
+            let beta = r.f32();
+            let g0 = random_flat(&mut r, n);
+            let l = random_flat(&mut r, n);
+            let mut want = g0.clone();
+            lerp_flat_scalar(&mut want, &l, beta);
+            let mut got = g0.clone();
+            lerp_flat_par(&mut got, &l, beta, threads);
+            assert!(
+                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "n {n} threads {threads}"
+            );
+        }
+    }
+}
+
+/// `merge_lerp_set` (which routes through the dispatcher per covered
+/// slice) equals a hand-rolled per-element scalar loop bit for bit, and
+/// leaves uncovered elements untouched — at fuzzed layouts and rates.
+#[test]
+fn merge_lerp_set_matches_scalar_reference_bitwise() {
+    for seed in 0..60u64 {
+        let mut r = Rng::new(seed * 19 + 421);
+        let layout = random_layout(&mut r);
+        let rate = 0.05 + 0.95 * r.f64();
+        let map = SubmodelMap::new(&layout, rate);
+        let mut g = ParamSet::zeros(layout.specs());
+        for t in &mut g.tensors {
+            for v in &mut t.data {
+                *v = r.normal();
+            }
+        }
+        let sub: Vec<f32> = (0..map.numel()).map(|_| r.normal()).collect();
+        let beta = r.f32();
+
+        let mut want = g.clone();
+        let mut off = 0usize;
+        for (t, s) in want.tensors.iter_mut().zip(map.slices()) {
+            for e in 0..s.keep {
+                let x = t.data[e];
+                let y = sub[off + e];
+                t.data[e] = beta * x + (1.0 - beta) * y;
+            }
+            off += s.keep;
+        }
+
+        let mut got = g.clone();
+        map.merge_lerp_set(&mut got, &sub, beta);
+        for ((tg, tw), s) in got.tensors.iter().zip(&want.tensors).zip(map.slices()) {
+            for e in 0..s.full_len {
+                assert_eq!(
+                    tg.data[e].to_bits(),
+                    tw.data[e].to_bits(),
+                    "seed {seed} elem {e} (keep {})",
+                    s.keep
+                );
+            }
+        }
     }
 }
 

@@ -1,14 +1,23 @@
-//! The sharded-coordinator determinism contract (the headline invariant
-//! of `coordinator::shard`): `--shards N` is bit-identical to
-//! `--shards 1` and to the sequential pre-shard reference loop in
-//! `coordinator::scale` — same deterministic summary JSON, same final
-//! global model to the last bit — across schedulers, aggregation
-//! policies, scenarios and random configuration mixes. Thread count may
-//! only ever change wall-clock.
+//! The sharded-coordinator determinism contract, for BOTH engine pairs:
+//!
+//! - `coordinator::shard` vs the sequential `coordinator::scale` loop
+//!   (the synthetic `repro sim` path), and
+//! - `coordinator::learner_shard` vs the sequential `coordinator::afl`
+//!   loop (the real-learner `repro train` path).
+//!
+//! In each pair `--shards N` is bit-identical to `--shards 1` and to
+//! the sequential reference — same deterministic summary JSON, same
+//! final global model to the last bit — across schedulers, aggregation
+//! policies, scenarios, capacity profiles and random configuration
+//! mixes. Thread count may only ever change wall-clock.
 
+use csmaafl::config::RunConfig;
 use csmaafl::coordinator::{
-    run_scale_sim_full, run_sharded_sim_full, ScaleSimConfig, SchedulerPolicy,
+    resolve_policy, run_afl_full, run_afl_sharded_full, run_scale_sim_full,
+    run_sharded_sim_full, FlContext, ScaleSimConfig, SchedulerPolicy,
 };
+use csmaafl::metrics::RunResult;
+use csmaafl::session::{LearnerKind, Session};
 use csmaafl::sim::HeterogeneityProfile;
 use csmaafl::util::rng::Rng;
 
@@ -241,4 +250,129 @@ fn shard_count_beyond_clients_is_clamped_not_divergent() {
     assert_eq!(r.shards, 5, "clamped to the client count");
     assert_eq!(r.summary_json().to_string_compact(), r_ref.summary_json().to_string_compact());
     assert_eq!(w, w_ref);
+}
+
+// -------------------------------------------------- learner engine pair
+//
+// The same contract for the real-learner pair: `coordinator::afl` is
+// the executable spec, `coordinator::learner_shard` must match it bit
+// for bit at any shard count. These runs train an actual linear model
+// (softmax regression on the synthetic set), so the configs are tiny —
+// the point is coverage of the decision surface, not scale.
+
+/// Tiny real-training base config for the learner-engine matrix.
+fn learner_cfg() -> RunConfig {
+    RunConfig {
+        clients: 6,
+        samples_per_client: 10,
+        test_samples: 30,
+        local_steps: 2,
+        max_slots: 3.0,
+        ..RunConfig::default()
+    }
+}
+
+/// Run the sequential learner engine and the sharded twin at several
+/// shard counts, asserting the full bit-identity contract. Returns the
+/// reference result for further inspection.
+fn assert_learner_bit_identical(cfg: RunConfig, label: &str) -> RunResult {
+    let s = Session::new(cfg, LearnerKind::Linear, "artifacts").unwrap();
+    let ctx = FlContext {
+        cfg: &s.cfg,
+        learner: s.learner(),
+        engine: s.engine(),
+        train: &s.train,
+        shards: &s.shards,
+        test: &s.test,
+    };
+    let (policy, lbl) = resolve_policy(&s.cfg).unwrap();
+    let (r_ref, w_ref) = run_afl_full(&ctx, policy, s.cfg.scheduler, lbl).unwrap();
+    let summary = r_ref.summary_json().to_string_compact();
+    for shards in [1usize, 2, 4] {
+        let (policy, lbl) = resolve_policy(&s.cfg).unwrap();
+        let (r, w) = run_afl_sharded_full(&ctx, policy, s.cfg.scheduler, lbl, shards).unwrap();
+        assert_eq!(
+            r.summary_json().to_string_compact(),
+            summary,
+            "{label}: summary diverged at shards={shards}"
+        );
+        assert_eq!(w, w_ref, "{label}: final model diverged at shards={shards}");
+        assert_eq!(w.max_abs_diff(&w_ref), 0.0, "{label}: shards={shards}");
+    }
+    r_ref
+}
+
+#[test]
+fn learner_engine_matrix_is_shard_invariant() {
+    // The acceptance matrix from the issue: 3 schedulers x 2
+    // aggregation policies x 2 scenarios, under the full-model profile
+    // AND a three-class capacity mix. Real `Learner::train` calls on
+    // every path.
+    for scheduler in [
+        SchedulerPolicy::OldestModelFirst,
+        SchedulerPolicy::Fifo,
+        SchedulerPolicy::RoundRobin,
+    ] {
+        for aggregation in [None, Some("adaptive".to_string())] {
+            for scenario in [None, Some("dropout:0.15".to_string())] {
+                for capacity in [None, Some("classes:1.0x0.5,0.5x0.3,0.25x0.2".to_string())] {
+                    let cfg = RunConfig {
+                        scheduler,
+                        aggregation: aggregation.clone(),
+                        scenario: scenario.clone(),
+                        capacity: capacity.clone(),
+                        ..learner_cfg()
+                    };
+                    let label = format!(
+                        "{scheduler:?}/{aggregation:?}/{scenario:?}/{capacity:?}"
+                    );
+                    let r = assert_learner_bit_identical(cfg, &label);
+                    if capacity.is_some() {
+                        assert_eq!(r.classes.len(), 3, "{label}: expected class cells");
+                    } else {
+                        assert!(r.classes.is_empty(), "{label}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn learner_engine_loss_accounting_is_shard_invariant_under_upload_loss() {
+    // The one reordering the sharded learner engine allows is *when*
+    // per-client training losses are recorded; `upload_loss` plus a
+    // dropout world maximises in-flight trainings at the horizon, so
+    // this pins the record-at-join/drain bookkeeping (mean_train_loss
+    // lives in the summary) against the record-at-train spec.
+    let cfg = RunConfig {
+        upload_loss: 0.2,
+        scenario: Some("churn:0.4,2".to_string()),
+        max_slots: 4.0,
+        ..learner_cfg()
+    };
+    let r = assert_learner_bit_identical(cfg, "upload_loss=0.2/churn");
+    assert!(r.lost_uploads > 0, "expected transit losses");
+    assert!(r.mean_train_loss > 0.0, "losses must be recorded");
+}
+
+#[test]
+fn learner_engine_shard_count_is_surfaced_in_the_full_record_only() {
+    let s = Session::new(learner_cfg(), LearnerKind::Linear, "artifacts").unwrap();
+    let ctx = FlContext {
+        cfg: &s.cfg,
+        learner: s.learner(),
+        engine: s.engine(),
+        train: &s.train,
+        shards: &s.shards,
+        test: &s.test,
+    };
+    let (policy, lbl) = resolve_policy(&s.cfg).unwrap();
+    let (r, _) = run_afl_sharded_full(&ctx, policy, s.cfg.scheduler, lbl, 3).unwrap();
+    assert_eq!(r.shards, 3);
+    assert_eq!(r.to_json().get("shards").and_then(|j| j.as_i64()), Some(3));
+    assert!(
+        r.summary_json().get("shards").is_none(),
+        "shard count is machine-dependent under auto and must stay out of the summary"
+    );
 }
