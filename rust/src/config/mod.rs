@@ -9,7 +9,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::policy::{AggregationPolicy, PolicyParams};
 use crate::coordinator::scheduler::SchedulerPolicy;
 use crate::data::{Partition, SynthKind};
-use crate::sim::{capacity, scenario, HeterogeneityProfile, TimeModel};
+use crate::sim::{capacity, channel, scenario, HeterogeneityProfile, TimeModel};
 use crate::util::json::{self, Json};
 
 /// Which federated algorithm to run.
@@ -131,6 +131,13 @@ pub struct RunConfig {
     /// every client at rate 1.0 and is bit-identical to the
     /// pre-submodel engines.
     pub capacity: Option<String>,
+    /// Fading-channel registry spelling (e.g. `markov:0.5,500`) giving
+    /// each client a block-fading link that scales upload time and
+    /// drives correlated transmission failures; `None` (spelled
+    /// `ideal`) keeps every link perfect and is bit-identical to the
+    /// pre-channel engines. Simulation-only: `repro serve`/`join`
+    /// reject it (deployment uses real links).
+    pub channel: Option<String>,
     /// Upload-slot arbitration policy (AFL engines).
     pub scheduler: SchedulerPolicy,
     /// Worker threads for the learner-driven AFL engines (`repro
@@ -177,6 +184,7 @@ impl Default for RunConfig {
             aggregation: None,
             scenario: None,
             capacity: None,
+            channel: None,
             scheduler: SchedulerPolicy::OldestModelFirst,
             shards: None,
             upload_loss: 0.0,
@@ -260,6 +268,21 @@ impl RunConfig {
                 "capacity profiles apply only to the event-driven AFL \
                  engines (afl-naive/csmaafl); algorithm {} trains full \
                  models",
+                self.algorithm.name()
+            );
+        }
+        let fading = channel::resolve(self.channel.as_deref())?;
+        if !fading.is_trivial()
+            && !matches!(self.algorithm, Algorithm::AflNaive | Algorithm::Csmaafl)
+        {
+            // Only the event-driven AFL engines consult the channel
+            // process; SFL and solved-β presume the TDMA slot structure
+            // of an ideal link, so accepting the model would silently
+            // simulate a different medium.
+            bail!(
+                "channel models apply only to the event-driven AFL \
+                 engines (afl-naive/csmaafl); algorithm {} assumes an \
+                 ideal channel",
                 self.algorithm.name()
             );
         }
@@ -360,6 +383,16 @@ impl RunConfig {
                     Some(val.to_string())
                 }
             }
+            // Channel spellings are validated against the registry in
+            // `validate`; `ideal` is the pinned default, stored as None
+            // so provenance roundtrips.
+            "channel" => {
+                self.channel = if val.eq_ignore_ascii_case("ideal") {
+                    None
+                } else {
+                    Some(val.to_string())
+                }
+            }
             "scheduler" => self.scheduler = SchedulerPolicy::parse(val).ok_or_else(badval)?,
             // Learner-engine worker count; `auto` (all cores) is the
             // pinned default, stored as None so provenance roundtrips.
@@ -421,6 +454,10 @@ impl RunConfig {
                 "capacity",
                 Json::Str(self.capacity.clone().unwrap_or_else(|| "full".into())),
             )
+            .set(
+                "channel",
+                Json::Str(self.channel.clone().unwrap_or_else(|| "ideal".into())),
+            )
             .set("scheduler", Json::Str(self.scheduler.name().into()))
             .set(
                 "shards",
@@ -473,6 +510,10 @@ mod tests {
         assert_eq!(c.capacity.as_deref(), Some("classes:1.0x0.5,0.5x0.5"));
         c.set_field("capacity", "full").unwrap();
         assert_eq!(c.capacity, None);
+        c.set_field("channel", "markov:0.5,500").unwrap();
+        assert_eq!(c.channel.as_deref(), Some("markov:0.5,500"));
+        c.set_field("channel", "ideal").unwrap();
+        assert_eq!(c.channel, None);
         c.set_field("shards", "4").unwrap();
         assert_eq!(c.shards, Some(4));
         c.set_field("shards", "auto").unwrap();
@@ -563,6 +604,29 @@ mod tests {
     }
 
     #[test]
+    fn validation_catches_bad_channel_spec() {
+        let mut c = RunConfig {
+            channel: Some("bogus".into()),
+            ..RunConfig::default()
+        };
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("bogus"), "{err}");
+        c.channel = Some("markov:0.3,200".into());
+        c.validate().unwrap();
+        // Engines with no channel hooks must refuse the model rather
+        // than silently simulating a perfect medium...
+        c.algorithm = Algorithm::Sfl;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("ideal channel"), "{err}");
+        c.algorithm = Algorithm::AflBaseline;
+        assert!(c.validate().is_err());
+        // ...but the trivial spelling is fine everywhere (it IS the
+        // perfect medium those engines presume).
+        c.channel = Some("ideal".into());
+        c.validate().unwrap();
+    }
+
+    #[test]
     fn from_json_full() {
         let j = json::parse(
             r#"{"algorithm": "csmaafl", "clients": 10, "gamma": 0.6,
@@ -615,6 +679,7 @@ mod tests {
             aggregation: Some("fedasync:0.5,0.9".into()),
             scenario: Some("drift:8,2.5".into()),
             capacity: Some("classes:1.0x0.5,0.5x0.5".into()),
+            channel: Some("markov:0.5,500".into()),
             scheduler: SchedulerPolicy::RoundRobin,
             shards: Some(3),
             jitter: 0.25,

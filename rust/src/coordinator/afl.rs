@@ -46,7 +46,11 @@ use crate::data::Dataset;
 use crate::learner::BatchCursor;
 use crate::metrics::{ClassMetrics, RunResult};
 use crate::model::{ParamLayout, ParamSet, SubmodelMap};
-use crate::sim::{capacity, scenario, ComputeModel, EventQueue, Scenario, Ticks, UplinkChannel};
+use crate::net::wire::flat_update_wire_bytes;
+use crate::sim::{
+    capacity, channel, scenario, ChannelState, ComputeModel, EventQueue, Scenario, Ticks,
+    UplinkChannel,
+};
 use crate::util::rng::Rng;
 
 /// The learner-driven engines' event vocabulary, shared with the
@@ -90,16 +94,33 @@ pub fn adaptive_steps(base: usize, factor: f64, enabled: bool) -> usize {
 /// its upload completion (the TDMA channel-grant step, shared by every
 /// place an upload can start or the channel can free up — and by the
 /// sharded twin in `coordinator::learner_shard`).
+///
+/// Under a fading channel the contenders' instantaneous gains are
+/// refreshed first (gain-sensitive arbitration reads them through the
+/// scheduler view) and the winner's slot is stretched by its gain; the
+/// trivial `ideal` model skips both, leaving the pre-channel timeline
+/// untouched.
 pub(super) fn grant_next(
     scheduler: &mut UploadScheduler,
     channel: &mut UplinkChannel,
+    fading: &mut ChannelState,
+    gains: &mut [f64],
     queue: &mut EventQueue<Event>,
     now: Ticks,
     tau_up_for: impl Fn(usize) -> Ticks,
 ) {
     if channel.is_free(now) {
-        if let Some(winner) = scheduler.grant() {
-            let done = channel.reserve(now, tau_up_for(winner));
+        let winner = if fading.is_trivial() {
+            scheduler.grant()
+        } else {
+            for r in scheduler.pending_clients() {
+                gains[r.client] = fading.gain(r.client, now);
+            }
+            scheduler.grant_with_gains(Some(gains))
+        };
+        if let Some(winner) = winner {
+            let dur = fading.scaled_tau(winner, now, tau_up_for(winner));
+            let done = channel.reserve(now, dur);
             queue.schedule_at(done, Event::UploadDone { client: winner });
         }
     }
@@ -181,6 +202,30 @@ pub fn run_afl_full(
         })
     ];
 
+    // The uplink fading model (`channel=<name[:params]>`). The trivial
+    // `ideal` default forks nothing and draws nothing, so default runs
+    // are bit-identical to the pre-channel engine.
+    let fading = channel::resolve(cfg.channel.as_deref())?;
+    let channel_label = fading.spec();
+    let mut chan: ChannelState = fading.bind(m, &root);
+    if cfg.channel.is_some() {
+        crate::log_info!("afl[{}]: channel {}", label, channel_label);
+    }
+    let mut gains: Vec<f64> = if chan.is_trivial() {
+        Vec::new()
+    } else {
+        vec![1.0; m]
+    };
+    // Upload frame size (wire-format bytes) per client: the full flat
+    // model, or the packed submodel prefix.
+    let full_numel: usize = w_init.tensors.iter().map(|t| t.data.len()).sum();
+    let numel_of = |client: usize| match &subctx {
+        None => full_numel,
+        Some(sc) => sc.map_of(client).numel(),
+    };
+    let mut bytes_on_wire = 0u64;
+    let mut channel_lost = 0u64;
+
     let mut core = ServerCore::new(w_init, m, policy, cfg.mu_rho);
     let mut queue: EventQueue<Event> = EventQueue::new();
     let mut channel = UplinkChannel::new();
@@ -255,21 +300,42 @@ pub fn run_afl_full(
                     continue;
                 }
                 scheduler.request(client, now);
-                grant_next(&mut scheduler, &mut channel, &mut queue, now, tau_up_of);
+                grant_next(
+                    &mut scheduler,
+                    &mut channel,
+                    &mut chan,
+                    &mut gains,
+                    &mut queue,
+                    now,
+                    tau_up_of,
+                );
             }
             Event::UploadDone { client } => {
                 let (local, i) = clients[client]
                     .pending
                     .take()
                     .expect("upload without a pending local model");
-                // Failure injection (`upload_loss` knob or `dropout`
-                // scenario): the upload is lost in transit. The server
-                // never sees the model; it re-sends the current global
-                // so the client rejoins the loop. The scenario draw
-                // comes first and from its own stream, so it cannot
-                // perturb the legacy `upload_loss` sequence.
+                // The TDMA slot was held for the full transmission
+                // whether or not the payload survives, so the wire
+                // meter counts lost uploads too.
+                bytes_on_wire += flat_update_wire_bytes(numel_of(client));
+                // Failure injection (`upload_loss` knob, `dropout`
+                // scenario, or a channel fade): the upload is lost in
+                // transit. The server never sees the model; it re-sends
+                // the current global so the client rejoins the loop.
+                // The scenario and channel draws come first and from
+                // their own streams, so they cannot perturb the legacy
+                // `upload_loss` sequence (the trivial channel draws
+                // nothing at all).
                 let scenario_lost = world.upload_lost(client, now);
-                if scenario_lost || (cfg.upload_loss > 0.0 && jrng.f64() < cfg.upload_loss) {
+                let chan_lost = chan.upload_lost(client, now);
+                if chan_lost {
+                    channel_lost += 1;
+                }
+                if scenario_lost
+                    || chan_lost
+                    || (cfg.upload_loss > 0.0 && jrng.f64() < cfg.upload_loss)
+                {
                     core.on_lost_upload(client);
                     let i = core.issue_to(client);
                     queue.schedule_in(cfg.time.tau_down, Event::DownloadDone {
@@ -277,7 +343,15 @@ pub fn run_afl_full(
                         w: Arc::new(core.global().clone()),
                         i,
                     });
-                    grant_next(&mut scheduler, &mut channel, &mut queue, now, tau_up_of);
+                    grant_next(
+                        &mut scheduler,
+                        &mut channel,
+                        &mut chan,
+                        &mut gains,
+                        &mut queue,
+                        now,
+                        tau_up_of,
+                    );
                     continue;
                 }
                 // Evaluate cadence points that precede this aggregation.
@@ -306,7 +380,15 @@ pub fn run_afl_full(
                     i,
                 });
                 // Channel freed: grant the next contender, if any.
-                grant_next(&mut scheduler, &mut channel, &mut queue, now, tau_up_of);
+                grant_next(
+                    &mut scheduler,
+                    &mut channel,
+                    &mut chan,
+                    &mut gains,
+                    &mut queue,
+                    now,
+                    tau_up_of,
+                );
             }
         }
     }
@@ -376,6 +458,9 @@ pub fn run_afl_full(
         lost_per_client: core.lost_per_client().to_vec(),
         mean_train_loss: core.mean_train_loss(),
         classes,
+        channel: channel_label,
+        bytes_on_wire,
+        channel_lost,
         total_ticks: max_ticks,
     };
     Ok((rec.into_result(stats), core.into_global()))

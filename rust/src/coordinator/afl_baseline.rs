@@ -123,6 +123,9 @@ pub fn run_afl_baseline(ctx: &FlContext<'_>) -> Result<RunResult> {
         lost_per_client: vec![0; m],
         mean_train_loss: core.mean_train_loss(),
         classes: Vec::new(), // capacity is AFL-only (RunConfig::validate)
+        channel: "ideal".into(), // and so are channel models
+        bytes_on_wire: 0,
+        channel_lost: 0,
         total_ticks: max_ticks,
     };
     Ok(rec.into_result(stats))

@@ -75,8 +75,10 @@ use crate::data::Dataset;
 use crate::learner::BatchCursor;
 use crate::metrics::{ClassMetrics, RunResult};
 use crate::model::{ParamLayout, ParamSet, SubmodelMap};
+use crate::net::wire::flat_update_wire_bytes;
 use crate::sim::{
-    capacity, scenario, ClientPartition, ComputeModel, EventQueue, Scenario, UplinkChannel,
+    capacity, channel, scenario, ChannelState, ClientPartition, ComputeModel, EventQueue,
+    Scenario, UplinkChannel,
 };
 use crate::util::rng::Rng;
 
@@ -176,6 +178,28 @@ pub fn run_afl_sharded_full(
             sc.maps.iter().map(|mp| mp.numel()).max().unwrap_or(0)
         })
     ];
+
+    // Uplink fading model — same resolution, fork and draw order as the
+    // sequential engine; the coordinator thread owns it like every
+    // other ordered decision input.
+    let fading = channel::resolve(cfg.channel.as_deref())?;
+    let channel_label = fading.spec();
+    let mut chan: ChannelState = fading.bind(m, &root);
+    if cfg.channel.is_some() {
+        crate::log_info!("afl[{}]: channel {}", label, channel_label);
+    }
+    let mut gains: Vec<f64> = if chan.is_trivial() {
+        Vec::new()
+    } else {
+        vec![1.0; m]
+    };
+    let full_numel: usize = w_init.tensors.iter().map(|t| t.data.len()).sum();
+    let numel_of = |client: usize| match &subctx {
+        None => full_numel,
+        Some(sc) => sc.map_of(client).numel(),
+    };
+    let mut bytes_on_wire = 0u64;
+    let mut channel_lost = 0u64;
 
     let partition = ClientPartition::new(m, shards);
     let k_shards = partition.shards();
@@ -293,7 +317,15 @@ pub fn run_afl_sharded_full(
                         continue;
                     }
                     scheduler.request(client, now);
-                    grant_next(&mut scheduler, &mut channel, &mut queue, now, tau_up_of);
+                    grant_next(
+                        &mut scheduler,
+                        &mut channel,
+                        &mut chan,
+                        &mut gains,
+                        &mut queue,
+                        now,
+                        tau_up_of,
+                    );
                 }
                 Event::UploadDone { client } => {
                     let i = pending[client]
@@ -317,9 +349,19 @@ pub fn run_afl_sharded_full(
                     let local = locals[client]
                         .take()
                         .expect("joined without a trained local model");
-                    // Loss draws in exact event order, after the join.
+                    // Wire meter + loss draws in exact event order,
+                    // after the join — same sequence as the sequential
+                    // spec (lost uploads still held the TDMA slot).
+                    bytes_on_wire += flat_update_wire_bytes(numel_of(client));
                     let scenario_lost = world.upload_lost(client, now);
-                    if scenario_lost || (cfg.upload_loss > 0.0 && jrng.f64() < cfg.upload_loss) {
+                    let chan_lost = chan.upload_lost(client, now);
+                    if chan_lost {
+                        channel_lost += 1;
+                    }
+                    if scenario_lost
+                        || chan_lost
+                        || (cfg.upload_loss > 0.0 && jrng.f64() < cfg.upload_loss)
+                    {
                         core.on_lost_upload(client);
                         let i = core.issue_to(client);
                         queue.schedule_in(cfg.time.tau_down, Event::DownloadDone {
@@ -327,7 +369,15 @@ pub fn run_afl_sharded_full(
                             w: Arc::new(core.global().clone()),
                             i,
                         });
-                        grant_next(&mut scheduler, &mut channel, &mut queue, now, tau_up_of);
+                        grant_next(
+                            &mut scheduler,
+                            &mut channel,
+                            &mut chan,
+                            &mut gains,
+                            &mut queue,
+                            now,
+                            tau_up_of,
+                        );
                         continue;
                     }
                     rec.catch_up(now, core.global(), core.iteration())?;
@@ -349,7 +399,15 @@ pub fn run_afl_sharded_full(
                         w: Arc::new(core.global().clone()),
                         i,
                     });
-                    grant_next(&mut scheduler, &mut channel, &mut queue, now, tau_up_of);
+                    grant_next(
+                        &mut scheduler,
+                        &mut channel,
+                        &mut chan,
+                        &mut gains,
+                        &mut queue,
+                        now,
+                        tau_up_of,
+                    );
                 }
             }
         }
@@ -433,6 +491,9 @@ pub fn run_afl_sharded_full(
             lost_per_client: core.lost_per_client().to_vec(),
             mean_train_loss: core.mean_train_loss(),
             classes,
+            channel: channel_label,
+            bytes_on_wire,
+            channel_lost,
             total_ticks: max_ticks,
         };
         Ok((rec.into_result(stats), core.into_global()))

@@ -342,6 +342,11 @@ pub struct SchedulerView<'a> {
     /// Slot index of each client's previous upload; `None` = never
     /// uploaded. Length = number of clients.
     pub last_slot: &'a [Option<u64>],
+    /// Instantaneous per-client channel gain (length = clients) when
+    /// the engine drives a fading channel (`sim::channel`); `None`
+    /// under an ideal channel. Engines refresh only the entries of
+    /// clients with a pending request; age/time policies ignore it.
+    pub gains: Option<&'a [f64]>,
 }
 
 /// Upload-slot arbitration: given the pending requests, pick which one
@@ -416,6 +421,43 @@ impl SchedulingPolicy for RoundRobin {
         let pos = pending.iter().position(|r| r.client == self.next)?;
         self.next = (self.next + 1) % view.last_slot.len().max(1);
         Some(pos)
+    }
+}
+
+/// Channel-aware arbitration (Hu et al., arXiv:2107.11415): weight model
+/// age against instantaneous link quality. Among pending requests the
+/// score `(last_slot + 1) / gain` is minimized — stale models push a
+/// client forward, a faded channel (small gain) holds it back — with
+/// ties broken by request time, then id. Never-uploaded clients score 0
+/// and always win their first slot. When the view carries no gains
+/// (ideal channel) every gain is 1 and the ordering degenerates to
+/// exactly [`OldestModelFirst`]'s `(last, requested_at, client)` key.
+#[derive(Debug, Default, Clone)]
+pub struct ChannelAware;
+
+impl ChannelAware {
+    fn score(r: &UploadRequest, view: &SchedulerView<'_>) -> f64 {
+        let age = view.last_slot[r.client].map_or(0.0, |s| s as f64 + 1.0);
+        let gain = view.gains.map_or(1.0, |g| g[r.client]);
+        age / gain
+    }
+}
+
+impl SchedulingPolicy for ChannelAware {
+    fn label(&self) -> &'static str {
+        "channel-aware"
+    }
+
+    fn pick(&mut self, pending: &[UploadRequest], view: &SchedulerView<'_>) -> Option<usize> {
+        pending
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                Self::score(a, view)
+                    .total_cmp(&Self::score(b, view))
+                    .then_with(|| (a.requested_at, a.client).cmp(&(b.requested_at, b.client)))
+            })
+            .map(|(i, _)| i)
     }
 }
 
@@ -538,5 +580,74 @@ mod tests {
         assert_eq!(Fifo.label(), "fifo");
         assert_eq!(OldestModelFirst.label(), "oldest");
         assert_eq!(RoundRobin::default().label(), "roundrobin");
+        assert_eq!(ChannelAware.label(), "channel-aware");
+    }
+
+    #[test]
+    fn channel_aware_matches_oldest_without_gains() {
+        // Ideal channel (no gains): the score ordering must reproduce
+        // oldest-model-first exactly, including both tie-break levels.
+        let last_slot = [Some(3), None, Some(1), Some(1)];
+        let pending = [
+            UploadRequest {
+                client: 0,
+                requested_at: 2,
+            },
+            UploadRequest {
+                client: 2,
+                requested_at: 9,
+            },
+            UploadRequest {
+                client: 3,
+                requested_at: 5,
+            },
+            UploadRequest {
+                client: 1,
+                requested_at: 7,
+            },
+        ];
+        let view = SchedulerView {
+            last_slot: &last_slot,
+            gains: None,
+        };
+        let mut ca = ChannelAware;
+        let mut omf = OldestModelFirst;
+        let mut rest: Vec<UploadRequest> = pending.to_vec();
+        while !rest.is_empty() {
+            let a = ca.pick(&rest, &view).unwrap();
+            let b = omf.pick(&rest, &view).unwrap();
+            assert_eq!(a, b, "{rest:?}");
+            rest.swap_remove(a);
+        }
+    }
+
+    #[test]
+    fn channel_aware_weighs_age_against_gain() {
+        // Client 0 is staler (slot 1 vs 4) but deeply faded; client 1's
+        // strong channel wins: 2/0.25 = 8 > 5/2 = 2.5.
+        let last_slot = [Some(1), Some(4)];
+        let gains = [0.25, 2.0];
+        let pending = [
+            UploadRequest {
+                client: 0,
+                requested_at: 0,
+            },
+            UploadRequest {
+                client: 1,
+                requested_at: 0,
+            },
+        ];
+        let view = SchedulerView {
+            last_slot: &last_slot,
+            gains: Some(&gains),
+        };
+        assert_eq!(ChannelAware.pick(&pending, &view), Some(1));
+        // A never-uploaded client scores 0 and beats any gain.
+        let last_slot = [None, Some(4)];
+        let view = SchedulerView {
+            last_slot: &last_slot,
+            gains: Some(&gains),
+        };
+        assert_eq!(ChannelAware.pick(&pending, &view), Some(0));
     }
 }

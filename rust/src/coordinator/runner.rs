@@ -86,6 +86,13 @@ pub struct RunStats {
     /// under the trivial `full`/`uniform:1.0` profile and for engines
     /// that do not support capacity).
     pub classes: Vec<ClassMetrics>,
+    /// Canonical channel-model spelling (`"ideal"` for engines without
+    /// a fading channel, e.g. SFL).
+    pub channel: String,
+    /// Upload payload that crossed the uplink, in wire-format bytes.
+    pub bytes_on_wire: u64,
+    /// Uploads lost to channel fades (subset of `lost_uploads`).
+    pub channel_lost: u64,
     /// Virtual completion time.
     pub total_ticks: Ticks,
 }
@@ -194,6 +201,9 @@ impl<'a> Recorder<'a> {
             lost_per_client: stats.lost_per_client,
             mean_train_loss: stats.mean_train_loss,
             classes: stats.classes,
+            channel: stats.channel,
+            bytes_on_wire: stats.bytes_on_wire,
+            channel_lost: stats.channel_lost,
             total_ticks: stats.total_ticks,
             wallclock_secs: wallclock,
             // Engines that ran multi-core overwrite this after assembly

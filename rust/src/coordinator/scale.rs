@@ -38,9 +38,10 @@ use super::core::ServerCore;
 use super::policy::{AggregationPolicy, PolicyParams, StalenessEq11};
 use super::scheduler::{SchedulerPolicy, UploadScheduler};
 use crate::model::{ParamArena, ParamLayout, ParamSet, SlotId, SubmodelMap, TensorSpec};
+use crate::net::wire::flat_update_wire_bytes;
 use crate::sim::{
-    capacity, scenario, CapacityProfile, ComputeModel, EventQueue, HeterogeneityProfile, Scenario,
-    Ticks, TimeModel, UplinkChannel,
+    capacity, channel, scenario, CapacityProfile, ChannelState, ComputeModel, EventQueue,
+    HeterogeneityProfile, Scenario, Ticks, TimeModel, UplinkChannel,
 };
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -69,6 +70,9 @@ pub struct ScaleSimConfig {
     /// Capacity-profile registry spelling (`sim::capacity`); `None` =
     /// the pinned `full` profile (every client trains the full model).
     pub capacity: Option<String>,
+    /// Fading-channel registry spelling (`sim::channel`); `None` = the
+    /// pinned `ideal` channel (gain 1.0, no channel losses).
+    pub channel: Option<String>,
     /// Eq.-(11) γ (also the registry default parameter).
     pub gamma: f64,
     /// μ_ji EMA rate.
@@ -99,6 +103,7 @@ impl Default for ScaleSimConfig {
             aggregation: None,
             scenario: None,
             capacity: None,
+            channel: None,
             gamma: 0.2,
             mu_rho: 0.1,
             local_steps: 48,
@@ -134,6 +139,7 @@ impl ScaleSimConfig {
             "aggregation" => self.aggregation = Some(val.to_string()),
             "scenario" => self.scenario = Some(val.to_string()),
             "capacity" => self.capacity = Some(val.to_string()),
+            "channel" => self.channel = Some(val.to_string()),
             "heterogeneity" => {
                 self.heterogeneity =
                     HeterogeneityProfile::parse(val).ok_or_else(|| bad("profile"))?;
@@ -141,7 +147,7 @@ impl ScaleSimConfig {
             other => anyhow::bail!(
                 "unknown sim field {other:?} (clients | iterations | params | seed | \
                  gamma | mu_rho | local_steps | train_passes | jitter | scheduler | \
-                 aggregation | scenario | capacity | heterogeneity)"
+                 aggregation | scenario | capacity | channel | heterogeneity)"
             ),
         }
         Ok(())
@@ -167,6 +173,7 @@ impl ScaleSimConfig {
         }
         scenario::resolve(self.scenario.as_deref())?;
         capacity::resolve(self.capacity.as_deref())?;
+        channel::resolve(self.channel.as_deref())?;
         Ok(())
     }
 }
@@ -288,6 +295,17 @@ pub struct ScaleSimReport {
     /// which case the summary JSON is byte-identical to a pre-submodel
     /// run.
     pub classes: Vec<CapacityClassCell>,
+    /// Channel-model spelling in force (`ideal` for the pinned
+    /// default).
+    pub channel: String,
+    /// Total upload bytes on the (simulated) wire — every completed
+    /// upload slot metered at the real frame size
+    /// ([`flat_update_wire_bytes`]), lost uploads included: the channel
+    /// was occupied either way.
+    pub bytes_on_wire: u64,
+    /// Uploads lost to channel fades specifically (subset of
+    /// `lost_uploads`; 0 under the ideal channel).
+    pub channel_lost: u64,
     /// Shard workers the run executed on (1 = the sequential reference
     /// path). Every other field except the wall-clock ones is
     /// bit-identical across shard counts (`rust/tests/sharded.rs`).
@@ -355,6 +373,14 @@ impl ScaleSimReport {
                 Json::Array(self.classes.iter().map(|c| c.to_json()).collect()),
             );
         }
+        // Channel fields likewise appear only under a non-trivial
+        // model, keeping `channel=ideal` summaries byte-identical to
+        // pre-channel records (`tests/sharded.rs` pins this too).
+        if self.channel != "ideal" {
+            o.set("channel", Json::Str(self.channel.clone()))
+                .set("bytes_on_wire", Json::Int(self.bytes_on_wire as i64))
+                .set("channel_lost", Json::Int(self.channel_lost as i64));
+        }
         o
     }
 
@@ -366,13 +392,23 @@ impl ScaleSimReport {
         o.set("shards", Json::Int(self.shards as i64))
             .set("wall_secs", Json::Float(self.wall_secs))
             .set("events_per_sec", Json::Float(self.events_per_sec))
-            .set("aggs_per_sec", Json::Float(self.aggs_per_sec));
+            .set("aggs_per_sec", Json::Float(self.aggs_per_sec))
+            // Full records always carry the channel provenance and the
+            // wire meter (idempotent re-set under a fading channel).
+            .set("channel", Json::Str(self.channel.clone()))
+            .set("bytes_on_wire", Json::Int(self.bytes_on_wire as i64));
         o
     }
 
     /// Human-readable table (the default `repro sim` output).
     pub fn table(&self) -> String {
         let mut out = self.base_table();
+        if self.channel != "ideal" {
+            out.push_str(&format!(
+                "\n{:<18} {} ({} bytes on wire, {} channel losses)",
+                "channel", self.channel, self.bytes_on_wire, self.channel_lost
+            ));
+        }
         for c in &self.classes {
             out.push_str(&format!(
                 "\n{:<18} {} clients, {} uploads, {} lost, mean loss {:.4}",
@@ -460,17 +496,35 @@ pub(crate) fn synth_train(buf: &mut [f32], delta: f32, passes: u32) {
 /// its upload completion (the same TDMA channel-grant step as the
 /// learner-driven engine). `tau_up_for` maps the winner to its upload
 /// duration — constant under the trivial capacity profile, scaled by
-/// the winner's submodel rate otherwise.
+/// the winner's submodel rate otherwise — which the fading channel then
+/// divides by the winner's instantaneous gain. Under a fading channel
+/// the contenders' gains are refreshed (into the caller's `gains`
+/// buffer, O(pending) per grant) so gain-sensitive policies
+/// (`channel-aware`) arbitrate on current link state; the trivial
+/// channel takes the exact pre-channel path.
 pub(crate) fn grant_next(
     scheduler: &mut UploadScheduler,
     channel: &mut UplinkChannel,
+    fading: &mut ChannelState,
+    gains: &mut [f64],
     queue: &mut EventQueue<Event>,
     now: Ticks,
     tau_up_for: impl Fn(usize) -> Ticks,
 ) {
     if channel.is_free(now) {
-        if let Some(winner) = scheduler.grant() {
-            let done = channel.reserve(now, tau_up_for(winner));
+        let winner = if fading.is_trivial() {
+            scheduler.grant()
+        } else {
+            // Only the scan arbiter exposes contenders; the heap/cursor
+            // fast paths return an empty slice and never read gains.
+            for r in scheduler.pending_clients() {
+                gains[r.client] = fading.gain(r.client, now);
+            }
+            scheduler.grant_with_gains(Some(gains))
+        };
+        if let Some(winner) = winner {
+            let dur = fading.scaled_tau(winner, now, tau_up_for(winner));
+            let done = channel.reserve(now, dur);
             queue.schedule_at(done, Event::Upload { client: winner });
         }
     }
@@ -495,6 +549,10 @@ pub(crate) struct SimSetup {
     /// Non-trivial capacity context; `None` keeps the engines on their
     /// pre-submodel path.
     pub submodel: Option<SubmodelCtx>,
+    /// The bound fading channel (trivial = the exact pre-channel path).
+    pub chan: ChannelState,
+    /// Canonical channel spelling (`ideal` under the trivial model).
+    pub channel_label: String,
 }
 
 pub(crate) fn setup(cfg: &ScaleSimConfig) -> Result<SimSetup> {
@@ -563,6 +621,13 @@ pub(crate) fn setup(cfg: &ScaleSimConfig) -> Result<SimSetup> {
         })
     };
 
+    // The fading channel. Like capacity, its stream is a fork of the
+    // root RNG (`fork` never advances `root`) and the trivial `ideal`
+    // model makes no draws and no forks at all, so it perturbs nothing.
+    let fading = channel::resolve(cfg.channel.as_deref())?;
+    let channel_label = fading.spec();
+    let chan = fading.bind(m, &root);
+
     let core = ServerCore::new(w0, m, policy, cfg.mu_rho);
     Ok(SimSetup {
         m,
@@ -577,6 +642,8 @@ pub(crate) fn setup(cfg: &ScaleSimConfig) -> Result<SimSetup> {
         world_label,
         capacity_label,
         submodel,
+        chan,
+        channel_label,
     })
 }
 
@@ -604,6 +671,8 @@ pub fn run_scale_sim_full(cfg: &ScaleSimConfig) -> Result<(ScaleSimReport, Param
         world_label,
         capacity_label,
         submodel,
+        mut chan,
+        channel_label,
     } = setup(cfg)?;
 
     let mut scheduler = UploadScheduler::new(cfg.scheduler, m);
@@ -616,11 +685,25 @@ pub fn run_scale_sim_full(cfg: &ScaleSimConfig) -> Result<(ScaleSimReport, Param
         None => cfg.time.tau_up,
         Some(ctx) => scaled_tau_up(cfg.time.tau_up, ctx.map_of(client).rate()),
     };
+    // Upload frame size (wire-format bytes) per client.
+    let numel_of = |client: usize| match &submodel {
+        None => cfg.params,
+        Some(ctx) => ctx.map_of(client).numel(),
+    };
+    // Per-contender gains buffer for gain-sensitive arbitration; never
+    // touched (and never allocated) under the trivial channel.
+    let mut gains: Vec<f64> = if chan.is_trivial() {
+        Vec::new()
+    } else {
+        vec![1.0; m]
+    };
     // Pending local update per client: arena slot + start iteration.
     let mut pending: Vec<Option<(SlotId, u64)>> = vec![None; m];
 
     let started = Instant::now();
     let mut events = 0u64;
+    let mut bytes_on_wire = 0u64;
+    let mut channel_lost = 0u64;
 
     // t=0 broadcast: every client is issued w_0 (stamps only — the
     // synthetic trainer reads the live global at compute time).
@@ -678,15 +761,34 @@ pub fn run_scale_sim_full(cfg: &ScaleSimConfig) -> Result<(ScaleSimReport, Param
                 core.record_loss(client, (d as f64).abs());
                 pending[client] = Some((slot, i));
                 scheduler.request(client, now);
-                grant_next(&mut scheduler, &mut channel, &mut queue, now, tau_up_of);
+                grant_next(
+                    &mut scheduler,
+                    &mut channel,
+                    &mut chan,
+                    &mut gains,
+                    &mut queue,
+                    now,
+                    tau_up_of,
+                );
             }
             Event::Upload { client } => {
                 let (slot, i) = pending[client]
                     .take()
                     .expect("upload without a pending local model");
-                // Scenario dropout: the upload is lost in transit; the
-                // local work is wasted and the client re-downloads.
-                if world.upload_lost(client, now) {
+                // The TDMA slot was occupied for the full transmission
+                // whether or not the payload survives, so the wire meter
+                // counts lost uploads too.
+                bytes_on_wire += flat_update_wire_bytes(numel_of(client));
+                // Scenario dropout and channel fade both lose the upload
+                // in transit; the local work is wasted and the client
+                // re-downloads. Both draws run unconditionally so the
+                // scenario's RNG stream is untouched by the channel.
+                let scenario_lost = world.upload_lost(client, now);
+                let chan_lost = chan.upload_lost(client, now);
+                if chan_lost {
+                    channel_lost += 1;
+                }
+                if scenario_lost || chan_lost {
                     core.on_lost_upload(client);
                     arena.free(slot);
                 } else {
@@ -706,7 +808,15 @@ pub fn run_scale_sim_full(cfg: &ScaleSimConfig) -> Result<(ScaleSimReport, Param
                 }
                 let i = core.issue_to(client);
                 queue.schedule_in(cfg.time.tau_down, Event::Download { client, i });
-                grant_next(&mut scheduler, &mut channel, &mut queue, now, tau_up_of);
+                grant_next(
+                    &mut scheduler,
+                    &mut channel,
+                    &mut chan,
+                    &mut gains,
+                    &mut queue,
+                    now,
+                    tau_up_of,
+                );
             }
         }
     }
@@ -729,6 +839,9 @@ pub fn run_scale_sim_full(cfg: &ScaleSimConfig) -> Result<(ScaleSimReport, Param
         scenario: world_label,
         capacity: capacity_label,
         classes,
+        channel: channel_label,
+        bytes_on_wire,
+        channel_lost,
         shards: 1,
         aggregations: core.iteration(),
         events,
@@ -808,6 +921,7 @@ mod tests {
             SchedulerPolicy::OldestModelFirst,
             SchedulerPolicy::Fifo,
             SchedulerPolicy::RoundRobin,
+            SchedulerPolicy::ChannelAware,
         ] {
             for agg in [None, Some("fedasync:0.5".to_string()), Some("adaptive".to_string())] {
                 let cfg = ScaleSimConfig {
@@ -962,6 +1076,7 @@ mod tests {
             ("aggregation", "fedasync:0.5"),
             ("scenario", "dropout:0.1"),
             ("capacity", "classes:1.0x0.5,0.5x0.5"),
+            ("channel", "markov:0.5,500"),
             ("heterogeneity", "lognormal:0.5"),
         ] {
             cfg.set_field(k, v).unwrap_or_else(|e| panic!("{k}: {e}"));
@@ -970,6 +1085,7 @@ mod tests {
         assert_eq!(cfg.scheduler, SchedulerPolicy::Fifo);
         assert_eq!(cfg.scenario.as_deref(), Some("dropout:0.1"));
         assert_eq!(cfg.capacity.as_deref(), Some("classes:1.0x0.5,0.5x0.5"));
+        assert_eq!(cfg.channel.as_deref(), Some("markov:0.5,500"));
         assert!(cfg.set_field("clients", "banana").is_err());
         assert!(cfg.set_field("scheduler", "lottery").is_err());
         assert!(cfg.set_field("warp", "9").is_err());
@@ -995,6 +1111,16 @@ mod tests {
         assert!(bad.validate().is_err());
         let bad = ScaleSimConfig {
             capacity: Some("uniform:2.0".into()),
+            ..ScaleSimConfig::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = ScaleSimConfig {
+            channel: Some("tropo".into()),
+            ..ScaleSimConfig::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = ScaleSimConfig {
+            channel: Some("markov:1.5".into()),
             ..ScaleSimConfig::default()
         };
         assert!(bad.validate().is_err());
@@ -1028,6 +1154,89 @@ mod tests {
             assert_eq!(wa, wb, "{spec}: final models must agree bit-for-bit");
             assert!(rb.classes.is_empty(), "{spec}");
         }
+    }
+
+    #[test]
+    fn ideal_channel_spelling_is_bit_identical_to_none() {
+        let base = ScaleSimConfig {
+            clients: 80,
+            iterations: 200,
+            params: 8,
+            ..ScaleSimConfig::default()
+        };
+        let pinned = ScaleSimConfig {
+            channel: Some("ideal".into()),
+            ..base.clone()
+        };
+        let (ra, wa) = run_scale_sim_full(&base).unwrap();
+        let (rb, wb) = run_scale_sim_full(&pinned).unwrap();
+        assert_eq!(ra.summary_json().to_string_compact(), rb.summary_json().to_string_compact());
+        assert_eq!(wa, wb, "final models must agree bit-for-bit");
+        assert_eq!(rb.channel, "ideal");
+        assert_eq!(rb.channel_lost, 0);
+    }
+
+    #[test]
+    fn markov_channel_stretches_time_and_loses_uploads() {
+        let base = ScaleSimConfig {
+            clients: 60,
+            iterations: 300,
+            params: 8,
+            ..ScaleSimConfig::default()
+        };
+        let faded = ScaleSimConfig {
+            channel: Some("markov:0.5,500".into()),
+            ..base.clone()
+        };
+        let a = run_scale_sim(&base).unwrap();
+        let b = run_scale_sim(&faded).unwrap();
+        assert_eq!(b.aggregations, 300);
+        assert_eq!(b.channel, "markov:0.5,500");
+        assert!(b.bytes_on_wire > 0, "{b:?}");
+        assert!(b.channel_lost > 0, "deep fades must cost uploads: {b:?}");
+        assert!(b.lost_uploads >= b.channel_lost, "{b:?}");
+        // Fades stretch upload slots, so the faded timeline runs longer.
+        assert!(b.virtual_ticks > a.virtual_ticks, "{} vs {}", b.virtual_ticks, a.virtual_ticks);
+        // Determinism holds under fading too.
+        let c = run_scale_sim(&faded).unwrap();
+        assert_eq!(
+            b.summary_json().to_string_compact(),
+            c.summary_json().to_string_compact()
+        );
+    }
+
+    #[test]
+    fn channel_aware_scheduler_diverges_only_under_fading() {
+        let base = ScaleSimConfig {
+            clients: 60,
+            iterations: 200,
+            params: 8,
+            scheduler: SchedulerPolicy::ChannelAware,
+            ..ScaleSimConfig::default()
+        };
+        // Under the ideal channel the gain-weighted score degenerates to
+        // oldest-model-first, bit for bit.
+        let omf = ScaleSimConfig {
+            scheduler: SchedulerPolicy::OldestModelFirst,
+            ..base.clone()
+        };
+        let (ra, wa) = run_scale_sim_full(&base).unwrap();
+        let (rb, wb) = run_scale_sim_full(&omf).unwrap();
+        assert_eq!(ra.mean_staleness, rb.mean_staleness);
+        assert_eq!(ra.fairness, rb.fairness);
+        assert_eq!(wa, wb, "ideal channel: channel-aware ≡ oldest");
+        // Under fading the two schedules part ways.
+        let faded_ca = ScaleSimConfig {
+            channel: Some("markov:0.5,500".into()),
+            ..base
+        };
+        let faded_omf = ScaleSimConfig {
+            channel: Some("markov:0.5,500".into()),
+            ..omf
+        };
+        let (_, wc) = run_scale_sim_full(&faded_ca).unwrap();
+        let (_, wd) = run_scale_sim_full(&faded_omf).unwrap();
+        assert_ne!(wc, wd, "fading must differentiate the schedulers");
     }
 
     #[test]

@@ -19,19 +19,26 @@
 //! | `oldest` (CSMAAFL)    | O(log n)      | O(log n)      | binary heap keyed `(last-slot, request-time, id)` |
 //! | `fifo`                | O(log n)      | O(log n)      | binary heap keyed `(request-time, id)` |
 //! | `roundrobin`          | O(1)          | O(1)          | cyclic cursor over dense in-flight flags |
+//! | `channel-aware`       | O(1)          | O(pending)    | scan scoring `(last-slot+1)/gain` per contender |
 //!
 //! The heap key of a pending `oldest` request is fixed at request time:
 //! a client's last-upload slot can only change when it is *granted*, and
 //! a client cannot be granted while its request is still pending — so
-//! request-time priorities never go stale. Custom `SchedulingPolicy`
-//! impls (via [`UploadScheduler::with_policy`]) fall back to the O(n)
-//! reference scan; `tests/properties.rs` asserts the fast paths pick
-//! the same winners as that scan on random workloads.
+//! request-time priorities never go stale. `channel-aware` cannot use a
+//! heap: a contender's priority moves with the fading channel while it
+//! waits, so every grant re-scores the pending set against the gains the
+//! engine passes to [`UploadScheduler::grant_with_gains`]. Custom
+//! `SchedulingPolicy` impls (via [`UploadScheduler::with_policy`]) fall
+//! back to the same O(n) reference scan; `tests/properties.rs` asserts
+//! the fast paths pick the same winners as that scan on random
+//! workloads.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use super::policy::{Fifo, OldestModelFirst, RoundRobin, SchedulerView, SchedulingPolicy};
+use super::policy::{
+    ChannelAware, Fifo, OldestModelFirst, RoundRobin, SchedulerView, SchedulingPolicy,
+};
 use crate::sim::Ticks;
 
 /// Built-in slot-arbitration policy selector (config/CLI spelling).
@@ -44,16 +51,22 @@ pub enum SchedulerPolicy {
     /// Strict cyclic order over client ids (the Sec. III-B baseline
     /// requirement: re-scheduled only after all others uploaded).
     RoundRobin,
+    /// Channel-aware rule (arXiv:2107.11415): minimize
+    /// `(last-slot + 1) / gain` so model age is weighed against the
+    /// instantaneous fading-channel gain. Identical to
+    /// `OldestModelFirst` when every gain is 1 (ideal channel).
+    ChannelAware,
 }
 
 impl SchedulerPolicy {
     /// Parse a CLI/JSON spelling (`oldest`/`csmaafl`, `fifo`,
-    /// `roundrobin`/`rr`).
+    /// `roundrobin`/`rr`, `channel-aware`).
     pub fn parse(s: &str) -> Option<SchedulerPolicy> {
         match s.to_ascii_lowercase().as_str() {
             "oldest" | "csmaafl" | "oldest-model-first" => Some(SchedulerPolicy::OldestModelFirst),
             "fifo" => Some(SchedulerPolicy::Fifo),
             "roundrobin" | "round-robin" | "rr" => Some(SchedulerPolicy::RoundRobin),
+            "channel-aware" | "channelaware" => Some(SchedulerPolicy::ChannelAware),
             _ => None,
         }
     }
@@ -64,6 +77,7 @@ impl SchedulerPolicy {
             SchedulerPolicy::OldestModelFirst => "oldest",
             SchedulerPolicy::Fifo => "fifo",
             SchedulerPolicy::RoundRobin => "roundrobin",
+            SchedulerPolicy::ChannelAware => "channel-aware",
         }
     }
 
@@ -73,6 +87,7 @@ impl SchedulerPolicy {
             SchedulerPolicy::OldestModelFirst => Box::new(OldestModelFirst),
             SchedulerPolicy::Fifo => Box::new(Fifo),
             SchedulerPolicy::RoundRobin => Box::new(RoundRobin::default()),
+            SchedulerPolicy::ChannelAware => Box::new(ChannelAware),
         }
     }
 }
@@ -144,6 +159,12 @@ impl UploadScheduler {
                 by_last_slot: false,
             },
             SchedulerPolicy::RoundRobin => Arbiter::Cursor { next: 0 },
+            // Channel state moves while a request waits, so priorities
+            // cannot be frozen into a heap at request time.
+            SchedulerPolicy::ChannelAware => Arbiter::Scan {
+                policy: Box::new(ChannelAware),
+                pending: Vec::new(),
+            },
         };
         Self::build_with(policy, arbiter, clients)
     }
@@ -229,6 +250,15 @@ impl UploadScheduler {
     /// None if no request is pending (or the policy leaves the slot
     /// idle, e.g. round-robin waiting for the next client in cycle).
     pub fn grant(&mut self) -> Option<usize> {
+        self.grant_with_gains(None)
+    }
+
+    /// [`grant`](Self::grant) with instantaneous per-client channel
+    /// gains for gain-sensitive policies (`channel-aware`). Engines
+    /// refresh only the entries of clients listed by
+    /// [`pending_clients`](Self::pending_clients) before each grant;
+    /// the built-in age/time policies never read the slice.
+    pub fn grant_with_gains(&mut self, gains: Option<&[f64]>) -> Option<usize> {
         if self.pending == 0 {
             return None;
         }
@@ -248,6 +278,7 @@ impl UploadScheduler {
             Arbiter::Scan { policy, pending } => {
                 let view = SchedulerView {
                     last_slot: &self.last_slot,
+                    gains,
                 };
                 let pos = policy.pick(pending, &view)?;
                 pending.swap_remove(pos).client
@@ -259,6 +290,18 @@ impl UploadScheduler {
         self.last_slot[client] = Some(self.slots_granted);
         self.grants[client] += 1;
         Some(client)
+    }
+
+    /// The requests currently contending for the slot, in arbitrary
+    /// order — empty for the heap/cursor fast paths, which never need
+    /// per-grant gain refreshes. Engines use this to fill a gains
+    /// buffer for exactly the contending clients (O(pending), not
+    /// O(clients)) before [`grant_with_gains`](Self::grant_with_gains).
+    pub fn pending_clients(&self) -> &[UploadRequest] {
+        match &self.arbiter {
+            Arbiter::Scan { pending, .. } => pending,
+            _ => &[],
+        }
     }
 
     /// Jain's fairness index over per-client grant counts (1 = perfectly
@@ -369,6 +412,59 @@ mod tests {
         // Client 1 only requested ~20 times; every one of its requests
         // should have been served promptly.
         assert!(g[1] >= 19, "{g:?}");
+    }
+
+    #[test]
+    fn channel_aware_without_gains_mirrors_oldest() {
+        // Same request trace through both schedulers: with no gains the
+        // channel-aware score is pure model age, i.e. the oldest rule.
+        let mut ca = UploadScheduler::new(SchedulerPolicy::ChannelAware, 3);
+        let mut om = UploadScheduler::new(SchedulerPolicy::OldestModelFirst, 3);
+        let trace = [(2usize, 0), (0, 1), (1, 1), (2, 8), (0, 8), (1, 9)];
+        let mut i = 0;
+        for chunk in trace.chunks(3) {
+            for &(c, t) in chunk {
+                ca.request(c, t);
+                om.request(c, t);
+            }
+            loop {
+                let a = ca.grant_with_gains(None);
+                let b = om.grant();
+                assert_eq!(a, b, "step {i}");
+                i += 1;
+                if a.is_none() {
+                    break;
+                }
+            }
+        }
+        assert_eq!(ca.policy().name(), "channel-aware");
+    }
+
+    #[test]
+    fn channel_aware_grants_follow_the_gains() {
+        let mut s = UploadScheduler::new(SchedulerPolicy::ChannelAware, 2);
+        // Client 0 is staler (slot 1 vs 2: score 2/0.25 = 8 vs 3/2 =
+        // 1.5) yet client 1's strong channel wins the slot.
+        s.request(0, 0);
+        s.request(1, 0);
+        s.grant();
+        s.grant();
+        s.request(0, 5);
+        s.request(1, 5);
+        let pending: Vec<usize> = s.pending_clients().iter().map(|r| r.client).collect();
+        assert_eq!(pending.len(), 2, "{pending:?}");
+        let mut gains = [1.0f64, 1.0];
+        gains[0] = 0.25;
+        gains[1] = 2.0;
+        assert_eq!(s.grant_with_gains(Some(&gains)), Some(1));
+        assert_eq!(s.grant_with_gains(Some(&gains)), Some(0));
+    }
+
+    #[test]
+    fn pending_clients_is_empty_on_fast_paths() {
+        let mut s = UploadScheduler::new(SchedulerPolicy::Fifo, 2);
+        s.request(0, 0);
+        assert!(s.pending_clients().is_empty());
     }
 
     #[test]

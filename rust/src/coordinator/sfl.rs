@@ -91,6 +91,9 @@ pub fn run_sfl(ctx: &FlContext<'_>) -> Result<crate::metrics::RunResult> {
         lost_per_client: vec![0; m],
         mean_train_loss: 0.0, // SFL does not report per-client losses
         classes: Vec::new(), // capacity is AFL-only (RunConfig::validate)
+        channel: "ideal".into(), // and so are channel models
+        bytes_on_wire: 0,
+        channel_lost: 0,
         total_ticks: now,
     };
     Ok(rec.into_result(stats))

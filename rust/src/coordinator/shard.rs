@@ -60,6 +60,7 @@ use super::scale::{
 };
 use super::scheduler::UploadScheduler;
 use crate::model::{ParamArena, ParamSet, SlotId, SlotWindow};
+use crate::net::wire::flat_update_wire_bytes;
 use crate::sim::{ClientPartition, EventQueue, UplinkChannel};
 
 /// One unit of shard-worker work: run the synthetic trainer over the
@@ -104,6 +105,8 @@ pub fn run_sharded_sim_full(
         world_label,
         capacity_label,
         submodel,
+        mut chan,
+        channel_label,
     } = setup(cfg)?;
 
     let partition = ClientPartition::new(m, shards);
@@ -118,6 +121,20 @@ pub fn run_sharded_sim_full(
     let tau_up_of = |client: usize| match &submodel {
         None => cfg.time.tau_up,
         Some(ctx) => scaled_tau_up(cfg.time.tau_up, ctx.map_of(client).rate()),
+    };
+    // Upload frame size (wire-format bytes) per client — same meter as
+    // the sequential reference.
+    let numel_of = |client: usize| match &submodel {
+        None => cfg.params,
+        Some(ctx) => ctx.map_of(client).numel(),
+    };
+    // Per-contender gains buffer for gain-sensitive arbitration; the
+    // coordinator thread owns it, like every other ordered decision
+    // input, so fading cannot introduce shard-count dependence.
+    let mut gains: Vec<f64> = if chan.is_trivial() {
+        Vec::new()
+    } else {
+        vec![1.0; m]
     };
     // Every slot exists up front (at most one in-flight local per
     // client), so the backing buffer never reallocates while workers
@@ -136,6 +153,8 @@ pub fn run_sharded_sim_full(
 
     let started = Instant::now();
     let mut events = 0u64;
+    let mut bytes_on_wire = 0u64;
+    let mut channel_lost = 0u64;
 
     let (report, model) = std::thread::scope(|scope| -> Result<(ScaleSimReport, ParamSet)> {
         let (done_tx, done_rx) = mpsc::channel::<u32>();
@@ -226,7 +245,15 @@ pub fn run_sharded_sim_full(
                     live += 1;
                     peak_live = peak_live.max(live);
                     scheduler.request(client, now);
-                    grant_next(&mut scheduler, &mut channel, &mut queue, now, tau_up_of);
+                    grant_next(
+                        &mut scheduler,
+                        &mut channel,
+                        &mut chan,
+                        &mut gains,
+                        &mut queue,
+                        now,
+                        tau_up_of,
+                    );
                 }
                 Event::Upload { client } => {
                     let (slot, i) = pending[client]
@@ -244,7 +271,16 @@ pub fn run_sharded_sim_full(
                         ready[done as usize] = true;
                     }
                     live -= 1;
-                    if world.upload_lost(client, now) {
+                    // Same meter and draw order as the sequential
+                    // reference: the slot was occupied either way, and
+                    // both loss draws run unconditionally.
+                    bytes_on_wire += flat_update_wire_bytes(numel_of(client));
+                    let scenario_lost = world.upload_lost(client, now);
+                    let chan_lost = chan.upload_lost(client, now);
+                    if chan_lost {
+                        channel_lost += 1;
+                    }
+                    if scenario_lost || chan_lost {
                         core.on_lost_upload(client);
                         arena.free(slot);
                     } else {
@@ -262,7 +298,15 @@ pub fn run_sharded_sim_full(
                     }
                     let i = core.issue_to(client);
                     queue.schedule_in(cfg.time.tau_down, Event::Download { client, i });
-                    grant_next(&mut scheduler, &mut channel, &mut queue, now, tau_up_of);
+                    grant_next(
+                        &mut scheduler,
+                        &mut channel,
+                        &mut chan,
+                        &mut gains,
+                        &mut queue,
+                        now,
+                        tau_up_of,
+                    );
                 }
             }
         }
@@ -290,6 +334,9 @@ pub fn run_sharded_sim_full(
             scenario: world_label,
             capacity: capacity_label,
             classes,
+            channel: channel_label,
+            bytes_on_wire,
+            channel_lost,
             shards: k_shards,
             aggregations: core.iteration(),
             events,
@@ -429,6 +476,7 @@ mod tests {
             SchedulerPolicy::OldestModelFirst,
             SchedulerPolicy::Fifo,
             SchedulerPolicy::RoundRobin,
+            SchedulerPolicy::ChannelAware,
         ] {
             let cfg = ScaleSimConfig {
                 scheduler: sched,
@@ -436,6 +484,29 @@ mod tests {
             };
             let r = run_sharded_sim(&cfg, 3).unwrap();
             assert_eq!(r.aggregations, 150, "{sched:?}");
+        }
+    }
+
+    #[test]
+    fn fading_channel_matches_reference_across_shards() {
+        let cfg = ScaleSimConfig {
+            channel: Some("markov:0.5,500".into()),
+            scheduler: SchedulerPolicy::ChannelAware,
+            ..small_cfg()
+        };
+        let (r_ref, w_ref) = run_scale_sim_full(&cfg).unwrap();
+        assert!(r_ref.channel_lost > 0, "{r_ref:?}");
+        assert!(r_ref.bytes_on_wire > 0, "{r_ref:?}");
+        for shards in [1, 2, 4] {
+            let (r, w) = run_sharded_sim_full(&cfg, shards).unwrap();
+            assert_eq!(
+                r.summary_json().to_string_compact(),
+                r_ref.summary_json().to_string_compact(),
+                "shards={shards}"
+            );
+            assert_eq!(w, w_ref, "final model, shards={shards}");
+            assert_eq!(r.bytes_on_wire, r_ref.bytes_on_wire, "shards={shards}");
+            assert_eq!(r.channel_lost, r_ref.channel_lost, "shards={shards}");
         }
     }
 }

@@ -60,20 +60,23 @@ COMMANDS:
             (cartesian results matrix -> grid.json + grid.csv; a key
             repeated across --set flags also forms an axis; separate
             axis values with ';' when they contain commas, e.g.
-            --axis scenario=static;churn:0.3,2)
+            --axis scenario=static;churn:0.3,2 or
+            --axis channel=ideal;markov:0.5,500)
             with --sim: sweep the coordinator scale simulator instead
             (keys: clients iterations params seed gamma mu_rho
             local_steps train_passes jitter scheduler aggregation
-            scenario capacity heterogeneity shards) -> grid.json of
-            deterministic sim summaries, e.g. --sim --axis shards=1,2,4,8
+            scenario capacity channel heterogeneity shards) -> grid.json
+            of deterministic sim summaries, e.g. --sim --axis shards=1,2,4,8
   analyze   [--results results/]   (comparison tables from stored records)
   timeline  [--clients M] [--local-steps E] [--slow-factor a] [--out results/]
   inspect   naive-decay [--clients M] | betas [--clients M]
   smoke     [--artifacts artifacts]
   sim       [--clients N] [--iterations J] [--params P] [--shards K]
-            [--scheduler oldest|fifo|roundrobin] [--aggregation spec]
+            [--scheduler oldest|fifo|roundrobin|channel-aware]
+            [--aggregation spec]
             [--scenario spec | --set scenario=spec] [--train-passes P]
             [--capacity spec | --set capacity=spec]
+            [--channel spec | --set channel=spec]
             [--heterogeneity prof] [--gamma g] [--seed S]
             [--format table|json]
             (coordinator-only scale simulation: real event loop,
@@ -82,7 +85,7 @@ COMMANDS:
             workers, default = available cores; every non-wall-clock
             field is bit-identical at any K)
   bench     [--quick] [--suite aggregation|kernels|scheduler|event_loop|
-            end_to_end|sharded|submodel|net] [--shards K]
+            end_to_end|sharded|submodel|net|channel] [--shards K]
             [--format table|json]
             [--out results/] [--check BENCH_baseline.json] [--factor 2.0]
             (pinned-seed perf suite -> <out>/BENCH_<date>.json; --check
@@ -102,12 +105,16 @@ COMMANDS:
             run is bit-identical at any K and to the in-process
             reference)
   join      --connect host:7070 --worker-id K --workers N
-            [--learner pjrt|linear] [--local-steps E]
+            [--learner pjrt|linear] [--local-steps E] [--delta]
             [--faults drop=p,cut=p,churn=pxR] [--fault-seed S]
             [--reconnect-ms MS] [--connect-attempts N]
             (TCP worker; --faults injects a seeded, replayable
             socket-fault schedule: in-band drops, mid-frame cuts,
-            churn with reconnect-and-resume)
+            churn with reconnect-and-resume; --delta uploads
+            XOR-bitpattern deltas against the received global —
+            bit-identical results, same frame size, compressible
+            payload. serve and join run over real links, so both
+            reject a channel=<spec> config)
 
 COMMON OPTIONS:
   --artifacts <dir>   artifacts directory (default: artifacts)
@@ -126,11 +133,16 @@ SCENARIOS (--set scenario=<spec>, event-driven AFL engines):
 CAPACITY PROFILES (--set capacity=<spec>, event-driven AFL engines +
 sim; rate-r clients train/upload the leading r-slice of each tensor):
   full | uniform:rate | classes:r1xf1,r2xf2,...
+
+CHANNEL MODELS (--set channel=<spec>, event-driven AFL engines + sim;
+per-client block-fading Markov chain scaling upload slots and losing
+deep-faded uploads; pair with --scheduler channel-aware):
+  ideal | markov[:p_move[,block_ticks]]
 ";
 
 /// Boolean options (present/absent, no value) — everything else spelled
 /// `--name` expects a value.
-const BOOL_FLAGS: [&str; 3] = ["quick", "sim", "lockstep"];
+const BOOL_FLAGS: [&str; 4] = ["quick", "sim", "lockstep", "delta"];
 
 /// Minimal option parser: flags with values, repeated --set collection,
 /// whitelisted boolean flags.
@@ -772,12 +784,15 @@ fn cmd_sim(args: &Args) -> Result<()> {
     // the experiment engine; everything else has a dedicated flag.
     let mut scenario = args.opt("scenario").map(str::to_string);
     let mut capacity = args.opt("capacity").map(str::to_string);
+    let mut channel = args.opt("channel").map(str::to_string);
     for (k, v) in &args.sets {
         match k.as_str() {
             "scenario" => scenario = Some(v.clone()),
             "capacity" => capacity = Some(v.clone()),
+            "channel" => channel = Some(v.clone()),
             other => bail!(
                 "repro sim --set supports only scenario=<spec> | capacity=<spec> \
+                 | channel=<spec> \
                  (got {other:?}; use the dedicated --{other} flag if one exists)"
             ),
         }
@@ -791,6 +806,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
         aggregation: args.opt("aggregation").map(str::to_string),
         scenario,
         capacity,
+        channel,
         gamma: args.opt_or("gamma", "0.2").parse()?,
         train_passes: args.opt_or("train-passes", "1").parse()?,
         heterogeneity,
@@ -904,6 +920,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .opt_or("net-rejoin-ms", "30000")
         .parse()
         .map_err(|_| anyhow!("--net-rejoin-ms expects milliseconds (integer, 0 disables)"))?;
+    ensure!(
+        cfg.channel.is_none(),
+        "serve runs over real links; channel=<spec> applies only to the \
+         simulation engines — drop the channel setting"
+    );
     let session =
         Session::new(cfg.clone(), args.learner()?, args.opt_or("artifacts", "artifacts"))?;
     let leader_cfg = csmaafl::net::LeaderConfig {
@@ -976,6 +997,11 @@ fn cmd_join(args: &Args) -> Result<()> {
             csmaafl::net::FaultPlan::parse(spec, seed)
         })
         .transpose()?;
+    ensure!(
+        cfg.channel.is_none(),
+        "join runs over real links; channel=<spec> applies only to the \
+         simulation engines — drop the channel setting"
+    );
     let session =
         Session::new(cfg.clone(), args.learner()?, args.opt_or("artifacts", "artifacts"))?;
     let shards = csmaafl::data::partition(&session.train, workers, cfg.partition, cfg.seed);
@@ -988,6 +1014,7 @@ fn cmd_join(args: &Args) -> Result<()> {
         indices: shards[worker_id].indices.clone(),
         local_steps: args.opt_or("local-steps", &cfg.local_steps.to_string()).parse()?,
         faults,
+        delta_uploads: args.flag("delta"),
         reconnect_delay_ms: args.opt_or("reconnect-ms", "50").parse()?,
         max_connect_attempts: args.opt_or("connect-attempts", "100").parse()?,
     })?;

@@ -86,6 +86,17 @@ pub struct RunResult {
     /// `uniform:1.0`) capacity profile, in which case the emitted JSON
     /// is byte-identical to a pre-submodel run.
     pub classes: Vec<ClassMetrics>,
+    /// Canonical channel-model spelling (`sim::channel`); `"ideal"`
+    /// under the trivial model, in which case the emitted JSON is
+    /// byte-identical to a pre-channel run.
+    pub channel: String,
+    /// Total upload payload that crossed the (simulated) uplink, in
+    /// wire-format bytes — lost uploads included, since they occupied
+    /// the TDMA slot all the same.
+    pub bytes_on_wire: u64,
+    /// Uploads lost to channel fades specifically (a subset of
+    /// `lost_uploads`; 0 under the ideal channel).
+    pub channel_lost: u64,
     /// Virtual completion time.
     pub total_ticks: Ticks,
     /// Real wall-clock spent (training + eval dispatches).
@@ -111,6 +122,9 @@ impl RunResult {
             lost_per_client: Vec::new(),
             mean_train_loss: 0.0,
             classes: Vec::new(),
+            channel: "ideal".to_string(),
+            bytes_on_wire: 0,
+            channel_lost: 0,
             total_ticks: 0,
             wallclock_secs: 0.0,
             shards: 1,
@@ -160,6 +174,14 @@ impl RunResult {
                 Json::Array(self.classes.iter().map(|c| c.to_json()).collect()),
             );
         }
+        // Likewise the channel triplet appears only under a fading
+        // model, so `channel=ideal` summaries stay byte-identical to
+        // the pre-channel engine.
+        if self.channel != "ideal" {
+            o.set("channel", Json::Str(self.channel.clone()))
+                .set("bytes_on_wire", Json::Int(self.bytes_on_wire as i64))
+                .set("channel_lost", Json::Int(self.channel_lost as i64));
+        }
         o
     }
 
@@ -168,6 +190,8 @@ impl RunResult {
         let mut o = self.summary_json();
         o.set("wallclock_secs", Json::Float(self.wallclock_secs))
             .set("shards", Json::Int(self.shards as i64))
+            .set("channel", Json::Str(self.channel.clone()))
+            .set("bytes_on_wire", Json::Int(self.bytes_on_wire as i64))
             .set(
                 "uploads_per_client",
                 Json::Array(
@@ -307,5 +331,25 @@ mod tests {
         assert_eq!(cells[0].get("accuracy").unwrap().as_f64(), Some(0.55));
         // And they ride through the full record too.
         assert!(r.to_json().get("classes").is_some());
+    }
+
+    #[test]
+    fn channel_metrics_appear_in_summaries_only_under_fading() {
+        let mut r = run_with_points(&[0.2]);
+        r.bytes_on_wire = 4096;
+        // Ideal channel: the deterministic summary is byte-identical to
+        // a pre-channel record, but the full record still meters bytes.
+        let s = r.summary_json();
+        assert!(s.get("channel").is_none());
+        assert!(s.get("bytes_on_wire").is_none());
+        assert_eq!(r.to_json().get("bytes_on_wire").unwrap().as_i64(), Some(4096));
+        assert_eq!(r.to_json().get("channel").unwrap().as_str(), Some("ideal"));
+        // Fading channel: the triplet joins the summary.
+        r.channel = "markov:0.5,500".to_string();
+        r.channel_lost = 3;
+        let s = r.summary_json();
+        assert_eq!(s.get("channel").unwrap().as_str(), Some("markov:0.5,500"));
+        assert_eq!(s.get("bytes_on_wire").unwrap().as_i64(), Some(4096));
+        assert_eq!(s.get("channel_lost").unwrap().as_i64(), Some(3));
     }
 }

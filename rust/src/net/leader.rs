@@ -232,6 +232,10 @@ struct Peer {
     due: u64,
     /// A global issued while the worker had no live connection.
     deferred: Option<(u64, ParamSet)>,
+    /// The last global issued to this worker — the base a DeltaUpdate
+    /// frame XORs against. Kept until the next issue overwrites it (a
+    /// rejoining worker may still answer the old base).
+    issued: Option<ParamSet>,
 }
 
 impl Peer {
@@ -244,6 +248,7 @@ impl Peer {
             pending: VecDeque::new(),
             due: 0,
             deferred: None,
+            issued: None,
         }
     }
 
@@ -258,6 +263,7 @@ impl Peer {
         let iteration = core.issue_to(worker);
         let params = core.global().clone();
         self.outstanding = true;
+        self.issued = Some(params.clone());
         self.ship(worker, iteration, params, stall);
     }
 
@@ -335,8 +341,8 @@ fn poll_conn(
                 progressed = true;
                 conn.last_progress = Instant::now();
                 match wire::decode(&body, specs) {
-                    Ok(msg @ (Message::Update { .. } | Message::Lost { .. }
-                    | Message::Leave { .. })) => {
+                    Ok(msg @ (Message::Update { .. } | Message::DeltaUpdate { .. }
+                    | Message::Lost { .. } | Message::Leave { .. })) => {
                         if !forward(out, conn.worker, msg) {
                             return PollOutcome::Shutdown;
                         }
@@ -429,8 +435,8 @@ fn drain_replaced(mut conn: Conn, out: &mpsc::SyncSender<Inbound>, specs: &[Tens
     loop {
         match conn.reader.poll(&mut conn.stream) {
             Ok(Some(body)) => match wire::decode(&body, specs) {
-                Ok(msg @ (Message::Update { .. } | Message::Lost { .. }
-                | Message::Leave { .. })) => {
+                Ok(msg @ (Message::Update { .. } | Message::DeltaUpdate { .. }
+                | Message::Lost { .. } | Message::Leave { .. })) => {
                     if !forward(out, conn.worker, msg) {
                         return;
                     }
@@ -844,6 +850,23 @@ fn handle(peers: &mut [Peer], core: &mut ServerCore, ev: Inbound, stall: Option<
                     stamp: start_iteration,
                     params,
                 }),
+                Message::DeltaUpdate {
+                    start_iteration,
+                    params: delta,
+                    ..
+                } => match p.issued.as_ref() {
+                    // XOR the bitpattern delta back onto the base this
+                    // worker was issued: reconstructs the local model
+                    // bit-for-bit, then takes the ordinary Update path.
+                    Some(base) => p.pending.push_back(Move::Update {
+                        stamp: start_iteration,
+                        params: wire::apply_delta(&delta, base),
+                    }),
+                    None => log_info!(
+                        "leader: delta update from worker {worker} with no \
+                         issued base; ignoring"
+                    ),
+                },
                 Message::Lost { start_iteration } => p.pending.push_back(Move::Lost {
                     stamp: start_iteration,
                 }),

@@ -158,6 +158,14 @@ pub enum Tag {
     /// worker -> leader: churn announcement — the worker is
     /// disconnecting and will return with its (now stale) model.
     Leave = 6,
+    /// worker -> leader: delta-encoded trained local model — the
+    /// payload carries `local ⊕ base` XOR bitpatterns against the
+    /// global the leader issued at `start_iteration` (see
+    /// [`delta_params`]). A build that predates this tag rejects it
+    /// with the usual typed [`WireError::UnknownTag`], which is the
+    /// version negotiation: delta senders are only spawned against
+    /// leaders that advertise the same [`WIRE_VERSION`].
+    DeltaUpdate = 7,
 }
 
 impl Tag {
@@ -170,6 +178,7 @@ impl Tag {
             4 => Tag::Shutdown,
             5 => Tag::Lost,
             6 => Tag::Leave,
+            7 => Tag::DeltaUpdate,
             tag => return Err(WireError::UnknownTag { tag }),
         })
     }
@@ -216,6 +225,60 @@ pub enum Message {
         /// How many leader rounds the worker will sit out (≥ 1).
         rounds: u64,
     },
+    /// worker → leader: a trained local model, delta-encoded against
+    /// the issued global. The leader reconstructs the local model with
+    /// [`apply_delta`] over its retained copy of the `start_iteration`
+    /// global it shipped to this worker.
+    DeltaUpdate {
+        /// The global iteration the worker trained from — both the
+        /// staleness base and the delta base.
+        start_iteration: u64,
+        /// Local SGD steps the worker ran.
+        steps: u32,
+        /// XOR bitpatterns `local ⊕ base`, shaped like the model.
+        params: ParamSet,
+    },
+}
+
+/// XOR-bitpattern delta `local ⊕ base`, per f32 on the raw bits.
+/// Unlike an arithmetic difference (where `(l - b) + b ≠ l` in f32),
+/// XOR reconstruction is *exact*: [`apply_delta`] returns `local` bit
+/// for bit, so a delta-encoded upload aggregates identically to a full
+/// one. Panics on layout mismatch — the sender deltas against its own
+/// download, so the shapes agree by construction.
+pub fn delta_params(local: &ParamSet, base: &ParamSet) -> ParamSet {
+    xor_params(local, base)
+}
+
+/// Invert [`delta_params`]: `delta ⊕ base` = the original local model,
+/// exactly (XOR is its own inverse).
+pub fn apply_delta(delta: &ParamSet, base: &ParamSet) -> ParamSet {
+    xor_params(delta, base)
+}
+
+fn xor_params(a: &ParamSet, b: &ParamSet) -> ParamSet {
+    assert_eq!(a.tensors.len(), b.tensors.len(), "delta layout mismatch");
+    let tensors = a
+        .tensors
+        .iter()
+        .zip(&b.tensors)
+        .map(|(ta, tb)| {
+            assert_eq!(
+                ta.data.len(),
+                tb.data.len(),
+                "delta tensor {} length mismatch",
+                ta.spec.name
+            );
+            let data = ta
+                .data
+                .iter()
+                .zip(&tb.data)
+                .map(|(x, y)| f32::from_bits(x.to_bits() ^ y.to_bits()))
+                .collect();
+            Tensor::from_data(ta.spec.clone(), data)
+        })
+        .collect();
+    ParamSet { tensors }
 }
 
 // ------------------------------------------------------------ encoding
@@ -251,6 +314,18 @@ pub fn model_frame_len(specs: &[TensorSpec]) -> u64 {
         .sum::<u64>();
     // version + tag + start_iteration (u64) + steps (u32) + params.
     2 + 8 + 4 + params
+}
+
+/// Total bytes on the wire — the 4-byte length prefix included — of an
+/// upload frame ([`Message::Update`] or the same-sized
+/// [`Message::DeltaUpdate`]) carrying one flat tensor of `numel` f32s.
+/// The scale simulators' `bytes_on_wire` meter: their synthetic model
+/// is a single flat tensor, and this pins the metric to the real frame
+/// format instead of a made-up `4·numel`.
+pub fn flat_update_wire_bytes(numel: usize) -> u64 {
+    // prefix + version + tag + start_iteration (u64) + steps (u32)
+    // + tensor count (u32) + element count (u32) + data.
+    4 + 2 + 8 + 4 + 4 + 4 + 4 * numel as u64
 }
 
 /// Encode a message into a ready-to-send frame (length prefix,
@@ -296,6 +371,16 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             put_u64(&mut payload, *start_iteration);
             put_u64(&mut payload, *rounds);
             Tag::Leave
+        }
+        Message::DeltaUpdate {
+            start_iteration,
+            steps,
+            params,
+        } => {
+            put_u64(&mut payload, *start_iteration);
+            put_u32(&mut payload, *steps);
+            put_params(&mut payload, params);
+            Tag::DeltaUpdate
         }
     };
     // Length arithmetic in usize: `as u32` on a >4 GiB payload would
@@ -414,6 +499,11 @@ pub fn decode(payload: &[u8], specs: &[TensorSpec]) -> Result<Message, WireError
         Tag::Leave => Message::Leave {
             start_iteration: c.u64()?,
             rounds: c.u64()?,
+        },
+        Tag::DeltaUpdate => Message::DeltaUpdate {
+            start_iteration: c.u64()?,
+            steps: c.u32()?,
+            params: c.params(specs)?,
         },
     };
     if c.pos != payload.len() {
@@ -711,6 +801,91 @@ mod tests {
                 rounds: 3
             }
         ));
+    }
+
+    #[test]
+    fn delta_update_roundtrip() {
+        let base = pset();
+        let mut local = pset();
+        local.tensors[0].data[2] = 7.25;
+        local.tensors[1].data[0] = -0.75;
+        let delta = delta_params(&local, &base);
+        match roundtrip(&Message::DeltaUpdate {
+            start_iteration: 42,
+            steps: 16,
+            params: delta.clone(),
+        }) {
+            Message::DeltaUpdate {
+                start_iteration,
+                steps,
+                params,
+            } => {
+                assert_eq!((start_iteration, steps), (42, 16));
+                // The decoded delta reconstructs the local model bit
+                // for bit — the property f32 subtraction cannot give.
+                let rebuilt = apply_delta(&params, &base);
+                for (a, b) in rebuilt
+                    .tensors
+                    .iter()
+                    .flat_map(|t| &t.data)
+                    .zip(local.tensors.iter().flat_map(|t| &t.data))
+                {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn delta_of_identical_models_is_all_zero_bits() {
+        let d = delta_params(&pset(), &pset());
+        assert!(d.tensors.iter().flat_map(|t| &t.data).all(|v| v.to_bits() == 0));
+        // ...and applying it is the identity.
+        let back = apply_delta(&d, &pset());
+        assert_eq!(back, pset());
+    }
+
+    #[test]
+    fn delta_survives_non_finite_and_negative_zero_values() {
+        let mut local = pset();
+        local.tensors[0].data[0] = f32::NAN;
+        local.tensors[0].data[1] = f32::INFINITY;
+        local.tensors[1].data[3] = -0.0;
+        let rebuilt = apply_delta(&delta_params(&local, &pset()), &pset());
+        for (a, b) in rebuilt
+            .tensors
+            .iter()
+            .flat_map(|t| &t.data)
+            .zip(local.tensors.iter().flat_map(|t| &t.data))
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "NaN/Inf/-0.0 must survive");
+        }
+    }
+
+    #[test]
+    fn flat_update_wire_bytes_matches_encoded_frames() {
+        for numel in [1usize, 64, 5370] {
+            let spec = TensorSpec {
+                name: "w".into(),
+                shape: vec![numel],
+            };
+            let params = ParamSet {
+                tensors: vec![Tensor::from_data(spec, vec![0.5; numel])],
+            };
+            let full = encode(&Message::Update {
+                start_iteration: 3,
+                steps: 2,
+                params: params.clone(),
+            });
+            let delta = encode(&Message::DeltaUpdate {
+                start_iteration: 3,
+                steps: 2,
+                params,
+            });
+            assert_eq!(flat_update_wire_bytes(numel), full.len() as u64, "{numel}");
+            assert_eq!(full.len(), delta.len(), "delta frames are the same size");
+        }
     }
 
     #[test]

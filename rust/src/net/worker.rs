@@ -44,6 +44,13 @@ pub struct WorkerConfig<'a> {
     pub local_steps: usize,
     /// Seeded socket-fault schedule (`None` = fault-free).
     pub faults: Option<FaultPlan>,
+    /// Upload XOR-bitpattern deltas against the received global
+    /// (`DeltaUpdate` frames) instead of full models. The leader
+    /// reconstructs bit-exactly, so results are identical either way;
+    /// frame size is identical too — the win is downstream
+    /// compressibility, and the frame type is what the wire meter and
+    /// the version negotiation exercise.
+    pub delta_uploads: bool,
     /// Delay between reconnect attempts (and the churn gap).
     pub reconnect_delay_ms: u64,
     /// Give up after this many consecutive failed dials.
@@ -70,6 +77,7 @@ impl<'a> WorkerConfig<'a> {
             indices,
             local_steps,
             faults: None,
+            delta_uploads: false,
             reconnect_delay_ms: 50,
             max_connect_attempts: 100,
         }
@@ -183,10 +191,18 @@ fn session(
                     None => FaultAction::None,
                 };
                 *move_idx += 1;
-                let update = Message::Update {
-                    start_iteration: iteration,
-                    steps: cfg.local_steps as u32,
-                    params: local,
+                let update = if cfg.delta_uploads {
+                    Message::DeltaUpdate {
+                        start_iteration: iteration,
+                        steps: cfg.local_steps as u32,
+                        params: wire::delta_params(&local, &params),
+                    }
+                } else {
+                    Message::Update {
+                        start_iteration: iteration,
+                        steps: cfg.local_steps as u32,
+                        params: local,
+                    }
                 };
                 match action {
                     FaultAction::None => {

@@ -1,7 +1,7 @@
 //! The pinned-seed performance suite behind `repro bench`: the repo's
 //! perf trajectory as machine-readable `BENCH_<date>.json` records.
 //!
-//! Eight suites cover the hot paths this crate optimizes:
+//! Nine suites cover the hot paths this crate optimizes:
 //!
 //! | Suite         | Cases                              | What it measures |
 //! |---------------|------------------------------------|------------------|
@@ -13,6 +13,7 @@
 //! | `sharded`     | `sim_<m>_shards1`, `sim_<m>_multi`, `speedup_multi_vs_1` | the sharded coordinator (`coordinator::shard`) at heavy synthetic training: ns per event single- vs multi-shard, plus their ratio (multi/single — dimensionless, < 1 means speedup) |
 //! | `submodel`    | `extract_<n>`, `merge_<n>`, `merge_lerp_<n>` | heterogeneous-capacity slice kernels (`model::submodel`): rate-0.5 extract/merge over a flat buffer, plus the slice-wise eq.-(3) merge into a `ParamSet` |
 //! | `net`         | `encode_<n>`, `decode_<n>`, `reader_chunked_<n>` | wire-protocol hot paths (`net::wire`): frame encode, shape-validated decode, and the leader's incremental `FrameReader` fed in socket-sized chunks |
+//! | `channel`     | `gain_walk_<m>`, `delta_encode_<n>`, `delta_apply_<n>`, `sim_channel_aware_<m>` | the fading-channel subsystem (`sim::channel`): the per-grant gain refresh over a whole population, the XOR-bitpattern delta codec behind `DeltaUpdate` frames, and a full channel-aware event loop under `markov:0.5,500` — ns per event, so fading must not regress the hot loop |
 //!
 //! The record schema (`csmaafl-bench-v1`) is
 //! `suites → <suite> → <case> → {iters, ns_per_iter, clients}` plus
@@ -39,6 +40,7 @@ use crate::experiment::{Plan, PlanRunner};
 use crate::model::{lerp_flat, ParamArena, ParamLayout, ParamSet, SubmodelMap, TensorSpec};
 use crate::net::wire::{self, FrameReader, Message};
 use crate::session::{LearnerKind, Session};
+use crate::sim::channel;
 use crate::util::bench::Bencher;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -47,7 +49,7 @@ use crate::util::rng::Rng;
 pub const BENCH_SCHEMA: &str = "csmaafl-bench-v1";
 
 /// The suite names, in run order (the `--suite` filter vocabulary).
-pub const SUITES: [&str; 8] = [
+pub const SUITES: [&str; 9] = [
     "aggregation",
     "kernels",
     "scheduler",
@@ -56,6 +58,7 @@ pub const SUITES: [&str; 8] = [
     "sharded",
     "submodel",
     "net",
+    "channel",
 ];
 
 /// How to run the suite.
@@ -448,6 +451,87 @@ impl std::io::Read for Chunked<'_> {
     }
 }
 
+/// The `channel` suite: the fading-channel subsystem and the delta
+/// codec behind `DeltaUpdate` frames. `gain_walk_<m>` is the per-grant
+/// gain refresh the channel-aware scheduler pays — every client queried
+/// at one slot (cache-hot after the first walk, like the engines'
+/// monotone queries); `delta_encode_<n>`/`delta_apply_<n>` the
+/// XOR-bitpattern codec at the two pinned model sizes; and
+/// `sim_channel_aware_<m>` a full scale-sim event loop under
+/// `markov:0.5,500` with the channel-aware scheduler, in ns per event
+/// like `event_loop` — the fading path must not regress the hot loop.
+fn suite_channel(quick: bool) -> Result<Vec<Case>> {
+    let mut out = Vec::new();
+    let mut b = bencher("channel", quick);
+    let m = if quick { 10_000 } else { 100_000 };
+    let fading = channel::parse("markov:0.5,500")?;
+    let mut chan = fading.bind(m, &Rng::new(42));
+    let name = format!("gain_walk_{m}");
+    let r = b.bench(&name, || {
+        let mut acc = 0.0f64;
+        for c in 0..m {
+            acc += chan.gain(c, 10_000);
+        }
+        std::hint::black_box(acc);
+    });
+    out.push(Case {
+        name,
+        iters: r.iters,
+        ns_per_iter: r.mean_ns,
+        clients: m as u64,
+        shards: None,
+    });
+    for &n in &[5_370usize, 431_080] {
+        let layout = ParamLayout::new(vec![TensorSpec {
+            name: "w".into(),
+            shape: vec![n],
+        }]);
+        let base = ParamSet::from_flat(&layout, &random_flat(n, 31));
+        let local = ParamSet::from_flat(&layout, &random_flat(n, 32));
+        let name = format!("delta_encode_{n}");
+        let r = b.bench(&name, || {
+            std::hint::black_box(wire::delta_params(std::hint::black_box(&local), &base));
+        });
+        out.push(Case {
+            name,
+            iters: r.iters,
+            ns_per_iter: r.mean_ns,
+            clients: 0,
+            shards: None,
+        });
+        let delta = wire::delta_params(&local, &base);
+        let name = format!("delta_apply_{n}");
+        let r = b.bench(&name, || {
+            std::hint::black_box(wire::apply_delta(std::hint::black_box(&delta), &base));
+        });
+        out.push(Case {
+            name,
+            iters: r.iters,
+            ns_per_iter: r.mean_ns,
+            clients: 0,
+            shards: None,
+        });
+    }
+    let clients = if quick { 2_000 } else { 20_000 };
+    let cfg = ScaleSimConfig {
+        clients,
+        iterations: clients as u64,
+        params: 32,
+        scheduler: SchedulerPolicy::ChannelAware,
+        channel: Some("markov:0.5,500".into()),
+        ..ScaleSimConfig::default()
+    };
+    let sim = run_scale_sim(&cfg)?;
+    out.push(Case {
+        name: format!("sim_channel_aware_{clients}"),
+        iters: sim.events,
+        ns_per_iter: sim.wall_secs * 1e9 / sim.events.max(1) as f64,
+        clients: clients as u64,
+        shards: None,
+    });
+    Ok(out)
+}
+
 fn cases_json(cases: Vec<Case>) -> Json {
     let mut o = Json::object();
     for c in cases {
@@ -469,7 +553,7 @@ pub fn run(cfg: &BenchConfig) -> Result<Json> {
         ensure!(
             SUITES.contains(&s.as_str()),
             "unknown suite {s:?} \
-             (aggregation|kernels|scheduler|event_loop|end_to_end|sharded|submodel|net)"
+             (aggregation|kernels|scheduler|event_loop|end_to_end|sharded|submodel|net|channel)"
         );
     }
     let selected = |name: &str| match cfg.suite.as_deref() {
@@ -505,6 +589,9 @@ pub fn run(cfg: &BenchConfig) -> Result<Json> {
     }
     if selected("net") {
         suites.set("net", cases_json(suite_net(cfg.quick)));
+    }
+    if selected("channel") {
+        suites.set("channel", cases_json(suite_channel(cfg.quick)?));
     }
     let mut root = Json::object();
     root.set("schema", Json::Str(BENCH_SCHEMA.into()))
@@ -857,6 +944,20 @@ mod tests {
             ["lerp_scalar_5370", "lerp_5370", "axpy_scalar_5370", "axpy_5370",
              "lerp_par4_5370", "l2_5370", "lerp_scalar_431080", "lerp_431080",
              "axpy_scalar_431080", "axpy_431080", "lerp_par4_431080", "l2_431080"]
+        );
+        for c in &cases {
+            assert!(c.iters > 0 && c.ns_per_iter > 0.0, "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn channel_suite_emits_schema_shaped_cases() {
+        let cases = suite_channel(true).unwrap();
+        let names: Vec<&str> = cases.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(
+            names,
+            ["gain_walk_10000", "delta_encode_5370", "delta_apply_5370",
+             "delta_encode_431080", "delta_apply_431080", "sim_channel_aware_2000"]
         );
         for c in &cases {
             assert!(c.iters > 0 && c.ns_per_iter > 0.0, "{}", c.name);

@@ -1,0 +1,425 @@
+//! Fading-channel registry: per-client time-varying link quality.
+//!
+//! The wireless async-FL related work (arXiv 2107.11415, 2212.07356)
+//! schedules against a *channel*: a per-client link whose quality varies
+//! over time, decides how long an upload occupies the uplink, and makes
+//! transmission failures correlate with link state instead of being
+//! i.i.d. coin flips. This module models that as a **block-fading Markov
+//! chain over a small gain ladder**: virtual time is cut into coherence
+//! blocks of `block_ticks`; within a block the channel gain is constant;
+//! at each block boundary the ladder level takes one birth–death step
+//!
+//! ```text
+//! P(level → level−1) = p_move/2,   P(level → level+1) = p_move/2,
+//! P(level → level)   = 1 − p_move          (saturating at the rails)
+//! ```
+//!
+//! over the gain ladder `[0.25, 0.5, 1.0, 2.0]`. A client's effective
+//! upload time is `τ^u / gain` (deep fade → 4× slower upload), and an
+//! upload finishing in block `b` is lost with the level's loss
+//! probability `[0.4, 0.1, 0.02, 0.0]` — failures cluster in fades,
+//! which is exactly the correlation the i.i.d. `upload_loss` knob and
+//! the `dropout` scenario cannot express.
+//!
+//! Like scenarios and capacity profiles, the channel is a registry
+//! spelling — `channel=<name[:params]>` on any config or `--set`:
+//!
+//! | Spelling                  | Channel                                      |
+//! |---------------------------|----------------------------------------------|
+//! | `ideal`                   | gain 1.0 always, no losses (pinned default)  |
+//! | `markov[:p_move,block]`   | block-fading ladder walk: move probability   |
+//! |                           | `p_move ∈ (0,1]` per block boundary, blocks  |
+//! |                           | of `block` ticks (defaults `0.5`, `500`)     |
+//!
+//! **Determinism.** The fading process is a *pure function of
+//! (seed, client, block index)*: the channel stream is forked from the
+//! root run RNG (fork label `0xfad1e5`, like `dropout`'s loss stream),
+//! each client forks its own sub-stream (like `churn`), and each block's
+//! move/loss draws come from a per-`(client, block)` fork — never from a
+//! sequential stream whose value depends on query history. Queries at
+//! any time, in any order, from any engine or shard therefore agree
+//! (`tests/properties.rs` pins this), and the trivial `ideal` channel
+//! makes **no** draws and **no** forks at all, so it cannot perturb any
+//! other stream derived from the root — `channel=ideal` is byte-identical
+//! to the pre-channel engines (`tests/sharded.rs` pins this).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::sim::Ticks;
+use crate::util::rng::Rng;
+
+/// The gain ladder, worst fade first. Gains multiply the uplink rate:
+/// effective upload time is `τ^u / gain`.
+pub const GAIN_LADDER: [f64; 4] = [0.25, 0.5, 1.0, 2.0];
+
+/// Per-level transmission-loss probability (aligned with [`GAIN_LADDER`]).
+pub const LOSS_PROB: [f64; 4] = [0.4, 0.1, 0.02, 0.0];
+
+/// Ladder index every client starts in (gain 1.0).
+const START_LEVEL: u8 = 2;
+
+/// One canonical registry spelling per built-in channel shape (tests
+/// iterate these; docs list them).
+pub const CHANNEL_SPECS: [&str; 2] = ["ideal", "markov:0.5,500"];
+
+/// RNG fork label of the channel stream (off the root run RNG).
+const FADE_FORK: u64 = 0xfad1e5;
+
+/// Markov block-fading parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct MarkovParams {
+    /// Probability of taking a ladder step at each block boundary.
+    p_move: f64,
+    /// Coherence-block length in virtual ticks.
+    block_ticks: Ticks,
+}
+
+/// A parsed channel model (the registry entry). Bind it to a population
+/// with [`FadingChannel::bind`] to get a queryable [`ChannelState`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FadingChannel {
+    /// `None` = the trivial `ideal` channel.
+    markov: Option<MarkovParams>,
+}
+
+impl FadingChannel {
+    /// The pinned default: gain 1.0 for everyone, forever, no losses.
+    pub fn ideal() -> FadingChannel {
+        FadingChannel { markov: None }
+    }
+
+    /// Whether this is the trivial `ideal` channel. Trivial channels
+    /// take the engines' existing code path untouched (no draws, no
+    /// forks, no new report fields), which is what makes them
+    /// byte-identical to the pre-channel records.
+    pub fn is_trivial(&self) -> bool {
+        self.markov.is_none()
+    }
+
+    /// Canonical registry spelling (round-trips through [`parse`]).
+    pub fn spec(&self) -> String {
+        match self.markov {
+            None => "ideal".into(),
+            Some(p) => format!("markov:{},{}", p.p_move, p.block_ticks),
+        }
+    }
+
+    /// Bind the model to a population. `root` is the run's root RNG;
+    /// the trivial channel never forks it.
+    pub fn bind(&self, clients: usize, root: &Rng) -> ChannelState {
+        match self.markov {
+            None => ChannelState {
+                params: None,
+                rng: None,
+                cache: Vec::new(),
+            },
+            Some(params) => ChannelState {
+                params: Some(params),
+                rng: Some(root.fork(FADE_FORK)),
+                cache: vec![(0, START_LEVEL); clients],
+            },
+        }
+    }
+}
+
+/// The bound per-client fading process: answers "what is client `c`'s
+/// channel at time `t`" queries. Holds a per-client `(block, level)`
+/// cache so monotone queries advance the ladder walk incrementally, but
+/// every answer is the same pure function of (seed, client, block) —
+/// an out-of-order query just re-walks from block 0.
+#[derive(Debug, Clone)]
+pub struct ChannelState {
+    params: Option<MarkovParams>,
+    /// The channel fork of the root RNG (`None` when ideal).
+    rng: Option<Rng>,
+    /// Per-client cached walk position: (block index, ladder level).
+    cache: Vec<(u64, u8)>,
+}
+
+impl ChannelState {
+    /// Whether this is the bound trivial channel.
+    pub fn is_trivial(&self) -> bool {
+        self.params.is_none()
+    }
+
+    /// The coherence-block index `now` falls in (0 for the ideal
+    /// channel, which has a single infinite block).
+    pub fn block_of(&self, now: Ticks) -> u64 {
+        match self.params {
+            None => 0,
+            Some(p) => now / p.block_ticks,
+        }
+    }
+
+    /// The per-(client, block) draw pair: (move u, loss u). Pure in
+    /// (seed, client, block) by construction — a fresh fork per query.
+    fn block_draws(&self, client: usize, block: u64) -> (f64, f64) {
+        let rng = self.rng.as_ref().expect("draws only on non-trivial channels");
+        let mut r = rng.fork(client as u64).fork(block);
+        let mv = r.f64();
+        let loss = r.f64();
+        (mv, loss)
+    }
+
+    /// One birth–death step of the ladder walk.
+    fn step(level: u8, u: f64, p_move: f64) -> u8 {
+        if u < p_move * 0.5 {
+            level.saturating_sub(1)
+        } else if u < p_move {
+            (level + 1).min(GAIN_LADDER.len() as u8 - 1)
+        } else {
+            level
+        }
+    }
+
+    /// Ladder level of `client` in block `block`: advance the cached
+    /// walk forward, or re-walk from block 0 on an out-of-order query
+    /// (same answer either way — the walk is pure in (seed, client,
+    /// block)).
+    fn level_at(&mut self, client: usize, block: u64) -> u8 {
+        let p = self.params.expect("level queries only on non-trivial channels");
+        let (mut at, mut level) = self.cache[client];
+        if block < at {
+            at = 0;
+            level = START_LEVEL;
+        }
+        while at < block {
+            at += 1;
+            let (mv, _) = self.block_draws(client, at);
+            level = Self::step(level, mv, p.p_move);
+        }
+        self.cache[client] = (at, level);
+        level
+    }
+
+    /// Channel gain of `client` at time `now` (1.0 on the ideal channel).
+    pub fn gain(&mut self, client: usize, now: Ticks) -> f64 {
+        if self.params.is_none() {
+            return 1.0;
+        }
+        let block = self.block_of(now);
+        GAIN_LADDER[self.level_at(client, block) as usize]
+    }
+
+    /// Whether an upload by `client` finishing at `now` is lost to the
+    /// channel. Block-faded: the decision is a pure function of
+    /// (seed, client, block), so failures cluster within a fade instead
+    /// of flipping an independent coin per upload. Never true (and never
+    /// draws) on the ideal channel.
+    pub fn upload_lost(&mut self, client: usize, now: Ticks) -> bool {
+        if self.params.is_none() {
+            return false;
+        }
+        let block = self.block_of(now);
+        let level = self.level_at(client, block);
+        let (_, loss_u) = self.block_draws(client, block);
+        loss_u < LOSS_PROB[level as usize]
+    }
+
+    /// Channel-scaled upload duration: `τ / gain`, rounded, floored at
+    /// one tick. Exactly `tau` on the ideal channel (gain 1.0).
+    pub fn scaled_tau(&mut self, client: usize, now: Ticks, tau: Ticks) -> Ticks {
+        if self.params.is_none() {
+            // Exactly `tau`, not `max(1)`: the ideal channel must leave
+            // every engine's timeline untouched, degenerate τ included.
+            return tau;
+        }
+        let g = self.gain(client, now);
+        ((tau as f64 / g).round() as Ticks).max(1)
+    }
+}
+
+/// Instantiate a channel model from its registry spelling.
+///
+/// ```
+/// use csmaafl::sim::channel;
+/// assert!(channel::parse("ideal").unwrap().is_trivial());
+/// let c = channel::parse("markov:0.3,200").unwrap();
+/// assert!(!c.is_trivial());
+/// assert_eq!(c.spec(), "markov:0.3,200");
+/// assert!(channel::parse("bogus").is_err());
+/// assert!(channel::resolve(None).unwrap().is_trivial());
+/// ```
+pub fn parse(spec: &str) -> Result<FadingChannel> {
+    let (name, params) = match spec.split_once(':') {
+        Some((n, p)) => (n.trim(), Some(p.trim())),
+        None => (spec.trim(), None),
+    };
+    match name.to_ascii_lowercase().as_str() {
+        "ideal" => {
+            ensure!(params.is_none(), "channel \"ideal\" takes no parameters");
+            Ok(FadingChannel::ideal())
+        }
+        "markov" => {
+            let (p_move, block_ticks) = match params {
+                None => (0.5, 500),
+                Some("") => bail!("markov takes p_move[,block_ticks] (e.g. markov:0.5,500)"),
+                Some(p) => {
+                    let mut it = p.split(',').map(str::trim);
+                    let pm: f64 = match it.next() {
+                        Some(s) if !s.is_empty() => s.parse().map_err(|_| {
+                            anyhow::anyhow!("bad channel move probability {s:?} in {spec:?}")
+                        })?,
+                        _ => bail!("markov takes p_move[,block_ticks]"),
+                    };
+                    let bt: Ticks = match it.next() {
+                        None => 500,
+                        Some(s) => s.parse().map_err(|_| {
+                            anyhow::anyhow!("bad channel block length {s:?} in {spec:?}")
+                        })?,
+                    };
+                    ensure!(it.next().is_none(), "markov takes at most two parameters");
+                    (pm, bt)
+                }
+            };
+            ensure!(
+                p_move.is_finite() && p_move > 0.0 && p_move <= 1.0,
+                "channel move probability must be in (0,1], got {p_move}"
+            );
+            ensure!(block_ticks >= 1, "channel block length must be >= 1 tick");
+            Ok(FadingChannel {
+                markov: Some(MarkovParams { p_move, block_ticks }),
+            })
+        }
+        other => bail!("unknown channel model {other:?} (ideal | markov[:p_move,block_ticks])"),
+    }
+}
+
+/// Resolve a config's optional spelling: `None` means the pinned `ideal`
+/// default.
+pub fn resolve(spec: Option<&str>) -> Result<FadingChannel> {
+    match spec {
+        None => Ok(FadingChannel::ideal()),
+        Some(s) => parse(s),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_parses_every_canonical_spelling() {
+        for spec in CHANNEL_SPECS {
+            let c = parse(spec).unwrap();
+            // Canonical spellings round-trip through spec() → parse().
+            assert_eq!(parse(&c.spec()).unwrap(), c, "{spec}");
+        }
+        // The bare spelling resolves to the canonical defaults.
+        assert_eq!(parse("markov").unwrap().spec(), "markov:0.5,500");
+        assert_eq!(parse("markov:0.5").unwrap().spec(), "markov:0.5,500");
+    }
+
+    #[test]
+    fn registry_rejects_unknown_and_malformed() {
+        assert!(parse("bogus").is_err());
+        assert!(parse("ideal:1").is_err());
+        assert!(parse("markov:").is_err());
+        assert!(parse("markov:x").is_err());
+        assert!(parse("markov:0").is_err());
+        assert!(parse("markov:1.5").is_err());
+        assert!(parse("markov:-0.5").is_err());
+        assert!(parse("markov:0.5,0").is_err());
+        assert!(parse("markov:0.5,x").is_err());
+        assert!(parse("markov:0.5,500,9").is_err());
+    }
+
+    #[test]
+    fn ideal_is_trivial_makes_no_state_and_never_loses() {
+        let root = Rng::new(42);
+        let c = resolve(None).unwrap();
+        assert!(c.is_trivial());
+        let mut s = c.bind(1_000_000, &root);
+        // No per-client allocation for the trivial channel.
+        assert!(s.is_trivial());
+        for now in [0, 123, 99_999] {
+            assert_eq!(s.gain(17, now), 1.0);
+            assert!(!s.upload_lost(17, now));
+            assert_eq!(s.scaled_tau(17, now, 100), 100);
+        }
+    }
+
+    #[test]
+    fn fading_is_a_pure_function_of_seed_client_and_block() {
+        let c = parse("markov:0.5,100").unwrap();
+        let root = Rng::new(7);
+        // Forward walk vs out-of-order queries on a fresh instance.
+        let mut fwd = c.bind(8, &root);
+        let mut ooo = c.bind(8, &root);
+        let times: Vec<Ticks> = (0..40).map(|i| i * 97).collect();
+        let forward: Vec<f64> = times.iter().map(|&t| fwd.gain(3, t)).collect();
+        let backward: Vec<f64> = times.iter().rev().map(|&t| ooo.gain(3, t)).collect();
+        let reversed: Vec<f64> = backward.into_iter().rev().collect();
+        assert_eq!(forward, reversed, "query order changed the fading process");
+        // Loss decisions are equally pure.
+        let mut a = c.bind(8, &root);
+        let mut b = c.bind(8, &root);
+        for &t in times.iter().rev() {
+            assert_eq!(a.upload_lost(5, t), b.upload_lost(5, t));
+        }
+        // And distinct seeds give distinct processes.
+        let mut other = c.bind(8, &Rng::new(8));
+        let diverged = times.iter().any(|&t| other.gain(3, t) != fwd.gain(3, t));
+        assert!(diverged, "seed did not influence the walk");
+    }
+
+    #[test]
+    fn gain_is_constant_within_a_block_and_walks_the_ladder() {
+        let c = parse("markov:1.0,100").unwrap();
+        let mut s = c.bind(4, &Rng::new(3));
+        // Within one coherence block the gain cannot change.
+        let g0 = s.gain(1, 0);
+        assert_eq!(g0, s.gain(1, 50));
+        assert_eq!(g0, s.gain(1, 99));
+        assert_eq!(g0, 1.0, "walk starts at the gain-1.0 rung");
+        // With p_move=1 every boundary steps one rung: consecutive
+        // blocks differ by exactly one ladder position.
+        let mut prev = 2usize;
+        for b in 1..50u64 {
+            let g = s.gain(1, b * 100);
+            let idx = GAIN_LADDER.iter().position(|&x| x == g).unwrap();
+            assert!(
+                idx.abs_diff(prev) <= 1,
+                "block {b}: jumped {prev} -> {idx}"
+            );
+            prev = idx;
+        }
+    }
+
+    #[test]
+    fn losses_correlate_with_fades() {
+        let c = parse("markov:0.5,100").unwrap();
+        let mut s = c.bind(64, &Rng::new(11));
+        let (mut faded_losses, mut top_losses) = (0u64, 0u64);
+        let (mut faded, mut top) = (0u64, 0u64);
+        for client in 0..64 {
+            for b in 0..200u64 {
+                let now = b * 100;
+                let g = s.gain(client, now);
+                let lost = s.upload_lost(client, now);
+                if g < 1.0 {
+                    faded += 1;
+                    faded_losses += lost as u64;
+                } else if g == 2.0 {
+                    top += 1;
+                    top_losses += lost as u64;
+                }
+            }
+        }
+        assert!(faded > 0 && top > 0, "walk never visited both ends");
+        assert_eq!(top_losses, 0, "the top rung has loss probability 0");
+        assert!(
+            faded_losses > 0,
+            "fades never lost an upload across {faded} faded blocks"
+        );
+    }
+
+    #[test]
+    fn scaled_tau_divides_by_gain_and_floors() {
+        let c = parse("markov:0.5,100").unwrap();
+        let mut s = c.bind(4, &Rng::new(5));
+        let g = s.gain(2, 1234);
+        let tau = s.scaled_tau(2, 1234, 100);
+        assert_eq!(tau, ((100.0 / g).round() as Ticks).max(1));
+    }
+}

@@ -7,6 +7,7 @@
 //! model (τ compute, τ^u upload, τ^d download, per-client speed factors).
 
 pub mod capacity;
+pub mod channel;
 mod compute;
 mod event;
 pub mod partition;
@@ -14,6 +15,7 @@ pub mod scenario;
 mod time_model;
 
 pub use capacity::{CapacityClass, CapacityProfile};
+pub use channel::{ChannelState, FadingChannel};
 pub use compute::{ComputeModel, HeterogeneityProfile};
 pub use event::EventQueue;
 pub use partition::{ClientPartition, OrderedMerge};

@@ -157,6 +157,29 @@ fn unknown_scenario_is_rejected() {
 }
 
 #[test]
+fn usage_lists_channel_model_registry() {
+    let usage = stdout(&repro(&[]));
+    for spelling in ["CHANNEL MODELS", "ideal", "markov"] {
+        assert!(usage.contains(spelling), "usage must mention {spelling}");
+    }
+}
+
+#[test]
+fn unknown_or_misplaced_channel_is_rejected() {
+    let out = repro(&["train", "--set", "channel=tropo", "--learner", "linear"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("tropo"), "{}", stderr(&out));
+    // The synchronous baselines assume an ideal channel; a fading model
+    // on them is a config error, not a silently ignored knob.
+    let out = repro(&[
+        "train", "--set", "algorithm=fedavg", "--set", "channel=markov:0.5,500",
+        "--learner", "linear",
+    ]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("ideal channel"), "{}", stderr(&out));
+}
+
+#[test]
 fn usage_lists_capacity_profile_registry() {
     let usage = stdout(&repro(&[]));
     assert!(usage.contains("CAPACITY PROFILES"), "{usage}");
@@ -575,6 +598,42 @@ fn sim_rejects_malformed_capacity() {
 }
 
 #[test]
+fn sim_channel_flag_surfaces_wire_metrics_in_json() {
+    let out = repro(&[
+        "sim", "--clients", "100", "--iterations", "300", "--params", "8",
+        "--channel", "markov:0.5,500", "--scheduler", "channel-aware",
+        "--format", "json",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("\"channel\": \"markov:0.5,500\""), "{text}");
+    assert!(text.contains("\"bytes_on_wire\""), "{text}");
+    assert!(text.contains("\"scheduler\": \"channel-aware\""), "{text}");
+    // --set spells the same knob; the trivial spelling reports itself
+    // as ideal with the meter still running (full records always carry
+    // channel provenance — only the *summary* keeps quiet).
+    let out = repro(&[
+        "sim", "--clients", "50", "--iterations", "60", "--params", "4",
+        "--set", "channel=ideal", "--format", "json",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("\"channel\": \"ideal\""), "{text}");
+}
+
+#[test]
+fn sim_rejects_malformed_channel() {
+    for bad in ["channel=tropo", "channel=markov:1.5", "channel=markov:0.5,0"] {
+        let out = repro(&["sim", "--clients", "10", "--set", bad]);
+        assert!(!out.status.success(), "{bad} must fail");
+        assert!(stderr(&out).contains("channel"), "{bad}: {}", stderr(&out));
+    }
+    let out = repro(&["sim", "--clients", "10", "--channel", "tropo"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("tropo"), "{}", stderr(&out));
+}
+
+#[test]
 fn grid_sim_sweeps_shards_with_identical_summaries() {
     let dir = scratch_dir("grid_sim");
     let out = repro(&[
@@ -600,6 +659,39 @@ fn grid_sim_sweeps_shards_with_identical_summaries() {
         jobs[1].get("summary").unwrap().to_string_compact()
     );
     assert!(!json.contains("wall_secs"), "matrix must be deterministic");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn grid_sim_channel_axis_differentiates_summaries() {
+    let dir = scratch_dir("grid_channel");
+    let out = repro(&[
+        "grid", "--sim", "--format", "json",
+        "--set", "clients=100", "--set", "iterations=200", "--set", "params=8",
+        "--axis", "channel=ideal;markov:0.5,500",
+        "--out", dir.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let json = std::fs::read_to_string(dir.join("grid.json")).unwrap();
+    let record = csmaafl::util::json::parse(&json).unwrap();
+    let jobs = match record.get("jobs").unwrap() {
+        csmaafl::util::json::Json::Array(jobs) => jobs.clone(),
+        other => panic!("jobs is not an array: {other:?}"),
+    };
+    assert_eq!(jobs.len(), 2);
+    assert_eq!(jobs[0].get("spec").unwrap().as_str(), Some("channel=ideal"));
+    assert_eq!(
+        jobs[1].get("spec").unwrap().as_str(),
+        Some("channel=markov:0.5,500")
+    );
+    // The ideal cell's summary stays silent (byte-identical to a
+    // pre-channel record); the fading cell surfaces the wire meter and
+    // genuinely different dynamics.
+    let ideal = jobs[0].get("summary").unwrap().to_string_compact();
+    let faded = jobs[1].get("summary").unwrap().to_string_compact();
+    assert!(!ideal.contains("bytes_on_wire"), "{ideal}");
+    assert!(faded.contains("bytes_on_wire"), "{faded}");
+    assert_ne!(ideal, faded, "fading must differentiate the series");
     std::fs::remove_dir_all(&dir).ok();
 }
 
@@ -646,6 +738,24 @@ fn bench_rejects_bad_flags() {
     let out = repro(&["bench", "--factor", "abc"]);
     assert!(!out.status.success());
     assert!(stderr(&out).contains("--factor"), "{}", stderr(&out));
+}
+
+#[test]
+fn bench_channel_suite_emits_fading_and_delta_cases() {
+    let dir = scratch_dir("bench_channel");
+    let out = repro(&[
+        "bench", "--quick", "--suite", "channel", "--out", dir.to_str().unwrap(),
+        "--format", "json",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    for case in [
+        "gain_walk_10000", "delta_encode_5370", "delta_apply_5370",
+        "delta_encode_431080", "delta_apply_431080", "sim_channel_aware_2000",
+    ] {
+        assert!(text.contains(case), "missing {case}: {text}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
@@ -872,11 +982,25 @@ fn join_rejects_bad_fault_flags() {
 }
 
 #[test]
+fn serve_and_join_reject_channel_models_before_data_generation() {
+    // Deployment runs over real links: a simulated fading channel in
+    // the config must be rejected up front, like every other net knob —
+    // long before Session::new generates any data.
+    let err = serve_err(&["--set", "channel=markov:0.5,500"]);
+    assert!(err.contains("real links"), "{err}");
+    let mut args = vec!["join", "--set", "channel=markov:0.5,500"];
+    args.extend_from_slice(TINY_DATA);
+    let out = repro(&args);
+    assert!(!out.status.success(), "join with a channel model must fail");
+    assert!(stderr(&out).contains("real links"), "{}", stderr(&out));
+}
+
+#[test]
 fn usage_mentions_net_deployment_flags() {
     let usage = stdout(&repro(&[]));
     for flag in [
         "--net-shards", "--net-timeout-ms", "--net-queue", "--net-rejoin-ms", "--lockstep",
-        "--faults", "--fault-seed", "--reconnect-ms", "--connect-attempts",
+        "--faults", "--fault-seed", "--reconnect-ms", "--connect-attempts", "--delta",
     ] {
         assert!(usage.contains(flag), "usage must mention {flag}");
     }

@@ -150,13 +150,16 @@ const FAULT_DATA_SEED: u64 = 21;
 const FAULT_LOCAL_STEPS: usize = 4;
 
 /// A full lockstep federation over loopback TCP with every worker
-/// running the given seeded fault schedule.
+/// running the given seeded fault schedule. `delta_uploads` switches
+/// every worker to XOR-bitpattern `DeltaUpdate` frames; the leader
+/// reconstructs them bit-exactly, so reports must not depend on it.
 fn run_faulted_tcp(
     port: u16,
     clients: usize,
     iterations: u64,
     net_shards: usize,
     faults: FaultPlan,
+    delta_uploads: bool,
 ) -> LeaderReport {
     let (train, _test) = generate(SynthKind::Mnist, 240, 60, FAULT_DATA_SEED);
     let shards = partition(&train, clients, Partition::Iid, FAULT_DATA_SEED);
@@ -188,6 +191,7 @@ fn run_faulted_tcp(
                 FAULT_LOCAL_STEPS,
             );
             cfg.faults = Some(faults);
+            cfg.delta_uploads = delta_uploads;
             cfg.reconnect_delay_ms = 10;
             run_worker(&cfg)
         }));
@@ -272,7 +276,7 @@ fn disconnect_mid_upload_counts_lost_and_matches_replay() {
     let (_, cuts, _) = fault_counts(&plan, 2, 20);
     assert!(cuts > 0, "seed must schedule at least one mid-upload cut");
 
-    let tcp = run_faulted_tcp(47914, 2, 30, 1, plan);
+    let tcp = run_faulted_tcp(47914, 2, 30, 1, plan, false);
     let reference = run_faulted_reference(2, 30, Some(plan));
     assert_eq!(tcp.aggregations, 30);
     assert!(tcp.lost_uploads > 0, "cuts must surface as lost uploads");
@@ -289,7 +293,7 @@ fn churned_worker_resumes_with_stale_model_and_matches_replay() {
     let (_, _, churns) = fault_counts(&plan, 2, 20);
     assert!(churns > 0, "seed must schedule at least one churn");
 
-    let tcp = run_faulted_tcp(47915, 2, 30, 1, plan);
+    let tcp = run_faulted_tcp(47915, 2, 30, 1, plan, false);
     let reference = run_faulted_reference(2, 30, Some(plan));
     assert_eq!(tcp.aggregations, 30);
     assert_eq!(tcp.lost_uploads, 0, "churn announces itself; nothing is lost");
@@ -310,13 +314,39 @@ fn net_shards_bit_identical_under_faults() {
         "seed must exercise all three fault kinds ({drops}/{cuts}/{churns})"
     );
 
-    let one = run_faulted_tcp(47917, 4, 40, 1, plan);
-    let three = run_faulted_tcp(47918, 4, 40, 3, plan);
+    let one = run_faulted_tcp(47917, 4, 40, 1, plan, false);
+    let three = run_faulted_tcp(47918, 4, 40, 3, plan, false);
     let reference = run_faulted_reference(4, 40, Some(plan));
     assert_eq!(one.aggregations, 40);
     assert!(one.lost_uploads > 0, "drops and cuts must surface as losses");
     assert_reports_bit_identical(&one, &three, "net-shards 1 vs 3");
     assert_reports_bit_identical(&one, &reference, "net-shards 1 vs reference");
+}
+
+/// Delta-frame workers are interchangeable with full-frame workers:
+/// `DeltaUpdate` is an XOR bitpattern against the issued base, so the
+/// leader's reconstruction replays the sender's local model bit for bit
+/// and the whole federation — same seeds, same mixed drop/cut/churn
+/// schedule — lands on the identical summary and final model. The churn
+/// component matters: a held delta crossing a reconnect must resolve
+/// against the base retained in the leader's peer table (`Peer.issued`
+/// survives the disconnect), and the sans-IO reference needs no delta
+/// awareness at all.
+#[test]
+fn delta_upload_workers_are_bit_identical_to_full_uploads() {
+    let plan = FaultPlan::parse("drop=0.1,cut=0.1,churn=0.2x2", 4242).unwrap();
+    let (drops, cuts, churns) = fault_counts(&plan, 3, 15);
+    assert!(
+        drops > 0 && cuts > 0 && churns > 0,
+        "seed must exercise all three fault kinds ({drops}/{cuts}/{churns})"
+    );
+
+    let full = run_faulted_tcp(47921, 3, 35, 1, plan, false);
+    let delta = run_faulted_tcp(47922, 3, 35, 2, plan, true);
+    let reference = run_faulted_reference(3, 35, Some(plan));
+    assert_eq!(delta.aggregations, 35);
+    assert_reports_bit_identical(&delta, &full, "delta vs full uploads");
+    assert_reports_bit_identical(&delta, &reference, "delta uploads vs reference");
 }
 
 /// A worker that starts an upload and then stalls trips the leader's

@@ -643,6 +643,78 @@ fn submodel_overlap_aggregation_matches_scalar_reference_bitwise() {
     }
 }
 
+// --------------------------------------------------------------- channel
+
+/// The fading process is a pure function of (seed, client, slot): any
+/// query order — monotone per-client sweeps, or the raw random
+/// interleaving across clients and times — returns the same gain and
+/// the same loss decision. This is the invariant that lets every
+/// engine (and every shard count) query the channel when convenient
+/// without perturbing determinism.
+#[test]
+fn fading_channel_pure_in_seed_client_and_slot() {
+    use csmaafl::sim::channel;
+    for seed in 0..50u64 {
+        let mut r = Rng::new(seed * 31 + 5);
+        let spec = format!(
+            "markov:{},{}",
+            [0.2, 0.5, 1.0][r.below(3) as usize],
+            [50u64, 500, 1000][r.below(3) as usize]
+        );
+        let model = channel::parse(&spec).unwrap();
+        let root = Rng::new(r.next_u64());
+        let clients = 2 + r.below(12) as usize;
+        let mut a = model.bind(clients, &root);
+        let mut b = model.bind(clients, &root);
+        let queries: Vec<(usize, u64)> = (0..200)
+            .map(|_| (r.below(clients as u64) as usize, r.below(20_000)))
+            .collect();
+        // Reference pass: sorted (client-major, time-ascending) on `a`.
+        let mut sorted = queries.clone();
+        sorted.sort_unstable();
+        let mut expect = std::collections::HashMap::new();
+        for &(c, t) in &sorted {
+            expect.insert((c, t), (a.gain(c, t), a.upload_lost(c, t)));
+        }
+        // Adversarial pass: the raw random interleaving on `b`.
+        for &(c, t) in &queries {
+            let got = (b.gain(c, t), b.upload_lost(c, t));
+            assert_eq!(
+                got,
+                expect[&(c, t)],
+                "{spec}: query order changed the process at ({c},{t})"
+            );
+        }
+    }
+}
+
+/// Channel-scaled upload durations stay inside the gain ladder's
+/// envelope (gain ∈ [0.25, 2.0] means τ/2 … 4τ, floored at one tick),
+/// and the ideal channel returns τ *exactly* — degenerate τ = 0
+/// included, which is what keeps `channel=ideal` timelines untouched.
+#[test]
+fn scaled_tau_respects_the_gain_ladder_envelope() {
+    use csmaafl::sim::channel;
+    let model = channel::parse("markov:0.5,100").unwrap();
+    let mut s = model.bind(8, &Rng::new(9));
+    let mut r = Rng::new(10);
+    for _ in 0..500 {
+        let c = r.below(8) as usize;
+        let t = r.below(50_000);
+        let tau = r.below(10_000);
+        let scaled = s.scaled_tau(c, t, tau);
+        assert!(scaled >= 1, "never below one tick");
+        assert!(
+            scaled <= (tau as f64 * 4.0).round() as u64 + 1,
+            "{scaled} ticks from tau={tau}: past the deepest fade"
+        );
+    }
+    let mut ideal = channel::parse("ideal").unwrap().bind(8, &Rng::new(9));
+    for tau in [0u64, 1, 7, 10_000] {
+        assert_eq!(ideal.scaled_tau(3, 12, tau), tau, "ideal must be exact");
+    }
+}
+
 // ---------------------------------------------------------------- scale
 
 /// 100k-client scale smoke for the arena + heap-scheduler hot path.

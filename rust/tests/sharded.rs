@@ -238,6 +238,88 @@ fn heterogeneous_capacity_mix_is_shard_invariant() {
 }
 
 #[test]
+fn ideal_channel_is_byte_identical_across_the_scheduling_matrix() {
+    // The channel-subsystem guard (the CI `scheduling-matrix` lane):
+    // the trivial channel — `ideal` spelled out, or the None default —
+    // must be *byte*-identical to the pre-channel records: same summary
+    // JSON, same final model, across schedulers x aggregation policies
+    // x scenarios, and shard-invariant at 1/2/4 on top. No
+    // `bytes_on_wire` or `channel` key may leak into the summary.
+    for scheduler in [
+        SchedulerPolicy::OldestModelFirst,
+        SchedulerPolicy::Fifo,
+        SchedulerPolicy::RoundRobin,
+        SchedulerPolicy::ChannelAware,
+    ] {
+        for aggregation in [None, Some("adaptive".to_string())] {
+            for scenario in [None, Some("dropout:0.15".to_string())] {
+                let base = ScaleSimConfig {
+                    clients: 50,
+                    iterations: 140,
+                    params: 12,
+                    scheduler,
+                    aggregation: aggregation.clone(),
+                    scenario: scenario.clone(),
+                    ..ScaleSimConfig::default()
+                };
+                let (r_ref, w_ref) = run_scale_sim_full(&base).unwrap();
+                let summary = r_ref.summary_json().to_string_compact();
+                assert!(
+                    !summary.contains("\"bytes_on_wire\"") && !summary.contains("\"channel\""),
+                    "trivial channel must not emit wire metrics: {summary}"
+                );
+                let cfg = ScaleSimConfig {
+                    channel: Some("ideal".to_string()),
+                    ..base.clone()
+                };
+                let label = format!("{scheduler:?}/{aggregation:?}/{scenario:?}/ideal");
+                let (r, w) = run_scale_sim_full(&cfg).unwrap();
+                assert_eq!(
+                    r.summary_json().to_string_compact(),
+                    summary,
+                    "{label}: summary diverged from channel=None"
+                );
+                assert_eq!(w, w_ref, "{label}: model diverged from channel=None");
+                assert_eq!(r.channel_lost, 0, "{label}");
+                assert_bit_identical(&cfg, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn markov_fading_and_the_channel_aware_scheduler_are_shard_invariant() {
+    // Non-trivial fading must satisfy the same determinism contract as
+    // every other config axis — the channel state lives on the
+    // coordinator thread, so shard count may only change wall-clock —
+    // and its wire metrics must surface in the deterministic summary.
+    for scheduler in [SchedulerPolicy::OldestModelFirst, SchedulerPolicy::ChannelAware] {
+        let cfg = ScaleSimConfig {
+            clients: 80,
+            iterations: 300,
+            params: 16,
+            scheduler,
+            channel: Some("markov:0.5,500".to_string()),
+            ..ScaleSimConfig::default()
+        };
+        let report = assert_bit_identical(&cfg, &format!("{scheduler:?}/markov"));
+        assert_eq!(report.channel, "markov:0.5,500");
+        assert!(report.bytes_on_wire > 0, "{scheduler:?}: uploads were never metered");
+        assert!(
+            report.channel_lost > 0,
+            "{scheduler:?}: 300 aggregations of block fading never lost an upload"
+        );
+        assert!(
+            report.lost_uploads >= report.channel_lost,
+            "channel losses must be accounted within the loss total"
+        );
+        let summary = report.summary_json().to_string_compact();
+        assert!(summary.contains("\"bytes_on_wire\""), "{summary}");
+        assert!(summary.contains("\"channel\""), "{summary}");
+    }
+}
+
+#[test]
 fn shard_count_beyond_clients_is_clamped_not_divergent() {
     let cfg = ScaleSimConfig {
         clients: 5,
@@ -354,6 +436,39 @@ fn learner_engine_loss_accounting_is_shard_invariant_under_upload_loss() {
     let r = assert_learner_bit_identical(cfg, "upload_loss=0.2/churn");
     assert!(r.lost_uploads > 0, "expected transit losses");
     assert!(r.mean_train_loss > 0.0, "losses must be recorded");
+}
+
+#[test]
+fn learner_engine_channel_matrix_matches_the_scale_contract() {
+    // The learner pair under the channel axis: `ideal` spelled out is
+    // byte-identical to the default, and markov fading with the
+    // channel-aware scheduler is shard-invariant with real training on
+    // every path.
+    let r_base = assert_learner_bit_identical(learner_cfg(), "no channel");
+    let ideal = RunConfig {
+        channel: Some("ideal".to_string()),
+        ..learner_cfg()
+    };
+    let r_ideal = assert_learner_bit_identical(ideal, "channel=ideal");
+    assert_eq!(
+        r_ideal.summary_json().to_string_compact(),
+        r_base.summary_json().to_string_compact(),
+        "ideal channel must leave the learner summary byte-identical"
+    );
+    assert_eq!(r_ideal.channel_lost, 0);
+    let markov = RunConfig {
+        scheduler: SchedulerPolicy::ChannelAware,
+        channel: Some("markov:0.5,500".to_string()),
+        max_slots: 6.0,
+        ..learner_cfg()
+    };
+    let r = assert_learner_bit_identical(markov, "channel-aware/markov");
+    assert_eq!(r.channel, "markov:0.5,500");
+    assert!(r.bytes_on_wire > 0, "uploads were never metered");
+    assert!(
+        r.summary_json().to_string_compact().contains("\"bytes_on_wire\""),
+        "fading runs must surface wire metrics in the summary"
+    );
 }
 
 #[test]

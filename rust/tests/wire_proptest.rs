@@ -18,7 +18,11 @@
 //! 5. every legal frame round-trips byte-for-byte, including raw-bit
 //!    floats (NaN payloads and all), under randomized tensor schemas;
 //! 6. the incremental `FrameReader` delivers the same frame bodies as
-//!    the blocking reader, whatever the chunking.
+//!    the blocking reader, whatever the chunking;
+//! 7. `DeltaUpdate` frames round-trip byte-for-byte like any other
+//!    frame, and the XOR-bitpattern codec reconstructs the sender's
+//!    exact update — bit for bit, NaN payloads included — from the
+//!    delta plus the base the leader retained.
 
 use std::io::Read;
 
@@ -64,9 +68,9 @@ fn random_params(rng: &mut Rng, specs: &[TensorSpec]) -> ParamSet {
     }
 }
 
-/// A random legal message for `specs` (all six variants).
+/// A random legal message for `specs` (all seven variants).
 fn random_message(rng: &mut Rng, specs: &[TensorSpec]) -> Message {
-    match rng.below(6) {
+    match rng.below(7) {
         0 => Message::Hello {
             worker: rng.next_u64() as u32,
             name: format!("worker-{} é✓", rng.below(1000)),
@@ -83,6 +87,11 @@ fn random_message(rng: &mut Rng, specs: &[TensorSpec]) -> Message {
         3 => Message::Shutdown,
         4 => Message::Lost {
             start_iteration: rng.next_u64() >> 1,
+        },
+        5 => Message::DeltaUpdate {
+            start_iteration: rng.next_u64() >> 1,
+            steps: rng.next_u64() as u32,
+            params: random_params(rng, specs),
         },
         _ => Message::Leave {
             start_iteration: rng.next_u64() >> 1,
@@ -261,6 +270,61 @@ fn legal_frames_roundtrip_byte_for_byte() {
             frame,
             "iteration {i}: round-trip not byte-for-byte"
         );
+    }
+}
+
+/// Property 7: the delta codec under raw-bit floats. A worker's
+/// `DeltaUpdate` (local XOR base) round-trips the wire byte-for-byte,
+/// reconstructs the local update *bit for bit* against the retained
+/// base — f32 arithmetic could not promise that; XOR on the bit
+/// patterns does — and carries exactly the same payload size as the
+/// full `Update` frame it replaces.
+#[test]
+fn delta_frames_reconstruct_bit_identically_to_full_frames() {
+    let mut rng = Rng::new(0xDE17A);
+    for i in 0..2_000u64 {
+        let specs: Vec<TensorSpec> = (0..1 + rng.below(3))
+            .map(|t| TensorSpec {
+                name: format!("t{t}"),
+                shape: vec![1 + rng.below(4) as usize, 1 + rng.below(4) as usize],
+            })
+            .collect();
+        let base = random_params(&mut rng, &specs);
+        let local = random_params(&mut rng, &specs);
+        let delta = wire::delta_params(&local, &base);
+        let msg = Message::DeltaUpdate {
+            start_iteration: rng.next_u64() >> 1,
+            steps: rng.next_u64() as u32,
+            params: delta,
+        };
+        let frame = wire::encode(&msg);
+        let full_frame = wire::encode(&Message::Update {
+            start_iteration: 0,
+            steps: 0,
+            params: local.clone(),
+        });
+        assert_eq!(
+            frame.len(),
+            full_frame.len(),
+            "iteration {i}: delta frames must not change the wire size"
+        );
+        let decoded = wire::decode(&frame[4..], &specs)
+            .unwrap_or_else(|e| panic!("iteration {i}: legal delta frame rejected: {e}"));
+        assert_eq!(wire::encode(&decoded), frame, "iteration {i}: round-trip");
+        let Message::DeltaUpdate { params: delta, .. } = decoded else {
+            panic!("iteration {i}: delta frame decoded as {decoded:?}");
+        };
+        let rebuilt = wire::apply_delta(&delta, &base);
+        for (a, b) in rebuilt.tensors.iter().zip(local.tensors.iter()) {
+            assert_eq!(a.data.len(), b.data.len(), "iteration {i}");
+            for (x, y) in a.data.iter().zip(b.data.iter()) {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "iteration {i}: reconstruction is not bit-exact"
+                );
+            }
+        }
     }
 }
 
