@@ -1,10 +1,16 @@
-//! Post-hoc analysis of stored figure/run records (`results/*.json`):
-//! the paper-facing comparison tables — early-stage acceleration,
-//! time-to-target-accuracy, final gaps, fairness.
+//! Post-hoc analysis of stored figure/run records (`results/*.json`)
+//! and ordered trace files (`--trace` JSONL): the paper-facing
+//! comparison tables — early-stage acceleration, time-to-target-
+//! accuracy, final gaps, fairness — plus the `repro trace` summarizer
+//! that reconstructs staleness timelines and fairness tables from a
+//! recorded event stream.
+
+use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::metrics::{ClassMetrics, EvalPoint, RunResult};
+use crate::telemetry::{jain_fairness, Histogram};
 use crate::util::json::{self, Json};
 
 /// Reload a RunResult from its JSON record (inverse of `to_json`).
@@ -22,6 +28,8 @@ pub fn run_from_json(j: &Json) -> Result<RunResult> {
     run.mean_train_loss = j.get("mean_train_loss").and_then(Json::as_f64).unwrap_or(0.0);
     run.total_ticks = j.get("total_ticks").and_then(Json::as_i64).unwrap_or(0) as u64;
     run.wallclock_secs = j.get("wallclock_secs").and_then(Json::as_f64).unwrap_or(0.0);
+    // Present only on traced records (the key is omitted otherwise).
+    run.telemetry = j.get("telemetry").cloned();
     run.uploads_per_client = j
         .get("uploads_per_client")
         .and_then(Json::as_array)
@@ -177,6 +185,221 @@ pub fn figure_table(title: &str, runs: &[RunResult]) -> String {
     out
 }
 
+/// Aggregated view of one ordered trace file (`--trace` JSONL): the
+/// `repro trace` subcommand's data model. Built by [`summarize_trace`],
+/// which doubles as the `--check` validator — every line must parse and
+/// carry its event kind's exact field set, or the summarizer errors
+/// with the offending 1-based line number.
+pub struct TraceSummary {
+    /// Total trace lines (= events).
+    pub events: u64,
+    /// Per-kind event counts, keyed by the wire `ev` tag.
+    pub kind_counts: BTreeMap<String, u64>,
+    /// Staleness histogram across `apply` events.
+    pub staleness: Histogram,
+    /// Queue-depth histogram across `grant` events.
+    pub queue_depth: Histogram,
+    /// Grant count per client (grown to the largest id seen).
+    pub grants_per_client: Vec<u64>,
+    /// Grant count per fading gain level (`sim::channel::GAIN_LADDER`).
+    pub grants_per_level: [u64; 4],
+    /// Grants issued under the ideal channel (`level: -1`).
+    pub grants_ideal: u64,
+    /// Lost uploads by cause: `[scenario, channel, disconnect]`.
+    pub lost_by_cause: [u64; 3],
+    /// Final arena high-water mark (0 when the engine has no arena).
+    pub arena_high: u64,
+    /// `(t, staleness)` per apply, in trace order — the timeline's
+    /// raw material.
+    applies: Vec<(u64, u64)>,
+    /// Largest timestamp seen across all events.
+    pub t_max: u64,
+}
+
+impl TraceSummary {
+    /// Jain fairness index over the per-client grant counts.
+    pub fn grant_fairness(&self) -> f64 {
+        jain_fairness(&self.grants_per_client)
+    }
+
+    /// Mean staleness over `buckets` equal time windows:
+    /// `(window_end_t, mean_staleness, applies_in_window)` per bucket.
+    pub fn timeline(&self, buckets: usize) -> Vec<(u64, f64, u64)> {
+        let buckets = buckets.max(1);
+        let width = (self.t_max / buckets as u64).max(1);
+        let mut sums = vec![0u64; buckets];
+        let mut counts = vec![0u64; buckets];
+        for &(t, s) in &self.applies {
+            let b = ((t / width) as usize).min(buckets - 1);
+            sums[b] += s;
+            counts[b] += 1;
+        }
+        (0..buckets)
+            .map(|b| {
+                let mean = if counts[b] == 0 {
+                    0.0
+                } else {
+                    sums[b] as f64 / counts[b] as f64
+                };
+                ((b as u64 + 1) * width, mean, counts[b])
+            })
+            .collect()
+    }
+}
+
+/// Parse and aggregate an ordered trace file (the JSONL written by
+/// `--trace`). Strict by design: any unparseable line, unknown event
+/// kind, missing field, or out-of-range value is an error naming the
+/// offending line — `repro trace --check` is exactly this call.
+pub fn summarize_trace(text: &str) -> Result<TraceSummary> {
+    let mut s = TraceSummary {
+        events: 0,
+        kind_counts: BTreeMap::new(),
+        staleness: Histogram::new(),
+        queue_depth: Histogram::new(),
+        grants_per_client: Vec::new(),
+        grants_per_level: [0; 4],
+        grants_ideal: 0,
+        lost_by_cause: [0; 3],
+        arena_high: 0,
+        applies: Vec::new(),
+        t_max: 0,
+    };
+    for (idx, line) in text.lines().enumerate() {
+        let no = idx + 1;
+        let j = json::parse(line).map_err(|e| anyhow!("trace line {no}: {e}"))?;
+        let kind = j
+            .get("ev")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("trace line {no}: missing ev tag"))?
+            .to_string();
+        let geti = |key: &str| -> Result<i64> {
+            j.get(key)
+                .and_then(Json::as_i64)
+                .ok_or_else(|| anyhow!("trace line {no}: {kind} event missing {key}"))
+        };
+        let getf = |key: &str| -> Result<f64> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("trace line {no}: {kind} event missing {key}"))
+        };
+        match kind.as_str() {
+            "class" => {
+                geti("client")?;
+                geti("class")?;
+            }
+            "channel" => {
+                let t = geti("t")? as u64;
+                geti("client")?;
+                geti("level")?;
+                s.t_max = s.t_max.max(t);
+            }
+            "grant" => {
+                let t = geti("t")? as u64;
+                let client = geti("client")? as usize;
+                let queue = geti("queue")? as u64;
+                let level = geti("level")?;
+                if client >= s.grants_per_client.len() {
+                    s.grants_per_client.resize(client + 1, 0);
+                }
+                s.grants_per_client[client] += 1;
+                s.queue_depth.record(queue);
+                match level {
+                    -1 => s.grants_ideal += 1,
+                    0..=3 => s.grants_per_level[level as usize] += 1,
+                    _ => return Err(anyhow!("trace line {no}: grant level {level} out of range")),
+                }
+                s.t_max = s.t_max.max(t);
+            }
+            "apply" => {
+                let t = geti("t")? as u64;
+                geti("client")?;
+                geti("iter")?;
+                let stale = geti("stale")? as u64;
+                getf("beta")?;
+                getf("weight")?;
+                s.staleness.record(stale);
+                s.applies.push((t, stale));
+                s.t_max = s.t_max.max(t);
+            }
+            "lost" => {
+                let t = geti("t")? as u64;
+                geti("client")?;
+                let cause = j
+                    .get("cause")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("trace line {no}: lost event missing cause"))?;
+                let slot = match cause {
+                    "scenario" => 0,
+                    "channel" => 1,
+                    "disconnect" => 2,
+                    other => {
+                        return Err(anyhow!("trace line {no}: unknown loss cause {other:?}"))
+                    }
+                };
+                s.lost_by_cause[slot] += 1;
+                s.t_max = s.t_max.max(t);
+            }
+            "arena" => {
+                let t = geti("t")? as u64;
+                let high = geti("high")? as u64;
+                s.arena_high = s.arena_high.max(high);
+                s.t_max = s.t_max.max(t);
+            }
+            other => return Err(anyhow!("trace line {no}: unknown event kind {other:?}")),
+        }
+        *s.kind_counts.entry(kind).or_insert(0) += 1;
+        s.events += 1;
+    }
+    Ok(s)
+}
+
+/// Render the `repro trace` report: event counts, upload outcomes,
+/// fairness, staleness aggregates and the bucketed staleness timeline.
+pub fn trace_table(s: &TraceSummary) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== trace: {} events ==\n", s.events));
+    for (k, n) in &s.kind_counts {
+        out.push_str(&format!("  {k:<8} {n:>10}\n"));
+    }
+    let applied = s.staleness.count();
+    let lost: u64 = s.lost_by_cause.iter().sum();
+    out.push_str(&format!(
+        "uploads: {} applied, {} lost (scenario {}, channel {}, disconnect {})\n",
+        applied, lost, s.lost_by_cause[0], s.lost_by_cause[1], s.lost_by_cause[2]
+    ));
+    out.push_str(&format!(
+        "staleness: mean {:.2}, max {}\n",
+        s.staleness.mean(),
+        s.staleness.max()
+    ));
+    out.push_str(&format!(
+        "queue depth at grant: mean {:.2}, max {}\n",
+        s.queue_depth.mean(),
+        s.queue_depth.max()
+    ));
+    let grants: u64 = s.grants_per_client.iter().sum();
+    out.push_str(&format!(
+        "grants: {} across {} clients, jain {:.4}\n",
+        grants,
+        s.grants_per_client.len(),
+        s.grant_fairness()
+    ));
+    if s.grants_per_level.iter().any(|&n| n > 0) {
+        out.push_str(&format!("grants per gain level: {:?}\n", s.grants_per_level));
+    }
+    if s.arena_high > 0 {
+        out.push_str(&format!("arena high-water: {}\n", s.arena_high));
+    }
+    if !s.applies.is_empty() {
+        out.push_str("staleness timeline (t<=, mean, applies):\n");
+        for (t, mean, n) in s.timeline(10) {
+            out.push_str(&format!("  {t:>12} {mean:>8.2} {n:>8}\n"));
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -234,6 +457,60 @@ mod tests {
         // Trivial-profile runs render no class block.
         let plain = figure_table("t", &[fake_run("fedavg", &[0.1])]);
         assert!(!plain.contains("classes"), "{plain}");
+    }
+
+    #[test]
+    fn trace_summary_aggregates_and_renders() {
+        let text = concat!(
+            "{\"ev\":\"class\",\"client\":0,\"class\":1}\n",
+            "{\"ev\":\"grant\",\"t\":5,\"client\":0,\"queue\":2,\"level\":-1}\n",
+            "{\"ev\":\"apply\",\"t\":9,\"client\":0,\"iter\":1,\"stale\":0,",
+            "\"beta\":0.8,\"weight\":0.2}\n",
+            "{\"ev\":\"lost\",\"t\":12,\"client\":1,\"cause\":\"channel\"}\n",
+            "{\"ev\":\"arena\",\"t\":3,\"high\":2}\n",
+        );
+        let s = summarize_trace(text).unwrap();
+        assert_eq!(s.events, 5);
+        assert_eq!(s.kind_counts.get("grant"), Some(&1));
+        assert_eq!(s.staleness.count(), 1);
+        assert_eq!(s.lost_by_cause, [0, 1, 0]);
+        assert_eq!(s.grants_per_client, vec![1]);
+        assert_eq!(s.grants_ideal, 1);
+        assert_eq!(s.arena_high, 2);
+        assert_eq!(s.t_max, 12);
+        assert_eq!(s.grant_fairness(), 1.0);
+        let table = trace_table(&s);
+        assert!(table.contains("jain"), "{table}");
+        assert!(table.contains("arena high-water: 2"), "{table}");
+        assert!(table.contains("staleness timeline"), "{table}");
+        // Ten timeline windows cover every apply exactly once.
+        let covered: u64 = s.timeline(10).iter().map(|&(_, _, n)| n).sum();
+        assert_eq!(covered, 1);
+    }
+
+    #[test]
+    fn trace_summary_rejects_malformed_lines() {
+        assert!(summarize_trace("not json\n").is_err());
+        let err = summarize_trace("{\"ev\":\"mystery\"}\n").unwrap_err();
+        assert!(err.to_string().contains("line 1"), "{err}");
+        let err = summarize_trace("{\"ev\":\"grant\",\"t\":1,\"client\":0,\"queue\":0}\n")
+            .unwrap_err();
+        assert!(err.to_string().contains("missing level"), "{err}");
+        let err = summarize_trace("{\"ev\":\"lost\",\"t\":1,\"client\":0,\"cause\":\"x\"}\n")
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown loss cause"), "{err}");
+    }
+
+    #[test]
+    fn telemetry_key_roundtrips_through_run_records() {
+        let mut r = fake_run("x", &[0.1]);
+        assert!(run_from_json(&r.to_json()).unwrap().telemetry.is_none());
+        let mut reg = Json::object();
+        reg.set("uploads_applied", Json::Int(5));
+        r.telemetry = Some(reg);
+        let back = run_from_json(&r.to_json()).unwrap();
+        let t = back.telemetry.expect("telemetry survived the roundtrip");
+        assert_eq!(t.get("uploads_applied").unwrap().as_i64(), Some(5));
     }
 
     #[test]

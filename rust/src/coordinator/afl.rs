@@ -51,6 +51,7 @@ use crate::sim::{
     capacity, channel, scenario, ChannelState, ComputeModel, EventQueue, Scenario, Ticks,
     UplinkChannel,
 };
+use crate::telemetry::{LossCause, Telemetry};
 use crate::util::rng::Rng;
 
 /// The learner-driven engines' event vocabulary, shared with the
@@ -100,6 +101,7 @@ pub fn adaptive_steps(base: usize, factor: f64, enabled: bool) -> usize {
 /// scheduler view) and the winner's slot is stretched by its gain; the
 /// trivial `ideal` model skips both, leaving the pre-channel timeline
 /// untouched.
+#[allow(clippy::too_many_arguments)]
 pub(super) fn grant_next(
     scheduler: &mut UploadScheduler,
     channel: &mut UplinkChannel,
@@ -108,6 +110,7 @@ pub(super) fn grant_next(
     queue: &mut EventQueue<Event>,
     now: Ticks,
     tau_up_for: impl Fn(usize) -> Ticks,
+    tel: &mut Telemetry,
 ) {
     if channel.is_free(now) {
         let winner = if fading.is_trivial() {
@@ -119,6 +122,16 @@ pub(super) fn grant_next(
             scheduler.grant_with_gains(Some(gains))
         };
         if let Some(winner) = winner {
+            if tel.is_enabled() {
+                let level = if fading.is_trivial() {
+                    -1
+                } else {
+                    channel::level_of_gain(fading.gain(winner, now))
+                        .map(|l| l as i8)
+                        .unwrap_or(-1)
+                };
+                tel.grant(now, winner, scheduler.pending_len(), level);
+            }
             let dur = fading.scaled_tau(winner, now, tau_up_for(winner));
             let done = channel.reserve(now, dur);
             queue.schedule_at(done, Event::UploadDone { client: winner });
@@ -147,6 +160,20 @@ pub fn run_afl_full(
     policy: Box<dyn AggregationPolicy>,
     sched_policy: SchedulerPolicy,
     label: String,
+) -> Result<(RunResult, ParamSet)> {
+    run_afl_traced(ctx, policy, sched_policy, label, &mut Telemetry::off())
+}
+
+/// As [`run_afl_full`], recording ordered trace events and aggregate
+/// histograms through `tel`. All emission happens on this (the only)
+/// thread at the engine's decision points, so the sharded twin
+/// (`coordinator::learner_shard`) reproduces the trace byte-for-byte.
+pub fn run_afl_traced(
+    ctx: &FlContext<'_>,
+    policy: Box<dyn AggregationPolicy>,
+    sched_policy: SchedulerPolicy,
+    label: String,
+    tel: &mut Telemetry,
 ) -> Result<(RunResult, ParamSet)> {
     let cfg = ctx.cfg;
     let m = cfg.clients;
@@ -249,6 +276,15 @@ pub fn run_afl_full(
         Some(sc) => scaled_tau_up(cfg.time.tau_up, sc.map_of(client).rate()),
     };
 
+    // Telemetry setup mirrors the sharded twin exactly (same call
+    // points before the t=0 broadcast), so traces agree byte-for-byte.
+    tel.bind(m);
+    if let Some(sc) = &subctx {
+        for (c, &k) in sc.class_of.iter().enumerate() {
+            tel.class_assign(c, k);
+        }
+    }
+
     // t=0: the server broadcasts w_0 to everyone (Algorithm 1 line 1).
     // One shared snapshot for the whole broadcast.
     let w0 = Arc::new(core.global().clone());
@@ -308,6 +344,7 @@ pub fn run_afl_full(
                     &mut queue,
                     now,
                     tau_up_of,
+                    tel,
                 );
             }
             Event::UploadDone { client } => {
@@ -332,10 +369,21 @@ pub fn run_afl_full(
                 if chan_lost {
                     channel_lost += 1;
                 }
-                if scenario_lost
-                    || chan_lost
-                    || (cfg.upload_loss > 0.0 && jrng.f64() < cfg.upload_loss)
-                {
+                // The cause ladder matches the draw order (scenario,
+                // channel, then the legacy knob — which short-circuits,
+                // preserving the `jrng` sequence); the legacy knob
+                // reports as scenario loss, per the trace schema.
+                let lost = if scenario_lost {
+                    Some(LossCause::Scenario)
+                } else if chan_lost {
+                    Some(LossCause::Channel)
+                } else if cfg.upload_loss > 0.0 && jrng.f64() < cfg.upload_loss {
+                    Some(LossCause::Scenario)
+                } else {
+                    None
+                };
+                if let Some(cause) = lost {
+                    tel.upload_lost(now, client, cause);
                     core.on_lost_upload(client);
                     let i = core.issue_to(client);
                     queue.schedule_in(cfg.time.tau_down, Event::DownloadDone {
@@ -351,25 +399,32 @@ pub fn run_afl_full(
                         &mut queue,
                         now,
                         tau_up_of,
+                        tel,
                     );
                     continue;
                 }
                 // Evaluate cadence points that precede this aggregation.
                 rec.catch_up(now, core.global(), core.iteration())?;
 
-                match &subctx {
-                    None => {
-                        core.on_update(client, i, &local, ctx)?; // eq. (3)/(11)
-                    }
+                let out = match &subctx {
+                    None => core.on_update(client, i, &local, ctx)?, // eq. (3)/(11)
                     Some(sc) => {
                         // Pack the client's covered slice and merge it
                         // slice-wise (uncovered elements keep the
                         // previous global).
                         let map = sc.map_of(client);
                         map.extract_from_set(&local, &mut subbuf[..map.numel()]);
-                        core.on_update_submodel(client, i, &subbuf[..map.numel()], map)?;
+                        core.on_update_submodel(client, i, &subbuf[..map.numel()], map)?
                     }
-                }
+                };
+                tel.upload_applied(
+                    now,
+                    client,
+                    out.iteration,
+                    out.staleness,
+                    out.beta,
+                    out.weight,
+                );
 
                 // Fresh global goes back to this client only (a snapshot:
                 // further aggregations must not mutate an in-flight model).
@@ -388,6 +443,7 @@ pub fn run_afl_full(
                     &mut queue,
                     now,
                     tau_up_of,
+                    tel,
                 );
             }
         }
@@ -463,7 +519,9 @@ pub fn run_afl_full(
         channel_lost,
         total_ticks: max_ticks,
     };
-    Ok((rec.into_result(stats), core.into_global()))
+    let mut result = rec.into_result(stats);
+    result.telemetry = tel.registry_json();
+    Ok((result, core.into_global()))
 }
 
 #[cfg(test)]

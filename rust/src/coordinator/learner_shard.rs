@@ -80,6 +80,7 @@ use crate::sim::{
     capacity, channel, scenario, ChannelState, ClientPartition, ComputeModel, EventQueue,
     Scenario, UplinkChannel,
 };
+use crate::telemetry::{LossCause, Telemetry};
 use crate::util::rng::Rng;
 
 /// One local-training job: everything `Learner::train` needs, owned, so
@@ -125,6 +126,22 @@ pub fn run_afl_sharded_full(
     sched_policy: SchedulerPolicy,
     label: String,
     shards: usize,
+) -> Result<(RunResult, ParamSet)> {
+    run_afl_sharded_traced(ctx, policy, sched_policy, label, shards, &mut Telemetry::off())
+}
+
+/// As [`run_afl_sharded_full`], recording ordered trace events and
+/// aggregate histograms through `tel`. Every emission happens on the
+/// coordinator thread at the same decision points as the sequential
+/// spec ([`super::afl::run_afl_traced`]), so the trace is byte-identical
+/// at any shard count.
+pub fn run_afl_sharded_traced(
+    ctx: &FlContext<'_>,
+    policy: Box<dyn AggregationPolicy>,
+    sched_policy: SchedulerPolicy,
+    label: String,
+    shards: usize,
+    tel: &mut Telemetry,
 ) -> Result<(RunResult, ParamSet)> {
     ensure!(shards >= 1, "train requires shards >= 1");
     let cfg = ctx.cfg;
@@ -260,6 +277,16 @@ pub fn run_afl_sharded_full(
         // must observe worker death, not self-deadlock.
         drop(done_tx);
 
+        // Telemetry setup mirrors the sequential spec exactly (same
+        // call points before the t=0 broadcast), so traces agree
+        // byte-for-byte at every shard count.
+        tel.bind(m);
+        if let Some(sc) = &subctx {
+            for (c, &k) in sc.class_of.iter().enumerate() {
+                tel.class_assign(c, k);
+            }
+        }
+
         // t=0: the server broadcasts w_0 to everyone (Algorithm 1
         // line 1). One shared snapshot for the whole broadcast.
         let w0 = Arc::new(core.global().clone());
@@ -325,6 +352,7 @@ pub fn run_afl_sharded_full(
                         &mut queue,
                         now,
                         tau_up_of,
+                        tel,
                     );
                 }
                 Event::UploadDone { client } => {
@@ -358,10 +386,20 @@ pub fn run_afl_sharded_full(
                     if chan_lost {
                         channel_lost += 1;
                     }
-                    if scenario_lost
-                        || chan_lost
-                        || (cfg.upload_loss > 0.0 && jrng.f64() < cfg.upload_loss)
-                    {
+                    // Cause ladder in draw order, short-circuiting like
+                    // the sequential spec so the `jrng` sequence holds;
+                    // the legacy knob reports as scenario loss.
+                    let lost = if scenario_lost {
+                        Some(LossCause::Scenario)
+                    } else if chan_lost {
+                        Some(LossCause::Channel)
+                    } else if cfg.upload_loss > 0.0 && jrng.f64() < cfg.upload_loss {
+                        Some(LossCause::Scenario)
+                    } else {
+                        None
+                    };
+                    if let Some(cause) = lost {
+                        tel.upload_lost(now, client, cause);
                         core.on_lost_upload(client);
                         let i = core.issue_to(client);
                         queue.schedule_in(cfg.time.tau_down, Event::DownloadDone {
@@ -377,21 +415,28 @@ pub fn run_afl_sharded_full(
                             &mut queue,
                             now,
                             tau_up_of,
+                            tel,
                         );
                         continue;
                     }
                     rec.catch_up(now, core.global(), core.iteration())?;
 
-                    match &subctx {
-                        None => {
-                            core.on_update(client, i, &local, ctx)?; // eq. (3)/(11)
-                        }
+                    let out = match &subctx {
+                        None => core.on_update(client, i, &local, ctx)?, // eq. (3)/(11)
                         Some(sc) => {
                             let map = sc.map_of(client);
                             map.extract_from_set(&local, &mut subbuf[..map.numel()]);
-                            core.on_update_submodel(client, i, &subbuf[..map.numel()], map)?;
+                            core.on_update_submodel(client, i, &subbuf[..map.numel()], map)?
                         }
-                    }
+                    };
+                    tel.upload_applied(
+                        now,
+                        client,
+                        out.iteration,
+                        out.staleness,
+                        out.beta,
+                        out.weight,
+                    );
 
                     let i = core.issue_to(client);
                     queue.schedule_in(cfg.time.tau_down, Event::DownloadDone {
@@ -407,6 +452,7 @@ pub fn run_afl_sharded_full(
                         &mut queue,
                         now,
                         tau_up_of,
+                        tel,
                     );
                 }
             }
@@ -501,6 +547,7 @@ pub fn run_afl_sharded_full(
 
     let mut result = result;
     result.shards = k_shards;
+    result.telemetry = tel.registry_json();
     Ok((result, model))
 }
 

@@ -51,26 +51,28 @@ pub mod shard;
 pub mod staleness;
 
 pub use self::core::{AggregationOutcome, ModelAggregator, NativeAggregator, ServerCore};
-pub use afl::{adaptive_steps, run_afl, run_afl_full};
-pub use learner_shard::{run_afl_sharded, run_afl_sharded_full};
+pub use afl::{adaptive_steps, run_afl, run_afl_full, run_afl_traced};
 pub use afl_baseline::run_afl_baseline;
 pub use beta_solver::{effective_coefficients, naive_effective_coefficients, solve_betas};
+pub use learner_shard::{run_afl_sharded, run_afl_sharded_full, run_afl_sharded_traced};
 pub use policy::{
     AdaptiveDistance, AggregationPolicy, FedAsyncPoly, NaiveAlpha, PolicyParams, SchedulingPolicy,
     SolvedBeta, StalenessEq11, UpdateObservation,
 };
 pub use runner::{FlContext, Recorder, RunStats};
 pub use scale::{
-    run_scale_sim, run_scale_sim_full, CapacityClassCell, ScaleSimConfig, ScaleSimReport,
+    run_scale_sim, run_scale_sim_full, run_scale_sim_traced, CapacityClassCell, ScaleSimConfig,
+    ScaleSimReport,
 };
 pub use scheduler::{SchedulerPolicy, UploadScheduler};
-pub use shard::{run_sharded_sim, run_sharded_sim_full};
+pub use shard::{run_sharded_sim, run_sharded_sim_full, run_sharded_sim_traced};
 pub use staleness::{local_weight, StalenessTracker};
 
 use anyhow::{Context, Result};
 
 use crate::config::{Algorithm, RunConfig};
 use crate::metrics::RunResult;
+use crate::telemetry::Telemetry;
 
 /// Resolve the aggregation policy (and its series label) for an AFL run:
 /// the config's explicit `aggregation` spelling when set, else the
@@ -118,6 +120,14 @@ pub fn effective_shards(cfg: &RunConfig) -> usize {
 /// loop stays the single-worker production path (and the executable
 /// spec the sharded engine is tested against).
 pub fn run(ctx: &FlContext<'_>) -> Result<RunResult> {
+    run_traced(ctx, &mut Telemetry::off())
+}
+
+/// As [`run`], recording ordered trace events and aggregate histograms
+/// through `tel` for the algorithms whose engines are instrumented (the
+/// learner-driven AFL pair). SFL and the baseline sweep have no
+/// asynchronous decision points to trace; they run untraced.
+pub fn run_traced(ctx: &FlContext<'_>, tel: &mut Telemetry) -> Result<RunResult> {
     match ctx.cfg.algorithm {
         Algorithm::Sfl => sfl::run_sfl(ctx),
         Algorithm::AflBaseline => run_afl_baseline(ctx),
@@ -125,9 +135,11 @@ pub fn run(ctx: &FlContext<'_>) -> Result<RunResult> {
             let (policy, label) = resolve_policy(ctx.cfg)?;
             let shards = effective_shards(ctx.cfg);
             if shards == 1 {
-                run_afl(ctx, policy, ctx.cfg.scheduler, label)
+                run_afl_traced(ctx, policy, ctx.cfg.scheduler, label, tel)
+                    .map(|(result, _)| result)
             } else {
-                run_afl_sharded(ctx, policy, ctx.cfg.scheduler, label, shards)
+                run_afl_sharded_traced(ctx, policy, ctx.cfg.scheduler, label, shards, tel)
+                    .map(|(result, _)| result)
             }
         }
     }

@@ -209,6 +209,9 @@ impl<'a> Recorder<'a> {
             // Engines that ran multi-core overwrite this after assembly
             // (`coordinator::learner_shard`); everything else is 1.
             shards: 1,
+            // Traced engines overwrite this with the registry JSON
+            // after assembly; untraced runs stay `None`.
+            telemetry: None,
         }
     }
 }

@@ -43,6 +43,7 @@ use crate::sim::{
     capacity, channel, scenario, CapacityProfile, ChannelState, ComputeModel, EventQueue,
     HeterogeneityProfile, Scenario, Ticks, TimeModel, UplinkChannel,
 };
+use crate::telemetry::{LossCause, Telemetry};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -338,6 +339,10 @@ pub struct ScaleSimReport {
     pub arena_live: usize,
     /// L2 norm of the final global model (finite-ness sanity value).
     pub final_norm: f64,
+    /// Telemetry aggregates (`telemetry::Registry` JSON) — `Some` only
+    /// when the run was traced, and carried by the full record only,
+    /// never the deterministic summary.
+    pub telemetry: Option<Json>,
 }
 
 impl ScaleSimReport {
@@ -397,6 +402,11 @@ impl ScaleSimReport {
             // wire meter (idempotent re-set under a fading channel).
             .set("channel", Json::Str(self.channel.clone()))
             .set("bytes_on_wire", Json::Int(self.bytes_on_wire as i64));
+        // Telemetry aggregates appear only when the run was traced, so
+        // untraced records stay byte-identical to pre-telemetry builds.
+        if let Some(t) = &self.telemetry {
+            o.set("telemetry", t.clone());
+        }
         o
     }
 
@@ -502,6 +512,13 @@ pub(crate) fn synth_train(buf: &mut [f32], delta: f32, passes: u32) {
 /// buffer, O(pending) per grant) so gain-sensitive policies
 /// (`channel-aware`) arbitrate on current link state; the trivial
 /// channel takes the exact pre-channel path.
+///
+/// Every grant is the single ordered decision point, so this is also
+/// where the telemetry Grant event fires (with the post-grant queue
+/// depth and the winner's gain level). Gain lookups for telemetry only
+/// happen when tracing is on — harmless either way, since the fading
+/// process is a pure function of (seed, client, block).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn grant_next(
     scheduler: &mut UploadScheduler,
     channel: &mut UplinkChannel,
@@ -510,6 +527,7 @@ pub(crate) fn grant_next(
     queue: &mut EventQueue<Event>,
     now: Ticks,
     tau_up_for: impl Fn(usize) -> Ticks,
+    tel: &mut Telemetry,
 ) {
     if channel.is_free(now) {
         let winner = if fading.is_trivial() {
@@ -523,6 +541,16 @@ pub(crate) fn grant_next(
             scheduler.grant_with_gains(Some(gains))
         };
         if let Some(winner) = winner {
+            if tel.is_enabled() {
+                let level = if fading.is_trivial() {
+                    -1
+                } else {
+                    channel::level_of_gain(fading.gain(winner, now))
+                        .map(|l| l as i8)
+                        .unwrap_or(-1)
+                };
+                tel.grant(now, winner, scheduler.pending_len(), level);
+            }
             let dur = fading.scaled_tau(winner, now, tau_up_for(winner));
             let done = channel.reserve(now, dur);
             queue.schedule_at(done, Event::Upload { client: winner });
@@ -658,6 +686,17 @@ pub fn run_scale_sim(cfg: &ScaleSimConfig) -> Result<ScaleSimReport> {
 /// bit-identity witness `rust/tests/sharded.rs` compares across
 /// engines).
 pub fn run_scale_sim_full(cfg: &ScaleSimConfig) -> Result<(ScaleSimReport, ParamSet)> {
+    run_scale_sim_traced(cfg, &mut Telemetry::off())
+}
+
+/// As [`run_scale_sim_full`], recording trace events and aggregates
+/// into `tel`. With a disabled handle ([`Telemetry::off`]) the loop is
+/// the exact untraced hot path: every telemetry call is one branch,
+/// zero allocation, and the report's `telemetry` field stays `None`.
+pub fn run_scale_sim_traced(
+    cfg: &ScaleSimConfig,
+    tel: &mut Telemetry,
+) -> Result<(ScaleSimReport, ParamSet)> {
     let SimSetup {
         m,
         target,
@@ -705,6 +744,15 @@ pub fn run_scale_sim_full(cfg: &ScaleSimConfig) -> Result<(ScaleSimReport, Param
     let mut bytes_on_wire = 0u64;
     let mut channel_lost = 0u64;
 
+    // Telemetry setup mirrors the sharded engine exactly (same call
+    // points before the t=0 broadcast), so traces agree byte-for-byte.
+    tel.bind(m);
+    if let Some(ctx) = &submodel {
+        for (c, &k) in ctx.class_of.iter().enumerate() {
+            tel.class_assign(c, k);
+        }
+    }
+
     // t=0 broadcast: every client is issued w_0 (stamps only — the
     // synthetic trainer reads the live global at compute time).
     for c in 0..m {
@@ -745,6 +793,7 @@ pub fn run_scale_sim_full(cfg: &ScaleSimConfig) -> Result<(ScaleSimReport, Param
                 // slices, packed into the slot prefix — same recycled
                 // full-size slot, zero extra allocation.
                 let slot = arena.alloc();
+                tel.arena_alloc(now);
                 let d = 0.02 * urng.f32() - 0.01;
                 match &submodel {
                     None => {
@@ -769,6 +818,7 @@ pub fn run_scale_sim_full(cfg: &ScaleSimConfig) -> Result<(ScaleSimReport, Param
                     &mut queue,
                     now,
                     tau_up_of,
+                    tel,
                 );
             }
             Event::Upload { client } => {
@@ -789,10 +839,16 @@ pub fn run_scale_sim_full(cfg: &ScaleSimConfig) -> Result<(ScaleSimReport, Param
                     channel_lost += 1;
                 }
                 if scenario_lost || chan_lost {
+                    let cause = if scenario_lost {
+                        LossCause::Scenario
+                    } else {
+                        LossCause::Channel
+                    };
+                    tel.upload_lost(now, client, cause);
                     core.on_lost_upload(client);
                     arena.free(slot);
                 } else {
-                    match &submodel {
+                    let out = match &submodel {
                         None => core.on_update_flat(client, i, arena.get(slot))?,
                         Some(ctx) => {
                             let map = ctx.map_of(client);
@@ -804,8 +860,17 @@ pub fn run_scale_sim_full(cfg: &ScaleSimConfig) -> Result<(ScaleSimReport, Param
                             )?
                         }
                     };
+                    tel.upload_applied(
+                        now,
+                        client,
+                        out.iteration,
+                        out.staleness,
+                        out.beta,
+                        out.weight,
+                    );
                     arena.free(slot);
                 }
+                tel.arena_free();
                 let i = core.issue_to(client);
                 queue.schedule_in(cfg.time.tau_down, Event::Download { client, i });
                 grant_next(
@@ -816,6 +881,7 @@ pub fn run_scale_sim_full(cfg: &ScaleSimConfig) -> Result<(ScaleSimReport, Param
                     &mut queue,
                     now,
                     tau_up_of,
+                    tel,
                 );
             }
         }
@@ -856,6 +922,7 @@ pub fn run_scale_sim_full(cfg: &ScaleSimConfig) -> Result<(ScaleSimReport, Param
         arena_slots: arena.slots(),
         arena_live: arena.live(),
         final_norm: core.global().l2_norm(),
+        telemetry: tel.registry_json(),
     };
     Ok((report, core.into_global()))
 }
@@ -1052,11 +1119,49 @@ mod tests {
             assert!(j.get(key).is_some(), "missing {key}");
         }
         // The deterministic summary must exclude anything wall-clock-
-        // or thread-count-dependent.
+        // or thread-count-dependent, and the telemetry aggregates.
         let s = run_scale_sim(&cfg).unwrap().summary_json();
-        for key in ["wall_secs", "events_per_sec", "aggs_per_sec", "shards"] {
+        for key in [
+            "wall_secs",
+            "events_per_sec",
+            "aggs_per_sec",
+            "shards",
+            "telemetry",
+        ] {
             assert!(s.get(key).is_none(), "summary must not carry {key}");
         }
+    }
+
+    #[test]
+    fn telemetry_rides_the_full_record_only_when_traced() {
+        let cfg = ScaleSimConfig {
+            clients: 30,
+            iterations: 60,
+            params: 4,
+            channel: Some("markov:0.5,200".into()),
+            ..ScaleSimConfig::default()
+        };
+        let (plain, _) = run_scale_sim_full(&cfg).unwrap();
+        assert!(plain.telemetry.is_none());
+        assert!(plain.to_json().get("telemetry").is_none());
+
+        let mut tel = Telemetry::buffered();
+        let (traced, _) = run_scale_sim_traced(&cfg, &mut tel).unwrap();
+        let reg = traced.telemetry.as_ref().expect("traced run carries aggregates");
+        assert_eq!(
+            reg.get("uploads_applied").unwrap().as_i64().unwrap() as u64,
+            traced.aggregations
+        );
+        assert!(traced.to_json().get("telemetry").is_some());
+        assert!(traced.summary_json().get("telemetry").is_none());
+        // And tracing never changes the deterministic summary.
+        assert_eq!(
+            plain.summary_json().to_string_compact(),
+            traced.summary_json().to_string_compact()
+        );
+        let trace = String::from_utf8(tel.take_buffer()).unwrap();
+        assert!(trace.lines().count() > 0);
+        assert!(trace.lines().all(|l| l.starts_with("{\"ev\":\"")));
     }
 
     #[test]

@@ -62,6 +62,7 @@ use super::scheduler::UploadScheduler;
 use crate::model::{ParamArena, ParamSet, SlotId, SlotWindow};
 use crate::net::wire::flat_update_wire_bytes;
 use crate::sim::{ClientPartition, EventQueue, UplinkChannel};
+use crate::telemetry::{LossCause, Telemetry};
 
 /// One unit of shard-worker work: run the synthetic trainer over the
 /// leading `len` elements of `slot` (which the coordinator has
@@ -90,6 +91,19 @@ pub fn run_sharded_sim(cfg: &ScaleSimConfig, shards: usize) -> Result<ScaleSimRe
 pub fn run_sharded_sim_full(
     cfg: &ScaleSimConfig,
     shards: usize,
+) -> Result<(ScaleSimReport, ParamSet)> {
+    run_sharded_sim_traced(cfg, shards, &mut Telemetry::off())
+}
+
+/// As [`run_sharded_sim_full`], recording trace events and aggregates
+/// into `tel`. All emission happens on the coordinator thread at the
+/// same ordered decision points as the sequential reference, so the
+/// trace bytes are identical to [`super::scale::run_scale_sim_traced`]
+/// at every shard count (`rust/tests/sharded.rs` pins this).
+pub fn run_sharded_sim_traced(
+    cfg: &ScaleSimConfig,
+    shards: usize,
+    tel: &mut Telemetry,
 ) -> Result<(ScaleSimReport, ParamSet)> {
     ensure!(shards >= 1, "sim requires shards >= 1");
     let SimSetup {
@@ -181,6 +195,16 @@ pub fn run_sharded_sim_full(
         // Workers hold the only clones; completions stop when they exit.
         drop(done_tx);
 
+        // Telemetry setup mirrors the sequential reference exactly
+        // (same call points before the t=0 broadcast), so traces agree
+        // byte-for-byte at every shard count.
+        tel.bind(m);
+        if let Some(ctx) = &submodel {
+            for (c, &k) in ctx.class_of.iter().enumerate() {
+                tel.class_assign(c, k);
+            }
+        }
+
         // t=0 broadcast: every client is issued w_0 (stamps only — the
         // synthetic trainer reads the live global at compute time).
         for c in 0..m {
@@ -214,6 +238,7 @@ pub fn run_sharded_sim_full(
                     // elementwise training passes to the client's
                     // shard worker.
                     let slot = arena.alloc();
+                    tel.arena_alloc(now);
                     let d = 0.02 * urng.f32() - 0.01;
                     // SAFETY: freshly allocated slot; no worker holds it.
                     let buf = unsafe { window.slot_mut(slot.index()) };
@@ -253,6 +278,7 @@ pub fn run_sharded_sim_full(
                         &mut queue,
                         now,
                         tau_up_of,
+                        tel,
                     );
                 }
                 Event::Upload { client } => {
@@ -281,21 +307,36 @@ pub fn run_sharded_sim_full(
                         channel_lost += 1;
                     }
                     if scenario_lost || chan_lost {
+                        let cause = if scenario_lost {
+                            LossCause::Scenario
+                        } else {
+                            LossCause::Channel
+                        };
+                        tel.upload_lost(now, client, cause);
                         core.on_lost_upload(client);
                         arena.free(slot);
                     } else {
                         // SAFETY: completion joined above; no worker
                         // touches this slot anymore.
                         let buf = unsafe { window.slot(slot.index()) };
-                        match &submodel {
+                        let out = match &submodel {
                             None => core.on_update_flat(client, i, buf)?,
                             Some(ctx) => {
                                 let map = ctx.map_of(client);
                                 core.on_update_submodel(client, i, &buf[..map.numel()], map)?
                             }
                         };
+                        tel.upload_applied(
+                            now,
+                            client,
+                            out.iteration,
+                            out.staleness,
+                            out.beta,
+                            out.weight,
+                        );
                         arena.free(slot);
                     }
+                    tel.arena_free();
                     let i = core.issue_to(client);
                     queue.schedule_in(cfg.time.tau_down, Event::Download { client, i });
                     grant_next(
@@ -306,6 +347,7 @@ pub fn run_sharded_sim_full(
                         &mut queue,
                         now,
                         tau_up_of,
+                        tel,
                     );
                 }
             }
@@ -351,6 +393,7 @@ pub fn run_sharded_sim_full(
             arena_slots: peak_live,
             arena_live: live,
             final_norm: core.global().l2_norm(),
+            telemetry: tel.registry_json(),
         };
         Ok((report, core.into_global()))
     })?;

@@ -71,6 +71,7 @@ pub mod perf;
 pub mod runtime;
 pub mod session;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 
 pub use config::{Algorithm, RunConfig};

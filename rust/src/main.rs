@@ -11,10 +11,15 @@
 //!   smoke     compile + run every artifact once (installation check)
 //!   sim       coordinator-only scale simulation (10^6 clients, no learner)
 //!   bench     pinned-seed perf suite -> `BENCH_<date>.json` (+ CI --check gate)
+//!   trace     validate / summarize a `--trace` JSONL file (staleness
+//!             timeline, fairness, loss causes)
 //!
 //! Every multi-run command (`compare`, `figures`, `sweep`, `grid`)
 //! executes through the experiment engine (`csmaafl::experiment`) on
 //! `--jobs N` worker threads with byte-identical output at any N.
+//! `train`, `sim` and `serve` accept `--trace <file>` (ordered telemetry
+//! events as JSONL — see `docs/OBSERVABILITY.md`); every command honors
+//! `--log-level` (or the `REPRO_LOG` env var).
 //!
 //! The argument parser is hand-rolled: the crate stays
 //! dependency-minimal by design (`anyhow` is the only dependency — no
@@ -23,13 +28,16 @@
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use csmaafl::config::RunConfig;
-use csmaafl::coordinator::{run_sharded_sim, ScaleSimConfig, SchedulerPolicy};
+use csmaafl::coordinator::{
+    run_sharded_sim, run_sharded_sim_traced, ScaleSimConfig, SchedulerPolicy,
+};
 use csmaafl::experiment::{self, Plan, PlanRunner};
 use csmaafl::figures::{self, FigureSpec, FIGURES};
 use csmaafl::metrics::write_series_csv;
 use csmaafl::perf;
 use csmaafl::session::{LearnerKind, Session};
 use csmaafl::sim::{HeterogeneityProfile, TimeModel};
+use csmaafl::telemetry::Telemetry;
 use csmaafl::util::json::{self, Json};
 use csmaafl::util::logging::{self, Level};
 
@@ -42,9 +50,11 @@ USAGE:
 COMMANDS:
   train     --config <file> [--set key=value ...] [--learner pjrt|linear]
             [--shards K] [--out results/] [--label name]
+            [--trace file.jsonl]
             (--shards K runs local training on K worker threads,
             default = available cores; results are bit-identical at
-            any K — only wall-clock changes)
+            any K — only wall-clock changes. --trace records ordered
+            telemetry events, byte-identical at any K)
   compare   --config <file> [--learner pjrt|linear] [--jobs N]
             [--shards K] [--out results/]
             (four paper series + fedasync/adaptive policy series;
@@ -78,14 +88,20 @@ COMMANDS:
             [--capacity spec | --set capacity=spec]
             [--channel spec | --set channel=spec]
             [--heterogeneity prof] [--gamma g] [--seed S]
-            [--format table|json]
+            [--format table|json] [--trace file.jsonl]
             (coordinator-only scale simulation: real event loop,
             scheduler and arena aggregation; synthetic local training —
             completes at --clients 1000000. --shards K runs K shard
             workers, default = available cores; every non-wall-clock
-            field is bit-identical at any K)
+            field is bit-identical at any K, including the --trace
+            event stream)
+  trace     <file.jsonl> [--check]
+            (summarize a --trace file: per-kind event counts, staleness
+            and queue-depth histograms, Jain fairness, loss causes and
+            a staleness timeline; --check only validates the file and
+            prints the event count)
   bench     [--quick] [--suite aggregation|kernels|scheduler|event_loop|
-            end_to_end|sharded|submodel|net|channel] [--shards K]
+            end_to_end|sharded|submodel|net|channel|telemetry] [--shards K]
             [--format table|json]
             [--out results/] [--check BENCH_baseline.json] [--factor 2.0]
             (pinned-seed perf suite -> <out>/BENCH_<date>.json; --check
@@ -94,7 +110,8 @@ COMMANDS:
   serve     --bind 0.0.0.0:7070 --clients N [--iterations J] [--gamma g]
             [--net-shards K] [--net-timeout-ms MS] [--net-queue CAP]
             [--net-rejoin-ms MS] [--lockstep] [--format table|json]
-            [--learner pjrt|linear]
+            [--learner pjrt|linear] [--stats-addr host:port]
+            [--trace file.jsonl]
             (TCP deployment leader: K ingest shards frame-decode
             uploads concurrently into one ordered aggregation stage;
             --net-timeout-ms is the per-connection mid-frame stall
@@ -103,7 +120,9 @@ COMMANDS:
             disconnected worker still owes a move after that much event
             silence (0 waits forever), --lockstep gates rounds so the
             run is bit-identical at any K and to the in-process
-            reference)
+            reference. --stats-addr serves a Prometheus-text snapshot
+            of live counters over plain TCP and logs a 10s digest;
+            --trace records the aggregation stage's apply order)
   join      --connect host:7070 --worker-id K --workers N
             [--learner pjrt|linear] [--local-steps E] [--delta]
             [--faults drop=p,cut=p,churn=pxR] [--fault-seed S]
@@ -122,6 +141,9 @@ COMMON OPTIONS:
                       (default: available cores; results are
                       byte-identical at any N)
   -v / -q             raise / lower log verbosity
+  --log-level <l>     error|warn|info|debug|trace (wins over -v/-q;
+                      the REPRO_LOG env var is the fallback when no
+                      verbosity flag is given)
   --help              this text
 
 AGGREGATION POLICIES (--set aggregation=<spec>, also honored by serve):
@@ -151,24 +173,38 @@ struct Args {
     options: Vec<(String, String)>,
     sets: Vec<(String, String)>,
     flags: Vec<String>,
+    /// Whether `-v`/`-q` was passed (suppresses the `REPRO_LOG` env
+    /// fallback; an explicit `--log-level` still wins over both).
+    verbosity_flag: bool,
 }
 
 impl Args {
     fn parse(argv: &[String]) -> Result<Args> {
-        let mut positional = Vec::new();
+        let mut positional: Vec<String> = Vec::new();
         let mut options = Vec::new();
         let mut sets = Vec::new();
         let mut flags = Vec::new();
+        let mut verbosity_flag = false;
         let mut it = argv.iter().peekable();
         while let Some(a) = it.next() {
+            // `--check` is valueless only under `repro trace`; everywhere
+            // else (`repro bench --check <baseline>`) it expects a path.
+            // The command is always the first positional, so it is known
+            // by the time its flags are parsed.
+            let trace_cmd = positional.first().map(String::as_str) == Some("trace");
             if a == "--help" || a == "-h" {
                 print!("{USAGE}");
                 std::process::exit(0);
             } else if a == "-v" {
                 logging::set_level(Level::Debug);
+                verbosity_flag = true;
             } else if a == "-q" {
                 logging::set_level(Level::Warn);
-            } else if let Some(name) = a.strip_prefix("--").filter(|n| BOOL_FLAGS.contains(n)) {
+                verbosity_flag = true;
+            } else if let Some(name) = a
+                .strip_prefix("--")
+                .filter(|n| BOOL_FLAGS.contains(n) || (trace_cmd && *n == "check"))
+            {
                 flags.push(name.to_string());
             } else if a == "--set" {
                 let kv = it
@@ -192,6 +228,7 @@ impl Args {
             options,
             sets,
             flags,
+            verbosity_flag,
         })
     }
 
@@ -239,6 +276,36 @@ impl Args {
     }
 }
 
+/// Resolve the log level: an explicit `--log-level` always wins; the
+/// `REPRO_LOG` env var is the fallback, unless `-v`/`-q` already chose.
+/// A bad spelling is an error naming its source.
+fn apply_log_level(args: &Args) -> Result<()> {
+    let (source, spec) = match args.opt("log-level") {
+        Some(s) => ("--log-level", s.to_string()),
+        None => match std::env::var("REPRO_LOG") {
+            Ok(s) if !args.verbosity_flag && !s.is_empty() => ("REPRO_LOG", s),
+            _ => return Ok(()),
+        },
+    };
+    let level = Level::parse(&spec).ok_or_else(|| {
+        anyhow!("{source} expects error|warn|info|debug|trace, got {spec:?}")
+    })?;
+    logging::set_level(level);
+    Ok(())
+}
+
+/// Build a run's telemetry handle from `--trace <file>`: a JSONL file
+/// sink when the flag is present, the allocation-free no-op sink
+/// otherwise.
+fn open_telemetry(args: &Args) -> Result<Telemetry> {
+    match args.opt("trace") {
+        Some(p) => {
+            Telemetry::to_file(std::path::Path::new(p)).with_context(|| format!("opening {p}"))
+        }
+        None => Ok(Telemetry::off()),
+    }
+}
+
 fn load_config(args: &Args) -> Result<RunConfig> {
     let cfg = match args.opt("config") {
         Some(path) => RunConfig::load(path, &args.sets)?,
@@ -279,7 +346,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     apply_train_shards(args, &mut cfg, false)?;
     let out_dir = args.opt_or("out", "results");
     let session = Session::new(cfg, args.learner()?, args.opt_or("artifacts", "artifacts"))?;
-    let mut run = session.run()?;
+    let mut tel = open_telemetry(args)?;
+    let mut run = session.run_traced(&mut tel)?;
+    tel.finish()?;
     if let Some(label) = args.opt("label") {
         run.label = label.to_string();
     }
@@ -812,7 +881,9 @@ fn cmd_sim(args: &Args) -> Result<()> {
         heterogeneity,
         ..ScaleSimConfig::default()
     };
-    let report = run_sharded_sim(&cfg, shards)?;
+    let mut tel = open_telemetry(args)?;
+    let (report, _) = run_sharded_sim_traced(&cfg, shards, &mut tel)?;
+    tel.finish()?;
     if format == "json" {
         println!("{}", report.to_json().to_string_pretty());
     } else {
@@ -939,6 +1010,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_capacity,
         lockstep: args.flag("lockstep"),
         rejoin_timeout_ms,
+        stats_addr: args.opt("stats-addr").map(str::to_string),
+        trace: args.opt("trace").map(str::to_string),
     };
     let w0 = session.learner().init(cfg.seed as u32)?;
     let report = csmaafl::net::run_leader(&leader_cfg, w0)?;
@@ -974,6 +1047,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
         println!("updates per client: {:?}", report.updates_per_client);
         println!("final test accuracy {acc:.4}, loss {loss:.4}");
+    }
+    Ok(())
+}
+
+/// Validate / summarize a `--trace` JSONL file: per-kind event counts,
+/// staleness + queue-depth histograms, Jain fairness over grants, loss
+/// causes and a staleness timeline. `--check` only validates.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let path = args.positional.get(1).ok_or_else(|| {
+        anyhow!("usage: repro trace <file.jsonl> [--check] — see `repro --help`")
+    })?;
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
+    let summary = csmaafl::analyze::summarize_trace(&text)
+        .with_context(|| format!("invalid trace {path}"))?;
+    if args.flag("check") {
+        println!("trace ok: {} event(s) in {path}", summary.events);
+    } else {
+        print!("{}", csmaafl::analyze::trace_table(&summary));
     }
     Ok(())
 }
@@ -1029,6 +1121,7 @@ fn main() -> Result<()> {
         return Ok(());
     }
     let args = Args::parse(&argv).context("parsing arguments")?;
+    apply_log_level(&args)?;
     let cmd = args
         .positional
         .first()
@@ -1046,6 +1139,7 @@ fn main() -> Result<()> {
         "smoke" => cmd_smoke(&args),
         "sim" => cmd_sim(&args),
         "bench" => cmd_bench(&args),
+        "trace" => cmd_trace(&args),
         "serve" => cmd_serve(&args),
         "join" => cmd_join(&args),
         "help" => {

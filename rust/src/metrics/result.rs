@@ -106,6 +106,11 @@ pub struct RunResult {
     /// never part of [`RunResult::summary_json`] — only the full
     /// record.
     pub shards: usize,
+    /// Aggregate telemetry ([`crate::telemetry::Registry`] JSON) —
+    /// `Some` only when the run was traced. Rides the full record
+    /// only, never the deterministic summary, so untraced runs emit
+    /// byte-identical records to pre-telemetry builds.
+    pub telemetry: Option<Json>,
 }
 
 impl RunResult {
@@ -128,6 +133,7 @@ impl RunResult {
             total_ticks: 0,
             wallclock_secs: 0.0,
             shards: 1,
+            telemetry: None,
         }
     }
 
@@ -227,6 +233,12 @@ impl RunResult {
                         .collect(),
                 ),
             );
+        // Telemetry aggregates appear only when the run was traced, so
+        // untraced full records stay byte-identical to pre-telemetry
+        // builds.
+        if let Some(t) = &self.telemetry {
+            o.set("telemetry", t.clone());
+        }
         o
     }
 }
@@ -331,6 +343,23 @@ mod tests {
         assert_eq!(cells[0].get("accuracy").unwrap().as_f64(), Some(0.55));
         // And they ride through the full record too.
         assert!(r.to_json().get("classes").is_some());
+    }
+
+    #[test]
+    fn telemetry_rides_the_full_record_only_when_traced() {
+        let mut r = run_with_points(&[0.2]);
+        assert!(r.to_json().get("telemetry").is_none());
+        assert!(!r.to_json().to_string_compact().contains("telemetry"));
+        let mut reg = Json::object();
+        reg.set("uploads_applied", Json::Int(3));
+        r.telemetry = Some(reg);
+        let j = r.to_json();
+        assert_eq!(
+            j.get("telemetry").unwrap().get("uploads_applied").unwrap().as_i64(),
+            Some(3)
+        );
+        // Never in the deterministic summary.
+        assert!(r.summary_json().get("telemetry").is_none());
     }
 
     #[test]

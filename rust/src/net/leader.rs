@@ -53,6 +53,7 @@
 
 use std::collections::VecDeque;
 use std::net::{TcpListener, TcpStream};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -68,6 +69,7 @@ use crate::model::{ParamSet, TensorSpec};
 use crate::net::fault::{FaultAction, FaultPlan};
 use crate::net::wire::{self, FrameReader, Message, WireError};
 use crate::sim::{ClientPartition, OrderedMerge};
+use crate::telemetry::{serve_stats, LiveStats, LossCause, Telemetry};
 use crate::util::json::Json;
 
 /// Leader-side configuration.
@@ -106,6 +108,15 @@ pub struct LeaderConfig {
     /// rejoin that may never come. Must exceed the longest expected
     /// churn gap. 0 disables (wait forever — the pre-PR-6 behavior).
     pub rejoin_timeout_ms: u64,
+    /// Serve a Prometheus text-format stats snapshot on this address
+    /// (`repro serve --stats-addr`). `None` disables the endpoint and
+    /// the periodic stderr digest; neither ever touches the
+    /// deterministic aggregation order.
+    pub stats_addr: Option<String>,
+    /// Write ordered trace events (JSONL) to this path
+    /// (`repro serve --trace`). Emission happens on the aggregation
+    /// stage only, in apply order.
+    pub trace: Option<String>,
 }
 
 impl LeaderConfig {
@@ -125,6 +136,8 @@ impl LeaderConfig {
             queue_capacity: 1024,
             lockstep: false,
             rejoin_timeout_ms: 30_000,
+            stats_addr: None,
+            trace: None,
         }
     }
 }
@@ -322,8 +335,22 @@ enum PollOutcome {
     Shutdown,
 }
 
-fn forward(out: &mpsc::SyncSender<Inbound>, worker: usize, msg: Message) -> bool {
-    out.send(Inbound::Frame { worker, msg }).is_ok()
+/// Relay one decoded frame to the aggregation queue, metering the
+/// shard's ingest counter and the queue-depth gauge (popped by
+/// `handle` when the frame leaves the queue).
+fn forward(
+    out: &mpsc::SyncSender<Inbound>,
+    worker: usize,
+    msg: Message,
+    shard: usize,
+    stats: &LiveStats,
+) -> bool {
+    stats.frame_ingested(shard);
+    let ok = out.send(Inbound::Frame { worker, msg }).is_ok();
+    if ok {
+        stats.queue_push();
+    }
+    ok
 }
 
 /// Pull everything currently available from one connection.
@@ -332,6 +359,8 @@ fn poll_conn(
     out: &mpsc::SyncSender<Inbound>,
     specs: &[TensorSpec],
     stall: Option<Duration>,
+    shard: usize,
+    stats: &LiveStats,
 ) -> PollOutcome {
     let mut progressed = false;
     loop {
@@ -343,7 +372,8 @@ fn poll_conn(
                 match wire::decode(&body, specs) {
                     Ok(msg @ (Message::Update { .. } | Message::DeltaUpdate { .. }
                     | Message::Lost { .. } | Message::Leave { .. })) => {
-                        if !forward(out, conn.worker, msg) {
+                        stats.wire_bytes(body.len() as u64);
+                        if !forward(out, conn.worker, msg, shard, stats) {
                             return PollOutcome::Shutdown;
                         }
                     }
@@ -424,7 +454,13 @@ fn poll_conn(
 /// state), exactly like `poll_conn`'s paths: the old connection is dead
 /// either way, and an owed upload that died with it must be accounted —
 /// swallowing the event here would strand a lockstep round.
-fn drain_replaced(mut conn: Conn, out: &mpsc::SyncSender<Inbound>, specs: &[TensorSpec]) {
+fn drain_replaced(
+    mut conn: Conn,
+    out: &mpsc::SyncSender<Inbound>,
+    specs: &[TensorSpec],
+    shard: usize,
+    stats: &LiveStats,
+) {
     let deadline = Instant::now() + Duration::from_millis(200);
     let worker = conn.worker;
     let conn_lost = move |mid_frame: bool, timed_out: bool| Inbound::ConnLost {
@@ -437,7 +473,8 @@ fn drain_replaced(mut conn: Conn, out: &mpsc::SyncSender<Inbound>, specs: &[Tens
             Ok(Some(body)) => match wire::decode(&body, specs) {
                 Ok(msg @ (Message::Update { .. } | Message::DeltaUpdate { .. }
                 | Message::Lost { .. } | Message::Leave { .. })) => {
-                    if !forward(out, conn.worker, msg) {
+                    stats.wire_bytes(body.len() as u64);
+                    if !forward(out, conn.worker, msg, shard, stats) {
                         return;
                     }
                 }
@@ -481,6 +518,8 @@ fn run_shard(
     specs: &[TensorSpec],
     stall: Option<Duration>,
     done: &AtomicBool,
+    shard: usize,
+    stats: &LiveStats,
 ) {
     let mut conns: Vec<Conn> = Vec::new();
     while !done.load(Ordering::Relaxed) {
@@ -488,7 +527,7 @@ fn run_shard(
         while let Ok((worker, name, stream)) = joins.try_recv() {
             activity = true;
             if let Some(i) = conns.iter().position(|c| c.worker == worker) {
-                drain_replaced(conns.swap_remove(i), out, specs);
+                drain_replaced(conns.swap_remove(i), out, specs, shard, stats);
             }
             let writer = match stream.try_clone() {
                 Ok(s) => s,
@@ -509,7 +548,7 @@ fn run_shard(
         }
         let mut i = 0;
         while i < conns.len() {
-            match poll_conn(&mut conns[i], out, specs, stall) {
+            match poll_conn(&mut conns[i], out, specs, stall, shard, stats) {
                 PollOutcome::Keep { progressed } => {
                     activity |= progressed;
                     i += 1;
@@ -622,26 +661,50 @@ pub fn run_leader(cfg: &LeaderConfig, w0: ParamSet) -> Result<LeaderReport> {
         shard_rxs.push(rx);
     }
 
-    std::thread::scope(|scope| {
+    // Telemetry: trace emission lives on the aggregation stage only
+    // (apply order), so it can never be perturbed by socket races; the
+    // live counters are relaxed atomics the other threads bump freely.
+    let mut tel = match &cfg.trace {
+        Some(p) => Telemetry::to_file(Path::new(p))?,
+        None => Telemetry::off(),
+    };
+    tel.bind(cfg.clients);
+    let stats = LiveStats::new(partition.shards());
+    let stats_listener = match &cfg.stats_addr {
+        Some(addr) => {
+            let l = TcpListener::bind(addr).with_context(|| format!("binding stats {addr}"))?;
+            log_info!("leader: stats endpoint on {}", l.local_addr()?);
+            Some(l)
+        }
+        None => None,
+    };
+
+    let out = std::thread::scope(|scope| {
         let done = &done;
         let specs = &specs;
         let listener = &listener;
         let shard_txs_ref = &shard_txs;
+        let stats = &stats;
         scope.spawn(move || {
             run_acceptor(listener, shard_txs_ref, partition, specs, timeout, done)
         });
-        for rx in shard_rxs {
+        if let Some(sl) = stats_listener {
+            scope.spawn(move || serve_stats(sl, stats, done));
+        }
+        for (shard, rx) in shard_rxs.into_iter().enumerate() {
             let tx = agg_tx.clone();
-            scope.spawn(move || run_shard(&rx, &tx, specs, timeout, done));
+            scope.spawn(move || run_shard(&rx, &tx, specs, timeout, done, shard, stats));
         }
         drop(agg_tx);
-        let out = aggregate(cfg, core, &agg_rx);
+        let out = aggregate(cfg, core, &agg_rx, &mut tel, stats);
         done.store(true, Ordering::Relaxed);
         // Drop the receiver so shards blocked sending into a full queue
         // error out instead of wedging the scope join.
         drop(agg_rx);
         out
-    })
+    });
+    tel.finish()?;
+    out
 }
 
 /// Receive one ingest event: `Ok(Some)` on an event, `Ok(None)` when
@@ -670,6 +733,8 @@ fn aggregate(
     cfg: &LeaderConfig,
     mut core: ServerCore,
     rx: &mpsc::Receiver<Inbound>,
+    tel: &mut Telemetry,
+    stats: &LiveStats,
 ) -> Result<LeaderReport> {
     let stall = (cfg.read_timeout_ms > 0).then(|| Duration::from_millis(cfg.read_timeout_ms));
     let rejoin = (cfg.rejoin_timeout_ms > 0).then(|| Duration::from_millis(cfg.rejoin_timeout_ms));
@@ -693,11 +758,12 @@ fn aggregate(
                 joined += 1;
             }
         }
-        handle(&mut peers, &mut core, ev, stall);
+        handle(&mut peers, &mut core, ev, stall, stats);
     }
     log_info!("leader: all {} workers joined; broadcasting w0", cfg.clients);
 
     let started = Instant::now();
+    let mut last_digest = Instant::now();
     for worker in 0..cfg.clients {
         peers[worker].issue(worker, &mut core, stall);
     }
@@ -705,8 +771,12 @@ fn aggregate(
     let mut staged: OrderedMerge<Move> = OrderedMerge::new();
     let mut round = 0u64;
     'serve: while core.iteration() < cfg.max_iterations {
+        if cfg.stats_addr.is_some() && last_digest.elapsed() >= Duration::from_secs(10) {
+            log_info!("leader: {}", stats.digest_line());
+            last_digest = Instant::now();
+        }
         match recv_event(rx, rejoin) {
-            Ok(Some(ev)) => handle(&mut peers, &mut core, ev, stall),
+            Ok(Some(ev)) => handle(&mut peers, &mut core, ev, stall, stats),
             Ok(None) => {
                 // Event silence for the whole rejoin window. If some
                 // disconnected worker still owes a move, no rejoin is
@@ -733,7 +803,7 @@ fn aggregate(
             Err(_) => break,
         }
         while let Ok(ev) = rx.try_recv() {
-            handle(&mut peers, &mut core, ev, stall);
+            handle(&mut peers, &mut core, ev, stall, stats);
         }
         if cfg.lockstep {
             // Apply every round whose full move set has arrived.
@@ -762,7 +832,7 @@ fn aggregate(
                     batch.push(mv.stamp(), w, mv);
                 }
                 while let Some((_, w, mv)) = batch.pop() {
-                    apply(&mut peers, &mut core, w, mv, Some(round), stall)?;
+                    apply(&mut peers, &mut core, w, mv, Some(round), stall, tel, stats)?;
                     if core.iteration() >= cfg.max_iterations {
                         break 'serve;
                     }
@@ -778,7 +848,7 @@ fn aggregate(
                 }
             }
             while let Some((_, w, mv)) = staged.pop() {
-                apply(&mut peers, &mut core, w, mv, None, stall)?;
+                apply(&mut peers, &mut core, w, mv, None, stall, tel, stats)?;
                 if core.iteration() >= cfg.max_iterations {
                     break 'serve;
                 }
@@ -822,7 +892,13 @@ fn aggregate(
 }
 
 /// Fold one ingest event into the peer table.
-fn handle(peers: &mut [Peer], core: &mut ServerCore, ev: Inbound, stall: Option<Duration>) {
+fn handle(
+    peers: &mut [Peer],
+    core: &mut ServerCore,
+    ev: Inbound,
+    stall: Option<Duration>,
+    stats: &LiveStats,
+) {
     match ev {
         Inbound::Joined { worker, name, writer } => {
             let p = &mut peers[worker];
@@ -831,6 +907,7 @@ fn handle(peers: &mut [Peer], core: &mut ServerCore, ev: Inbound, stall: Option<
             p.leaving = false;
             p.writer = Some(writer);
             if rejoin {
+                stats.reconnect();
                 log_info!("leader: worker {worker} ({name}) rejoined");
             } else {
                 log_info!("leader: worker {worker} ({name}) joined");
@@ -840,6 +917,7 @@ fn handle(peers: &mut [Peer], core: &mut ServerCore, ev: Inbound, stall: Option<
             }
         }
         Inbound::Frame { worker, msg } => {
+            stats.queue_pop();
             let p = &mut peers[worker];
             match msg {
                 Message::Update {
@@ -909,7 +987,10 @@ fn handle(peers: &mut [Peer], core: &mut ServerCore, ev: Inbound, stall: Option<
 }
 
 /// Apply one move to the core, then (for anything but a Leave) hand the
-/// worker a fresh global. `round` is Some in lockstep mode.
+/// worker a fresh global. `round` is Some in lockstep mode. Trace events
+/// are emitted here — the single ordered aggregation point — so a traced
+/// deployment run records the exact apply order the core saw.
+#[allow(clippy::too_many_arguments)]
 fn apply(
     peers: &mut [Peer],
     core: &mut ServerCore,
@@ -917,10 +998,22 @@ fn apply(
     mv: Move,
     round: Option<u64>,
     stall: Option<Duration>,
+    tel: &mut Telemetry,
+    stats: &LiveStats,
 ) -> Result<()> {
     match mv {
         Move::Update { stamp, params } => {
-            core.on_update(worker, stamp, &params, &NativeAggregator)?;
+            let t = core.iteration();
+            let out = core.on_update(worker, stamp, &params, &NativeAggregator)?;
+            tel.upload_applied(
+                t,
+                worker,
+                out.iteration,
+                out.staleness,
+                out.beta,
+                out.weight,
+            );
+            stats.aggregated();
             peers[worker].outstanding = false;
             peers[worker].issue(worker, core, stall);
             if let Some(r) = round {
@@ -928,6 +1021,9 @@ fn apply(
             }
         }
         Move::Lost { .. } | Move::Broken { .. } => {
+            let t = core.iteration();
+            tel.upload_lost(t, worker, LossCause::Disconnect);
+            stats.upload_lost();
             core.on_lost_upload(worker);
             peers[worker].outstanding = false;
             peers[worker].issue(worker, core, stall);

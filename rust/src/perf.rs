@@ -1,7 +1,7 @@
 //! The pinned-seed performance suite behind `repro bench`: the repo's
 //! perf trajectory as machine-readable `BENCH_<date>.json` records.
 //!
-//! Nine suites cover the hot paths this crate optimizes:
+//! Ten suites cover the hot paths this crate optimizes:
 //!
 //! | Suite         | Cases                              | What it measures |
 //! |---------------|------------------------------------|------------------|
@@ -14,6 +14,7 @@
 //! | `submodel`    | `extract_<n>`, `merge_<n>`, `merge_lerp_<n>` | heterogeneous-capacity slice kernels (`model::submodel`): rate-0.5 extract/merge over a flat buffer, plus the slice-wise eq.-(3) merge into a `ParamSet` |
 //! | `net`         | `encode_<n>`, `decode_<n>`, `reader_chunked_<n>` | wire-protocol hot paths (`net::wire`): frame encode, shape-validated decode, and the leader's incremental `FrameReader` fed in socket-sized chunks |
 //! | `channel`     | `gain_walk_<m>`, `delta_encode_<n>`, `delta_apply_<n>`, `sim_channel_aware_<m>` | the fading-channel subsystem (`sim::channel`): the per-grant gain refresh over a whole population, the XOR-bitpattern delta codec behind `DeltaUpdate` frames, and a full channel-aware event loop under `markov:0.5,500` — ns per event, so fading must not regress the hot loop |
+//! | `telemetry`   | `noop_sink`, `event_encode`, `histogram_record` | the observability layer (`telemetry`): the disabled-handle cost every engine decision pays when `--trace` is off (must stay branch-cheap and allocation-free), the JSONL encode of the densest event, and one log2-bucket histogram update |
 //!
 //! The record schema (`csmaafl-bench-v1`) is
 //! `suites → <suite> → <case> → {iters, ns_per_iter, clients}` plus
@@ -49,7 +50,7 @@ use crate::util::rng::Rng;
 pub const BENCH_SCHEMA: &str = "csmaafl-bench-v1";
 
 /// The suite names, in run order (the `--suite` filter vocabulary).
-pub const SUITES: [&str; 9] = [
+pub const SUITES: [&str; 10] = [
     "aggregation",
     "kernels",
     "scheduler",
@@ -59,6 +60,7 @@ pub const SUITES: [&str; 9] = [
     "submodel",
     "net",
     "channel",
+    "telemetry",
 ];
 
 /// How to run the suite.
@@ -435,6 +437,75 @@ fn suite_net(quick: bool) -> Vec<Case> {
     out
 }
 
+/// The `telemetry` suite: the observability layer's per-decision costs.
+/// `noop_sink` is what every instrumented engine decision pays when
+/// `--trace` is off — one `is_enabled` branch per call, zero allocation
+/// — so it must stay within noise of no instrumentation at all;
+/// `event_encode` the JSONL encoding of the densest event
+/// (`UploadApplied`, two floats) into a reused buffer; and
+/// `histogram_record` one log2-bucket `Histogram` update.
+fn suite_telemetry(quick: bool) -> Vec<Case> {
+    use crate::telemetry::{Histogram, Telemetry, TraceEvent};
+    let mut out = Vec::new();
+    let mut b = bencher("telemetry", quick);
+
+    let mut tel = Telemetry::off();
+    tel.bind(64);
+    let mut t = 0u64;
+    let r = b.bench("noop_sink", || {
+        t = t.wrapping_add(1);
+        let c = (t % 64) as usize;
+        tel.grant(t, c, 7, 2);
+        tel.upload_applied(t, c, t, 3, 0.5, 0.25);
+        std::hint::black_box(&tel);
+    });
+    out.push(Case {
+        name: "noop_sink".into(),
+        iters: r.iters,
+        ns_per_iter: r.mean_ns,
+        clients: 0,
+        shards: None,
+    });
+
+    let ev = TraceEvent::UploadApplied {
+        t: 123_456,
+        client: 4_242,
+        iteration: 98_765,
+        staleness: 17,
+        beta: 0.0625,
+        weight: 0.001953125,
+    };
+    let mut line = String::with_capacity(160);
+    let r = b.bench("event_encode", || {
+        line.clear();
+        std::hint::black_box(&ev).encode_into(&mut line);
+        std::hint::black_box(&line);
+    });
+    out.push(Case {
+        name: "event_encode".into(),
+        iters: r.iters,
+        ns_per_iter: r.mean_ns,
+        clients: 0,
+        shards: None,
+    });
+
+    let mut h = Histogram::new();
+    let mut v = 0u64;
+    let r = b.bench("histogram_record", || {
+        v = v.wrapping_mul(6_364_136_223_846_793_005).wrapping_add(1);
+        h.record(v >> 48);
+        std::hint::black_box(&h);
+    });
+    out.push(Case {
+        name: "histogram_record".into(),
+        iters: r.iters,
+        ns_per_iter: r.mean_ns,
+        clients: 0,
+        shards: None,
+    });
+    out
+}
+
 /// Hands out a byte slice 4 KiB at a time — a stand-in for what one
 /// nonblocking-socket read returns.
 struct Chunked<'a> {
@@ -553,7 +624,8 @@ pub fn run(cfg: &BenchConfig) -> Result<Json> {
         ensure!(
             SUITES.contains(&s.as_str()),
             "unknown suite {s:?} \
-             (aggregation|kernels|scheduler|event_loop|end_to_end|sharded|submodel|net|channel)"
+             (aggregation|kernels|scheduler|event_loop|end_to_end|sharded|submodel|net|channel\
+             |telemetry)"
         );
     }
     let selected = |name: &str| match cfg.suite.as_deref() {
@@ -592,6 +664,9 @@ pub fn run(cfg: &BenchConfig) -> Result<Json> {
     }
     if selected("channel") {
         suites.set("channel", cases_json(suite_channel(cfg.quick)?));
+    }
+    if selected("telemetry") {
+        suites.set("telemetry", cases_json(suite_telemetry(cfg.quick)));
     }
     let mut root = Json::object();
     root.set("schema", Json::Str(BENCH_SCHEMA.into()))
@@ -959,6 +1034,16 @@ mod tests {
             ["gain_walk_10000", "delta_encode_5370", "delta_apply_5370",
              "delta_encode_431080", "delta_apply_431080", "sim_channel_aware_2000"]
         );
+        for c in &cases {
+            assert!(c.iters > 0 && c.ns_per_iter > 0.0, "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn telemetry_suite_emits_schema_shaped_cases() {
+        let cases = suite_telemetry(true);
+        let names: Vec<&str> = cases.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(names, ["noop_sink", "event_encode", "histogram_record"]);
         for c in &cases {
             assert!(c.iters > 0 && c.ns_per_iter > 0.0, "{}", c.name);
         }

@@ -17,6 +17,7 @@ use crate::learner::{Learner, LinearLearner, PjrtLearner};
 use crate::log_info;
 use crate::metrics::RunResult;
 use crate::runtime::Engine;
+use crate::telemetry::Telemetry;
 
 /// Which learner executes local training.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -182,6 +183,22 @@ impl Session {
         &self,
         mutate: impl FnOnce(&mut RunConfig) -> Result<()>,
     ) -> Result<RunResult> {
+        self.run_inner(mutate, &mut Telemetry::off())
+    }
+
+    /// As [`Session::run`], recording ordered trace events and aggregate
+    /// histograms through `tel` (see [`crate::telemetry`]). Only the
+    /// event-driven AFL engines emit; SFL and the solved-β baseline have
+    /// no asynchronous decision points and run untraced.
+    pub fn run_traced(&self, tel: &mut Telemetry) -> Result<RunResult> {
+        self.run_inner(|_| Ok(()), tel)
+    }
+
+    fn run_inner(
+        &self,
+        mutate: impl FnOnce(&mut RunConfig) -> Result<()>,
+        tel: &mut Telemetry,
+    ) -> Result<RunResult> {
         let mut cfg = self.cfg.clone();
         mutate(&mut cfg)?;
         cfg.validate()?;
@@ -197,7 +214,7 @@ impl Session {
             test: &self.test,
         };
         let t0 = std::time::Instant::now();
-        let result = coordinator::run(&ctx)?;
+        let result = coordinator::run_traced(&ctx, tel)?;
         log_info!(
             "run[{}]: {} aggregations, final acc {:.3}, {:.1}s wall",
             result.label,

@@ -285,6 +285,15 @@ pub fn parse(spec: &str) -> Result<FadingChannel> {
     }
 }
 
+/// Ladder index of an exact [`GAIN_LADDER`] gain value (the ladder holds
+/// exact powers of two, so `f64` equality is well-defined). `None` for
+/// anything off-ladder — e.g. the ideal channel's constant 1.0 is level
+/// 2, but telemetry callers should skip the lookup entirely when the
+/// channel is trivial.
+pub fn level_of_gain(gain: f64) -> Option<u8> {
+    GAIN_LADDER.iter().position(|&g| g == gain).map(|i| i as u8)
+}
+
 /// Resolve a config's optional spelling: `None` means the pinned `ideal`
 /// default.
 pub fn resolve(spec: Option<&str>) -> Result<FadingChannel> {
@@ -412,6 +421,14 @@ mod tests {
             faded_losses > 0,
             "fades never lost an upload across {faded} faded blocks"
         );
+    }
+
+    #[test]
+    fn level_of_gain_inverts_the_ladder() {
+        for (i, &g) in GAIN_LADDER.iter().enumerate() {
+            assert_eq!(level_of_gain(g), Some(i as u8));
+        }
+        assert_eq!(level_of_gain(3.0), None);
     }
 
     #[test]

@@ -1,0 +1,268 @@
+//! The typed trace-event vocabulary and its JSONL encoding.
+//!
+//! Every event is a scalar-only enum variant — no owned strings, no
+//! heap — so constructing one is free and encoding is a pure formatting
+//! pass into a caller-owned scratch buffer. The wire form is one
+//! compact JSON object per line with a fixed, hand-written key order
+//! (`ev` first), so byte-identity of two traces is exactly
+//! event-sequence identity: the shard-invariance contract of
+//! `rust/tests/sharded.rs` compares traces with `assert_eq!` on bytes.
+//!
+//! Floats (`beta`, `weight`) are encoded with Rust's default `Display`
+//! (shortest round-trip form) — deterministic across runs and shard
+//! counts because the values themselves are, by the engines' contract.
+
+use std::fmt::Write;
+
+/// Why an upload that occupied its TDMA slot never reached the global
+/// model. The priority when multiple draws fire on one upload is
+/// scenario first, then channel — the same order the engines draw them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LossCause {
+    /// Scenario transit loss (`dropout`) or the legacy `upload_loss`
+    /// knob of the learner-driven engine.
+    Scenario,
+    /// Channel fade (`sim::channel` correlated per-level loss).
+    Channel,
+    /// Deployment-path loss: a worker connection died or timed out
+    /// mid-upload (`net::leader`).
+    Disconnect,
+}
+
+impl LossCause {
+    /// Canonical spelling used in the trace `cause` field.
+    pub fn name(self) -> &'static str {
+        match self {
+            LossCause::Scenario => "scenario",
+            LossCause::Channel => "channel",
+            LossCause::Disconnect => "disconnect",
+        }
+    }
+}
+
+/// One ordered decision of an AFL engine (or the TCP leader's
+/// aggregation stage), in the order the coordinator made it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceEvent {
+    /// Setup-time capacity-class assignment (one per client, emitted
+    /// only under a non-trivial capacity profile).
+    ClassAssign {
+        /// Client id.
+        client: usize,
+        /// Capacity-class index (profile order).
+        class: u8,
+    },
+    /// The client's observed gain level changed since its last grant
+    /// (fading channels only; the first grant records the entry level).
+    ChannelTransition {
+        /// Virtual time of the observing grant.
+        t: u64,
+        /// Client id.
+        client: usize,
+        /// New gain-ladder level (`sim::channel::GAIN_LADDER` index).
+        level: u8,
+    },
+    /// The scheduler granted the uplink slot to a client.
+    Grant {
+        /// Virtual time of the grant.
+        t: u64,
+        /// Winning client.
+        client: usize,
+        /// Requests still pending after this grant (queue depth).
+        queue: usize,
+        /// Winner's gain-ladder level at grant time; `-1` under the
+        /// ideal channel.
+        level: i8,
+    },
+    /// An upload survived and was folded into the global model.
+    UploadApplied {
+        /// Virtual time of the aggregation.
+        t: u64,
+        /// Uploading client.
+        client: usize,
+        /// Global iteration after the aggregation.
+        iteration: u64,
+        /// Staleness of the uploaded model (iterations behind).
+        staleness: u64,
+        /// Eq.-(3) retention coefficient the policy chose.
+        beta: f32,
+        /// Raw policy weight before clamping to β.
+        weight: f64,
+    },
+    /// An upload occupied its slot but was lost before aggregation.
+    UploadLost {
+        /// Virtual time of the loss.
+        t: u64,
+        /// Uploading client.
+        client: usize,
+        /// What lost it.
+        cause: LossCause,
+    },
+    /// The arena's in-flight local-model count reached a new high.
+    ArenaHighWater {
+        /// Virtual time of the allocation.
+        t: u64,
+        /// The new high-water mark (slots in flight).
+        high: usize,
+    },
+}
+
+impl TraceEvent {
+    /// Append the one-line JSON form (no trailing newline) to `out`.
+    pub fn encode_into(&self, out: &mut String) {
+        // Writing to a String is infallible; unwrap is fine.
+        match *self {
+            TraceEvent::ClassAssign { client, class } => {
+                write!(out, r#"{{"ev":"class","client":{client},"class":{class}}}"#)
+            }
+            TraceEvent::ChannelTransition { t, client, level } => {
+                write!(
+                    out,
+                    r#"{{"ev":"channel","t":{t},"client":{client},"level":{level}}}"#
+                )
+            }
+            TraceEvent::Grant {
+                t,
+                client,
+                queue,
+                level,
+            } => {
+                write!(
+                    out,
+                    r#"{{"ev":"grant","t":{t},"client":{client},"queue":{queue},"level":{level}}}"#
+                )
+            }
+            TraceEvent::UploadApplied {
+                t,
+                client,
+                iteration,
+                staleness,
+                beta,
+                weight,
+            } => {
+                write!(
+                    out,
+                    r#"{{"ev":"apply","t":{t},"client":{client},"iter":{iteration},"stale":{staleness},"beta":{beta},"weight":{weight}}}"#
+                )
+            }
+            TraceEvent::UploadLost { t, client, cause } => {
+                write!(
+                    out,
+                    r#"{{"ev":"lost","t":{t},"client":{client},"cause":"{}"}}"#,
+                    cause.name()
+                )
+            }
+            TraceEvent::ArenaHighWater { t, high } => {
+                write!(out, r#"{{"ev":"arena","t":{t},"high":{high}}}"#)
+            }
+        }
+        .expect("writing to a String cannot fail");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn encoded(ev: &TraceEvent) -> String {
+        let mut s = String::new();
+        ev.encode_into(&mut s);
+        s
+    }
+
+    #[test]
+    fn every_variant_encodes_as_one_compact_json_object() {
+        let cases = [
+            (
+                TraceEvent::ClassAssign { client: 3, class: 1 },
+                r#"{"ev":"class","client":3,"class":1}"#,
+            ),
+            (
+                TraceEvent::ChannelTransition {
+                    t: 120,
+                    client: 3,
+                    level: 2,
+                },
+                r#"{"ev":"channel","t":120,"client":3,"level":2}"#,
+            ),
+            (
+                TraceEvent::Grant {
+                    t: 120,
+                    client: 3,
+                    queue: 5,
+                    level: -1,
+                },
+                r#"{"ev":"grant","t":120,"client":3,"queue":5,"level":-1}"#,
+            ),
+            (
+                TraceEvent::UploadLost {
+                    t: 150,
+                    client: 3,
+                    cause: LossCause::Channel,
+                },
+                r#"{"ev":"lost","t":150,"client":3,"cause":"channel"}"#,
+            ),
+            (
+                TraceEvent::ArenaHighWater { t: 100, high: 42 },
+                r#"{"ev":"arena","t":100,"high":42}"#,
+            ),
+        ];
+        for (ev, want) in cases {
+            assert_eq!(encoded(&ev), want);
+        }
+    }
+
+    #[test]
+    fn apply_event_floats_use_shortest_display_form() {
+        let ev = TraceEvent::UploadApplied {
+            t: 150,
+            client: 3,
+            iteration: 7,
+            staleness: 2,
+            beta: 0.8,
+            weight: 1.0,
+        };
+        assert_eq!(
+            encoded(&ev),
+            r#"{"ev":"apply","t":150,"client":3,"iter":7,"stale":2,"beta":0.8,"weight":1}"#
+        );
+    }
+
+    #[test]
+    fn every_encoded_line_parses_as_json() {
+        let events = [
+            TraceEvent::ClassAssign { client: 0, class: 0 },
+            TraceEvent::Grant {
+                t: 1,
+                client: 2,
+                queue: 3,
+                level: 2,
+            },
+            TraceEvent::UploadApplied {
+                t: 9,
+                client: 1,
+                iteration: 4,
+                staleness: 0,
+                beta: 0.123,
+                weight: 0.456,
+            },
+            TraceEvent::UploadLost {
+                t: 9,
+                client: 1,
+                cause: LossCause::Scenario,
+            },
+        ];
+        for ev in events {
+            let line = encoded(&ev);
+            let j = crate::util::json::parse(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert!(j.get("ev").is_some(), "{line}");
+        }
+    }
+
+    #[test]
+    fn loss_causes_spell_their_trace_names() {
+        assert_eq!(LossCause::Scenario.name(), "scenario");
+        assert_eq!(LossCause::Channel.name(), "channel");
+        assert_eq!(LossCause::Disconnect.name(), "disconnect");
+    }
+}

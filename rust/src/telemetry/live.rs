@@ -1,0 +1,243 @@
+//! Live deployment stats: lock-free counters shared by the leader's
+//! threads, rendered as a Prometheus text-format snapshot over a
+//! hand-rolled TCP endpoint (`repro serve --stats-addr <addr>`).
+//!
+//! Nothing here touches the deterministic path: every counter is a
+//! relaxed atomic observed only by the stats endpoint and the periodic
+//! stderr digest, so scrape timing can never perturb aggregation order.
+
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Shared live counters for one `repro serve` run. All loads/stores
+/// are `Relaxed`: the values are monitoring snapshots, not
+/// synchronization.
+#[derive(Debug)]
+pub struct LiveStats {
+    /// Frames ingested per net shard (indexed by shard id).
+    ingest_frames: Vec<AtomicU64>,
+    /// Inbound records currently queued between ingest and aggregation.
+    queue_depth: AtomicU64,
+    /// Worker rejoin events observed by the aggregation stage.
+    reconnects: AtomicU64,
+    /// Payload bytes carried by accepted update frames.
+    bytes_on_wire: AtomicU64,
+    /// Uploads folded into the global model.
+    aggregations: AtomicU64,
+    /// Uploads lost to disconnects/timeouts.
+    lost_uploads: AtomicU64,
+}
+
+impl LiveStats {
+    /// Counters for a leader with `shards` ingest shards.
+    pub fn new(shards: usize) -> LiveStats {
+        LiveStats {
+            ingest_frames: (0..shards.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            queue_depth: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+            bytes_on_wire: AtomicU64::new(0),
+            aggregations: AtomicU64::new(0),
+            lost_uploads: AtomicU64::new(0),
+        }
+    }
+
+    /// Count one ingested frame on `shard`.
+    pub fn frame_ingested(&self, shard: usize) {
+        if let Some(c) = self.ingest_frames.get(shard) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// A record entered the ingest→aggregation queue.
+    pub fn queue_push(&self) {
+        self.queue_depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A record left the ingest→aggregation queue.
+    pub fn queue_pop(&self) {
+        // Saturate at zero: pops can race ahead of the matching push
+        // observation, and a monitoring gauge must never wrap.
+        let _ = self
+            .queue_depth
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| d.checked_sub(1));
+    }
+
+    /// A worker rejoined after a dropped connection.
+    pub fn reconnect(&self) {
+        self.reconnects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count `n` payload bytes from an accepted update frame.
+    pub fn wire_bytes(&self, n: u64) {
+        self.bytes_on_wire.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// One upload was folded into the global model.
+    pub fn aggregated(&self) {
+        self.aggregations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One upload was lost to a disconnect/timeout.
+    pub fn upload_lost(&self) {
+        self.lost_uploads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Render the Prometheus text-format snapshot.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# TYPE repro_ingest_frames_total counter\n");
+        for (k, c) in self.ingest_frames.iter().enumerate() {
+            out.push_str(&format!(
+                "repro_ingest_frames_total{{shard=\"{k}\"}} {}\n",
+                c.load(Ordering::Relaxed)
+            ));
+        }
+        out.push_str("# TYPE repro_queue_depth gauge\n");
+        out.push_str(&format!(
+            "repro_queue_depth {}\n",
+            self.queue_depth.load(Ordering::Relaxed)
+        ));
+        out.push_str("# TYPE repro_reconnects_total counter\n");
+        out.push_str(&format!(
+            "repro_reconnects_total {}\n",
+            self.reconnects.load(Ordering::Relaxed)
+        ));
+        out.push_str("# TYPE repro_bytes_on_wire_total counter\n");
+        out.push_str(&format!(
+            "repro_bytes_on_wire_total {}\n",
+            self.bytes_on_wire.load(Ordering::Relaxed)
+        ));
+        out.push_str("# TYPE repro_aggregations_total counter\n");
+        out.push_str(&format!(
+            "repro_aggregations_total {}\n",
+            self.aggregations.load(Ordering::Relaxed)
+        ));
+        out.push_str("# TYPE repro_lost_uploads_total counter\n");
+        out.push_str(&format!(
+            "repro_lost_uploads_total {}\n",
+            self.lost_uploads.load(Ordering::Relaxed)
+        ));
+        out
+    }
+
+    /// One-line digest for the periodic stderr heartbeat.
+    pub fn digest_line(&self) -> String {
+        let frames: u64 = self
+            .ingest_frames
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .sum();
+        format!(
+            "stats: frames={frames} queue={} aggs={} lost={} reconnects={} wire_bytes={}",
+            self.queue_depth.load(Ordering::Relaxed),
+            self.aggregations.load(Ordering::Relaxed),
+            self.lost_uploads.load(Ordering::Relaxed),
+            self.reconnects.load(Ordering::Relaxed),
+            self.bytes_on_wire.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Serve Prometheus snapshots on `listener` until `done` flips.
+///
+/// Hand-rolled like the wire layer: each accepted connection gets one
+/// minimal HTTP/1.1 response and is closed. The listener is switched
+/// to non-blocking so the loop can observe `done` and return, letting
+/// the caller's `thread::scope` join.
+pub fn serve_stats(listener: TcpListener, stats: &LiveStats, done: &AtomicBool) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    while !done.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((mut conn, _)) => {
+                // Drain whatever request line arrived (best-effort; a
+                // scraper that writes nothing still gets the snapshot).
+                let _ = conn.set_nonblocking(false);
+                let _ = conn.set_read_timeout(Some(Duration::from_millis(200)));
+                let mut scratch = [0u8; 1024];
+                let _ = conn.read(&mut scratch);
+                let body = stats.render_prometheus();
+                let resp = format!(
+                    "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+                     Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                    body.len()
+                );
+                let _ = conn.write_all(resp.as_bytes());
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpStream;
+    use std::sync::atomic::AtomicBool;
+
+    #[test]
+    fn counters_land_in_the_prometheus_snapshot() {
+        let s = LiveStats::new(2);
+        s.frame_ingested(0);
+        s.frame_ingested(1);
+        s.frame_ingested(1);
+        s.queue_push();
+        s.reconnect();
+        s.wire_bytes(128);
+        s.aggregated();
+        s.upload_lost();
+        let text = s.render_prometheus();
+        assert!(text.contains("repro_ingest_frames_total{shard=\"0\"} 1\n"));
+        assert!(text.contains("repro_ingest_frames_total{shard=\"1\"} 2\n"));
+        assert!(text.contains("repro_queue_depth 1\n"));
+        assert!(text.contains("repro_reconnects_total 1\n"));
+        assert!(text.contains("repro_bytes_on_wire_total 128\n"));
+        assert!(text.contains("repro_aggregations_total 1\n"));
+        assert!(text.contains("repro_lost_uploads_total 1\n"));
+    }
+
+    #[test]
+    fn queue_depth_saturates_at_zero() {
+        let s = LiveStats::new(1);
+        s.queue_pop();
+        s.queue_push();
+        s.queue_pop();
+        s.queue_pop();
+        assert!(s.render_prometheus().contains("repro_queue_depth 0\n"));
+    }
+
+    #[test]
+    fn digest_line_summarizes_all_counters() {
+        let s = LiveStats::new(3);
+        s.frame_ingested(2);
+        s.aggregated();
+        let line = s.digest_line();
+        assert!(line.contains("frames=1"));
+        assert!(line.contains("aggs=1"));
+    }
+
+    #[test]
+    fn stats_endpoint_answers_one_scrape_and_stops_on_done() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stats = LiveStats::new(1);
+        stats.aggregated();
+        let done = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            scope.spawn(|| serve_stats(listener, &stats, &done));
+            let mut conn = TcpStream::connect(addr).unwrap();
+            conn.write_all(b"GET /metrics HTTP/1.1\r\n\r\n").unwrap();
+            let mut text = String::new();
+            conn.read_to_string(&mut text).unwrap();
+            assert!(text.starts_with("HTTP/1.1 200 OK"), "{text}");
+            assert!(text.contains("repro_aggregations_total 1"), "{text}");
+            done.store(true, Ordering::Relaxed);
+        });
+    }
+}

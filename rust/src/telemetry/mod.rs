@@ -1,0 +1,365 @@
+//! Run-scoped deterministic telemetry: ordered trace events,
+//! aggregate histograms, and live deployment stats.
+//!
+//! Three faces, all dependency-free:
+//!
+//! 1. **Ordered trace events** ([`TraceEvent`]) — emitted from the
+//!    single ordered decision point of every AFL engine and from the
+//!    TCP leader's aggregation stage, encoded as one compact JSON
+//!    object per line. Because all emission happens on the coordinator
+//!    thread in exact event order, the trace of a `--shards N` run is
+//!    byte-identical to `--shards 1` (asserted in
+//!    `rust/tests/sharded.rs`).
+//! 2. **Deterministic aggregates** ([`Registry`]) — counters and
+//!    log2-bucket [`Histogram`]s (staleness, queue depth, arena
+//!    occupancy, per-client/level/class grants) riding the *full* run
+//!    record only, never the deterministic summary.
+//! 3. **Live deployment stats** ([`LiveStats`]) — relaxed atomics
+//!    rendered as a Prometheus text snapshot by
+//!    `repro serve --stats-addr`.
+//!
+//! The [`Telemetry`] handle is the engine-facing API. When built with
+//! [`Telemetry::off`] every method is a single load-and-branch with
+//! zero allocation — the `telemetry` bench suite's `noop_sink` case
+//! pins that down under the perf gate.
+
+mod event;
+mod live;
+mod registry;
+
+pub use event::{LossCause, TraceEvent};
+pub use live::{serve_stats, LiveStats};
+pub use registry::{jain_fairness, Histogram, Registry, HISTOGRAM_BUCKETS, MAX_CLASSES};
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Where encoded trace lines go.
+enum Sink {
+    /// Tracing disabled: no bytes retained, no allocation.
+    Off,
+    /// In-memory buffer (tests compare these byte-for-byte).
+    Buf(Vec<u8>),
+    /// Buffered file writer (`--trace <path>`).
+    File(BufWriter<File>),
+}
+
+/// The engine-facing telemetry handle: owns the trace sink, the
+/// aggregate [`Registry`], and the small per-client state needed to
+/// detect channel transitions and arena high-water marks.
+///
+/// Every recording method early-returns when tracing is disabled, so
+/// an engine can call them unconditionally on its hot path.
+pub struct Telemetry {
+    enabled: bool,
+    sink: Sink,
+    reg: Registry,
+    line: String,
+    last_level: Vec<i8>,
+    class_of: Vec<u8>,
+    arena_live: usize,
+    arena_high: usize,
+    io_error: Option<io::Error>,
+}
+
+impl Telemetry {
+    fn with_sink(enabled: bool, sink: Sink) -> Telemetry {
+        Telemetry {
+            enabled,
+            sink,
+            reg: Registry::new(),
+            line: String::new(),
+            last_level: Vec::new(),
+            class_of: Vec::new(),
+            arena_live: 0,
+            arena_high: 0,
+            io_error: None,
+        }
+    }
+
+    /// A disabled handle: every method is a no-op after one branch.
+    pub fn off() -> Telemetry {
+        Telemetry::with_sink(false, Sink::Off)
+    }
+
+    /// An enabled handle writing to an in-memory buffer (take it with
+    /// [`Telemetry::take_buffer`]).
+    pub fn buffered() -> Telemetry {
+        Telemetry::with_sink(true, Sink::Buf(Vec::new()))
+    }
+
+    /// An enabled handle writing JSONL to `path`.
+    pub fn to_file(path: &Path) -> Result<Telemetry> {
+        let f = File::create(path)
+            .with_context(|| format!("creating trace file {}", path.display()))?;
+        Ok(Telemetry::with_sink(true, Sink::File(BufWriter::new(f))))
+    }
+
+    /// Whether this handle records anything.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Pre-size per-client tables for `clients` participants. Call
+    /// once at engine setup so the hot path never reallocates.
+    pub fn bind(&mut self, clients: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.reg.bind(clients);
+        self.last_level = vec![i8::MIN; clients];
+        self.class_of = vec![0; clients];
+    }
+
+    /// Record a setup-time capacity-class assignment.
+    pub fn class_assign(&mut self, client: usize, class: u8) {
+        if !self.enabled {
+            return;
+        }
+        if let Some(c) = self.class_of.get_mut(client) {
+            *c = class;
+        }
+        self.emit(&TraceEvent::ClassAssign { client, class });
+    }
+
+    /// Record a grant: winner, post-grant queue depth and gain level
+    /// (`-1` under the ideal channel). Emits a [`TraceEvent::
+    /// ChannelTransition`] first when the winner's level changed since
+    /// its previous grant.
+    pub fn grant(&mut self, t: u64, client: usize, queue: usize, level: i8) {
+        if !self.enabled {
+            return;
+        }
+        if level >= 0 && self.last_level.get(client).copied() != Some(level) {
+            if let Some(l) = self.last_level.get_mut(client) {
+                *l = level;
+            }
+            self.reg.channel_transitions += 1;
+            self.emit(&TraceEvent::ChannelTransition {
+                t,
+                client,
+                level: level as u8,
+            });
+        }
+        let class = self.class_of.get(client).copied().unwrap_or(0);
+        self.reg.record_grant(client, queue, level, class);
+        self.emit(&TraceEvent::Grant {
+            t,
+            client,
+            queue,
+            level,
+        });
+    }
+
+    /// Record an aggregated upload (the engine forwards the
+    /// `AggregationOutcome` fields).
+    pub fn upload_applied(
+        &mut self,
+        t: u64,
+        client: usize,
+        iteration: u64,
+        staleness: u64,
+        beta: f32,
+        weight: f64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.reg.record_apply(staleness);
+        self.emit(&TraceEvent::UploadApplied {
+            t,
+            client,
+            iteration,
+            staleness,
+            beta,
+            weight,
+        });
+    }
+
+    /// Record a lost upload with its cause.
+    pub fn upload_lost(&mut self, t: u64, client: usize, cause: LossCause) {
+        if !self.enabled {
+            return;
+        }
+        self.reg.record_lost(cause);
+        self.emit(&TraceEvent::UploadLost { t, client, cause });
+    }
+
+    /// Record an arena slot allocation; emits [`TraceEvent::
+    /// ArenaHighWater`] when the in-flight count reaches a new high.
+    pub fn arena_alloc(&mut self, t: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.arena_live += 1;
+        self.reg.record_arena(self.arena_live);
+        if self.arena_live > self.arena_high {
+            self.arena_high = self.arena_live;
+            self.emit(&TraceEvent::ArenaHighWater {
+                t,
+                high: self.arena_high,
+            });
+        }
+    }
+
+    /// Record an arena slot release.
+    pub fn arena_free(&mut self) {
+        if !self.enabled {
+            return;
+        }
+        self.arena_live = self.arena_live.saturating_sub(1);
+    }
+
+    /// The aggregate registry (always available; empty when disabled).
+    pub fn registry(&self) -> &Registry {
+        &self.reg
+    }
+
+    /// The registry's JSON form — `Some` only when telemetry was
+    /// enabled, so untraced runs emit byte-identical records to
+    /// pre-telemetry builds.
+    pub fn registry_json(&self) -> Option<Json> {
+        if self.enabled {
+            Some(self.reg.to_json())
+        } else {
+            None
+        }
+    }
+
+    /// Take the in-memory trace bytes (empty for non-buffer sinks).
+    pub fn take_buffer(&mut self) -> Vec<u8> {
+        match &mut self.sink {
+            Sink::Buf(b) => std::mem::take(b),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Flush the sink and surface any write error swallowed on the
+    /// hot path. Call once after the run.
+    pub fn finish(&mut self) -> Result<()> {
+        if let Some(e) = self.io_error.take() {
+            return Err(e).context("writing trace");
+        }
+        if let Sink::File(w) = &mut self.sink {
+            w.flush().context("flushing trace file")?;
+        }
+        Ok(())
+    }
+
+    fn emit(&mut self, ev: &TraceEvent) {
+        self.line.clear();
+        ev.encode_into(&mut self.line);
+        self.line.push('\n');
+        match &mut self.sink {
+            Sink::Off => {}
+            Sink::Buf(b) => b.extend_from_slice(self.line.as_bytes()),
+            Sink::File(w) => {
+                if self.io_error.is_none() {
+                    if let Err(e) = w.write_all(self.line.as_bytes()) {
+                        self.io_error = Some(e);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_handle_records_nothing_and_reports_no_registry() {
+        let mut tel = Telemetry::off();
+        tel.bind(4);
+        tel.grant(1, 0, 2, 1);
+        tel.upload_applied(2, 0, 1, 0, 0.5, 0.5);
+        tel.upload_lost(3, 1, LossCause::Channel);
+        tel.arena_alloc(1);
+        assert!(!tel.is_enabled());
+        assert!(tel.registry_json().is_none());
+        assert_eq!(tel.registry().uploads_applied, 0);
+        assert!(tel.take_buffer().is_empty());
+        assert!(tel.finish().is_ok());
+    }
+
+    #[test]
+    fn buffered_handle_emits_ordered_jsonl() {
+        let mut tel = Telemetry::buffered();
+        tel.bind(2);
+        tel.grant(10, 0, 1, -1);
+        tel.upload_applied(20, 0, 1, 0, 0.8, 1.0);
+        let text = String::from_utf8(tel.take_buffer()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains(r#""ev":"grant""#));
+        assert!(lines[1].contains(r#""ev":"apply""#));
+        assert!(tel.registry_json().is_some());
+    }
+
+    #[test]
+    fn channel_transitions_fire_only_on_level_change() {
+        let mut tel = Telemetry::buffered();
+        tel.bind(2);
+        tel.grant(1, 0, 0, 2);
+        tel.grant(2, 0, 0, 2);
+        tel.grant(3, 0, 0, 1);
+        tel.grant(4, 1, 0, 2);
+        let text = String::from_utf8(tel.take_buffer()).unwrap();
+        let transitions = text
+            .lines()
+            .filter(|l| l.contains(r#""ev":"channel""#))
+            .count();
+        // Client 0: entry + one change; client 1: entry.
+        assert_eq!(transitions, 3);
+        assert_eq!(tel.registry().channel_transitions, 3);
+    }
+
+    #[test]
+    fn arena_high_water_emits_once_per_new_peak() {
+        let mut tel = Telemetry::buffered();
+        tel.bind(4);
+        tel.arena_alloc(1); // high 1
+        tel.arena_alloc(2); // high 2
+        tel.arena_free();
+        tel.arena_alloc(3); // back to 2, no event
+        tel.arena_alloc(4); // high 3
+        let text = String::from_utf8(tel.take_buffer()).unwrap();
+        let highs: Vec<&str> = text
+            .lines()
+            .filter(|l| l.contains(r#""ev":"arena""#))
+            .collect();
+        assert_eq!(highs.len(), 3);
+        assert!(highs[2].contains(r#""high":3"#));
+        assert_eq!(tel.registry().arena.count(), 4);
+    }
+
+    #[test]
+    fn class_assignments_feed_per_class_grant_counts() {
+        let mut tel = Telemetry::buffered();
+        tel.bind(2);
+        tel.class_assign(0, 1);
+        tel.grant(1, 0, 0, -1);
+        assert_eq!(tel.registry().grants_per_class[1], 1);
+    }
+
+    #[test]
+    fn file_sink_writes_and_finishes_cleanly() {
+        let dir = std::env::temp_dir().join("csmaafl_tel_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        let mut tel = Telemetry::to_file(&path).unwrap();
+        tel.bind(1);
+        tel.grant(1, 0, 0, -1);
+        tel.finish().unwrap();
+        drop(tel);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains(r#""ev":"grant""#));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,375 @@
+//! Deterministic aggregate counters and log2-bucket histograms.
+//!
+//! The [`Registry`] is a pure function of the event sequence: every
+//! field is updated only from the ordered decision point of an engine,
+//! so a sharded run produces bit-identical aggregates to the 1-shard
+//! run. The JSON form rides the *full* run record (`RunResult` /
+//! `ScaleSimReport` `to_json`) and never the deterministic summary.
+
+use crate::util::json::Json;
+
+use super::LossCause;
+
+/// Number of buckets in a [`Histogram`]; bucket `i` (for `i >= 1`)
+/// holds values `v` with `floor(log2(v)) == i - 1`, bucket 0 holds 0.
+pub const HISTOGRAM_BUCKETS: usize = 32;
+
+/// Maximum capacity classes tracked per-class (matches the profile
+/// parser's practical limit; higher classes fold into the last cell).
+pub const MAX_CLASSES: usize = 16;
+
+/// A log2-bucket histogram over `u64` samples.
+///
+/// Bucket 0 counts zeros; bucket `i >= 1` counts samples in
+/// `[2^(i-1), 2^i)`. The top bucket saturates. Recording is two adds
+/// and a `leading_zeros` — cheap enough for the per-event hot path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    buckets: [u64; HISTOGRAM_BUCKETS],
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Histogram {
+            buckets: [0; HISTOGRAM_BUCKETS],
+            count: 0,
+            sum: 0,
+            max: 0,
+        }
+    }
+
+    /// Bucket index for a sample (0 for 0, else `floor(log2(v)) + 1`,
+    /// saturating at the top bucket).
+    pub fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            ((64 - v.leading_zeros()) as usize).min(HISTOGRAM_BUCKETS - 1)
+        }
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Number of samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all samples (saturating).
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Largest sample seen (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Arithmetic mean of the samples (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Bucket counts trimmed after the last non-zero cell.
+    pub fn trimmed_buckets(&self) -> &[u64] {
+        let last = self
+            .buckets
+            .iter()
+            .rposition(|&c| c != 0)
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        &self.buckets[..last]
+    }
+
+    /// JSON form: `{count, sum, max, mean, buckets}` with the bucket
+    /// array trimmed after the last non-zero cell.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("count", Json::Int(self.count as i64));
+        o.set("sum", Json::Int(self.sum as i64));
+        o.set("max", Json::Int(self.max as i64));
+        o.set("mean", Json::Float(self.mean()));
+        let buckets = self
+            .trimmed_buckets()
+            .iter()
+            .map(|&c| Json::Int(c as i64))
+            .collect();
+        o.set("buckets", Json::Array(buckets));
+        o
+    }
+}
+
+/// Jain's fairness index over a slice of per-client counts: 1.0 for a
+/// uniform allocation, `1/n` when one client takes everything. Empty
+/// or all-zero slices report 1.0 (nothing was unfairly shared).
+pub fn jain_fairness(counts: &[u64]) -> f64 {
+    let n = counts.len();
+    if n == 0 {
+        return 1.0;
+    }
+    let sum: f64 = counts.iter().map(|&c| c as f64).sum();
+    if sum == 0.0 {
+        return 1.0;
+    }
+    let sq: f64 = counts.iter().map(|&c| (c as f64) * (c as f64)).sum();
+    (sum * sum) / (n as f64 * sq)
+}
+
+/// Run-scoped deterministic aggregates, fed from the same ordered
+/// decision points that emit trace events.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Registry {
+    /// Staleness (iterations behind) of every applied upload.
+    pub staleness: Histogram,
+    /// Scheduler queue depth observed after each grant.
+    pub queue_depth: Histogram,
+    /// Arena occupancy (models in flight) observed at each allocation.
+    pub arena: Histogram,
+    /// Uplink grants per client (Jain fairness input).
+    pub grants_per_client: Vec<u64>,
+    /// Grants by gain-ladder level at grant time (fading channels).
+    pub grants_per_level: [u64; 4],
+    /// Grants by capacity class of the winning client.
+    pub grants_per_class: [u64; MAX_CLASSES],
+    /// Uploads folded into the global model.
+    pub uploads_applied: u64,
+    /// Uploads lost to the scenario (or legacy `upload_loss`).
+    pub lost_scenario: u64,
+    /// Uploads lost to a channel fade.
+    pub lost_channel: u64,
+    /// Uploads lost to a worker disconnect (deployment path).
+    pub lost_disconnect: u64,
+    /// Observed gain-level changes across consecutive grants.
+    pub channel_transitions: u64,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    /// An empty registry; call [`Registry::bind`] before recording.
+    pub fn new() -> Self {
+        Registry {
+            staleness: Histogram::new(),
+            queue_depth: Histogram::new(),
+            arena: Histogram::new(),
+            grants_per_client: Vec::new(),
+            grants_per_level: [0; 4],
+            grants_per_class: [0; MAX_CLASSES],
+            uploads_applied: 0,
+            lost_scenario: 0,
+            lost_channel: 0,
+            lost_disconnect: 0,
+            channel_transitions: 0,
+        }
+    }
+
+    /// Size the per-client table for `clients` participants.
+    pub fn bind(&mut self, clients: usize) {
+        self.grants_per_client = vec![0; clients];
+    }
+
+    /// Record one grant: winner, post-grant queue depth, gain level
+    /// (`-1` = ideal channel) and the winner's capacity class.
+    pub fn record_grant(&mut self, client: usize, queue: usize, level: i8, class: u8) {
+        if client >= self.grants_per_client.len() {
+            self.grants_per_client.resize(client + 1, 0);
+        }
+        self.grants_per_client[client] += 1;
+        self.queue_depth.record(queue as u64);
+        if level >= 0 {
+            self.grants_per_level[(level as usize).min(3)] += 1;
+        }
+        self.grants_per_class[(class as usize).min(MAX_CLASSES - 1)] += 1;
+    }
+
+    /// Record one applied upload's staleness.
+    pub fn record_apply(&mut self, staleness: u64) {
+        self.uploads_applied += 1;
+        self.staleness.record(staleness);
+    }
+
+    /// Record one lost upload by cause.
+    pub fn record_lost(&mut self, cause: LossCause) {
+        match cause {
+            LossCause::Scenario => self.lost_scenario += 1,
+            LossCause::Channel => self.lost_channel += 1,
+            LossCause::Disconnect => self.lost_disconnect += 1,
+        }
+    }
+
+    /// Record arena occupancy observed at an allocation.
+    pub fn record_arena(&mut self, live: usize) {
+        self.arena.record(live as u64);
+    }
+
+    /// Jain fairness over per-client grant counts.
+    pub fn grant_fairness(&self) -> f64 {
+        jain_fairness(&self.grants_per_client)
+    }
+
+    /// Full JSON form (deterministic: `Json` objects emit keys in
+    /// sorted order, and every value is a pure function of the event
+    /// sequence).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("uploads_applied", Json::Int(self.uploads_applied as i64));
+        let mut lost = Json::object();
+        lost.set("scenario", Json::Int(self.lost_scenario as i64));
+        lost.set("channel", Json::Int(self.lost_channel as i64));
+        lost.set("disconnect", Json::Int(self.lost_disconnect as i64));
+        o.set("uploads_lost", lost);
+        o.set(
+            "channel_transitions",
+            Json::Int(self.channel_transitions as i64),
+        );
+        o.set("grant_fairness", Json::Float(self.grant_fairness()));
+        o.set(
+            "grants_per_level",
+            Json::Array(
+                self.grants_per_level
+                    .iter()
+                    .map(|&c| Json::Int(c as i64))
+                    .collect(),
+            ),
+        );
+        let classes = self
+            .grants_per_class
+            .iter()
+            .rposition(|&c| c != 0)
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        o.set(
+            "grants_per_class",
+            Json::Array(
+                self.grants_per_class[..classes]
+                    .iter()
+                    .map(|&c| Json::Int(c as i64))
+                    .collect(),
+            ),
+        );
+        o.set("staleness", self.staleness.to_json());
+        o.set("queue_depth", self.queue_depth.to_json());
+        o.set("arena", self.arena.to_json());
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_follow_the_log2_rule() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 1);
+        assert_eq!(Histogram::bucket_of(2), 2);
+        assert_eq!(Histogram::bucket_of(3), 2);
+        assert_eq!(Histogram::bucket_of(4), 3);
+        assert_eq!(Histogram::bucket_of(7), 3);
+        assert_eq!(Histogram::bucket_of(8), 4);
+        assert_eq!(Histogram::bucket_of(u64::MAX), HISTOGRAM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_tracks_count_sum_max_and_mean() {
+        let mut h = Histogram::new();
+        for v in [0, 1, 2, 3, 10] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 16);
+        assert_eq!(h.max(), 10);
+        assert!((h.mean() - 3.2).abs() < 1e-12);
+        // 0 -> bucket 0, 1 -> 1, {2,3} -> 2, 10 -> 4.
+        assert_eq!(h.trimmed_buckets(), &[1, 1, 2, 0, 1]);
+    }
+
+    #[test]
+    fn histogram_json_trims_trailing_zero_buckets() {
+        let mut h = Histogram::new();
+        h.record(5);
+        let j = h.to_json();
+        let buckets = match j.get("buckets") {
+            Some(Json::Array(a)) => a.len(),
+            other => panic!("buckets missing: {other:?}"),
+        };
+        assert_eq!(buckets, 4);
+    }
+
+    #[test]
+    fn jain_fairness_matches_hand_computed_cases() {
+        assert!((jain_fairness(&[]) - 1.0).abs() < 1e-12);
+        assert!((jain_fairness(&[0, 0]) - 1.0).abs() < 1e-12);
+        assert!((jain_fairness(&[5, 5, 5]) - 1.0).abs() < 1e-12);
+        // One of four takes everything: 1/4.
+        assert!((jain_fairness(&[8, 0, 0, 0]) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn registry_counts_grants_losses_and_applies() {
+        let mut r = Registry::new();
+        r.bind(4);
+        r.record_grant(0, 3, 2, 0);
+        r.record_grant(1, 2, -1, 1);
+        r.record_apply(5);
+        r.record_lost(LossCause::Scenario);
+        r.record_lost(LossCause::Channel);
+        assert_eq!(r.grants_per_client, vec![1, 1, 0, 0]);
+        assert_eq!(r.grants_per_level, [0, 0, 1, 0]);
+        assert_eq!(r.grants_per_class[0], 1);
+        assert_eq!(r.grants_per_class[1], 1);
+        assert_eq!(r.uploads_applied, 1);
+        assert_eq!(r.lost_scenario, 1);
+        assert_eq!(r.lost_channel, 1);
+        assert_eq!(r.staleness.max(), 5);
+        assert_eq!(r.queue_depth.count(), 2);
+    }
+
+    #[test]
+    fn registry_json_carries_the_contract_keys() {
+        let mut r = Registry::new();
+        r.bind(2);
+        r.record_grant(0, 1, 0, 0);
+        r.record_apply(3);
+        let j = r.to_json();
+        for key in [
+            "uploads_applied",
+            "uploads_lost",
+            "channel_transitions",
+            "grant_fairness",
+            "grants_per_level",
+            "grants_per_class",
+            "staleness",
+            "queue_depth",
+            "arena",
+        ] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+    }
+}

@@ -20,6 +20,21 @@ pub enum Level {
     Trace = 4,
 }
 
+impl Level {
+    /// Parse a CLI/env spelling (`error|warn|info|debug|trace`,
+    /// case-insensitive). Returns `None` for anything else.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+}
+
 static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 
 static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
@@ -70,6 +85,17 @@ macro_rules! log_trace { ($($a:tt)*) => { $crate::util::logging::log($crate::uti
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn parse_accepts_the_cli_spellings() {
+        assert_eq!(Level::parse("error"), Some(Level::Error));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("Info"), Some(Level::Info));
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("trace"), Some(Level::Trace));
+        assert_eq!(Level::parse("loud"), None);
+        assert_eq!(Level::parse(""), None);
+    }
 
     #[test]
     fn level_gating() {

@@ -62,7 +62,7 @@ fn usage_lists_every_dispatchable_command() {
     let usage = stdout(&repro(&[]));
     for cmd in [
         "train", "compare", "figures", "sweep", "grid", "analyze",
-        "timeline", "inspect", "smoke", "sim", "bench", "serve", "join",
+        "timeline", "inspect", "smoke", "sim", "trace", "bench", "serve", "join",
     ] {
         assert!(usage.contains(cmd), "usage must mention {cmd}");
     }
@@ -822,6 +822,53 @@ fn bench_writes_schema_valid_record_and_checks_against_baseline() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+// --------------------------------------------------------------- trace
+
+#[test]
+fn trace_subcommand_replays_a_recorded_sim() {
+    let dir = scratch_dir("trace");
+    let path = dir.join("run.jsonl");
+    let out = repro(&[
+        "sim", "--clients", "50", "--iterations", "200", "--params", "8",
+        "--set", "scenario=dropout:0.1",
+        "--trace", path.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(!text.is_empty(), "trace file must not be empty");
+    assert!(text.lines().all(|l| l.starts_with("{\"ev\":\"")), "{text}");
+
+    // The reader renders the aggregate report...
+    let out = repro(&["trace", path.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let table = stdout(&out);
+    assert!(table.contains("staleness"), "{table}");
+    assert!(table.contains("jain"), "{table}");
+    assert!(table.contains("uploads"), "{table}");
+    // ...and --check validates without rendering.
+    let out = repro(&["trace", path.to_str().unwrap(), "--check"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("trace ok"), "{}", stdout(&out));
+
+    // A malformed line is rejected with its line number.
+    std::fs::write(dir.join("bad.jsonl"), "{\"ev\":\"warp\"}\n").unwrap();
+    let out = repro(&["trace", dir.join("bad.jsonl").to_str().unwrap()]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("line 1"), "{}", stderr(&out));
+    // A missing file names its path; a missing path is a usage error.
+    let out = repro(&["trace", "definitely_missing_trace.jsonl"]);
+    assert!(!out.status.success());
+    assert!(
+        stderr(&out).contains("definitely_missing_trace.jsonl"),
+        "{}",
+        stderr(&out)
+    );
+    let out = repro(&["trace"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("usage"), "{}", stderr(&out));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 // ------------------------------------------------------ train --shards
 
 #[test]
@@ -917,6 +964,44 @@ fn verbosity_flags_are_accepted() {
     let out = repro(&["-q", "inspect", "betas", "--clients", "3"]);
     assert!(out.status.success(), "{}", stderr(&out));
     let out = repro(&["-v", "inspect", "naive-decay", "--clients", "3"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+}
+
+#[test]
+fn log_level_flag_is_accepted_and_validated() {
+    let out = repro(&["--log-level", "debug", "inspect", "betas", "--clients", "3"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    // A bad spelling is rejected with the flag and the value named.
+    let out = repro(&["--log-level", "chatty", "inspect", "betas", "--clients", "3"]);
+    assert!(!out.status.success());
+    let err = stderr(&out);
+    assert!(err.contains("--log-level"), "{err}");
+    assert!(err.contains("chatty"), "{err}");
+}
+
+#[test]
+fn repro_log_env_is_a_validated_fallback() {
+    let with_env = |val: &str, args: &[&str]| {
+        Command::new(env!("CARGO_BIN_EXE_repro"))
+            .args(args)
+            .env("REPRO_LOG", val)
+            .current_dir(std::env::temp_dir())
+            .output()
+            .expect("spawning repro")
+    };
+    // A valid spelling is honoured silently.
+    let out = with_env("warn", &["inspect", "betas", "--clients", "3"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    // A bad spelling is an error that names its source...
+    let out = with_env("chatty", &["inspect", "betas", "--clients", "3"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("REPRO_LOG"), "{}", stderr(&out));
+    // ...unless an explicit -q/-v already chose the verbosity, in which
+    // case the fallback (bad value included) is ignored entirely.
+    let out = with_env("chatty", &["-q", "inspect", "betas", "--clients", "3"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    // --log-level beats the env even when both are valid.
+    let out = with_env("trace", &["--log-level", "error", "inspect", "betas", "--clients", "3"]);
     assert!(out.status.success(), "{}", stderr(&out));
 }
 
